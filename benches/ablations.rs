@@ -1,0 +1,124 @@
+//! Bench: design-choice ablations called out in DESIGN.md §3 —
+//! (a) IO/compute overlap (writer queue depth, scan prefetch),
+//! (b) HLO score program vs native fallback,
+//! (c) scoring chunk size,
+//! (d) damping sweep effect on self-retrieval rank.
+
+use logra::coordinator::{projected_grads, run_logging, LoggingOptions};
+use logra::data::corpus::{generate, CorpusSpec};
+use logra::hessian::random_projections;
+use logra::model::dataset::Dataset;
+use logra::model::trainer::Trainer;
+use logra::runtime::Runtime;
+use logra::util::bench::{bench, report_metric, BenchOpts};
+use logra::util::rng::Pcg32;
+use logra::valuation::{Normalization, QueryEngine};
+
+fn main() {
+    let root = std::env::current_dir().expect("cwd");
+    if !root.join("artifacts").join("lm_tiny").join("manifest.txt").exists() {
+        eprintln!("ablations bench skipped: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::open_named(&root, "lm_tiny").expect("runtime");
+    let man = rt.manifest.clone();
+    let n_train = 512usize;
+    let corpus = generate(CorpusSpec::new(man.vocab, man.seq_len, n_train, 9));
+    let ds = Dataset::Lm(&corpus);
+    let trainer = Trainer::new(&rt);
+    let st = trainer.init(0).expect("init");
+    let mut rng = Pcg32::seeded(1);
+    let proj = random_projections(&man, &mut rng);
+    let run_dir = root.join("runs").join("ablations");
+    let _ = std::fs::create_dir_all(&run_dir);
+
+    // ---------- (a) writer queue depth (IO overlap in logging).
+    for cap in [1usize, 4, 16] {
+        let dir = run_dir.join(format!("store-cap{cap}"));
+        let res = bench(
+            &format!("logging.queue_cap{cap}"),
+            BenchOpts { warmup_iters: 1, iters: 3, max_seconds: 120.0 },
+            || {
+                let _ = std::fs::remove_dir_all(&dir);
+                let opts = LoggingOptions { queue_cap: cap, fit_hessian: true };
+                run_logging(&rt, &ds, &st.params, &proj, &dir, &opts).expect("log");
+            },
+        );
+        report_metric(
+            &format!("ablation.logging.tokens_per_s.cap{cap}"),
+            (n_train * man.seq_len) as f64 / res.summary().mean,
+            "tokens_per_s",
+        );
+    }
+
+    // Build one store + engine for the scan ablations.
+    let dir = run_dir.join("store-main");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (store, hess, _) =
+        run_logging(&rt, &ds, &st.params, &proj, &dir, &LoggingOptions::default())
+            .expect("log");
+    let precond = hess.unwrap().preconditioner(0.1).expect("precond");
+    let qidx: Vec<usize> = (0..man.test_batch).collect();
+    let (g, _) = projected_grads(&rt, &ds, &qidx, &st.params, &proj).expect("grads");
+
+    // ---------- (b) HLO Pallas-score program vs native matmul.
+    for (label, use_hlo) in [("hlo", true), ("native", false)] {
+        let mut engine = QueryEngine::new(&rt, &store, &precond);
+        engine.use_hlo = use_hlo;
+        let res = bench(
+            &format!("scan.{label}"),
+            BenchOpts { warmup_iters: 1, iters: 5, max_seconds: 60.0 },
+            || {
+                let _ = engine
+                    .values_matrix(&g, qidx.len(), Normalization::None)
+                    .expect("scan");
+            },
+        );
+        report_metric(
+            &format!("ablation.scan.pairs_per_s.{label}"),
+            (qidx.len() * store.rows()) as f64 / res.summary().mean,
+            "pairs_per_s",
+        );
+    }
+
+    // ---------- (c) RelatIF overhead (self-influence cache amortization).
+    {
+        let engine = QueryEngine::new(&rt, &store, &precond);
+        // Cold: includes building the self-influence cache.
+        let t = std::time::Instant::now();
+        let _ = engine.query(&g, qidx.len(), 5, Normalization::RelatIf).unwrap();
+        let cold = t.elapsed().as_secs_f64();
+        let t = std::time::Instant::now();
+        let _ = engine.query(&g, qidx.len(), 5, Normalization::RelatIf).unwrap();
+        let warm = t.elapsed().as_secs_f64();
+        report_metric("ablation.relatif.cold_s", cold, "s");
+        report_metric("ablation.relatif.warm_s", warm, "s");
+    }
+
+    // ---------- (d) damping sweep -> self-retrieval quality.
+    let hess2 = {
+        // Re-log to regain the Hessian (consumed above).
+        let dir2 = run_dir.join("store-damp");
+        let _ = std::fs::remove_dir_all(&dir2);
+        let (_, h, _) =
+            run_logging(&rt, &ds, &st.params, &proj, &dir2, &LoggingOptions::default())
+                .expect("log");
+        h.unwrap()
+    };
+    for damp in [0.01f32, 0.1, 1.0, 10.0] {
+        let p = hess2.preconditioner(damp).expect("precond");
+        let engine = QueryEngine::new(&rt, &store, &p);
+        let res = engine.query(&g, qidx.len(), 5, Normalization::None).unwrap();
+        let hits = qidx
+            .iter()
+            .enumerate()
+            .filter(|(i, &qi)| res[*i].top.iter().any(|&(_, id)| id == qi as u64))
+            .count();
+        report_metric(
+            &format!("ablation.damping.self_retrieval@5.d{damp}"),
+            hits as f64 / qidx.len() as f64,
+            "frac",
+        );
+    }
+    println!("ablations done");
+}

@@ -1,0 +1,62 @@
+//! Bench: Figure 4 — counterfactual accuracy (brittleness + LDS) at a
+//! budget-scaled size. `cargo bench --bench fig4_counterfactual`.
+//!
+//! Env overrides: LOGRA_FIG4_CONFIG (default mlp_fmnist; `all` for every
+//! benchmark), LOGRA_FIG4_NTRAIN, LOGRA_FIG4_SUBSETS.
+
+use logra::eval::fig4::{render_markdown, run_fig4, Fig4Scale};
+use logra::eval::{BrittlenessConfig, LdsConfig};
+use logra::util::bench::report_metric;
+
+fn main() {
+    let root = std::env::current_dir().expect("cwd");
+    let config = std::env::var("LOGRA_FIG4_CONFIG").unwrap_or_else(|_| "mlp_fmnist".into());
+    let configs: Vec<String> = if config == "all" {
+        vec!["mlp_fmnist".into(), "mlp_cifar".into(), "lm_wikitext".into()]
+    } else {
+        vec![config]
+    };
+    let n_train: usize = std::env::var("LOGRA_FIG4_NTRAIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let subsets: usize = std::env::var("LOGRA_FIG4_SUBSETS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+    for c in configs {
+        if !root.join("artifacts").join(&c).join("manifest.txt").exists() {
+            eprintln!("fig4 bench skipped for {c}: run `make artifacts`");
+            continue;
+        }
+        let scale = Fig4Scale {
+            n_train,
+            n_test_pool: 48,
+            n_test: 4,
+            base_epochs: 3,
+            brittle: BrittlenessConfig {
+                removal_counts: vec![8, 32],
+                retrain_seeds: vec![100],
+                epochs: 3,
+            },
+            lds: LdsConfig { n_subsets: subsets, epochs: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let out = run_fig4(&root, &c, &scale).expect("fig4");
+        println!("\n{}", render_markdown(&out));
+        for o in &out.outcomes {
+            if let Some(l) = o.lds {
+                report_metric(&format!("fig4.{c}.{}.lds", o.method), l, "spearman");
+            }
+            if let Some(b) = &o.brittleness {
+                for (k, v) in &b.per_k {
+                    report_metric(
+                        &format!("fig4.{c}.{}.brittleness.k{k}", o.method),
+                        *v,
+                        if out.kind == "mlp" { "flip_frac" } else { "dloss" },
+                    );
+                }
+            }
+        }
+    }
+}

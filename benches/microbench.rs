@@ -1,0 +1,104 @@
+//! Bench: substrate microbenchmarks — host linalg (matmul_t, eigh),
+//! store scan bandwidth, top-k throughput, preconditioner apply.
+//! These locate the L3 hot-path costs for the perf pass (DESIGN.md §7).
+
+use logra::linalg::{eigh, Matrix};
+use logra::store::{GradStore, GradStoreWriter};
+use logra::util::bench::{bench, report_metric, BenchOpts};
+use logra::util::rng::Pcg32;
+use logra::util::topk::TopK;
+
+fn main() {
+    let mut rng = Pcg32::seeded(7);
+
+    // matmul_t at scoring shapes: [8, K] x [chunk, K].
+    for (m, n, k) in [(8usize, 256usize, 192usize), (8, 1024, 192), (8, 1024, 768)] {
+        let a = Matrix::random_normal(&mut rng, m, k, 1.0);
+        let b = Matrix::random_normal(&mut rng, n, k, 1.0);
+        let res = bench(
+            &format!("matmul_t.{m}x{n}x{k}"),
+            BenchOpts { warmup_iters: 2, iters: 20, max_seconds: 20.0 },
+            || {
+                let c = a.matmul_t(&b);
+                std::hint::black_box(&c);
+            },
+        );
+        let flops = 2.0 * (m * n * k) as f64;
+        report_metric(
+            &format!("micro.matmul_t.gflops.{m}x{n}x{k}"),
+            flops / res.summary().mean / 1e9,
+            "gflops",
+        );
+    }
+
+    // Jacobi eigh across Hessian-block sizes.
+    for n in [16usize, 64, 128, 256] {
+        let b = Matrix::random_normal(&mut rng, n + 8, n, 1.0);
+        let s = b.transpose().matmul(&b);
+        let res = bench(
+            &format!("eigh.{n}"),
+            BenchOpts { warmup_iters: 1, iters: 5, max_seconds: 30.0 },
+            || {
+                let e = eigh(&s);
+                std::hint::black_box(&e.eigenvalues);
+            },
+        );
+        report_metric(&format!("micro.eigh.ms.{n}"), res.summary().mean * 1e3, "ms");
+    }
+
+    // Store sequential scan bandwidth.
+    {
+        let dir = std::env::temp_dir().join("logra-microbench-store");
+        let _ = std::fs::remove_dir_all(&dir);
+        let k = 192usize;
+        let rows = 4096usize;
+        let mut w = GradStoreWriter::create(&dir, k).unwrap();
+        let mut buf = vec![0.0f32; 256 * k];
+        for b in 0..(rows / 256) {
+            rng.fill_normal(&mut buf, 1.0);
+            let ids: Vec<u64> = (b as u64 * 256..(b as u64 + 1) * 256).collect();
+            w.append(&ids, &buf).unwrap();
+        }
+        w.finalize().unwrap();
+        let store = GradStore::open(&dir).unwrap();
+        let res = bench(
+            "store.scan",
+            BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 20.0 },
+            || {
+                let mut acc = 0.0f32;
+                let mut at = 0;
+                while at < store.rows() {
+                    let len = 512.min(store.rows() - at);
+                    store.prefetch(at + len, 512.min(store.rows().saturating_sub(at + len)));
+                    let c = store.chunk(at, len);
+                    acc += c[0] + c[c.len() - 1];
+                    at += len;
+                }
+                std::hint::black_box(acc);
+            },
+        );
+        let bytes = (rows * k * 4) as f64;
+        report_metric("micro.store.scan_gbps", bytes / res.summary().mean / 1e9, "GB/s");
+    }
+
+    // Top-k under a firehose of scores.
+    {
+        let scores: Vec<f64> = (0..1_000_000).map(|_| rng.normal()).collect();
+        let res = bench(
+            "topk.1M",
+            BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 20.0 },
+            || {
+                let mut tk = TopK::new(10);
+                for (i, &s) in scores.iter().enumerate() {
+                    tk.push(s, i as u64);
+                }
+                std::hint::black_box(tk.into_sorted());
+            },
+        );
+        report_metric(
+            "micro.topk.melem_per_s",
+            1.0 / res.summary().mean,
+            "M elems/s",
+        );
+    }
+}

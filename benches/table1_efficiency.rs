@@ -1,0 +1,52 @@
+//! Bench: Table 1 — LoGra vs EKFAC logging & influence efficiency.
+//!
+//! `cargo bench --bench table1_efficiency` (env LOGRA_BENCH_CONFIG /
+//! LOGRA_BENCH_NTRAIN override the defaults; lm_small reproduces the
+//! paper-shaped gap at larger cost).
+
+use logra::eval::table1::{run_table1, TABLE1_HEADER};
+use logra::util::bench::report_metric;
+
+fn main() {
+    let root = std::env::current_dir().expect("cwd");
+    if !root.join("artifacts").join("lm_tiny").join("manifest.txt").exists() {
+        eprintln!("table1 bench skipped: run `make artifacts` first");
+        return;
+    }
+    let config = std::env::var("LOGRA_BENCH_CONFIG").unwrap_or_else(|_| "lm_tiny".into());
+    let n_train: usize = std::env::var("LOGRA_BENCH_NTRAIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(384);
+    let n_test: usize = 4;
+    println!("== Table 1 reproduction ({config}, n_train={n_train}) ==");
+    let rows = run_table1(&root, &config, n_train, n_test, 4).expect("table1");
+    println!("{TABLE1_HEADER}");
+    for r in &rows {
+        println!("{}", r.render());
+    }
+    // Machine-readable headline: throughput ratio (paper: up to 6,500x).
+    let logra_inf = rows
+        .iter()
+        .find(|r| r.system == "LoGra" && r.phase == "influence")
+        .unwrap();
+    let ekfac_inf = rows
+        .iter()
+        .find(|r| r.system == "EKFAC" && r.phase == "influence")
+        .unwrap();
+    report_metric("table1.logra_influence", logra_inf.throughput, "pairs_per_s");
+    report_metric("table1.ekfac_influence", ekfac_inf.throughput, "pairs_per_s");
+    report_metric(
+        "table1.influence_speedup",
+        logra_inf.throughput / ekfac_inf.throughput,
+        "x",
+    );
+    let logra_log = rows.iter().find(|r| r.system == "LoGra" && r.phase == "logging").unwrap();
+    let ekfac_log = rows.iter().find(|r| r.system == "EKFAC" && r.phase == "logging").unwrap();
+    report_metric("table1.logra_logging", logra_log.throughput, "tokens_per_s");
+    report_metric("table1.ekfac_logging", ekfac_log.throughput, "tokens_per_s");
+    assert!(
+        logra_inf.throughput > ekfac_inf.throughput,
+        "Table-1 shape violated: LoGra influence not faster than EKFAC"
+    );
+}

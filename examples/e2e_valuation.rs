@@ -1,0 +1,170 @@
+//! END-TO-END DRIVER (DESIGN.md §3; recorded in EXPERIMENTS.md).
+//!
+//! Exercises every layer of the system on a real small workload:
+//!   1. train the `lm_small` transformer (~1.7M params) for a few hundred
+//!      steps on a synthetic topic corpus, logging the loss curve;
+//!   2. run the LoGra logging phase over the full training set (store +
+//!      projected Fisher), reporting throughput/memory/storage;
+//!   3. answer influence queries — both held-out documents and MODEL
+//!      GENERATIONS — through the query engine with ℓ-RelatIF;
+//!   4. report the headline metrics: influence throughput (pairs/s),
+//!      topic-match rate of top-valued docs, and the LoGra-vs-EKFAC
+//!      throughput ratio on a subsample.
+//!
+//! Flags: --steps N (default 300) --n-train N (default 2048) --fast
+//! (shrink everything for CI).
+
+use std::time::Instant;
+
+use anyhow::Result;
+use logra::baselines::{EkfacValuator, Valuator};
+use logra::coordinator::{projected_grads, run_logging, LoggingOptions};
+use logra::data::corpus::{generate, CorpusSpec, TOPIC_NAMES};
+use logra::hessian::random_projections;
+use logra::model::dataset::Dataset;
+use logra::model::generate::generate as lm_generate;
+use logra::model::trainer::Trainer;
+use logra::runtime::Runtime;
+use logra::util::memory::{human_bytes, peak_rss_bytes};
+use logra::util::rng::Pcg32;
+use logra::valuation::{Normalization, QueryEngine};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = logra::cli::parse(&args, &["steps", "n-train", "config"])?;
+    let fast = parsed.has_switch("fast");
+    let config = parsed.flag_or("config", if fast { "lm_tiny" } else { "lm_small" });
+    let steps = parsed.usize_or("steps", if fast { 30 } else { 300 })?;
+    let n_train = parsed.usize_or("n-train", if fast { 256 } else { 2048 })?;
+
+    let root = std::env::current_dir()?;
+    let rt = Runtime::open_named(&root, &config)?;
+    let man = rt.manifest.clone();
+    println!(
+        "== e2e: {} ({} params, K={}, seq_len={}) ==",
+        man.name, man.n_params, man.k_total, man.seq_len
+    );
+
+    // ---- 1. Train.
+    let corpus = generate(CorpusSpec::new(man.vocab, man.seq_len, n_train, 42));
+    let ds = Dataset::Lm(&corpus);
+    let trainer = Trainer::new(&rt);
+    let mut st = trainer.init(0)?;
+    let mut rng = Pcg32::seeded(1);
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    rng.shuffle(&mut order);
+    let batches = ds.batches(&order, man.train_batch);
+    let t0 = Instant::now();
+    let mut loss_curve: Vec<(usize, f32)> = Vec::new();
+    let mut step = 0usize;
+    'outer: loop {
+        for b in &batches {
+            let loss = trainer.step(&mut st, b)?;
+            step += 1;
+            if step % (steps / 10).max(1) == 0 || step == 1 {
+                loss_curve.push((step, loss));
+            }
+            if step >= steps {
+                break 'outer;
+            }
+        }
+        rng.shuffle(&mut order);
+    }
+    let train_secs = t0.elapsed().as_secs_f64();
+    println!("\n-- loss curve ({} steps, {:.1}s, {:.0} tokens/s) --", step, train_secs,
+        (step * man.train_batch * man.seq_len) as f64 / train_secs);
+    for (s, l) in &loss_curve {
+        println!("  step {s:>5}  loss {l:.4}");
+    }
+    let first = loss_curve.first().unwrap().1;
+    let last = loss_curve.last().unwrap().1;
+    anyhow::ensure!(last < first, "training failed to reduce loss");
+
+    // ---- 2. Logging phase.
+    let proj = random_projections(&man, &mut rng);
+    let store_dir = root.join("runs").join("e2e-store");
+    let (store, hessian, rep) =
+        run_logging(&rt, &ds, &st.params, &proj, &store_dir, &LoggingOptions::default())?;
+    println!(
+        "\n-- logging -- {} rows | {:.0} tokens/s | storage {} | peak RSS {}",
+        rep.rows,
+        rep.tokens_per_sec,
+        human_bytes(rep.storage_bytes),
+        human_bytes(rep.peak_rss_bytes)
+    );
+
+    // ---- 3. Queries.
+    let precond = hessian.unwrap().preconditioner(0.1)?;
+    let engine = QueryEngine::new(&rt, &store, &precond);
+    let n_queries = man.test_batch;
+    // Held-out docs (one per topic) + model generations.
+    let held = generate(CorpusSpec::new(man.vocab, man.seq_len, n_queries, 4242));
+    let hds = Dataset::Lm(&held);
+    let qidx: Vec<usize> = (0..n_queries).collect();
+    let (qg, _) = projected_grads(&rt, &hds, &qidx, &st.params, &proj)?;
+    let t1 = Instant::now();
+    let results = engine.query(&qg, n_queries, 10, Normalization::RelatIf)?;
+    let scan_secs = t1.elapsed().as_secs_f64();
+    let pairs = (n_queries * store.rows()) as f64;
+    println!(
+        "\n-- influence -- {:.0} (train,test) pairs/s over {} stored rows",
+        pairs / scan_secs,
+        store.rows()
+    );
+    let mut matches = 0usize;
+    let mut total = 0usize;
+    for (qi, res) in results.iter().enumerate() {
+        let qt = held.docs[qi].topic;
+        for &(_, id) in res.top.iter().take(5) {
+            if corpus.docs[id as usize].topic == qt {
+                matches += 1;
+            }
+            total += 1;
+        }
+    }
+    let match_rate = matches as f64 / total as f64;
+    println!(
+        "top-5 topic-match rate (held-out queries): {:.2} (chance {:.2})",
+        match_rate,
+        1.0 / TOPIC_NAMES.len() as f64
+    );
+
+    // Model-generation query (the paper's Fig-5 setting).
+    let gen = lm_generate(&rt, &st.params, &corpus.docs[0].tokens[..8], 0.8, &mut rng)?;
+    println!("\nmodel generation: {}", corpus.render(&gen[..24]));
+    let gen_holder = logra::data::Corpus {
+        layout: corpus.layout.clone(),
+        docs: vec![logra::data::corpus::Doc { id: 0, topic: 0, tokens: gen.clone() }],
+        seq_len: corpus.seq_len,
+    };
+    let gds = Dataset::Lm(&gen_holder);
+    let (gg, _) = projected_grads(&rt, &gds, &[0], &st.params, &proj)?;
+    let gres = engine.query(&gg, 1, 5, Normalization::RelatIf)?;
+    for &(s, id) in &gres[0].top {
+        let d = &corpus.docs[id as usize];
+        println!("  [{s:+.3}] doc {id} ({}) {}", TOPIC_NAMES[d.topic], corpus.render(&d.tokens[..12]));
+    }
+
+    // ---- 4. EKFAC comparison on a subsample (full EKFAC is the point:
+    //         it cannot afford the full set).
+    let sub = 256.min(n_train);
+    let sub_corpus = generate(CorpusSpec::new(man.vocab, man.seq_len, sub, 42));
+    let sub_ds = Dataset::Lm(&sub_corpus);
+    let mut ek = EkfacValuator::new(&rt, &sub_ds, &hds, &st.params);
+    let t2 = Instant::now();
+    let _ = ek.values(&qidx)?;
+    let ek_secs = t2.elapsed().as_secs_f64();
+    let ek_pairs_per_s = (n_queries * sub) as f64 / ek_secs;
+    let logra_pairs_per_s = pairs / scan_secs;
+    println!(
+        "\n-- headline -- LoGra {:.0} pairs/s vs EKFAC {:.0} pairs/s  ({:.0}x)",
+        logra_pairs_per_s,
+        ek_pairs_per_s,
+        logra_pairs_per_s / ek_pairs_per_s
+    );
+    println!("peak RSS end of run: {}", human_bytes(peak_rss_bytes()));
+    anyhow::ensure!(match_rate > 1.5 / TOPIC_NAMES.len() as f64, "retrieval no better than chance");
+    anyhow::ensure!(logra_pairs_per_s > ek_pairs_per_s, "LoGra slower than EKFAC?!");
+    println!("\ne2e OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the whole valuation loop in ~60 lines.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Generates a tiny topic-labelled corpus, trains the tiny LM briefly,
+//! logs projected gradients for every training document (LoGra), fits the
+//! projected Fisher, and asks: "which training documents are most
+//! valuable for this query?"
+
+use anyhow::Result;
+use logra::coordinator::{projected_grads, run_logging, LoggingOptions};
+use logra::data::corpus::{generate, CorpusSpec, TOPIC_NAMES};
+use logra::hessian::random_projections;
+use logra::model::dataset::Dataset;
+use logra::model::trainer::Trainer;
+use logra::runtime::Runtime;
+use logra::util::rng::Pcg32;
+use logra::valuation::{Normalization, QueryEngine};
+
+fn main() -> Result<()> {
+    let root = std::env::current_dir()?;
+    let rt = Runtime::open_named(&root, "lm_tiny")?;
+    let man = rt.manifest.clone();
+
+    // 1. Data: 256 synthetic documents with ground-truth topics.
+    let corpus = generate(CorpusSpec::new(man.vocab, man.seq_len, 256, 42));
+    let ds = Dataset::Lm(&corpus);
+
+    // 2. Train the model for a couple of epochs.
+    let trainer = Trainer::new(&rt);
+    let mut st = trainer.init(0)?;
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Pcg32::seeded(1);
+    let losses = trainer.train(&mut st, &ds, &all, 3, &mut rng)?;
+    println!("train loss per epoch: {losses:?}");
+
+    // 3. Logging phase: projected gradients for ALL train docs -> disk,
+    //    projected Fisher accumulated inline.
+    let proj = random_projections(&man, &mut rng);
+    let store_dir = root.join("runs").join("quickstart-store");
+    let (store, hessian, report) =
+        run_logging(&rt, &ds, &st.params, &proj, &store_dir, &LoggingOptions::default())?;
+    println!(
+        "logged {} rows at {:.0} tokens/s ({} on disk)",
+        report.rows,
+        report.tokens_per_sec,
+        logra::util::memory::human_bytes(report.storage_bytes)
+    );
+
+    // 4. Query: value training docs for a held-out document.
+    let precond = hessian.unwrap().preconditioner(0.1)?;
+    let engine = QueryEngine::new(&rt, &store, &precond);
+    let query_corpus = generate(CorpusSpec::new(man.vocab, man.seq_len, 4, 777));
+    let qds = Dataset::Lm(&query_corpus);
+    let (g, _) = projected_grads(&rt, &qds, &[0, 1, 2, 3], &st.params, &proj)?;
+    let results = engine.query(&g, 4, 5, Normalization::RelatIf)?;
+    for (qi, res) in results.iter().enumerate() {
+        let qt = query_corpus.docs[qi].topic;
+        println!("\nquery {qi} (topic {}):", TOPIC_NAMES[qt]);
+        for &(score, id) in &res.top {
+            let doc = &corpus.docs[id as usize];
+            println!(
+                "  [{score:+.3}] doc {id} (topic {}) {}",
+                TOPIC_NAMES[doc.topic],
+                corpus.render(&doc.tokens[..12])
+            );
+        }
+    }
+    Ok(())
+}

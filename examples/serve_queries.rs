@@ -1,0 +1,111 @@
+//! Serving demo: the dynamic-batching valuation service under concurrent
+//! load (Figure 1's test-time path as an online service).
+//!
+//! ```text
+//! cargo run --release --example serve_queries [-- --clients 4 --requests 32]
+//! ```
+//!
+//! Reports per-request latency percentiles, sustained throughput, and the
+//! dynamic batcher's mean batch fill.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use logra::coordinator::{run_logging, LoggingOptions, ServiceConfig, ValuationService};
+use logra::data::corpus::{generate, CorpusSpec};
+use logra::hessian::random_projections;
+use logra::model::dataset::Dataset;
+use logra::model::trainer::Trainer;
+use logra::runtime::Runtime;
+use logra::util::rng::Pcg32;
+use logra::util::stats::{percentile, summarize};
+use logra::valuation::Normalization;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = logra::cli::parse(&args, &["clients", "requests", "n-train"])?;
+    let n_clients = parsed.usize_or("clients", 4)?;
+    let n_requests = parsed.usize_or("requests", 24)?;
+    let n_train = parsed.usize_or("n-train", 512)?;
+
+    let root = std::env::current_dir()?;
+    let artifact_dir = root.join("artifacts").join("lm_tiny");
+    let rt = Runtime::open(&artifact_dir)?;
+    let man = rt.manifest.clone();
+
+    // Prepare model + store (offline phase).
+    let corpus = generate(CorpusSpec::new(man.vocab, man.seq_len, n_train, 42));
+    let ds = Dataset::Lm(&corpus);
+    let trainer = Trainer::new(&rt);
+    let mut st = trainer.init(0)?;
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Pcg32::seeded(1);
+    trainer.train(&mut st, &ds, &all, 2, &mut rng)?;
+    let proj = random_projections(&man, &mut rng);
+    let store_dir = root.join("runs").join("serve-store");
+    let (store, hessian, _) =
+        run_logging(&rt, &ds, &st.params, &proj, &store_dir, &LoggingOptions::default())?;
+    println!("store ready: {} rows", store.rows());
+    drop(store);
+    drop(rt);
+
+    // Online phase: spawn the service, hammer it from client threads.
+    let svc = Arc::new(ValuationService::spawn(ServiceConfig {
+        artifact_dir,
+        store_dir,
+        params: st.params.clone(),
+        proj_flat: proj,
+        hessian: hessian.unwrap(),
+        damping: 0.1,
+        norm: Normalization::RelatIf,
+        max_wait: Duration::from_millis(4),
+    })?);
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let svc2 = svc.clone();
+        let queries: Vec<Vec<i32>> = (0..n_requests)
+            .map(|q| corpus.docs[(c * 37 + q * 13) % corpus.docs.len()].tokens.clone())
+            .collect();
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut lat = Vec::new();
+            for q in queries {
+                let t = Instant::now();
+                let res = svc2.query(q, 5).expect("query failed");
+                assert_eq!(res.top.len(), 5);
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut latencies = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = summarize(&latencies);
+    let snap = svc.metrics.snapshot();
+    println!("\n-- serving report --");
+    println!("requests           {}", latencies.len());
+    println!("throughput         {:.1} req/s", latencies.len() as f64 / wall);
+    println!(
+        "latency mean/p50/p95/p99  {:.1} / {:.1} / {:.1} / {:.1} ms",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        percentile(&latencies, 99.0) * 1e3
+    );
+    println!("batches            {} (mean fill {:.2})", snap.batches, snap.mean_batch_fill());
+    println!(
+        "scan throughput    {:.0} (train,test) pairs/s",
+        snap.pairs_per_sec(1)
+    );
+    println!(
+        "worker time        grad {:.3}s  scan {:.3}s",
+        snap.grad_seconds, snap.scan_seconds
+    );
+    Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    Ok(())
+}

@@ -1,0 +1,239 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+Usage (driven by ``make artifacts``):
+
+    cd python && python -m compile.aot --config ../configs/lm_tiny.toml \
+        --out ../artifacts/lm_tiny
+
+HLO text (NOT ``lowered.compiler_ir("hlo")`` protos, NOT ``.serialize()``)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the Rust ``xla`` 0.1.6
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+Lowered with ``return_tuple=True`` — the Rust side unwraps with
+``to_tuple``.
+
+The manifest (``manifest.txt``, flat ``key=value`` lines, parsed by
+``rust/src/runtime/manifest.rs``) records every shape/offset convention the
+Rust coordinator needs: flat-param layout, LoGra module table with
+gradient-block and projection-vector offsets, covariance layout, and the
+fixed batch shapes each entry point was closed over.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import logra, mlp as mlp_mod, model as lm_mod, optim
+from .config import Config, load
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def batch_specs(cfg: Config, b: int) -> Tuple:
+    """ShapeDtypeStructs for one data batch (LM: tokens; MLP: images+labels)."""
+    if cfg.kind == "lm":
+        return (i32(b, cfg.lm.seq_len),)
+    return (f32(b, cfg.mlp.input_dim), i32(b))
+
+
+def build_entries(cfg: Config):
+    """[(name, fn, arg_specs, output_desc)] for every artifact."""
+    spec = logra.param_spec_of(cfg)
+    n = spec.total
+    kk = logra.k_total(cfg)
+    kf = logra.k_total(cfg, full_rank=True)
+    pn = logra.proj_total(cfg)
+    pf = logra.proj_total(cfg, full_rank=True)
+    tb, lb = cfg.train.batch, cfg.log_batch
+    qb, tc = cfg.test_batch, cfg.train_chunk
+
+    def init(seed):
+        if cfg.kind == "lm":
+            return (lm_mod.init_params(cfg, seed),)
+        return (mlp_mod.init_params(cfg, seed),)
+
+    def train_step(params, m, v, step, *batch):
+        def mean_loss(p):
+            from . import nn
+
+            cap = nn.Capture([])
+            return logra.loss_with_capture(cfg, p, batch, cap).mean()
+
+        loss, grad = jax.value_and_grad(mean_loss)(params)
+        p2, m2, v2, s2 = optim.apply_update(cfg, params, m, v, step, grad)
+        return (p2, m2, v2, s2, loss)
+
+    def eval_loss(params, *batch):
+        from . import nn
+
+        cap = nn.Capture([])
+        if cfg.kind == "lm":
+            (tokens,) = batch
+            loss, _ = lm_mod.per_sample_loss(cfg, params, tokens, cap)
+            return (loss,)
+        images, labels = batch
+        loss, logits = mlp_mod.per_sample_loss(cfg, params, images, labels, cap)
+        return (loss, logits)
+
+    def logra_log(params, flat_p, *batch):
+        g, loss = logra.logra_log(cfg, params, flat_p, batch)
+        return (g, loss)
+
+    def ekfac_log(params, flat_q, *batch):
+        g, loss = logra.logra_log(cfg, params, flat_q, batch, full_rank=True)
+        return (g, loss)
+
+    def cov_stats(params, *batch):
+        return (logra.cov_stats(cfg, params, batch),)
+
+    def full_grad(params, *batch):
+        return (logra.full_grads(cfg, params, batch),)
+
+    def reprs(params, *batch):
+        if cfg.kind == "lm":
+            (tokens,) = batch
+            return (lm_mod.mean_hidden(cfg, params, tokens),)
+        images, _ = batch
+        return (mlp_mod.penultimate(cfg, params, images),)
+
+    def score(g_test, g_train):
+        from .kernels import score as score_kernel
+
+        return (score_kernel(g_test, g_train),)
+
+    entries = [
+        ("init", init, (u32(),)),
+        ("train_step", train_step, (f32(n), f32(n), f32(n), i32(), *batch_specs(cfg, tb))),
+        ("eval_loss", eval_loss, (f32(n), *batch_specs(cfg, lb))),
+        ("logra_log", logra_log, (f32(n), f32(pn), *batch_specs(cfg, lb))),
+        ("cov_stats", cov_stats, (f32(n), *batch_specs(cfg, lb))),
+        ("full_grad", full_grad, (f32(n), *batch_specs(cfg, lb))),
+        ("reprs", reprs, (f32(n), *batch_specs(cfg, lb))),
+        ("score", score, (f32(qb, kk), f32(tc, kk))),
+        ("ekfac_log", ekfac_log, (f32(n), f32(pf), *batch_specs(cfg, lb))),
+        ("score_full", score, (f32(qb, kf), f32(lb, kf))),
+    ]
+    if cfg.kind == "lm":
+
+        def logits(params, tokens):
+            from . import nn
+
+            p = lm_mod.param_spec(cfg.lm).unpack(params)
+            return (lm_mod.forward(cfg, p, tokens, nn.Capture([])),)
+
+        entries.append(("logits", logits, (f32(n), i32(1, cfg.lm.seq_len))))
+    return entries
+
+
+def write_manifest(cfg: Config, out_dir: str, entry_names: Sequence[str]) -> None:
+    spec = logra.param_spec_of(cfg)
+    mods = logra.modules_of(cfg)
+    lines: List[str] = []
+    add = lines.append
+    add(f"name={cfg.name}")
+    add(f"kind={cfg.kind}")
+    add(f"n_params={spec.total}")
+    add(f"k_in={cfg.logra.k_in}")
+    add(f"k_out={cfg.logra.k_out}")
+    add(f"k_total={logra.k_total(cfg)}")
+    add(f"k_full={logra.k_total(cfg, full_rank=True)}")
+    add(f"proj_len={logra.proj_total(cfg)}")
+    add(f"proj_len_full={logra.proj_total(cfg, full_rank=True)}")
+    add(f"train_batch={cfg.train.batch}")
+    add(f"log_batch={cfg.log_batch}")
+    add(f"test_batch={cfg.test_batch}")
+    add(f"train_chunk={cfg.train_chunk}")
+    if cfg.kind == "lm":
+        add(f"vocab={cfg.lm.vocab}")
+        add(f"seq_len={cfg.lm.seq_len}")
+        add(f"d_model={cfg.lm.d_model}")
+        add(f"repr_dim={cfg.lm.d_model}")
+    else:
+        add(f"input_dim={cfg.mlp.input_dim}")
+        add(f"classes={cfg.mlp.classes}")
+        add(f"repr_dim={cfg.mlp.hidden[-1]}")
+    add(f"n_modules={len(mods)}")
+    g_off = gf_off = p_off = pf_off = c_off = 0
+    k2 = cfg.logra.k_in * cfg.logra.k_out
+    for i, m in enumerate(mods):
+        add(f"module.{i}.name={m.name}")
+        add(f"module.{i}.n_in={m.n_in}")
+        add(f"module.{i}.n_out={m.n_out}")
+        add(f"module.{i}.g_off={g_off}")
+        add(f"module.{i}.g_len={k2}")
+        add(f"module.{i}.gfull_off={gf_off}")
+        add(f"module.{i}.gfull_len={m.n_in * m.n_out}")
+        add(f"module.{i}.p_off={p_off}")
+        add(f"module.{i}.pfull_off={pf_off}")
+        add(f"module.{i}.cov_off={c_off}")
+        g_off += k2
+        gf_off += m.n_in * m.n_out
+        p_off += cfg.logra.k_in * m.n_in + cfg.logra.k_out * m.n_out
+        pf_off += m.n_in * m.n_in + m.n_out * m.n_out
+        c_off += m.n_in * m.n_in + m.n_out * m.n_out
+    add(f"cov_len={c_off}")
+    off = 0
+    for i, (name, shape) in enumerate(spec.entries):
+        sz = 1
+        for d in shape:
+            sz *= d
+        add(f"param.{i}.name={name}")
+        add(f"param.{i}.off={off}")
+        add(f"param.{i}.shape={'x'.join(str(d) for d in shape)}")
+        off += sz
+    add(f"n_param_tensors={len(spec.entries)}")
+    add("entries=" + ",".join(entry_names))
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--only", default="", help="comma list of entries to rebuild")
+    args = ap.parse_args()
+    cfg = load(args.config)
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    names = []
+    for name, fn, specs in build_entries(cfg):
+        names.append(name)
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {cfg.name}/{name}: {len(text)} chars")
+    write_manifest(cfg, args.out, names)
+    print(f"[aot] {cfg.name}: manifest + {len(names)} entries -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Shared build-time configuration.
+
+Configs live in ``configs/*.toml`` and are parsed both here (for AOT
+lowering) and by the Rust coordinator (``rust/src/config``). Only the
+TOML subset that the hand-rolled Rust parser understands is allowed:
+``[section]`` headers, ``key = value`` with int / float / string / bool /
+flat int-lists, and ``#`` comments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import tomllib
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class LmModelConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpModelConfig:
+    input_dim: int
+    hidden: List[int]
+    classes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LograConfig:
+    k_in: int
+    k_out: int
+    modules: str = "all"  # "all" | "mlp" (LM only: restrict to MLP linears)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    batch: int
+    lr: float
+    weight_decay: float
+    optimizer: str  # "adamw" | "sgdm"
+    momentum: float = 0.9
+    grad_clip: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    kind: str  # "lm" | "mlp"
+    model: "LmModelConfig | MlpModelConfig"
+    logra: LograConfig
+    train: TrainConfig
+    log_batch: int
+    test_batch: int
+    train_chunk: int
+
+    @property
+    def lm(self) -> LmModelConfig:
+        assert self.kind == "lm"
+        return self.model  # type: ignore[return-value]
+
+    @property
+    def mlp(self) -> MlpModelConfig:
+        assert self.kind == "mlp"
+        return self.model  # type: ignore[return-value]
+
+
+def load(path: str) -> Config:
+    with open(path, "rb") as f:
+        raw = tomllib.load(f)
+    kind = raw["meta"]["kind"]
+    m = raw["model"]
+    if kind == "lm":
+        model = LmModelConfig(
+            vocab=m["vocab"],
+            d_model=m["d_model"],
+            n_layers=m["n_layers"],
+            n_heads=m["n_heads"],
+            d_ff=m["d_ff"],
+            seq_len=m["seq_len"],
+        )
+    elif kind == "mlp":
+        model = MlpModelConfig(
+            input_dim=m["input_dim"],
+            hidden=list(m["hidden"]),
+            classes=m["classes"],
+        )
+    else:
+        raise ValueError(f"unknown model kind {kind!r}")
+    lg = raw["logra"]
+    tr = raw["train"]
+    return Config(
+        name=raw["meta"]["name"],
+        kind=kind,
+        model=model,
+        logra=LograConfig(
+            k_in=lg["k_in"],
+            k_out=lg["k_out"],
+            modules=lg.get("modules", "all"),
+        ),
+        train=TrainConfig(
+            batch=tr["batch"],
+            lr=float(tr["lr"]),
+            weight_decay=float(tr["weight_decay"]),
+            optimizer=tr["optimizer"],
+            momentum=float(tr.get("momentum", 0.9)),
+            grad_clip=float(tr.get("grad_clip", 0.0)),
+        ),
+        log_batch=raw["log"]["batch"],
+        test_batch=raw["score"]["test_batch"],
+        train_chunk=raw["score"]["train_chunk"],
+    )

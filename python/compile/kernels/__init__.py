@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+All kernels lower with ``interpret=True`` so the resulting HLO runs on any
+PJRT backend, including the Rust CPU client (real-TPU Mosaic lowering is
+compile-only on this testbed; see DESIGN.md section 8 for the hardware
+adaptation analysis).
+"""
+
+from .covariance import covariance
+from .logra_project import logra_project
+from .score import score
+
+__all__ = ["covariance", "logra_project", "score"]

@@ -1,0 +1,57 @@
+"""Uncentered activation covariance kernel (KFAC factors) — Pallas.
+
+Accumulates ``C = sum_r a_r a_r^T`` over all (batch, time) rows of an
+activation tensor. These are the ``C_F`` / ``C_B`` Kronecker factors of the
+KFAC Hessian approximation (paper §3.2); their eigenbases drive both the
+LoGra PCA initialization and the EKFAC-influence baseline.
+
+Grid iterates sequentially over row tiles (TPU grids and interpret mode are
+both sequential), accumulating into the single output block — the classic
+Pallas reduction idiom with a first-step zero-init.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    o_ref[...] += jnp.dot(a.T, a, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def covariance(a, block_rows: int = 0):
+    """C = rows(a)^T rows(a), rows = reshape(a, [-1, n]).
+
+    Args:
+      a: [..., n] activations; leading axes are flattened into rows.
+      block_rows: rows per grid step (0 = all rows in one step). Row counts
+        not divisible by the tile are zero-padded (zero rows are exact
+        no-ops for an uncentered covariance).
+
+    Returns: [n, n] float32.
+    """
+    n = a.shape[-1]
+    rows = a.reshape(-1, n)
+    r = rows.shape[0]
+    br = block_rows or r
+    pad = (-r) % br
+    if pad:
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    rr = r + pad
+    return pl.pallas_call(
+        _kernel,
+        grid=(rr // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(rows)

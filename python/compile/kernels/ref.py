@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Each oracle implements the mathematically obvious ("naive") computation the
+kernel must match bit-for-bit (up to float accumulation order). The oracles
+intentionally take the *expensive* route the paper's LoGra kernel avoids —
+e.g. ``logra_project_ref`` materializes the full per-sample gradient
+``DW = dx^T x`` and only then projects it (the O(b*n*k) naive gradient
+projection of TRAK / Arnoldi-IF, paper section 2) — so that a kernel/ref
+match is also a check of the Eq. (6) Kronecker identity:
+
+    (P_i (x) P_o) vec(DW) = vec( (P_o dx_t)(P_i x_t)^T summed over t ).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def logra_project_ref(x, dx, p_in, p_out):
+    """Naive projected per-sample gradient.
+
+    Args:
+      x:     [B, T, n_in]   forward activations (layer input).
+      dx:    [B, T, n_out]  backward activations (grad of summed loss wrt
+                            layer pre-activation output).
+      p_in:  [k_in, n_in]   input-side projection.
+      p_out: [k_out, n_out] output-side projection.
+
+    Returns:
+      [B, k_out * k_in] projected per-sample gradients, row-major over
+      (k_out, k_in) — i.e. vec(P_o DW P_i^T) with C-order vec.
+    """
+    # Full per-sample weight gradient: DW[b] = sum_t dx[b,t] x[b,t]^T.
+    dw = jnp.einsum("bto,bti->boi", dx, x)  # [B, n_out, n_in]
+    proj = jnp.einsum("oO,bOI,iI->boi", p_out, dw, p_in)  # [B, k_out, k_in]
+    return proj.reshape(proj.shape[0], -1)
+
+
+def score_ref(g_test, g_train):
+    """Influence dot-product: S = G_te @ G_tr^T.
+
+    Args:
+      g_test:  [B_te, K] (already iHVP-preconditioned by the caller).
+      g_train: [B_tr, K].
+
+    Returns: [B_te, B_tr] scores.
+    """
+    return g_test @ g_train.T
+
+
+def covariance_ref(a):
+    """Uncentered activation covariance (KFAC factor contribution).
+
+    Args:
+      a: [B, T, n] activations (or [R, n] pre-flattened rows).
+
+    Returns: [n, n] sum over all rows of a a^T.
+    """
+    rows = a.reshape(-1, a.shape[-1])
+    return rows.T @ rows

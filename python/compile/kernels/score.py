@@ -1,0 +1,60 @@
+"""Influence dot-product kernel — Pallas.
+
+The recurring phase of the paper's valuation system (Table 1, right half):
+``S = G_te @ G_tr^T`` where ``G_te`` rows are iHVP-preconditioned test
+gradients and ``G_tr`` rows stream in from the memory-mapped gradient store.
+A tiled matmul over a (test-tile, train-tile) grid; K (the total projected
+dimension) is small by construction, so each tile keeps its full-K operands
+resident.
+
+TPU mapping: [bm,K]x[K,bn] MXU tiles; the train-side tile is the natural
+unit the Rust prefetcher reads from disk, so the HBM→VMEM stream mirrors the
+disk→host stream one level up (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...].T, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def score(g_test, g_train, block_m: int = 0, block_n: int = 0):
+    """S[i, j] = <g_test[i], g_train[j]>.
+
+    Args:
+      g_test:  [M, K] preconditioned test gradients.
+      g_train: [N, K] stored train gradients.
+      block_m / block_n: tile sizes (0 = whole axis). Axes not divisible by
+        the tile are zero-padded; the pad is sliced away from the result.
+
+    Returns: [M, N] float32 scores.
+    """
+    m, k = g_test.shape
+    n, k2 = g_train.shape
+    assert k == k2, (k, k2)
+    bm = block_m or m
+    bn = block_n or n
+    pm = (-m) % bm
+    pn = (-n) % bn
+    a = jnp.pad(g_test, ((0, pm), (0, 0))) if pm else g_test
+    b = jnp.pad(g_train, ((0, pn), (0, 0))) if pn else g_train
+    mm, nn = m + pm, n + pn
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mm // bm, nn // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]

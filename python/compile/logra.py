@@ -1,0 +1,171 @@
+"""LoGra entry-point assembly: the L2 functions that get AOT-lowered.
+
+Every function here is shape-closed over a ``Config`` and takes/returns flat
+f32 vectors (plus integer token / label tensors) so the Rust runtime can
+drive them with a fixed literal layout recorded in the manifest.
+
+Projection-matrix packing (shared with Rust): for module order
+``module_specs(cfg)``, concatenate per module ``P_i`` ([k_in, n_in],
+row-major) then ``P_o`` ([k_out, n_out], row-major) into one flat vector.
+The EKFAC variant uses the same packing with full-rank k == n (the KFAC
+eigenbasis rotation; corrected eigenvalues are fitted in Rust from the
+rotated gradients it returns).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mlp as mlp_mod
+from . import model as lm_mod
+from . import nn
+from .config import Config
+from .kernels import covariance, logra_project
+
+
+# ------------------------------------------------------------ dispatch
+
+
+def modules_of(cfg: Config) -> List[nn.ModuleSpec]:
+    return (
+        lm_mod.module_specs(cfg) if cfg.kind == "lm" else mlp_mod.module_specs(cfg)
+    )
+
+
+def param_spec_of(cfg: Config):
+    return (
+        lm_mod.param_spec(cfg.lm)
+        if cfg.kind == "lm"
+        else mlp_mod.param_spec(cfg.mlp)
+    )
+
+
+def seq_of(cfg: Config) -> int:
+    return cfg.lm.seq_len if cfg.kind == "lm" else 1
+
+
+def loss_with_capture(cfg: Config, flat_params, batch, cap: nn.Capture):
+    """Per-sample loss [B] under capture. ``batch`` is (tokens,) for LM and
+    (images, labels) for MLP."""
+    if cfg.kind == "lm":
+        (tokens,) = batch
+        loss, _ = lm_mod.per_sample_loss(cfg, flat_params, tokens, cap)
+        return loss
+    images, labels = batch
+    loss, _ = mlp_mod.per_sample_loss(cfg, flat_params, images, labels, cap)
+    return loss
+
+
+# ------------------------------------------------------------ P packing
+
+
+def proj_lengths(cfg: Config, full_rank: bool = False) -> List[Tuple[int, int]]:
+    """Per-module (len(P_i), len(P_o)) in the flat projection vector."""
+    out = []
+    for m in modules_of(cfg):
+        ki = m.n_in if full_rank else cfg.logra.k_in
+        ko = m.n_out if full_rank else cfg.logra.k_out
+        out.append((ki * m.n_in, ko * m.n_out))
+    return out
+
+
+def proj_total(cfg: Config, full_rank: bool = False) -> int:
+    return sum(a + b for a, b in proj_lengths(cfg, full_rank))
+
+
+def unpack_projections(cfg: Config, flat_p, full_rank: bool = False):
+    """Flat projection vector -> [(P_i, P_o)] per module."""
+    out, off = [], 0
+    for m in modules_of(cfg):
+        ki = m.n_in if full_rank else cfg.logra.k_in
+        ko = m.n_out if full_rank else cfg.logra.k_out
+        pi = jax.lax.dynamic_slice(flat_p, (off,), (ki * m.n_in,)).reshape(ki, m.n_in)
+        off += ki * m.n_in
+        po = jax.lax.dynamic_slice(flat_p, (off,), (ko * m.n_out,)).reshape(
+            ko, m.n_out
+        )
+        off += ko * m.n_out
+        out.append((pi, po))
+    return out
+
+
+def k_total(cfg: Config, full_rank: bool = False) -> int:
+    if full_rank:
+        return sum(m.n_in * m.n_out for m in modules_of(cfg))
+    return len(modules_of(cfg)) * cfg.logra.k_in * cfg.logra.k_out
+
+
+# ------------------------------------------------------------ entry points
+
+
+def logra_log(cfg: Config, flat_params, flat_p, batch, full_rank: bool = False):
+    """Per-sample projected gradients.
+
+    Returns (G [B, K], per_sample_loss [B]) where K = k_total(cfg, full_rank)
+    and G rows concatenate per-module vec(P_o DW_l P_i^T) blocks in module
+    order — the layout the Rust gradient store and Hessian service assume.
+    """
+    mods = modules_of(cfg)
+    batch_size = batch[0].shape[0]
+    seq = seq_of(cfg)
+
+    def lf(probes):
+        cap = nn.Capture(probes)
+        loss = loss_with_capture(cfg, flat_params, batch, cap)
+        return loss.sum(), (loss, cap.xs)
+
+    dprobes, per_loss, xs = nn.grads_and_capture(lf, mods, batch_size, seq)
+    projs = unpack_projections(cfg, flat_p, full_rank)
+    blocks = []
+    for (pi, po), x, dx in zip(projs, xs, dprobes):
+        blocks.append(logra_project(x, dx, pi, po))
+    return jnp.concatenate(blocks, axis=1), per_loss
+
+
+def cov_stats(cfg: Config, flat_params, batch):
+    """KFAC factor contributions for this batch.
+
+    Returns one flat vector concatenating, per module, ``C_F`` ([n_in²],
+    sum of x x^T rows) then ``C_B`` ([n_out²], sum of dx dx^T rows). Rust
+    accumulates these across the logging stream, eigendecomposes, and uses
+    the top-k eigenvectors as the LoGra-PCA init / the full basis for EKFAC.
+    """
+    mods = modules_of(cfg)
+    batch_size = batch[0].shape[0]
+    seq = seq_of(cfg)
+
+    def lf(probes):
+        cap = nn.Capture(probes)
+        loss = loss_with_capture(cfg, flat_params, batch, cap)
+        return loss.sum(), (loss, cap.xs)
+
+    dprobes, _, xs = nn.grads_and_capture(lf, mods, batch_size, seq)
+    chunks = []
+    for m, x, dx in zip(mods, xs, dprobes):
+        chunks.append(covariance(x).reshape(-1))
+        chunks.append(covariance(dx).reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def cov_lengths(cfg: Config) -> List[Tuple[int, int]]:
+    return [(m.n_in * m.n_in, m.n_out * m.n_out) for m in modules_of(cfg)]
+
+
+def full_grads(cfg: Config, flat_params, batch):
+    """Per-sample FULL flattened gradients [B, n_params].
+
+    The O(b·n) object the paper's baselines (grad-dot, TRAK projection,
+    EKFAC recompute) pay for; kept for small configs only.
+    """
+
+    def single(flat_params, *example):
+        cap = nn.Capture([])
+        ex = tuple(e[None] for e in example)
+        loss = loss_with_capture(cfg, flat_params, ex, cap)
+        return loss[0]
+
+    grad_one = jax.grad(single, argnums=0)
+    return jax.vmap(lambda *ex: grad_one(flat_params, *ex))(*batch)

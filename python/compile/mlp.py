@@ -1,0 +1,85 @@
+"""MLP classifier (Figure-4 vision benchmarks: FMNIST-like / CIFAR-like).
+
+Mirrors the paper's 3-layer-MLP counterfactual benchmark. Every linear is
+LoGra-instrumented. Inputs are flat feature vectors (the synthetic image
+generators live in ``rust/src/data/images.rs``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import Config, MlpModelConfig
+
+
+def param_spec(m: MlpModelConfig) -> nn.ParamSpec:
+    dims = [m.input_dim] + list(m.hidden) + [m.classes]
+    entries = []
+    for i in range(len(dims) - 1):
+        entries.append((f"fc{i}.w", (dims[i + 1], dims[i])))
+        entries.append((f"fc{i}.b", (dims[i + 1],)))
+    return nn.ParamSpec(tuple(entries))
+
+
+def module_specs(cfg: Config) -> List[nn.ModuleSpec]:
+    m = cfg.mlp
+    dims = [m.input_dim] + list(m.hidden) + [m.classes]
+    return [
+        nn.ModuleSpec(f"fc{i}", n_in=dims[i], n_out=dims[i + 1])
+        for i in range(len(dims) - 1)
+    ]
+
+
+def init_params(cfg: Config, seed) -> jnp.ndarray:
+    """He-initialized flat parameter vector; ``seed`` is a u32 scalar."""
+    m = cfg.mlp
+    spec = param_spec(m)
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jnp.ndarray] = {}
+    dims = [m.input_dim] + list(m.hidden) + [m.classes]
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i])
+        params[f"fc{i}.w"] = (
+            jax.random.normal(sub, (dims[i + 1], dims[i]), jnp.float32) * scale
+        )
+        params[f"fc{i}.b"] = jnp.zeros((dims[i + 1],), jnp.float32)
+    return spec.pack(params)
+
+
+def forward(cfg: Config, p: Dict[str, jnp.ndarray], images, cap: nn.Capture):
+    """Logits [B, C]. ``images`` [B, D] f32 in [0,1]-ish.
+
+    Activations are carried with a singleton time axis so that the LoGra
+    projection kernel's [B, T, n] contract is shared with the LM.
+    """
+    m = cfg.mlp
+    h = images[:, None, :]  # [B, 1, D]
+    n_layers = len(m.hidden) + 1
+    for i in range(n_layers):
+        h = cap.linear(p, f"fc{i}", h)
+        if i + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h[:, 0, :]  # [B, C]
+
+
+def per_sample_loss(cfg: Config, flat_params, images, labels, cap: nn.Capture):
+    spec = param_spec(cfg.mlp)
+    p = spec.unpack(flat_params)
+    logits = forward(cfg, p, images, cap)
+    return nn.cross_entropy_per_token(logits, labels), logits
+
+
+def penultimate(cfg: Config, flat_params, images):
+    """Last hidden representation [B, h_last] (rep-similarity baseline)."""
+    m = cfg.mlp
+    p = param_spec(m).unpack(flat_params)
+    h = images[:, None, :]
+    for i in range(len(m.hidden)):
+        h = nn.plain_linear(p, f"fc{i}", h)
+        h = jax.nn.relu(h)
+    return h[:, 0, :]

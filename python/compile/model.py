@@ -1,0 +1,143 @@
+"""GPT-style decoder LM (the paper's language-model benchmarks).
+
+Pre-LN transformer with learned positions and an untied LM head. The six
+linears per block (wq/wk/wv/wo/fc/proj) are LoGra-instrumentable; the
+``logra.modules`` config selects "all" or "mlp" (the paper's Llama3 run
+watches only MLP linears; its GPT2/counterfactual runs watch everything).
+
+Loss convention follows the paper's LogIX example: per-sample loss is the
+SUM of token cross-entropies over positions 0..T-2 predicting 1..T-1 (the
+sequence gradient is the sum of token gradients — the outlier phenomenon
+§F.2 discusses).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import Config, LmModelConfig
+
+
+def param_spec(m: LmModelConfig) -> nn.ParamSpec:
+    e: List = [
+        ("tok_emb", (m.vocab, m.d_model)),
+        ("pos_emb", (m.seq_len, m.d_model)),
+    ]
+    for l in range(m.n_layers):
+        e += [
+            (f"l{l}.ln1.g", (m.d_model,)),
+            (f"l{l}.ln1.b", (m.d_model,)),
+            (f"l{l}.wq.w", (m.d_model, m.d_model)),
+            (f"l{l}.wq.b", (m.d_model,)),
+            (f"l{l}.wk.w", (m.d_model, m.d_model)),
+            (f"l{l}.wk.b", (m.d_model,)),
+            (f"l{l}.wv.w", (m.d_model, m.d_model)),
+            (f"l{l}.wv.b", (m.d_model,)),
+            (f"l{l}.wo.w", (m.d_model, m.d_model)),
+            (f"l{l}.wo.b", (m.d_model,)),
+            (f"l{l}.ln2.g", (m.d_model,)),
+            (f"l{l}.ln2.b", (m.d_model,)),
+            (f"l{l}.fc.w", (m.d_ff, m.d_model)),
+            (f"l{l}.fc.b", (m.d_ff,)),
+            (f"l{l}.proj.w", (m.d_model, m.d_ff)),
+            (f"l{l}.proj.b", (m.d_model,)),
+        ]
+    e += [
+        ("lnf.g", (m.d_model,)),
+        ("lnf.b", (m.d_model,)),
+        ("head.w", (m.vocab, m.d_model)),
+        ("head.b", (m.vocab,)),
+    ]
+    return nn.ParamSpec(tuple(e))
+
+
+def module_specs(cfg: Config) -> List[nn.ModuleSpec]:
+    m = cfg.lm
+    mods: List[nn.ModuleSpec] = []
+    for l in range(m.n_layers):
+        if cfg.logra.modules == "all":
+            for name in ("wq", "wk", "wv", "wo"):
+                mods.append(nn.ModuleSpec(f"l{l}.{name}", m.d_model, m.d_model))
+        mods.append(nn.ModuleSpec(f"l{l}.fc", m.d_model, m.d_ff))
+        mods.append(nn.ModuleSpec(f"l{l}.proj", m.d_ff, m.d_model))
+    return mods
+
+
+def init_params(cfg: Config, seed) -> jnp.ndarray:
+    """GPT-2-style init (N(0, 0.02), zero biases, unit LN gains)."""
+    m = cfg.lm
+    spec = param_spec(m)
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name, shape in spec.entries:
+        if name.endswith(".b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+    return spec.pack(params)
+
+
+def forward(cfg: Config, p: Dict[str, jnp.ndarray], tokens, cap: nn.Capture):
+    """Logits [B, T, V]."""
+    m = cfg.lm
+    b, t = tokens.shape
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :t]
+    instrument_attn = cfg.logra.modules == "all"
+    for l in range(m.n_layers):
+        x = nn.layer_norm(h, p[f"l{l}.ln1.g"], p[f"l{l}.ln1.b"])
+        if instrument_attn:
+            q = cap.linear(p, f"l{l}.wq", x)
+            k = cap.linear(p, f"l{l}.wk", x)
+            v = cap.linear(p, f"l{l}.wv", x)
+        else:
+            q = nn.plain_linear(p, f"l{l}.wq", x)
+            k = nn.plain_linear(p, f"l{l}.wk", x)
+            v = nn.plain_linear(p, f"l{l}.wv", x)
+        a = nn.causal_attention(q, k, v, m.n_heads)
+        o = (
+            cap.linear(p, f"l{l}.wo", a)
+            if instrument_attn
+            else nn.plain_linear(p, f"l{l}.wo", a)
+        )
+        h = h + o
+        x2 = nn.layer_norm(h, p[f"l{l}.ln2.g"], p[f"l{l}.ln2.b"])
+        f = nn.gelu(cap.linear(p, f"l{l}.fc", x2))
+        h = h + cap.linear(p, f"l{l}.proj", f)
+    hf = nn.layer_norm(h, p["lnf.g"], p["lnf.b"])
+    return jnp.dot(hf, p["head.w"].T) + p["head.b"]
+
+
+def per_sample_loss(cfg: Config, flat_params, tokens, cap: nn.Capture):
+    """Summed next-token CE per sequence, [B]. Also returns logits."""
+    p = param_spec(cfg.lm).unpack(flat_params)
+    logits = forward(cfg, p, tokens, cap)
+    tok_loss = nn.cross_entropy_per_token(logits[:, :-1], tokens[:, 1:])
+    return tok_loss.sum(axis=-1), logits
+
+
+def mean_hidden(cfg: Config, flat_params, tokens):
+    """Mean final hidden state [B, d] (rep-similarity baseline)."""
+    m = cfg.lm
+    p = param_spec(m).unpack(flat_params)
+    b, t = tokens.shape
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :t]
+    for l in range(m.n_layers):
+        x = nn.layer_norm(h, p[f"l{l}.ln1.g"], p[f"l{l}.ln1.b"])
+        q = nn.plain_linear(p, f"l{l}.wq", x)
+        k = nn.plain_linear(p, f"l{l}.wk", x)
+        v = nn.plain_linear(p, f"l{l}.wv", x)
+        a = nn.causal_attention(q, k, v, m.n_heads)
+        h = h + nn.plain_linear(p, f"l{l}.wo", a)
+        x2 = nn.layer_norm(h, p[f"l{l}.ln2.g"], p[f"l{l}.ln2.b"])
+        h = h + nn.plain_linear(
+            p, f"l{l}.proj", nn.gelu(nn.plain_linear(p, f"l{l}.fc", x2))
+        )
+    hf = nn.layer_norm(h, p["lnf.g"], p["lnf.b"])
+    return hf.mean(axis=1)

@@ -1,0 +1,169 @@
+"""Build-time neural-net primitives with LoGra activation capture.
+
+Parameters live as ONE flat f32 vector on the Rust/PJRT boundary (simple,
+layout-stable interchange); ``ParamSpec`` maps names/shapes to flat slices
+and the AOT manifest records the layout for the Rust side.
+
+LoGra capture (paper Fig. 2 / LogIX ``watch``): every instrumented linear
+``y = x W^T + b`` additionally (1) records its input ``x`` and (2) adds a
+zero-valued *probe* to ``y``. Differentiating the summed loss w.r.t. the
+probe yields exactly ``dL/dy`` per sample — the backward activation LoGra
+needs — without any framework-hook machinery, mirroring how LogIX's
+bottleneck layer turns projected-gradient extraction into plain autodiff.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ param packing
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Ordered (name, shape) table with flat-vector offsets."""
+
+    entries: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @property
+    def total(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.entries)
+
+    def offsets(self) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+        out, off = {}, 0
+        for name, shape in self.entries:
+            n = 1
+            for d in shape:
+                n *= d
+            out[name] = (off, shape)
+            off += n
+        return out
+
+    def unpack(self, flat) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for name, (off, shape) in self.offsets().items():
+            n = 1
+            for d in shape:
+                n *= d
+            out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        return out
+
+    def pack(self, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        chunks = []
+        for name, shape in self.entries:
+            assert params[name].shape == shape, (name, params[name].shape, shape)
+            chunks.append(params[name].reshape(-1))
+        return jnp.concatenate(chunks)
+
+
+# ------------------------------------------------------------ module table
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleSpec:
+    """One LoGra-instrumented linear module."""
+
+    name: str
+    n_in: int
+    n_out: int
+
+
+def probe_shapes(
+    modules: Sequence[ModuleSpec], batch: int, seq: int
+) -> List[Tuple[int, int, int]]:
+    """Probe tensor shapes, [B, T, n_out] per instrumented module."""
+    return [(batch, seq, m.n_out) for m in modules]
+
+
+def zero_probes(modules: Sequence[ModuleSpec], batch: int, seq: int):
+    return [jnp.zeros(s, jnp.float32) for s in probe_shapes(modules, batch, seq)]
+
+
+class Capture:
+    """Mutable capture context threaded through a forward pass.
+
+    ``probes`` is the ordered list of probe tensors (zeros at the
+    evaluation point); each instrumented linear consumes the next probe and
+    appends its input activation to ``xs``.
+    """
+
+    def __init__(self, probes: Sequence[jnp.ndarray]):
+        self.probes = list(probes)
+        self.xs: List[jnp.ndarray] = []
+        self._idx = 0
+
+    def linear(self, p: Dict[str, jnp.ndarray], name: str, x: jnp.ndarray):
+        """Instrumented ``y = x @ W^T + b + probe``; records x."""
+        w = p[f"{name}.w"]
+        b = p[f"{name}.b"]
+        y = jnp.dot(x, w.T) + b
+        if self.probes:
+            y = y + self.probes[self._idx]
+            self.xs.append(x)
+            self._idx += 1
+        return y
+
+
+def plain_linear(p: Dict[str, jnp.ndarray], name: str, x: jnp.ndarray):
+    return jnp.dot(x, p[f"{name}.w"].T) + p[f"{name}.b"]
+
+
+# ------------------------------------------------------------ primitives
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def causal_attention(q, k, v, n_heads: int):
+    """Multi-head causal self-attention. q/k/v: [B, T, d]."""
+    b, t, d = q.shape
+    hd = d // n_heads
+
+    def split(x):
+        return x.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)  # [B,H,T,hd]
+
+    qh, kh, vh = split(q), split(k), split(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def cross_entropy_per_token(logits, targets):
+    """-log p(target) per position. logits [.., V], targets [..] int."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+# ------------------------------------------------------------ grad capture
+
+
+def grads_and_capture(
+    loss_fn: Callable, modules: Sequence[ModuleSpec], batch: int, seq: int
+):
+    """Evaluate dL/dprobe (backward activations) + forward captures.
+
+    ``loss_fn(probes) -> (scalar_loss, (per_sample_loss, xs))`` where the
+    scalar loss is the SUM over the batch so probe grads are per-sample.
+
+    Returns: (dprobes list [B,T,n_out], per_sample_loss [B], xs list
+    [B,T,n_in]).
+    """
+    probes = zero_probes(modules, batch, seq)
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+    dprobes, (per_loss, xs) = grad_fn(probes)
+    return dprobes, per_loss, xs

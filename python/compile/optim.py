@@ -1,0 +1,41 @@
+"""Flat-vector optimizers (AdamW / SGD-momentum) for the train_step artifact.
+
+State is two flat f32 vectors (m, v) regardless of optimizer (SGD-M leaves v
+untouched) so the Rust driver has a single train-step calling convention.
+``step`` is an i32 scalar used for Adam bias correction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import Config
+
+
+def clip_by_global_norm(g, max_norm: float):
+    if max_norm <= 0.0:
+        return g
+    norm = jnp.sqrt(jnp.sum(g * g))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return g * scale
+
+
+def apply_update(cfg: Config, params, m, v, step, grad):
+    """One optimizer step. Returns (params', m', v', step+1)."""
+    t = cfg.train
+    grad = clip_by_global_norm(grad, t.grad_clip)
+    new_step = step + 1
+    if t.optimizer == "adamw":
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m2 = b1 * m + (1.0 - b1) * grad
+        v2 = b2 * v + (1.0 - b2) * grad * grad
+        tf = new_step.astype(jnp.float32)
+        mhat = m2 / (1.0 - b1**tf)
+        vhat = v2 / (1.0 - b2**tf)
+        upd = mhat / (jnp.sqrt(vhat) + eps) + t.weight_decay * params
+        return params - t.lr * upd, m2, v2, new_step
+    if t.optimizer == "sgdm":
+        m2 = t.momentum * m + grad + t.weight_decay * params
+        return params - t.lr * m2, m2, v, new_step
+    raise ValueError(f"unknown optimizer {t.optimizer!r}")

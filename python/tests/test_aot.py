@@ -1,0 +1,96 @@
+"""AOT manifest + lowering invariants (cheap: no full artifact builds)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, logra
+from compile.config import load
+
+LM_CFG = load("../configs/lm_tiny.toml")
+MLP_CFG = load("../configs/mlp_fmnist.toml")
+
+
+def _manifest_dict(cfg, tmp_path):
+    names = [n for n, _, _ in aot.build_entries(cfg)]
+    aot.write_manifest(cfg, str(tmp_path), names)
+    out = {}
+    with open(os.path.join(tmp_path, "manifest.txt")) as f:
+        for line in f:
+            k, _, v = line.strip().partition("=")
+            out[k] = v
+    return out
+
+
+@pytest.mark.parametrize("cfg", [LM_CFG, MLP_CFG], ids=["lm", "mlp"])
+def test_manifest_offsets_consistent(cfg, tmp_path):
+    man = _manifest_dict(cfg, tmp_path)
+    n_mod = int(man["n_modules"])
+    assert n_mod == len(logra.modules_of(cfg))
+    # Gradient blocks tile [0, k_total) without gaps.
+    end = 0
+    for i in range(n_mod):
+        assert int(man[f"module.{i}.g_off"]) == end
+        end += int(man[f"module.{i}.g_len"])
+    assert end == int(man["k_total"])
+    # Full-rank blocks tile [0, k_full).
+    end = 0
+    for i in range(n_mod):
+        assert int(man[f"module.{i}.gfull_off"]) == end
+        end += int(man[f"module.{i}.gfull_len"])
+    assert end == int(man["k_full"])
+    # Param table covers [0, n_params).
+    n_tensors = int(man["n_param_tensors"])
+    off = 0
+    for i in range(n_tensors):
+        assert int(man[f"param.{i}.off"]) == off
+        shape = [int(d) for d in man[f"param.{i}.shape"].split("x")]
+        sz = 1
+        for d in shape:
+            sz *= d
+        off += sz
+    assert off == int(man["n_params"])
+    # Covariance layout end == cov_len.
+    want_cov = sum(a + b for a, b in logra.cov_lengths(cfg))
+    assert int(man["cov_len"]) == want_cov
+
+
+def test_score_entry_lowers_to_hlo_text():
+    cfg = LM_CFG
+    entries = {n: (fn, specs) for n, fn, specs in aot.build_entries(cfg)}
+    fn, specs = entries["score"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_entry_list_complete():
+    names = [n for n, _, _ in aot.build_entries(LM_CFG)]
+    for required in [
+        "init",
+        "train_step",
+        "eval_loss",
+        "logra_log",
+        "cov_stats",
+        "full_grad",
+        "reprs",
+        "score",
+        "ekfac_log",
+        "score_full",
+        "logits",
+    ]:
+        assert required in names
+    mlp_names = [n for n, _, _ in aot.build_entries(MLP_CFG)]
+    assert "logits" not in mlp_names  # LM-only entry
+
+
+def test_proj_total_matches_unpack():
+    cfg = LM_CFG
+    flat = jnp.zeros((logra.proj_total(cfg),), jnp.float32)
+    projs = logra.unpack_projections(cfg, flat)
+    assert len(projs) == len(logra.modules_of(cfg))
+    for (pi, po), m in zip(projs, logra.modules_of(cfg)):
+        assert pi.shape == (cfg.logra.k_in, m.n_in)
+        assert po.shape == (cfg.logra.k_out, m.n_out)

@@ -1,0 +1,176 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (batch, seq, widths, ranks, tile sizes) and checks
+``assert_allclose`` against the pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import covariance, logra_project, score
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _arr(rng, shape, dtype=np.float32, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- logra
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 5),
+    t=st.integers(1, 9),
+    n_in=st.integers(1, 24),
+    n_out=st.integers(1, 24),
+    k_in=st.integers(1, 8),
+    k_out=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logra_project_matches_ref(b, t, n_in, n_out, k_in, k_out, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, t, n_in))
+    dx = _arr(rng, (b, t, n_out))
+    pi = _arr(rng, (k_in, n_in))
+    po = _arr(rng, (k_out, n_out))
+    got = np.asarray(logra_project(x, dx, pi, po))
+    want = np.asarray(ref.logra_project_ref(x, dx, pi, po))
+    assert got.shape == (b, k_out * k_in)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_logra_project_kron_identity():
+    """Eq. (6): projecting activations == projecting vec(DW) with P_i ⊗ P_o."""
+    rng = np.random.default_rng(7)
+    b, t, n_in, n_out, k_in, k_out = 2, 4, 6, 5, 3, 2
+    x = _arr(rng, (b, t, n_in))
+    dx = _arr(rng, (b, t, n_out))
+    pi = _arr(rng, (k_in, n_in))
+    po = _arr(rng, (k_out, n_out))
+    got = np.asarray(logra_project(x, dx, pi, po))
+    # Explicit Kronecker route: P = P_o ⊗ P_i applied to vec(DW) (C-order).
+    dw = np.einsum("bto,bti->boi", dx, x).reshape(b, -1)
+    p = np.kron(po, pi)  # [k_out*k_in, n_out*n_in] for C-order vec.
+    want = dw @ p.T
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_logra_project_zero_dx_is_zero():
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (2, 3, 8))
+    dx = np.zeros((2, 3, 4), np.float32)
+    pi = _arr(rng, (2, 8))
+    po = _arr(rng, (2, 4))
+    assert np.all(np.asarray(logra_project(x, dx, pi, po)) == 0.0)
+
+
+def test_logra_project_linear_in_dx():
+    rng = np.random.default_rng(2)
+    x = _arr(rng, (2, 3, 8))
+    dx = _arr(rng, (2, 3, 4))
+    pi = _arr(rng, (2, 8))
+    po = _arr(rng, (2, 4))
+    one = np.asarray(logra_project(x, dx, pi, po))
+    three = np.asarray(logra_project(x, 3.0 * dx, pi, po))
+    assert_allclose(three, 3.0 * one, rtol=1e-5, atol=1e-5)
+
+
+def test_logra_project_additive_over_time():
+    """The t-sum structure: concat along T == sum of the two halves."""
+    rng = np.random.default_rng(3)
+    x1, x2 = _arr(rng, (2, 3, 8)), _arr(rng, (2, 5, 8))
+    d1, d2 = _arr(rng, (2, 3, 4)), _arr(rng, (2, 5, 4))
+    pi = _arr(rng, (2, 8))
+    po = _arr(rng, (2, 4))
+    whole = np.asarray(
+        logra_project(
+            np.concatenate([x1, x2], axis=1), np.concatenate([d1, d2], axis=1), pi, po
+        )
+    )
+    parts = np.asarray(logra_project(x1, d1, pi, po)) + np.asarray(
+        logra_project(x2, d2, pi, po)
+    )
+    assert_allclose(whole, parts, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- score
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 17),
+    n=st.integers(1, 33),
+    k=st.integers(1, 40),
+    bm=st.integers(0, 8),
+    bn=st.integers(0, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_score_matches_ref(m, n, k, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, (m, k))
+    b = _arr(rng, (n, k))
+    got = np.asarray(score(a, b, block_m=min(bm, m), block_n=min(bn, n)))
+    want = np.asarray(ref.score_ref(a, b))
+    assert got.shape == (m, n)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_score_tiling_invariance():
+    """Same result for every tile decomposition (incl. padded tails)."""
+    rng = np.random.default_rng(11)
+    a = _arr(rng, (10, 32))
+    b = _arr(rng, (14, 32))
+    base = np.asarray(score(a, b))
+    for bm, bn in [(1, 1), (3, 5), (4, 7), (10, 14), (8, 8)]:
+        tiled = np.asarray(score(a, b, block_m=bm, block_n=bn))
+        assert_allclose(tiled, base, rtol=1e-5, atol=1e-5)
+
+
+def test_score_orthogonal_rows():
+    eye = np.eye(6, 16, dtype=np.float32)
+    s = np.asarray(score(eye, eye))
+    assert_allclose(s, np.eye(6, dtype=np.float32), atol=1e-6)
+
+
+# ---------------------------------------------------------------- covariance
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    t=st.integers(1, 9),
+    n=st.integers(1, 24),
+    br=st.integers(0, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_covariance_matches_ref(b, t, n, br, seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, (b, t, n))
+    got = np.asarray(covariance(a, block_rows=br))
+    want = np.asarray(ref.covariance_ref(a))
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_covariance_symmetric_psd():
+    rng = np.random.default_rng(5)
+    a = _arr(rng, (4, 8, 12))
+    c = np.asarray(covariance(a, block_rows=8))
+    assert_allclose(c, c.T, atol=1e-5)
+    evals = np.linalg.eigvalsh(c)
+    assert evals.min() >= -1e-3
+
+
+def test_covariance_2d_input():
+    rng = np.random.default_rng(6)
+    a = _arr(rng, (30, 7))
+    got = np.asarray(covariance(a, block_rows=4))
+    assert_allclose(got, np.asarray(ref.covariance_ref(a)), rtol=1e-4, atol=1e-4)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,198 @@
+"""L2 model correctness: LoGra capture vs full autodiff, training sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import logra, mlp as mlp_mod, model as lm_mod, nn, optim
+from compile.config import load
+
+LM_CFG = load("../configs/lm_tiny.toml")
+MLP_CFG = load("../configs/mlp_fmnist.toml")
+
+
+def _lm_batch(rng, b, cfg=LM_CFG):
+    return (jnp.asarray(rng.integers(0, cfg.lm.vocab, size=(b, cfg.lm.seq_len)), jnp.int32),)
+
+
+def _mlp_batch(rng, b, cfg=MLP_CFG):
+    x = jnp.asarray(rng.normal(size=(b, cfg.mlp.input_dim)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, cfg.mlp.classes, size=(b,)), jnp.int32)
+    return (x, y)
+
+
+def _rand_proj(rng, cfg, full_rank=False):
+    return jnp.asarray(
+        rng.normal(size=(logra.proj_total(cfg, full_rank),)).astype(np.float32) * 0.3
+    )
+
+
+@pytest.fixture(scope="module")
+def lm_params():
+    return lm_mod.init_params(LM_CFG, jnp.uint32(0))
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return mlp_mod.init_params(MLP_CFG, jnp.uint32(0))
+
+
+# ------------------------------------------------- capture == autodiff
+
+
+@pytest.mark.parametrize("kind", ["lm", "mlp"])
+def test_logra_log_matches_projected_full_grad(kind, lm_params, mlp_params):
+    """G rows from the capture path == P-projected slices of the full
+    per-sample gradient: validates probes, capture ordering, and block
+    layout end to end."""
+    rng = np.random.default_rng(0)
+    cfg = LM_CFG if kind == "lm" else MLP_CFG
+    params = lm_params if kind == "lm" else mlp_params
+    batch = _lm_batch(rng, 4) if kind == "lm" else _mlp_batch(rng, 4)
+    flat_p = _rand_proj(rng, cfg)
+
+    g, loss = logra.logra_log(cfg, params, flat_p, batch)
+    full = logra.full_grads(cfg, params, batch)  # [B, n_params]
+
+    spec = logra.param_spec_of(cfg)
+    offsets = spec.offsets()
+    projs = logra.unpack_projections(cfg, flat_p)
+    mods = logra.modules_of(cfg)
+    col = 0
+    for m, (pi, po) in zip(mods, projs):
+        off, shape = offsets[m.name + ".w"]
+        size = shape[0] * shape[1]
+        dw = np.asarray(full[:, off : off + size]).reshape(-1, shape[0], shape[1])
+        want = np.einsum("oO,bOI,iI->boi", po, dw, pi).reshape(dw.shape[0], -1)
+        got = np.asarray(g[:, col : col + want.shape[1]])
+        assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+        col += want.shape[1]
+    assert col == logra.k_total(cfg)
+    assert np.all(np.isfinite(np.asarray(loss)))
+
+
+def test_ekfac_full_rank_projection_is_lossless(mlp_params):
+    """With identity 'projections', logra_log returns the raw per-module
+    weight gradients (the EKFAC logging path with Q = I)."""
+    rng = np.random.default_rng(1)
+    cfg = MLP_CFG
+    batch = _mlp_batch(rng, 3)
+    mods = logra.modules_of(cfg)
+    chunks = []
+    for m in mods:
+        chunks.append(np.eye(m.n_in, dtype=np.float32).reshape(-1))
+        chunks.append(np.eye(m.n_out, dtype=np.float32).reshape(-1))
+    flat_q = jnp.asarray(np.concatenate(chunks))
+    g, _ = logra.logra_log(cfg, mlp_params, flat_q, batch, full_rank=True)
+
+    full = logra.full_grads(cfg, mlp_params, batch)
+    spec = logra.param_spec_of(cfg)
+    offsets = spec.offsets()
+    col = 0
+    for m in mods:
+        off, shape = offsets[m.name + ".w"]
+        size = shape[0] * shape[1]
+        want = np.asarray(full[:, off : off + size])
+        got = np.asarray(g[:, col : col + size])
+        assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+        col += size
+
+
+def test_cov_stats_psd_and_layout(lm_params):
+    rng = np.random.default_rng(2)
+    cfg = LM_CFG
+    batch = _lm_batch(rng, 4)
+    flat = np.asarray(logra.cov_stats(cfg, lm_params, batch))
+    assert flat.shape == (sum(a + b for a, b in logra.cov_lengths(cfg)),)
+    off = 0
+    for (fl, bl), m in zip(logra.cov_lengths(cfg), logra.modules_of(cfg)):
+        cf = flat[off : off + fl].reshape(m.n_in, m.n_in)
+        off += fl
+        cb = flat[off : off + bl].reshape(m.n_out, m.n_out)
+        off += bl
+        for c in (cf, cb):
+            assert_allclose(c, c.T, atol=1e-3)
+            assert np.linalg.eigvalsh(c).min() >= -1e-2
+
+
+# ------------------------------------------------- loss / training
+
+
+def test_lm_loss_is_per_sample(lm_params):
+    """Permuting the batch permutes losses and gradient rows."""
+    rng = np.random.default_rng(3)
+    cfg = LM_CFG
+    (tokens,) = _lm_batch(rng, 4)
+    flat_p = _rand_proj(rng, cfg)
+    g1, l1 = logra.logra_log(cfg, lm_params, flat_p, (tokens,))
+    perm = jnp.asarray([2, 0, 3, 1])
+    g2, l2 = logra.logra_log(cfg, lm_params, flat_p, (tokens[perm],))
+    assert_allclose(np.asarray(l2), np.asarray(l1)[np.asarray(perm)], rtol=1e-5)
+    assert_allclose(np.asarray(g2), np.asarray(g1)[np.asarray(perm)], rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["lm", "mlp"])
+def test_train_step_reduces_loss(kind, lm_params, mlp_params):
+    rng = np.random.default_rng(4)
+    cfg = LM_CFG if kind == "lm" else MLP_CFG
+    params = lm_params if kind == "lm" else mlp_params
+    batch = _lm_batch(rng, cfg.train.batch) if kind == "lm" else _mlp_batch(rng, cfg.train.batch)
+
+    def mean_loss(p):
+        cap = nn.Capture([])
+        return logra.loss_with_capture(cfg, p, batch, cap).mean()
+
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    step = jnp.int32(0)
+    l0 = float(mean_loss(params))
+    for _ in range(20):
+        loss, grad = jax.value_and_grad(mean_loss)(params)
+        params, m, v, step = optim.apply_update(cfg, params, m, v, step, grad)
+    l1 = float(mean_loss(params))
+    assert l1 < l0, (l0, l1)
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a = np.asarray(lm_mod.init_params(LM_CFG, jnp.uint32(7)))
+    b = np.asarray(lm_mod.init_params(LM_CFG, jnp.uint32(7)))
+    c = np.asarray(lm_mod.init_params(LM_CFG, jnp.uint32(8)))
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.shape == (logra.param_spec_of(LM_CFG).total,)
+
+
+def test_optimizers_update_params():
+    rng = np.random.default_rng(5)
+    for cfg in (LM_CFG, MLP_CFG):  # adamw and sgdm respectively
+        n = 64
+        p = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        p2, m2, v2, s2 = optim.apply_update(
+            cfg, p, jnp.zeros(n), jnp.zeros(n), jnp.int32(0), g
+        )
+        assert not np.allclose(np.asarray(p2), np.asarray(p))
+        assert int(s2) == 1
+
+
+def test_grad_clip_bounds_update_norm():
+    cfg = LM_CFG  # grad_clip = 1.0
+    g = jnp.full((100,), 100.0)
+    clipped = optim.clip_by_global_norm(g, cfg.train.grad_clip)
+    assert float(jnp.sqrt(jnp.sum(clipped**2))) <= cfg.train.grad_clip + 1e-4
+
+
+def test_repr_shapes(lm_params, mlp_params):
+    rng = np.random.default_rng(6)
+    (tokens,) = _lm_batch(rng, 3)
+    h = lm_mod.mean_hidden(LM_CFG, lm_params, tokens)
+    assert h.shape == (3, LM_CFG.lm.d_model)
+    x, y = _mlp_batch(rng, 3)
+    r = mlp_mod.penultimate(MLP_CFG, mlp_params, x)
+    assert r.shape == (3, MLP_CFG.mlp.hidden[-1])
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

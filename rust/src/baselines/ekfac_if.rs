@@ -1,0 +1,121 @@
+//! EKFAC influence baseline (Grosse et al. 2023) — the paper's strongest
+//! and most expensive competitor.
+//!
+//! Logging: fit KFAC factors, eigendecompose, fit corrected eigenvalues
+//! from rotated per-sample gradients. Querying: because full-rank rotated
+//! gradients are too large to store, EVERY query batch recomputes every
+//! train gradient (the Table-1 cost profile: throughput collapses, memory
+//! stays high). Scores: <precondition(rot(g_te)), rot(g_tr)>.
+
+use anyhow::Result;
+
+use crate::baselines::{collect_rows, stream_rows, Valuator};
+use crate::coordinator::fit_kfac;
+use crate::hessian::{Ekfac, KfacFactors};
+use crate::linalg::Matrix;
+use crate::model::dataset::Dataset;
+use crate::runtime::Runtime;
+
+pub struct EkfacValuator<'a> {
+    pub rt: &'a Runtime,
+    pub train: &'a Dataset<'a>,
+    pub test: &'a Dataset<'a>,
+    pub params: &'a [f32],
+    state: Option<Ekfac>,
+}
+
+impl<'a> EkfacValuator<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        train: &'a Dataset<'a>,
+        test: &'a Dataset<'a>,
+        params: &'a [f32],
+    ) -> Self {
+        EkfacValuator { rt, train, test, params, state: None }
+    }
+
+    /// KFAC fit + eigendecomposition + corrected-eigenvalue fit
+    /// (the paper's two-subphase EKFAC "logging" column).
+    fn fit(&mut self) -> Result<()> {
+        if self.state.is_some() {
+            return Ok(());
+        }
+        let man = &self.rt.manifest;
+        let kfac: KfacFactors = fit_kfac(self.rt, self.train, self.params, 64)?;
+        let mut ek = Ekfac::from_kfac(man, &kfac);
+        let idx: Vec<usize> = (0..self.train.len()).collect();
+        let kf = man.k_full;
+        stream_rows(
+            self.rt,
+            "ekfac_log",
+            self.train,
+            &idx,
+            self.params,
+            Some(&ek.rotations_flat.clone()),
+            man.proj_len_full,
+            |rows, real| {
+                ek.accumulate_corrected(rows, real, kf);
+                Ok(())
+            },
+        )?;
+        ek.finish_corrected(man);
+        self.state = Some(ek);
+        Ok(())
+    }
+}
+
+impl Valuator for EkfacValuator<'_> {
+    fn name(&self) -> String {
+        "ekfac-if".into()
+    }
+
+    fn values(&mut self, test_indices: &[usize]) -> Result<Matrix> {
+        self.fit()?;
+        let man = &self.rt.manifest;
+        let ek = self.state.as_ref().unwrap();
+        let kf = man.k_full;
+        // Rotated test gradients, preconditioned in the eigenbasis.
+        let test_rot = collect_rows(
+            self.rt,
+            "ekfac_log",
+            self.test,
+            test_indices,
+            self.params,
+            Some(&ek.rotations_flat),
+            man.proj_len_full,
+            kf,
+        )?;
+        let mut pre = Vec::with_capacity(test_rot.data.len());
+        for t in 0..test_indices.len() {
+            pre.extend(ek.precondition(man, test_rot.row(t)));
+        }
+        let pre_m = Matrix::from_vec(test_indices.len(), kf, pre);
+
+        // The expensive part: recompute rotated train grads for this query.
+        let n_train = self.train.len();
+        let idx: Vec<usize> = (0..n_train).collect();
+        let mut out = Matrix::zeros(test_indices.len(), n_train);
+        let mut col = 0usize;
+        stream_rows(
+            self.rt,
+            "ekfac_log",
+            self.train,
+            &idx,
+            self.params,
+            Some(&ek.rotations_flat),
+            man.proj_len_full,
+            |rows, real| {
+                let b = Matrix::from_vec(real, kf, rows.to_vec());
+                let scores = pre_m.matmul_t(&b);
+                for t in 0..test_indices.len() {
+                    for j in 0..real {
+                        out.data[t * n_train + col + j] = scores.at(t, j);
+                    }
+                }
+                col += real;
+                Ok(())
+            },
+        )?;
+        Ok(out)
+    }
+}

@@ -1,0 +1,56 @@
+//! Gradient dot-product baseline (TracIn-CP / Pruthi et al. at the final
+//! checkpoint): value(te, tr) = <∇L(te), ∇L(tr)> over FULL gradients.
+//!
+//! Deliberately pays the O(b·n) full-gradient cost the paper's §2
+//! analysis attributes to naive methods: test gradients are held in
+//! memory, train gradients are recomputed batch-by-batch per call.
+
+use anyhow::Result;
+
+use crate::baselines::{collect_rows, stream_rows, Valuator};
+use crate::linalg::Matrix;
+use crate::model::dataset::Dataset;
+use crate::runtime::Runtime;
+
+pub struct GradDotValuator<'a> {
+    pub rt: &'a Runtime,
+    pub train: &'a Dataset<'a>,
+    pub test: &'a Dataset<'a>,
+    pub params: &'a [f32],
+}
+
+impl Valuator for GradDotValuator<'_> {
+    fn name(&self) -> String {
+        "grad-dot".into()
+    }
+
+    fn values(&mut self, test_indices: &[usize]) -> Result<Matrix> {
+        let n = self.rt.manifest.n_params;
+        let test_g = collect_rows(
+            self.rt,
+            "full_grad",
+            self.test,
+            test_indices,
+            self.params,
+            None,
+            0,
+            n,
+        )?;
+        let n_train = self.train.len();
+        let idx: Vec<usize> = (0..n_train).collect();
+        let mut out = Matrix::zeros(test_indices.len(), n_train);
+        let mut col = 0usize;
+        stream_rows(self.rt, "full_grad", self.train, &idx, self.params, None, 0, |rows, real| {
+            let b = Matrix::from_vec(real, n, rows.to_vec());
+            let scores = test_g.matmul_t(&b); // [nt, real]
+            for t in 0..test_indices.len() {
+                for j in 0..real {
+                    out.data[t * n_train + col + j] = scores.at(t, j);
+                }
+            }
+            col += real;
+            Ok(())
+        })?;
+        Ok(out)
+    }
+}

@@ -1,0 +1,117 @@
+//! LoGra as a [`Valuator`] (the paper's method, PCA or random init),
+//! wired through the real production path: logging pipeline -> gradient
+//! store -> Fisher blocks -> query engine.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::baselines::Valuator;
+use crate::coordinator::{fit_kfac, projected_grads, run_logging, LoggingOptions};
+use crate::hessian::{pca_projections, random_projections, Preconditioner};
+use crate::linalg::Matrix;
+use crate::model::dataset::Dataset;
+use crate::runtime::Runtime;
+use crate::store::GradStore;
+use crate::util::rng::Pcg32;
+use crate::valuation::{Normalization, QueryEngine};
+
+/// Projection initialization scheme (§3.2 / Figure 4's two LoGra rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LograInit {
+    Random,
+    Pca,
+}
+
+pub struct LograValuator<'a> {
+    rt: &'a Runtime,
+    train: &'a Dataset<'a>,
+    test: &'a Dataset<'a>,
+    params: &'a [f32],
+    proj: Vec<f32>,
+    store: GradStore,
+    precond: Preconditioner,
+    pub norm: Normalization,
+    label: String,
+}
+
+impl<'a> LograValuator<'a> {
+    /// Run the full logging phase into `store_dir`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        rt: &'a Runtime,
+        train: &'a Dataset<'a>,
+        test: &'a Dataset<'a>,
+        params: &'a [f32],
+        init: LograInit,
+        store_dir: PathBuf,
+        damping: f32,
+        seed: u64,
+    ) -> Result<Self> {
+        let proj = match init {
+            LograInit::Random => {
+                let mut rng = Pcg32::new(seed, 7);
+                random_projections(&rt.manifest, &mut rng)
+            }
+            LograInit::Pca => {
+                let kfac = fit_kfac(rt, train, params, 64)?;
+                pca_projections(&rt.manifest, &kfac)
+            }
+        };
+        let (store, hessian, _report) =
+            run_logging(rt, train, params, &proj, &store_dir, &LoggingOptions::default())?;
+        let precond = hessian.expect("fit_hessian on").preconditioner(damping)?;
+        let label = match init {
+            LograInit::Random => "logra-random",
+            LograInit::Pca => "logra-pca",
+        };
+        Ok(LograValuator {
+            rt,
+            train,
+            test,
+            params,
+            proj,
+            store,
+            precond,
+            norm: Normalization::None,
+            label: label.to_string(),
+        })
+    }
+
+    pub fn engine(&self) -> QueryEngine<'_> {
+        QueryEngine::new(self.rt, &self.store, &self.precond)
+    }
+
+    pub fn store(&self) -> &GradStore {
+        &self.store
+    }
+
+    pub fn projection(&self) -> &[f32] {
+        &self.proj
+    }
+
+    /// Raw projected gradients for test examples.
+    pub fn test_grads(&self, test_indices: &[usize]) -> Result<Vec<f32>> {
+        let (rows, _) =
+            projected_grads(self.rt, self.test, test_indices, self.params, &self.proj)?;
+        Ok(rows)
+    }
+}
+
+impl Valuator for LograValuator<'_> {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn values(&mut self, test_indices: &[usize]) -> Result<Matrix> {
+        let g = self.test_grads(test_indices)?;
+        let engine = self.engine();
+        engine.values_matrix(&g, test_indices.len(), self.norm)
+    }
+}
+
+// Silence dead-code warnings for fields used only via the trait object.
+#[allow(dead_code)]
+fn _uses(v: &LograValuator) -> usize {
+    v.train.len()
+}

@@ -1,0 +1,92 @@
+//! Data-valuation methods compared in Figure 4: LoGra (PCA / random init)
+//! plus the four baselines the paper benchmarks against — gradient dot
+//! product (TracIn-CP-style), TRAK-style naive low-rank projection, EKFAC
+//! influence, and representation similarity.
+//!
+//! Every method implements [`Valuator`]: a dense value matrix
+//! [n_test, n_train] that the counterfactual harness (brittleness / LDS)
+//! consumes. Construction is allowed to do the method's whole "logging"
+//! phase (passes over the training set); `values` should then be cheap
+//! per test example — mirroring each method's real cost profile so the
+//! Table-1 efficiency comparison falls out of the same code.
+
+pub mod ekfac_if;
+pub mod grad_dot;
+pub mod logra_method;
+pub mod rep_sim;
+pub mod trak;
+
+use anyhow::Result;
+
+use crate::linalg::Matrix;
+use crate::model::dataset::Dataset;
+use crate::runtime::literal::{f32_lit, to_f32_vec};
+use crate::runtime::Runtime;
+
+pub use ekfac_if::EkfacValuator;
+pub use grad_dot::GradDotValuator;
+pub use logra_method::{LograInit, LograValuator};
+pub use rep_sim::RepSimValuator;
+pub use trak::TrakValuator;
+
+/// A data-valuation method producing values of train examples for test
+/// examples. Higher = more valuable (more positive influence).
+pub trait Valuator {
+    fn name(&self) -> String;
+
+    /// Dense [test_indices.len(), n_train] value matrix.
+    fn values(&mut self, test_indices: &[usize]) -> Result<Matrix>;
+}
+
+/// Stream an artifact that maps (params, *batch) -> per-sample rows
+/// ([B, row_len] as output 0). Calls `sink(rows, real)` per batch with
+/// pad rows already trimmed.
+pub(crate) fn stream_rows(
+    rt: &Runtime,
+    entry: &str,
+    ds: &Dataset,
+    indices: &[usize],
+    params: &[f32],
+    extra: Option<&[f32]>,
+    extra_len: usize,
+    mut sink: impl FnMut(&[f32], usize) -> Result<()>,
+) -> Result<()> {
+    let man = &rt.manifest;
+    let params_lit = f32_lit(&[man.n_params], params)?;
+    let extra_lit = match extra {
+        Some(e) => Some(f32_lit(&[extra_len], e)?),
+        None => None,
+    };
+    for batch in ds.batches(indices, man.log_batch) {
+        let batch_lits = batch.literals(man)?;
+        let mut args: Vec<&xla::Literal> = vec![&params_lit];
+        if let Some(e) = &extra_lit {
+            args.push(e);
+        }
+        args.extend(batch_lits.iter());
+        let out = rt.run_ref(entry, &args)?;
+        let rows = to_f32_vec(&out[0])?;
+        let row_len = rows.len() / batch.size();
+        sink(&rows[..batch.real() * row_len], batch.real())?;
+    }
+    Ok(())
+}
+
+/// Collect streamed rows into a dense matrix [indices.len(), row_len].
+pub(crate) fn collect_rows(
+    rt: &Runtime,
+    entry: &str,
+    ds: &Dataset,
+    indices: &[usize],
+    params: &[f32],
+    extra: Option<&[f32]>,
+    extra_len: usize,
+    row_len: usize,
+) -> Result<Matrix> {
+    let mut data = Vec::with_capacity(indices.len() * row_len);
+    stream_rows(rt, entry, ds, indices, params, extra, extra_len, |rows, _real| {
+        data.extend_from_slice(rows);
+        Ok(())
+    })?;
+    Ok(Matrix::from_vec(indices.len(), row_len, data))
+}

@@ -1,0 +1,58 @@
+//! Representation-similarity baseline (Hanawa et al.): value(te, tr) =
+//! cosine similarity of final hidden representations. Gradient-free —
+//! cheap but blind to the loss landscape, which is exactly why Figure 4
+//! shows it trailing the gradient-based methods.
+
+use anyhow::Result;
+
+use crate::baselines::{collect_rows, Valuator};
+use crate::linalg::{cosine, Matrix};
+use crate::model::dataset::Dataset;
+use crate::runtime::Runtime;
+
+pub struct RepSimValuator<'a> {
+    pub rt: &'a Runtime,
+    pub train: &'a Dataset<'a>,
+    pub test: &'a Dataset<'a>,
+    pub params: &'a [f32],
+    cache: Option<Matrix>, // [n_train, d]
+}
+
+impl<'a> RepSimValuator<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        train: &'a Dataset<'a>,
+        test: &'a Dataset<'a>,
+        params: &'a [f32],
+    ) -> Self {
+        RepSimValuator { rt, train, test, params, cache: None }
+    }
+}
+
+impl Valuator for RepSimValuator<'_> {
+    fn name(&self) -> String {
+        "rep-sim".into()
+    }
+
+    fn values(&mut self, test_indices: &[usize]) -> Result<Matrix> {
+        let d = self.rt.manifest.repr_dim;
+        if self.cache.is_none() {
+            let idx: Vec<usize> = (0..self.train.len()).collect();
+            self.cache = Some(collect_rows(
+                self.rt, "reprs", self.train, &idx, self.params, None, 0, d,
+            )?);
+        }
+        let train_r = self.cache.as_ref().unwrap();
+        let test_r = collect_rows(
+            self.rt, "reprs", self.test, test_indices, self.params, None, 0, d,
+        )?;
+        let mut out = Matrix::zeros(test_indices.len(), self.train.len());
+        for t in 0..test_indices.len() {
+            for j in 0..self.train.len() {
+                out.data[t * self.train.len() + j] =
+                    cosine(test_r.row(t), train_r.row(j));
+            }
+        }
+        Ok(out)
+    }
+}

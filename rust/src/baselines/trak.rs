@@ -1,0 +1,108 @@
+//! TRAK-style baseline: NAIVE low-rank gradient projection.
+//!
+//! Materializes full per-sample gradients, then multiplies by a dense
+//! random `R ∈ R^{k×n}` — the O(b·n·k) compute and O(k·n) memory profile
+//! the paper's §2 identifies as the reason TRAK is stuck at small k (its
+//! 8B-scale projection matrix would be 128 TB vs LoGra's ~1 GB). The
+//! influence functional form in the projected space matches LoGra's:
+//! projected Fisher + damped iHVP.
+
+use anyhow::Result;
+
+use crate::baselines::{collect_rows, stream_rows, Valuator};
+use crate::hessian::BlockHessian;
+use crate::linalg::Matrix;
+use crate::model::dataset::Dataset;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+
+pub struct TrakValuator<'a> {
+    pub rt: &'a Runtime,
+    pub train: &'a Dataset<'a>,
+    pub test: &'a Dataset<'a>,
+    pub params: &'a [f32],
+    /// Projection dimension (paper: TRAK limited to small k by memory).
+    pub k: usize,
+    pub damping: f32,
+    pub seed: u64,
+    /// Cached after the first values() call: projected train grads +
+    /// preconditioner (TRAK's "featurization" pass).
+    state: Option<TrakState>,
+}
+
+struct TrakState {
+    train_proj: Matrix, // [n_train, k]
+    precond: crate::hessian::Preconditioner,
+    r: Matrix, // [k, n] — the big dense projection
+}
+
+impl<'a> TrakValuator<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        train: &'a Dataset<'a>,
+        test: &'a Dataset<'a>,
+        params: &'a [f32],
+        k: usize,
+        damping: f32,
+        seed: u64,
+    ) -> Self {
+        TrakValuator { rt, train, test, params, k, damping, seed, state: None }
+    }
+
+    fn featurize(&mut self) -> Result<()> {
+        if self.state.is_some() {
+            return Ok(());
+        }
+        let n = self.rt.manifest.n_params;
+        let mut rng = Pcg32::new(self.seed, 31);
+        // Gaussian projection scaled for isometry-in-expectation.
+        let r = Matrix::random_normal(&mut rng, self.k, n, 1.0 / (self.k as f32).sqrt());
+        crate::util::memory::ledger_alloc(self.k * n * 4);
+
+        let n_train = self.train.len();
+        let idx: Vec<usize> = (0..n_train).collect();
+        let mut proj = Matrix::zeros(n_train, self.k);
+        let mut hess = BlockHessian::single_block(self.k);
+        let mut row0 = 0usize;
+        stream_rows(self.rt, "full_grad", self.train, &idx, self.params, None, 0, |rows, real| {
+            let g = Matrix::from_vec(real, n, rows.to_vec());
+            let p = g.matmul_t(&r); // the naive O(b n k) projection
+            hess.accumulate(&p.data, real);
+            for t in 0..real {
+                proj.data[(row0 + t) * self.k..(row0 + t + 1) * self.k]
+                    .copy_from_slice(p.row(t));
+            }
+            row0 += real;
+            Ok(())
+        })?;
+        let precond = hess.preconditioner(self.damping)?;
+        self.state = Some(TrakState { train_proj: proj, precond, r });
+        Ok(())
+    }
+}
+
+impl Valuator for TrakValuator<'_> {
+    fn name(&self) -> String {
+        format!("trak-k{}", self.k)
+    }
+
+    fn values(&mut self, test_indices: &[usize]) -> Result<Matrix> {
+        self.featurize()?;
+        let st = self.state.as_ref().unwrap();
+        let n = self.rt.manifest.n_params;
+        let test_full = collect_rows(
+            self.rt,
+            "full_grad",
+            self.test,
+            test_indices,
+            self.params,
+            None,
+            0,
+            n,
+        )?;
+        let test_proj = test_full.matmul_t(&st.r); // [nt, k]
+        let pre = st.precond.apply_rows(&test_proj.data, test_indices.len());
+        let pre_m = Matrix::from_vec(test_indices.len(), self.k, pre);
+        Ok(pre_m.matmul_t(&st.train_proj))
+    }
+}

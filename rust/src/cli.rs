@@ -1,0 +1,157 @@
+//! Command-line argument parser (offline stand-in for `clap`).
+//!
+//! Supports `program SUBCOMMAND --flag value --switch positional...` with
+//! typed accessors, defaults, and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declarative flag spec used for usage text and validation.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Parse `argv[1..]`. Flags listed in `value_flags` consume the following
+/// token; every other `--x` is a boolean switch.
+pub fn parse(argv: &[String], value_flags: &[&str]) -> anyhow::Result<Args> {
+    let mut out = Args::default();
+    let mut i = 0;
+    if i < argv.len() && !argv[i].starts_with("--") {
+        out.subcommand = argv[i].clone();
+        i += 1;
+    }
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(name) = tok.strip_prefix("--") {
+            // Support --name=value too.
+            if let Some((n, v)) = name.split_once('=') {
+                out.flags.insert(n.to_string(), v.to_string());
+            } else if value_flags.contains(&name) {
+                i += 1;
+                let v = argv.get(i).ok_or_else(|| {
+                    anyhow::anyhow!("flag --{name} expects a value")
+                })?;
+                out.flags.insert(name.to_string(), v.clone());
+            } else {
+                out.switches.push(name.to_string());
+            }
+        } else {
+            out.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+/// Render a usage block for `--help`.
+pub fn usage(program: &str, subcommands: &[(&str, &str)], flags: &[FlagSpec]) -> String {
+    let mut s = format!("usage: {program} <command> [flags]\n\ncommands:\n");
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {name:<18} {help}\n"));
+    }
+    s.push_str("\nflags:\n");
+    for f in flags {
+        let arg = if f.takes_value { format!("--{} <v>", f.name) } else { format!("--{}", f.name) };
+        let def = f.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  {arg:<22} {}{def}\n", f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse(
+            &v(&["log", "--config", "c.toml", "--verbose", "extra"]),
+            &["config"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "log");
+        assert_eq!(a.flag("config"), Some("c.toml"));
+        assert!(a.has_switch("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&v(&["run", "--n=42"]), &[]).unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&v(&["run", "--config"]), &["config"]).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&v(&["x", "--k=8", "--damp=0.1"]), &[]).unwrap();
+        assert_eq!(a.usize_or("k", 1).unwrap(), 8);
+        assert!((a.f64_or("damp", 0.0).unwrap() - 0.1).abs() < 1e-12);
+        assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
+        assert!(a.usize_or("damp", 1).is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "logra",
+            &[("log", "run logging phase")],
+            &[FlagSpec { name: "config", help: "config path", takes_value: true, default: Some("configs/lm_tiny.toml") }],
+        );
+        assert!(u.contains("log"));
+        assert!(u.contains("--config"));
+        assert!(u.contains("default"));
+    }
+}

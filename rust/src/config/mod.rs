@@ -1,0 +1,299 @@
+//! TOML-subset configuration parser + typed configs.
+//!
+//! Parses exactly the subset `configs/*.toml` uses (and `python/compile/
+//! config.py` mirrors): `[section]` headers, `key = value` with string /
+//! int / float / bool / flat int-list values, `#` comments. Hand-rolled
+//! because no serde/toml crate exists offline (DESIGN.md §1).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntList(Vec<i64>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_list(&self) -> Option<&[i64]> {
+        match self {
+            Value::IntList(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed document: section -> key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct Document {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_of(&self, section: &str, key: &str) -> anyhow::Result<String> {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("missing string [{section}].{key}"))
+    }
+
+    pub fn int_of(&self, section: &str, key: &str) -> anyhow::Result<i64> {
+        self.get(section, key)
+            .and_then(|v| v.as_int())
+            .ok_or_else(|| anyhow::anyhow!("missing int [{section}].{key}"))
+    }
+
+    pub fn float_of(&self, section: &str, key: &str) -> anyhow::Result<f64> {
+        self.get(section, key)
+            .and_then(|v| v.as_float())
+            .ok_or_else(|| anyhow::anyhow!("missing float [{section}].{key}"))
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn parse_scalar(raw: &str, line_no: usize) -> Result<Value, ParseError> {
+    let raw = raw.trim();
+    let err = |m: &str| ParseError { line: line_no, message: m.to_string() };
+    if raw.is_empty() {
+        return Err(err("empty value"));
+    }
+    if raw.starts_with('"') {
+        if raw.len() < 2 || !raw.ends_with('"') {
+            return Err(err("unterminated string"));
+        }
+        return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if raw.starts_with('[') {
+        if !raw.ends_with(']') {
+            return Err(err("unterminated list"));
+        }
+        let inner = &raw[1..raw.len() - 1];
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(
+                part.parse::<i64>()
+                    .map_err(|_| err(&format!("bad int list item {part:?}")))?,
+            );
+        }
+        return Ok(Value::IntList(items));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(&format!("unrecognized value {raw:?}")))
+}
+
+/// Strip a trailing comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(ParseError {
+                line: line_no,
+                message: "unterminated section header".into(),
+            })?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or(ParseError {
+            line: line_no,
+            message: format!("expected `key = value`, got {line:?}"),
+        })?;
+        if section.is_empty() {
+            return Err(ParseError {
+                line: line_no,
+                message: "key outside any [section]".into(),
+            });
+        }
+        let v = parse_scalar(value, line_no)?;
+        doc.sections
+            .get_mut(&section)
+            .unwrap()
+            .insert(key.trim().to_string(), v);
+    }
+    Ok(doc)
+}
+
+pub fn parse_file(path: &Path) -> anyhow::Result<Document> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    Ok(parse(&text)?)
+}
+
+// ------------------------------------------------------------ typed view
+
+/// Typed experiment config (mirror of python `compile.config.Config`).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub kind: String, // "lm" | "mlp"
+    pub doc: Document,
+}
+
+impl ExperimentConfig {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let doc = parse_file(path)?;
+        Ok(ExperimentConfig {
+            name: doc.str_of("meta", "name")?,
+            kind: doc.str_of("meta", "kind")?,
+            doc,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+[meta]
+name = "lm_tiny"    # inline comment
+kind = "lm"
+
+[model]
+vocab = 256
+lr = 1e-3
+hidden = [128, 128]
+flag = true
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = parse(SAMPLE).unwrap();
+        assert_eq!(doc.str_of("meta", "name").unwrap(), "lm_tiny");
+        assert_eq!(doc.int_of("model", "vocab").unwrap(), 256);
+        assert!((doc.float_of("model", "lr").unwrap() - 1e-3).abs() < 1e-12);
+        assert_eq!(
+            doc.get("model", "hidden").unwrap().as_int_list().unwrap(),
+            &[128, 128]
+        );
+        assert_eq!(doc.get("model", "flag").unwrap(), &Value::Bool(true));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("[a]\nk = \"x # y\"\n").unwrap();
+        assert_eq!(doc.str_of("a", "k").unwrap(), "x # y");
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = parse("[a]\nk == 3\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("k = 3\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse("[a\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("[a]\nk = 3\n").unwrap();
+        assert_eq!(doc.float_of("a", "k").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn real_configs_parse() {
+        for name in ["lm_tiny", "lm_small", "mlp_fmnist", "mlp_cifar", "lm_wikitext"] {
+            let path = format!("{}/configs/{name}.toml", env!("CARGO_MANIFEST_DIR"));
+            let cfg = ExperimentConfig::load(Path::new(&path)).unwrap();
+            assert_eq!(cfg.name, name);
+            assert!(cfg.kind == "lm" || cfg.kind == "mlp");
+            assert!(cfg.doc.int_of("logra", "k_in").unwrap() > 0);
+        }
+    }
+
+    #[test]
+    fn defaults_api() {
+        let doc = parse("[a]\n").unwrap();
+        assert_eq!(doc.float_or("a", "missing", 2.5), 2.5);
+        assert_eq!(doc.str_or("a", "missing", "d"), "d");
+    }
+}

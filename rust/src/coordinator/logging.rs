@@ -1,0 +1,162 @@
+//! Logging phase: one pass over the training set producing (a) the
+//! on-disk projected-gradient store and (b) the projected Fisher blocks —
+//! Figure 1 (left bottom) of the paper.
+//!
+//! Pipeline: batcher -> `logra_log` artifact -> {background store writer,
+//! inline Hessian accumulation}. Disk writes overlap the next batch's
+//! execution through the bounded writer queue (§E.2); a slow disk
+//! backpressures the executor instead of growing memory.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::hessian::{BlockHessian, KfacFactors};
+use crate::model::dataset::Dataset;
+use crate::runtime::literal::{f32_lit, to_f32_vec};
+use crate::runtime::Runtime;
+use crate::store::{BackgroundWriter, GradStore};
+use crate::util::memory::peak_rss_bytes;
+use crate::util::Timer;
+
+/// Options for a logging run.
+#[derive(Clone, Debug)]
+pub struct LoggingOptions {
+    /// Bound on in-flight write batches (backpressure depth).
+    pub queue_cap: usize,
+    /// Accumulate the projected Fisher inline (true for LoGra; the
+    /// gradient-dot baseline sets false).
+    pub fit_hessian: bool,
+}
+
+impl Default for LoggingOptions {
+    fn default() -> Self {
+        LoggingOptions { queue_cap: 4, fit_hessian: true }
+    }
+}
+
+/// Measured report of a logging run (Table-1 left half).
+#[derive(Clone, Debug)]
+pub struct LoggingReport {
+    pub rows: u64,
+    pub seconds: f64,
+    pub tokens_per_sec: f64,
+    pub examples_per_sec: f64,
+    pub peak_rss_bytes: u64,
+    pub storage_bytes: u64,
+}
+
+/// Run the logging phase: write projected gradients for every example of
+/// `ds` to `store_dir` and (optionally) fit the projected Fisher.
+pub fn run_logging(
+    rt: &Runtime,
+    ds: &Dataset,
+    params: &[f32],
+    proj_flat: &[f32],
+    store_dir: &Path,
+    opts: &LoggingOptions,
+) -> Result<(GradStore, Option<BlockHessian>, LoggingReport)> {
+    let man = &rt.manifest;
+    let k = man.k_total;
+    let n = man.n_params;
+    let timer = Timer::start();
+
+    let writer = BackgroundWriter::spawn(store_dir, k, opts.queue_cap)?;
+    let mut hessian = opts.fit_hessian.then(|| BlockHessian::new(man));
+
+    let params_lit = f32_lit(&[n], params)?;
+    let proj_lit = f32_lit(&[man.proj_len], proj_flat)?;
+    let mut examples = 0u64;
+    for batch in ds.all_batches(man.log_batch) {
+        let batch_lits = batch.literals(man)?;
+        let mut args: Vec<&xla::Literal> = vec![&params_lit, &proj_lit];
+        args.extend(batch_lits.iter());
+        let out = rt.run_ref("logra_log", &args)?;
+        let g = to_f32_vec(&out[0])?; // [B, K]
+        let real = batch.real();
+        if let Some(h) = hessian.as_mut() {
+            h.accumulate(&g, real);
+        }
+        // Hand only the real rows to the writer.
+        writer.submit(batch.ids()[..real].to_vec(), g[..real * k].to_vec())?;
+        examples += real as u64;
+    }
+    let rows = writer.finish()?;
+    debug_assert_eq!(rows, examples);
+
+    let store = GradStore::open(store_dir)?;
+    let seconds = timer.seconds();
+    let tokens = examples as f64 * ds.tokens_per_example() as f64;
+    let report = LoggingReport {
+        rows,
+        seconds,
+        tokens_per_sec: tokens / seconds,
+        examples_per_sec: examples as f64 / seconds,
+        peak_rss_bytes: peak_rss_bytes(),
+        storage_bytes: store.storage_bytes(),
+    };
+    Ok((store, hessian, report))
+}
+
+/// Fit KFAC activation covariances over (a sample of) the dataset —
+/// the pre-pass behind LoGra-PCA initialization and the EKFAC baseline.
+/// Only full batches contribute (the cov artifact can't mask pad rows).
+pub fn fit_kfac(
+    rt: &Runtime,
+    ds: &Dataset,
+    params: &[f32],
+    max_batches: usize,
+) -> Result<KfacFactors> {
+    let man = &rt.manifest;
+    let params_lit = f32_lit(&[man.n_params], params)?;
+    let mut kf = KfacFactors::new(man);
+    let mut used = 0usize;
+    for batch in ds.all_batches(man.log_batch) {
+        if batch.real() != batch.size() {
+            continue; // skip ragged tail
+        }
+        let batch_lits = batch.literals(man)?;
+        let mut args: Vec<&xla::Literal> = vec![&params_lit];
+        args.extend(batch_lits.iter());
+        let out = rt.run_ref("cov_stats", &args)?;
+        let cov = to_f32_vec(&out[0])?;
+        // LM rows = B*T activations; MLP rows = B. Row count only scales
+        // the mean, which eigh is invariant to — use batch examples.
+        kf.accumulate(man, &cov, batch.real() as u64)?;
+        used += 1;
+        if used >= max_batches {
+            break;
+        }
+    }
+    anyhow::ensure!(used > 0, "no full batches available for KFAC fitting");
+    Ok(kf)
+}
+
+/// Compute RAW projected gradients for a set of examples (query-side
+/// logging; also used by evals). Returns row-major [indices.len(), K]
+/// plus per-example losses.
+pub fn projected_grads(
+    rt: &Runtime,
+    ds: &Dataset,
+    indices: &[usize],
+    params: &[f32],
+    proj_flat: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let man = &rt.manifest;
+    let k = man.k_total;
+    let params_lit = f32_lit(&[man.n_params], params)?;
+    let proj_lit = f32_lit(&[man.proj_len], proj_flat)?;
+    let mut rows = Vec::with_capacity(indices.len() * k);
+    let mut losses = Vec::with_capacity(indices.len());
+    for batch in ds.batches(indices, man.log_batch) {
+        let batch_lits = batch.literals(man)?;
+        let mut args: Vec<&xla::Literal> = vec![&params_lit, &proj_lit];
+        args.extend(batch_lits.iter());
+        let out = rt.run_ref("logra_log", &args)?;
+        let g = to_f32_vec(&out[0])?;
+        let l = to_f32_vec(&out[1])?;
+        rows.extend_from_slice(&g[..batch.real() * k]);
+        losses.extend_from_slice(&l[..batch.real()]);
+    }
+    Ok((rows, losses))
+}

@@ -1,0 +1,78 @@
+//! Lightweight service metrics (atomic counters; no external deps).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared counters for the valuation service.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows_scanned: AtomicU64,
+    pub scan_nanos: AtomicU64,
+    pub grad_nanos: AtomicU64,
+    pub queue_wait_nanos: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            rows_scanned: self.rows_scanned.load(Ordering::Relaxed),
+            scan_seconds: self.scan_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            grad_seconds: self.grad_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            queue_wait_seconds: self.queue_wait_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    pub fn add_nanos(counter: &AtomicU64, seconds: f64) {
+        counter.fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rows_scanned: u64,
+    pub scan_seconds: f64,
+    pub grad_seconds: f64,
+    pub queue_wait_seconds: f64,
+}
+
+impl MetricsSnapshot {
+    /// (train, test) pairs per second — the paper's Table-1 influence
+    /// throughput metric.
+    pub fn pairs_per_sec(&self, tests_per_batch: u64) -> f64 {
+        let pairs = self.rows_scanned * tests_per_batch;
+        let secs = self.scan_seconds.max(1e-12);
+        pairs as f64 / secs
+    }
+
+    /// Mean batch occupancy (dynamic-batching effectiveness).
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_math() {
+        let m = Metrics::default();
+        m.requests.store(10, Ordering::Relaxed);
+        m.batches.store(4, Ordering::Relaxed);
+        m.rows_scanned.store(1000, Ordering::Relaxed);
+        Metrics::add_nanos(&m.scan_nanos, 2.0);
+        let s = m.snapshot();
+        assert!((s.mean_batch_fill() - 2.5).abs() < 1e-12);
+        assert!((s.pairs_per_sec(4) - 2000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator — the paper's system contribution (Figure 1): the
+//! logging pipeline that populates the gradient store + Fisher blocks,
+//! the KFAC pre-pass, query-side gradient extraction, the dynamic-batching
+//! valuation service, and service metrics.
+
+pub mod logging;
+pub mod metrics;
+pub mod service;
+
+pub use logging::{fit_kfac, projected_grads, run_logging, LoggingOptions, LoggingReport};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use service::{ServiceConfig, ValuationService};

@@ -1,0 +1,228 @@
+//! Valuation service: dynamic request batching over the query engine —
+//! the serving face of Figure 1 (left top + right).
+//!
+//! PJRT handles are not `Send`, so the service owns runtime + store +
+//! preconditioner inside one worker thread (constructed there from
+//! `Send` ingredients); callers talk to it through bounded channels.
+//! Requests are coalesced up to the artifact's static `test_batch` shape
+//! or until `max_wait` expires — classic dynamic batching: the HLO score
+//! program amortizes its fixed cost over every query in the batch.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::hessian::BlockHessian;
+use crate::runtime::literal::{f32_lit, i32_lit, to_f32_vec};
+use crate::runtime::Runtime;
+use crate::store::GradStore;
+use crate::util::pipeline::{bounded, Sender};
+use crate::valuation::{Normalization, QueryEngine, QueryResult};
+
+/// Service construction parameters (everything `Send`).
+pub struct ServiceConfig {
+    pub artifact_dir: PathBuf,
+    pub store_dir: PathBuf,
+    pub params: Vec<f32>,
+    pub proj_flat: Vec<f32>,
+    /// Pre-fitted Fisher blocks (from the logging phase).
+    pub hessian: BlockHessian,
+    pub damping: f32,
+    pub norm: Normalization,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+}
+
+/// One LM valuation request: value this token sequence against the store.
+struct ServiceRequest {
+    tokens: Vec<i32>,
+    topk: usize,
+    resp: Sender<QueryResult>,
+}
+
+/// Client handle; cloneable across threads.
+pub struct ValuationService {
+    tx: Option<Sender<ServiceRequest>>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    pub metrics: Arc<Metrics>,
+    seq_len: usize,
+}
+
+impl ValuationService {
+    /// Spawn the worker. Fails later (on first query) if artifacts are
+    /// missing — construction itself is cheap.
+    pub fn spawn(cfg: ServiceConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let (tx, rx) = bounded::<ServiceRequest>(64);
+        // Probe seq_len from the manifest before moving cfg.
+        let man = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
+        let seq_len = man.seq_len;
+        anyhow::ensure!(man.is_lm(), "valuation service currently serves LM queries");
+        let (ready_tx, ready_rx) = bounded::<Result<()>>(1);
+        let handle = std::thread::Builder::new()
+            .name("valuation-service".into())
+            .spawn(move || -> Result<()> {
+                // Pay the one-time setup (store open, eigendecomposition,
+                // XLA compilation) BEFORE signalling readiness, so no
+                // request ever observes it as tail latency (§Perf log).
+                let setup = (|| -> Result<(Runtime, GradStore, crate::hessian::Preconditioner)> {
+                    let rt = Runtime::open(&cfg.artifact_dir)?;
+                    let store = GradStore::open(&cfg.store_dir)?;
+                    let precond = cfg.hessian.preconditioner(cfg.damping)?;
+                    rt.warmup(&["logra_log", "score"])?;
+                    // Compilation alone is not enough: the first EXECUTION
+                    // of each program pays lazy PJRT initialization. Run
+                    // both once with dummy inputs.
+                    {
+                        let man = &rt.manifest;
+                        let p = f32_lit(&[man.n_params], &cfg.params)?;
+                        let pr = f32_lit(&[man.proj_len], &cfg.proj_flat)?;
+                        let tok =
+                            i32_lit(&[man.log_batch, man.seq_len], &vec![0i32; man.log_batch * man.seq_len])?;
+                        rt.run_ref("logra_log", &[&p, &pr, &tok])?;
+                        let a = f32_lit(&[man.test_batch, man.k_total], &vec![0.0; man.test_batch * man.k_total])?;
+                        let b = f32_lit(&[man.train_chunk, man.k_total], &vec![0.0; man.train_chunk * man.k_total])?;
+                        rt.run_ref("score", &[&a, &b])?;
+                    }
+                    Ok((rt, store, precond))
+                })();
+                let (rt, store, precond) = match setup {
+                    Ok(v) => {
+                        let _ = ready_tx.send(Ok(()));
+                        v
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        let _ = ready_tx.send(Err(e));
+                        return Err(anyhow!("service setup failed: {msg}"));
+                    }
+                };
+                let engine = QueryEngine::new(&rt, &store, &precond);
+                let man = &rt.manifest;
+                // Gradient extraction runs at log_batch; scoring at
+                // test_batch. Batch at most min(log_batch, test_batch)
+                // requests so one artifact call covers both shapes.
+                let nt = man.test_batch.min(man.log_batch);
+                let lb = man.log_batch;
+                let t = man.seq_len;
+                let k = man.k_total;
+                let params_lit = f32_lit(&[man.n_params], &cfg.params)?;
+                let proj_lit = f32_lit(&[man.proj_len], &cfg.proj_flat)?;
+                while let Some(first) = rx.recv() {
+                    // Dynamic batching: gather up to nt requests.
+                    let mut reqs = vec![first];
+                    let deadline = Instant::now() + cfg.max_wait;
+                    while reqs.len() < nt && Instant::now() < deadline {
+                        match rx.try_recv() {
+                            Some(r) => reqs.push(r),
+                            None => std::thread::sleep(Duration::from_micros(200)),
+                        }
+                    }
+                    let real = reqs.len();
+                    m2.requests.fetch_add(real as u64, std::sync::atomic::Ordering::Relaxed);
+                    m2.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    // Per-batch error isolation: a failing batch drops its
+                    // requesters' response channels (they see an error)
+                    // but must never kill the worker.
+                    let batch_result = (|| -> Result<Vec<crate::valuation::QueryResult>> {
+                        // Assemble the fixed-shape token batch at the
+                        // gradient artifact's log_batch (pad repeats the
+                        // last real row).
+                        let mut tokens = Vec::with_capacity(lb * t);
+                        for row in 0..lb {
+                            let r = &reqs[row.min(real - 1)];
+                            anyhow::ensure!(
+                                r.tokens.len() == t,
+                                "query length {} != seq_len {t}",
+                                r.tokens.len()
+                            );
+                            tokens.extend_from_slice(&r.tokens);
+                        }
+                        let t0 = Instant::now();
+                        let tok_lit = i32_lit(&[lb, t], &tokens)?;
+                        let out = rt
+                            .run_ref("logra_log", &[&params_lit, &proj_lit, &tok_lit])?;
+                        let g_full = to_f32_vec(&out[0])?;
+                        Metrics::add_nanos(&m2.grad_nanos, t0.elapsed().as_secs_f64());
+                        // Re-pad the real gradient rows to the scoring
+                        // batch shape (test_batch) for the HLO score path.
+                        let mut g = Vec::with_capacity(nt * k);
+                        for row in 0..nt {
+                            let src = row.min(real - 1);
+                            g.extend_from_slice(&g_full[src * k..(src + 1) * k]);
+                        }
+
+                        let topk = reqs.iter().map(|r| r.topk).max().unwrap_or(1);
+                        let t1 = Instant::now();
+                        let results = engine.query(&g, nt, topk.max(1), cfg.norm)?;
+                        Metrics::add_nanos(&m2.scan_nanos, t1.elapsed().as_secs_f64());
+                        m2.rows_scanned.fetch_add(
+                            (store.rows() * real) as u64,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                        Ok(results)
+                    })();
+                    match batch_result {
+                        Ok(results) => {
+                            for (i, req) in reqs.into_iter().enumerate() {
+                                let mut r = results[i].clone();
+                                r.top.truncate(req.topk);
+                                let _ = req.resp.send(r);
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("[valuation-service] batch failed: {e:#}");
+                            // Dropping `reqs` closes the response channels.
+                        }
+                    }
+                }
+                Ok(())
+            })?;
+        // Block until the worker is warm (or report its setup error).
+        match ready_rx.recv() {
+            Some(Ok(())) => {}
+            Some(Err(e)) => return Err(e),
+            None => return Err(anyhow!("service worker died during setup")),
+        }
+        Ok(ValuationService { tx: Some(tx), handle: Some(handle), metrics, seq_len })
+    }
+
+    /// Blocking query: value `tokens` (must be exactly seq_len long).
+    pub fn query(&self, tokens: Vec<i32>, topk: usize) -> Result<QueryResult> {
+        anyhow::ensure!(
+            tokens.len() == self.seq_len,
+            "query length {} != seq_len {}",
+            tokens.len(),
+            self.seq_len
+        );
+        let (rtx, rrx) = bounded(1);
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("service closed"))?
+            .send(ServiceRequest { tokens, topk, resp: rtx })
+            .map_err(|_| anyhow!("service worker died"))?;
+        rrx.recv().ok_or_else(|| anyhow!("service dropped request"))
+    }
+
+    /// Graceful shutdown; propagates worker errors.
+    pub fn shutdown(mut self) -> Result<()> {
+        drop(self.tx.take());
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|_| anyhow!("service worker panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ValuationService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

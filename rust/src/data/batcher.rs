@@ -1,0 +1,164 @@
+//! Fixed-shape batching over datasets.
+//!
+//! AOT artifacts are closed over a static batch size, so the batcher pads
+//! ragged tails by repeating the last real example and reports `real` so
+//! downstream stages (store writer, Hessian accumulation) skip pad rows —
+//! no example is ever dropped or double-counted.
+
+use super::corpus::Corpus;
+use super::images::ImageSet;
+use crate::util::rng::Pcg32;
+
+/// One batch of LM sequences.
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub ids: Vec<u64>,
+    /// Row-major [batch, seq_len] i32.
+    pub tokens: Vec<i32>,
+    /// Number of non-pad rows (<= batch).
+    pub real: usize,
+}
+
+/// One batch of images.
+#[derive(Clone, Debug)]
+pub struct ImageBatch {
+    pub ids: Vec<u64>,
+    /// Row-major [batch, dim] f32.
+    pub features: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub real: usize,
+}
+
+/// Iterate a subset of corpus docs (by index) in fixed-size batches.
+pub fn token_batches(corpus: &Corpus, indices: &[usize], batch: usize) -> Vec<TokenBatch> {
+    let seq = corpus.seq_len;
+    let mut out = Vec::new();
+    let mut at = 0;
+    while at < indices.len() {
+        let real = (indices.len() - at).min(batch);
+        let mut ids = Vec::with_capacity(batch);
+        let mut tokens = Vec::with_capacity(batch * seq);
+        for row in 0..batch {
+            let src = indices[at + row.min(real - 1)];
+            let doc = &corpus.docs[src];
+            ids.push(doc.id);
+            tokens.extend_from_slice(&doc.tokens[..seq]);
+        }
+        out.push(TokenBatch { ids, tokens, real });
+        at += real;
+    }
+    out
+}
+
+/// Iterate an image subset in fixed-size batches.
+pub fn image_batches(set: &ImageSet, indices: &[usize], batch: usize) -> Vec<ImageBatch> {
+    let dim = set.dim;
+    let mut out = Vec::new();
+    let mut at = 0;
+    while at < indices.len() {
+        let real = (indices.len() - at).min(batch);
+        let mut ids = Vec::with_capacity(batch);
+        let mut features = Vec::with_capacity(batch * dim);
+        let mut labels = Vec::with_capacity(batch);
+        for row in 0..batch {
+            let src = indices[at + row.min(real - 1)];
+            ids.push(set.ids[src]);
+            features.extend_from_slice(set.feature_row(src));
+            labels.push(set.labels[src]);
+        }
+        out.push(ImageBatch { ids, features, labels, real });
+        at += real;
+    }
+    out
+}
+
+/// Shuffled epoch order over `n` examples.
+pub fn epoch_order(n: usize, rng: &mut Pcg32) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate, CorpusSpec};
+    use crate::data::images::{generate as gen_images, ImageSpec};
+
+    #[test]
+    fn token_batches_cover_exactly_once() {
+        let c = generate(CorpusSpec::new(256, 16, 37, 1));
+        let indices: Vec<usize> = (0..37).collect();
+        let batches = token_batches(&c, &indices, 8);
+        assert_eq!(batches.len(), 5);
+        let mut seen = Vec::new();
+        for b in &batches {
+            assert_eq!(b.ids.len(), 8);
+            assert_eq!(b.tokens.len(), 8 * 16);
+            seen.extend_from_slice(&b.ids[..b.real]);
+        }
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(seen.len(), 37);
+        assert_eq!(sorted.len(), 37);
+    }
+
+    #[test]
+    fn pad_rows_repeat_last_real() {
+        let c = generate(CorpusSpec::new(256, 16, 10, 2));
+        let indices: Vec<usize> = (0..10).collect();
+        let batches = token_batches(&c, &indices, 8);
+        let last = &batches[1];
+        assert_eq!(last.real, 2);
+        // Rows 2..8 repeat row index 1's doc.
+        for r in 2..8 {
+            assert_eq!(
+                &last.tokens[r * 16..(r + 1) * 16],
+                &last.tokens[16..32]
+            );
+        }
+    }
+
+    #[test]
+    fn image_batches_shapes() {
+        let s = gen_images(ImageSpec::fmnist_like(12, 3, 20, 5));
+        let idx: Vec<usize> = (0..20).collect();
+        let batches = image_batches(&s, &idx, 16);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].features.len(), 16 * 12);
+        assert_eq!(batches[1].real, 4);
+    }
+
+    #[test]
+    fn property_batching_never_drops_or_dups() {
+        crate::util::proptest::check("batcher-cover", 30, |g| {
+            let n = 1 + g.int_in(0, 100);
+            let batch = 1 + g.int_in(0, 16);
+            let c = generate(CorpusSpec::new(256, 8, n, g.rng.next_u64()));
+            let mut indices: Vec<usize> = (0..n).collect();
+            g.rng.shuffle(&mut indices);
+            let batches = token_batches(&c, &indices, batch);
+            let mut seen: Vec<u64> =
+                batches.iter().flat_map(|b| b.ids[..b.real].to_vec()).collect();
+            crate::prop_assert!(seen.len() == n, "saw {} of {n}", seen.len());
+            seen.sort_unstable();
+            seen.dedup();
+            crate::prop_assert!(seen.len() == n, "dups: {} unique of {n}", seen.len());
+            for b in &batches {
+                crate::prop_assert!(b.ids.len() == batch, "ragged batch");
+                crate::prop_assert!(b.real >= 1 && b.real <= batch, "bad real");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn epoch_order_is_permutation() {
+        let mut rng = Pcg32::seeded(1);
+        let o = epoch_order(50, &mut rng);
+        let mut s = o.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+}

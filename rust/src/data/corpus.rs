@@ -1,0 +1,272 @@
+//! Synthetic topic-mixture corpus (OpenWebText stand-in, DESIGN.md §1).
+//!
+//! Token-level generative model with *ground-truth topic labels* so the
+//! paper's qualitative-accuracy experiment (Fig. 5: "do the most valuable
+//! train docs resemble the query?") becomes measurable: we report the
+//! topic-match rate of the top-k valued documents instead of eyeballing
+//! web text.
+//!
+//! Model per document: draw a topic z; each position emits
+//!   - with p_bg: a shared background token ~ Zipf (function words),
+//!   - else: a token from topic z's exclusive vocabulary slice ~ Zipf,
+//!     and with p_phrase the NEXT token continues a topic "phrase"
+//!     (tok+1 in-slice), giving learnable local structure.
+//! Token 0 is reserved as BOS.
+
+use crate::util::rng::Pcg32;
+
+pub const N_TOPICS: usize = 8;
+
+pub const TOPIC_NAMES: [&str; N_TOPICS] = [
+    "space", "finance", "cooking", "sports", "medicine", "music", "law", "gaming",
+];
+
+/// Corpus generation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub n_docs: usize,
+    /// Probability of emitting a shared background token.
+    pub p_background: f64,
+    /// Probability of continuing a topic phrase.
+    pub p_phrase: f64,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    pub fn new(vocab: usize, seq_len: usize, n_docs: usize, seed: u64) -> Self {
+        CorpusSpec { vocab, seq_len, n_docs, p_background: 0.45, p_phrase: 0.35, seed }
+    }
+}
+
+/// Vocabulary partition: background slice + per-topic exclusive slices.
+#[derive(Clone, Debug)]
+pub struct VocabLayout {
+    pub vocab: usize,
+    pub bg_start: usize,
+    pub bg_len: usize,
+    pub topic_len: usize,
+}
+
+impl VocabLayout {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab >= 1 + N_TOPICS * 4, "vocab too small");
+        let usable = vocab - 1; // token 0 = BOS
+        let bg_len = usable / 4;
+        let topic_len = (usable - bg_len) / N_TOPICS;
+        VocabLayout { vocab, bg_start: 1, bg_len, topic_len }
+    }
+
+    pub fn topic_start(&self, topic: usize) -> usize {
+        self.bg_start + self.bg_len + topic * self.topic_len
+    }
+
+    /// Which topic's exclusive slice a token belongs to (None = BOS/bg or
+    /// leftover tail tokens).
+    pub fn topic_of_token(&self, tok: i32) -> Option<usize> {
+        let t = tok as usize;
+        let first = self.bg_start + self.bg_len;
+        if t < first {
+            return None;
+        }
+        let idx = (t - first) / self.topic_len;
+        if idx < N_TOPICS {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    /// Human-readable pseudo-word for a token (qualitative displays).
+    pub fn word(&self, tok: i32) -> String {
+        if tok == 0 {
+            return "<bos>".into();
+        }
+        match self.topic_of_token(tok) {
+            Some(t) => {
+                let start = self.topic_start(t);
+                format!("{}{}", TOPIC_NAMES[t], tok as usize - start)
+            }
+            None => format!("the{}", tok),
+        }
+    }
+}
+
+/// One generated document.
+#[derive(Clone, Debug)]
+pub struct Doc {
+    pub id: u64,
+    pub topic: usize,
+    pub tokens: Vec<i32>,
+}
+
+/// The full labelled corpus.
+pub struct Corpus {
+    pub layout: VocabLayout,
+    pub docs: Vec<Doc>,
+    pub seq_len: usize,
+}
+
+/// Zipf-ish sample in [0, n): index floor(n * u^alpha) with alpha > 1
+/// concentrating mass on small indices.
+fn zipfish(rng: &mut Pcg32, n: usize) -> usize {
+    let u = rng.uniform();
+    ((u * u * u) * n as f64) as usize % n.max(1)
+}
+
+pub fn generate(spec: CorpusSpec) -> Corpus {
+    let layout = VocabLayout::new(spec.vocab);
+    let mut rng = Pcg32::new(spec.seed, 17);
+    let mut docs = Vec::with_capacity(spec.n_docs);
+    for id in 0..spec.n_docs {
+        let topic = rng.below_usize(N_TOPICS);
+        let tokens = generate_doc(&layout, &spec, &mut rng, topic);
+        docs.push(Doc { id: id as u64, topic, tokens });
+    }
+    Corpus { layout, docs, seq_len: spec.seq_len }
+}
+
+/// Generate a single document for a given topic (also used for queries).
+pub fn generate_doc(
+    layout: &VocabLayout,
+    spec: &CorpusSpec,
+    rng: &mut Pcg32,
+    topic: usize,
+) -> Vec<i32> {
+    let mut toks = Vec::with_capacity(spec.seq_len);
+    toks.push(0); // BOS
+    let tstart = layout.topic_start(topic);
+    let mut phrase_prev: Option<usize> = None;
+    while toks.len() < spec.seq_len {
+        if let Some(prev) = phrase_prev {
+            // Continue the phrase: next in-slice token.
+            let next = tstart + (prev - tstart + 1) % layout.topic_len;
+            toks.push(next as i32);
+            phrase_prev =
+                if rng.uniform() < spec.p_phrase { Some(next) } else { None };
+            continue;
+        }
+        if rng.uniform() < spec.p_background {
+            toks.push((layout.bg_start + zipfish(rng, layout.bg_len)) as i32);
+        } else {
+            let t = tstart + zipfish(rng, layout.topic_len);
+            toks.push(t as i32);
+            if rng.uniform() < spec.p_phrase {
+                phrase_prev = Some(t);
+            }
+        }
+    }
+    toks
+}
+
+impl Corpus {
+    /// Majority-topic guess for an arbitrary token sequence (used to label
+    /// model-generated queries and to score topic-match of retrievals).
+    pub fn infer_topic(&self, tokens: &[i32]) -> Option<usize> {
+        let mut counts = [0usize; N_TOPICS];
+        for &t in tokens {
+            if let Some(z) = self.layout.topic_of_token(t) {
+                counts[z] += 1;
+            }
+        }
+        let (best, &cnt) =
+            counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap();
+        if cnt == 0 {
+            None
+        } else {
+            Some(best)
+        }
+    }
+
+    /// Render a token sequence as pseudo-words.
+    pub fn render(&self, tokens: &[i32]) -> String {
+        tokens.iter().map(|&t| self.layout.word(t)).collect::<Vec<_>>().join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CorpusSpec {
+        CorpusSpec::new(256, 32, 200, 42)
+    }
+
+    #[test]
+    fn generates_requested_shape() {
+        let c = generate(spec());
+        assert_eq!(c.docs.len(), 200);
+        for d in &c.docs {
+            assert_eq!(d.tokens.len(), 32);
+            assert_eq!(d.tokens[0], 0);
+            assert!(d.tokens.iter().all(|&t| (t as usize) < 256));
+            assert!(d.topic < N_TOPICS);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(spec());
+        let b = generate(spec());
+        assert_eq!(a.docs[7].tokens, b.docs[7].tokens);
+        let mut s2 = spec();
+        s2.seed = 43;
+        let c = generate(s2);
+        assert_ne!(a.docs[7].tokens, c.docs[7].tokens);
+    }
+
+    #[test]
+    fn topic_slices_disjoint_and_inferable() {
+        let c = generate(spec());
+        let mut correct = 0;
+        for d in &c.docs {
+            // Tokens from OTHER topics' slices must not appear.
+            for &t in &d.tokens {
+                if let Some(z) = c.layout.topic_of_token(t) {
+                    assert_eq!(z, d.topic, "cross-topic token leak");
+                }
+            }
+            if c.infer_topic(&d.tokens) == Some(d.topic) {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 195, "topic inference too weak: {correct}/200");
+    }
+
+    #[test]
+    fn all_topics_represented() {
+        let c = generate(spec());
+        let mut seen = [false; N_TOPICS];
+        for d in &c.docs {
+            seen[d.topic] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn words_render_topics() {
+        let c = generate(spec());
+        let layout = &c.layout;
+        let t3 = layout.topic_start(3) as i32;
+        assert!(layout.word(t3).starts_with(TOPIC_NAMES[3]));
+        assert_eq!(layout.word(0), "<bos>");
+        let rendered = c.render(&c.docs[0].tokens);
+        assert!(rendered.contains(' '));
+    }
+
+    #[test]
+    fn background_tokens_shared_across_topics() {
+        let c = generate(spec());
+        let mut bg_seen_in = [false; N_TOPICS];
+        for d in &c.docs {
+            if d.tokens.iter().any(|&t| {
+                (t as usize) >= c.layout.bg_start
+                    && (t as usize) < c.layout.bg_start + c.layout.bg_len
+            }) {
+                bg_seen_in[d.topic] = true;
+            }
+        }
+        assert!(bg_seen_in.iter().all(|&s| s));
+    }
+}

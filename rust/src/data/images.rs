@@ -1,0 +1,224 @@
+//! Synthetic class-prototype image generator (FMNIST/CIFAR stand-in).
+//!
+//! Each class c gets a fixed prototype vector; a sample is
+//! `normalize(prototype + nuisance + sigma * noise)` where the nuisance is
+//! a shared low-rank component (class-uninformative structure, so the
+//! model cannot solve the task with a single linear probe direction).
+//! A configurable fraction of labels is flipped — mislabeled points are
+//! exactly the high-influence examples the brittleness test should find.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ImageSpec {
+    pub dim: usize,
+    pub classes: usize,
+    pub n: usize,
+    /// Per-sample isotropic noise scale. FMNIST-like ~0.6 (separable),
+    /// CIFAR-like ~1.1 (harder).
+    pub sigma: f32,
+    /// Rank of the shared nuisance subspace.
+    pub nuisance_rank: usize,
+    /// Fraction of flipped labels.
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+impl ImageSpec {
+    pub fn fmnist_like(dim: usize, classes: usize, n: usize, seed: u64) -> Self {
+        ImageSpec { dim, classes, n, sigma: 0.6, nuisance_rank: 4, label_noise: 0.02, seed }
+    }
+
+    pub fn cifar_like(dim: usize, classes: usize, n: usize, seed: u64) -> Self {
+        ImageSpec { dim, classes, n, sigma: 1.1, nuisance_rank: 8, label_noise: 0.04, seed }
+    }
+}
+
+/// A labelled vision dataset (features flattened).
+pub struct ImageSet {
+    pub dim: usize,
+    pub classes: usize,
+    /// Row-major [n, dim].
+    pub features: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// True (pre-flip) labels, for analysis.
+    pub clean_labels: Vec<i32>,
+    pub ids: Vec<u64>,
+}
+
+impl ImageSet {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feature_row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn is_mislabeled(&self, i: usize) -> bool {
+        self.labels[i] != self.clean_labels[i]
+    }
+}
+
+pub fn generate(spec: ImageSpec) -> ImageSet {
+    // Prototypes and nuisance basis depend only on (seed, dim, classes):
+    // train and test sets generated with different `n`/stream share them.
+    let mut proto_rng = Pcg32::new(spec.seed, 101);
+    let mut prototypes = vec![0.0f32; spec.classes * spec.dim];
+    proto_rng.fill_normal(&mut prototypes, 1.0);
+    let mut nuisance = vec![0.0f32; spec.nuisance_rank * spec.dim];
+    proto_rng.fill_normal(&mut nuisance, 1.0);
+
+    let mut rng = Pcg32::new(spec.seed, 202);
+    let mut features = vec![0.0f32; spec.n * spec.dim];
+    let mut labels = Vec::with_capacity(spec.n);
+    let mut clean = Vec::with_capacity(spec.n);
+    for i in 0..spec.n {
+        let c = rng.below_usize(spec.classes);
+        clean.push(c as i32);
+        let y = if rng.uniform() < spec.label_noise {
+            // Flip to a different class.
+            let mut alt = rng.below_usize(spec.classes);
+            if alt == c {
+                alt = (alt + 1) % spec.classes;
+            }
+            alt as i32
+        } else {
+            c as i32
+        };
+        labels.push(y);
+        let row = &mut features[i * spec.dim..(i + 1) * spec.dim];
+        let proto = &prototypes[c * spec.dim..(c + 1) * spec.dim];
+        // Low-rank nuisance with random per-sample coefficients.
+        let mut coeffs = vec![0.0f32; spec.nuisance_rank];
+        rng.fill_normal(&mut coeffs, 0.8);
+        for (d, out) in row.iter_mut().enumerate() {
+            let mut v = proto[d];
+            for (r, &cf) in coeffs.iter().enumerate() {
+                v += cf * nuisance[r * spec.dim + d];
+            }
+            v += rng.normal_f32() * spec.sigma;
+            *out = v / (spec.dim as f32).sqrt() * 4.0; // keep features O(1)
+        }
+    }
+    ImageSet {
+        dim: spec.dim,
+        classes: spec.classes,
+        features,
+        labels,
+        clean_labels: clean,
+        ids: (0..spec.n as u64).collect(),
+    }
+}
+
+/// Generate an i.i.d. evaluation split that shares prototypes with `spec`
+/// (same seed) but uses an independent sample stream and no label noise.
+pub fn generate_eval(mut spec: ImageSpec, n: usize) -> ImageSet {
+    spec.n = n;
+    spec.label_noise = 0.0;
+    let mut set = generate(ImageSpec { seed: spec.seed, ..spec });
+    // Re-draw with a shifted sample stream so eval != train rows.
+    let mut rng = Pcg32::new(spec.seed, 909);
+    let mut proto_rng = Pcg32::new(spec.seed, 101);
+    let mut prototypes = vec![0.0f32; spec.classes * spec.dim];
+    proto_rng.fill_normal(&mut prototypes, 1.0);
+    let mut nuisance = vec![0.0f32; spec.nuisance_rank * spec.dim];
+    proto_rng.fill_normal(&mut nuisance, 1.0);
+    for i in 0..n {
+        let c = rng.below_usize(spec.classes);
+        set.labels[i] = c as i32;
+        set.clean_labels[i] = c as i32;
+        let row = &mut set.features[i * spec.dim..(i + 1) * spec.dim];
+        let proto = &prototypes[c * spec.dim..(c + 1) * spec.dim];
+        let mut coeffs = vec![0.0f32; spec.nuisance_rank];
+        rng.fill_normal(&mut coeffs, 0.8);
+        for (d, out) in row.iter_mut().enumerate() {
+            let mut v = proto[d];
+            for (r, &cf) in coeffs.iter().enumerate() {
+                v += cf * nuisance[r * spec.dim + d];
+            }
+            v += rng.normal_f32() * spec.sigma;
+            *out = v / (spec.dim as f32).sqrt() * 4.0;
+        }
+    }
+    set
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cosine;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = ImageSpec::fmnist_like(64, 10, 100, 1);
+        let a = generate(spec);
+        let b = generate(spec);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+        assert!(a.labels.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn same_class_more_similar_than_cross_class() {
+        let spec = ImageSpec::fmnist_like(128, 4, 400, 7);
+        let s = generate(spec);
+        let (mut same, mut cross) = (Vec::new(), Vec::new());
+        for i in 0..80 {
+            for j in (i + 1)..80 {
+                let c = cosine(s.feature_row(i), s.feature_row(j)) as f64;
+                if s.clean_labels[i] == s.clean_labels[j] {
+                    same.push(c);
+                } else {
+                    cross.push(c);
+                }
+            }
+        }
+        let m_same = crate::util::stats::mean(&same);
+        let m_cross = crate::util::stats::mean(&cross);
+        assert!(m_same > m_cross + 0.1, "same={m_same} cross={m_cross}");
+    }
+
+    #[test]
+    fn label_noise_rate_close_to_spec() {
+        let spec = ImageSpec { label_noise: 0.1, ..ImageSpec::fmnist_like(32, 10, 4000, 3) };
+        let s = generate(spec);
+        let flipped = (0..s.len()).filter(|&i| s.is_mislabeled(i)).count();
+        let rate = flipped as f64 / s.len() as f64;
+        assert!((rate - 0.1).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn eval_split_differs_but_same_prototypes() {
+        let spec = ImageSpec::fmnist_like(64, 4, 50, 9);
+        let train = generate(spec);
+        let eval = generate_eval(spec, 50);
+        assert_ne!(train.features, eval.features);
+        // Eval class means should correlate with train class means.
+        for c in 0..4 {
+            let mean_of = |s: &ImageSet| {
+                let mut m = vec![0.0f32; s.dim];
+                let mut n = 0;
+                for i in 0..s.len() {
+                    if s.clean_labels[i] == c as i32 {
+                        for (d, v) in s.feature_row(i).iter().enumerate() {
+                            m[d] += v;
+                        }
+                        n += 1;
+                    }
+                }
+                for v in m.iter_mut() {
+                    *v /= n.max(1) as f32;
+                }
+                m
+            };
+            let sim = cosine(&mean_of(&train), &mean_of(&eval));
+            assert!(sim > 0.5, "class {c}: {sim}");
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Data substrates: synthetic labelled corpora (OpenWebText / WikiText /
+//! FMNIST / CIFAR stand-ins per DESIGN.md §1) and fixed-shape batching.
+
+pub mod batcher;
+pub mod corpus;
+pub mod images;
+
+pub use batcher::{epoch_order, image_batches, token_batches, ImageBatch, TokenBatch};
+pub use corpus::{Corpus, CorpusSpec, VocabLayout, N_TOPICS, TOPIC_NAMES};
+pub use images::{ImageSet, ImageSpec};

@@ -1,0 +1,121 @@
+//! Brittleness test (Ilyas et al. / paper §4.1): remove the top-k most
+//! valuable train examples for a test point, retrain, and measure whether
+//! the model's behaviour on that point degrades. Accurate valuation ⇒
+//! small removals flip predictions (classification) or raise loss (LM).
+
+use anyhow::Result;
+
+use crate::linalg::Matrix;
+use crate::model::dataset::Dataset;
+use crate::model::trainer::Trainer;
+use crate::util::rng::Pcg32;
+
+/// Harness parameters (paper scale: 100 test points, k up to hundreds,
+/// 3 retrain seeds; defaults here are single-core-budget scale — override
+/// via CLI flags for full runs).
+#[derive(Clone, Debug)]
+pub struct BrittlenessConfig {
+    pub removal_counts: Vec<usize>,
+    pub retrain_seeds: Vec<u32>,
+    pub epochs: usize,
+}
+
+impl Default for BrittlenessConfig {
+    fn default() -> Self {
+        BrittlenessConfig {
+            removal_counts: vec![10, 40, 160],
+            retrain_seeds: vec![100],
+            epochs: 4,
+        }
+    }
+}
+
+/// Result for one method.
+#[derive(Clone, Debug)]
+pub struct BrittlenessResult {
+    pub method: String,
+    /// Per removal count k: classification → fraction of test examples
+    /// flipped; LM → mean Δloss (retrained − base) over test examples.
+    pub per_k: Vec<(usize, f64)>,
+    pub retrains: usize,
+}
+
+/// Top-k train indices by value row (descending).
+pub fn top_k_indices(values_row: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values_row.len()).collect();
+    idx.sort_by(|&a, &b| values_row[b].partial_cmp(&values_row[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Run the brittleness protocol for one method's value matrix.
+///
+/// `values` is [test_indices.len(), n_train]. `base_test_loss[t]` /
+/// `base_pred[t]` describe the full-data model on the chosen test points.
+/// For classification (`labels` = Some), returns flip fractions; for LM
+/// (None), mean loss increase.
+#[allow(clippy::too_many_arguments)]
+pub fn brittleness_eval(
+    trainer: &Trainer,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    test_indices: &[usize],
+    test_labels: Option<&[i32]>,
+    base_test_loss: &[f32],
+    values: &Matrix,
+    method: &str,
+    cfg: &BrittlenessConfig,
+) -> Result<BrittlenessResult> {
+    let n_train = train_ds.len();
+    assert_eq!(values.rows, test_indices.len());
+    assert_eq!(values.cols, n_train);
+    let mut per_k = Vec::new();
+    let mut retrains = 0usize;
+    for &k in &cfg.removal_counts {
+        let k = k.min(n_train.saturating_sub(1));
+        let mut metric_acc = 0.0f64;
+        let mut metric_n = 0usize;
+        for (t, &ti) in test_indices.iter().enumerate() {
+            let removed = top_k_indices(values.row(t), k);
+            let removed_set: std::collections::HashSet<usize> =
+                removed.into_iter().collect();
+            let keep: Vec<usize> =
+                (0..n_train).filter(|i| !removed_set.contains(i)).collect();
+            for &seed in &cfg.retrain_seeds {
+                let mut st = trainer.init(seed)?;
+                let mut rng = Pcg32::new(seed as u64 + 17 * t as u64, 3);
+                trainer.train(&mut st, train_ds, &keep, cfg.epochs, &mut rng)?;
+                retrains += 1;
+                match test_labels {
+                    Some(labels) => {
+                        let pred = trainer.predictions(&st, test_ds, &[ti])?[0];
+                        if pred != labels[t] {
+                            metric_acc += 1.0;
+                        }
+                        metric_n += 1;
+                    }
+                    None => {
+                        let (losses, _) = trainer.eval(&st, test_ds, &[ti])?;
+                        metric_acc += (losses[0] - base_test_loss[t]) as f64;
+                        metric_n += 1;
+                    }
+                }
+            }
+        }
+        per_k.push((k, metric_acc / metric_n.max(1) as f64));
+    }
+    Ok(BrittlenessResult { method: method.to_string(), per_k, retrains })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_descending() {
+        let vals = [0.1f32, 5.0, -2.0, 3.0, 3.0];
+        assert_eq!(top_k_indices(&vals, 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&vals, 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&vals, 10), vec![1, 3, 4, 0, 2]);
+    }
+}

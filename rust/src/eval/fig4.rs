@@ -1,0 +1,316 @@
+//! Figure-4 orchestration: run every valuation method on one benchmark
+//! (mlp_fmnist / mlp_cifar / lm_wikitext) through both counterfactual
+//! protocols. Used by the `logra fig4` CLI and `benches/fig4_counterfactual`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::{
+    EkfacValuator, GradDotValuator, LograInit, LograValuator, RepSimValuator,
+    TrakValuator, Valuator,
+};
+use crate::data::corpus::{generate as gen_corpus, CorpusSpec};
+use crate::data::images::{generate as gen_images, generate_eval, ImageSpec};
+use crate::eval::brittleness::{brittleness_eval, BrittlenessConfig, BrittlenessResult};
+use crate::eval::lds::{lds_gold, lds_score, sample_subsets, LdsConfig};
+use crate::model::dataset::Dataset;
+use crate::model::trainer::Trainer;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+
+/// Experiment scale knobs (defaults sized for the single-core testbed;
+/// paper-scale runs pass bigger numbers via CLI flags).
+#[derive(Clone, Debug)]
+pub struct Fig4Scale {
+    pub n_train: usize,
+    pub n_test_pool: usize,
+    pub n_test: usize,
+    pub base_epochs: usize,
+    pub brittle: BrittlenessConfig,
+    pub lds: LdsConfig,
+    pub methods: Vec<String>,
+    pub seed: u64,
+    pub run_brittleness: bool,
+    pub run_lds: bool,
+}
+
+impl Default for Fig4Scale {
+    fn default() -> Self {
+        Fig4Scale {
+            n_train: 512,
+            n_test_pool: 64,
+            n_test: 8,
+            base_epochs: 4,
+            brittle: BrittlenessConfig::default(),
+            lds: LdsConfig::default(),
+            methods: vec![
+                "logra-pca".into(),
+                "logra-random".into(),
+                "ekfac-if".into(),
+                "trak".into(),
+                "grad-dot".into(),
+                "rep-sim".into(),
+            ],
+            seed: 42,
+            run_brittleness: true,
+            run_lds: true,
+        }
+    }
+}
+
+/// One method's outcomes.
+#[derive(Clone, Debug)]
+pub struct MethodOutcome {
+    pub method: String,
+    pub brittleness: Option<BrittlenessResult>,
+    pub lds: Option<f64>,
+    pub values_seconds: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig4Output {
+    pub benchmark: String,
+    pub kind: String,
+    pub outcomes: Vec<MethodOutcome>,
+    pub gold_retrains: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+/// Datasets owned by a benchmark run (kept alive for the borrows below).
+pub enum BenchData {
+    Mlp { train: crate::data::ImageSet, test: crate::data::ImageSet },
+    Lm { train: crate::data::Corpus, test: crate::data::Corpus },
+}
+
+impl BenchData {
+    pub fn build(man: &crate::runtime::Manifest, name: &str, scale: &Fig4Scale) -> Result<Self> {
+        if man.is_lm() {
+            let spec = CorpusSpec::new(man.vocab, man.seq_len, scale.n_train, scale.seed);
+            let tspec = CorpusSpec::new(
+                man.vocab,
+                man.seq_len,
+                scale.n_test_pool,
+                scale.seed + 9001,
+            );
+            Ok(BenchData::Lm { train: gen_corpus(spec), test: gen_corpus(tspec) })
+        } else {
+            let mk = |n: usize| -> ImageSpec {
+                if name.contains("cifar") {
+                    ImageSpec::cifar_like(man.input_dim, man.classes, n, scale.seed)
+                } else {
+                    ImageSpec::fmnist_like(man.input_dim, man.classes, n, scale.seed)
+                }
+            };
+            let train = gen_images(mk(scale.n_train));
+            let test = generate_eval(mk(scale.n_train), scale.n_test_pool);
+            Ok(BenchData::Mlp { train, test })
+        }
+    }
+
+    pub fn datasets(&self) -> (Dataset<'_>, Dataset<'_>) {
+        match self {
+            BenchData::Mlp { train, test } => (Dataset::Mlp(train), Dataset::Mlp(test)),
+            BenchData::Lm { train, test } => (Dataset::Lm(train), Dataset::Lm(test)),
+        }
+    }
+
+    pub fn test_labels(&self) -> Option<Vec<i32>> {
+        match self {
+            BenchData::Mlp { test, .. } => Some(test.labels.clone()),
+            BenchData::Lm { .. } => None,
+        }
+    }
+}
+
+fn build_valuator<'a>(
+    name: &str,
+    rt: &'a Runtime,
+    train: &'a Dataset<'a>,
+    test: &'a Dataset<'a>,
+    params: &'a [f32],
+    run_dir: &Path,
+    seed: u64,
+) -> Result<Box<dyn Valuator + 'a>> {
+    const DAMP: f32 = 0.1;
+    Ok(match name {
+        "logra-pca" => Box::new(LograValuator::build(
+            rt,
+            train,
+            test,
+            params,
+            LograInit::Pca,
+            run_dir.join("store-pca"),
+            DAMP,
+            seed,
+        )?),
+        "logra-random" => Box::new(LograValuator::build(
+            rt,
+            train,
+            test,
+            params,
+            LograInit::Random,
+            run_dir.join("store-rand"),
+            DAMP,
+            seed,
+        )?),
+        "ekfac-if" => Box::new(EkfacValuator::new(rt, train, test, params)),
+        "trak" => Box::new(TrakValuator::new(rt, train, test, params, 64, DAMP, seed)),
+        "grad-dot" => Box::new(GradDotValuator { rt, train, test, params }),
+        "rep-sim" => Box::new(RepSimValuator::new(rt, train, test, params)),
+        "random" => Box::new(RandomValuator { n_train: train.len(), seed }),
+        other => return Err(anyhow!("unknown method {other:?}")),
+    })
+}
+
+/// Control: i.i.d. Gaussian values. Calibrates both protocols — LDS should
+/// be ≈0 and brittleness should match random-removal damage.
+struct RandomValuator {
+    n_train: usize,
+    seed: u64,
+}
+
+impl Valuator for RandomValuator {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn values(&mut self, test_indices: &[usize]) -> Result<crate::linalg::Matrix> {
+        let mut rng = Pcg32::new(self.seed, 99);
+        Ok(crate::linalg::Matrix::random_normal(
+            &mut rng,
+            test_indices.len(),
+            self.n_train,
+            1.0,
+        ))
+    }
+}
+
+/// Run one Figure-4 benchmark end to end.
+pub fn run_fig4(repo_root: &Path, config_name: &str, scale: &Fig4Scale) -> Result<Fig4Output> {
+    let rt = Runtime::open_named(repo_root, config_name)?;
+    let man = rt.manifest.clone();
+    let data = BenchData::build(&man, config_name, scale)?;
+    let (train_ds, test_ds) = data.datasets();
+    let trainer = Trainer::new(&rt);
+    let run_dir: PathBuf = repo_root.join("runs").join("fig4").join(config_name);
+    std::fs::create_dir_all(&run_dir)?;
+
+    // Base model on the full training set.
+    let mut base = trainer.init(1)?;
+    let all: Vec<usize> = (0..train_ds.len()).collect();
+    let mut rng = Pcg32::new(scale.seed, 2);
+    trainer.train(&mut base, &train_ds, &all, scale.base_epochs, &mut rng)?;
+
+    // Test selection: correctly classified points (classification) or the
+    // first pool entries (LM).
+    let pool: Vec<usize> = (0..test_ds.len()).collect();
+    let test_indices: Vec<usize> = if let Some(labels) = data.test_labels() {
+        let preds = trainer.predictions(&base, &test_ds, &pool)?;
+        pool.iter()
+            .copied()
+            .filter(|&i| preds[i] == labels[i])
+            .take(scale.n_test)
+            .collect()
+    } else {
+        pool.iter().copied().take(scale.n_test).collect()
+    };
+    anyhow::ensure!(!test_indices.is_empty(), "no eligible test examples");
+    let (base_losses, _) = trainer.eval(&base, &test_ds, &test_indices)?;
+    let test_labels: Option<Vec<i32>> = data
+        .test_labels()
+        .map(|ls| test_indices.iter().map(|&i| ls[i]).collect());
+
+    // Shared LDS gold runs.
+    let mut rng_lds = Pcg32::new(scale.seed, 11);
+    let subsets = sample_subsets(train_ds.len(), &scale.lds, &mut rng_lds);
+    let gold = if scale.run_lds {
+        Some(lds_gold(&trainer, &train_ds, &test_ds, &test_indices, &subsets, &scale.lds)?)
+    } else {
+        None
+    };
+    let gold_retrains = if scale.run_lds {
+        subsets.len() * scale.lds.gold_seeds.len()
+    } else {
+        0
+    };
+
+    let mut outcomes = Vec::new();
+    for method in &scale.methods {
+        let t0 = crate::util::Timer::start();
+        let mut v = build_valuator(
+            method,
+            &rt,
+            &train_ds,
+            &test_ds,
+            &base.params,
+            &run_dir,
+            scale.seed,
+        )?;
+        let values = v.values(&test_indices)?;
+        let values_seconds = t0.seconds();
+        let brit = if scale.run_brittleness {
+            Some(brittleness_eval(
+                &trainer,
+                &train_ds,
+                &test_ds,
+                &test_indices,
+                test_labels.as_deref(),
+                &base_losses,
+                &values,
+                method,
+                &scale.brittle,
+            )?)
+        } else {
+            None
+        };
+        let lds = gold.as_ref().map(|g| lds_score(&values, &subsets, g));
+        println!(
+            "[fig4 {config_name}] {method}: values {values_seconds:.1}s, lds {:?}, brittleness {:?}",
+            lds,
+            brit.as_ref().map(|b| &b.per_k)
+        );
+        outcomes.push(MethodOutcome {
+            method: method.clone(),
+            brittleness: brit,
+            lds,
+            values_seconds,
+        });
+    }
+
+    Ok(Fig4Output {
+        benchmark: config_name.to_string(),
+        kind: man.kind.clone(),
+        outcomes,
+        gold_retrains,
+        n_train: train_ds.len(),
+        n_test: test_indices.len(),
+    })
+}
+
+/// Render a Fig-4 output as a markdown table block.
+pub fn render_markdown(out: &Fig4Output) -> String {
+    let mut s = format!(
+        "### {} ({}; n_train={}, n_test={})\n\n",
+        out.benchmark, out.kind, out.n_train, out.n_test
+    );
+    let metric = if out.kind == "mlp" { "flip-frac" } else { "Δloss" };
+    s.push_str(&format!("| method | LDS | {metric} per k |\n|---|---|---|\n"));
+    for o in &out.outcomes {
+        let lds = o.lds.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into());
+        let brit = o
+            .brittleness
+            .as_ref()
+            .map(|b| {
+                b.per_k
+                    .iter()
+                    .map(|(k, v)| format!("k={k}: {v:.3}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            })
+            .unwrap_or_else(|| "-".into());
+        s.push_str(&format!("| {} | {} | {} |\n", o.method, lds, brit));
+    }
+    s
+}

@@ -1,0 +1,151 @@
+//! Linear datamodeling score (Park et al. / paper §4.1).
+//!
+//! Sample random half-size train subsets S_i, retrain on each to get gold
+//! test performance, and check (Spearman) whether the method's summed
+//! values Σ_{j∈S_i} value(t, j) rank the subsets like the gold runs do.
+//! Gold retrainings are method-independent — computed once per benchmark
+//! and shared by every method (the dominant cost, so this sharing matters
+//! on a single-core budget).
+
+use anyhow::Result;
+
+use crate::linalg::Matrix;
+use crate::model::dataset::Dataset;
+use crate::model::trainer::Trainer;
+use crate::util::rng::Pcg32;
+use crate::util::stats::{mean, spearman};
+
+#[derive(Clone, Debug)]
+pub struct LdsConfig {
+    pub n_subsets: usize,
+    /// |S_i| = frac * n_train (paper: 0.5).
+    pub subset_frac: f64,
+    pub gold_seeds: Vec<u32>,
+    pub epochs: usize,
+}
+
+impl Default for LdsConfig {
+    fn default() -> Self {
+        LdsConfig { n_subsets: 16, subset_frac: 0.5, gold_seeds: vec![300], epochs: 4 }
+    }
+}
+
+/// Draw the shared subset collection.
+pub fn sample_subsets(n_train: usize, cfg: &LdsConfig, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+    let size = ((n_train as f64) * cfg.subset_frac).round() as usize;
+    (0..cfg.n_subsets).map(|_| rng.sample_indices(n_train, size.max(1))).collect()
+}
+
+/// Gold matrix [n_subsets, n_test]: NEGATIVE mean test loss (higher =
+/// better performance) of a model retrained on each subset.
+pub fn lds_gold(
+    trainer: &Trainer,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    test_indices: &[usize],
+    subsets: &[Vec<usize>],
+    cfg: &LdsConfig,
+) -> Result<Matrix> {
+    let mut gold = Matrix::zeros(subsets.len(), test_indices.len());
+    for (si, subset) in subsets.iter().enumerate() {
+        let mut acc = vec![0.0f64; test_indices.len()];
+        for &seed in &cfg.gold_seeds {
+            let mut st = trainer.init(seed)?;
+            let mut rng = Pcg32::new(seed as u64 * 31 + si as u64, 5);
+            trainer.train(&mut st, train_ds, subset, cfg.epochs, &mut rng)?;
+            let (losses, _) = trainer.eval(&st, test_ds, test_indices)?;
+            for (a, l) in acc.iter_mut().zip(&losses) {
+                *a += -(*l as f64);
+            }
+        }
+        for (t, a) in acc.iter().enumerate() {
+            gold.data[si * test_indices.len() + t] = (a / cfg.gold_seeds.len() as f64) as f32;
+        }
+    }
+    Ok(gold)
+}
+
+/// LDS for one method: mean Spearman over test examples between predicted
+/// subset utility (sum of values over the subset) and gold performance.
+/// The paper predicts test LOSS via summed values; since influence scores
+/// estimate the gain in performance from including an example, predicted
+/// utility = Σ values and gold = −loss correlate positively for a good
+/// method.
+pub fn lds_score(values: &Matrix, subsets: &[Vec<usize>], gold: &Matrix) -> f64 {
+    let n_test = values.rows;
+    assert_eq!(gold.cols, n_test);
+    assert_eq!(gold.rows, subsets.len());
+    let mut per_test = Vec::with_capacity(n_test);
+    for t in 0..n_test {
+        let row = values.row(t);
+        let predicted: Vec<f64> = subsets
+            .iter()
+            .map(|s| s.iter().map(|&j| row[j] as f64).sum())
+            .collect();
+        let gold_col: Vec<f64> =
+            (0..subsets.len()).map(|si| gold.at(si, t) as f64).collect();
+        let rho = spearman(&predicted, &gold_col);
+        if rho.is_finite() {
+            per_test.push(rho);
+        }
+    }
+    mean(&per_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsets_have_requested_size() {
+        let mut rng = Pcg32::seeded(1);
+        let cfg = LdsConfig { n_subsets: 5, subset_frac: 0.5, ..Default::default() };
+        let subs = sample_subsets(100, &cfg, &mut rng);
+        assert_eq!(subs.len(), 5);
+        for s in &subs {
+            assert_eq!(s.len(), 50);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn lds_perfect_for_additive_gold() {
+        // Gold generated exactly as the sum of true per-example utilities
+        // -> a method reporting those utilities scores Spearman 1.
+        let mut rng = Pcg32::seeded(2);
+        let n_train = 40;
+        let n_test = 3;
+        let true_vals = Matrix::random_normal(&mut rng, n_test, n_train, 1.0);
+        let cfg = LdsConfig { n_subsets: 12, ..Default::default() };
+        let subsets = sample_subsets(n_train, &cfg, &mut rng);
+        let mut gold = Matrix::zeros(subsets.len(), n_test);
+        for (si, s) in subsets.iter().enumerate() {
+            for t in 0..n_test {
+                let u: f32 = s.iter().map(|&j| true_vals.at(t, j)).sum();
+                gold.data[si * n_test + t] = u;
+            }
+        }
+        let rho = lds_score(&true_vals, &subsets, &gold);
+        assert!((rho - 1.0).abs() < 1e-9, "rho={rho}");
+        // A reversed method scores -1.
+        let mut neg = true_vals.clone();
+        neg.scale(-1.0);
+        assert!((lds_score(&neg, &subsets, &gold) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lds_random_near_zero() {
+        let mut rng = Pcg32::seeded(3);
+        let n_train = 60;
+        let true_vals = Matrix::random_normal(&mut rng, 1, n_train, 1.0);
+        let cfg = LdsConfig { n_subsets: 64, ..Default::default() };
+        let subsets = sample_subsets(n_train, &cfg, &mut rng);
+        let mut gold = Matrix::zeros(subsets.len(), 1);
+        for (si, s) in subsets.iter().enumerate() {
+            gold.data[si] = s.iter().map(|&j| true_vals.at(0, j)).sum();
+        }
+        let junk = Matrix::random_normal(&mut rng, 1, n_train, 1.0);
+        let rho = lds_score(&junk, &subsets, &gold);
+        assert!(rho.abs() < 0.45, "rho={rho}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Counterfactual evaluation harness (paper §4.1 / Figure 4): the
+//! brittleness test and the linear datamodeling score, plus the Fig-4
+//! orchestration that runs every method on every benchmark.
+
+pub mod brittleness;
+pub mod fig4;
+pub mod lds;
+pub mod qualitative;
+pub mod table1;
+
+pub use brittleness::{brittleness_eval, BrittlenessConfig, BrittlenessResult};
+pub use lds::{lds_gold, lds_score, sample_subsets, LdsConfig};

@@ -1,0 +1,401 @@
+//! KFAC factor fitting, LoGra-PCA initialization, and the EKFAC state.
+//!
+//! KFAC (§3.2): per module, `H ≈ C_F ⊗ C_B` with `C_F = E[x x^T]`,
+//! `C_B = E[dx dx^T]`. From the eigendecompositions `C_F = Q_F Λ_F Q_F^T`,
+//! `C_B = Q_B Λ_B Q_B^T`:
+//!   * LoGra-PCA init: `P_i = top-k_in rows of Q_F^T`, `P_o = top-k_out
+//!     rows of Q_B^T` — projecting onto the largest KFAC eigen-directions
+//!     (the spectral-sparsification argument of Lemma 1).
+//!   * EKFAC baseline: rotate gradients into the FULL eigenbasis and
+//!     replace `Λ_F ⊗ Λ_B` with corrected per-entry eigenvalues
+//!     `Λ*_oi = E[(Q_B^T DW Q_F)_oi²]` fitted from data (Grosse et al.).
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::{eigh, Matrix};
+use crate::runtime::Manifest;
+use crate::util::rng::Pcg32;
+
+/// Accumulated per-module activation covariances.
+pub struct KfacFactors {
+    /// (C_F [n_in,n_in], C_B [n_out,n_out]) per module.
+    pub factors: Vec<(Matrix, Matrix)>,
+    pub rows: u64,
+}
+
+impl KfacFactors {
+    pub fn new(man: &Manifest) -> Self {
+        let factors = man
+            .modules
+            .iter()
+            .map(|m| (Matrix::zeros(m.n_in, m.n_in), Matrix::zeros(m.n_out, m.n_out)))
+            .collect();
+        KfacFactors { factors, rows: 0 }
+    }
+
+    /// Add one `cov_stats` artifact output (flat, per-module C_F then C_B,
+    /// summed over the batch's rows). Only feed FULL batches: the artifact
+    /// cannot distinguish pad rows. `batch_rows` is the row count the
+    /// artifact summed over.
+    pub fn accumulate(&mut self, man: &Manifest, cov_flat: &[f32], batch_rows: u64) -> Result<()> {
+        if cov_flat.len() != man.cov_len {
+            return Err(anyhow!(
+                "cov vector len {} != manifest cov_len {}",
+                cov_flat.len(),
+                man.cov_len
+            ));
+        }
+        for (mi, m) in man.modules.iter().enumerate() {
+            let f_len = m.n_in * m.n_in;
+            let b_len = m.n_out * m.n_out;
+            let off = m.cov_off;
+            let (cf, cb) = &mut self.factors[mi];
+            for (dst, src) in cf.data.iter_mut().zip(&cov_flat[off..off + f_len]) {
+                *dst += src;
+            }
+            for (dst, src) in
+                cb.data.iter_mut().zip(&cov_flat[off + f_len..off + f_len + b_len])
+            {
+                *dst += src;
+            }
+        }
+        self.rows += batch_rows;
+        Ok(())
+    }
+
+    /// Eigendecompose the mean factors: per module (eig_F, eig_B).
+    pub fn eigenbases(&self) -> Vec<(crate::linalg::Eigh, crate::linalg::Eigh)> {
+        let scale = 1.0 / self.rows.max(1) as f32;
+        self.factors
+            .iter()
+            .map(|(cf, cb)| {
+                let mut f = cf.clone();
+                f.scale(scale);
+                let mut b = cb.clone();
+                b.scale(scale);
+                (eigh(&f), eigh(&b))
+            })
+            .collect()
+    }
+}
+
+/// Pack per-module (P_i, P_o) into the flat projection vector layout the
+/// `logra_log` artifact expects (manifest `p_off` order).
+pub fn pack_projections(man: &Manifest, projs: &[(Matrix, Matrix)]) -> Vec<f32> {
+    let mut flat = vec![0.0f32; man.proj_len];
+    for (m, (pi, po)) in man.modules.iter().zip(projs) {
+        assert_eq!(pi.cols, m.n_in);
+        assert_eq!(po.cols, m.n_out);
+        let off = m.p_off;
+        flat[off..off + pi.data.len()].copy_from_slice(&pi.data);
+        flat[off + pi.data.len()..off + pi.data.len() + po.data.len()]
+            .copy_from_slice(&po.data);
+    }
+    flat
+}
+
+/// LoGra-random initialization: orthonormalized Gaussian rows per module.
+pub fn random_projections(man: &Manifest, rng: &mut Pcg32) -> Vec<f32> {
+    let projs: Vec<(Matrix, Matrix)> = man
+        .modules
+        .iter()
+        .map(|m| {
+            let mut pi = Matrix::random_normal(rng, man.k_in, m.n_in, 1.0);
+            pi.orthonormalize_rows();
+            let mut po = Matrix::random_normal(rng, man.k_out, m.n_out, 1.0);
+            po.orthonormalize_rows();
+            (pi, po)
+        })
+        .collect();
+    pack_projections(man, &projs)
+}
+
+/// LoGra-PCA initialization from fitted KFAC factors (§3.2).
+pub fn pca_projections(man: &Manifest, kfac: &KfacFactors) -> Vec<f32> {
+    let bases = kfac.eigenbases();
+    let projs: Vec<(Matrix, Matrix)> = bases
+        .iter()
+        .map(|(ef, eb)| (ef.top_k_rows(man.k_in), eb.top_k_rows(man.k_out)))
+        .collect();
+    pack_projections(man, &projs)
+}
+
+// ------------------------------------------------------------------ EKFAC
+
+/// EKFAC baseline state: full-rank eigenbasis rotations + corrected
+/// eigenvalues + per-module damping.
+pub struct Ekfac {
+    /// Flat full-rank projection vector (`pfull` layout) holding Q_F^T /
+    /// Q_B^T rows per module — fed to the `ekfac_log` artifact.
+    pub rotations_flat: Vec<f32>,
+    /// Corrected eigenvalues, one per entry of a full-rank gradient row.
+    pub lambda: Vec<f32>,
+    /// Per-module damping, `0.1 · mean(λ*_module)`.
+    pub damp: Vec<f32>,
+    fitted_rows: u64,
+}
+
+impl Ekfac {
+    /// Build rotations from fitted KFAC factors. `lambda` starts at the
+    /// KFAC Kronecker eigenvalues and is replaced by `fit_corrected`.
+    pub fn from_kfac(man: &Manifest, kfac: &KfacFactors) -> Self {
+        let bases = kfac.eigenbases();
+        let mut flat = vec![0.0f32; man.proj_len_full];
+        let mut lambda = vec![0.0f32; man.k_full];
+        for (m, (ef, eb)) in man.modules.iter().zip(&bases) {
+            // Full-rank "projections": all eigenvectors as rows.
+            let pi = ef.top_k_rows(m.n_in);
+            let po = eb.top_k_rows(m.n_out);
+            let off = m.pfull_off;
+            flat[off..off + pi.data.len()].copy_from_slice(&pi.data);
+            flat[off + pi.data.len()..off + pi.data.len() + po.data.len()]
+                .copy_from_slice(&po.data);
+            // KFAC eigenvalues: λ_B[o] * λ_F[i], row-major (o, i) to match
+            // the gradient-block layout vec(P_o DW P_i^T).
+            // top_k_rows returns descending eigenvalues.
+            let lam_f: Vec<f32> =
+                (0..m.n_in).map(|i| ef.eigenvalues[m.n_in - 1 - i].max(0.0)).collect();
+            let lam_b: Vec<f32> =
+                (0..m.n_out).map(|o| eb.eigenvalues[m.n_out - 1 - o].max(0.0)).collect();
+            for o in 0..m.n_out {
+                for i in 0..m.n_in {
+                    lambda[m.gfull_off + o * m.n_in + i] = lam_b[o] * lam_f[i];
+                }
+            }
+        }
+        let mut ek = Ekfac { rotations_flat: flat, lambda, damp: vec![0.0; man.modules.len()], fitted_rows: 0 };
+        ek.refresh_damping(man);
+        ek
+    }
+
+    /// Accumulate corrected eigenvalues from rotated per-sample gradients
+    /// (`ekfac_log` output rows). Call `finish_corrected` afterwards.
+    pub fn accumulate_corrected(&mut self, rows: &[f32], real: usize, k_full: usize) {
+        if self.fitted_rows == 0 {
+            self.lambda.iter_mut().for_each(|l| *l = 0.0);
+        }
+        for r in 0..real {
+            let row = &rows[r * k_full..(r + 1) * k_full];
+            for (l, &g) in self.lambda.iter_mut().zip(row) {
+                *l += g * g;
+            }
+        }
+        self.fitted_rows += real as u64;
+    }
+
+    pub fn finish_corrected(&mut self, man: &Manifest) {
+        if self.fitted_rows > 0 {
+            let inv = 1.0 / self.fitted_rows as f32;
+            for l in self.lambda.iter_mut() {
+                *l *= inv;
+            }
+        }
+        self.refresh_damping(man);
+    }
+
+    fn refresh_damping(&mut self, man: &Manifest) {
+        for (mi, m) in man.modules.iter().enumerate() {
+            let seg = &self.lambda[m.gfull_off..m.gfull_off + m.gfull_len];
+            let mean: f32 = seg.iter().sum::<f32>() / seg.len() as f32;
+            self.damp[mi] = (0.1 * mean).max(1e-12);
+        }
+    }
+
+    /// iHVP in the eigenbasis: out_j = g_j / (λ*_j + damp(module of j)).
+    pub fn precondition(&self, man: &Manifest, g_rot: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; g_rot.len()];
+        for (mi, m) in man.modules.iter().enumerate() {
+            let d = self.damp[mi];
+            for j in m.gfull_off..m.gfull_off + m.gfull_len {
+                out[j] = g_rot[j] / (self.lambda[j] + d);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Manifest, ModuleInfo, ParamInfo};
+
+    /// Hand-built 2-module manifest for unit tests.
+    pub fn toy_manifest() -> Manifest {
+        let modules = vec![
+            ModuleInfo {
+                name: "fc0".into(),
+                n_in: 3,
+                n_out: 4,
+                g_off: 0,
+                g_len: 4,
+                gfull_off: 0,
+                gfull_len: 12,
+                p_off: 0,
+                pfull_off: 0,
+                cov_off: 0,
+            },
+            ModuleInfo {
+                name: "fc1".into(),
+                n_in: 4,
+                n_out: 2,
+                g_off: 4,
+                g_len: 4,
+                gfull_off: 12,
+                gfull_len: 8,
+                p_off: 2 * 3 + 2 * 4,
+                pfull_off: 9 + 16,
+                cov_off: 9 + 16,
+            },
+        ];
+        Manifest {
+            name: "toy".into(),
+            kind: "mlp".into(),
+            n_params: 20,
+            k_in: 2,
+            k_out: 2,
+            k_total: 8,
+            k_full: 20,
+            proj_len: (2 * 3 + 2 * 4) + (2 * 4 + 2 * 2),
+            proj_len_full: (9 + 16) + (16 + 4),
+            cov_len: (9 + 16) + (16 + 4),
+            train_batch: 4,
+            log_batch: 4,
+            test_batch: 2,
+            train_chunk: 8,
+            vocab: 0,
+            seq_len: 0,
+            input_dim: 3,
+            classes: 2,
+            repr_dim: 4,
+            modules,
+            params: vec![
+                ParamInfo { name: "fc0.w".into(), off: 0, shape: vec![4, 3] },
+                ParamInfo { name: "fc1.w".into(), off: 12, shape: vec![2, 4] },
+            ],
+            entries: vec![],
+        }
+    }
+
+    #[test]
+    fn pack_projections_layout() {
+        let man = toy_manifest();
+        let pi0 = Matrix::from_vec(2, 3, (0..6).map(|x| x as f32).collect());
+        let po0 = Matrix::from_vec(2, 4, (10..18).map(|x| x as f32).collect());
+        let pi1 = Matrix::from_vec(2, 4, (20..28).map(|x| x as f32).collect());
+        let po1 = Matrix::from_vec(2, 2, (30..34).map(|x| x as f32).collect());
+        let flat = pack_projections(&man, &[(pi0, po0), (pi1, po1)]);
+        assert_eq!(flat.len(), man.proj_len);
+        assert_eq!(flat[0], 0.0);
+        assert_eq!(flat[6], 10.0); // po0 starts after pi0
+        assert_eq!(flat[14], 20.0); // module 1 at p_off
+        assert_eq!(flat[14 + 8], 30.0);
+    }
+
+    #[test]
+    fn random_projections_orthonormal_rows() {
+        let man = toy_manifest();
+        let mut rng = Pcg32::seeded(1);
+        let flat = random_projections(&man, &mut rng);
+        // First module's P_i rows (2x3) orthonormal.
+        let pi = Matrix::from_vec(2, 3, flat[0..6].to_vec());
+        let g = pi.matmul_t(&pi);
+        assert!(g.max_abs_diff(&Matrix::identity(2)) < 1e-4);
+    }
+
+    #[test]
+    fn kfac_accumulate_and_pca() {
+        let man = toy_manifest();
+        let mut kf = KfacFactors::new(&man);
+        // Covariance with a dominant direction e0 for module 0's C_F.
+        let mut cov = vec![0.0f32; man.cov_len];
+        // C_F module0 = diag(9, 1, 0.1)
+        cov[0] = 9.0;
+        cov[4] = 1.0;
+        cov[8] = 0.1;
+        // C_B module0 = diag(4, 2, 1, 0.5)
+        for (i, v) in [4.0, 2.0, 1.0, 0.5].iter().enumerate() {
+            cov[9 + i * 4 + i] = *v;
+        }
+        // Module 1 factors = identity-ish.
+        let off1 = man.modules[1].cov_off;
+        for i in 0..4 {
+            cov[off1 + i * 4 + i] = 1.0;
+        }
+        for i in 0..2 {
+            cov[off1 + 16 + i * 2 + i] = 1.0;
+        }
+        kf.accumulate(&man, &cov, 1).unwrap();
+        let flat = pca_projections(&man, &kf);
+        // Module-0 P_i top eigenvector = e0 (eigenvalue 9).
+        let pi = Matrix::from_vec(2, 3, flat[0..6].to_vec());
+        assert!((pi.at(0, 0).abs() - 1.0).abs() < 1e-4, "{:?}", pi.data);
+        assert!(pi.at(0, 1).abs() < 1e-4);
+        // Second row = e1 (eigenvalue 1).
+        assert!((pi.at(1, 1).abs() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ekfac_kron_eigenvalues_and_precondition() {
+        let man = toy_manifest();
+        let mut kf = KfacFactors::new(&man);
+        let mut cov = vec![0.0f32; man.cov_len];
+        // Diagonal factors so eigenbases are axis-aligned.
+        for (i, v) in [3.0, 2.0, 1.0].iter().enumerate() {
+            cov[i * 4] = *v; // C_F diag at (i,i): index i*3+i = i*4
+        }
+        for i in 0..4 {
+            cov[9 + i * 5] = (4 - i) as f32; // C_B diag 4,3,2,1
+        }
+        let off1 = man.modules[1].cov_off;
+        for i in 0..4 {
+            cov[off1 + i * 5] = 1.0;
+        }
+        for i in 0..2 {
+            cov[off1 + 16 + i * 3] = 1.0;
+        }
+        kf.accumulate(&man, &cov, 1).unwrap();
+        let ek = Ekfac::from_kfac(&man, &kf);
+        // λ(o=0, i=0) = λ_B max * λ_F max = 4 * 3 = 12.
+        assert!((ek.lambda[0] - 12.0).abs() < 1e-3, "{}", ek.lambda[0]);
+        // Preconditioning divides by λ + damp.
+        let g = vec![1.0f32; man.k_full];
+        let pg = ek.precondition(&man, &g);
+        assert!(pg[0] < pg[11], "larger eigenvalue entries shrink more");
+    }
+
+    #[test]
+    fn ekfac_corrected_fit_replaces_lambda() {
+        let man = toy_manifest();
+        let mut kf = KfacFactors::new(&man);
+        let mut cov = vec![0.0f32; man.cov_len];
+        for i in 0..3 {
+            cov[i * 4] = 1.0;
+        }
+        for i in 0..4 {
+            cov[9 + i * 5] = 1.0;
+        }
+        let off1 = man.modules[1].cov_off;
+        for i in 0..4 {
+            cov[off1 + i * 5] = 1.0;
+        }
+        for i in 0..2 {
+            cov[off1 + 16 + i * 3] = 1.0;
+        }
+        kf.accumulate(&man, &cov, 1).unwrap();
+        let mut ek = Ekfac::from_kfac(&man, &kf);
+        // Rotated grads with known second moments: g_j = sqrt(j).
+        let row: Vec<f32> = (0..man.k_full).map(|j| (j as f32).sqrt()).collect();
+        ek.accumulate_corrected(&row, 1, man.k_full);
+        ek.finish_corrected(&man);
+        for j in 0..man.k_full {
+            assert!((ek.lambda[j] - j as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cov_len_mismatch_rejected() {
+        let man = toy_manifest();
+        let mut kf = KfacFactors::new(&man);
+        assert!(kf.accumulate(&man, &[0.0; 3], 1).is_err());
+    }
+}

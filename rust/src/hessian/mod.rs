@@ -1,0 +1,8 @@
+//! Hessian service: raw projected Fisher blocks + damped iHVP (LoGra),
+//! KFAC factor fitting + PCA initialization (§3.2), EKFAC baseline state.
+
+pub mod block;
+pub mod kfac;
+
+pub use block::{BlockHessian, PrecondBlock, Preconditioner};
+pub use kfac::{pack_projections, pca_projections, random_projections, Ekfac, KfacFactors};

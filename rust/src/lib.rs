@@ -1,0 +1,19 @@
+//! LoGra: LLM-scale data valuation with influence functions.
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of Choe et al.,
+//! "What is Your Data Worth to GPT?" (NeurIPS 2025). See DESIGN.md for the
+//! system inventory and experiment index.
+
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod runtime;
+pub mod store;
+pub mod hessian;
+pub mod model;
+pub mod util;
+pub mod valuation;

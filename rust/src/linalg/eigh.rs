@@ -1,0 +1,225 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! The Hessian service needs eigh three ways: (1) damped iHVP in the
+//! projected space (Lemma 1's spectral form), (2) KFAC factor eigenbases
+//! for the LoGra-PCA initialization (§3.2), (3) the EKFAC baseline's
+//! rotation. Matrix sizes here are ≤ ~1k, where Jacobi is simple, robust
+//! and accurate (it converges quadratically and keeps eigenvectors
+//! orthogonal by construction). f64 accumulation internally; f32 I/O.
+
+use crate::linalg::matrix::Matrix;
+
+/// Eigendecomposition result: `a == q * diag(lambda) * q^T`, eigenvalues
+/// ascending, eigenvectors as COLUMNS of `q`.
+pub struct Eigh {
+    pub eigenvalues: Vec<f32>,
+    /// Column-eigenvector matrix, row-major [n, n]: `q[r*n + c]` is the
+    /// r-th component of the c-th eigenvector.
+    pub q: Matrix,
+}
+
+impl Eigh {
+    /// The k eigenvectors with LARGEST eigenvalues, as rows [k, n]
+    /// (exactly the LoGra-PCA `P` layout: projection = P @ x).
+    pub fn top_k_rows(&self, k: usize) -> Matrix {
+        let n = self.q.rows;
+        assert!(k <= n);
+        let mut p = Matrix::zeros(k, n);
+        for i in 0..k {
+            let col = n - 1 - i; // ascending order -> take from the back
+            for r in 0..n {
+                p.data[i * n + r] = self.q.at(r, col);
+            }
+        }
+        p
+    }
+}
+
+/// Cyclic Jacobi with threshold sweeps. `a` must be symmetric.
+pub fn eigh(a: &Matrix) -> Eigh {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    // Work in f64: Jacobi's accuracy advantage is lost in f32 for n ~ 1k.
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    // Symmetrize defensively (accumulation order upstream may skew ulps).
+    for r in 0..n {
+        for c in (r + 1)..n {
+            let avg = 0.5 * (m[r * n + c] + m[c * n + r]);
+            m[r * n + c] = avg;
+            m[c * n + r] = avg;
+        }
+    }
+    let mut q = vec![0.0f64; n * n];
+    for i in 0..n {
+        q[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for r in 0..n {
+            for c in (r + 1)..n {
+                off += m[r * n + c] * m[r * n + c];
+            }
+        }
+        if off.sqrt() < 1e-11 * (1.0 + frob(&m, n)) {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apr = m[p * n + r];
+                if apr.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let arr = m[r * n + r];
+                // Rotation angle.
+                let tau = (arr - app) / (2.0 * apr);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation G(p, r, theta) on both sides.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkr = m[k * n + r];
+                    m[k * n + p] = c * mkp - s * mkr;
+                    m[k * n + r] = s * mkp + c * mkr;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mrk = m[r * n + k];
+                    m[p * n + k] = c * mpk - s * mrk;
+                    m[r * n + k] = s * mpk + c * mrk;
+                }
+                for k in 0..n {
+                    let qkp = q[k * n + p];
+                    let qkr = q[k * n + r];
+                    q[k * n + p] = c * qkp - s * qkr;
+                    q[k * n + r] = s * qkp + c * qkr;
+                }
+            }
+        }
+    }
+
+    // Extract and sort ascending.
+    let mut pairs: Vec<(f64, usize)> =
+        (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut eigenvalues = Vec::with_capacity(n);
+    let mut qm = Matrix::zeros(n, n);
+    for (dst, &(val, src)) in pairs.iter().enumerate() {
+        eigenvalues.push(val as f32);
+        for r in 0..n {
+            qm.data[r * n + dst] = q[r * n + src] as f32;
+        }
+    }
+    Eigh { eigenvalues, q: qm }
+}
+
+fn frob(m: &[f64], n: usize) -> f64 {
+    m.iter().take(n * n).map(|x| x * x).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_symmetric(rng: &mut Pcg32, n: usize) -> Matrix {
+        let a = Matrix::random_normal(rng, n, n, 1.0);
+        let mut s = Matrix::zeros(n, n);
+        for r in 0..n {
+            for c in 0..n {
+                s.data[r * n + c] = 0.5 * (a.at(r, c) + a.at(c, r));
+            }
+        }
+        s
+    }
+
+    fn reconstruct(e: &Eigh) -> Matrix {
+        let n = e.q.rows;
+        let mut out = Matrix::zeros(n, n);
+        for i in 0..n {
+            let lam = e.eigenvalues[i];
+            for r in 0..n {
+                for c in 0..n {
+                    out.data[r * n + c] += lam * e.q.at(r, i) * e.q.at(c, i);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [1, 2, 3, 8, 33, 64] {
+            let a = random_symmetric(&mut rng, n);
+            let e = eigh(&a);
+            let rec = reconstruct(&e);
+            let scale = a.fro_norm().max(1.0);
+            assert!(
+                a.max_abs_diff(&rec) < 2e-5 * scale,
+                "n={n}: {}",
+                a.max_abs_diff(&rec)
+            );
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Pcg32::seeded(2);
+        let a = random_symmetric(&mut rng, 24);
+        let e = eigh(&a);
+        let qtq = e.q.transpose().matmul(&e.q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(24)) < 1e-4);
+    }
+
+    #[test]
+    fn eigenvalues_ascending_and_known_case() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1, 3.
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = eigh(&a);
+        assert!((e.eigenvalues[0] - 1.0).abs() < 1e-5);
+        assert!((e.eigenvalues[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn diagonal_matrix_is_fixed_point() {
+        let mut d = Matrix::zeros(4, 4);
+        for (i, v) in [4.0, -1.0, 2.5, 0.0].iter().enumerate() {
+            d.data[i * 4 + i] = *v;
+        }
+        let e = eigh(&d);
+        let mut want = vec![-1.0, 0.0, 2.5, 4.0];
+        for (got, want) in e.eigenvalues.iter().zip(want.drain(..)) {
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn top_k_rows_extracts_largest() {
+        let mut d = Matrix::zeros(3, 3);
+        d.data[0] = 1.0;
+        d.data[4] = 5.0;
+        d.data[8] = 3.0;
+        let e = eigh(&d);
+        let p = e.top_k_rows(1);
+        // Largest eigenvalue 5 has eigenvector e_1.
+        assert!((p.at(0, 1).abs() - 1.0).abs() < 1e-5);
+        assert!(p.at(0, 0).abs() < 1e-5 && p.at(0, 2).abs() < 1e-5);
+    }
+
+    #[test]
+    fn psd_gram_matrix_nonnegative() {
+        let mut rng = Pcg32::seeded(3);
+        let b = Matrix::random_normal(&mut rng, 10, 6, 1.0);
+        let g = b.transpose().matmul(&b); // PSD 6x6
+        let e = eigh(&g);
+        assert!(e.eigenvalues.iter().all(|&l| l > -1e-4));
+    }
+}

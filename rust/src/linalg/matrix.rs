@@ -1,0 +1,308 @@
+//! Dense row-major f32 matrix with the handful of BLAS-level ops the
+//! coordinator needs host-side (Hessian blocks, projections, baselines).
+//!
+//! Heavy lifting (per-sample projection, scoring) happens inside the AOT
+//! HLO programs; this type covers the small K×K / n×n work around them
+//! (accumulation, eigendecomposition inputs, PCA initialization).
+
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn random_normal(rng: &mut Pcg32, rows: usize, cols: usize, sigma: f32) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.at(r, c);
+            }
+        }
+        t
+    }
+
+    /// C = self * other.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        // ikj loop order: streams `other` rows, vectorizes the inner axis.
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = self * other^T (the scoring shape: [m,k] x [n,k] -> [m,n]).
+    pub fn matmul_t(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                let brow = other.row(j);
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                out.data[i * other.rows + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// y = self * x  for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// self += alpha * x x^T (rank-1 symmetric update).
+    pub fn syr(&mut self, alpha: f32, x: &[f32]) {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(x.len(), self.rows);
+        for r in 0..self.rows {
+            let xr = alpha * x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (o, &xc) in row.iter_mut().zip(x) {
+                *o += xr * xc;
+            }
+        }
+    }
+
+    /// self += alpha * other (same shape).
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Max |a - b| across entries.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Rows orthonormalized in place via modified Gram–Schmidt
+    /// (random-projection init for LoGra-random / TRAK).
+    pub fn orthonormalize_rows(&mut self) {
+        for i in 0..self.rows {
+            for j in 0..i {
+                let dot: f32 = {
+                    let (a, b) = (self.row_slice(i), self.row_slice(j));
+                    a.iter().zip(b).map(|(x, y)| x * y).sum()
+                };
+                let cols = self.cols;
+                for c in 0..cols {
+                    let v = self.data[j * cols + c];
+                    self.data[i * cols + c] -= dot * v;
+                }
+            }
+            let norm: f32 =
+                self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-20);
+            for c in 0..self.cols {
+                self.data[i * self.cols + c] /= norm;
+            }
+        }
+    }
+
+    fn row_slice(&self, r: usize) -> Vec<f32> {
+        self.row(r).to_vec()
+    }
+}
+
+/// `out = A B^T` over raw row-major slices (no intermediate copies) —
+/// the scoring fallback's hot loop. A is [m, k], B is [n, k].
+pub fn matmul_t_slices(a: &[f32], m: usize, b: &[f32], n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity (0 when either vector is ~zero).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na < 1e-20 || nb < 1e-20 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul() {
+        let mut rng = Pcg32::seeded(1);
+        let a = Matrix::random_normal(&mut rng, 5, 7, 1.0);
+        let b = Matrix::random_normal(&mut rng, 4, 7, 1.0);
+        let got = a.matmul_t(&b);
+        let want = a.matmul(&b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Matrix::random_normal(&mut rng, 4, 4, 1.0);
+        assert!(a.matmul(&Matrix::identity(4)).max_abs_diff(&a) < 1e-7);
+        assert!(Matrix::identity(4).matmul(&a).max_abs_diff(&a) < 1e-7);
+    }
+
+    #[test]
+    fn syr_accumulates_outer_product() {
+        let mut m = Matrix::zeros(3, 3);
+        m.syr(2.0, &[1.0, 0.0, -1.0]);
+        assert_eq!(m.at(0, 0), 2.0);
+        assert_eq!(m.at(0, 2), -2.0);
+        assert_eq!(m.at(2, 2), 2.0);
+        assert_eq!(m.at(1, 1), 0.0);
+    }
+
+    #[test]
+    fn orthonormalize_rows_gives_orthonormal() {
+        let mut rng = Pcg32::seeded(3);
+        let mut m = Matrix::random_normal(&mut rng, 4, 16, 1.0);
+        m.orthonormalize_rows();
+        for i in 0..4 {
+            for j in 0..4 {
+                let d = dot(m.row(i), m.row(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-4, "({i},{j}) -> {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+        let b = [-1.0f32, -2.0, -3.0];
+        assert!((cosine(&a, &b) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&a, &[0.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg32::seeded(4);
+        let a = Matrix::random_normal(&mut rng, 6, 3, 1.0);
+        let x = vec![1.0f32, -2.0, 0.5];
+        let y = a.matvec(&x);
+        let xm = Matrix::from_vec(3, 1, x);
+        let want = a.matmul(&xm);
+        for i in 0..6 {
+            assert!((y[i] - want.data[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Host-side dense linear algebra: the K×K / n×n work around the AOT HLO
+//! programs (Hessian blocks, eigendecompositions, SPD solves, PCA init).
+
+pub mod eigh;
+pub mod matrix;
+pub mod solve;
+
+pub use eigh::{eigh, Eigh};
+pub use matrix::{cosine, dot, norm, Matrix};
+pub use solve::{cholesky, solve_spd};

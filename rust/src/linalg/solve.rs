@@ -1,0 +1,120 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Used for damped iHVP solves where the eigen-route is unnecessary, and
+//! as an independent cross-check of the eigh-based inverse in tests.
+
+use crate::linalg::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor of an SPD matrix. Returns None if the
+/// matrix is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(Matrix::from_vec(n, n, l.iter().map(|&x| x as f32).collect()))
+}
+
+/// Solve `a x = b` for SPD `a` via Cholesky. None if not SPD.
+pub fn solve_spd(a: &Matrix, b: &[f32]) -> Option<Vec<f32>> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // Forward substitution: L y = b.
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.at(i, k) as f64 * y[k];
+        }
+        y[i] = sum / l.at(i, i) as f64;
+    }
+    // Back substitution: L^T x = y.
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l.at(k, i) as f64 * x[k];
+        }
+        x[i] = sum / l.at(i, i) as f64;
+    }
+    Some(x.iter().map(|&v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::dot;
+    use crate::util::rng::Pcg32;
+
+    fn random_spd(rng: &mut Pcg32, n: usize) -> Matrix {
+        let b = Matrix::random_normal(rng, n + 3, n, 1.0);
+        let mut g = b.transpose().matmul(&b);
+        for i in 0..n {
+            *g.at_mut(i, i) += 0.1; // damping
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [1, 2, 5, 16, 40] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky(&a).expect("SPD");
+            let rec = l.matmul(&l.transpose());
+            assert!(a.max_abs_diff(&rec) < 1e-3 * a.fro_norm().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_spd_residual_small() {
+        let mut rng = Pcg32::seeded(2);
+        let n = 24;
+        let a = random_spd(&mut rng, n);
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let x = solve_spd(&a, &b).expect("SPD");
+        let ax = a.matvec(&x);
+        let resid: f32 = ax.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum::<f32>().sqrt();
+        let bnorm = dot(&b, &b).sqrt();
+        assert!(resid < 1e-3 * bnorm.max(1.0), "resid={resid}");
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_matches_eigh_inverse() {
+        use crate::linalg::eigh::eigh;
+        let mut rng = Pcg32::seeded(3);
+        let n = 12;
+        let a = random_spd(&mut rng, n);
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let x_chol = solve_spd(&a, &b).unwrap();
+        // Eigen route: x = Q diag(1/l) Q^T b.
+        let e = eigh(&a);
+        let qtb = e.q.transpose().matvec(&b);
+        let scaled: Vec<f32> = qtb.iter().zip(&e.eigenvalues).map(|(v, l)| v / l).collect();
+        let x_eig = e.q.matvec(&scaled);
+        for (p, q) in x_chol.iter().zip(&x_eig) {
+            assert!((p - q).abs() < 2e-3, "{p} vs {q}");
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! `logra` — CLI launcher for the data-valuation system.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §3):
+//!   info         inspect an artifact manifest
+//!   fig4         counterfactual accuracy (brittleness + LDS)
+//!   table1       LoGra vs EKFAC efficiency
+//!   qualitative  Fig-5-style top-valued-document inspection
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use logra::cli::{self, FlagSpec};
+use logra::eval::fig4::{render_markdown, run_fig4, Fig4Scale};
+use logra::eval::qualitative::{render as render_qual, run_qualitative};
+use logra::eval::table1::{run_table1, TABLE1_HEADER};
+use logra::eval::{BrittlenessConfig, LdsConfig};
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("info", "print an artifact manifest summary"),
+    ("fig4", "run brittleness + LDS counterfactual evals"),
+    ("table1", "run the LoGra vs EKFAC efficiency comparison"),
+    ("qualitative", "train, log, and inspect top-valued documents"),
+];
+
+const FLAGS: &[FlagSpec] = &[
+    FlagSpec { name: "config", help: "config name (e.g. lm_tiny)", takes_value: true, default: Some("lm_tiny") },
+    FlagSpec { name: "n-train", help: "training examples", takes_value: true, default: None },
+    FlagSpec { name: "n-test", help: "test examples", takes_value: true, default: None },
+    FlagSpec { name: "subsets", help: "LDS subsets", takes_value: true, default: None },
+    FlagSpec { name: "epochs", help: "(re)train epochs", takes_value: true, default: None },
+    FlagSpec { name: "methods", help: "comma list of methods", takes_value: true, default: None },
+    FlagSpec { name: "part", help: "fig4 part: both|brittleness|lds", takes_value: true, default: Some("both") },
+    FlagSpec { name: "removals", help: "brittleness ks, comma list", takes_value: true, default: None },
+    FlagSpec { name: "topk", help: "retrieval depth", takes_value: true, default: Some("5") },
+];
+
+/// Repo root: the directory holding `artifacts/` (cwd, else build-time).
+fn repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_default();
+    if cwd.join("artifacts").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let value_flags: Vec<&str> =
+        FLAGS.iter().filter(|f| f.takes_value).map(|f| f.name).collect();
+    let args = cli::parse(&argv, &value_flags)?;
+    if args.subcommand.is_empty() || args.has_switch("help") {
+        print!("{}", cli::usage("logra", SUBCOMMANDS, FLAGS));
+        return Ok(());
+    }
+    let root = repo_root();
+    let config = args.flag_or("config", "lm_tiny");
+
+    match args.subcommand.as_str() {
+        "info" => {
+            let man = logra::runtime::Manifest::load(&root.join("artifacts").join(&config))?;
+            println!(
+                "{} ({}) — n_params={}, K={} ({} modules x {}x{}), K_full={}",
+                man.name,
+                man.kind,
+                man.n_params,
+                man.k_total,
+                man.modules.len(),
+                man.k_out,
+                man.k_in,
+                man.k_full
+            );
+            println!("entries: {}", man.entries.join(", "));
+            for m in &man.modules {
+                println!("  module {:<12} {}x{} -> block {}", m.name, m.n_out, m.n_in, m.g_len);
+            }
+            Ok(())
+        }
+        "fig4" => {
+            let mut scale = Fig4Scale::default();
+            scale.n_train = args.usize_or("n-train", scale.n_train)?;
+            scale.n_test = args.usize_or("n-test", scale.n_test)?;
+            if let Some(ms) = args.flag("methods") {
+                scale.methods = ms.split(',').map(str::to_string).collect();
+            }
+            let epochs = args.usize_or("epochs", 4)?;
+            scale.base_epochs = epochs;
+            scale.brittle = BrittlenessConfig { epochs, ..Default::default() };
+            if let Some(ks) = args.flag("removals") {
+                scale.brittle.removal_counts = ks
+                    .split(',')
+                    .map(|s| s.parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()?;
+            }
+            scale.lds = LdsConfig {
+                n_subsets: args.usize_or("subsets", 16)?,
+                epochs,
+                ..Default::default()
+            };
+            match args.flag_or("part", "both").as_str() {
+                "brittleness" => scale.run_lds = false,
+                "lds" => scale.run_brittleness = false,
+                _ => {}
+            }
+            let configs: Vec<String> = if config == "all" {
+                vec!["mlp_fmnist".into(), "mlp_cifar".into(), "lm_wikitext".into()]
+            } else {
+                vec![config]
+            };
+            for c in configs {
+                let out = run_fig4(&root, &c, &scale)?;
+                println!("\n{}", render_markdown(&out));
+            }
+            Ok(())
+        }
+        "table1" => {
+            let n_train = args.usize_or("n-train", 512)?;
+            let n_test = args.usize_or("n-test", 8)?;
+            let rows = run_table1(&root, &config, n_train, n_test, 8)?;
+            println!("{TABLE1_HEADER}");
+            for r in &rows {
+                println!("{}", r.render());
+            }
+            Ok(())
+        }
+        "qualitative" => {
+            let n_train = args.usize_or("n-train", 512)?;
+            let topk = args.usize_or("topk", 5)?;
+            let epochs = args.usize_or("epochs", 6)?;
+            let out = run_qualitative(&root, &config, n_train, 8, topk, epochs)?;
+            println!("{}", render_qual(&out));
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}; try --help")),
+    }
+}

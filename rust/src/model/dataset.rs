@@ -1,0 +1,129 @@
+//! Unified dataset/batch view over the LM corpus and the image sets, so
+//! the coordinator, eval harness and baselines are generic in the model
+//! kind. A [`Batch`] knows how to render itself as the artifact-call
+//! literals that follow the flat (params, [proj,] *batch) convention.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::data::{
+    image_batches, token_batches, Corpus, ImageBatch, ImageSet, TokenBatch,
+};
+use crate::runtime::literal::{f32_lit, i32_lit};
+use crate::runtime::Manifest;
+
+/// A dataset of either LM documents or labelled images.
+pub enum Dataset<'a> {
+    Lm(&'a Corpus),
+    Mlp(&'a ImageSet),
+}
+
+impl<'a> Dataset<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            Dataset::Lm(c) => c.docs.len(),
+            Dataset::Mlp(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fixed-shape batches over `indices` (pad rows repeat; `real` marks
+    /// genuine rows).
+    pub fn batches(&self, indices: &[usize], batch: usize) -> Vec<Batch> {
+        match self {
+            Dataset::Lm(c) => token_batches(c, indices, batch)
+                .into_iter()
+                .map(Batch::Tok)
+                .collect(),
+            Dataset::Mlp(s) => image_batches(s, indices, batch)
+                .into_iter()
+                .map(Batch::Img)
+                .collect(),
+        }
+    }
+
+    /// Batches over the full dataset in index order.
+    pub fn all_batches(&self, batch: usize) -> Vec<Batch> {
+        let idx: Vec<usize> = (0..self.len()).collect();
+        self.batches(&idx, batch)
+    }
+
+    /// Tokens per example (LM: seq_len; MLP: 1) — throughput accounting.
+    pub fn tokens_per_example(&self) -> usize {
+        match self {
+            Dataset::Lm(c) => c.seq_len,
+            Dataset::Mlp(_) => 1,
+        }
+    }
+}
+
+/// One fixed-shape batch of either kind.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    Tok(TokenBatch),
+    Img(ImageBatch),
+}
+
+impl Batch {
+    pub fn ids(&self) -> &[u64] {
+        match self {
+            Batch::Tok(b) => &b.ids,
+            Batch::Img(b) => &b.ids,
+        }
+    }
+
+    pub fn real(&self) -> usize {
+        match self {
+            Batch::Tok(b) => b.real,
+            Batch::Img(b) => b.real,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.ids().len()
+    }
+
+    /// The batch literals in artifact order (LM: tokens; MLP: images,
+    /// labels). `man` supplies the static shapes to validate against.
+    pub fn literals(&self, man: &Manifest) -> Result<Vec<Literal>> {
+        match self {
+            Batch::Tok(b) => {
+                let bsz = b.ids.len();
+                Ok(vec![i32_lit(&[bsz, man.seq_len], &b.tokens)?])
+            }
+            Batch::Img(b) => {
+                let bsz = b.ids.len();
+                Ok(vec![
+                    f32_lit(&[bsz, man.input_dim], &b.features)?,
+                    i32_lit(&[bsz], &b.labels)?,
+                ])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusSpec, ImageSpec};
+
+    #[test]
+    fn dataset_len_and_batches() {
+        let c = crate::data::corpus::generate(CorpusSpec::new(256, 16, 33, 1));
+        let ds = Dataset::Lm(&c);
+        assert_eq!(ds.len(), 33);
+        let batches = ds.all_batches(8);
+        assert_eq!(batches.len(), 5);
+        assert_eq!(batches[4].real(), 1);
+        assert_eq!(ds.tokens_per_example(), 16);
+
+        let imgs = crate::data::images::generate(ImageSpec::fmnist_like(12, 3, 10, 2));
+        let ds2 = Dataset::Mlp(&imgs);
+        assert_eq!(ds2.len(), 10);
+        assert_eq!(ds2.tokens_per_example(), 1);
+        assert_eq!(ds2.all_batches(4).len(), 3);
+    }
+}

@@ -1,0 +1,91 @@
+//! Autoregressive sampling through the `logits` artifact (LM only).
+//!
+//! The qualitative experiment (Fig. 5) queries the valuation system with
+//! MODEL OUTPUTS, so the coordinator needs generation. The artifact is
+//! closed over [1, seq_len]; causality makes positions ≥ current length
+//! irrelevant, so we run the full window each step and read the logits at
+//! the frontier — O(T) executions per sequence, fine at this scale.
+
+use anyhow::Result;
+
+use crate::runtime::literal::{f32_lit, i32_lit, to_f32_vec};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+
+/// Sample a continuation of `prompt` up to the artifact's seq_len.
+/// `temperature` 0 = greedy.
+pub fn generate(
+    rt: &Runtime,
+    params: &[f32],
+    prompt: &[i32],
+    temperature: f32,
+    rng: &mut Pcg32,
+) -> Result<Vec<i32>> {
+    let man = &rt.manifest;
+    anyhow::ensure!(man.is_lm(), "generate needs an LM artifact");
+    let t = man.seq_len;
+    let v = man.vocab;
+    anyhow::ensure!(!prompt.is_empty() && prompt.len() <= t, "bad prompt length");
+    let params_lit = f32_lit(&[man.n_params], params)?;
+    let mut tokens = vec![0i32; t];
+    tokens[..prompt.len()].copy_from_slice(prompt);
+    let mut len = prompt.len();
+    while len < t {
+        let tok_lit = i32_lit(&[1, t], &tokens)?;
+        let out = rt.run_ref("logits", &[&params_lit, &tok_lit])?;
+        let logits = to_f32_vec(&out[0])?; // [1, T, V]
+        let row = &logits[(len - 1) * v..len * v];
+        let next = if temperature <= 0.0 {
+            argmax(row)
+        } else {
+            sample_softmax(row, temperature, rng)
+        };
+        tokens[len] = next as i32;
+        len += 1;
+    }
+    Ok(tokens)
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+fn sample_softmax(row: &[f32], temperature: f32, rng: &mut Pcg32) -> usize {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut cdf = Vec::with_capacity(row.len());
+    let mut acc = 0.0f64;
+    for &l in row {
+        acc += (((l - max) / temperature) as f64).exp();
+        cdf.push(acc);
+    }
+    rng.categorical_cdf(&cdf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_sampling_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        let mut rng = Pcg32::seeded(1);
+        // Near-zero temperature concentrates on the max.
+        let mut hits = 0;
+        for _ in 0..50 {
+            if sample_softmax(&[0.0, 10.0, 0.0], 0.05, &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 49);
+        // High temperature spreads out.
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            seen.insert(sample_softmax(&[0.0, 1.0, 0.5], 10.0, &mut rng));
+        }
+        assert!(seen.len() >= 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Host-side model driver: parameter/optimizer state and the training /
+//! evaluation loops that repeatedly invoke the `train_step` / `eval_loss`
+//! artifacts. All numerics stay inside the AOT HLO programs; this layer
+//! only shuttles flat vectors.
+
+pub mod dataset;
+pub mod generate;
+pub mod trainer;
+
+pub use dataset::{Batch, Dataset};
+pub use trainer::{ModelState, Trainer};

@@ -1,0 +1,149 @@
+//! Training / evaluation loops over the AOT `train_step` / `eval_loss`
+//! artifacts. Used by the end-to-end example and (heavily) by the
+//! counterfactual eval harness, which retrains models hundreds of times.
+
+use anyhow::Result;
+
+use crate::model::dataset::{Batch, Dataset};
+use crate::runtime::literal::{
+    f32_lit, i32_scalar, to_f32_scalar, to_f32_vec, to_i32_scalar, u32_scalar,
+};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+
+/// Flat model + optimizer state (mirrors the artifact calling convention).
+#[derive(Clone)]
+pub struct ModelState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl ModelState {
+    pub fn n(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// Training/eval driver bound to one artifact runtime.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Trainer { rt }
+    }
+
+    /// Fresh parameters from the `init(seed)` artifact.
+    pub fn init(&self, seed: u32) -> Result<ModelState> {
+        let out = self.rt.run("init", &[u32_scalar(seed)])?;
+        let params = to_f32_vec(&out[0])?;
+        let n = params.len();
+        Ok(ModelState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 })
+    }
+
+    /// One optimizer step on a batch; returns the mean batch loss.
+    pub fn step(&self, st: &mut ModelState, batch: &Batch) -> Result<f32> {
+        let man = &self.rt.manifest;
+        let n = st.n();
+        let mut args = vec![
+            f32_lit(&[n], &st.params)?,
+            f32_lit(&[n], &st.m)?,
+            f32_lit(&[n], &st.v)?,
+            i32_scalar(st.step),
+        ];
+        args.extend(batch.literals(man)?);
+        let out = self.rt.run("train_step", &args)?;
+        st.params = to_f32_vec(&out[0])?;
+        st.m = to_f32_vec(&out[1])?;
+        st.v = to_f32_vec(&out[2])?;
+        st.step = to_i32_scalar(&out[3])?;
+        to_f32_scalar(&out[4]).map_err(Into::into)
+    }
+
+    /// Train for `epochs` shuffled epochs over `indices`; returns the mean
+    /// loss per epoch.
+    pub fn train(
+        &self,
+        st: &mut ModelState,
+        ds: &Dataset,
+        indices: &[usize],
+        epochs: usize,
+        rng: &mut Pcg32,
+    ) -> Result<Vec<f32>> {
+        let man = &self.rt.manifest;
+        let mut epoch_losses = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            let mut order = indices.to_vec();
+            rng.shuffle(&mut order);
+            let mut total = 0.0f64;
+            let mut nb = 0usize;
+            for batch in ds.batches(&order, man.train_batch) {
+                total += self.step(st, &batch)? as f64;
+                nb += 1;
+            }
+            epoch_losses.push((total / nb.max(1) as f64) as f32);
+        }
+        Ok(epoch_losses)
+    }
+
+    /// Per-example losses (and logits for MLP) over `indices`.
+    /// Returns (losses, logits_flat_or_empty).
+    pub fn eval(
+        &self,
+        st: &ModelState,
+        ds: &Dataset,
+        indices: &[usize],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let man = &self.rt.manifest;
+        let n = st.n();
+        let mut losses = Vec::with_capacity(indices.len());
+        let mut logits = Vec::new();
+        for batch in ds.batches(indices, man.log_batch) {
+            let mut args = vec![f32_lit(&[n], &st.params)?];
+            args.extend(batch.literals(man)?);
+            let out = self.rt.run("eval_loss", &args)?;
+            let l = to_f32_vec(&out[0])?;
+            losses.extend_from_slice(&l[..batch.real()]);
+            if out.len() > 1 {
+                let lg = to_f32_vec(&out[1])?;
+                let c = lg.len() / batch.size();
+                logits.extend_from_slice(&lg[..batch.real() * c]);
+            }
+        }
+        Ok((losses, logits))
+    }
+
+    /// Mean eval loss over `indices`.
+    pub fn mean_loss(&self, st: &ModelState, ds: &Dataset, indices: &[usize]) -> Result<f64> {
+        let (losses, _) = self.eval(st, ds, indices)?;
+        Ok(crate::util::stats::mean(
+            &losses.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        ))
+    }
+
+    /// Predicted classes for an MLP model over `indices`.
+    pub fn predictions(
+        &self,
+        st: &ModelState,
+        ds: &Dataset,
+        indices: &[usize],
+    ) -> Result<Vec<i32>> {
+        let man = &self.rt.manifest;
+        let (_, logits) = self.eval(st, ds, indices)?;
+        let c = man.classes;
+        assert!(c > 0, "predictions need an MLP artifact");
+        Ok(logits
+            .chunks(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32
+            })
+            .collect())
+    }
+}

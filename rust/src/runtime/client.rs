@@ -1,0 +1,107 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Mirrors `/opt/xla-example/load_hlo`: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! Executables are cached per entry name; every program returns a tuple
+//! (aot.py lowers with `return_tuple=True`) which `run` flattens.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+
+/// A compiled artifact directory: one PJRT client + lazily compiled
+/// executables for each entry point.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// Cumulative executions per entry (metrics / tests).
+    calls: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Open `artifacts/<name>` relative to the repo root.
+    pub fn open_named(root: &Path, name: &str) -> Result<Self> {
+        Self::open(&root.join("artifacts").join(name))
+    }
+
+    /// Compile (or fetch from cache) an entry point.
+    pub fn executable(&self, entry: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(entry) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{entry}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {entry}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(entry.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry with literal inputs; returns the flattened tuple
+    /// of output literals. Prefer [`Runtime::run_ref`] on hot paths —
+    /// this convenience wrapper borrows internally, so both avoid deep
+    /// literal copies, but `run_ref` lets callers reuse long-lived
+    /// literals (parameters, projections) across calls without cloning.
+    pub fn run(&self, entry: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let refs: Vec<&Literal> = args.iter().collect();
+        self.run_ref(entry, &refs)
+    }
+
+    /// Execute with borrowed inputs (no `Literal::clone`, which is a deep
+    /// C++-side copy — §Perf log in EXPERIMENTS.md).
+    pub fn run_ref(&self, entry: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(entry).with_context(|| entry.to_string())?;
+        let out = exe
+            .execute::<&Literal>(args)
+            .map_err(|e| anyhow!("execute {entry}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {entry}: {e:?}"))?;
+        *self.calls.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
+        Ok(lit.to_tuple().map_err(|e| anyhow!("untuple {entry}: {e:?}"))?)
+    }
+
+    /// Number of `run` calls per entry so far.
+    pub fn call_count(&self, entry: &str) -> u64 {
+        self.calls.borrow().get(entry).copied().unwrap_or(0)
+    }
+
+    /// Warm the executable cache for a set of entries (pays the one-time
+    /// XLA compile cost up front, outside timed regions).
+    pub fn warmup(&self, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            self.executable(e)?;
+        }
+        Ok(())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}

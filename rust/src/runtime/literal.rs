@@ -1,0 +1,87 @@
+//! Literal construction/extraction helpers over the `xla` crate.
+//!
+//! The AOT calling convention is flat f32 vectors + integer token/label
+//! tensors; these helpers build such literals from slices without
+//! intermediate copies beyond the one host->literal transfer.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+/// f32 literal with the given dims from a host slice (row-major).
+pub fn f32_lit(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("f32_lit: {dims:?} needs {n} values, got {}", data.len()));
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
+}
+
+/// i32 literal with the given dims.
+pub fn i32_lit(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("i32_lit: {dims:?} needs {n} values, got {}", data.len()));
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)?)
+}
+
+/// u32 scalar literal (the init seed).
+pub fn u32_scalar(v: u32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// i32 scalar literal (the train step counter).
+pub fn i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Extract a literal into a f32 vec (converting if needed).
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract scalar f32.
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Extract scalar i32.
+pub fn to_i32_scalar(lit: &Literal) -> Result<i32> {
+    Ok(lit.get_first_element::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = f32_lit(&[2, 3], &data).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3];
+        let lit = i32_lit(&[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_lit(&[2, 2], &[1.0, 2.0]).is_err());
+        assert!(i32_lit(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(to_i32_scalar(&i32_scalar(-7)).unwrap(), -7);
+        assert_eq!(u32_scalar(5).get_first_element::<u32>().unwrap(), 5);
+    }
+}

@@ -1,0 +1,297 @@
+//! Artifact manifest parser.
+//!
+//! `python/compile/aot.py` writes `manifest.txt` next to the HLO programs;
+//! it records every layout convention the coordinator relies on: the flat
+//! parameter table, the LoGra module table with gradient-block /
+//! projection-vector / covariance offsets, and the batch shapes each
+//! entry point was closed over.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// One LoGra-instrumented module (linear layer) as recorded by aot.py.
+#[derive(Clone, Debug)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Offset/length of this module's block in a projected gradient row.
+    pub g_off: usize,
+    pub g_len: usize,
+    /// Offset/length in a full-rank (EKFAC) gradient row.
+    pub gfull_off: usize,
+    pub gfull_len: usize,
+    /// Offset of this module's (P_i, P_o) pair in the flat projection vec.
+    pub p_off: usize,
+    /// Offset in the full-rank projection vec.
+    pub pfull_off: usize,
+    /// Offset of this module's (C_F, C_B) pair in the flat covariance vec.
+    pub cov_off: usize,
+}
+
+/// One named parameter tensor in the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub off: usize,
+    pub shape: Vec<usize>,
+}
+
+impl ParamInfo {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest for one artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String, // "lm" | "mlp"
+    pub n_params: usize,
+    pub k_in: usize,
+    pub k_out: usize,
+    pub k_total: usize,
+    pub k_full: usize,
+    pub proj_len: usize,
+    pub proj_len_full: usize,
+    pub cov_len: usize,
+    pub train_batch: usize,
+    pub log_batch: usize,
+    pub test_batch: usize,
+    pub train_chunk: usize,
+    /// LM: vocab/seq_len/d_model. MLP: input_dim/classes. 0 when absent.
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub repr_dim: usize,
+    pub modules: Vec<ModuleInfo>,
+    pub params: Vec<ParamInfo>,
+    pub entries: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad manifest line {line:?}"))?;
+            kv.insert(k, v);
+        }
+        let get = |k: &str| -> Result<&str> {
+            kv.get(k).copied().ok_or_else(|| anyhow!("manifest missing key {k}"))
+        };
+        let get_usize =
+            |k: &str| -> Result<usize> { Ok(get(k)?.parse::<usize>()?) };
+        let opt_usize = |k: &str| -> usize {
+            kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(0)
+        };
+
+        let n_modules = get_usize("n_modules")?;
+        let mut modules = Vec::with_capacity(n_modules);
+        for i in 0..n_modules {
+            let f = |field: &str| get_usize(&format!("module.{i}.{field}"));
+            modules.push(ModuleInfo {
+                name: get(&format!("module.{i}.name"))?.to_string(),
+                n_in: f("n_in")?,
+                n_out: f("n_out")?,
+                g_off: f("g_off")?,
+                g_len: f("g_len")?,
+                gfull_off: f("gfull_off")?,
+                gfull_len: f("gfull_len")?,
+                p_off: f("p_off")?,
+                pfull_off: f("pfull_off")?,
+                cov_off: f("cov_off")?,
+            });
+        }
+        let n_tensors = get_usize("n_param_tensors")?;
+        let mut params = Vec::with_capacity(n_tensors);
+        for i in 0..n_tensors {
+            let shape: Vec<usize> = get(&format!("param.{i}.shape"))?
+                .split('x')
+                .map(|d| d.parse::<usize>())
+                .collect::<std::result::Result<_, _>>()?;
+            params.push(ParamInfo {
+                name: get(&format!("param.{i}.name"))?.to_string(),
+                off: get_usize(&format!("param.{i}.off"))?,
+                shape,
+            });
+        }
+        let man = Manifest {
+            name: get("name")?.to_string(),
+            kind: get("kind")?.to_string(),
+            n_params: get_usize("n_params")?,
+            k_in: get_usize("k_in")?,
+            k_out: get_usize("k_out")?,
+            k_total: get_usize("k_total")?,
+            k_full: get_usize("k_full")?,
+            proj_len: get_usize("proj_len")?,
+            proj_len_full: get_usize("proj_len_full")?,
+            cov_len: get_usize("cov_len")?,
+            train_batch: get_usize("train_batch")?,
+            log_batch: get_usize("log_batch")?,
+            test_batch: get_usize("test_batch")?,
+            train_chunk: get_usize("train_chunk")?,
+            vocab: opt_usize("vocab"),
+            seq_len: opt_usize("seq_len"),
+            input_dim: opt_usize("input_dim"),
+            classes: opt_usize("classes"),
+            repr_dim: opt_usize("repr_dim"),
+            modules,
+            params,
+            entries: get("entries")?.split(',').map(str::to_string).collect(),
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Internal consistency checks (offsets tile, totals match).
+    pub fn validate(&self) -> Result<()> {
+        let mut g = 0;
+        let mut gf = 0;
+        for m in &self.modules {
+            if m.g_off != g || m.gfull_off != gf {
+                return Err(anyhow!("module {} offsets out of order", m.name));
+            }
+            g += m.g_len;
+            gf += m.gfull_len;
+        }
+        if g != self.k_total {
+            return Err(anyhow!("gradient blocks sum {g} != k_total {}", self.k_total));
+        }
+        if gf != self.k_full {
+            return Err(anyhow!("full blocks sum {gf} != k_full {}", self.k_full));
+        }
+        let mut off = 0;
+        for p in &self.params {
+            if p.off != off {
+                return Err(anyhow!("param {} offset gap", p.name));
+            }
+            off += p.len();
+        }
+        if off != self.n_params {
+            return Err(anyhow!("param table sum {off} != n_params {}", self.n_params));
+        }
+        Ok(())
+    }
+
+    /// Param lookup by name.
+    pub fn param(&self, name: &str) -> Option<&ParamInfo> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn is_lm(&self) -> bool {
+        self.kind == "lm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        [
+            "name=t",
+            "kind=mlp",
+            "n_params=20",
+            "k_in=2",
+            "k_out=2",
+            "k_total=8",
+            "k_full=20",
+            "proj_len=16",
+            "proj_len_full=29",
+            "train_batch=4",
+            "log_batch=4",
+            "test_batch=2",
+            "train_chunk=8",
+            "input_dim=3",
+            "classes=2",
+            "repr_dim=4",
+            "cov_len=29",
+            "n_modules=2",
+            "module.0.name=fc0",
+            "module.0.n_in=3",
+            "module.0.n_out=4",
+            "module.0.g_off=0",
+            "module.0.g_len=4",
+            "module.0.gfull_off=0",
+            "module.0.gfull_len=12",
+            "module.0.p_off=0",
+            "module.0.pfull_off=0",
+            "module.0.cov_off=0",
+            "module.1.name=fc1",
+            "module.1.n_in=4",
+            "module.1.n_out=2",
+            "module.1.g_off=4",
+            "module.1.g_len=4",
+            "module.1.gfull_off=12",
+            "module.1.gfull_len=8",
+            "module.1.p_off=14",
+            "module.1.pfull_off=25",
+            "module.1.cov_off=25",
+            "n_param_tensors=2",
+            "param.0.name=fc0.w",
+            "param.0.off=0",
+            "param.0.shape=4x3",
+            "param.1.name=fc1.w",
+            "param.1.off=12",
+            "param.1.shape=2x4",
+            "entries=init,score",
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(&sample()).unwrap();
+        assert_eq!(m.modules.len(), 2);
+        assert_eq!(m.modules[1].g_off, 4);
+        assert_eq!(m.param("fc1.w").unwrap().off, 12);
+        assert_eq!(m.entries, vec!["init", "score"]);
+        assert!(!m.is_lm());
+    }
+
+    #[test]
+    fn rejects_offset_gaps() {
+        let bad = sample().replace("module.1.g_off=4", "module.1.g_off=5");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_param_total_mismatch() {
+        let bad = sample().replace("n_params=20", "n_params=21");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifests_parse_if_built() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.exists() {
+            return; // `make artifacts` not run yet
+        }
+        for cfg in ["lm_tiny", "mlp_fmnist"] {
+            let dir = root.join(cfg);
+            if dir.exists() {
+                let m = Manifest::load(&dir).unwrap();
+                assert_eq!(m.name, cfg);
+                assert!(m.k_total > 0);
+                assert!(m.entries.contains(&"logra_log".to_string()));
+            }
+        }
+    }
+}

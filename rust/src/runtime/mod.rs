@@ -1,0 +1,10 @@
+//! PJRT runtime layer: artifact loading, executable caching, literal
+//! helpers, manifest parsing. Python never appears at runtime — the HLO
+//! programs under `artifacts/` are the only interface to L1/L2.
+
+pub mod client;
+pub mod literal;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{Manifest, ModuleInfo, ParamInfo};

@@ -1,0 +1,283 @@
+//! On-disk projected-gradient store.
+//!
+//! The heart of the paper's cost trade (§4.2): write projected gradients
+//! for ALL training data to disk once, then answer every future influence
+//! query by scanning them — no gradient recomputation. Layout:
+//!
+//!   <dir>/grads.bin   header(32B) + rows * k * f32 (row-major)
+//!   <dir>/ids.bin     rows * u64 data-ids (the LogIX `data_id` concept)
+//!
+//! Header: magic "LOGRAGRD", u32 version, u32 k, u64 row count, 8B pad.
+//! Reads go through a read-only mmap ([`Mmap`]); writes through a buffered
+//! appender whose `finalize` patches the row count, so a crash mid-write
+//! leaves a store that reports the last durable count.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::mmap::Mmap;
+
+const MAGIC: &[u8; 8] = b"LOGRAGRD";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 32;
+
+fn header_bytes(k: u32, rows: u64) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&k.to_le_bytes());
+    h[16..24].copy_from_slice(&rows.to_le_bytes());
+    h
+}
+
+/// Append-only writer. One writer per store directory.
+pub struct GradStoreWriter {
+    grads: BufWriter<File>,
+    ids: BufWriter<File>,
+    dir: PathBuf,
+    k: usize,
+    rows: u64,
+}
+
+impl GradStoreWriter {
+    pub fn create(dir: &Path, k: usize) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let gpath = dir.join("grads.bin");
+        let ipath = dir.join("ids.bin");
+        let mut gf = BufWriter::new(File::create(&gpath)?);
+        gf.write_all(&header_bytes(k as u32, 0))?;
+        let ifile = BufWriter::new(File::create(&ipath)?);
+        Ok(GradStoreWriter { grads: gf, ids: ifile, dir: dir.to_path_buf(), k, rows: 0 })
+    }
+
+    /// Append a batch: `rows` is row-major [n, k]; `ids` are the n data ids.
+    pub fn append(&mut self, ids: &[u64], rows: &[f32]) -> Result<()> {
+        if rows.len() != ids.len() * self.k {
+            return Err(anyhow!(
+                "append: {} ids x k={} needs {} floats, got {}",
+                ids.len(),
+                self.k,
+                ids.len() * self.k,
+                rows.len()
+            ));
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(rows.as_ptr() as *const u8, rows.len() * 4)
+        };
+        self.grads.write_all(bytes)?;
+        for &id in ids {
+            self.ids.write_all(&id.to_le_bytes())?;
+        }
+        self.rows += ids.len() as u64;
+        Ok(())
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Flush buffers and patch the header row count.
+    pub fn finalize(mut self) -> Result<u64> {
+        self.grads.flush()?;
+        self.ids.flush()?;
+        let mut f = OpenOptions::new().write(true).open(self.dir.join("grads.bin"))?;
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&header_bytes(self.k as u32, self.rows))?;
+        f.sync_all()?;
+        Ok(self.rows)
+    }
+}
+
+/// Read view over a finalized store.
+pub struct GradStore {
+    map: Mmap,
+    ids_map: Mmap,
+    k: usize,
+    rows: usize,
+}
+
+impl GradStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let map = Mmap::open(&dir.join("grads.bin"))
+            .with_context(|| format!("grad store {}", dir.display()))?;
+        let bytes = map.as_slice();
+        if bytes.len() < HEADER_LEN || &bytes[..8] != MAGIC {
+            return Err(anyhow!("bad grad store header in {}", dir.display()));
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(anyhow!("grad store version {version} unsupported"));
+        }
+        let k = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let rows = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        let need = HEADER_LEN + rows * k * 4;
+        if bytes.len() < need {
+            return Err(anyhow!(
+                "grad store truncated: need {need} bytes, have {}",
+                bytes.len()
+            ));
+        }
+        let ids_map = Mmap::open(&dir.join("ids.bin"))?;
+        if ids_map.len() < rows * 8 {
+            return Err(anyhow!("ids file truncated"));
+        }
+        map.advise_sequential();
+        Ok(GradStore { map, ids_map, k, rows })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Raw f32 view of rows [start, start+len).
+    pub fn chunk(&self, start: usize, len: usize) -> &[f32] {
+        assert!(start + len <= self.rows, "chunk out of range");
+        let byte_off = HEADER_LEN + start * self.k * 4;
+        let bytes = &self.map.as_slice()[byte_off..byte_off + len * self.k * 4];
+        // The writer produced these bytes from f32s on this machine;
+        // alignment holds because HEADER_LEN and k*4 are 4-byte multiples.
+        unsafe {
+            std::slice::from_raw_parts(bytes.as_ptr() as *const f32, len * self.k)
+        }
+    }
+
+    /// One row.
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.chunk(i, 1)
+    }
+
+    /// Data id of row i.
+    pub fn id(&self, i: usize) -> u64 {
+        assert!(i < self.rows);
+        let b = &self.ids_map.as_slice()[i * 8..i * 8 + 8];
+        u64::from_le_bytes(b.try_into().unwrap())
+    }
+
+    /// Prefetch hint for rows [start, start+len) (overlap IO with compute).
+    pub fn prefetch(&self, start: usize, len: usize) {
+        let byte_off = HEADER_LEN + start * self.k * 4;
+        self.map.advise_willneed(byte_off, len * self.k * 4);
+    }
+
+    /// Total stored bytes (Table-1 "Storage" column).
+    pub fn storage_bytes(&self) -> u64 {
+        (self.map.len() + self.ids_map.len()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("logra-store-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_batches() {
+        let dir = tmpdir("roundtrip");
+        let k = 6;
+        let mut w = GradStoreWriter::create(&dir, k).unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let mut all_rows: Vec<f32> = Vec::new();
+        let mut all_ids: Vec<u64> = Vec::new();
+        let mut next_id = 100u64;
+        for _ in 0..7 {
+            let n = 1 + rng.below_usize(5);
+            let ids: Vec<u64> = (0..n).map(|i| next_id + i as u64).collect();
+            next_id += n as u64;
+            let mut rows = vec![0.0f32; n * k];
+            rng.fill_normal(&mut rows, 1.0);
+            w.append(&ids, &rows).unwrap();
+            all_rows.extend_from_slice(&rows);
+            all_ids.extend_from_slice(&ids);
+        }
+        let total = w.finalize().unwrap();
+        assert_eq!(total as usize, all_ids.len());
+
+        let s = GradStore::open(&dir).unwrap();
+        assert_eq!(s.rows(), all_ids.len());
+        assert_eq!(s.k(), k);
+        assert_eq!(s.chunk(0, s.rows()), &all_rows[..]);
+        for i in 0..s.rows() {
+            assert_eq!(s.id(i), all_ids[i]);
+            assert_eq!(s.row(i), &all_rows[i * k..(i + 1) * k]);
+        }
+        s.prefetch(0, s.rows());
+        assert!(s.storage_bytes() > (all_rows.len() * 4) as u64);
+    }
+
+    #[test]
+    fn property_chunk_views_consistent() {
+        crate::util::proptest::check("store-chunks", 10, |g| {
+            let dir = tmpdir(&format!("prop{}", g.rng.next_u32()));
+            let k = 1 + g.int_in(0, 16);
+            let n = 1 + g.int_in(0, 64);
+            let mut w = GradStoreWriter::create(&dir, k).unwrap();
+            let mut rows = vec![0.0f32; n * k];
+            g.rng.fill_normal(&mut rows, 1.0);
+            let ids: Vec<u64> = (0..n as u64).collect();
+            // Split the append into arbitrary batch boundaries.
+            let mut start = 0usize;
+            while start < n {
+                let len = 1 + g.rng.below_usize(n - start);
+                w.append(&ids[start..start + len], &rows[start * k..(start + len) * k])
+                    .unwrap();
+                start += len;
+            }
+            w.finalize().unwrap();
+            let s = GradStore::open(&dir).unwrap();
+            crate::prop_assert!(s.rows() == n, "rows {} != {n}", s.rows());
+            // Any chunk decomposition reproduces the same bytes.
+            let mut at = 0usize;
+            while at < n {
+                let len = 1 + g.rng.below_usize(n - at);
+                let got = s.chunk(at, len);
+                crate::prop_assert!(
+                    got == &rows[at * k..(at + len) * k],
+                    "chunk mismatch at {at}+{len}"
+                );
+                at += len;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn append_shape_mismatch_rejected() {
+        let dir = tmpdir("mismatch");
+        let mut w = GradStoreWriter::create(&dir, 4).unwrap();
+        assert!(w.append(&[1, 2], &[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn unfinalized_store_reports_zero_rows() {
+        let dir = tmpdir("unfinalized");
+        let mut w = GradStoreWriter::create(&dir, 3).unwrap();
+        w.append(&[1], &[1.0, 2.0, 3.0]).unwrap();
+        // Flush data but never finalize: header still says 0 rows.
+        drop(w);
+        let s = GradStore::open(&dir).unwrap();
+        assert_eq!(s.rows(), 0);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let dir = tmpdir("corrupt");
+        std::fs::write(dir.join("grads.bin"), b"NOTMAGICxxxxxxxxxxxxxxxxxxxxxxxxxxx")
+            .unwrap();
+        std::fs::write(dir.join("ids.bin"), b"").unwrap();
+        assert!(GradStore::open(&dir).is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Read-only memory-mapped file (libc wrapper; no memmap2 offline).
+//!
+//! The gradient store's read path — the paper's §E.2 design point: stored
+//! projected gradients are scanned strictly sequentially per query, so a
+//! page-cache-backed mapping plus `MADV_SEQUENTIAL` beats explicit reads
+//! (no user-space copy, kernel readahead does the prefetch).
+
+use std::fs::File;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Read-only mapping of an entire file.
+pub struct Mmap {
+    ptr: *mut libc::c_void,
+    len: usize,
+    // Keep the file open for the mapping's lifetime (not strictly needed
+    // on Linux, but makes the ownership story explicit).
+    _file: File,
+}
+
+// The mapping is read-only and the underlying pages are immutable for the
+// store's lifetime; sharing across threads is safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0, _file: file });
+        }
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(anyhow!("mmap {} failed: {}", path.display(), std::io::Error::last_os_error()));
+        }
+        Ok(Mmap { ptr, len, _file: file })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    /// Hint sequential access (enables aggressive kernel readahead).
+    pub fn advise_sequential(&self) {
+        if self.len > 0 {
+            unsafe {
+                libc::madvise(self.ptr, self.len, libc::MADV_SEQUENTIAL);
+            }
+        }
+    }
+
+    /// Hint that a byte range will be needed soon (explicit prefetch).
+    pub fn advise_willneed(&self, offset: usize, len: usize) {
+        if self.len == 0 || offset >= self.len {
+            return;
+        }
+        let len = len.min(self.len - offset);
+        // madvise needs page alignment for the start address.
+        let page = 4096usize;
+        let aligned = offset & !(page - 1);
+        let adj_len = len + (offset - aligned);
+        unsafe {
+            libc::madvise(
+                (self.ptr as usize + aligned) as *mut libc::c_void,
+                adj_len,
+                libc::MADV_WILLNEED,
+            );
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            unsafe {
+                libc::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("logra-mmap-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = File::create(&path).unwrap();
+        f.write_all(contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let path = tmpfile("a.bin", b"hello mmap");
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.as_slice(), b"hello mmap");
+        m.advise_sequential();
+        m.advise_willneed(0, 4);
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let path = tmpfile("empty.bin", b"");
+        let m = Mmap::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), b"");
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(Mmap::open(Path::new("/nonexistent/xyz.bin")).is_err());
+    }
+
+    #[test]
+    fn willneed_out_of_range_is_noop() {
+        let path = tmpfile("b.bin", &[0u8; 8192]);
+        let m = Mmap::open(&path).unwrap();
+        m.advise_willneed(9000, 100);
+        m.advise_willneed(4000, 100000);
+    }
+}

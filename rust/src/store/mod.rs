@@ -1,0 +1,11 @@
+//! On-disk gradient store: mmap substrate, append-only store format,
+//! background writer. The paper's "write projected gradients once, scan
+//! forever" storage layer (§2, §4.2, §E.2).
+
+pub mod grad_store;
+pub mod mmap;
+pub mod writer_thread;
+
+pub use grad_store::{GradStore, GradStoreWriter};
+pub use mmap::Mmap;
+pub use writer_thread::BackgroundWriter;

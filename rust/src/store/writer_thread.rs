@@ -1,0 +1,93 @@
+//! Background store writer: overlaps gradient disk writes with the next
+//! batch's PJRT execution (the paper's §E.2 logging-phase overlap,
+//! implemented with a bounded pipeline instead of Python multiprocessing).
+
+use std::path::Path;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::pipeline::{bounded, Sender};
+
+use super::grad_store::GradStoreWriter;
+
+/// One logging batch headed for disk.
+pub struct WriteJob {
+    pub ids: Vec<u64>,
+    pub rows: Vec<f32>,
+}
+
+/// Handle to the background writer.
+pub struct BackgroundWriter {
+    tx: Option<Sender<WriteJob>>,
+    handle: Option<JoinHandle<Result<u64>>>,
+}
+
+impl BackgroundWriter {
+    /// Spawn a writer thread appending to a fresh store at `dir`.
+    /// `queue_cap` bounds in-flight batches (backpressure toward the
+    /// executor if the disk falls behind).
+    pub fn spawn(dir: &Path, k: usize, queue_cap: usize) -> Result<Self> {
+        let mut writer = GradStoreWriter::create(dir, k)?;
+        let (tx, rx) = bounded::<WriteJob>(queue_cap);
+        let handle = std::thread::Builder::new()
+            .name("grad-store-writer".into())
+            .spawn(move || -> Result<u64> {
+                while let Some(job) = rx.recv() {
+                    writer.append(&job.ids, &job.rows)?;
+                }
+                writer.finalize()
+            })?;
+        Ok(BackgroundWriter { tx: Some(tx), handle: Some(handle) })
+    }
+
+    /// Queue a batch (blocks when the queue is full).
+    pub fn submit(&self, ids: Vec<u64>, rows: Vec<f32>) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("writer already closed")
+            .send(WriteJob { ids, rows })
+            .map_err(|_| anyhow!("store writer thread died"))
+    }
+
+    /// Close the queue, join the thread, return the final row count.
+    pub fn finish(mut self) -> Result<u64> {
+        drop(self.tx.take());
+        self.handle
+            .take()
+            .expect("already finished")
+            .join()
+            .map_err(|_| anyhow!("store writer panicked"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::grad_store::GradStore;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn background_writes_match_foreground() {
+        let dir = std::env::temp_dir().join("logra-store-tests").join("bg");
+        let _ = std::fs::remove_dir_all(&dir);
+        let k = 5;
+        let w = BackgroundWriter::spawn(&dir, k, 2).unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let mut want: Vec<f32> = Vec::new();
+        for b in 0..20u64 {
+            let n = 3;
+            let ids: Vec<u64> = (b * 3..b * 3 + 3).collect();
+            let mut rows = vec![0.0f32; n * k];
+            rng.fill_normal(&mut rows, 1.0);
+            want.extend_from_slice(&rows);
+            w.submit(ids, rows).unwrap();
+        }
+        let total = w.finish().unwrap();
+        assert_eq!(total, 60);
+        let s = GradStore::open(&dir).unwrap();
+        assert_eq!(s.rows(), 60);
+        assert_eq!(s.chunk(0, 60), &want[..]);
+        assert_eq!(s.id(59), 59);
+    }
+}

@@ -1,0 +1,100 @@
+//! Process-memory probes (Table-1 "Memory" column).
+//!
+//! Reads `/proc/self/status` (Linux) for resident-set figures and keeps an
+//! explicit byte-ledger for the big planned allocations (gradient buffers,
+//! Hessian blocks, mmap windows) so phase reports can split "model/runtime"
+//! from "valuation state" the way the paper's Table 1 does.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+
+static LEDGER: AtomicI64 = AtomicI64::new(0);
+static LEDGER_PEAK: AtomicI64 = AtomicI64::new(0);
+
+/// Record an allocation of `bytes` in the explicit ledger.
+pub fn ledger_alloc(bytes: usize) {
+    let now = LEDGER.fetch_add(bytes as i64, Ordering::Relaxed) + bytes as i64;
+    LEDGER_PEAK.fetch_max(now, Ordering::Relaxed);
+}
+
+/// Record a release of `bytes`.
+pub fn ledger_free(bytes: usize) {
+    LEDGER.fetch_sub(bytes as i64, Ordering::Relaxed);
+}
+
+/// Current / peak ledger bytes.
+pub fn ledger_now() -> i64 {
+    LEDGER.load(Ordering::Relaxed)
+}
+
+pub fn ledger_peak() -> i64 {
+    LEDGER_PEAK.load(Ordering::Relaxed)
+}
+
+/// Reset peak tracking (between benchmark phases).
+pub fn ledger_reset_peak() {
+    LEDGER_PEAK.store(LEDGER.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+fn read_status_kb(key: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let rest = rest.trim_start_matches(':').trim();
+            let num = rest.split_whitespace().next()?;
+            return num.parse().ok();
+        }
+    }
+    None
+}
+
+/// Current resident set size in bytes (0 if unavailable).
+pub fn rss_bytes() -> u64 {
+    read_status_kb("VmRSS").map(|kb| kb * 1024).unwrap_or(0)
+}
+
+/// Peak resident set size in bytes (0 if unavailable).
+pub fn peak_rss_bytes() -> u64 {
+    read_status_kb("VmHWM").map(|kb| kb * 1024).unwrap_or(0)
+}
+
+/// Human-readable byte count.
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1} {}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= rss_bytes() / 2);
+    }
+
+    #[test]
+    fn ledger_tracks_peak() {
+        ledger_reset_peak();
+        let base = ledger_now();
+        ledger_alloc(1000);
+        ledger_alloc(500);
+        ledger_free(800);
+        assert_eq!(ledger_now(), base + 700);
+        assert!(ledger_peak() >= base + 1500);
+        ledger_free(700);
+    }
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512.0 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+}

@@ -1,0 +1,26 @@
+//! Infrastructure substrates: everything the offline crate set forced us
+//! to hand-roll (see DESIGN.md §1) — PRNG, statistics, top-k selection,
+//! bounded pipelines, property testing, micro-benchmarking, memory probes.
+
+pub mod bench;
+pub mod memory;
+pub mod pipeline;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod topk;
+
+/// Wall-clock timer with a labelled report.
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: std::time::Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}

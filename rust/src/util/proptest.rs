@@ -1,0 +1,122 @@
+//! Minimal property-based testing framework (offline stand-in for
+//! `proptest`, which is unavailable in the vendored crate set — see
+//! DESIGN.md §1).
+//!
+//! A property is a closure over a [`Gen`]; the runner executes it for N
+//! seeded cases and, on failure, retries the same seed with shrink hints
+//! so size-dependent generators (`Gen::size_hint`) produce smaller
+//! counterexamples. Failures report the reproducing seed.
+
+use crate::util::rng::Pcg32;
+
+/// Randomness + size budget handed to each property case.
+pub struct Gen {
+    pub rng: Pcg32,
+    /// 0.0..=1.0 scale for "how big" generated values should be; the
+    /// shrink loop lowers this after a failure.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] scaled by the current size budget.
+    pub fn int_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.below_usize(span + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo) * self.size.max(0.05)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn vec_f64(&mut self, max_len: usize) -> Vec<f64> {
+        let n = self.int_in(0, max_len);
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn vec_f32(&mut self, max_len: usize) -> Vec<f32> {
+        let n = self.int_in(0, max_len);
+        (0..n).map(|_| self.rng.normal_f32()).collect()
+    }
+}
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` for `cases` seeded cases. On failure, tries shrunken sizes
+/// for the failing seed and panics with the smallest failure found.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> CaseResult) {
+    let base_seed = 0xC0FFEE ^ fxhash(name);
+    for case in 0..cases {
+        let seed =
+            base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: Pcg32::seeded(seed), size: 1.0 };
+        if let Err(first) = prop(&mut g) {
+            // Shrink: replay same seed at smaller sizes.
+            let mut smallest = first;
+            for &size in &[0.5, 0.25, 0.1, 0.02] {
+                let mut g = Gen { rng: Pcg32::seeded(seed), size };
+                if let Err(msg) = prop(&mut g) {
+                    smallest = msg;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}):\n  {smallest}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse-twice", 50, |g| {
+            let v = g.vec_f64(64);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert!(v == w, "reverse twice changed vec");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_shrink_generated_values() {
+        let mut g = Gen { rng: Pcg32::seeded(1), size: 0.02 };
+        for _ in 0..50 {
+            assert!(g.int_in(0, 100) <= 3);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Streaming top-k selection (min-heap over (score, id)).
+//!
+//! The query engine scans millions of stored train gradients per query and
+//! keeps only the k most valuable — this heap is that reduction. NaN scores
+//! are rejected at insert so ordering stays total.
+
+/// Fixed-capacity top-k accumulator over (score, id) pairs.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    // Min-heap by score: heap[0] is the current k-th best.
+    heap: Vec<(f64, u64)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "top-k with k=0");
+        TopK { k, heap: Vec::with_capacity(k) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current admission threshold (score of the weakest kept element).
+    pub fn threshold(&self) -> f64 {
+        if self.heap.len() < self.k {
+            f64::NEG_INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    /// Offer one candidate. O(log k) when admitted, O(1) when rejected.
+    pub fn push(&mut self, score: f64, id: u64) {
+        if score.is_nan() {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push((score, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if score > self.heap[0].0 {
+            self.heap[0] = (score, id);
+            self.sift_down(0);
+        }
+    }
+
+    /// Drain into (score, id) pairs sorted by descending score.
+    pub fn into_sorted(mut self) -> Vec<(f64, u64)> {
+        self.heap
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 < self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && self.heap[l].0 < self.heap[smallest].0 {
+                smallest = l;
+            }
+            if r < n && self.heap[r].0 < self.heap[smallest].0 {
+                smallest = r;
+            }
+            if smallest == i {
+                return;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn brute_topk(scores: &[f64], k: usize) -> Vec<(f64, u64)> {
+        let mut pairs: Vec<(f64, u64)> =
+            scores.iter().enumerate().map(|(i, &s)| (s, i as u64)).collect();
+        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        pairs.truncate(k);
+        pairs
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Pcg32::seeded(1);
+        for trial in 0..50 {
+            let n = 1 + rng.below_usize(200);
+            let k = 1 + rng.below_usize(20);
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut tk = TopK::new(k);
+            for (i, &s) in scores.iter().enumerate() {
+                tk.push(s, i as u64);
+            }
+            let got = tk.into_sorted();
+            let want = brute_topk(&scores, k);
+            assert_eq!(got.len(), want.len(), "trial {trial}");
+            // Scores must match exactly; ids may differ only among ties.
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.0, w.0, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_nan() {
+        let mut tk = TopK::new(2);
+        tk.push(f64::NAN, 0);
+        tk.push(1.0, 1);
+        assert_eq!(tk.len(), 1);
+    }
+
+    #[test]
+    fn threshold_tracks_kth() {
+        let mut tk = TopK::new(3);
+        assert_eq!(tk.threshold(), f64::NEG_INFINITY);
+        for (i, s) in [5.0, 1.0, 3.0, 4.0].iter().enumerate() {
+            tk.push(*s, i as u64);
+        }
+        assert_eq!(tk.threshold(), 3.0);
+    }
+
+    #[test]
+    fn ties_are_deterministic() {
+        let mut tk = TopK::new(2);
+        for i in 0..5 {
+            tk.push(1.0, i);
+        }
+        let out = tk.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|&(s, _)| s == 1.0));
+    }
+}

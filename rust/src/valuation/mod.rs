@@ -1,0 +1,13 @@
+//! Influence-scoring engine: iHVP-preconditioned dot products over the
+//! gradient store, ℓ-RelatIF normalization, top-k selection.
+//!
+//! This is the paper's recurring "Compute Influence" phase (Table 1,
+//! right): test gradients are preconditioned once, then scanned against
+//! every stored train gradient; the scan is chunked, each chunk's scores
+//! come from the Pallas-authored `score` HLO program (or a native fallback
+//! for odd shapes), and the next chunk is prefetched while the current one
+//! is scored.
+
+pub mod scorer;
+
+pub use scorer::{Normalization, QueryEngine, QueryResult};

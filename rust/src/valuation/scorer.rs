@@ -1,0 +1,174 @@
+//! Query engine over a finalized gradient store.
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use crate::hessian::Preconditioner;
+use crate::linalg::{dot, Matrix};
+use crate::runtime::literal::{f32_lit, to_f32_vec};
+use crate::runtime::Runtime;
+use crate::store::GradStore;
+use crate::util::topk::TopK;
+
+/// Score normalization mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Normalization {
+    /// Raw influence g_te^T (H+λI)^{-1} g_tr.
+    None,
+    /// ℓ-RelatIF (Barshan et al.; paper §4.2): influence divided by
+    /// sqrt(self-influence of the train example) — suppresses the
+    /// high-gradient-norm outliers that otherwise dominate LM valuation.
+    RelatIf,
+}
+
+/// Top-k result for one query row.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    /// (score, data_id) descending.
+    pub top: Vec<(f64, u64)>,
+}
+
+/// Influence scorer bound to (runtime, store, preconditioner).
+pub struct QueryEngine<'a> {
+    pub rt: &'a Runtime,
+    pub store: &'a GradStore,
+    pub precond: &'a Preconditioner,
+    /// Score chunks through the AOT Pallas `score` program (true) or the
+    /// native matmul fallback (false). HLO requires the manifest's
+    /// (test_batch, train_chunk) shapes; other shapes fall back natively.
+    pub use_hlo: bool,
+    /// Lazily computed self-influence of every stored train row
+    /// (RelatIF denominators), cached across queries.
+    self_inf: RefCell<Option<Vec<f32>>>,
+}
+
+impl<'a> QueryEngine<'a> {
+    pub fn new(rt: &'a Runtime, store: &'a GradStore, precond: &'a Preconditioner) -> Self {
+        QueryEngine { rt, store, precond, use_hlo: true, self_inf: RefCell::new(None) }
+    }
+
+    /// Self-influence of each stored row (computed once, then cached).
+    pub fn train_self_influences(&self) -> Vec<f32> {
+        if let Some(v) = self.self_inf.borrow().as_ref() {
+            return v.clone();
+        }
+        let k = self.store.k();
+        let mut out = Vec::with_capacity(self.store.rows());
+        for i in 0..self.store.rows() {
+            let row = self.store.chunk(i, 1);
+            out.push(self.precond.self_influence(&row[..k]));
+        }
+        *self.self_inf.borrow_mut() = Some(out.clone());
+        out
+    }
+
+    /// Score one chunk of stored rows against preconditioned test rows.
+    /// `pre_rows` is row-major [nt, k]. Returns row-major [nt, len].
+    fn score_chunk(&self, pre_rows: &[f32], nt: usize, start: usize, len: usize) -> Result<Vec<f32>> {
+        let k = self.store.k();
+        let man = &self.rt.manifest;
+        let chunk = self.store.chunk(start, len);
+        let use_hlo = self.use_hlo
+            && nt == man.test_batch
+            && len == man.train_chunk
+            && k == man.k_total;
+        if use_hlo {
+            let out = self.rt.run(
+                "score",
+                &[f32_lit(&[nt, k], pre_rows)?, f32_lit(&[len, k], chunk)?],
+            )?;
+            return Ok(to_f32_vec(&out[0])?);
+        }
+        // Native fallback (also used by tests as an oracle) — operates on
+        // the mmap chunk in place, no copies.
+        Ok(crate::linalg::matrix::matmul_t_slices(pre_rows, nt, chunk, len, k))
+    }
+
+    /// Full scan: top-k most valuable train examples per test row.
+    ///
+    /// `test_grads` is row-major [nt, k] of RAW projected test gradients
+    /// (preconditioning happens here).
+    pub fn query(
+        &self,
+        test_grads: &[f32],
+        nt: usize,
+        topk: usize,
+        norm: Normalization,
+    ) -> Result<Vec<QueryResult>> {
+        let k = self.store.k();
+        assert_eq!(test_grads.len(), nt * k);
+        let pre = self.precond.apply_rows(test_grads, nt);
+        let selfs = match norm {
+            Normalization::RelatIf => Some(self.train_self_influences()),
+            Normalization::None => None,
+        };
+        let mut heaps: Vec<TopK> = (0..nt).map(|_| TopK::new(topk)).collect();
+        let rows = self.store.rows();
+        let chunk_len = self.rt.manifest.train_chunk.max(1);
+        let mut at = 0usize;
+        while at < rows {
+            let len = chunk_len.min(rows - at);
+            // Overlap: hint the NEXT chunk while we score this one.
+            if at + len < rows {
+                self.store.prefetch(at + len, chunk_len.min(rows - at - len));
+            }
+            let scores = self.score_chunk(&pre, nt, at, len)?;
+            for t in 0..nt {
+                let heap = &mut heaps[t];
+                let srow = &scores[t * len..(t + 1) * len];
+                for (j, &s) in srow.iter().enumerate() {
+                    let s = match &selfs {
+                        Some(si) => s as f64 / (si[at + j].max(0.0) as f64).sqrt().max(1e-12),
+                        None => s as f64,
+                    };
+                    heap.push(s, self.store.id(at + j));
+                }
+            }
+            at += len;
+        }
+        Ok(heaps.into_iter().map(|h| QueryResult { top: h.into_sorted() }).collect())
+    }
+
+    /// Dense value matrix [nt, n_train] (counterfactual evals need every
+    /// score, not just the top-k).
+    pub fn values_matrix(
+        &self,
+        test_grads: &[f32],
+        nt: usize,
+        norm: Normalization,
+    ) -> Result<Matrix> {
+        let k = self.store.k();
+        assert_eq!(test_grads.len(), nt * k);
+        let pre = self.precond.apply_rows(test_grads, nt);
+        let selfs = match norm {
+            Normalization::RelatIf => Some(self.train_self_influences()),
+            Normalization::None => None,
+        };
+        let rows = self.store.rows();
+        let mut out = Matrix::zeros(nt, rows);
+        let chunk_len = self.rt.manifest.train_chunk.max(1);
+        let mut at = 0usize;
+        while at < rows {
+            let len = chunk_len.min(rows - at);
+            let scores = self.score_chunk(&pre, nt, at, len)?;
+            for t in 0..nt {
+                for j in 0..len {
+                    let mut s = scores[t * len + j];
+                    if let Some(si) = &selfs {
+                        s /= (si[at + j].max(0.0)).sqrt().max(1e-12);
+                    }
+                    out.data[t * rows + at + j] = s;
+                }
+            }
+            at += len;
+        }
+        Ok(out)
+    }
+
+    /// Influence of a single (test, train) pair straight from rows.
+    pub fn pair_influence(&self, test_row: &[f32], train_idx: usize) -> f32 {
+        let pre = self.precond.apply(test_row);
+        dot(&pre, self.store.chunk(train_idx, 1))
+    }
+}

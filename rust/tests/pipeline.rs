@@ -1,0 +1,279 @@
+//! End-to-end integration over real artifacts: logging pipeline ->
+//! gradient store -> Fisher blocks -> query engine; baselines; service.
+//! Requires `make artifacts` (tests skip gracefully otherwise).
+
+use std::path::{Path, PathBuf};
+
+use logra::baselines::{
+    EkfacValuator, GradDotValuator, LograInit, LograValuator, RepSimValuator,
+    TrakValuator, Valuator,
+};
+use logra::coordinator::{projected_grads, run_logging, LoggingOptions};
+use logra::data::corpus::{generate as gen_corpus, CorpusSpec};
+use logra::data::images::{generate as gen_images, generate_eval, ImageSpec};
+use logra::hessian::random_projections;
+use logra::model::dataset::Dataset;
+use logra::model::trainer::Trainer;
+use logra::runtime::Runtime;
+use logra::util::rng::Pcg32;
+use logra::valuation::{Normalization, QueryEngine};
+
+fn open(name: &str) -> Option<Runtime> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let dir = root.join("artifacts").join(name);
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/{name} not built");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open runtime"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-pipeline-tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn lm_logging_and_self_retrieval() {
+    let Some(rt) = open("lm_tiny") else { return };
+    let man = rt.manifest.clone();
+    let corpus = gen_corpus(CorpusSpec::new(man.vocab, man.seq_len, 48, 11));
+    let ds = Dataset::Lm(&corpus);
+
+    // Briefly train so gradients differentiate documents.
+    let trainer = Trainer::new(&rt);
+    let mut st = trainer.init(0).unwrap();
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Pcg32::seeded(1);
+    trainer.train(&mut st, &ds, &all, 2, &mut rng).unwrap();
+
+    let proj = random_projections(&man, &mut rng);
+    let dir = tmpdir("lm-selfret");
+    let (store, hess, report) =
+        run_logging(&rt, &ds, &st.params, &proj, &dir, &LoggingOptions::default())
+            .unwrap();
+    assert_eq!(store.rows(), 48);
+    assert_eq!(store.k(), man.k_total);
+    assert!(report.tokens_per_sec > 0.0);
+    let hess = hess.unwrap();
+    assert_eq!(hess.count, 48);
+
+    let precond = hess.preconditioner(0.1).unwrap();
+    let engine = QueryEngine::new(&rt, &store, &precond);
+
+    // Query WITH training documents: each doc should retrieve itself at
+    // (or extremely near) the top — the self-influence sanity check.
+    let qidx: Vec<usize> = vec![0, 7, 23];
+    let (g, losses) = projected_grads(&rt, &ds, &qidx, &st.params, &proj).unwrap();
+    assert_eq!(losses.len(), 3);
+    let res = engine.query(&g, 3, 5, Normalization::None).unwrap();
+    for (i, &qi) in qidx.iter().enumerate() {
+        let ids: Vec<u64> = res[i].top.iter().map(|&(_, id)| id).collect();
+        assert!(
+            ids.contains(&(qi as u64)),
+            "query {qi} not in its own top-5: {ids:?}"
+        );
+    }
+
+    // Dense values agree with pair_influence.
+    let vals = engine.values_matrix(&g, 3, Normalization::None).unwrap();
+    for (i, _) in qidx.iter().enumerate() {
+        let k = man.k_total;
+        let row = &g[i * k..(i + 1) * k];
+        for j in [0usize, 13, 47] {
+            let direct = engine.pair_influence(row, j);
+            assert!(
+                (vals.at(i, j) - direct).abs() < 1e-3 * direct.abs().max(1.0),
+                "values_matrix vs pair_influence mismatch"
+            );
+        }
+    }
+
+    // RelatIF shrinks high-self-influence rows but keeps finiteness.
+    let res_rel = engine.query(&g, 3, 5, Normalization::RelatIf).unwrap();
+    for r in &res_rel {
+        assert!(r.top.iter().all(|(s, _)| s.is_finite()));
+    }
+}
+
+#[test]
+fn hlo_score_path_matches_native() {
+    let Some(rt) = open("lm_tiny") else { return };
+    let man = rt.manifest.clone();
+    let corpus = gen_corpus(CorpusSpec::new(man.vocab, man.seq_len, man.train_chunk, 13));
+    let ds = Dataset::Lm(&corpus);
+    let trainer = Trainer::new(&rt);
+    let st = trainer.init(2).unwrap();
+    let mut rng = Pcg32::seeded(3);
+    let proj = random_projections(&man, &mut rng);
+    let dir = tmpdir("hlo-vs-native");
+    let (store, hess, _) =
+        run_logging(&rt, &ds, &st.params, &proj, &dir, &LoggingOptions::default())
+            .unwrap();
+    let precond = hess.unwrap().preconditioner(0.1).unwrap();
+
+    let qidx: Vec<usize> = (0..man.test_batch).collect();
+    let (g, _) = projected_grads(&rt, &ds, &qidx, &st.params, &proj).unwrap();
+
+    let mut hlo_engine = QueryEngine::new(&rt, &store, &precond);
+    hlo_engine.use_hlo = true;
+    let a = hlo_engine
+        .values_matrix(&g, qidx.len(), Normalization::None)
+        .unwrap();
+    let mut native = QueryEngine::new(&rt, &store, &precond);
+    native.use_hlo = false;
+    let b = native.values_matrix(&g, qidx.len(), Normalization::None).unwrap();
+    assert!(rt.call_count("score") > 0, "HLO path not exercised");
+    assert!(a.max_abs_diff(&b) < 1e-2 * b.fro_norm().max(1.0) / (b.data.len() as f32).sqrt());
+}
+
+#[test]
+fn mlp_baselines_produce_sane_values() {
+    let Some(rt) = open("mlp_fmnist") else { return };
+    let man = rt.manifest.clone();
+    let spec = ImageSpec::fmnist_like(man.input_dim, man.classes, 96, 5);
+    let train_set = gen_images(spec);
+    let test_set = generate_eval(spec, 16);
+    let train = Dataset::Mlp(&train_set);
+    let test = Dataset::Mlp(&test_set);
+    let trainer = Trainer::new(&rt);
+    let mut st = trainer.init(1).unwrap();
+    let all: Vec<usize> = (0..train.len()).collect();
+    let mut rng = Pcg32::seeded(2);
+    trainer.train(&mut st, &train, &all, 3, &mut rng).unwrap();
+    let params = st.params.clone();
+
+    let test_idx: Vec<usize> = vec![0, 3, 9];
+    let dir = tmpdir("mlp-baselines");
+
+    let mut methods: Vec<Box<dyn Valuator>> = vec![
+        Box::new(
+            LograValuator::build(
+                &rt,
+                &train,
+                &test,
+                &params,
+                LograInit::Random,
+                dir.join("s1"),
+                0.1,
+                7,
+            )
+            .unwrap(),
+        ),
+        Box::new(
+            LograValuator::build(
+                &rt,
+                &train,
+                &test,
+                &params,
+                LograInit::Pca,
+                dir.join("s2"),
+                0.1,
+                7,
+            )
+            .unwrap(),
+        ),
+        Box::new(GradDotValuator { rt: &rt, train: &train, test: &test, params: &params }),
+        Box::new(TrakValuator::new(&rt, &train, &test, &params, 32, 0.1, 7)),
+        Box::new(EkfacValuator::new(&rt, &train, &test, &params)),
+        Box::new(RepSimValuator::new(&rt, &train, &test, &params)),
+    ];
+    let mut value_mats = Vec::new();
+    for m in methods.iter_mut() {
+        let v = m.values(&test_idx).unwrap();
+        assert_eq!((v.rows, v.cols), (3, 96), "{}", m.name());
+        assert!(
+            v.data.iter().all(|x| x.is_finite()),
+            "{} produced non-finite values",
+            m.name()
+        );
+        assert!(v.data.iter().any(|&x| x != 0.0), "{} all-zero", m.name());
+        value_mats.push((m.name(), v));
+    }
+
+    // Gradient-based methods should broadly agree with each other more
+    // than chance (exact agreement is not expected: LoGra preconditions
+    // with the projected Fisher, grad-dot does not, and the projections
+    // differ). Check mean rank correlations are positive.
+    let mean_spearman = |a: &logra::linalg::Matrix, b: &logra::linalg::Matrix| -> f64 {
+        let mut acc = 0.0;
+        for t in 0..a.rows {
+            let x: Vec<f64> = a.row(t).iter().map(|&v| v as f64).collect();
+            let y: Vec<f64> = b.row(t).iter().map(|&v| v as f64).collect();
+            acc += logra::util::stats::spearman(&x, &y);
+        }
+        acc / a.rows as f64
+    };
+    let logra_rand = &value_mats[0].1;
+    let logra_pca = &value_mats[1].1;
+    let gd = &value_mats[2].1;
+    let ekfac = &value_mats[4].1;
+    assert!(
+        mean_spearman(logra_rand, logra_pca) > 0.1,
+        "logra inits disagree: {}",
+        mean_spearman(logra_rand, logra_pca)
+    );
+    assert!(mean_spearman(logra_rand, gd) > 0.0, "logra vs grad-dot negative");
+    assert!(
+        mean_spearman(logra_rand, ekfac) > 0.0,
+        "logra vs ekfac negative: {}",
+        mean_spearman(logra_rand, ekfac)
+    );
+}
+
+#[test]
+fn valuation_service_batches_requests() {
+    let Some(rt) = open("lm_tiny") else { return };
+    let man = rt.manifest.clone();
+    let corpus = gen_corpus(CorpusSpec::new(man.vocab, man.seq_len, 32, 17));
+    let ds = Dataset::Lm(&corpus);
+    let trainer = Trainer::new(&rt);
+    let st = trainer.init(4).unwrap();
+    let mut rng = Pcg32::seeded(5);
+    let proj = random_projections(&man, &mut rng);
+    let dir = tmpdir("service");
+    let (store, hess, _) =
+        run_logging(&rt, &ds, &st.params, &proj, &dir, &LoggingOptions::default())
+            .unwrap();
+    let hess = hess.unwrap();
+    drop(store);
+    drop(rt);
+
+    let svc = logra::coordinator::ValuationService::spawn(logra::coordinator::ServiceConfig {
+        artifact_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/lm_tiny"),
+        store_dir: dir.clone(),
+        params: st.params.clone(),
+        proj_flat: proj.clone(),
+        hessian: hess,
+        damping: 0.1,
+        norm: Normalization::None,
+        max_wait: std::time::Duration::from_millis(5),
+    })
+    .unwrap();
+
+    // Fire queries (training docs themselves) from several threads.
+    let mut handles = Vec::new();
+    let svc = std::sync::Arc::new(svc);
+    for q in 0..6usize {
+        let svc2 = svc.clone();
+        let tokens = corpus.docs[q].tokens.clone();
+        handles.push(std::thread::spawn(move || {
+            let res = svc2.query(tokens, 3).unwrap();
+            (q, res)
+        }));
+    }
+    for h in handles {
+        let (q, res) = h.join().unwrap();
+        assert_eq!(res.top.len(), 3);
+        let ids: Vec<u64> = res.top.iter().map(|&(_, id)| id).collect();
+        assert!(ids.contains(&(q as u64)), "query {q} missing itself: {ids:?}");
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.requests, 6);
+    assert!(snap.batches <= 6);
+    assert!(snap.rows_scanned > 0);
+    // Wrong-length query rejected.
+    assert!(svc.query(vec![1, 2, 3], 1).is_err());
+}

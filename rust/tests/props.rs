@@ -1,0 +1,228 @@
+//! Property-based tests over the pure substrates (no artifacts needed):
+//! linalg, stats, top-k, pipeline, config — run via the in-repo
+//! mini-proptest framework (DESIGN.md §6).
+
+use logra::linalg::{cholesky, dot, eigh, solve_spd, Matrix};
+use logra::prop_assert;
+use logra::util::proptest::check;
+use logra::util::rng::Pcg32;
+use logra::util::stats::{pearson, ranks, spearman};
+use logra::util::topk::TopK;
+
+fn random_spd(rng: &mut Pcg32, n: usize) -> Matrix {
+    let b = Matrix::random_normal(rng, n + 2, n, 1.0);
+    let mut g = b.transpose().matmul(&b);
+    for i in 0..n {
+        *g.at_mut(i, i) += 0.05;
+    }
+    g
+}
+
+#[test]
+fn prop_eigh_reconstructs_and_orthogonal() {
+    check("eigh-reconstruct", 25, |g| {
+        let n = 1 + g.int_in(0, 40);
+        let a = random_spd(&mut g.rng, n);
+        let e = eigh(&a);
+        // Orthogonality.
+        let qtq = e.q.transpose().matmul(&e.q);
+        let dev = qtq.max_abs_diff(&Matrix::identity(n));
+        prop_assert!(dev < 1e-3, "Q^T Q deviates by {dev} at n={n}");
+        // Reconstruction.
+        let mut rec = Matrix::zeros(n, n);
+        for i in 0..n {
+            let lam = e.eigenvalues[i];
+            for r in 0..n {
+                for c in 0..n {
+                    rec.data[r * n + c] += lam * e.q.at(r, i) * e.q.at(c, i);
+                }
+            }
+        }
+        let scale = a.fro_norm().max(1.0);
+        prop_assert!(
+            a.max_abs_diff(&rec) < 5e-4 * scale,
+            "reconstruction off by {} at n={n}",
+            a.max_abs_diff(&rec)
+        );
+        // Eigenvalues sorted ascending and non-negative (SPD).
+        prop_assert!(
+            e.eigenvalues.windows(2).all(|w| w[0] <= w[1] + 1e-6),
+            "eigenvalues unsorted"
+        );
+        prop_assert!(e.eigenvalues[0] > -1e-3, "SPD matrix got negative eigenvalue");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_is_inverse() {
+    check("cholesky-solve", 25, |g| {
+        let n = 1 + g.int_in(0, 30);
+        let a = random_spd(&mut g.rng, n);
+        let b: Vec<f32> = (0..n).map(|_| g.rng.normal_f32()).collect();
+        let x = match solve_spd(&a, &b) {
+            Some(x) => x,
+            None => return Err("SPD solve failed".into()),
+        };
+        let ax = a.matvec(&x);
+        let resid: f32 =
+            ax.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum::<f32>().sqrt();
+        let bn = dot(&b, &b).sqrt().max(1.0);
+        prop_assert!(resid < 5e-3 * bn, "residual {resid} at n={n}");
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        prop_assert!(
+            a.max_abs_diff(&rec) < 1e-2 * a.fro_norm().max(1.0),
+            "cholesky reconstruction off"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matmul_associativity_with_vector() {
+    check("matmul-assoc", 25, |g| {
+        let m = 1 + g.int_in(0, 12);
+        let k = 1 + g.int_in(0, 12);
+        let n = 1 + g.int_in(0, 12);
+        let a = Matrix::random_normal(&mut g.rng, m, k, 1.0);
+        let b = Matrix::random_normal(&mut g.rng, k, n, 1.0);
+        let x: Vec<f32> = (0..n).map(|_| g.rng.normal_f32()).collect();
+        // (A B) x == A (B x)
+        let lhs = a.matmul(&b).matvec(&x);
+        let rhs = a.matvec(&b.matvec(&x));
+        for (p, q) in lhs.iter().zip(&rhs) {
+            prop_assert!((p - q).abs() < 1e-2 * q.abs().max(1.0), "{p} vs {q}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spearman_invariant_to_monotone_maps() {
+    check("spearman-monotone", 30, |g| {
+        let n = 3 + g.int_in(0, 60);
+        let x: Vec<f64> = (0..n).map(|_| g.rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| g.rng.normal()).collect();
+        let base = spearman(&x, &y);
+        let x2: Vec<f64> = x.iter().map(|v| v.exp()).collect(); // strictly monotone
+        let y2: Vec<f64> = y.iter().map(|v| 3.0 * v + 7.0).collect();
+        let mapped = spearman(&x2, &y2);
+        prop_assert!(
+            (base - mapped).abs() < 1e-9,
+            "monotone map changed spearman {base} -> {mapped}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ranks_are_permutation_of_1_to_n_when_distinct() {
+    check("ranks-perm", 30, |g| {
+        let n = 1 + g.int_in(0, 100);
+        let mut x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        g.rng.shuffle(&mut x);
+        let r = ranks(&x);
+        let mut sorted = r.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, v) in sorted.iter().enumerate() {
+            prop_assert!((v - (i + 1) as f64).abs() < 1e-12, "rank {v} at {i}");
+        }
+        // And pearson(x, ranks(x)) is exactly spearman(x, x) = 1.
+        prop_assert!((pearson(&x, &r) - spearman(&x, &x)).abs() < 1.0, "sanity");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_threshold_monotone_nondecreasing() {
+    check("topk-threshold", 30, |g| {
+        let k = 1 + g.int_in(0, 10);
+        let n = g.int_in(0, 300);
+        let mut tk = TopK::new(k);
+        let mut last = f64::NEG_INFINITY;
+        for i in 0..n {
+            tk.push(g.rng.normal(), i as u64);
+            let th = tk.threshold();
+            prop_assert!(th >= last, "threshold decreased: {last} -> {th}");
+            last = th;
+        }
+        let out = tk.into_sorted();
+        prop_assert!(out.len() == k.min(n), "wrong kept count");
+        prop_assert!(
+            out.windows(2).all(|w| w[0].0 >= w[1].0),
+            "not sorted descending"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_roundtrip_values() {
+    check("config-roundtrip", 30, |g| {
+        let i = g.rng.next_u32() as i64 - (u32::MAX / 2) as i64;
+        let f = g.f64_in(-1e6, 1e6);
+        let text = format!("[s]\na = {i}\nb = {f:.6}\nc = \"x{i}\"\nd = [1, 2, {i}]\n");
+        let doc = match logra::config::parse(&text) {
+            Ok(d) => d,
+            Err(e) => return Err(format!("parse failed: {e}")),
+        };
+        prop_assert!(doc.int_of("s", "a").unwrap() == i, "int roundtrip");
+        prop_assert!(
+            (doc.float_of("s", "b").unwrap() - f).abs() < 1e-3 * f.abs().max(1.0),
+            "float roundtrip"
+        );
+        prop_assert!(doc.str_of("s", "c").unwrap() == format!("x{i}"), "str roundtrip");
+        prop_assert!(
+            doc.get("s", "d").unwrap().as_int_list().unwrap() == [1, 2, i],
+            "list roundtrip"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_preserves_order_any_capacity() {
+    check("pipeline-order", 15, |g| {
+        let cap = 1 + g.int_in(0, 8);
+        let n = g.int_in(0, 200);
+        let (tx, rx) = logra::util::pipeline::bounded(cap);
+        let h = std::thread::spawn(move || {
+            for i in 0..n {
+                if tx.send(i).is_err() {
+                    break;
+                }
+            }
+        });
+        let got: Vec<usize> = std::iter::from_fn(|| rx.recv()).collect();
+        h.join().unwrap();
+        prop_assert!(got == (0..n).collect::<Vec<_>>(), "order broken (cap={cap})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_orthonormalized_projection_preserves_norms_in_subspace() {
+    check("proj-isometry", 20, |g| {
+        let n = 4 + g.int_in(0, 28);
+        let k = 1 + g.int_in(0, 3).min(n - 1);
+        let mut p = Matrix::random_normal(&mut g.rng, k, n, 1.0);
+        p.orthonormalize_rows();
+        // For x in the row space, ||P x|| == ||x||.
+        let coef: Vec<f32> = (0..k).map(|_| g.rng.normal_f32()).collect();
+        let mut x = vec![0.0f32; n];
+        for (i, &c) in coef.iter().enumerate() {
+            for (xv, pv) in x.iter_mut().zip(p.row(i)) {
+                *xv += c * pv;
+            }
+        }
+        let px = p.matvec(&x);
+        let nx = dot(&x, &x).sqrt();
+        let npx = dot(&px, &px).sqrt();
+        prop_assert!(
+            (nx - npx).abs() < 1e-3 * nx.max(1.0),
+            "not isometric on subspace: {nx} vs {npx}"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,191 @@
+//! Integration: load real AOT artifacts and execute them via PJRT.
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use std::path::Path;
+
+use logra::runtime::{literal, Runtime};
+use logra::util::rng::Pcg32;
+
+fn open(name: &str) -> Option<Runtime> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let dir = root.join("artifacts").join(name);
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/{name} not built");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open runtime"))
+}
+
+#[test]
+fn lm_tiny_init_and_logra_log() {
+    let Some(rt) = open("lm_tiny") else { return };
+    let man = rt.manifest.clone();
+    assert!(man.is_lm());
+
+    // init(seed) -> params
+    let out = rt.run("init", &[literal::u32_scalar(0)]).unwrap();
+    assert_eq!(out.len(), 1);
+    let params = literal::to_f32_vec(&out[0]).unwrap();
+    assert_eq!(params.len(), man.n_params);
+    assert!(params.iter().all(|v| v.is_finite()));
+    // Deterministic per seed.
+    let again = rt.run("init", &[literal::u32_scalar(0)]).unwrap();
+    assert_eq!(literal::to_f32_vec(&again[0]).unwrap(), params);
+
+    // logra_log(params, P, tokens) -> (G [B,K], loss [B])
+    let mut rng = Pcg32::seeded(1);
+    let mut proj = vec![0.0f32; man.proj_len];
+    rng.fill_normal(&mut proj, 0.3);
+    let b = man.log_batch;
+    let t = man.seq_len;
+    let tokens: Vec<i32> =
+        (0..b * t).map(|_| rng.below(man.vocab as u32) as i32).collect();
+    let out = rt
+        .run(
+            "logra_log",
+            &[
+                literal::f32_lit(&[man.n_params], &params).unwrap(),
+                literal::f32_lit(&[man.proj_len], &proj).unwrap(),
+                literal::i32_lit(&[b, t], &tokens).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let g = literal::to_f32_vec(&out[0]).unwrap();
+    let loss = literal::to_f32_vec(&out[1]).unwrap();
+    assert_eq!(g.len(), b * man.k_total);
+    assert_eq!(loss.len(), b);
+    assert!(loss.iter().all(|&l| l.is_finite() && l > 0.0));
+    assert!(g.iter().any(|&x| x != 0.0));
+
+    // Scale property: 3x projection scales G by 3 (per-layer bilinearity in
+    // P_i,P_o means x9 overall for both sides scaled; scale only P here).
+    let proj3: Vec<f32> = proj.iter().map(|x| x * 3.0).collect();
+    let out3 = rt
+        .run(
+            "logra_log",
+            &[
+                literal::f32_lit(&[man.n_params], &params).unwrap(),
+                literal::f32_lit(&[man.proj_len], &proj3).unwrap(),
+                literal::i32_lit(&[b, t], &tokens).unwrap(),
+            ],
+        )
+        .unwrap();
+    let g3 = literal::to_f32_vec(&out3[0]).unwrap();
+    for (a, b) in g.iter().zip(&g3) {
+        assert!((b - 9.0 * a).abs() <= 1e-3 * a.abs().max(1.0), "{a} {b}");
+    }
+}
+
+#[test]
+fn lm_tiny_train_step_learns() {
+    let Some(rt) = open("lm_tiny") else { return };
+    let man = rt.manifest.clone();
+    let params0 =
+        literal::to_f32_vec(&rt.run("init", &[literal::u32_scalar(1)]).unwrap()[0])
+            .unwrap();
+    let n = man.n_params;
+    let mut params = params0;
+    let mut m = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let mut step = 0i32;
+    let bsz = man.train_batch;
+    let t = man.seq_len;
+    // One fixed batch: loss must drop when overfitting it.
+    let mut rng = Pcg32::seeded(2);
+    let tokens: Vec<i32> =
+        (0..bsz * t).map(|_| rng.below(man.vocab as u32) as i32).collect();
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for it in 0..15 {
+        let out = rt
+            .run(
+                "train_step",
+                &[
+                    literal::f32_lit(&[n], &params).unwrap(),
+                    literal::f32_lit(&[n], &m).unwrap(),
+                    literal::f32_lit(&[n], &v).unwrap(),
+                    literal::i32_scalar(step),
+                    literal::i32_lit(&[bsz, t], &tokens).unwrap(),
+                ],
+            )
+            .unwrap();
+        params = literal::to_f32_vec(&out[0]).unwrap();
+        m = literal::to_f32_vec(&out[1]).unwrap();
+        v = literal::to_f32_vec(&out[2]).unwrap();
+        step = literal::to_i32_scalar(&out[3]).unwrap();
+        let loss = literal::to_f32_scalar(&out[4]).unwrap();
+        if it == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert_eq!(step, 15);
+    assert!(last < first, "loss did not drop: {first} -> {last}");
+}
+
+#[test]
+fn score_artifact_matches_host_matmul() {
+    let Some(rt) = open("lm_tiny") else { return };
+    let man = rt.manifest.clone();
+    let (qb, tc, k) = (man.test_batch, man.train_chunk, man.k_total);
+    let mut rng = Pcg32::seeded(3);
+    let mut gt = vec![0.0f32; qb * k];
+    let mut gn = vec![0.0f32; tc * k];
+    rng.fill_normal(&mut gt, 1.0);
+    rng.fill_normal(&mut gn, 1.0);
+    let out = rt
+        .run(
+            "score",
+            &[
+                literal::f32_lit(&[qb, k], &gt).unwrap(),
+                literal::f32_lit(&[tc, k], &gn).unwrap(),
+            ],
+        )
+        .unwrap();
+    let s = literal::to_f32_vec(&out[0]).unwrap();
+    assert_eq!(s.len(), qb * tc);
+    use logra::linalg::Matrix;
+    let a = Matrix::from_vec(qb, k, gt);
+    let b = Matrix::from_vec(tc, k, gn);
+    let want = a.matmul_t(&b);
+    for (x, y) in s.iter().zip(&want.data) {
+        assert!((x - y).abs() < 1e-2 * y.abs().max(1.0), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn mlp_artifacts_run() {
+    let Some(rt) = open("mlp_fmnist") else { return };
+    let man = rt.manifest.clone();
+    assert!(!man.is_lm());
+    let params =
+        literal::to_f32_vec(&rt.run("init", &[literal::u32_scalar(0)]).unwrap()[0])
+            .unwrap();
+    assert_eq!(params.len(), man.n_params);
+    let b = man.log_batch;
+    let d = man.input_dim;
+    let mut rng = Pcg32::seeded(4);
+    let mut x = vec![0.0f32; b * d];
+    rng.fill_normal(&mut x, 1.0);
+    let y: Vec<i32> = (0..b).map(|_| rng.below(man.classes as u32) as i32).collect();
+    let out = rt
+        .run(
+            "eval_loss",
+            &[
+                literal::f32_lit(&[man.n_params], &params).unwrap(),
+                literal::f32_lit(&[b, d], &x).unwrap(),
+                literal::i32_lit(&[b], &y).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2); // (loss [B], logits [B, C])
+    let loss = literal::to_f32_vec(&out[0]).unwrap();
+    let logits = literal::to_f32_vec(&out[1]).unwrap();
+    assert_eq!(loss.len(), b);
+    assert_eq!(logits.len(), b * man.classes);
+    // Untrained loss should be near ln(classes).
+    let want = (man.classes as f32).ln();
+    let mean: f32 = loss.iter().sum::<f32>() / b as f32;
+    assert!((mean - want).abs() < 1.0, "mean loss {mean}, ln(C)={want}");
+}
