@@ -1,12 +1,15 @@
 //! Bench: substrate microbenchmarks — host linalg (matmul_t, eigh),
-//! store scan bandwidth, top-k throughput, preconditioner apply.
-//! These locate the L3 hot-path costs for the perf pass (DESIGN.md §7).
+//! store scan bandwidth, sharded parallel scan throughput, top-k
+//! throughput, preconditioner apply. These locate the L3 hot-path costs
+//! for the perf pass (DESIGN.md §7).
 
+use logra::hessian::BlockHessian;
 use logra::linalg::{eigh, Matrix};
-use logra::store::{GradStore, GradStoreWriter};
+use logra::store::{shard_store, GradStore, GradStoreWriter, ShardedStore};
 use logra::util::bench::{bench, report_metric, BenchOpts};
 use logra::util::rng::Pcg32;
 use logra::util::topk::TopK;
+use logra::valuation::{Normalization, ParallelQueryEngine};
 
 fn main() {
     let mut rng = Pcg32::seeded(7);
@@ -79,6 +82,66 @@ fn main() {
         );
         let bytes = (rows * k * 4) as f64;
         report_metric("micro.store.scan_gbps", bytes / res.summary().mean / 1e9, "GB/s");
+    }
+
+    // Sharded parallel scan: full influence queries (precondition + score
+    // + top-k merge) at 1 vs N workers over the same 8-shard store.
+    {
+        let src = std::env::temp_dir().join("logra-microbench-shard-src");
+        let _ = std::fs::remove_dir_all(&src);
+        let k = 192usize;
+        let rows = 8192usize;
+        let mut w = GradStoreWriter::create(&src, k).unwrap();
+        let mut buf = vec![0.0f32; 256 * k];
+        let mut hess = BlockHessian::single_block(k);
+        for b in 0..(rows / 256) {
+            rng.fill_normal(&mut buf, 1.0);
+            hess.accumulate(&buf, 256);
+            let ids: Vec<u64> = (b as u64 * 256..(b as u64 + 1) * 256).collect();
+            w.append(&ids, &buf).unwrap();
+        }
+        w.finalize().unwrap();
+        let precond = hess.preconditioner(0.1).unwrap();
+
+        let sharded_dir = std::env::temp_dir().join("logra-microbench-shard-dst");
+        let _ = std::fs::remove_dir_all(&sharded_dir);
+        shard_store(&src, &sharded_dir, 8).unwrap();
+        let store = ShardedStore::open(&sharded_dir).unwrap();
+
+        let nt = 8usize;
+        let mut test = vec![0.0f32; nt * k];
+        rng.fill_normal(&mut test, 1.0);
+        let mut baseline = None;
+        for workers in [1usize, 2, 4] {
+            let engine = ParallelQueryEngine::new(&store, &precond)
+                .with_workers(workers)
+                .with_chunk_len(512);
+            let res = bench(
+                &format!("store.parallel_scan.w{workers}"),
+                BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 30.0 },
+                || {
+                    let out = engine
+                        .query(&test, nt, 10, Normalization::None)
+                        .unwrap();
+                    std::hint::black_box(&out);
+                },
+            );
+            let mean = res.summary().mean;
+            let pairs = (rows * nt) as f64;
+            report_metric(
+                &format!("micro.store.parallel_scan.mpairs_per_s.w{workers}"),
+                pairs / mean / 1e6,
+                "M pairs/s",
+            );
+            match baseline {
+                None => baseline = Some(mean),
+                Some(b) => report_metric(
+                    &format!("micro.store.parallel_scan.speedup.w{workers}"),
+                    b / mean,
+                    "x vs 1 worker",
+                ),
+            }
+        }
     }
 
     // Top-k under a firehose of scores.

@@ -24,10 +24,15 @@ use logra::valuation::Normalization;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let parsed = logra::cli::parse(&args, &["clients", "requests", "n-train"])?;
+    let parsed = logra::cli::parse(
+        &args,
+        &["clients", "requests", "n-train", "shards", "scan-workers"],
+    )?;
     let n_clients = parsed.usize_or("clients", 4)?;
     let n_requests = parsed.usize_or("requests", 24)?;
     let n_train = parsed.usize_or("n-train", 512)?;
+    let n_shards = parsed.usize_or("shards", 1)?;
+    let scan_workers = parsed.usize_or("scan-workers", 1)?;
 
     let root = std::env::current_dir()?;
     let artifact_dir = root.join("artifacts").join("lm_tiny");
@@ -50,6 +55,18 @@ fn main() -> Result<()> {
     drop(store);
     drop(rt);
 
+    // Optionally reshard the store so the parallel engine has shards to
+    // fan out over (`--shards 4 --scan-workers 4`).
+    let store_dir = if n_shards > 1 {
+        let sharded = root.join("runs").join("serve-store-sharded");
+        let _ = std::fs::remove_dir_all(&sharded);
+        let man = logra::store::shard_store(&store_dir, &sharded, n_shards)?;
+        println!("resharded into {} shards", man.n_shards());
+        sharded
+    } else {
+        store_dir
+    };
+
     // Online phase: spawn the service, hammer it from client threads.
     let svc = Arc::new(ValuationService::spawn(ServiceConfig {
         artifact_dir,
@@ -60,6 +77,7 @@ fn main() -> Result<()> {
         damping: 0.1,
         norm: Normalization::RelatIf,
         max_wait: Duration::from_millis(4),
+        scan_workers,
     })?);
 
     let t0 = Instant::now();
@@ -106,6 +124,13 @@ fn main() -> Result<()> {
         "worker time        grad {:.3}s  scan {:.3}s",
         snap.grad_seconds, snap.scan_seconds
     );
+    if snap.shards_scanned > 0 {
+        println!(
+            "parallel scan      {} shard scans, concurrency {:.2}x",
+            snap.shards_scanned,
+            snap.scan_concurrency()
+        );
+    }
     Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
     Ok(())
 }

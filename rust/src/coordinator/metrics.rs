@@ -11,6 +11,13 @@ pub struct Metrics {
     pub scan_nanos: AtomicU64,
     pub grad_nanos: AtomicU64,
     pub queue_wait_nanos: AtomicU64,
+    /// Shard scans completed by the parallel engine (one per shard per
+    /// query batch).
+    pub shards_scanned: AtomicU64,
+    /// Summed per-shard scan time across workers. With W busy workers this
+    /// accrues ~W× faster than `scan_nanos` wall time — the ratio is the
+    /// scan's effective parallelism.
+    pub shard_scan_nanos: AtomicU64,
 }
 
 impl Metrics {
@@ -22,6 +29,8 @@ impl Metrics {
             scan_seconds: self.scan_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             grad_seconds: self.grad_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             queue_wait_seconds: self.queue_wait_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            shards_scanned: self.shards_scanned.load(Ordering::Relaxed),
+            shard_scan_seconds: self.shard_scan_nanos.load(Ordering::Relaxed) as f64 / 1e9,
         }
     }
 
@@ -39,6 +48,8 @@ pub struct MetricsSnapshot {
     pub scan_seconds: f64,
     pub grad_seconds: f64,
     pub queue_wait_seconds: f64,
+    pub shards_scanned: u64,
+    pub shard_scan_seconds: f64,
 }
 
 impl MetricsSnapshot {
@@ -58,6 +69,16 @@ impl MetricsSnapshot {
             self.requests as f64 / self.batches as f64
         }
     }
+
+    /// Summed worker scan time over wall scan time: the parallel scan's
+    /// effective concurrency (~1.0 sequential, ~W with W busy workers).
+    pub fn scan_concurrency(&self) -> f64 {
+        if self.scan_seconds <= 0.0 {
+            0.0
+        } else {
+            self.shard_scan_seconds / self.scan_seconds
+        }
+    }
 }
 
 #[cfg(test)]
@@ -71,8 +92,12 @@ mod tests {
         m.batches.store(4, Ordering::Relaxed);
         m.rows_scanned.store(1000, Ordering::Relaxed);
         Metrics::add_nanos(&m.scan_nanos, 2.0);
+        m.shards_scanned.store(8, Ordering::Relaxed);
+        Metrics::add_nanos(&m.shard_scan_nanos, 6.0);
         let s = m.snapshot();
         assert!((s.mean_batch_fill() - 2.5).abs() < 1e-12);
         assert!((s.pairs_per_sec(4) - 2000.0).abs() < 1.0);
+        assert_eq!(s.shards_scanned, 8);
+        assert!((s.scan_concurrency() - 3.0).abs() < 1e-9);
     }
 }

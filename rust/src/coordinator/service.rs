@@ -7,6 +7,13 @@
 //! Requests are coalesced up to the artifact's static `test_batch` shape
 //! or until `max_wait` expires — classic dynamic batching: the HLO score
 //! program amortizes its fixed cost over every query in the batch.
+//!
+//! Scanning dispatches on the store layout: a plain v1 store keeps the
+//! sequential [`QueryEngine`] (HLO score path — there is nothing to fan
+//! out over); a sharded store uses the parallel scan-and-merge engine,
+//! whose results are bit-identical to a sequential NATIVE scan of the
+//! same rows (the HLO and native scorers may differ in f32 rounding, so
+//! resharding a corpus swaps scorer as well as parallelism).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -18,9 +25,11 @@ use crate::coordinator::metrics::Metrics;
 use crate::hessian::BlockHessian;
 use crate::runtime::literal::{f32_lit, i32_lit, to_f32_vec};
 use crate::runtime::Runtime;
-use crate::store::GradStore;
+use crate::store::ShardedStore;
 use crate::util::pipeline::{bounded, Sender};
-use crate::valuation::{Normalization, QueryEngine, QueryResult};
+use crate::valuation::{
+    Normalization, ParallelQueryEngine, QueryEngine, QueryResult,
+};
 
 /// Service construction parameters (everything `Send`).
 pub struct ServiceConfig {
@@ -34,6 +43,10 @@ pub struct ServiceConfig {
     pub norm: Normalization,
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
+    /// Scan worker threads for SHARDED stores (0 = one per core, N =
+    /// fixed count). Unsharded v1 stores always use the sequential HLO
+    /// engine — one shard has nothing to fan out over.
+    pub scan_workers: usize,
 }
 
 /// One LM valuation request: value this token sequence against the store.
@@ -41,6 +54,27 @@ struct ServiceRequest {
     tokens: Vec<i32>,
     topk: usize,
     resp: Sender<QueryResult>,
+}
+
+/// Either scan engine behind one `query` call.
+enum Scanner<'a> {
+    Seq(QueryEngine<'a>),
+    Par(ParallelQueryEngine<'a>),
+}
+
+impl Scanner<'_> {
+    fn query(
+        &self,
+        g: &[f32],
+        nt: usize,
+        topk: usize,
+        norm: Normalization,
+    ) -> Result<Vec<QueryResult>> {
+        match self {
+            Scanner::Seq(e) => e.query(g, nt, topk, norm),
+            Scanner::Par(e) => e.query(g, nt, topk, norm),
+        }
+    }
 }
 
 /// Client handle; cloneable across threads.
@@ -69,9 +103,9 @@ impl ValuationService {
                 // Pay the one-time setup (store open, eigendecomposition,
                 // XLA compilation) BEFORE signalling readiness, so no
                 // request ever observes it as tail latency (§Perf log).
-                let setup = (|| -> Result<(Runtime, GradStore, crate::hessian::Preconditioner)> {
+                let setup = (|| -> Result<(Runtime, ShardedStore, crate::hessian::Preconditioner)> {
                     let rt = Runtime::open(&cfg.artifact_dir)?;
-                    let store = GradStore::open(&cfg.store_dir)?;
+                    let store = ShardedStore::open(&cfg.store_dir)?;
                     let precond = cfg.hessian.preconditioner(cfg.damping)?;
                     rt.warmup(&["logra_log", "score"])?;
                     // Compilation alone is not enough: the first EXECUTION
@@ -101,7 +135,16 @@ impl ValuationService {
                         return Err(anyhow!("service setup failed: {msg}"));
                     }
                 };
-                let engine = QueryEngine::new(&rt, &store, &precond);
+                let chunk_len = rt.manifest.train_chunk.max(1);
+                let engine = match store.as_single() {
+                    Some(single) => Scanner::Seq(QueryEngine::new(&rt, single, &precond)),
+                    None => Scanner::Par(
+                        ParallelQueryEngine::new(&store, &precond)
+                            .with_workers(cfg.scan_workers)
+                            .with_chunk_len(chunk_len)
+                            .with_metrics(m2.clone()),
+                    ),
+                };
                 let man = &rt.manifest;
                 // Gradient extraction runs at log_batch; scoring at
                 // test_batch. Batch at most min(log_batch, test_batch)
@@ -113,13 +156,15 @@ impl ValuationService {
                 let params_lit = f32_lit(&[man.n_params], &cfg.params)?;
                 let proj_lit = f32_lit(&[man.proj_len], &cfg.proj_flat)?;
                 while let Some(first) = rx.recv() {
-                    // Dynamic batching: gather up to nt requests.
+                    // Dynamic batching: gather up to nt requests, parking
+                    // on the channel's condvar until the deadline (no
+                    // sleep-polling).
                     let mut reqs = vec![first];
                     let deadline = Instant::now() + cfg.max_wait;
-                    while reqs.len() < nt && Instant::now() < deadline {
-                        match rx.try_recv() {
+                    while reqs.len() < nt {
+                        match rx.recv_deadline(deadline) {
                             Some(r) => reqs.push(r),
-                            None => std::thread::sleep(Duration::from_micros(200)),
+                            None => break,
                         }
                     }
                     let real = reqs.len();

@@ -5,6 +5,7 @@
 //!   fig4         counterfactual accuracy (brittleness + LDS)
 //!   table1       LoGra vs EKFAC efficiency
 //!   qualitative  Fig-5-style top-valued-document inspection
+//!   store        gradient-store maintenance (stat | shard | merge)
 
 use std::path::PathBuf;
 
@@ -15,12 +16,14 @@ use logra::eval::fig4::{render_markdown, run_fig4, Fig4Scale};
 use logra::eval::qualitative::{render as render_qual, run_qualitative};
 use logra::eval::table1::{run_table1, TABLE1_HEADER};
 use logra::eval::{BrittlenessConfig, LdsConfig};
+use logra::store::{merge_store, shard_store, stat_store};
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
     ("info", "print an artifact manifest summary"),
     ("fig4", "run brittleness + LDS counterfactual evals"),
     ("table1", "run the LoGra vs EKFAC efficiency comparison"),
     ("qualitative", "train, log, and inspect top-valued documents"),
+    ("store", "store maintenance: store stat|shard|merge <dir>"),
 ];
 
 const FLAGS: &[FlagSpec] = &[
@@ -33,6 +36,8 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "part", help: "fig4 part: both|brittleness|lds", takes_value: true, default: Some("both") },
     FlagSpec { name: "removals", help: "brittleness ks, comma list", takes_value: true, default: None },
     FlagSpec { name: "topk", help: "retrieval depth", takes_value: true, default: Some("5") },
+    FlagSpec { name: "out", help: "output dir for store shard/merge", takes_value: true, default: None },
+    FlagSpec { name: "shards", help: "shard count for store shard", takes_value: true, default: Some("4") },
 ];
 
 /// Repo root: the directory holding `artifacts/` (cwd, else build-time).
@@ -130,6 +135,50 @@ fn main() -> Result<()> {
             let out = run_qualitative(&root, &config, n_train, 8, topk, epochs)?;
             println!("{}", render_qual(&out));
             Ok(())
+        }
+        "store" => {
+            let action = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .ok_or_else(|| anyhow!("usage: store stat|shard|merge <dir> [--out DIR] [--shards N]"))?;
+            let dir = args
+                .positional
+                .get(1)
+                .map(PathBuf::from)
+                .ok_or_else(|| anyhow!("store {action}: missing store directory"))?;
+            match action {
+                "stat" => {
+                    print!("{}", stat_store(&dir)?.render());
+                    Ok(())
+                }
+                "shard" => {
+                    let out = args
+                        .flag("out")
+                        .map(PathBuf::from)
+                        .ok_or_else(|| anyhow!("store shard: --out <dir> required"))?;
+                    let n = args.usize_or("shards", 4)?;
+                    let man = shard_store(&dir, &out, n)?;
+                    println!(
+                        "sharded {} -> {} ({} shards, {} rows)",
+                        dir.display(),
+                        out.display(),
+                        man.n_shards(),
+                        man.total_rows()
+                    );
+                    Ok(())
+                }
+                "merge" => {
+                    let out = args
+                        .flag("out")
+                        .map(PathBuf::from)
+                        .ok_or_else(|| anyhow!("store merge: --out <dir> required"))?;
+                    let rows = merge_store(&dir, &out)?;
+                    println!("merged {} -> {} ({rows} rows)", dir.display(), out.display());
+                    Ok(())
+                }
+                other => Err(anyhow!("unknown store action {other:?}; try stat|shard|merge")),
+            }
         }
         other => Err(anyhow!("unknown subcommand {other:?}; try --help")),
     }

@@ -1,11 +1,46 @@
 //! On-disk gradient store: mmap substrate, append-only store format,
-//! background writer. The paper's "write projected gradients once, scan
-//! forever" storage layer (§2, §4.2, §E.2).
+//! background writer, sharded multi-writer fabric. The paper's "write
+//! projected gradients once, scan forever" storage layer (§2, §4.2, §E.2).
+//!
+//! # Store format
+//!
+//! A **v1 store** is a directory with two files:
+//!
+//! ```text
+//! <dir>/grads.bin   header(32B) + rows * k * f32 (row-major)
+//! <dir>/ids.bin     rows * u64 data-ids
+//! ```
+//!
+//! The `grads.bin` header is `magic "LOGRAGRD", u32 version, u32 k,
+//! u64 rows, 8B pad`; the writer's `finalize` patches the row count, so a
+//! crash mid-write leaves a store reporting the last durable count.
+//!
+//! A **sharded store** is a directory holding a `shards.json` manifest
+//! plus one v1 store per `shard-NNNN/` subdirectory:
+//!
+//! ```text
+//! <dir>/shards.json          {"version", "k", "shards": [{"dir","rows"}...], "offsets"}
+//! <dir>/shard-0000/grads.bin
+//! <dir>/shard-0000/ids.bin
+//! <dir>/shard-0001/...
+//! ```
+//!
+//! Global row order is the concatenation of shards in manifest order.
+//! Manifest row counts are advisory; each shard's own header is the
+//! durability authority, which makes per-shard finalization (one writer
+//! thread per shard) crash-consistent without cross-shard coordination.
+//! Directories without `shards.json` open as 1-shard fabrics, so the v1
+//! layout keeps working everywhere.
 
 pub mod grad_store;
 pub mod mmap;
+pub mod shards;
 pub mod writer_thread;
 
 pub use grad_store::{GradStore, GradStoreWriter};
 pub use mmap::Mmap;
+pub use shards::{
+    merge_store, shard_store, stat_store, ShardManifest, ShardWriter, ShardedStore,
+    ShardedWriter, StoreStat,
+};
 pub use writer_thread::BackgroundWriter;

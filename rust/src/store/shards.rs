@@ -1,0 +1,895 @@
+//! Sharded gradient store: a store directory becomes a set of shard
+//! subdirectories plus a JSON shard manifest, so extraction can run one
+//! writer per thread and queries can scan shards in parallel.
+//!
+//! Layout:
+//!
+//!   <dir>/shards.json          manifest: version, k, shard dirs + rows
+//!   <dir>/shard-0000/grads.bin ordinary v1 [`GradStore`] files
+//!   <dir>/shard-0000/ids.bin
+//!   <dir>/shard-0001/...
+//!
+//! Global row order is the concatenation of shards in manifest order;
+//! global row g lives at shard s, local row g - offset(s).
+//!
+//! Crash consistency: the manifest is written (atomically, via temp file +
+//! rename) at creation time with zero row counts, and each shard owns its
+//! durability through the v1 header-patching `finalize`. Opening trusts the
+//! per-shard headers, never the manifest row counts — a crash mid-extraction
+//! leaves every finalized shard intact and the unfinalized shard reporting
+//! its last durable count, exactly like a v1 store.
+//!
+//! A directory without `shards.json` opens as a 1-shard fabric over the v1
+//! layout, so every existing store keeps working unchanged.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::grad_store::{GradStore, GradStoreWriter};
+
+/// Manifest file name inside a sharded store directory.
+pub const SHARD_MANIFEST: &str = "shards.json";
+
+const MANIFEST_VERSION: u64 = 1;
+
+// --------------------------------------------------------------- manifest
+
+/// Parsed `shards.json`: shard count, per-shard rows, k, and (derivable)
+/// global row offsets. Row counts are advisory — the per-shard v1 headers
+/// are the durability authority (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    pub k: usize,
+    pub shard_dirs: Vec<String>,
+    pub shard_rows: Vec<u64>,
+}
+
+impl ShardManifest {
+    pub fn n_shards(&self) -> usize {
+        self.shard_dirs.len()
+    }
+
+    pub fn total_rows(&self) -> u64 {
+        self.shard_rows.iter().sum()
+    }
+
+    /// Global row offsets: `offsets()[i]` is the first global row of shard
+    /// i; a final entry holds the total.
+    pub fn offsets(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.shard_rows.len() + 1);
+        let mut acc = 0u64;
+        out.push(0);
+        for &r in &self.shard_rows {
+            acc += r;
+            out.push(acc);
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"version\": {MANIFEST_VERSION},\n"));
+        s.push_str(&format!("  \"k\": {},\n", self.k));
+        s.push_str("  \"shards\": [\n");
+        for (i, (dir, rows)) in self.shard_dirs.iter().zip(&self.shard_rows).enumerate() {
+            let comma = if i + 1 < self.shard_dirs.len() { "," } else { "" };
+            s.push_str(&format!("    {{ \"dir\": \"{dir}\", \"rows\": {rows} }}{comma}\n"));
+        }
+        s.push_str("  ],\n");
+        let offs: Vec<String> = self.offsets().iter().map(u64::to_string).collect();
+        s.push_str(&format!("  \"offsets\": [{}]\n", offs.join(", ")));
+        s.push_str("}\n");
+        s
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = json::parse(text)?;
+        let version = root
+            .get("version")
+            .and_then(json::Json::as_u64)
+            .ok_or_else(|| anyhow!("shard manifest: missing \"version\""))?;
+        ensure!(
+            version == MANIFEST_VERSION,
+            "shard manifest version {version} unsupported"
+        );
+        let k = root
+            .get("k")
+            .and_then(json::Json::as_u64)
+            .ok_or_else(|| anyhow!("shard manifest: missing \"k\""))? as usize;
+        let shards = root
+            .get("shards")
+            .and_then(json::Json::as_arr)
+            .ok_or_else(|| anyhow!("shard manifest: missing \"shards\" array"))?;
+        let mut shard_dirs = Vec::with_capacity(shards.len());
+        let mut shard_rows = Vec::with_capacity(shards.len());
+        for entry in shards {
+            let dir = entry
+                .get("dir")
+                .and_then(json::Json::as_str)
+                .ok_or_else(|| anyhow!("shard manifest: shard entry missing \"dir\""))?;
+            let rows = entry
+                .get("rows")
+                .and_then(json::Json::as_u64)
+                .ok_or_else(|| anyhow!("shard manifest: shard entry missing \"rows\""))?;
+            ensure!(
+                !dir.contains('/') && !dir.contains("..") && !dir.is_empty(),
+                "shard manifest: bad shard dir {dir:?}"
+            );
+            shard_dirs.push(dir.to_string());
+            shard_rows.push(rows);
+        }
+        ensure!(!shard_dirs.is_empty(), "shard manifest: zero shards");
+        Ok(ShardManifest { k, shard_dirs, shard_rows })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join(SHARD_MANIFEST);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse {}", path.display()))
+    }
+
+    /// Atomically (temp file + rename) write the manifest into `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let tmp = dir.join(".shards.json.tmp");
+        std::fs::write(&tmp, self.to_json())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, dir.join(SHARD_MANIFEST))?;
+        Ok(())
+    }
+
+    /// Rewrite the manifest's advisory row counts from the durable
+    /// per-shard headers (used after per-thread shard finalization, where
+    /// no single writer knows every count).
+    pub fn reconcile(dir: &Path) -> Result<Self> {
+        let mut man = Self::load(dir)?;
+        for (name, rows) in man.shard_dirs.iter().zip(man.shard_rows.iter_mut()) {
+            let (_, hdr_rows) = read_v1_header(&dir.join(name).join("grads.bin"))?;
+            *rows = hdr_rows;
+        }
+        man.save(dir)?;
+        Ok(man)
+    }
+}
+
+/// Read (k, rows) from a v1 `grads.bin` header without mapping the file.
+fn read_v1_header(path: &Path) -> Result<(usize, u64)> {
+    let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut h = [0u8; 32];
+    f.read_exact(&mut h).with_context(|| format!("header of {}", path.display()))?;
+    ensure!(&h[..8] == b"LOGRAGRD", "bad grad store magic in {}", path.display());
+    let k = u32::from_le_bytes(h[12..16].try_into().unwrap()) as usize;
+    let rows = u64::from_le_bytes(h[16..24].try_into().unwrap());
+    Ok((k, rows))
+}
+
+fn shard_dir_name(i: usize) -> String {
+    format!("shard-{i:04}")
+}
+
+// ----------------------------------------------------------------- writer
+
+/// Writer for one shard of a sharded store. `Send`, so extraction can move
+/// each shard's writer into its own thread; `finalize` patches only this
+/// shard's header (crash-consistent independently of its siblings).
+pub struct ShardWriter {
+    pub shard: usize,
+    writer: GradStoreWriter,
+}
+
+impl ShardWriter {
+    pub fn append(&mut self, ids: &[u64], rows: &[f32]) -> Result<()> {
+        self.writer.append(ids, rows)
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.writer.rows()
+    }
+
+    /// Flush and patch this shard's header. The parent manifest keeps only
+    /// advisory counts, so no cross-shard coordination is needed here; run
+    /// [`ShardManifest::reconcile`] once every shard is finalized.
+    pub fn finalize(self) -> Result<u64> {
+        self.writer.finalize()
+    }
+}
+
+/// Multi-shard writer: one [`GradStoreWriter`] per shard subdirectory.
+/// Use [`ShardedWriter::append`] for single-threaded round-robin extraction
+/// or [`ShardedWriter::into_shard_writers`] to fan one writer out per
+/// thread.
+pub struct ShardedWriter {
+    dir: PathBuf,
+    k: usize,
+    writers: Vec<GradStoreWriter>,
+    next: usize,
+}
+
+impl ShardedWriter {
+    /// Create `n_shards` empty shards under `dir` and write the manifest
+    /// (zero rows) so the directory is openable from the first byte.
+    pub fn create(dir: &Path, k: usize, n_shards: usize) -> Result<Self> {
+        ensure!(n_shards >= 1, "sharded store needs at least one shard");
+        std::fs::create_dir_all(dir)?;
+        let mut writers = Vec::with_capacity(n_shards);
+        for i in 0..n_shards {
+            writers.push(GradStoreWriter::create(&dir.join(shard_dir_name(i)), k)?);
+        }
+        let man = ShardManifest {
+            k,
+            shard_dirs: (0..n_shards).map(shard_dir_name).collect(),
+            shard_rows: vec![0; n_shards],
+        };
+        man.save(dir)?;
+        Ok(ShardedWriter { dir: dir.to_path_buf(), k, writers, next: 0 })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.writers.len()
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Append a batch to a specific shard.
+    pub fn append_shard(&mut self, shard: usize, ids: &[u64], rows: &[f32]) -> Result<()> {
+        self.writers
+            .get_mut(shard)
+            .ok_or_else(|| anyhow!("shard {shard} out of range"))?
+            .append(ids, rows)
+    }
+
+    /// Append a batch, rotating shards round-robin per call (keeps shards
+    /// balanced under single-threaded extraction).
+    pub fn append(&mut self, ids: &[u64], rows: &[f32]) -> Result<()> {
+        let shard = self.next;
+        self.next = (self.next + 1) % self.writers.len();
+        self.append_shard(shard, ids, rows)
+    }
+
+    /// Split into per-shard writers for one-writer-per-thread extraction.
+    pub fn into_shard_writers(self) -> Vec<ShardWriter> {
+        self.writers
+            .into_iter()
+            .enumerate()
+            .map(|(shard, writer)| ShardWriter { shard, writer })
+            .collect()
+    }
+
+    /// Finalize every shard and rewrite the manifest with final counts.
+    pub fn finalize(self) -> Result<ShardManifest> {
+        let dir = self.dir;
+        let k = self.k;
+        let mut shard_rows = Vec::with_capacity(self.writers.len());
+        for w in self.writers {
+            shard_rows.push(w.finalize()?);
+        }
+        let man = ShardManifest {
+            k,
+            shard_dirs: (0..shard_rows.len()).map(shard_dir_name).collect(),
+            shard_rows,
+        };
+        man.save(&dir)?;
+        Ok(man)
+    }
+}
+
+// ------------------------------------------------------------------ store
+
+/// Read view over a sharded store — or over a plain v1 store, which opens
+/// as a 1-shard fabric. Exposes the same `rows()/k()/chunk()/id()` contract
+/// as [`GradStore`] via global→(shard, local) translation; `chunk` views
+/// must not cross a shard boundary (see [`ShardedStore::contiguous_len`]).
+pub struct ShardedStore {
+    shards: Vec<GradStore>,
+    /// `offsets[i]` = first global row of shard i; last entry = total rows.
+    offsets: Vec<usize>,
+    k: usize,
+}
+
+impl ShardedStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        if dir.join(SHARD_MANIFEST).exists() {
+            let man = ShardManifest::load(dir)?;
+            let mut shards = Vec::with_capacity(man.n_shards());
+            for name in &man.shard_dirs {
+                let s = GradStore::open(&dir.join(name))
+                    .with_context(|| format!("shard {name} of {}", dir.display()))?;
+                ensure!(
+                    s.k() == man.k,
+                    "shard {name}: k={} disagrees with manifest k={}",
+                    s.k(),
+                    man.k
+                );
+                shards.push(s);
+            }
+            Ok(Self::from_shards(shards, man.k))
+        } else {
+            // Legacy v1 directory: a transparent 1-shard fabric.
+            let s = GradStore::open(dir)?;
+            let k = s.k();
+            Ok(Self::from_shards(vec![s], k))
+        }
+    }
+
+    fn from_shards(shards: Vec<GradStore>, k: usize) -> Self {
+        let mut offsets = Vec::with_capacity(shards.len() + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for s in &shards {
+            acc += s.rows();
+            offsets.push(acc);
+        }
+        ShardedStore { shards, offsets, k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn rows(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &GradStore {
+        &self.shards[i]
+    }
+
+    /// First global row of shard i.
+    pub fn shard_start(&self, i: usize) -> usize {
+        self.offsets[i]
+    }
+
+    /// The single underlying [`GradStore`] when unsharded (lets callers
+    /// keep using v1-only paths, e.g. the HLO-scoring sequential engine).
+    pub fn as_single(&self) -> Option<&GradStore> {
+        if self.shards.len() == 1 {
+            Some(&self.shards[0])
+        } else {
+            None
+        }
+    }
+
+    /// Global row -> (shard index, local row). Skips empty shards.
+    pub fn locate(&self, row: usize) -> (usize, usize) {
+        assert!(row < self.rows(), "row {row} out of range");
+        let s = self.offsets.partition_point(|&o| o <= row) - 1;
+        (s, row - self.offsets[s])
+    }
+
+    /// Rows available in a single contiguous `chunk` view starting at
+    /// `start` (i.e. until the end of `start`'s shard).
+    pub fn contiguous_len(&self, start: usize) -> usize {
+        let (s, local) = self.locate(start);
+        self.shards[s].rows() - local
+    }
+
+    /// Raw f32 view of global rows [start, start+len). Panics if the range
+    /// crosses a shard boundary — scan loops should bound `len` by
+    /// [`ShardedStore::contiguous_len`] or iterate shards directly.
+    pub fn chunk(&self, start: usize, len: usize) -> &[f32] {
+        if len == 0 {
+            return &[];
+        }
+        let (s, local) = self.locate(start);
+        assert!(
+            local + len <= self.shards[s].rows(),
+            "chunk [{start}, {start}+{len}) crosses a shard boundary"
+        );
+        self.shards[s].chunk(local, len)
+    }
+
+    /// One global row.
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.chunk(i, 1)
+    }
+
+    /// Data id of global row i.
+    pub fn id(&self, i: usize) -> u64 {
+        let (s, local) = self.locate(i);
+        self.shards[s].id(local)
+    }
+
+    /// Total stored bytes across shards (Table-1 "Storage" column).
+    pub fn storage_bytes(&self) -> u64 {
+        self.shards.iter().map(GradStore::storage_bytes).sum()
+    }
+}
+
+// ------------------------------------------------------------- operations
+
+/// Split any store (v1 or already sharded) into `n_shards` contiguous
+/// shards at `dst`, preserving global row order and data ids.
+pub fn shard_store(src: &Path, dst: &Path, n_shards: usize) -> Result<ShardManifest> {
+    ensure!(n_shards >= 1, "need at least one shard");
+    let store = ShardedStore::open(src)?;
+    let rows = store.rows();
+    let k = store.k();
+    let base = rows / n_shards;
+    let rem = rows % n_shards;
+    let mut writer = ShardedWriter::create(dst, k, n_shards)?;
+    let mut at = 0usize;
+    for shard in 0..n_shards {
+        let want = base + usize::from(shard < rem);
+        let mut copied = 0usize;
+        while copied < want {
+            let len = (want - copied).min(store.contiguous_len(at)).min(1024);
+            let ids: Vec<u64> = (at..at + len).map(|g| store.id(g)).collect();
+            writer.append_shard(shard, &ids, store.chunk(at, len))?;
+            at += len;
+            copied += len;
+        }
+    }
+    writer.finalize()
+}
+
+/// Merge any store into a single v1 store at `dst` (global row order).
+pub fn merge_store(src: &Path, dst: &Path) -> Result<u64> {
+    let store = ShardedStore::open(src)?;
+    let k = store.k();
+    let mut w = GradStoreWriter::create(dst, k)?;
+    let rows = store.rows();
+    let mut at = 0usize;
+    while at < rows {
+        let len = store.contiguous_len(at).min(1024);
+        let ids: Vec<u64> = (at..at + len).map(|g| store.id(g)).collect();
+        w.append(&ids, store.chunk(at, len))?;
+        at += len;
+    }
+    w.finalize()
+}
+
+// ------------------------------------------------------------------- stat
+
+/// Summary of any store directory (the `store stat` CLI subcommand).
+#[derive(Clone, Debug)]
+pub struct StoreStat {
+    pub shards: usize,
+    pub rows: usize,
+    pub k: usize,
+    pub storage_bytes: u64,
+    pub shard_rows: Vec<usize>,
+}
+
+/// Inspect a store directory (v1 or sharded) from its durable headers.
+pub fn stat_store(dir: &Path) -> Result<StoreStat> {
+    let store = ShardedStore::open(dir)?;
+    Ok(StoreStat {
+        shards: store.n_shards(),
+        rows: store.rows(),
+        k: store.k(),
+        storage_bytes: store.storage_bytes(),
+        shard_rows: (0..store.n_shards()).map(|i| store.shard(i).rows()).collect(),
+    })
+}
+
+impl StoreStat {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("shards        {}\n", self.shards));
+        s.push_str(&format!("rows          {}\n", self.rows));
+        s.push_str(&format!("k             {}\n", self.k));
+        s.push_str(&format!(
+            "storage_bytes {} ({})\n",
+            self.storage_bytes,
+            crate::util::memory::human_bytes(self.storage_bytes)
+        ));
+        for (i, r) in self.shard_rows.iter().enumerate() {
+            s.push_str(&format!("  shard-{i:04}  {r} rows\n"));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------- minimal JSON subset
+
+/// Hand-rolled parser for the JSON subset `shards.json` uses (objects,
+/// arrays, strings without escapes, unsigned integers) — no serde offline.
+mod json {
+    use anyhow::{anyhow, ensure, Result};
+
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Json {
+        Num(u64),
+        Str(String),
+        Arr(Vec<Json>),
+        Obj(Vec<(String, Json)>),
+    }
+
+    impl Json {
+        pub fn get(&self, key: &str) -> Option<&Json> {
+            match self {
+                Json::Obj(pairs) => {
+                    pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+                }
+                _ => None,
+            }
+        }
+
+        pub fn as_u64(&self) -> Option<u64> {
+            match self {
+                Json::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Json::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        pub fn as_arr(&self) -> Option<&[Json]> {
+            match self {
+                Json::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.i == p.b.len(), "trailing bytes after JSON value");
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl Parser<'_> {
+        fn skip_ws(&mut self) {
+            while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&mut self) -> Result<u8> {
+            self.skip_ws();
+            self.b
+                .get(self.i)
+                .copied()
+                .ok_or_else(|| anyhow!("unexpected end of JSON"))
+        }
+
+        fn expect(&mut self, ch: u8) -> Result<()> {
+            let got = self.peek()?;
+            ensure!(got == ch, "expected {:?}, got {:?}", ch as char, got as char);
+            self.i += 1;
+            Ok(())
+        }
+
+        fn value(&mut self) -> Result<Json> {
+            match self.peek()? {
+                b'{' => self.object(),
+                b'[' => self.array(),
+                b'"' => Ok(Json::Str(self.string()?)),
+                b'0'..=b'9' => self.number(),
+                other => Err(anyhow!("unexpected JSON byte {:?}", other as char)),
+            }
+        }
+
+        fn object(&mut self) -> Result<Json> {
+            self.expect(b'{')?;
+            let mut pairs = Vec::new();
+            if self.peek()? == b'}' {
+                self.i += 1;
+                return Ok(Json::Obj(pairs));
+            }
+            loop {
+                let key = self.string()?;
+                self.expect(b':')?;
+                pairs.push((key, self.value()?));
+                match self.peek()? {
+                    b',' => self.i += 1,
+                    b'}' => {
+                        self.i += 1;
+                        return Ok(Json::Obj(pairs));
+                    }
+                    other => {
+                        return Err(anyhow!("expected ',' or '}}', got {:?}", other as char))
+                    }
+                }
+            }
+        }
+
+        fn array(&mut self) -> Result<Json> {
+            self.expect(b'[')?;
+            let mut items = Vec::new();
+            if self.peek()? == b']' {
+                self.i += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(self.value()?);
+                match self.peek()? {
+                    b',' => self.i += 1,
+                    b']' => {
+                        self.i += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    other => {
+                        return Err(anyhow!("expected ',' or ']', got {:?}", other as char))
+                    }
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String> {
+            self.expect(b'"')?;
+            let start = self.i;
+            while self.i < self.b.len() {
+                match self.b[self.i] {
+                    b'"' => {
+                        let s = std::str::from_utf8(&self.b[start..self.i])?.to_string();
+                        self.i += 1;
+                        return Ok(s);
+                    }
+                    b'\\' => return Err(anyhow!("escapes unsupported in shard manifest")),
+                    _ => self.i += 1,
+                }
+            }
+            Err(anyhow!("unterminated JSON string"))
+        }
+
+        fn number(&mut self) -> Result<Json> {
+            let start = self.i;
+            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+            let s = std::str::from_utf8(&self.b[start..self.i])?;
+            ensure!(!s.is_empty(), "empty JSON number");
+            Ok(Json::Num(s.parse()?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("logra-shard-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fill_sharded(
+        dir: &Path,
+        k: usize,
+        n_shards: usize,
+        batches: usize,
+        seed: u64,
+    ) -> (Vec<u64>, Vec<f32>) {
+        // Returns (ids, rows) in GLOBAL order (shard concatenation).
+        let mut w = ShardedWriter::create(dir, k, n_shards).unwrap();
+        let mut rng = Pcg32::seeded(seed);
+        let mut per_shard: Vec<(Vec<u64>, Vec<f32>)> =
+            (0..n_shards).map(|_| (Vec::new(), Vec::new())).collect();
+        let mut next_id = 0u64;
+        for b in 0..batches {
+            let shard = b % n_shards;
+            let n = 1 + rng.below_usize(4);
+            let ids: Vec<u64> = (0..n as u64).map(|i| next_id + i).collect();
+            next_id += n as u64;
+            let mut rows = vec![0.0f32; n * k];
+            rng.fill_normal(&mut rows, 1.0);
+            w.append_shard(shard, &ids, &rows).unwrap();
+            per_shard[shard].0.extend_from_slice(&ids);
+            per_shard[shard].1.extend_from_slice(&rows);
+        }
+        w.finalize().unwrap();
+        let mut ids = Vec::new();
+        let mut rows = Vec::new();
+        for (i, r) in per_shard {
+            ids.extend(i);
+            rows.extend(r);
+        }
+        (ids, rows)
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let man = ShardManifest {
+            k: 192,
+            shard_dirs: vec!["shard-0000".into(), "shard-0001".into()],
+            shard_rows: vec![128, 130],
+        };
+        let text = man.to_json();
+        let back = ShardManifest::parse(&text).unwrap();
+        assert_eq!(back, man);
+        assert_eq!(back.offsets(), vec![0, 128, 258]);
+        assert_eq!(back.total_rows(), 258);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(ShardManifest::parse("").is_err());
+        assert!(ShardManifest::parse("{\"version\": 2}").is_err());
+        assert!(ShardManifest::parse("{\"version\": 1, \"k\": 4, \"shards\": []}").is_err());
+        // Path traversal in shard dir names is rejected.
+        assert!(ShardManifest::parse(
+            "{\"version\": 1, \"k\": 4, \"shards\": [{\"dir\": \"../x\", \"rows\": 1}]}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sharded_roundtrip_global_order() {
+        let dir = tmpdir("roundtrip");
+        let k = 5;
+        let (ids, rows) = fill_sharded(&dir, k, 3, 10, 1);
+        let s = ShardedStore::open(&dir).unwrap();
+        assert_eq!(s.n_shards(), 3);
+        assert_eq!(s.rows(), ids.len());
+        assert_eq!(s.k(), k);
+        assert!(s.as_single().is_none());
+        for g in 0..s.rows() {
+            assert_eq!(s.id(g), ids[g]);
+            assert_eq!(s.row(g), &rows[g * k..(g + 1) * k]);
+        }
+        assert!(s.storage_bytes() > (rows.len() * 4) as u64);
+    }
+
+    #[test]
+    fn legacy_v1_opens_as_single_shard() {
+        let dir = tmpdir("legacy");
+        let k = 4;
+        let mut w = GradStoreWriter::create(&dir, k).unwrap();
+        let rows = vec![1.0f32; 3 * k];
+        w.append(&[7, 8, 9], &rows).unwrap();
+        w.finalize().unwrap();
+        let s = ShardedStore::open(&dir).unwrap();
+        assert_eq!(s.n_shards(), 1);
+        assert_eq!(s.rows(), 3);
+        assert!(s.as_single().is_some());
+        assert_eq!(s.chunk(0, 3), &rows[..]);
+        assert_eq!(s.id(2), 9);
+    }
+
+    #[test]
+    fn locate_skips_empty_shards() {
+        let dir = tmpdir("empty-shard");
+        let k = 2;
+        let mut w = ShardedWriter::create(&dir, k, 3).unwrap();
+        // Shard 1 stays empty.
+        w.append_shard(0, &[0, 1], &[0.0; 4]).unwrap();
+        w.append_shard(2, &[2], &[0.0; 2]).unwrap();
+        w.finalize().unwrap();
+        let s = ShardedStore::open(&dir).unwrap();
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.locate(0), (0, 0));
+        assert_eq!(s.locate(1), (0, 1));
+        assert_eq!(s.locate(2), (2, 0));
+        assert_eq!(s.contiguous_len(1), 1);
+        assert_eq!(s.id(2), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "crosses a shard boundary")]
+    fn chunk_across_boundary_panics() {
+        let dir = tmpdir("boundary");
+        let k = 2;
+        let mut w = ShardedWriter::create(&dir, k, 2).unwrap();
+        w.append_shard(0, &[0], &[0.0; 2]).unwrap();
+        w.append_shard(1, &[1], &[0.0; 2]).unwrap();
+        w.finalize().unwrap();
+        let s = ShardedStore::open(&dir).unwrap();
+        let _ = s.chunk(0, 2);
+    }
+
+    #[test]
+    fn shard_then_merge_roundtrip() {
+        let src = tmpdir("reshard-src");
+        let k = 3;
+        let mut w = GradStoreWriter::create(&src, k).unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let n = 17;
+        let mut rows = vec![0.0f32; n * k];
+        rng.fill_normal(&mut rows, 1.0);
+        let ids: Vec<u64> = (100..100 + n as u64).collect();
+        w.append(&ids, &rows).unwrap();
+        w.finalize().unwrap();
+
+        let sharded = tmpdir("reshard-dst");
+        let man = shard_store(&src, &sharded, 4).unwrap();
+        assert_eq!(man.n_shards(), 4);
+        assert_eq!(man.total_rows(), n as u64);
+        // Contiguous split: 5, 4, 4, 4.
+        assert_eq!(man.shard_rows, vec![5, 4, 4, 4]);
+        let s = ShardedStore::open(&sharded).unwrap();
+        for g in 0..n {
+            assert_eq!(s.id(g), ids[g]);
+            assert_eq!(s.row(g), &rows[g * k..(g + 1) * k]);
+        }
+
+        let merged = tmpdir("reshard-merged");
+        let total = merge_store(&sharded, &merged).unwrap();
+        assert_eq!(total, n as u64);
+        let m = GradStore::open(&merged).unwrap();
+        assert_eq!(m.chunk(0, n), &rows[..]);
+        for g in 0..n {
+            assert_eq!(m.id(g), ids[g]);
+        }
+    }
+
+    #[test]
+    fn unfinalized_shard_durable_and_siblings_intact() {
+        let dir = tmpdir("crash");
+        let k = 3;
+        let w = ShardedWriter::create(&dir, k, 3).unwrap();
+        let mut writers = w.into_shard_writers();
+        let mut rng = Pcg32::seeded(4);
+        let mut per_shard: Vec<Vec<f32>> = vec![Vec::new(); 3];
+        for (si, sw) in writers.iter_mut().enumerate() {
+            let mut rows = vec![0.0f32; 4 * k];
+            rng.fill_normal(&mut rows, 1.0);
+            let ids: Vec<u64> = (si as u64 * 10..si as u64 * 10 + 4).collect();
+            sw.append(&ids, &rows).unwrap();
+            per_shard[si] = rows;
+        }
+        // "Crash": shard 1's writer is dropped without finalize.
+        let w2 = writers.pop().unwrap(); // shard 2
+        let w1 = writers.pop().unwrap(); // shard 1
+        let w0 = writers.pop().unwrap(); // shard 0
+        assert_eq!(w0.finalize().unwrap(), 4);
+        drop(w1);
+        assert_eq!(w2.finalize().unwrap(), 4);
+
+        let s = ShardedStore::open(&dir).unwrap();
+        // Unfinalized shard reports its last durable count (0)...
+        assert_eq!(s.shard(1).rows(), 0);
+        // ...without corrupting siblings.
+        assert_eq!(s.rows(), 8);
+        assert_eq!(s.shard(0).chunk(0, 4), &per_shard[0][..]);
+        assert_eq!(s.shard(2).chunk(0, 4), &per_shard[2][..]);
+        assert_eq!(s.id(4), 20); // global row 4 = shard 2 local 0
+
+        // Reconcile syncs the advisory manifest counts to the headers.
+        let man = ShardManifest::reconcile(&dir).unwrap();
+        assert_eq!(man.shard_rows, vec![4, 0, 4]);
+        assert_eq!(ShardManifest::load(&dir).unwrap(), man);
+    }
+
+    #[test]
+    fn stat_reports_layout() {
+        let dir = tmpdir("stat");
+        let (ids, _) = fill_sharded(&dir, 6, 2, 6, 9);
+        let st = stat_store(&dir).unwrap();
+        assert_eq!(st.shards, 2);
+        assert_eq!(st.rows, ids.len());
+        assert_eq!(st.k, 6);
+        assert!(st.storage_bytes > 0);
+        assert_eq!(st.shard_rows.iter().sum::<usize>(), ids.len());
+        let text = st.render();
+        assert!(text.contains("shards"));
+        assert!(text.contains("storage_bytes"));
+    }
+
+    #[test]
+    fn round_robin_append_balances() {
+        let dir = tmpdir("rr");
+        let k = 2;
+        let mut w = ShardedWriter::create(&dir, k, 2).unwrap();
+        for b in 0..4u64 {
+            w.append(&[b], &[0.0; 2]).unwrap();
+        }
+        let man = w.finalize().unwrap();
+        assert_eq!(man.shard_rows, vec![2, 2]);
+    }
+}

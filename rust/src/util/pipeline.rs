@@ -8,6 +8,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 struct Inner<T> {
     queue: VecDeque<T>,
@@ -95,6 +96,30 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Blocking receive with a deadline: waits on the condvar (no
+    /// spinning) until a value arrives, all senders drop, or `deadline`
+    /// passes. `None` means closed OR timed out — deadline loops should
+    /// simply stop batching either way.
+    pub fn recv_deadline(&self, deadline: Instant) -> Option<T> {
+        let (lock, not_full, not_empty) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        loop {
+            if let Some(v) = g.queue.pop_front() {
+                not_full.notify_one();
+                return Some(v);
+            }
+            if g.senders == 0 || g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timeout) = not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Option<T> {
         let (lock, not_full, _) = &*self.inner;
@@ -178,6 +203,46 @@ mod tests {
         let (tx, rx) = bounded::<i32>(1);
         drop(tx);
         assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn recv_deadline_returns_queued_value_immediately() {
+        let (tx, rx) = bounded(2);
+        tx.send(7).unwrap();
+        let t0 = std::time::Instant::now();
+        let got = rx.recv_deadline(t0 + Duration::from_secs(5));
+        assert_eq!(got, Some(7));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn recv_deadline_times_out_without_spinning() {
+        let (tx, rx) = bounded::<i32>(1);
+        let t0 = std::time::Instant::now();
+        let got = rx.recv_deadline(t0 + Duration::from_millis(30));
+        assert_eq!(got, None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        drop(tx);
+    }
+
+    #[test]
+    fn recv_deadline_wakes_on_send() {
+        let (tx, rx) = bounded(1);
+        let h = spawn_worker("late-sender", move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(42).unwrap();
+        });
+        let got = rx.recv_deadline(std::time::Instant::now() + Duration::from_secs(5));
+        assert_eq!(got, Some(42));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_deadline_none_when_closed() {
+        let (tx, rx) = bounded::<i32>(1);
+        drop(tx);
+        let got = rx.recv_deadline(std::time::Instant::now() + Duration::from_secs(5));
+        assert_eq!(got, None);
     }
 
     #[test]

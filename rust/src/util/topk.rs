@@ -2,13 +2,24 @@
 //!
 //! The query engine scans millions of stored train gradients per query and
 //! keeps only the k most valuable — this heap is that reduction. NaN scores
-//! are rejected at insert so ordering stays total.
+//! are rejected at insert so ordering stays total, and ties are broken by
+//! data id (smaller id wins), making the kept SET a pure function of the
+//! candidate multiset — independent of push order. That order-independence
+//! is what lets the parallel scan engine keep one heap per shard and merge
+//! them into results bit-identical to a single sequential scan.
+
+/// Total order used for admission and eviction: by score, ties broken by
+/// preferring the smaller id (matches [`TopK::into_sorted`]'s ordering).
+#[inline]
+fn less(a: (f64, u64), b: (f64, u64)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+}
 
 /// Fixed-capacity top-k accumulator over (score, id) pairs.
 #[derive(Clone, Debug)]
 pub struct TopK {
     k: usize,
-    // Min-heap by score: heap[0] is the current k-th best.
+    // Min-heap by `less`: heap[0] is the current k-th best.
     heap: Vec<(f64, u64)>,
 }
 
@@ -43,9 +54,16 @@ impl TopK {
         if self.heap.len() < self.k {
             self.heap.push((score, id));
             self.sift_up(self.heap.len() - 1);
-        } else if score > self.heap[0].0 {
+        } else if less(self.heap[0], (score, id)) {
             self.heap[0] = (score, id);
             self.sift_down(0);
+        }
+    }
+
+    /// Merge another heap's survivors into this one.
+    pub fn merge(&mut self, other: TopK) {
+        for (s, id) in other.heap {
+            self.push(s, id);
         }
     }
 
@@ -59,7 +77,7 @@ impl TopK {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].0 < self.heap[parent].0 {
+            if less(self.heap[i], self.heap[parent]) {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -73,10 +91,10 @@ impl TopK {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut smallest = i;
-            if l < n && self.heap[l].0 < self.heap[smallest].0 {
+            if l < n && less(self.heap[l], self.heap[smallest]) {
                 smallest = l;
             }
-            if r < n && self.heap[r].0 < self.heap[smallest].0 {
+            if r < n && less(self.heap[r], self.heap[smallest]) {
                 smallest = r;
             }
             if smallest == i {
@@ -114,11 +132,8 @@ mod tests {
             }
             let got = tk.into_sorted();
             let want = brute_topk(&scores, k);
-            assert_eq!(got.len(), want.len(), "trial {trial}");
-            // Scores must match exactly; ids may differ only among ties.
-            for (g, w) in got.iter().zip(&want) {
-                assert_eq!(g.0, w.0, "trial {trial}");
-            }
+            // With total-order tie-breaking, ids match exactly too.
+            assert_eq!(got, want, "trial {trial}");
         }
     }
 
@@ -141,13 +156,55 @@ mod tests {
     }
 
     #[test]
-    fn ties_are_deterministic() {
+    fn ties_keep_smallest_ids() {
         let mut tk = TopK::new(2);
-        for i in 0..5 {
+        for i in [4u64, 2, 0, 3, 1] {
             tk.push(1.0, i);
         }
-        let out = tk.into_sorted();
-        assert_eq!(out.len(), 2);
-        assert!(out.iter().all(|&(s, _)| s == 1.0));
+        assert_eq!(tk.into_sorted(), vec![(1.0, 0), (1.0, 1)]);
+    }
+
+    #[test]
+    fn kept_set_is_push_order_independent() {
+        // The property the parallel scan-and-merge relies on.
+        let mut rng = Pcg32::seeded(7);
+        for trial in 0..30 {
+            let n = 5 + rng.below_usize(100);
+            let k = 1 + rng.below_usize(10);
+            // Coarse scores force plenty of ties.
+            let pairs: Vec<(f64, u64)> =
+                (0..n).map(|i| ((rng.below(5) as f64) / 2.0, i as u64)).collect();
+            let mut fwd = TopK::new(k);
+            let mut rev = TopK::new(k);
+            for &(s, id) in &pairs {
+                fwd.push(s, id);
+            }
+            for &(s, id) in pairs.iter().rev() {
+                rev.push(s, id);
+            }
+            assert_eq!(fwd.into_sorted(), rev.into_sorted(), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn merge_of_partial_heaps_matches_global() {
+        let mut rng = Pcg32::seeded(9);
+        for trial in 0..30 {
+            let n = 10 + rng.below_usize(200);
+            let k = 1 + rng.below_usize(8);
+            let parts = 2 + rng.below_usize(4);
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut global = TopK::new(k);
+            let mut shards: Vec<TopK> = (0..parts).map(|_| TopK::new(k)).collect();
+            for (i, &s) in scores.iter().enumerate() {
+                global.push(s, i as u64);
+                shards[i % parts].push(s, i as u64);
+            }
+            let mut merged = TopK::new(k);
+            for sh in shards {
+                merged.merge(sh);
+            }
+            assert_eq!(merged.into_sorted(), global.into_sorted(), "trial {trial}");
+        }
     }
 }

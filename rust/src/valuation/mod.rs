@@ -6,8 +6,12 @@
 //! every stored train gradient; the scan is chunked, each chunk's scores
 //! come from the Pallas-authored `score` HLO program (or a native fallback
 //! for odd shapes), and the next chunk is prefetched while the current one
-//! is scored.
+//! is scored. Over sharded stores, [`parallel::ParallelQueryEngine`] fans
+//! the scan out across worker threads and merges per-shard top-k heaps
+//! deterministically.
 
+pub mod parallel;
 pub mod scorer;
 
+pub use parallel::{ParallelQueryEngine, ParallelScanConfig};
 pub use scorer::{Normalization, QueryEngine, QueryResult};

@@ -1,0 +1,282 @@
+//! Parallel scan engine over a sharded gradient store.
+//!
+//! The paper's cost trade (§4.2) answers every influence query by scanning
+//! stored projected gradients; this module makes that scan scale past one
+//! thread: N workers pull shard indices off a bounded
+//! [`crate::util::pipeline`] channel, scan their shards chunk-wise through
+//! the native scoring path (PJRT handles are not `Send`, and chunked dot
+//! products are bitwise independent of the chunk split), keep one [`TopK`]
+//! heap per (shard, test row), and a deterministic merge stage folds the
+//! per-shard heaps into final results.
+//!
+//! Determinism: scores are per-(test,train)-pair dot products, unaffected
+//! by sharding or chunking; [`TopK`]'s total order on (score, id) makes the
+//! kept set a pure function of the candidate multiset. Together these make
+//! the parallel result **bit-identical** to the sequential
+//! [`QueryEngine`](super::QueryEngine) native scan, whatever the shard
+//! decomposition or worker count (verified by `rust/tests/shards.rs`).
+//! (The HLO scorer may round differently — the claim is scoped to the
+//! native path both engines share.)
+//!
+//! Workers are scoped threads spawned per query: the engine borrows the
+//! store, so threads cannot outlive it without `Arc`-ifying the fabric.
+//! Per-query spawn costs ~10s of µs per worker — noise once shards hold
+//! real row counts; a persistent pool is a follow-up once profiling says
+//! it matters.
+
+use std::cell::{Ref, RefCell};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::hessian::Preconditioner;
+use crate::linalg::matrix::matmul_t_slices;
+use crate::store::ShardedStore;
+use crate::util::pipeline::bounded;
+use crate::util::topk::TopK;
+
+use super::scorer::{Normalization, QueryResult};
+
+/// Knobs for the parallel scan.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelScanConfig {
+    /// Worker threads; 0 = one per available core (capped at 16).
+    pub workers: usize,
+    /// Rows scored per chunk within a shard.
+    pub chunk_len: usize,
+}
+
+impl Default for ParallelScanConfig {
+    fn default() -> Self {
+        ParallelScanConfig { workers: 0, chunk_len: 1024 }
+    }
+}
+
+/// Parallel influence scorer over a sharded store. Runtime-free: scoring
+/// runs on the native matmul path so workers stay `Send`.
+pub struct ParallelQueryEngine<'a> {
+    store: &'a ShardedStore,
+    precond: &'a Preconditioner,
+    cfg: ParallelScanConfig,
+    metrics: Option<Arc<Metrics>>,
+    /// Self-influence per GLOBAL row (RelatIF denominators), filled in
+    /// parallel on first use and cached across queries.
+    self_inf: RefCell<Option<Vec<f32>>>,
+}
+
+impl<'a> ParallelQueryEngine<'a> {
+    pub fn new(store: &'a ShardedStore, precond: &'a Preconditioner) -> Self {
+        ParallelQueryEngine {
+            store,
+            precond,
+            cfg: ParallelScanConfig::default(),
+            metrics: None,
+            self_inf: RefCell::new(None),
+        }
+    }
+
+    /// Set worker count (0 = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
+        self.cfg.chunk_len = chunk_len.max(1);
+        self
+    }
+
+    /// Record per-shard scan counters into shared service metrics.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Resolved worker count: explicit, else one per core, never more than
+    /// there are shards to scan.
+    pub fn workers(&self) -> usize {
+        let raw = if self.cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+        } else {
+            self.cfg.workers
+        };
+        raw.clamp(1, self.store.n_shards().max(1))
+    }
+
+    /// Full scan: top-k most valuable train examples per test row, merged
+    /// across shards. Same contract as the sequential
+    /// [`QueryEngine::query`](super::QueryEngine::query) (`test_grads`
+    /// row-major [nt, k], raw — preconditioning happens here), same
+    /// results.
+    pub fn query(
+        &self,
+        test_grads: &[f32],
+        nt: usize,
+        topk: usize,
+        norm: Normalization,
+    ) -> Result<Vec<QueryResult>> {
+        let k = self.store.k();
+        ensure!(
+            test_grads.len() == nt * k,
+            "query: {nt} rows x k={k} needs {} floats, got {}",
+            nt * k,
+            test_grads.len()
+        );
+        let pre = self.precond.apply_rows(test_grads, nt);
+        let selfs_guard = match norm {
+            Normalization::RelatIf => Some(self.train_self_influences()),
+            Normalization::None => None,
+        };
+        let selfs: Option<&[f32]> = selfs_guard.as_deref();
+
+        // Workers capture only Sync borrows (store, precond, slices) — the
+        // engine itself holds a RefCell cache and must stay on this thread.
+        let store = self.store;
+        let chunk_len = self.cfg.chunk_len.max(1);
+        let metrics = self.metrics.as_deref();
+        let pre_rows: &[f32] = &pre;
+        let shard_heaps = scatter_gather(self.workers(), store.n_shards(), &|si| {
+            scan_shard(store, si, pre_rows, nt, topk, selfs, chunk_len, metrics)
+        });
+
+        // Deterministic merge, shard-major: with TopK's total order the
+        // merged set equals the sequential scan's set; into_sorted then
+        // fixes the output order.
+        let mut finals: Vec<TopK> = (0..nt).map(|_| TopK::new(topk)).collect();
+        for heaps in shard_heaps {
+            for (t, h) in heaps.into_iter().enumerate() {
+                finals[t].merge(h);
+            }
+        }
+        Ok(finals.into_iter().map(|h| QueryResult { top: h.into_sorted() }).collect())
+    }
+
+    /// Self-influence of each stored row in global order (computed once in
+    /// parallel, then cached).
+    pub fn train_self_influences(&self) -> Ref<'_, [f32]> {
+        if self.self_inf.borrow().is_none() {
+            let store = self.store;
+            let precond = self.precond;
+            let chunk_len = self.cfg.chunk_len.max(1);
+            let per_shard = scatter_gather(self.workers(), store.n_shards(), &|si| {
+                shard_self_influences(store, precond, si, chunk_len)
+            });
+            let mut flat = Vec::with_capacity(store.rows());
+            for v in per_shard {
+                flat.extend(v);
+            }
+            *self.self_inf.borrow_mut() = Some(flat);
+        }
+        Ref::map(self.self_inf.borrow(), |o| o.as_deref().unwrap())
+    }
+}
+
+/// Run `job(shard_idx)` for every shard across `workers` threads and
+/// return results in shard order. Work distribution goes through a bounded
+/// pipeline channel so an uneven shard mix load-balances.
+fn scatter_gather<T, F>(workers: usize, n_shards: usize, job: &F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, n_shards.max(1));
+    let (work_tx, work_rx) = bounded::<usize>(n_shards.max(1));
+    let (res_tx, res_rx) = bounded::<(usize, T)>(n_shards.max(1));
+    let mut out: Vec<Option<T>> = (0..n_shards).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let rx = &work_rx;
+            let tx = res_tx.clone();
+            s.spawn(move || {
+                while let Some(si) = rx.recv() {
+                    if tx.send((si, job(si))).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(res_tx);
+        for si in 0..n_shards {
+            // Capacity covers every shard; never blocks.
+            work_tx.send(si).expect("scan workers died");
+        }
+        drop(work_tx);
+        while let Some((si, v)) = res_rx.recv() {
+            out[si] = Some(v);
+        }
+    });
+    out.into_iter().map(|v| v.expect("shard result missing")).collect()
+}
+
+/// Scan one shard: per-test-row TopK heaps over the shard's rows.
+/// `pre` is already preconditioned ([nt, k]).
+#[allow(clippy::too_many_arguments)]
+fn scan_shard(
+    store: &ShardedStore,
+    si: usize,
+    pre: &[f32],
+    nt: usize,
+    topk: usize,
+    selfs: Option<&[f32]>,
+    chunk_len: usize,
+    metrics: Option<&Metrics>,
+) -> Vec<TopK> {
+    let t0 = Instant::now();
+    let k = store.k();
+    let shard = store.shard(si);
+    let base = store.shard_start(si);
+    let mut heaps: Vec<TopK> = (0..nt).map(|_| TopK::new(topk)).collect();
+    let rows = shard.rows();
+    let mut at = 0usize;
+    while at < rows {
+        let len = chunk_len.min(rows - at);
+        if at + len < rows {
+            shard.prefetch(at + len, chunk_len.min(rows - at - len));
+        }
+        let chunk = shard.chunk(at, len);
+        let scores = matmul_t_slices(pre, nt, chunk, len, k);
+        for (t, heap) in heaps.iter_mut().enumerate() {
+            let srow = &scores[t * len..(t + 1) * len];
+            for (j, &s) in srow.iter().enumerate() {
+                let s = match selfs {
+                    Some(si_all) => {
+                        s as f64 / (si_all[base + at + j].max(0.0) as f64).sqrt().max(1e-12)
+                    }
+                    None => s as f64,
+                };
+                heap.push(s, shard.id(at + j));
+            }
+        }
+        at += len;
+    }
+    if let Some(m) = metrics {
+        m.shards_scanned.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Metrics::add_nanos(&m.shard_scan_nanos, t0.elapsed().as_secs_f64());
+    }
+    heaps
+}
+
+/// Self-influences of one shard's rows, chunk-wise.
+fn shard_self_influences(
+    store: &ShardedStore,
+    precond: &Preconditioner,
+    si: usize,
+    chunk_len: usize,
+) -> Vec<f32> {
+    let k = store.k();
+    let shard = store.shard(si);
+    let rows = shard.rows();
+    let mut out = Vec::with_capacity(rows);
+    let mut at = 0usize;
+    while at < rows {
+        let len = chunk_len.min(rows - at);
+        let chunk = shard.chunk(at, len);
+        for r in 0..len {
+            out.push(precond.self_influence(&chunk[r * k..(r + 1) * k]));
+        }
+        at += len;
+    }
+    out
+}

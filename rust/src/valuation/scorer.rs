@@ -1,6 +1,6 @@
 //! Query engine over a finalized gradient store.
 
-use std::cell::RefCell;
+use std::cell::{Ref, RefCell};
 
 use anyhow::Result;
 
@@ -29,15 +29,20 @@ pub struct QueryResult {
     pub top: Vec<(f64, u64)>,
 }
 
-/// Influence scorer bound to (runtime, store, preconditioner).
+/// Influence scorer bound to (store, preconditioner), optionally backed by
+/// a PJRT runtime for the AOT `score` program.
 pub struct QueryEngine<'a> {
-    pub rt: &'a Runtime,
+    rt: Option<&'a Runtime>,
     pub store: &'a GradStore,
     pub precond: &'a Preconditioner,
     /// Score chunks through the AOT Pallas `score` program (true) or the
-    /// native matmul fallback (false). HLO requires the manifest's
-    /// (test_batch, train_chunk) shapes; other shapes fall back natively.
+    /// native matmul fallback (false). HLO requires a runtime and the
+    /// manifest's (test_batch, train_chunk) shapes; other shapes fall back
+    /// natively.
     pub use_hlo: bool,
+    /// Scan chunk length (the manifest's `train_chunk` when a runtime is
+    /// attached).
+    chunk_len: usize,
     /// Lazily computed self-influence of every stored train row
     /// (RelatIF denominators), cached across queries.
     self_inf: RefCell<Option<Vec<f32>>>,
@@ -45,40 +50,71 @@ pub struct QueryEngine<'a> {
 
 impl<'a> QueryEngine<'a> {
     pub fn new(rt: &'a Runtime, store: &'a GradStore, precond: &'a Preconditioner) -> Self {
-        QueryEngine { rt, store, precond, use_hlo: true, self_inf: RefCell::new(None) }
+        QueryEngine {
+            rt: Some(rt),
+            store,
+            precond,
+            use_hlo: true,
+            chunk_len: rt.manifest.train_chunk.max(1),
+            self_inf: RefCell::new(None),
+        }
     }
 
-    /// Self-influence of each stored row (computed once, then cached).
-    pub fn train_self_influences(&self) -> Vec<f32> {
-        if let Some(v) = self.self_inf.borrow().as_ref() {
-            return v.clone();
+    /// Runtime-free engine: native scoring only. The oracle the parallel
+    /// scan engine is verified against, and the path tests use without
+    /// artifacts.
+    pub fn new_native(
+        store: &'a GradStore,
+        precond: &'a Preconditioner,
+        chunk_len: usize,
+    ) -> Self {
+        QueryEngine {
+            rt: None,
+            store,
+            precond,
+            use_hlo: false,
+            chunk_len: chunk_len.max(1),
+            self_inf: RefCell::new(None),
         }
-        let k = self.store.k();
-        let mut out = Vec::with_capacity(self.store.rows());
-        for i in 0..self.store.rows() {
-            let row = self.store.chunk(i, 1);
-            out.push(self.precond.self_influence(&row[..k]));
+    }
+
+    /// Self-influence of each stored row (computed chunk-wise once, then
+    /// served from the cache — no per-query clone).
+    pub fn train_self_influences(&self) -> Ref<'_, [f32]> {
+        if self.self_inf.borrow().is_none() {
+            let k = self.store.k();
+            let rows = self.store.rows();
+            let mut out = Vec::with_capacity(rows);
+            let mut at = 0usize;
+            while at < rows {
+                let len = self.chunk_len.min(rows - at);
+                let chunk = self.store.chunk(at, len);
+                for r in 0..len {
+                    out.push(self.precond.self_influence(&chunk[r * k..(r + 1) * k]));
+                }
+                at += len;
+            }
+            *self.self_inf.borrow_mut() = Some(out);
         }
-        *self.self_inf.borrow_mut() = Some(out.clone());
-        out
+        Ref::map(self.self_inf.borrow(), |o| o.as_deref().unwrap())
     }
 
     /// Score one chunk of stored rows against preconditioned test rows.
     /// `pre_rows` is row-major [nt, k]. Returns row-major [nt, len].
     fn score_chunk(&self, pre_rows: &[f32], nt: usize, start: usize, len: usize) -> Result<Vec<f32>> {
         let k = self.store.k();
-        let man = &self.rt.manifest;
         let chunk = self.store.chunk(start, len);
-        let use_hlo = self.use_hlo
-            && nt == man.test_batch
-            && len == man.train_chunk
-            && k == man.k_total;
-        if use_hlo {
-            let out = self.rt.run(
-                "score",
-                &[f32_lit(&[nt, k], pre_rows)?, f32_lit(&[len, k], chunk)?],
-            )?;
-            return Ok(to_f32_vec(&out[0])?);
+        if self.use_hlo {
+            if let Some(rt) = self.rt {
+                let man = &rt.manifest;
+                if nt == man.test_batch && len == man.train_chunk && k == man.k_total {
+                    let out = rt.run(
+                        "score",
+                        &[f32_lit(&[nt, k], pre_rows)?, f32_lit(&[len, k], chunk)?],
+                    )?;
+                    return Ok(to_f32_vec(&out[0])?);
+                }
+            }
         }
         // Native fallback (also used by tests as an oracle) — operates on
         // the mmap chunk in place, no copies.
@@ -99,13 +135,14 @@ impl<'a> QueryEngine<'a> {
         let k = self.store.k();
         assert_eq!(test_grads.len(), nt * k);
         let pre = self.precond.apply_rows(test_grads, nt);
-        let selfs = match norm {
+        let selfs_guard = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
             Normalization::None => None,
         };
+        let selfs: Option<&[f32]> = selfs_guard.as_deref();
         let mut heaps: Vec<TopK> = (0..nt).map(|_| TopK::new(topk)).collect();
         let rows = self.store.rows();
-        let chunk_len = self.rt.manifest.train_chunk.max(1);
+        let chunk_len = self.chunk_len;
         let mut at = 0usize;
         while at < rows {
             let len = chunk_len.min(rows - at);
@@ -118,7 +155,7 @@ impl<'a> QueryEngine<'a> {
                 let heap = &mut heaps[t];
                 let srow = &scores[t * len..(t + 1) * len];
                 for (j, &s) in srow.iter().enumerate() {
-                    let s = match &selfs {
+                    let s = match selfs {
                         Some(si) => s as f64 / (si[at + j].max(0.0) as f64).sqrt().max(1e-12),
                         None => s as f64,
                     };
@@ -141,13 +178,14 @@ impl<'a> QueryEngine<'a> {
         let k = self.store.k();
         assert_eq!(test_grads.len(), nt * k);
         let pre = self.precond.apply_rows(test_grads, nt);
-        let selfs = match norm {
+        let selfs_guard = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
             Normalization::None => None,
         };
+        let selfs: Option<&[f32]> = selfs_guard.as_deref();
         let rows = self.store.rows();
         let mut out = Matrix::zeros(nt, rows);
-        let chunk_len = self.rt.manifest.train_chunk.max(1);
+        let chunk_len = self.chunk_len;
         let mut at = 0usize;
         while at < rows {
             let len = chunk_len.min(rows - at);
@@ -155,7 +193,7 @@ impl<'a> QueryEngine<'a> {
             for t in 0..nt {
                 for j in 0..len {
                     let mut s = scores[t * len + j];
-                    if let Some(si) = &selfs {
+                    if let Some(si) = selfs {
                         s /= (si[at + j].max(0.0)).sqrt().max(1e-12);
                     }
                     out.data[t * rows + at + j] = s;

@@ -250,6 +250,7 @@ fn valuation_service_batches_requests() {
         damping: 0.1,
         norm: Normalization::None,
         max_wait: std::time::Duration::from_millis(5),
+        scan_workers: 1,
     })
     .unwrap();
 

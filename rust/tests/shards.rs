@@ -1,0 +1,243 @@
+//! Sharded store + parallel scan-and-merge subsystem tests (artifact-free:
+//! native scoring only, so these always run).
+//!
+//! The load-bearing property: for ANY shard decomposition of a store and
+//! ANY worker count, the parallel engine's top-k (score, data_id) results
+//! are identical to the sequential `QueryEngine` native scan over the
+//! unsharded store, and every `chunk()` view is byte-identical.
+
+use std::path::{Path, PathBuf};
+
+use logra::hessian::BlockHessian;
+use logra::prop_assert;
+use logra::store::{
+    merge_store, shard_store, GradStore, GradStoreWriter, ShardedStore, ShardedWriter,
+};
+use logra::util::proptest::check;
+use logra::util::rng::Pcg32;
+use logra::valuation::{Normalization, ParallelQueryEngine, QueryEngine};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-shards-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a v1 store with n rows of seeded gaussian data; ids are shuffled
+/// (NOT 0..n) so id-based tie-breaking is exercised honestly.
+fn write_store(dir: &Path, n: usize, k: usize, rng: &mut Pcg32) -> (Vec<u64>, Vec<f32>) {
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let mut ids: Vec<u64> = (0..n as u64).map(|i| i * 7 + 1000).collect();
+    rng.shuffle(&mut ids);
+    let mut w = GradStoreWriter::create(dir, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    (ids, rows)
+}
+
+fn make_precond(rows: &[f32], n: usize, k: usize) -> logra::hessian::Preconditioner {
+    let mut h = BlockHessian::single_block(k);
+    h.accumulate(rows, n);
+    h.preconditioner(0.1).unwrap()
+}
+
+#[test]
+fn prop_shard_decomposition_chunks_and_topk_identical() {
+    check("shard-parity", 8, |g| {
+        let k = 2 + g.int_in(0, 10);
+        let n = 8 + g.int_in(0, 120);
+        let n_shards = 1 + g.int_in(0, 5).min(n - 1);
+        let workers = 1 + g.int_in(0, 3);
+        let nt = 1 + g.int_in(0, 3);
+        let topk = 1 + g.int_in(0, 9);
+
+        let uniq = g.rng.next_u32();
+        let src = tmpdir(&format!("parity-src-{uniq}"));
+        let (ids, rows) = write_store(&src, n, k, &mut g.rng);
+        let sharded = tmpdir(&format!("parity-dst-{uniq}"));
+        shard_store(&src, &sharded, n_shards).unwrap();
+
+        // Byte-identical chunk views under any in-shard decomposition.
+        let fabric = ShardedStore::open(&sharded).unwrap();
+        prop_assert!(fabric.rows() == n, "rows {} != {n}", fabric.rows());
+        prop_assert!(fabric.k() == k, "k mismatch");
+        let mut at = 0usize;
+        while at < n {
+            let max_len = fabric.contiguous_len(at);
+            let len = 1 + g.rng.below_usize(max_len);
+            prop_assert!(
+                fabric.chunk(at, len) == &rows[at * k..(at + len) * k],
+                "chunk mismatch at {at}+{len}"
+            );
+            at += len;
+        }
+        for i in 0..n {
+            prop_assert!(fabric.id(i) == ids[i], "id mismatch at {i}");
+        }
+
+        // Identical top-k vs the sequential engine, both normalizations.
+        let single = GradStore::open(&src).unwrap();
+        let precond = make_precond(&rows, n, k);
+        let chunk_len = 1 + g.rng.below_usize(n);
+        let seq = QueryEngine::new_native(&single, &precond, chunk_len);
+        let mut test = vec![0.0f32; nt * k];
+        g.rng.fill_normal(&mut test, 1.0);
+        for norm in [Normalization::None, Normalization::RelatIf] {
+            let want = seq.query(&test, nt, topk, norm).unwrap();
+            let par = ParallelQueryEngine::new(&fabric, &precond)
+                .with_workers(workers)
+                .with_chunk_len(1 + g.rng.below_usize(n));
+            let got = par.query(&test, nt, topk, norm).unwrap();
+            prop_assert!(got.len() == want.len(), "result count");
+            for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+                prop_assert!(
+                    a.top == b.top,
+                    "top-k diverged (norm {norm:?}, test row {t}, shards {n_shards}, \
+                     workers {workers}):\n  par {:?}\n  seq {:?}",
+                    a.top,
+                    b.top
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn duplicate_rows_tie_break_identically() {
+    // Exact score ties (duplicated gradient rows) must resolve the same
+    // way in both engines — the total-order TopK guarantee.
+    let k = 4;
+    let n = 32;
+    let dir = tmpdir("ties-src");
+    let mut rng = Pcg32::seeded(11);
+    let mut one_row = vec![0.0f32; k];
+    rng.fill_normal(&mut one_row, 1.0);
+    let mut rows = Vec::with_capacity(n * k);
+    for _ in 0..n {
+        rows.extend_from_slice(&one_row); // every row identical
+    }
+    let ids: Vec<u64> = (0..n as u64).map(|i| 500 - i * 3).collect();
+    let mut w = GradStoreWriter::create(&dir, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+
+    let sharded = tmpdir("ties-dst");
+    shard_store(&dir, &sharded, 5).unwrap();
+    let single = GradStore::open(&dir).unwrap();
+    let fabric = ShardedStore::open(&sharded).unwrap();
+    let precond = make_precond(&rows, n, k);
+    let mut test = vec![0.0f32; k];
+    rng.fill_normal(&mut test, 1.0);
+
+    let seq = QueryEngine::new_native(&single, &precond, 7);
+    let want = seq.query(&test, 1, 6, Normalization::None).unwrap();
+    let par = ParallelQueryEngine::new(&fabric, &precond).with_workers(3).with_chunk_len(4);
+    let got = par.query(&test, 1, 6, Normalization::None).unwrap();
+    assert_eq!(got[0].top, want[0].top);
+    // All scores tie; kept ids must be the 6 smallest.
+    let mut kept: Vec<u64> = got[0].top.iter().map(|&(_, id)| id).collect();
+    let mut smallest = ids.clone();
+    smallest.sort_unstable();
+    smallest.truncate(6);
+    kept.sort_unstable();
+    assert_eq!(kept, smallest);
+}
+
+#[test]
+fn parallel_self_influences_match_sequential() {
+    let k = 6;
+    let n = 40;
+    let src = tmpdir("selfinf-src");
+    let mut rng = Pcg32::seeded(21);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("selfinf-dst");
+    shard_store(&src, &sharded, 3).unwrap();
+    let single = GradStore::open(&src).unwrap();
+    let fabric = ShardedStore::open(&sharded).unwrap();
+    let precond = make_precond(&rows, n, k);
+    let seq = QueryEngine::new_native(&single, &precond, 8);
+    let par = ParallelQueryEngine::new(&fabric, &precond).with_workers(2).with_chunk_len(8);
+    assert_eq!(&*seq.train_self_influences(), &*par.train_self_influences());
+}
+
+#[test]
+fn crash_unfinalized_shard_serves_durable_rows() {
+    // One shard "crashes" before finalize; the fabric still opens, serves
+    // every durable row, and parallel queries agree with a sequential scan
+    // of the surviving data.
+    let k = 3;
+    let dir = tmpdir("crash-fabric");
+    let w = ShardedWriter::create(&dir, k, 3).unwrap();
+    let mut writers = w.into_shard_writers();
+    let mut rng = Pcg32::seeded(31);
+    let mut survivors_rows: Vec<f32> = Vec::new();
+    let mut survivors_ids: Vec<u64> = Vec::new();
+    for (si, sw) in writers.iter_mut().enumerate() {
+        let mut rows = vec![0.0f32; 5 * k];
+        rng.fill_normal(&mut rows, 1.0);
+        let ids: Vec<u64> = (si as u64 * 100..si as u64 * 100 + 5).collect();
+        sw.append(&ids, &rows).unwrap();
+        if si != 1 {
+            survivors_rows.extend_from_slice(&rows);
+            survivors_ids.extend_from_slice(&ids);
+        }
+    }
+    let w2 = writers.pop().unwrap();
+    let w1 = writers.pop().unwrap();
+    let w0 = writers.pop().unwrap();
+    w0.finalize().unwrap();
+    drop(w1); // crash: shard 1 never finalized
+    w2.finalize().unwrap();
+
+    let fabric = ShardedStore::open(&dir).unwrap();
+    assert_eq!(fabric.rows(), 10);
+    assert_eq!(fabric.shard(1).rows(), 0);
+    for g in 0..10 {
+        assert_eq!(fabric.id(g), survivors_ids[g]);
+        assert_eq!(fabric.row(g), &survivors_rows[g * k..(g + 1) * k]);
+    }
+
+    // Queries over the degraded fabric == sequential scan of survivors.
+    let merged = tmpdir("crash-merged");
+    merge_store(&dir, &merged).unwrap();
+    let single = GradStore::open(&merged).unwrap();
+    let precond = make_precond(&survivors_rows, 10, k);
+    let mut test = vec![0.0f32; k];
+    rng.fill_normal(&mut test, 1.0);
+    let seq = QueryEngine::new_native(&single, &precond, 4);
+    let par = ParallelQueryEngine::new(&fabric, &precond).with_workers(2).with_chunk_len(4);
+    assert_eq!(
+        par.query(&test, 1, 5, Normalization::None).unwrap()[0].top,
+        seq.query(&test, 1, 5, Normalization::None).unwrap()[0].top
+    );
+}
+
+#[test]
+fn legacy_v1_store_queries_unchanged() {
+    // A v1 directory opens as a 1-shard fabric and the parallel engine
+    // reproduces the sequential engine exactly on it.
+    let k = 5;
+    let n = 24;
+    let dir = tmpdir("legacy-query");
+    let mut rng = Pcg32::seeded(41);
+    let (_, rows) = write_store(&dir, n, k, &mut rng);
+    let single = GradStore::open(&dir).unwrap();
+    let fabric = ShardedStore::open(&dir).unwrap();
+    assert_eq!(fabric.n_shards(), 1);
+    assert!(fabric.as_single().is_some());
+    let precond = make_precond(&rows, n, k);
+    let mut test = vec![0.0f32; 2 * k];
+    rng.fill_normal(&mut test, 1.0);
+    let seq = QueryEngine::new_native(&single, &precond, 6);
+    let par = ParallelQueryEngine::new(&fabric, &precond).with_workers(4).with_chunk_len(6);
+    for norm in [Normalization::None, Normalization::RelatIf] {
+        let a = seq.query(&test, 2, 4, norm).unwrap();
+        let b = par.query(&test, 2, 4, norm).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.top, y.top);
+        }
+    }
+}

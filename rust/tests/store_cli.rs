@@ -1,0 +1,56 @@
+//! Smoke test for the `store stat` CLI surface: the library function the
+//! subcommand prints, over both v1 and sharded layouts.
+
+use std::path::PathBuf;
+
+use logra::store::{shard_store, stat_store, GradStoreWriter};
+use logra::util::rng::Pcg32;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-store-cli-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn stat_on_v1_and_sharded_stores() {
+    let src = tmpdir("stat-src");
+    let k = 12;
+    let n = 50;
+    let mut rng = Pcg32::seeded(3);
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let mut w = GradStoreWriter::create(&src, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+
+    // v1 directory: reported as a 1-shard fabric.
+    let st = stat_store(&src).unwrap();
+    assert_eq!(st.shards, 1);
+    assert_eq!(st.rows, n);
+    assert_eq!(st.k, k);
+    // Storage column = grads.bin (header + rows*k*4) + ids.bin (rows*8).
+    assert_eq!(st.storage_bytes, (32 + n * k * 4 + n * 8) as u64);
+
+    // Sharded copy: same rows/k/storage math, shard breakdown visible.
+    let dst = tmpdir("stat-dst");
+    shard_store(&src, &dst, 3).unwrap();
+    let st = stat_store(&dst).unwrap();
+    assert_eq!(st.shards, 3);
+    assert_eq!(st.rows, n);
+    assert_eq!(st.k, k);
+    assert_eq!(st.shard_rows, vec![17, 17, 16]);
+    assert_eq!(st.storage_bytes, (3 * 32 + n * k * 4 + n * 8) as u64);
+
+    let text = st.render();
+    assert!(text.contains("shards        3"), "render:\n{text}");
+    assert!(text.contains("rows          50"), "render:\n{text}");
+    assert!(text.contains("k             12"), "render:\n{text}");
+    assert!(text.contains("storage_bytes"), "render:\n{text}");
+    assert!(text.contains("shard-0002"), "render:\n{text}");
+
+    // Missing directory is a clean error, not a panic.
+    assert!(stat_store(&tmpdir("stat-missing").join("nope")).is_err());
+}
