@@ -1,15 +1,22 @@
 //! Bench: substrate microbenchmarks — host linalg (matmul_t, eigh),
-//! store scan bandwidth, sharded parallel scan throughput, top-k
+//! store scan bandwidth, sharded parallel scan throughput, quantized
+//! (int8) scan and two-stage scan-then-rescore throughput, top-k
 //! throughput, preconditioner apply. These locate the L3 hot-path costs
 //! for the perf pass (DESIGN.md §7).
+//!
+//! Emits `BENCH_scan.json` (rows/s for the f32 scan, the quantized scan,
+//! and the two-stage engine, plus storage bytes per codec) so the scan
+//! perf trajectory is tracked across PRs.
 
 use logra::hessian::BlockHessian;
 use logra::linalg::{eigh, Matrix};
-use logra::store::{shard_store, GradStore, GradStoreWriter, ShardedStore};
+use logra::store::{
+    quantize_store, shard_store, GradStore, GradStoreWriter, QuantShardedStore, ShardedStore,
+};
 use logra::util::bench::{bench, report_metric, BenchOpts};
 use logra::util::rng::Pcg32;
 use logra::util::topk::TopK;
-use logra::valuation::{Normalization, ParallelQueryEngine};
+use logra::valuation::{Normalization, ParallelQueryEngine, QueryEngine, TwoStageEngine};
 
 fn main() {
     let mut rng = Pcg32::seeded(7);
@@ -142,6 +149,84 @@ fn main() {
                 ),
             }
         }
+
+        // Quantized scan + two-stage rescore vs the f32 scan — same rows,
+        // same k, same queries, all single-worker so the comparison is
+        // codec vs codec, not parallelism. Feeds BENCH_scan.json.
+        let quant_dir = std::env::temp_dir().join("logra-microbench-shard-q8");
+        let _ = std::fs::remove_dir_all(&quant_dir);
+        quantize_store(&sharded_dir, &quant_dir).unwrap();
+        let quant = QuantShardedStore::open(&quant_dir).unwrap();
+        let single = GradStore::open(&src).unwrap();
+        let topk = 10usize;
+
+        let f32_engine = QueryEngine::new_native(&single, &precond, 512);
+        let f32_mean = bench(
+            "store.scan_f32.seq",
+            BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 30.0 },
+            || {
+                let out = f32_engine.query(&test, nt, topk, Normalization::None).unwrap();
+                std::hint::black_box(&out);
+            },
+        )
+        .summary()
+        .mean;
+
+        // rescore_factor 1: the smallest exact pool — effectively the pure
+        // int8 coarse-scan cost.
+        let mut ts_means = [0.0f64; 2];
+        for (slot, factor) in [(0usize, 1usize), (1, 4)] {
+            let engine = TwoStageEngine::new(&quant, &store, &precond)
+                .unwrap()
+                .with_workers(1)
+                .with_chunk_len(512)
+                .with_rescore_factor(factor);
+            ts_means[slot] = bench(
+                &format!("store.scan_q8.rf{factor}"),
+                BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 30.0 },
+                || {
+                    let out = engine.query(&test, nt, topk, Normalization::None).unwrap();
+                    std::hint::black_box(&out);
+                },
+            )
+            .summary()
+            .mean;
+        }
+        let (quant_mean, two_stage_mean) = (ts_means[0], ts_means[1]);
+
+        let f32_rows_per_s = rows as f64 / f32_mean;
+        let quant_rows_per_s = rows as f64 / quant_mean;
+        let two_stage_rows_per_s = rows as f64 / two_stage_mean;
+        report_metric("micro.store.scan_f32.rows_per_s", f32_rows_per_s, "rows/s");
+        report_metric("micro.store.scan_q8.rows_per_s", quant_rows_per_s, "rows/s");
+        report_metric("micro.store.two_stage.rows_per_s", two_stage_rows_per_s, "rows/s");
+        report_metric(
+            "micro.store.scan_q8.speedup",
+            f32_mean / quant_mean,
+            "x vs f32 scan",
+        );
+
+        let f32_bytes = store.storage_bytes();
+        let q8_bytes = quant.storage_bytes();
+        report_metric(
+            "micro.store.q8.compression",
+            f32_bytes as f64 / q8_bytes as f64,
+            "x smaller",
+        );
+        let json = format!(
+            "{{\n  \"rows\": {rows},\n  \"k\": {k},\n  \"nt\": {nt},\n  \"topk\": {topk},\n  \
+             \"f32_rows_per_s\": {f32_rows_per_s:.1},\n  \
+             \"quant_rows_per_s\": {quant_rows_per_s:.1},\n  \
+             \"two_stage_rows_per_s\": {two_stage_rows_per_s:.1},\n  \
+             \"quant_speedup_vs_f32\": {:.3},\n  \
+             \"f32_storage_bytes\": {f32_bytes},\n  \
+             \"quant_storage_bytes\": {q8_bytes},\n  \
+             \"compression_ratio\": {:.3}\n}}\n",
+            f32_mean / quant_mean,
+            f32_bytes as f64 / q8_bytes as f64,
+        );
+        std::fs::write("BENCH_scan.json", &json).unwrap();
+        println!("wrote BENCH_scan.json");
     }
 
     // Top-k under a firehose of scores.

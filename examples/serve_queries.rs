@@ -26,13 +26,17 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let parsed = logra::cli::parse(
         &args,
-        &["clients", "requests", "n-train", "shards", "scan-workers"],
+        &["clients", "requests", "n-train", "shards", "scan-workers", "rescore-factor"],
     )?;
     let n_clients = parsed.usize_or("clients", 4)?;
     let n_requests = parsed.usize_or("requests", 24)?;
     let n_train = parsed.usize_or("n-train", 512)?;
     let n_shards = parsed.usize_or("shards", 1)?;
     let scan_workers = parsed.usize_or("scan-workers", 1)?;
+    // `--quantized` serves the two-stage path: int8 coarse scan over a
+    // quantized copy, exact rescore of rescore_factor x topk candidates.
+    let quantized = parsed.has_switch("quantized");
+    let rescore_factor = parsed.usize_or("rescore-factor", 4)?;
 
     let root = std::env::current_dir()?;
     let artifact_dir = root.join("artifacts").join("lm_tiny");
@@ -67,6 +71,18 @@ fn main() -> Result<()> {
         store_dir
     };
 
+    // Optionally quantize the (possibly resharded) store so the service
+    // can run the two-stage int8-scan + exact-rescore path.
+    let quant_dir = if quantized {
+        let qdir = root.join("runs").join("serve-store-q8");
+        let _ = std::fs::remove_dir_all(&qdir);
+        let man = logra::store::quantize_store(&store_dir, &qdir)?;
+        println!("quantized copy ready ({} rows, int8 codec)", man.total_rows());
+        Some(qdir)
+    } else {
+        None
+    };
+
     // Online phase: spawn the service, hammer it from client threads.
     let svc = Arc::new(ValuationService::spawn(ServiceConfig {
         artifact_dir,
@@ -78,6 +94,9 @@ fn main() -> Result<()> {
         norm: Normalization::RelatIf,
         max_wait: Duration::from_millis(4),
         scan_workers,
+        quantized_scan: quantized,
+        rescore_factor,
+        quant_dir,
     })?);
 
     let t0 = Instant::now();
@@ -129,6 +148,15 @@ fn main() -> Result<()> {
             "parallel scan      {} shard scans, concurrency {:.2}x",
             snap.shards_scanned,
             snap.scan_concurrency()
+        );
+    }
+    if snap.candidates_rescored > 0 {
+        println!(
+            "two-stage scan     stage1 {:.3}s  stage2 {:.3}s  rescored {} rows ({:.2}% of scanned)",
+            snap.stage1_seconds,
+            snap.stage2_seconds,
+            snap.candidates_rescored,
+            snap.rescore_fraction() * 100.0
         );
     }
     Arc::try_unwrap(svc).ok().map(|s| s.shutdown());

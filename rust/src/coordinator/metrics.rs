@@ -18,6 +18,13 @@ pub struct Metrics {
     /// accrues ~W× faster than `scan_nanos` wall time — the ratio is the
     /// scan's effective parallelism.
     pub shard_scan_nanos: AtomicU64,
+    /// Two-stage engine: wall time of the stage-1 quantized coarse scan.
+    pub stage1_nanos: AtomicU64,
+    /// Two-stage engine: wall time of the stage-2 exact rescore.
+    pub stage2_nanos: AtomicU64,
+    /// Two-stage engine: candidate rows rescored at exact precision (the
+    /// sublinear full-precision workload; compare against `rows_scanned`).
+    pub candidates_rescored: AtomicU64,
 }
 
 impl Metrics {
@@ -31,6 +38,9 @@ impl Metrics {
             queue_wait_seconds: self.queue_wait_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             shards_scanned: self.shards_scanned.load(Ordering::Relaxed),
             shard_scan_seconds: self.shard_scan_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            stage1_seconds: self.stage1_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            stage2_seconds: self.stage2_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            candidates_rescored: self.candidates_rescored.load(Ordering::Relaxed),
         }
     }
 
@@ -50,6 +60,9 @@ pub struct MetricsSnapshot {
     pub queue_wait_seconds: f64,
     pub shards_scanned: u64,
     pub shard_scan_seconds: f64,
+    pub stage1_seconds: f64,
+    pub stage2_seconds: f64,
+    pub candidates_rescored: u64,
 }
 
 impl MetricsSnapshot {
@@ -79,6 +92,17 @@ impl MetricsSnapshot {
             self.shard_scan_seconds / self.scan_seconds
         }
     }
+
+    /// Fraction of scanned rows that reached the exact rescore stage — the
+    /// two-stage engine's sublinearity (≈ rescore_factor·topk / rows when
+    /// quantized scanning is on; 0.0 on full-precision paths).
+    pub fn rescore_fraction(&self) -> f64 {
+        if self.rows_scanned == 0 {
+            0.0
+        } else {
+            self.candidates_rescored as f64 / self.rows_scanned as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -94,10 +118,16 @@ mod tests {
         Metrics::add_nanos(&m.scan_nanos, 2.0);
         m.shards_scanned.store(8, Ordering::Relaxed);
         Metrics::add_nanos(&m.shard_scan_nanos, 6.0);
+        Metrics::add_nanos(&m.stage1_nanos, 1.5);
+        Metrics::add_nanos(&m.stage2_nanos, 0.5);
+        m.candidates_rescored.store(40, Ordering::Relaxed);
         let s = m.snapshot();
         assert!((s.mean_batch_fill() - 2.5).abs() < 1e-12);
         assert!((s.pairs_per_sec(4) - 2000.0).abs() < 1.0);
         assert_eq!(s.shards_scanned, 8);
         assert!((s.scan_concurrency() - 3.0).abs() < 1e-9);
+        assert!((s.stage1_seconds - 1.5).abs() < 1e-9);
+        assert!((s.stage2_seconds - 0.5).abs() < 1e-9);
+        assert!((s.rescore_fraction() - 0.04).abs() < 1e-12);
     }
 }

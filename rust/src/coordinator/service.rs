@@ -13,7 +13,11 @@
 //! out over); a sharded store uses the parallel scan-and-merge engine,
 //! whose results are bit-identical to a sequential NATIVE scan of the
 //! same rows (the HLO and native scorers may differ in f32 rounding, so
-//! resharding a corpus swaps scorer as well as parallelism).
+//! resharding a corpus swaps scorer as well as parallelism). With
+//! `quantized_scan` set (plus a `quant_dir` produced by
+//! `logra store quantize`), queries run the two-stage engine instead:
+//! int8 coarse scan over the quantized copy, exact f32 rescore of a
+//! `rescore_factor × topk` candidate pool.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -25,10 +29,10 @@ use crate::coordinator::metrics::Metrics;
 use crate::hessian::BlockHessian;
 use crate::runtime::literal::{f32_lit, i32_lit, to_f32_vec};
 use crate::runtime::Runtime;
-use crate::store::ShardedStore;
+use crate::store::{QuantShardedStore, ShardedStore};
 use crate::util::pipeline::{bounded, Sender};
 use crate::valuation::{
-    Normalization, ParallelQueryEngine, QueryEngine, QueryResult,
+    Normalization, ParallelQueryEngine, QueryEngine, QueryResult, TwoStageEngine,
 };
 
 /// Service construction parameters (everything `Send`).
@@ -47,6 +51,16 @@ pub struct ServiceConfig {
     /// fixed count). Unsharded v1 stores always use the sequential HLO
     /// engine — one shard has nothing to fan out over.
     pub scan_workers: usize,
+    /// Serve queries through the two-stage engine: int8 coarse scan over
+    /// the quantized copy at `quant_dir`, exact f32 rescore of a
+    /// `rescore_factor × topk` candidate pool against `store_dir`.
+    pub quantized_scan: bool,
+    /// Stage-1 candidate pool multiplier (≥ 1; larger = higher recall,
+    /// more exact-precision work). Ignored unless `quantized_scan`.
+    pub rescore_factor: usize,
+    /// Quantized copy of `store_dir` (from `logra store quantize`).
+    /// Required when `quantized_scan` is set.
+    pub quant_dir: Option<PathBuf>,
 }
 
 /// One LM valuation request: value this token sequence against the store.
@@ -56,10 +70,11 @@ struct ServiceRequest {
     resp: Sender<QueryResult>,
 }
 
-/// Either scan engine behind one `query` call.
+/// Any scan engine behind one `query` call.
 enum Scanner<'a> {
     Seq(QueryEngine<'a>),
     Par(ParallelQueryEngine<'a>),
+    Two(TwoStageEngine<'a>),
 }
 
 impl Scanner<'_> {
@@ -73,6 +88,7 @@ impl Scanner<'_> {
         match self {
             Scanner::Seq(e) => e.query(g, nt, topk, norm),
             Scanner::Par(e) => e.query(g, nt, topk, norm),
+            Scanner::Two(e) => e.query(g, nt, topk, norm),
         }
     }
 }
@@ -103,9 +119,34 @@ impl ValuationService {
                 // Pay the one-time setup (store open, eigendecomposition,
                 // XLA compilation) BEFORE signalling readiness, so no
                 // request ever observes it as tail latency (§Perf log).
-                let setup = (|| -> Result<(Runtime, ShardedStore, crate::hessian::Preconditioner)> {
+                type Setup =
+                    (Runtime, ShardedStore, Option<QuantShardedStore>, crate::hessian::Preconditioner);
+                let setup = (|| -> Result<Setup> {
                     let rt = Runtime::open(&cfg.artifact_dir)?;
                     let store = ShardedStore::open(&cfg.store_dir)?;
+                    // Open (and sanity-check) the quantized companion up
+                    // front so a stale copy fails construction, not the
+                    // first query.
+                    let quant = if cfg.quantized_scan {
+                        let qdir = cfg.quant_dir.as_ref().ok_or_else(|| {
+                            anyhow!("quantized_scan requires quant_dir (run `logra store quantize`)")
+                        })?;
+                        let q = QuantShardedStore::open(qdir)?;
+                        anyhow::ensure!(
+                            q.rows() == store.rows() && q.k() == store.k(),
+                            "quantized copy {} ({} rows, k={}) does not mirror store {} \
+                             ({} rows, k={}) — re-run `logra store quantize`",
+                            qdir.display(),
+                            q.rows(),
+                            q.k(),
+                            cfg.store_dir.display(),
+                            store.rows(),
+                            store.k()
+                        );
+                        Some(q)
+                    } else {
+                        None
+                    };
                     let precond = cfg.hessian.preconditioner(cfg.damping)?;
                     rt.warmup(&["logra_log", "score"])?;
                     // Compilation alone is not enough: the first EXECUTION
@@ -115,16 +156,18 @@ impl ValuationService {
                         let man = &rt.manifest;
                         let p = f32_lit(&[man.n_params], &cfg.params)?;
                         let pr = f32_lit(&[man.proj_len], &cfg.proj_flat)?;
-                        let tok =
-                            i32_lit(&[man.log_batch, man.seq_len], &vec![0i32; man.log_batch * man.seq_len])?;
+                        let zeros_tok = vec![0i32; man.log_batch * man.seq_len];
+                        let tok = i32_lit(&[man.log_batch, man.seq_len], &zeros_tok)?;
                         rt.run_ref("logra_log", &[&p, &pr, &tok])?;
-                        let a = f32_lit(&[man.test_batch, man.k_total], &vec![0.0; man.test_batch * man.k_total])?;
-                        let b = f32_lit(&[man.train_chunk, man.k_total], &vec![0.0; man.train_chunk * man.k_total])?;
+                        let zeros_a = vec![0.0; man.test_batch * man.k_total];
+                        let a = f32_lit(&[man.test_batch, man.k_total], &zeros_a)?;
+                        let zeros_b = vec![0.0; man.train_chunk * man.k_total];
+                        let b = f32_lit(&[man.train_chunk, man.k_total], &zeros_b)?;
                         rt.run_ref("score", &[&a, &b])?;
                     }
-                    Ok((rt, store, precond))
+                    Ok((rt, store, quant, precond))
                 })();
-                let (rt, store, precond) = match setup {
+                let (rt, store, quant, precond) = match setup {
                     Ok(v) => {
                         let _ = ready_tx.send(Ok(()));
                         v
@@ -136,14 +179,26 @@ impl ValuationService {
                     }
                 };
                 let chunk_len = rt.manifest.train_chunk.max(1);
-                let engine = match store.as_single() {
-                    Some(single) => Scanner::Seq(QueryEngine::new(&rt, single, &precond)),
-                    None => Scanner::Par(
-                        ParallelQueryEngine::new(&store, &precond)
+                let engine = match &quant {
+                    // Quantized serving: int8 coarse scan + exact rescore.
+                    // (Setup already validated the copy, so `new` cannot
+                    // fail here in practice.)
+                    Some(q) => Scanner::Two(
+                        TwoStageEngine::new(q, &store, &precond)?
                             .with_workers(cfg.scan_workers)
                             .with_chunk_len(chunk_len)
+                            .with_rescore_factor(cfg.rescore_factor)
                             .with_metrics(m2.clone()),
                     ),
+                    None => match store.as_single() {
+                        Some(single) => Scanner::Seq(QueryEngine::new(&rt, single, &precond)),
+                        None => Scanner::Par(
+                            ParallelQueryEngine::new(&store, &precond)
+                                .with_workers(cfg.scan_workers)
+                                .with_chunk_len(chunk_len)
+                                .with_metrics(m2.clone()),
+                        ),
+                    },
                 };
                 let man = &rt.manifest;
                 // Gradient extraction runs at log_batch; scoring at
@@ -203,7 +258,16 @@ impl ValuationService {
 
                         let topk = reqs.iter().map(|r| r.topk).max().unwrap_or(1);
                         let t1 = Instant::now();
-                        let results = engine.query(&g, nt, topk.max(1), cfg.norm)?;
+                        // Only the HLO scorer needs the static test_batch
+                        // shape; the native engines are shape-flexible, so
+                        // drop the padding rows on an underfilled batch —
+                        // less scan work, and per-request metrics
+                        // (rows_scanned, candidates_rescored) stay honest.
+                        let (q, qn) = match &engine {
+                            Scanner::Seq(_) => (&g[..], nt),
+                            Scanner::Par(_) | Scanner::Two(_) => (&g[..real * k], real),
+                        };
+                        let results = engine.query(q, qn, topk.max(1), cfg.norm)?;
                         Metrics::add_nanos(&m2.scan_nanos, t1.elapsed().as_secs_f64());
                         m2.rows_scanned.fetch_add(
                             (store.rows() * real) as u64,

@@ -16,14 +16,14 @@ use logra::eval::fig4::{render_markdown, run_fig4, Fig4Scale};
 use logra::eval::qualitative::{render as render_qual, run_qualitative};
 use logra::eval::table1::{run_table1, TABLE1_HEADER};
 use logra::eval::{BrittlenessConfig, LdsConfig};
-use logra::store::{merge_store, shard_store, stat_store};
+use logra::store::{merge_store, quantize_store, shard_store, stat_store};
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
     ("info", "print an artifact manifest summary"),
     ("fig4", "run brittleness + LDS counterfactual evals"),
     ("table1", "run the LoGra vs EKFAC efficiency comparison"),
     ("qualitative", "train, log, and inspect top-valued documents"),
-    ("store", "store maintenance: store stat|shard|merge <dir>"),
+    ("store", "store maintenance: store stat|shard|merge|quantize <dir>"),
 ];
 
 const FLAGS: &[FlagSpec] = &[
@@ -36,7 +36,7 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "part", help: "fig4 part: both|brittleness|lds", takes_value: true, default: Some("both") },
     FlagSpec { name: "removals", help: "brittleness ks, comma list", takes_value: true, default: None },
     FlagSpec { name: "topk", help: "retrieval depth", takes_value: true, default: Some("5") },
-    FlagSpec { name: "out", help: "output dir for store shard/merge", takes_value: true, default: None },
+    FlagSpec { name: "out", help: "output dir for store shard/merge/quantize", takes_value: true, default: None },
     FlagSpec { name: "shards", help: "shard count for store shard", takes_value: true, default: Some("4") },
 ];
 
@@ -141,7 +141,9 @@ fn main() -> Result<()> {
                 .positional
                 .first()
                 .map(String::as_str)
-                .ok_or_else(|| anyhow!("usage: store stat|shard|merge <dir> [--out DIR] [--shards N]"))?;
+                .ok_or_else(|| {
+                    anyhow!("usage: store stat|shard|merge|quantize <dir> [--out DIR] [--shards N]")
+                })?;
             let dir = args
                 .positional
                 .get(1)
@@ -177,7 +179,29 @@ fn main() -> Result<()> {
                     println!("merged {} -> {} ({rows} rows)", dir.display(), out.display());
                     Ok(())
                 }
-                other => Err(anyhow!("unknown store action {other:?}; try stat|shard|merge")),
+                "quantize" => {
+                    let out = args
+                        .flag("out")
+                        .map(PathBuf::from)
+                        .ok_or_else(|| anyhow!("store quantize: --out <dir> required"))?;
+                    let man = quantize_store(&dir, &out)?;
+                    let before = stat_store(&dir)?.storage_bytes;
+                    let after = stat_store(&out)?.storage_bytes;
+                    println!(
+                        "quantized {} -> {} ({} shards, {} rows, int8 codec, {} -> {} bytes, {:.2}x smaller)",
+                        dir.display(),
+                        out.display(),
+                        man.n_shards(),
+                        man.total_rows(),
+                        before,
+                        after,
+                        before as f64 / after.max(1) as f64
+                    );
+                    Ok(())
+                }
+                other => {
+                    Err(anyhow!("unknown store action {other:?}; try stat|shard|merge|quantize"))
+                }
             }
         }
         other => Err(anyhow!("unknown subcommand {other:?}; try --help")),

@@ -44,6 +44,9 @@ pub struct GradStoreWriter {
 
 impl GradStoreWriter {
     pub fn create(dir: &Path, k: usize) -> Result<Self> {
+        if k == 0 {
+            return Err(anyhow!("grad store needs k > 0"));
+        }
         std::fs::create_dir_all(dir)?;
         let gpath = dir.join("grads.bin");
         let ipath = dir.join("ids.bin");
@@ -112,6 +115,14 @@ impl GradStore {
             return Err(anyhow!("grad store version {version} unsupported"));
         }
         let k = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        if k == 0 {
+            // A zero-k header would "open" fine and only blow up later
+            // (empty chunks, divide-by-zero row math) — reject it here.
+            return Err(anyhow!(
+                "grad store {} header declares k=0 (corrupt or wrong file)",
+                dir.display()
+            ));
+        }
         let rows = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
         let need = HEADER_LEN + rows * k * 4;
         if bytes.len() < need {
@@ -122,7 +133,11 @@ impl GradStore {
         }
         let ids_map = Mmap::open(&dir.join("ids.bin"))?;
         if ids_map.len() < rows * 8 {
-            return Err(anyhow!("ids file truncated"));
+            return Err(anyhow!(
+                "ids file truncated: {rows} rows need {} bytes, have {}",
+                rows * 8,
+                ids_map.len()
+            ));
         }
         map.advise_sequential();
         Ok(GradStore { map, ids_map, k, rows })
@@ -279,5 +294,33 @@ mod tests {
             .unwrap();
         std::fs::write(dir.join("ids.bin"), b"").unwrap();
         assert!(GradStore::open(&dir).is_err());
+    }
+
+    #[test]
+    fn zero_k_header_rejected() {
+        let dir = tmpdir("zero-k");
+        // Hand-built header: valid magic/version, k=0, 5 rows.
+        std::fs::write(dir.join("grads.bin"), header_bytes(0, 5)).unwrap();
+        std::fs::write(dir.join("ids.bin"), vec![0u8; 5 * 8]).unwrap();
+        let err = GradStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("k=0"), "unexpected error: {err}");
+        // And the writer refuses to produce such a store in the first place.
+        assert!(GradStoreWriter::create(&tmpdir("zero-k-create"), 0).is_err());
+    }
+
+    #[test]
+    fn short_ids_file_rejected() {
+        let dir = tmpdir("short-ids");
+        let k = 4;
+        let mut w = GradStoreWriter::create(&dir, k).unwrap();
+        let ids: Vec<u64> = (0..6).collect();
+        let rows = vec![0.5f32; 6 * k];
+        w.append(&ids, &rows).unwrap();
+        w.finalize().unwrap();
+        // Corrupt: drop the tail of ids.bin below the declared row count.
+        let f = OpenOptions::new().write(true).open(dir.join("ids.bin")).unwrap();
+        f.set_len(3 * 8).unwrap();
+        let err = GradStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("ids file truncated"), "unexpected error: {err}");
     }
 }

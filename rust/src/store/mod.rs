@@ -31,16 +31,24 @@
 //! thread per shard) crash-consistent without cross-shard coordination.
 //! Directories without `shards.json` open as 1-shard fabrics, so the v1
 //! layout keeps working everywhere.
+//!
+//! A **quantized (v2) store** replaces each shard's f32 rows with symmetric
+//! int8 codes plus per-64-value-block f32 scales (`codes.bin` +
+//! `scales.bin` + `ids.bin`, manifest `"codec": "int8"`) — ~4x smaller and
+//! ~4x less scan bandwidth; see [`quant`] and the two-stage query engine
+//! in `valuation::twostage`.
 
 pub mod grad_store;
 pub mod mmap;
+pub mod quant;
 pub mod shards;
 pub mod writer_thread;
 
 pub use grad_store::{GradStore, GradStoreWriter};
 pub use mmap::Mmap;
+pub use quant::{quantize_store, QuantShardedStore, QuantStore, QuantWriter, QUANT_BLOCK};
 pub use shards::{
     merge_store, shard_store, stat_store, ShardManifest, ShardWriter, ShardedStore,
-    ShardedWriter, StoreStat,
+    ShardedWriter, StoreCodec, StoreStat,
 };
 pub use writer_thread::BackgroundWriter;

@@ -1,0 +1,682 @@
+//! Quantized (v2) gradient store: symmetric int8 rows with per-block f32
+//! scales — the serving-path cousin of the sketched/compressed attribution
+//! readouts in PAPERS.md. A quantized copy of a store is ~4x smaller and
+//! its scan moves ~4x fewer bytes, which is the whole game for the paper's
+//! "write once, scan forever" cost trade (§4.2): scan bandwidth IS query
+//! throughput.
+//!
+//! Layout (one directory per shard, mirroring the v1 two-file pattern):
+//!
+//! ```text
+//! <dir>/codes.bin    header(32B) + rows * k * i8 codes (row-major)
+//! <dir>/scales.bin   rows * ceil(k/64) * f32 per-block scales
+//! <dir>/ids.bin      rows * u64 data-ids (identical to v1)
+//! ```
+//!
+//! Header: magic "LOGRAQNT", u32 version=2, u32 k, u64 rows, u32 block,
+//! 4B pad. Like v1, the writer's `finalize` patches the row count in
+//! `codes.bin` — the durability authority; `scales.bin`/`ids.bin` lengths
+//! are validated against it at open.
+//!
+//! Codec: each 64-value block stores `scale = max|v| / 127` and codes
+//! `round(v / scale)` in [-127, 127]. Reconstruction error is at most
+//! `scale / 2` per value. Dots between two quantized rows accumulate the
+//! i8×i8 products in i32 per block (|sum| ≤ 64·127² ≪ i32::MAX), then
+//! combine blocks as `a_scale · b_scale · sum` in f32 — the stage-1 kernel
+//! of the two-stage query engine
+//! ([`crate::valuation::TwoStageEngine`]).
+//!
+//! A sharded quantized store is the same `shards.json` fabric as the f32
+//! layout with `"codec": "int8"` in the manifest; [`QuantShardedStore`]
+//! mirrors [`ShardedStore`]'s global-row contract.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::mmap::Mmap;
+use super::shards::{ShardManifest, ShardedStore, StoreCodec, SHARD_MANIFEST};
+
+const MAGIC: &[u8; 8] = b"LOGRAQNT";
+const VERSION: u32 = 2;
+const HEADER_LEN: usize = 32;
+
+/// Values per quantization block (one f32 scale each).
+pub const QUANT_BLOCK: usize = 64;
+
+/// Code file name inside a quantized store directory.
+pub const QUANT_CODES_FILE: &str = "codes.bin";
+
+/// Scale blocks per row of width `k`.
+pub fn blocks_of(k: usize) -> usize {
+    k.div_ceil(QUANT_BLOCK)
+}
+
+fn header_bytes(k: u32, rows: u64) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&k.to_le_bytes());
+    h[16..24].copy_from_slice(&rows.to_le_bytes());
+    h[24..28].copy_from_slice(&(QUANT_BLOCK as u32).to_le_bytes());
+    h
+}
+
+/// Read (k, rows) from a `codes.bin` header without mapping the file
+/// (manifest reconciliation for int8 fabrics).
+pub fn read_quant_header(path: &Path) -> Result<(usize, u64)> {
+    let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut h = [0u8; HEADER_LEN];
+    f.read_exact(&mut h).with_context(|| format!("header of {}", path.display()))?;
+    ensure!(&h[..8] == MAGIC, "bad quant store magic in {}", path.display());
+    let k = u32::from_le_bytes(h[12..16].try_into().unwrap()) as usize;
+    let rows = u64::from_le_bytes(h[16..24].try_into().unwrap());
+    Ok((k, rows))
+}
+
+// ------------------------------------------------------------------ codec
+
+/// Quantize one row into `codes` (len k) and `scales` (len blocks_of(k)).
+pub fn quantize_row(row: &[f32], codes: &mut [i8], scales: &mut [f32]) {
+    debug_assert_eq!(codes.len(), row.len());
+    debug_assert_eq!(scales.len(), blocks_of(row.len()));
+    for (b, block) in row.chunks(QUANT_BLOCK).enumerate() {
+        let amax = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = amax / 127.0;
+        scales[b] = scale;
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let out = &mut codes[b * QUANT_BLOCK..b * QUANT_BLOCK + block.len()];
+        for (c, &v) in out.iter_mut().zip(block) {
+            *c = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Quantize `n` row-major rows of width `k`: ([n*k] codes, [n*blocks] scales).
+pub fn quantize_rows(rows: &[f32], n: usize, k: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(rows.len(), n * k);
+    let blocks = blocks_of(k);
+    let mut codes = vec![0i8; n * k];
+    let mut scales = vec![0.0f32; n * blocks];
+    for r in 0..n {
+        quantize_row(
+            &rows[r * k..(r + 1) * k],
+            &mut codes[r * k..(r + 1) * k],
+            &mut scales[r * blocks..(r + 1) * blocks],
+        );
+    }
+    (codes, scales)
+}
+
+/// Reconstruct one quantized row into `out` (len k).
+pub fn dequantize_row(codes: &[i8], scales: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), codes.len());
+    for (b, block) in codes.chunks(QUANT_BLOCK).enumerate() {
+        let scale = scales[b];
+        let dst = &mut out[b * QUANT_BLOCK..b * QUANT_BLOCK + block.len()];
+        for (o, &c) in dst.iter_mut().zip(block) {
+            *o = c as f32 * scale;
+        }
+    }
+}
+
+/// Approximate dot of two quantized rows: per-block i32 code dot, combined
+/// through both scales in f32. The two-stage engine's stage-1 kernel.
+#[inline]
+pub fn dot_q8(a_codes: &[i8], a_scales: &[f32], b_codes: &[i8], b_scales: &[f32]) -> f32 {
+    debug_assert_eq!(a_codes.len(), b_codes.len());
+    let mut acc = 0.0f32;
+    let blocks = a_codes.chunks(QUANT_BLOCK).zip(b_codes.chunks(QUANT_BLOCK));
+    for (b, (ab, bb)) in blocks.enumerate() {
+        let mut s = 0i32;
+        for (&x, &y) in ab.iter().zip(bb) {
+            s += x as i32 * y as i32;
+        }
+        acc += a_scales[b] * b_scales[b] * s as f32;
+    }
+    acc
+}
+
+/// Score `nt` quantized test rows against `len` quantized train rows:
+/// row-major [nt, len] approximate scores (the int8 twin of
+/// [`crate::linalg::matrix::matmul_t_slices`]).
+pub fn scan_scores_q8(
+    t_codes: &[i8],
+    t_scales: &[f32],
+    nt: usize,
+    codes: &[i8],
+    scales: &[f32],
+    len: usize,
+    k: usize,
+) -> Vec<f32> {
+    let blocks = blocks_of(k);
+    debug_assert_eq!(t_codes.len(), nt * k);
+    debug_assert_eq!(codes.len(), len * k);
+    let mut out = vec![0.0f32; nt * len];
+    for t in 0..nt {
+        let tc = &t_codes[t * k..(t + 1) * k];
+        let ts = &t_scales[t * blocks..(t + 1) * blocks];
+        let orow = &mut out[t * len..(t + 1) * len];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot_q8(
+                tc,
+                ts,
+                &codes[j * k..(j + 1) * k],
+                &scales[j * blocks..(j + 1) * blocks],
+            );
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------------- writer
+
+/// Append-only writer for one quantized store directory. Quantizes f32
+/// rows on the way in; `finalize` patches the `codes.bin` header row count
+/// (same crash story as [`super::GradStoreWriter`]).
+pub struct QuantWriter {
+    codes: BufWriter<File>,
+    scales: BufWriter<File>,
+    ids: BufWriter<File>,
+    dir: PathBuf,
+    k: usize,
+    rows: u64,
+}
+
+impl QuantWriter {
+    pub fn create(dir: &Path, k: usize) -> Result<Self> {
+        ensure!(k > 0, "quant store needs k > 0");
+        std::fs::create_dir_all(dir)?;
+        let mut cf = BufWriter::new(File::create(dir.join(QUANT_CODES_FILE))?);
+        cf.write_all(&header_bytes(k as u32, 0))?;
+        let sf = BufWriter::new(File::create(dir.join("scales.bin"))?);
+        let ifile = BufWriter::new(File::create(dir.join("ids.bin"))?);
+        Ok(QuantWriter { codes: cf, scales: sf, ids: ifile, dir: dir.to_path_buf(), k, rows: 0 })
+    }
+
+    /// Quantize and append a batch: `rows` is row-major [n, k] f32.
+    pub fn append(&mut self, ids: &[u64], rows: &[f32]) -> Result<()> {
+        if rows.len() != ids.len() * self.k {
+            return Err(anyhow!(
+                "append: {} ids x k={} needs {} floats, got {}",
+                ids.len(),
+                self.k,
+                ids.len() * self.k,
+                rows.len()
+            ));
+        }
+        let (codes, scales) = quantize_rows(rows, ids.len(), self.k);
+        // i8 and u8 share layout; f32 bytes come from this machine.
+        let code_bytes = unsafe {
+            std::slice::from_raw_parts(codes.as_ptr() as *const u8, codes.len())
+        };
+        let scale_bytes = unsafe {
+            std::slice::from_raw_parts(scales.as_ptr() as *const u8, scales.len() * 4)
+        };
+        self.codes.write_all(code_bytes)?;
+        self.scales.write_all(scale_bytes)?;
+        for &id in ids {
+            self.ids.write_all(&id.to_le_bytes())?;
+        }
+        self.rows += ids.len() as u64;
+        Ok(())
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Flush buffers and patch the `codes.bin` header row count.
+    pub fn finalize(mut self) -> Result<u64> {
+        self.codes.flush()?;
+        self.scales.flush()?;
+        self.ids.flush()?;
+        let mut f = OpenOptions::new().write(true).open(self.dir.join(QUANT_CODES_FILE))?;
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&header_bytes(self.k as u32, self.rows))?;
+        f.sync_all()?;
+        Ok(self.rows)
+    }
+}
+
+// ------------------------------------------------------------------ store
+
+/// Read view over a finalized quantized store directory (one shard).
+pub struct QuantStore {
+    codes: Mmap,
+    scales: Mmap,
+    ids: Mmap,
+    k: usize,
+    blocks: usize,
+    rows: usize,
+}
+
+impl QuantStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let codes = Mmap::open(&dir.join(QUANT_CODES_FILE))
+            .with_context(|| format!("quant store {}", dir.display()))?;
+        let bytes = codes.as_slice();
+        if bytes.len() < HEADER_LEN || &bytes[..8] != MAGIC {
+            return Err(anyhow!("bad quant store header in {}", dir.display()));
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        ensure!(version == VERSION, "quant store version {version} unsupported");
+        let k = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        ensure!(
+            k > 0,
+            "quant store {} header declares k=0 (corrupt or unfinalized create)",
+            dir.display()
+        );
+        let rows = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        let block = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+        ensure!(
+            block == QUANT_BLOCK,
+            "quant store block {block} != supported {QUANT_BLOCK}"
+        );
+        let need = HEADER_LEN + rows * k;
+        ensure!(
+            bytes.len() >= need,
+            "quant store truncated: need {need} bytes, have {}",
+            bytes.len()
+        );
+        let blocks = blocks_of(k);
+        let scales = Mmap::open(&dir.join("scales.bin"))?;
+        ensure!(
+            scales.len() >= rows * blocks * 4,
+            "scales file truncated: {rows} rows need {} bytes, have {}",
+            rows * blocks * 4,
+            scales.len()
+        );
+        let ids = Mmap::open(&dir.join("ids.bin"))?;
+        ensure!(
+            ids.len() >= rows * 8,
+            "ids file truncated: {rows} rows need {} bytes, have {}",
+            rows * 8,
+            ids.len()
+        );
+        codes.advise_sequential();
+        scales.advise_sequential();
+        Ok(QuantStore { codes, scales, ids, k, blocks, rows })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Scale blocks per row.
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Raw i8 codes of rows [start, start+len).
+    pub fn codes_chunk(&self, start: usize, len: usize) -> &[i8] {
+        assert!(start + len <= self.rows, "codes chunk out of range");
+        let byte_off = HEADER_LEN + start * self.k;
+        let bytes = &self.codes.as_slice()[byte_off..byte_off + len * self.k];
+        // i8 and u8 have identical size/alignment.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+    }
+
+    /// Raw f32 block scales of rows [start, start+len).
+    pub fn scales_chunk(&self, start: usize, len: usize) -> &[f32] {
+        assert!(start + len <= self.rows, "scales chunk out of range");
+        let byte_off = start * self.blocks * 4;
+        let bytes = &self.scales.as_slice()[byte_off..byte_off + len * self.blocks * 4];
+        // scales.bin has no header; offsets stay 4-byte aligned.
+        unsafe {
+            std::slice::from_raw_parts(bytes.as_ptr() as *const f32, len * self.blocks)
+        }
+    }
+
+    /// Data id of row i (same encoding as the v1 store).
+    pub fn id(&self, i: usize) -> u64 {
+        assert!(i < self.rows);
+        let b = &self.ids.as_slice()[i * 8..i * 8 + 8];
+        u64::from_le_bytes(b.try_into().unwrap())
+    }
+
+    /// Reconstructed f32 row i (tests and debugging; the serving path
+    /// rescores against the exact store instead).
+    pub fn dequant_row(&self, i: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k];
+        dequantize_row(self.codes_chunk(i, 1), self.scales_chunk(i, 1), &mut out);
+        out
+    }
+
+    /// Prefetch hint for rows [start, start+len) on both data files.
+    pub fn prefetch(&self, start: usize, len: usize) {
+        self.codes.advise_willneed(HEADER_LEN + start * self.k, len * self.k);
+        self.scales.advise_willneed(start * self.blocks * 4, len * self.blocks * 4);
+    }
+
+    /// Total stored bytes (Table-1 "Storage" column).
+    pub fn storage_bytes(&self) -> u64 {
+        (self.codes.len() + self.scales.len() + self.ids.len()) as u64
+    }
+}
+
+// --------------------------------------------------------- sharded fabric
+
+/// Read view over a sharded quantized store — or a single quantized
+/// directory, which opens as a 1-shard fabric. Mirrors
+/// [`ShardedStore`]'s global-row contract over [`QuantStore`] shards.
+pub struct QuantShardedStore {
+    shards: Vec<QuantStore>,
+    offsets: Vec<usize>,
+    k: usize,
+}
+
+impl QuantShardedStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        if dir.join(SHARD_MANIFEST).exists() {
+            let man = ShardManifest::load(dir)?;
+            ensure!(
+                man.codec == StoreCodec::Int8,
+                "store {} uses the {} codec; open it with ShardedStore",
+                dir.display(),
+                man.codec.as_str()
+            );
+            let mut shards = Vec::with_capacity(man.n_shards());
+            for name in &man.shard_dirs {
+                let s = QuantStore::open(&dir.join(name))
+                    .with_context(|| format!("shard {name} of {}", dir.display()))?;
+                ensure!(
+                    s.k() == man.k,
+                    "shard {name}: k={} disagrees with manifest k={}",
+                    s.k(),
+                    man.k
+                );
+                shards.push(s);
+            }
+            Ok(Self::from_shards(shards))
+        } else {
+            Ok(Self::from_shards(vec![QuantStore::open(dir)?]))
+        }
+    }
+
+    fn from_shards(shards: Vec<QuantStore>) -> Self {
+        let k = shards[0].k();
+        let mut offsets = Vec::with_capacity(shards.len() + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for s in &shards {
+            acc += s.rows();
+            offsets.push(acc);
+        }
+        QuantShardedStore { shards, offsets, k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn rows(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &QuantStore {
+        &self.shards[i]
+    }
+
+    /// First global row of shard i.
+    pub fn shard_start(&self, i: usize) -> usize {
+        self.offsets[i]
+    }
+
+    /// Global row -> (shard index, local row). Skips empty shards.
+    pub fn locate(&self, row: usize) -> (usize, usize) {
+        assert!(row < self.rows(), "row {row} out of range");
+        let s = self.offsets.partition_point(|&o| o <= row) - 1;
+        (s, row - self.offsets[s])
+    }
+
+    /// Data id of global row i.
+    pub fn id(&self, i: usize) -> u64 {
+        let (s, local) = self.locate(i);
+        self.shards[s].id(local)
+    }
+
+    /// Total stored bytes across shards.
+    pub fn storage_bytes(&self) -> u64 {
+        self.shards.iter().map(QuantStore::storage_bytes).sum()
+    }
+}
+
+// ------------------------------------------------------------- conversion
+
+/// Convert any f32 store (v1 or sharded) into a quantized copy at `dst`,
+/// preserving shard structure, global row order, and data ids. The source
+/// stays untouched — serve stage-1 scans from `dst` and exact rescoring
+/// from `src`.
+pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
+    let store = ShardedStore::open(src)?;
+    let k = store.k();
+    ensure!(k > 0, "cannot quantize a store with k=0");
+    std::fs::create_dir_all(dst)?;
+    let shard_dirs: Vec<String> =
+        (0..store.n_shards()).map(|i| format!("shard-{i:04}")).collect();
+    // Create every shard (dir + zero-row header) BEFORE the manifest, then
+    // write the zero-row manifest, so the destination is openable from the
+    // first byte and a mid-conversion crash leaves a valid (partial) store
+    // — same convention as ShardedWriter::create.
+    let mut writers = Vec::with_capacity(store.n_shards());
+    for name in &shard_dirs {
+        writers.push(QuantWriter::create(&dst.join(name), k)?);
+    }
+    ShardManifest {
+        k,
+        codec: StoreCodec::Int8,
+        shard_dirs: shard_dirs.clone(),
+        shard_rows: vec![0; store.n_shards()],
+    }
+    .save(dst)?;
+    let mut shard_rows = Vec::with_capacity(store.n_shards());
+    for (si, mut w) in writers.into_iter().enumerate() {
+        let shard = store.shard(si);
+        let rows = shard.rows();
+        let mut at = 0usize;
+        while at < rows {
+            let len = 1024.min(rows - at);
+            let ids: Vec<u64> = (at..at + len).map(|r| shard.id(r)).collect();
+            w.append(&ids, shard.chunk(at, len))?;
+            at += len;
+        }
+        shard_rows.push(w.finalize()?);
+    }
+    let man = ShardManifest { k, codec: StoreCodec::Int8, shard_dirs, shard_rows };
+    man.save(dst)?;
+    Ok(man)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::GradStoreWriter;
+    use crate::util::rng::Pcg32;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("logra-quant-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn codec_roundtrip_error_bounded() {
+        let mut rng = Pcg32::seeded(1);
+        for &k in &[1usize, 63, 64, 65, 192] {
+            let mut row = vec![0.0f32; k];
+            rng.fill_normal(&mut row, 2.0);
+            let mut codes = vec![0i8; k];
+            let mut scales = vec![0.0f32; blocks_of(k)];
+            quantize_row(&row, &mut codes, &mut scales);
+            let mut back = vec![0.0f32; k];
+            dequantize_row(&codes, &scales, &mut back);
+            for (i, (&v, &r)) in row.iter().zip(&back).enumerate() {
+                let b = i / QUANT_BLOCK;
+                // Round-to-nearest: at most half a quantization step off.
+                let bound = scales[b] * 0.5 + 1e-7;
+                assert!(
+                    (v - r).abs() <= bound,
+                    "k={k} i={i}: |{v} - {r}| > {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_quantizes_to_zero() {
+        let row = vec![0.0f32; 70];
+        let mut codes = vec![1i8; 70];
+        let mut scales = vec![9.0f32; blocks_of(70)];
+        quantize_row(&row, &mut codes, &mut scales);
+        assert!(codes.iter().all(|&c| c == 0));
+        assert!(scales.iter().all(|&s| s == 0.0));
+        let mut back = vec![1.0f32; 70];
+        dequantize_row(&codes, &scales, &mut back);
+        assert!(back.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dot_q8_tracks_exact_dot() {
+        let mut rng = Pcg32::seeded(3);
+        let k = 192;
+        for _ in 0..20 {
+            let mut a = vec![0.0f32; k];
+            let mut b = vec![0.0f32; k];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let (ac, asc) = quantize_rows(&a, 1, k);
+            let (bc, bsc) = quantize_rows(&b, 1, k);
+            let approx = dot_q8(&ac, &asc, &bc, &bsc);
+            let exact = crate::linalg::dot(&a, &b);
+            // Per-value error ≤ scale/2 ≈ amax/254; dot error concentrates
+            // around sqrt(k) * O(amax²/254). Loose but honest bound:
+            let bound = 0.05 * (k as f32).sqrt() * 4.0;
+            assert!(
+                (approx - exact).abs() <= bound,
+                "|{approx} - {exact}| > {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn writer_store_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let k = 70; // exercises a partial trailing block
+        let n = 37;
+        let mut rng = Pcg32::seeded(5);
+        let mut rows = vec![0.0f32; n * k];
+        rng.fill_normal(&mut rows, 1.0);
+        let ids: Vec<u64> = (0..n as u64).map(|i| i * 3 + 7).collect();
+        let mut w = QuantWriter::create(&dir, k).unwrap();
+        // Split into two batches to exercise append boundaries.
+        w.append(&ids[..10], &rows[..10 * k]).unwrap();
+        w.append(&ids[10..], &rows[10 * k..]).unwrap();
+        assert_eq!(w.finalize().unwrap(), n as u64);
+
+        let s = QuantStore::open(&dir).unwrap();
+        assert_eq!(s.rows(), n);
+        assert_eq!(s.k(), k);
+        assert_eq!(s.blocks(), 2);
+        let (want_codes, want_scales) = quantize_rows(&rows, n, k);
+        assert_eq!(s.codes_chunk(0, n), &want_codes[..]);
+        assert_eq!(s.scales_chunk(0, n), &want_scales[..]);
+        for i in 0..n {
+            assert_eq!(s.id(i), ids[i]);
+            let deq = s.dequant_row(i);
+            for (j, (&v, &r)) in rows[i * k..(i + 1) * k].iter().zip(&deq).enumerate() {
+                let bound = want_scales[i * 2 + j / QUANT_BLOCK] * 0.5 + 1e-7;
+                assert!((v - r).abs() <= bound);
+            }
+        }
+        s.prefetch(0, n);
+    }
+
+    #[test]
+    fn unfinalized_store_reports_zero_rows() {
+        let dir = tmpdir("unfinalized");
+        let mut w = QuantWriter::create(&dir, 8).unwrap();
+        w.append(&[1], &[1.0; 8]).unwrap();
+        drop(w); // no finalize: header still says 0 rows
+        let s = QuantStore::open(&dir).unwrap();
+        assert_eq!(s.rows(), 0);
+    }
+
+    #[test]
+    fn corrupt_and_zero_k_rejected() {
+        let dir = tmpdir("corrupt");
+        std::fs::write(dir.join(QUANT_CODES_FILE), b"NOTMAGICxxxxxxxxxxxxxxxxxxxxxxxx")
+            .unwrap();
+        std::fs::write(dir.join("scales.bin"), b"").unwrap();
+        std::fs::write(dir.join("ids.bin"), b"").unwrap();
+        assert!(QuantStore::open(&dir).is_err());
+
+        let dir = tmpdir("zero-k");
+        std::fs::write(dir.join(QUANT_CODES_FILE), header_bytes(0, 0)).unwrap();
+        std::fs::write(dir.join("scales.bin"), b"").unwrap();
+        std::fs::write(dir.join("ids.bin"), b"").unwrap();
+        let err = QuantStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("k=0"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn quantize_store_preserves_order_and_shrinks() {
+        let src = tmpdir("convert-src");
+        let k = 192;
+        let n = 256;
+        let mut rng = Pcg32::seeded(9);
+        let mut rows = vec![0.0f32; n * k];
+        rng.fill_normal(&mut rows, 1.0);
+        let ids: Vec<u64> = (0..n as u64).map(|i| 5000 - i * 2).collect();
+        let mut w = GradStoreWriter::create(&src, k).unwrap();
+        w.append(&ids, &rows).unwrap();
+        w.finalize().unwrap();
+
+        // v1 source -> 1-shard quantized fabric.
+        let dst = tmpdir("convert-dst");
+        let man = quantize_store(&src, &dst).unwrap();
+        assert_eq!(man.codec, StoreCodec::Int8);
+        assert_eq!(man.total_rows(), n as u64);
+        let q = QuantShardedStore::open(&dst).unwrap();
+        assert_eq!(q.rows(), n);
+        assert_eq!(q.k(), k);
+        for g in 0..n {
+            assert_eq!(q.id(g), ids[g]);
+        }
+
+        // ~4x smaller: f32 rows are k*4 bytes, quantized k + blocks*4.
+        let f32_store = crate::store::ShardedStore::open(&src).unwrap();
+        let ratio = f32_store.storage_bytes() as f64 / q.storage_bytes() as f64;
+        assert!(ratio > 3.0, "compression ratio only {ratio:.2}x");
+
+        // Sharded source keeps its shard structure.
+        let sharded_src = tmpdir("convert-sharded-src");
+        crate::store::shard_store(&src, &sharded_src, 3).unwrap();
+        let sharded_dst = tmpdir("convert-sharded-dst");
+        let man = quantize_store(&sharded_src, &sharded_dst).unwrap();
+        assert_eq!(man.n_shards(), 3);
+        let q = QuantShardedStore::open(&sharded_dst).unwrap();
+        assert_eq!(q.n_shards(), 3);
+        assert_eq!(q.rows(), n);
+        for g in 0..n {
+            assert_eq!(q.id(g), ids[g]);
+        }
+
+        // Codec mismatches produce clear errors in both directions.
+        assert!(crate::store::ShardedStore::open(&sharded_dst).is_err());
+        assert!(QuantShardedStore::open(&sharded_src).is_err());
+        // And re-quantizing a quantized store is rejected cleanly.
+        assert!(quantize_store(&sharded_dst, &tmpdir("convert-twice")).is_err());
+    }
+}

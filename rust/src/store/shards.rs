@@ -35,14 +35,43 @@ pub const SHARD_MANIFEST: &str = "shards.json";
 
 const MANIFEST_VERSION: u64 = 1;
 
+/// On-disk row encoding of a store's shards. `F32` is the v1 layout
+/// (`grads.bin` + `ids.bin`); `Int8` is the v2 quantized codec
+/// ([`super::quant`]: `codes.bin` + `scales.bin` + `ids.bin`). Manifests
+/// without a `codec` field parse as `F32`, so every pre-codec store keeps
+/// opening unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreCodec {
+    F32,
+    Int8,
+}
+
+impl StoreCodec {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StoreCodec::F32 => "f32",
+            StoreCodec::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(StoreCodec::F32),
+            "int8" => Ok(StoreCodec::Int8),
+            other => Err(anyhow!("shard manifest: unknown codec {other:?}")),
+        }
+    }
+}
+
 // --------------------------------------------------------------- manifest
 
-/// Parsed `shards.json`: shard count, per-shard rows, k, and (derivable)
-/// global row offsets. Row counts are advisory — the per-shard v1 headers
-/// are the durability authority (see module docs).
+/// Parsed `shards.json`: shard count, per-shard rows, k, codec, and
+/// (derivable) global row offsets. Row counts are advisory — the per-shard
+/// headers are the durability authority (see module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardManifest {
     pub k: usize,
+    pub codec: StoreCodec,
     pub shard_dirs: Vec<String>,
     pub shard_rows: Vec<u64>,
 }
@@ -74,6 +103,7 @@ impl ShardManifest {
         s.push_str("{\n");
         s.push_str(&format!("  \"version\": {MANIFEST_VERSION},\n"));
         s.push_str(&format!("  \"k\": {},\n", self.k));
+        s.push_str(&format!("  \"codec\": \"{}\",\n", self.codec.as_str()));
         s.push_str("  \"shards\": [\n");
         for (i, (dir, rows)) in self.shard_dirs.iter().zip(&self.shard_rows).enumerate() {
             let comma = if i + 1 < self.shard_dirs.len() { "," } else { "" };
@@ -100,6 +130,13 @@ impl ShardManifest {
             .get("k")
             .and_then(json::Json::as_u64)
             .ok_or_else(|| anyhow!("shard manifest: missing \"k\""))? as usize;
+        // Pre-codec manifests (PR 1) carry no "codec" field: f32.
+        let codec = match root.get("codec") {
+            None => StoreCodec::F32,
+            Some(v) => StoreCodec::parse(
+                v.as_str().ok_or_else(|| anyhow!("shard manifest: \"codec\" must be a string"))?,
+            )?,
+        };
         let shards = root
             .get("shards")
             .and_then(json::Json::as_arr)
@@ -123,7 +160,7 @@ impl ShardManifest {
             shard_rows.push(rows);
         }
         ensure!(!shard_dirs.is_empty(), "shard manifest: zero shards");
-        Ok(ShardManifest { k, shard_dirs, shard_rows })
+        Ok(ShardManifest { k, codec, shard_dirs, shard_rows })
     }
 
     pub fn load(dir: &Path) -> Result<Self> {
@@ -148,7 +185,12 @@ impl ShardManifest {
     pub fn reconcile(dir: &Path) -> Result<Self> {
         let mut man = Self::load(dir)?;
         for (name, rows) in man.shard_dirs.iter().zip(man.shard_rows.iter_mut()) {
-            let (_, hdr_rows) = read_v1_header(&dir.join(name).join("grads.bin"))?;
+            let (_, hdr_rows) = match man.codec {
+                StoreCodec::F32 => read_v1_header(&dir.join(name).join("grads.bin"))?,
+                StoreCodec::Int8 => {
+                    super::quant::read_quant_header(&dir.join(name).join("codes.bin"))?
+                }
+            };
             *rows = hdr_rows;
         }
         man.save(dir)?;
@@ -221,6 +263,7 @@ impl ShardedWriter {
         }
         let man = ShardManifest {
             k,
+            codec: StoreCodec::F32,
             shard_dirs: (0..n_shards).map(shard_dir_name).collect(),
             shard_rows: vec![0; n_shards],
         };
@@ -271,6 +314,7 @@ impl ShardedWriter {
         }
         let man = ShardManifest {
             k,
+            codec: StoreCodec::F32,
             shard_dirs: (0..shard_rows.len()).map(shard_dir_name).collect(),
             shard_rows,
         };
@@ -296,6 +340,13 @@ impl ShardedStore {
     pub fn open(dir: &Path) -> Result<Self> {
         if dir.join(SHARD_MANIFEST).exists() {
             let man = ShardManifest::load(dir)?;
+            ensure!(
+                man.codec == StoreCodec::F32,
+                "store {} uses the {} codec; open it with QuantShardedStore \
+                 (or serve it via the two-stage quantized scan)",
+                dir.display(),
+                man.codec.as_str()
+            );
             let mut shards = Vec::with_capacity(man.n_shards());
             for name in &man.shard_dirs {
                 let s = GradStore::open(&dir.join(name))
@@ -453,6 +504,7 @@ pub fn merge_store(src: &Path, dst: &Path) -> Result<u64> {
 /// Summary of any store directory (the `store stat` CLI subcommand).
 #[derive(Clone, Debug)]
 pub struct StoreStat {
+    pub codec: StoreCodec,
     pub shards: usize,
     pub rows: usize,
     pub k: usize,
@@ -460,21 +512,46 @@ pub struct StoreStat {
     pub shard_rows: Vec<usize>,
 }
 
-/// Inspect a store directory (v1 or sharded) from its durable headers.
+/// Inspect a store directory (v1, sharded, or quantized) from its durable
+/// headers, dispatching on the manifest's codec.
 pub fn stat_store(dir: &Path) -> Result<StoreStat> {
-    let store = ShardedStore::open(dir)?;
-    Ok(StoreStat {
-        shards: store.n_shards(),
-        rows: store.rows(),
-        k: store.k(),
-        storage_bytes: store.storage_bytes(),
-        shard_rows: (0..store.n_shards()).map(|i| store.shard(i).rows()).collect(),
-    })
+    let codec = if dir.join(SHARD_MANIFEST).exists() {
+        ShardManifest::load(dir)?.codec
+    } else if dir.join(super::quant::QUANT_CODES_FILE).exists() {
+        StoreCodec::Int8
+    } else {
+        StoreCodec::F32
+    };
+    match codec {
+        StoreCodec::F32 => {
+            let store = ShardedStore::open(dir)?;
+            Ok(StoreStat {
+                codec,
+                shards: store.n_shards(),
+                rows: store.rows(),
+                k: store.k(),
+                storage_bytes: store.storage_bytes(),
+                shard_rows: (0..store.n_shards()).map(|i| store.shard(i).rows()).collect(),
+            })
+        }
+        StoreCodec::Int8 => {
+            let store = super::quant::QuantShardedStore::open(dir)?;
+            Ok(StoreStat {
+                codec,
+                shards: store.n_shards(),
+                rows: store.rows(),
+                k: store.k(),
+                storage_bytes: store.storage_bytes(),
+                shard_rows: (0..store.n_shards()).map(|i| store.shard(i).rows()).collect(),
+            })
+        }
+    }
 }
 
 impl StoreStat {
     pub fn render(&self) -> String {
         let mut s = String::new();
+        s.push_str(&format!("codec         {}\n", self.codec.as_str()));
         s.push_str(&format!("shards        {}\n", self.shards));
         s.push_str(&format!("rows          {}\n", self.rows));
         s.push_str(&format!("k             {}\n", self.k));
@@ -705,16 +782,29 @@ mod tests {
 
     #[test]
     fn manifest_json_roundtrip() {
-        let man = ShardManifest {
-            k: 192,
-            shard_dirs: vec!["shard-0000".into(), "shard-0001".into()],
-            shard_rows: vec![128, 130],
-        };
-        let text = man.to_json();
-        let back = ShardManifest::parse(&text).unwrap();
-        assert_eq!(back, man);
-        assert_eq!(back.offsets(), vec![0, 128, 258]);
-        assert_eq!(back.total_rows(), 258);
+        for codec in [StoreCodec::F32, StoreCodec::Int8] {
+            let man = ShardManifest {
+                k: 192,
+                codec,
+                shard_dirs: vec!["shard-0000".into(), "shard-0001".into()],
+                shard_rows: vec![128, 130],
+            };
+            let text = man.to_json();
+            let back = ShardManifest::parse(&text).unwrap();
+            assert_eq!(back, man);
+            assert_eq!(back.offsets(), vec![0, 128, 258]);
+            assert_eq!(back.total_rows(), 258);
+        }
+    }
+
+    #[test]
+    fn manifest_without_codec_parses_as_f32() {
+        // The exact shape PR-1 manifests have on disk.
+        let man = ShardManifest::parse(
+            "{\"version\": 1, \"k\": 4, \"shards\": [{\"dir\": \"shard-0000\", \"rows\": 2}]}",
+        )
+        .unwrap();
+        assert_eq!(man.codec, StoreCodec::F32);
     }
 
     #[test]
@@ -725,6 +815,12 @@ mod tests {
         // Path traversal in shard dir names is rejected.
         assert!(ShardManifest::parse(
             "{\"version\": 1, \"k\": 4, \"shards\": [{\"dir\": \"../x\", \"rows\": 1}]}"
+        )
+        .is_err());
+        // Unknown codecs are rejected, not silently defaulted.
+        assert!(ShardManifest::parse(
+            "{\"version\": 1, \"k\": 4, \"codec\": \"fp4\", \
+             \"shards\": [{\"dir\": \"shard-0000\", \"rows\": 1}]}"
         )
         .is_err());
     }

@@ -8,10 +8,14 @@
 //! for odd shapes), and the next chunk is prefetched while the current one
 //! is scored. Over sharded stores, [`parallel::ParallelQueryEngine`] fans
 //! the scan out across worker threads and merges per-shard top-k heaps
-//! deterministically.
+//! deterministically. Over quantized stores, [`twostage::TwoStageEngine`]
+//! runs the linear pass on the int8 codec and rescores only a small
+//! candidate pool at exact precision.
 
 pub mod parallel;
 pub mod scorer;
+pub mod twostage;
 
 pub use parallel::{ParallelQueryEngine, ParallelScanConfig};
 pub use scorer::{Normalization, QueryEngine, QueryResult};
+pub use twostage::{TwoStageConfig, TwoStageEngine};

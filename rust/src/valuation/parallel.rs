@@ -97,12 +97,7 @@ impl<'a> ParallelQueryEngine<'a> {
     /// Resolved worker count: explicit, else one per core, never more than
     /// there are shards to scan.
     pub fn workers(&self) -> usize {
-        let raw = if self.cfg.workers == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
-        } else {
-            self.cfg.workers
-        };
-        raw.clamp(1, self.store.n_shards().max(1))
+        resolve_workers(self.cfg.workers, self.store.n_shards())
     }
 
     /// Full scan: top-k most valuable train examples per test row, merged
@@ -173,10 +168,23 @@ impl<'a> ParallelQueryEngine<'a> {
     }
 }
 
+/// Resolve a requested worker count (0 = one per core, capped at 16)
+/// against the number of shards there are to scan.
+pub(crate) fn resolve_workers(requested: usize, n_shards: usize) -> usize {
+    let raw = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+    } else {
+        requested
+    };
+    raw.clamp(1, n_shards.max(1))
+}
+
 /// Run `job(shard_idx)` for every shard across `workers` threads and
 /// return results in shard order. Work distribution goes through a bounded
-/// pipeline channel so an uneven shard mix load-balances.
-fn scatter_gather<T, F>(workers: usize, n_shards: usize, job: &F) -> Vec<T>
+/// pipeline channel so an uneven shard mix load-balances. Shared with the
+/// two-stage quantized engine ([`super::twostage`]), whose stage-1 scan is
+/// the same fan-out over quantized shards.
+pub(crate) fn scatter_gather<T, F>(workers: usize, n_shards: usize, job: &F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
@@ -259,7 +267,7 @@ fn scan_shard(
 }
 
 /// Self-influences of one shard's rows, chunk-wise.
-fn shard_self_influences(
+pub(crate) fn shard_self_influences(
     store: &ShardedStore,
     precond: &Preconditioner,
     si: usize,

@@ -189,14 +189,22 @@ impl<'a> QueryEngine<'a> {
         let mut at = 0usize;
         while at < rows {
             let len = chunk_len.min(rows - at);
+            // Overlap: hint the NEXT chunk while we score this one (same
+            // pipelining as `query` — dense evals scan the whole store too).
+            if at + len < rows {
+                self.store.prefetch(at + len, chunk_len.min(rows - at - len));
+            }
             let scores = self.score_chunk(&pre, nt, at, len)?;
             for t in 0..nt {
                 for j in 0..len {
-                    let mut s = scores[t * len + j];
+                    // RelatIF division in f64, exactly as `query` does —
+                    // the two paths must agree on every (test, train) pair
+                    // up to the matrix's f32 storage precision.
+                    let mut s = scores[t * len + j] as f64;
                     if let Some(si) = selfs {
-                        s /= (si[at + j].max(0.0)).sqrt().max(1e-12);
+                        s /= (si[at + j].max(0.0) as f64).sqrt().max(1e-12);
                     }
-                    out.data[t * rows + at + j] = s;
+                    out.data[t * rows + at + j] = s as f32;
                 }
             }
             at += len;
@@ -208,5 +216,56 @@ impl<'a> QueryEngine<'a> {
     pub fn pair_influence(&self, test_row: &[f32], train_idx: usize) -> f32 {
         let pre = self.precond.apply(test_row);
         dot(&pre, self.store.chunk(train_idx, 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hessian::BlockHessian;
+    use crate::store::GradStoreWriter;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn query_and_values_matrix_agree_on_relatif_scores() {
+        // `query` normalizes in f64; `values_matrix` must use the same
+        // math (then round once to its f32 storage). Before unification,
+        // dividing in f32 could round to a DIFFERENT f32 than the
+        // f64-divide-then-cast, so exact equality here is load-bearing.
+        let dir = std::env::temp_dir().join("logra-scorer-tests").join("agree");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = 6;
+        let n = 48;
+        let nt = 3;
+        let mut rng = Pcg32::seeded(13);
+        let mut rows = vec![0.0f32; n * k];
+        rng.fill_normal(&mut rows, 1.0);
+        let ids: Vec<u64> = (0..n as u64).collect(); // id == row index
+        let mut w = GradStoreWriter::create(&dir, k).unwrap();
+        w.append(&ids, &rows).unwrap();
+        w.finalize().unwrap();
+        let store = GradStore::open(&dir).unwrap();
+        let mut hess = BlockHessian::single_block(k);
+        hess.accumulate(&rows, n);
+        let precond = hess.preconditioner(0.1).unwrap();
+        let engine = QueryEngine::new_native(&store, &precond, 7);
+        let mut test = vec![0.0f32; nt * k];
+        rng.fill_normal(&mut test, 1.0);
+
+        for norm in [Normalization::None, Normalization::RelatIf] {
+            let q = engine.query(&test, nt, n, norm).unwrap();
+            let m = engine.values_matrix(&test, nt, norm).unwrap();
+            for (t, res) in q.iter().enumerate() {
+                assert_eq!(res.top.len(), n);
+                for &(score, id) in &res.top {
+                    let got = m.at(t, id as usize);
+                    assert_eq!(
+                        got, score as f32,
+                        "paths disagree (norm {norm:?}, test {t}, train {id})"
+                    );
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,305 @@
+//! Two-stage scan-then-rescore query engine over a quantized store.
+//!
+//! Stage 1 scans the int8 quantized copy of the corpus
+//! ([`QuantShardedStore`]) with the i32-accumulating block-dot kernel —
+//! 4x less memory bandwidth than the f32 scan — and keeps, per test row, a
+//! candidate pool of `rescore_factor × topk` rows by approximate score.
+//! Stage 2 rescores ONLY those candidates against the exact f32 store and
+//! emits the final top-k: full-precision work becomes sublinear in corpus
+//! size while the linear pass runs on the cheap codec. This is the
+//! reranker substrate any future ANN index will sit on — the coarse scan
+//! is the recall stage, the exact rescore the precision stage.
+//!
+//! Stage 1 fans out per shard through the same scatter/gather worker pool
+//! as [`ParallelQueryEngine`](super::ParallelQueryEngine) and merges
+//! per-shard pools with [`TopK`]'s total order, so the candidate pool — and
+//! therefore the final result — is deterministic for any shard
+//! decomposition and worker count. Stage-2 scores are computed with the
+//! same f32 dot accumulation order and f64 RelatIF division as the
+//! sequential [`QueryEngine`](super::QueryEngine) native scan, so whenever
+//! the pool covers the whole corpus (`rescore_factor × topk ≥ rows`) the
+//! output is **bit-identical** to the exact engine (verified by
+//! `rust/tests/twostage.rs`); smaller pools trade bounded recall for
+//! bandwidth.
+//!
+//! The engine needs BOTH stores: the quantized copy (produced by
+//! `logra store quantize`) for stage 1 and the original f32 store for
+//! stage 2. `quantize_store` preserves global row order and ids, which is
+//! what lets stage-1 candidates (global row indices) address the exact
+//! store directly.
+
+use std::cell::{Ref, RefCell};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::hessian::Preconditioner;
+use crate::linalg::dot;
+use crate::store::quant::{quantize_rows, scan_scores_q8, QuantShardedStore};
+use crate::store::ShardedStore;
+use crate::util::topk::TopK;
+
+use super::parallel::{resolve_workers, scatter_gather, shard_self_influences};
+use super::scorer::{Normalization, QueryResult};
+
+/// Knobs for the two-stage scan.
+#[derive(Clone, Copy, Debug)]
+pub struct TwoStageConfig {
+    /// Worker threads for the stage-1 shard fan-out; 0 = one per core.
+    pub workers: usize,
+    /// Rows scored per chunk within a shard.
+    pub chunk_len: usize,
+    /// Stage-1 candidate pool per test row, as a multiple of the requested
+    /// top-k (clamped to at least 1; pools never exceed the corpus).
+    pub rescore_factor: usize,
+}
+
+impl Default for TwoStageConfig {
+    fn default() -> Self {
+        TwoStageConfig { workers: 0, chunk_len: 1024, rescore_factor: 4 }
+    }
+}
+
+/// Two-stage influence scorer: quantized coarse scan + exact rescore.
+pub struct TwoStageEngine<'a> {
+    quant: &'a QuantShardedStore,
+    exact: &'a ShardedStore,
+    precond: &'a Preconditioner,
+    cfg: TwoStageConfig,
+    metrics: Option<Arc<Metrics>>,
+    /// Self-influence per GLOBAL row (RelatIF denominators), computed from
+    /// the EXACT store — both stages divide by the same denominators.
+    self_inf: RefCell<Option<Vec<f32>>>,
+}
+
+impl<'a> TwoStageEngine<'a> {
+    /// The quantized copy must mirror the exact store row-for-row (use
+    /// `quantize_store`, which preserves global order and ids).
+    pub fn new(
+        quant: &'a QuantShardedStore,
+        exact: &'a ShardedStore,
+        precond: &'a Preconditioner,
+    ) -> Result<Self> {
+        ensure!(
+            quant.k() == exact.k(),
+            "quantized store k={} disagrees with exact store k={}",
+            quant.k(),
+            exact.k()
+        );
+        ensure!(
+            quant.rows() == exact.rows(),
+            "quantized store has {} rows, exact store {} — stale quantized copy?",
+            quant.rows(),
+            exact.rows()
+        );
+        Ok(TwoStageEngine {
+            quant,
+            exact,
+            precond,
+            cfg: TwoStageConfig::default(),
+            metrics: None,
+            self_inf: RefCell::new(None),
+        })
+    }
+
+    /// Set worker count (0 = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
+        self.cfg.chunk_len = chunk_len.max(1);
+        self
+    }
+
+    pub fn with_rescore_factor(mut self, factor: usize) -> Self {
+        self.cfg.rescore_factor = factor.max(1);
+        self
+    }
+
+    /// Record stage timings and candidate counts into shared metrics.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Resolved stage-1 worker count.
+    pub fn workers(&self) -> usize {
+        resolve_workers(self.cfg.workers, self.quant.n_shards())
+    }
+
+    /// Stage-1 candidate pool size for a requested top-k.
+    pub fn pool_size(&self, topk: usize) -> usize {
+        self.cfg
+            .rescore_factor
+            .max(1)
+            .saturating_mul(topk.max(1))
+            .min(self.exact.rows().max(1))
+    }
+
+    /// Self-influence of each stored row in global order, from the exact
+    /// store (computed once in parallel, then cached).
+    pub fn train_self_influences(&self) -> Ref<'_, [f32]> {
+        if self.self_inf.borrow().is_none() {
+            let store = self.exact;
+            let precond = self.precond;
+            let chunk_len = self.cfg.chunk_len.max(1);
+            let workers = resolve_workers(self.cfg.workers, store.n_shards());
+            let per_shard = scatter_gather(workers, store.n_shards(), &|si| {
+                shard_self_influences(store, precond, si, chunk_len)
+            });
+            let mut flat = Vec::with_capacity(store.rows());
+            for v in per_shard {
+                flat.extend(v);
+            }
+            *self.self_inf.borrow_mut() = Some(flat);
+        }
+        Ref::map(self.self_inf.borrow(), |o| o.as_deref().unwrap())
+    }
+
+    /// Top-k most valuable train examples per test row. Same contract as
+    /// [`QueryEngine::query`](super::QueryEngine::query): `test_grads` is
+    /// row-major [nt, k] of RAW projected test gradients.
+    pub fn query(
+        &self,
+        test_grads: &[f32],
+        nt: usize,
+        topk: usize,
+        norm: Normalization,
+    ) -> Result<Vec<QueryResult>> {
+        let k = self.exact.k();
+        ensure!(
+            test_grads.len() == nt * k,
+            "query: {nt} rows x k={k} needs {} floats, got {}",
+            nt * k,
+            test_grads.len()
+        );
+        let pre = self.precond.apply_rows(test_grads, nt);
+        let selfs_guard = match norm {
+            Normalization::RelatIf => Some(self.train_self_influences()),
+            Normalization::None => None,
+        };
+        let selfs: Option<&[f32]> = selfs_guard.as_deref();
+        let rows = self.exact.rows();
+        if rows == 0 {
+            return Ok((0..nt).map(|_| QueryResult { top: Vec::new() }).collect());
+        }
+        let pool = self.pool_size(topk);
+
+        // ------------------------------------------------ stage 1: coarse
+        // Quantize the preconditioned test rows with the store's codec so
+        // the scan is int8 x int8 with i32 block accumulation.
+        let t0 = Instant::now();
+        let (t_codes, t_scales) = quantize_rows(&pre, nt, k);
+        let quant = self.quant;
+        let chunk_len = self.cfg.chunk_len.max(1);
+        let metrics = self.metrics.as_deref();
+        let tc: &[i8] = &t_codes;
+        let ts: &[f32] = &t_scales;
+        let shard_pools = scatter_gather(self.workers(), quant.n_shards(), &|si| {
+            scan_shard_q8(quant, si, tc, ts, nt, pool, selfs, chunk_len, metrics)
+        });
+        let mut pools: Vec<TopK> = (0..nt).map(|_| TopK::new(pool)).collect();
+        for heaps in shard_pools {
+            for (t, h) in heaps.into_iter().enumerate() {
+                pools[t].merge(h);
+            }
+        }
+        if let Some(m) = metrics {
+            Metrics::add_nanos(&m.stage1_nanos, t0.elapsed().as_secs_f64());
+        }
+
+        // ---------------------------------------------- stage 2: rescore
+        // Exact f32 dots for pool candidates only — same accumulation order
+        // and f64 normalization as the sequential engine, so a full-corpus
+        // pool reproduces it bit-identically.
+        let t1 = Instant::now();
+        let mut rescored = 0u64;
+        let mut out = Vec::with_capacity(nt);
+        for (t, p) in pools.into_iter().enumerate() {
+            let pre_t = &pre[t * k..(t + 1) * k];
+            let mut cand: Vec<u64> = p.into_sorted().into_iter().map(|(_, g)| g).collect();
+            // Ascending row order: sequential-ish page access into the mmap.
+            cand.sort_unstable();
+            let mut heap = TopK::new(topk.max(1));
+            for g in cand {
+                let g = g as usize;
+                let s = dot(pre_t, self.exact.row(g)) as f64;
+                let s = match selfs {
+                    Some(si) => s / (si[g].max(0.0) as f64).sqrt().max(1e-12),
+                    None => s,
+                };
+                heap.push(s, self.exact.id(g));
+                rescored += 1;
+            }
+            out.push(QueryResult { top: heap.into_sorted() });
+        }
+        if let Some(m) = metrics {
+            Metrics::add_nanos(&m.stage2_nanos, t1.elapsed().as_secs_f64());
+            m.candidates_rescored.fetch_add(rescored, std::sync::atomic::Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+}
+
+/// Stage-1 scan of one quantized shard: per-test-row candidate pools of
+/// (approximate score, GLOBAL row index).
+#[allow(clippy::too_many_arguments)]
+fn scan_shard_q8(
+    quant: &QuantShardedStore,
+    si: usize,
+    t_codes: &[i8],
+    t_scales: &[f32],
+    nt: usize,
+    pool: usize,
+    selfs: Option<&[f32]>,
+    chunk_len: usize,
+    metrics: Option<&Metrics>,
+) -> Vec<TopK> {
+    let t0 = Instant::now();
+    let k = quant.k();
+    let shard = quant.shard(si);
+    let base = quant.shard_start(si);
+    let mut heaps: Vec<TopK> = (0..nt).map(|_| TopK::new(pool)).collect();
+    let rows = shard.rows();
+    let mut at = 0usize;
+    while at < rows {
+        let len = chunk_len.min(rows - at);
+        if at + len < rows {
+            shard.prefetch(at + len, chunk_len.min(rows - at - len));
+        }
+        let scores = scan_scores_q8(
+            t_codes,
+            t_scales,
+            nt,
+            shard.codes_chunk(at, len),
+            shard.scales_chunk(at, len),
+            len,
+            k,
+        );
+        for (t, heap) in heaps.iter_mut().enumerate() {
+            let srow = &scores[t * len..(t + 1) * len];
+            for (j, &s) in srow.iter().enumerate() {
+                let g = base + at + j;
+                // Same RelatIF denominators as stage 2, so the pool chases
+                // the ranking the rescore will finalize.
+                let s = match selfs {
+                    Some(si_all) => {
+                        s as f64 / (si_all[g].max(0.0) as f64).sqrt().max(1e-12)
+                    }
+                    None => s as f64,
+                };
+                heap.push(s, g as u64);
+            }
+        }
+        at += len;
+    }
+    if let Some(m) = metrics {
+        m.shards_scanned.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Metrics::add_nanos(&m.shard_scan_nanos, t0.elapsed().as_secs_f64());
+    }
+    heaps
+}

@@ -45,11 +45,24 @@ fn stat_on_v1_and_sharded_stores() {
     assert_eq!(st.storage_bytes, (3 * 32 + n * k * 4 + n * 8) as u64);
 
     let text = st.render();
+    assert!(text.contains("codec         f32"), "render:\n{text}");
     assert!(text.contains("shards        3"), "render:\n{text}");
     assert!(text.contains("rows          50"), "render:\n{text}");
     assert!(text.contains("k             12"), "render:\n{text}");
     assert!(text.contains("storage_bytes"), "render:\n{text}");
     assert!(text.contains("shard-0002"), "render:\n{text}");
+
+    // Quantized copy: same rows/k, int8 codec, ~4x smaller storage.
+    let qdir = tmpdir("stat-quant");
+    let man = logra::store::quantize_store(&dst, &qdir).unwrap();
+    assert_eq!(man.n_shards(), 3);
+    let qst = stat_store(&qdir).unwrap();
+    assert_eq!(qst.codec, logra::store::StoreCodec::Int8);
+    assert_eq!(qst.rows, n);
+    assert_eq!(qst.k, k);
+    assert_eq!(qst.shard_rows, vec![17, 17, 16]);
+    assert!(qst.storage_bytes < st.storage_bytes);
+    assert!(qst.render().contains("codec         int8"));
 
     // Missing directory is a clean error, not a panic.
     assert!(stat_store(&tmpdir("stat-missing").join("nope")).is_err());

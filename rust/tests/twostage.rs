@@ -1,0 +1,225 @@
+//! Quantized-store + two-stage query engine tests (artifact-free).
+//!
+//! Load-bearing properties:
+//! 1. With a rescore pool large enough to cover the whole corpus, the
+//!    two-stage engine reproduces the sequential `QueryEngine` native-scan
+//!    top-k BIT-IDENTICALLY — same (score, id) pairs — for any shard
+//!    decomposition, worker count, and normalization.
+//! 2. With the default small pool (`rescore_factor = 4`), recall@10
+//!    against the exact scan stays high (the int8 codec preserves
+//!    influence rankings, the PAPERS.md sketching observation).
+//! 3. The int8 codec's reconstruction error is bounded by half a
+//!    quantization step per value, and the quantized copy is ~4x smaller.
+
+use std::path::{Path, PathBuf};
+
+use logra::hessian::BlockHessian;
+use logra::prop_assert;
+use logra::store::quant::blocks_of;
+use logra::store::{
+    quantize_store, GradStore, GradStoreWriter, QuantShardedStore, ShardedStore, StoreCodec,
+    QUANT_BLOCK,
+};
+use logra::util::proptest::check;
+use logra::util::rng::Pcg32;
+use logra::valuation::{Normalization, QueryEngine, TwoStageEngine};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-twostage-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a v1 store with shuffled (non-sequential) ids so id-based
+/// tie-breaking is exercised honestly.
+fn write_store(dir: &Path, n: usize, k: usize, rng: &mut Pcg32) -> (Vec<u64>, Vec<f32>) {
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let mut ids: Vec<u64> = (0..n as u64).map(|i| i * 7 + 1000).collect();
+    rng.shuffle(&mut ids);
+    let mut w = GradStoreWriter::create(dir, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    (ids, rows)
+}
+
+fn make_precond(rows: &[f32], n: usize, k: usize) -> logra::hessian::Preconditioner {
+    let mut h = BlockHessian::single_block(k);
+    h.accumulate(rows, n);
+    h.preconditioner(0.1).unwrap()
+}
+
+#[test]
+fn prop_full_pool_reproduces_exact_engine_bit_identically() {
+    check("twostage-full-pool-parity", 8, |g| {
+        let k = 2 + g.int_in(0, 10);
+        let n = 8 + g.int_in(0, 100);
+        let n_shards = 1 + g.int_in(0, 4).min(n - 1);
+        let workers = 1 + g.int_in(0, 3);
+        let nt = 1 + g.int_in(0, 3);
+        let topk = 1 + g.int_in(0, 9);
+
+        let uniq = g.rng.next_u32();
+        let src = tmpdir(&format!("parity-src-{uniq}"));
+        let (_, rows) = write_store(&src, n, k, &mut g.rng);
+        let sharded = tmpdir(&format!("parity-sharded-{uniq}"));
+        logra::store::shard_store(&src, &sharded, n_shards).unwrap();
+        let quant_dir = tmpdir(&format!("parity-quant-{uniq}"));
+        quantize_store(&sharded, &quant_dir).unwrap();
+
+        let exact = ShardedStore::open(&sharded).unwrap();
+        let quant = QuantShardedStore::open(&quant_dir).unwrap();
+        let single = GradStore::open(&src).unwrap();
+        let precond = make_precond(&rows, n, k);
+        let seq = QueryEngine::new_native(&single, &precond, 1 + g.rng.below_usize(n));
+        // rescore_factor large enough that the pool covers every row.
+        let factor = n.div_ceil(topk) + 1;
+        let mut test = vec![0.0f32; nt * k];
+        g.rng.fill_normal(&mut test, 1.0);
+
+        for norm in [Normalization::None, Normalization::RelatIf] {
+            let want = seq.query(&test, nt, topk, norm).unwrap();
+            let engine = TwoStageEngine::new(&quant, &exact, &precond)
+                .unwrap()
+                .with_workers(workers)
+                .with_chunk_len(1 + g.rng.below_usize(n))
+                .with_rescore_factor(factor);
+            prop_assert!(
+                engine.pool_size(topk) == n,
+                "pool {} != corpus {n}",
+                engine.pool_size(topk)
+            );
+            let got = engine.query(&test, nt, topk, norm).unwrap();
+            prop_assert!(got.len() == want.len(), "result count");
+            for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+                prop_assert!(
+                    a.top == b.top,
+                    "top-k diverged (norm {norm:?}, test row {t}, shards {n_shards}, \
+                     workers {workers}, topk {topk}):\n  two-stage {:?}\n  exact {:?}",
+                    a.top,
+                    b.top
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_roundtrip_error_bounded() {
+    check("quant-roundtrip-bound", 10, |g| {
+        let k = 1 + g.int_in(0, 200);
+        let n = 1 + g.int_in(0, 40);
+        let uniq = g.rng.next_u32();
+        let src = tmpdir(&format!("rt-src-{uniq}"));
+        let mut rows = vec![0.0f32; n * k];
+        g.rng.fill_normal(&mut rows, 2.0);
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let mut w = GradStoreWriter::create(&src, k).unwrap();
+        w.append(&ids, &rows).unwrap();
+        w.finalize().unwrap();
+        let dst = tmpdir(&format!("rt-dst-{uniq}"));
+        quantize_store(&src, &dst).unwrap();
+        let q = QuantShardedStore::open(&dst).unwrap();
+        prop_assert!(q.rows() == n, "rows {} != {n}", q.rows());
+
+        let blocks = blocks_of(k);
+        for r in 0..n {
+            let orig = &rows[r * k..(r + 1) * k];
+            let deq = q.shard(0).dequant_row(r);
+            let scales = q.shard(0).scales_chunk(r, 1);
+            for (i, (&v, &d)) in orig.iter().zip(&deq).enumerate() {
+                let b = (i / QUANT_BLOCK).min(blocks - 1);
+                // Symmetric round-to-nearest: ≤ half a step per value.
+                let bound = scales[b] * 0.5 + 1e-6;
+                prop_assert!(
+                    (v - d).abs() <= bound,
+                    "row {r} value {i}: |{v} - {d}| > {bound}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn small_pool_recall_stays_high() {
+    // Default serving shape: rescore_factor 4, topk 10, a corpus big
+    // enough that the pool (40) is a small fraction of it. The int8 coarse
+    // scan must put nearly all of the true top-10 into the pool.
+    let k = 96;
+    let n = 1000;
+    let nt = 8;
+    let topk = 10;
+    let src = tmpdir("recall-src");
+    let mut rng = Pcg32::seeded(77);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("recall-sharded");
+    logra::store::shard_store(&src, &sharded, 4).unwrap();
+    let quant_dir = tmpdir("recall-quant");
+    quantize_store(&sharded, &quant_dir).unwrap();
+
+    let exact = ShardedStore::open(&sharded).unwrap();
+    let quant = QuantShardedStore::open(&quant_dir).unwrap();
+    let single = GradStore::open(&src).unwrap();
+    let precond = make_precond(&rows, n, k);
+    let seq = QueryEngine::new_native(&single, &precond, 128);
+    let engine = TwoStageEngine::new(&quant, &exact, &precond)
+        .unwrap()
+        .with_workers(2)
+        .with_chunk_len(128)
+        .with_rescore_factor(4);
+
+    let mut test = vec![0.0f32; nt * k];
+    rng.fill_normal(&mut test, 1.0);
+    let want = seq.query(&test, nt, topk, Normalization::None).unwrap();
+    let got = engine.query(&test, nt, topk, Normalization::None).unwrap();
+    let mut hits = 0usize;
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.top.len(), topk);
+        let truth: Vec<u64> = b.top.iter().map(|&(_, id)| id).collect();
+        hits += a.top.iter().filter(|&&(_, id)| truth.contains(&id)).count();
+    }
+    let recall = hits as f64 / (nt * topk) as f64;
+    assert!(recall >= 0.95, "recall@{topk} = {recall:.3} < 0.95");
+}
+
+#[test]
+fn quantized_copy_is_4x_smaller_and_codec_tagged() {
+    let k = 192; // paper-shaped row width
+    let n = 512;
+    let src = tmpdir("size-src");
+    let mut rng = Pcg32::seeded(5);
+    write_store(&src, n, k, &mut rng);
+    let dst = tmpdir("size-dst");
+    let man = quantize_store(&src, &dst).unwrap();
+    assert_eq!(man.codec, StoreCodec::Int8);
+
+    let f32_bytes = logra::store::stat_store(&src).unwrap().storage_bytes;
+    let q8_stat = logra::store::stat_store(&dst).unwrap();
+    assert_eq!(q8_stat.codec, StoreCodec::Int8);
+    assert_eq!(q8_stat.rows, n);
+    let ratio = f32_bytes as f64 / q8_stat.storage_bytes as f64;
+    assert!(ratio > 3.0, "compression ratio only {ratio:.2}x");
+    assert!(q8_stat.render().contains("codec         int8"));
+}
+
+#[test]
+fn stale_quantized_copy_rejected() {
+    // The engine refuses a quantized copy that no longer mirrors the
+    // exact store (row count drift = stale conversion).
+    let k = 8;
+    let src_a = tmpdir("stale-a");
+    let src_b = tmpdir("stale-b");
+    let mut rng = Pcg32::seeded(3);
+    let (_, rows_a) = write_store(&src_a, 20, k, &mut rng);
+    write_store(&src_b, 30, k, &mut rng);
+    let quant_b = tmpdir("stale-quant-b");
+    quantize_store(&src_b, &quant_b).unwrap();
+
+    let exact_a = ShardedStore::open(&src_a).unwrap();
+    let quant = QuantShardedStore::open(&quant_b).unwrap();
+    let precond = make_precond(&rows_a, 20, k);
+    assert!(TwoStageEngine::new(&quant, &exact_a, &precond).is_err());
+}
