@@ -1,12 +1,18 @@
 //! Bench: substrate microbenchmarks — host linalg (matmul_t, eigh),
 //! store scan bandwidth, sharded parallel scan throughput, quantized
-//! (int8) scan and two-stage scan-then-rescore throughput, top-k
-//! throughput, preconditioner apply. These locate the L3 hot-path costs
-//! for the perf pass (DESIGN.md §7).
+//! (int8) scan and two-stage scan-then-rescore throughput, persistent
+//! scan-pool serving throughput under concurrent query admission, top-k
+//! throughput. These locate the L3 hot-path costs for the perf pass
+//! (DESIGN.md §7).
 //!
 //! Emits `BENCH_scan.json` (rows/s for the f32 scan, the quantized scan,
-//! and the two-stage engine, plus storage bytes per codec) so the scan
-//! perf trajectory is tracked across PRs.
+//! and the two-stage engine; queries/s for the pool at concurrency 1/4/8
+//! vs per-query thread spawn; storage bytes per codec) so the scan perf
+//! trajectory is tracked across PRs — CI gates on it against
+//! `BENCH_baseline.json` (see `scripts/bench_gate.py`).
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use logra::hessian::BlockHessian;
 use logra::linalg::{eigh, Matrix};
@@ -16,7 +22,9 @@ use logra::store::{
 use logra::util::bench::{bench, report_metric, BenchOpts};
 use logra::util::rng::Pcg32;
 use logra::util::topk::TopK;
-use logra::valuation::{Normalization, ParallelQueryEngine, QueryEngine, TwoStageEngine};
+use logra::valuation::{
+    Normalization, ParallelQueryEngine, QueryEngine, ScanPool, TwoStageEngine,
+};
 
 fn main() {
     let mut rng = Pcg32::seeded(7);
@@ -108,19 +116,19 @@ fn main() {
             w.append(&ids, &buf).unwrap();
         }
         w.finalize().unwrap();
-        let precond = hess.preconditioner(0.1).unwrap();
+        let precond = Arc::new(hess.preconditioner(0.1).unwrap());
 
         let sharded_dir = std::env::temp_dir().join("logra-microbench-shard-dst");
         let _ = std::fs::remove_dir_all(&sharded_dir);
         shard_store(&src, &sharded_dir, 8).unwrap();
-        let store = ShardedStore::open(&sharded_dir).unwrap();
+        let store = Arc::new(ShardedStore::open(&sharded_dir).unwrap());
 
         let nt = 8usize;
         let mut test = vec![0.0f32; nt * k];
         rng.fill_normal(&mut test, 1.0);
         let mut baseline = None;
         for workers in [1usize, 2, 4] {
-            let engine = ParallelQueryEngine::new(&store, &precond)
+            let engine = ParallelQueryEngine::new(store.clone(), precond.clone())
                 .with_workers(workers)
                 .with_chunk_len(512);
             let res = bench(
@@ -156,7 +164,7 @@ fn main() {
         let quant_dir = std::env::temp_dir().join("logra-microbench-shard-q8");
         let _ = std::fs::remove_dir_all(&quant_dir);
         quantize_store(&sharded_dir, &quant_dir).unwrap();
-        let quant = QuantShardedStore::open(&quant_dir).unwrap();
+        let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
         let single = GradStore::open(&src).unwrap();
         let topk = 10usize;
 
@@ -176,7 +184,7 @@ fn main() {
         // int8 coarse-scan cost.
         let mut ts_means = [0.0f64; 2];
         for (slot, factor) in [(0usize, 1usize), (1, 4)] {
-            let engine = TwoStageEngine::new(&quant, &store, &precond)
+            let engine = TwoStageEngine::new(quant.clone(), store.clone(), precond.clone())
                 .unwrap()
                 .with_workers(1)
                 .with_chunk_len(512)
@@ -213,6 +221,75 @@ fn main() {
             f32_bytes as f64 / q8_bytes as f64,
             "x smaller",
         );
+
+        // Persistent scan pool under concurrent query admission: queries/s
+        // at concurrency 1, 4, 8 on one warm 4-worker pool, vs the
+        // per-query thread-spawn path at concurrency 8 with the SAME
+        // worker count. The pool amortizes spawn cost and interleaves
+        // shard tasks, so pool-at-c8 should meet or beat spawn-at-c8.
+        let pool_workers = 4usize;
+        let queries_per_client = 6usize;
+        let pool = Arc::new(ScanPool::spawn(pool_workers));
+        let pooled = Arc::new(
+            ParallelQueryEngine::new(store.clone(), precond.clone())
+                .with_chunk_len(512)
+                .with_pool(pool.clone()),
+        );
+        // Sanity (and warmup): pooled results are bit-identical to the
+        // sequential scan, so the throughput numbers measure the real
+        // serving path.
+        {
+            let want = f32_engine.query(&test, nt, topk, Normalization::None).unwrap();
+            let got = pooled.query(&test, nt, topk, Normalization::None).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.top, b.top, "pooled scan diverged from sequential");
+            }
+        }
+        let run_clients = |engine: &Arc<ParallelQueryEngine>, clients: usize| -> f64 {
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for _ in 0..clients {
+                    let engine = engine.clone();
+                    let test = &test;
+                    s.spawn(move || {
+                        for _ in 0..queries_per_client {
+                            let out = engine.query(test, nt, topk, Normalization::None).unwrap();
+                            std::hint::black_box(&out);
+                        }
+                    });
+                }
+            });
+            (clients * queries_per_client) as f64 / t0.elapsed().as_secs_f64()
+        };
+        let mut pool_qps = [0.0f64; 3];
+        for (slot, conc) in [(0usize, 1usize), (1, 4), (2, 8)] {
+            pool_qps[slot] = run_clients(&pooled, conc);
+            report_metric(
+                &format!("micro.store.pool.qps.c{conc}"),
+                pool_qps[slot],
+                "queries/s",
+            );
+        }
+        let spawned = Arc::new(
+            ParallelQueryEngine::new(store.clone(), precond.clone())
+                .with_workers(pool_workers)
+                .with_chunk_len(512),
+        );
+        let spawn_qps_c8 = run_clients(&spawned, 8);
+        report_metric("micro.store.spawn.qps.c8", spawn_qps_c8, "queries/s");
+        report_metric(
+            "micro.store.pool.speedup_vs_spawn.c8",
+            pool_qps[2] / spawn_qps_c8,
+            "x vs per-query spawn",
+        );
+        let pool_snap = pool.snapshot();
+        report_metric(
+            "micro.store.pool.busy_seconds",
+            pool_snap.total_busy_seconds(),
+            "s",
+        );
+        pool.shutdown();
+
         let json = format!(
             "{{\n  \"rows\": {rows},\n  \"k\": {k},\n  \"nt\": {nt},\n  \"topk\": {topk},\n  \
              \"f32_rows_per_s\": {f32_rows_per_s:.1},\n  \
@@ -221,9 +298,17 @@ fn main() {
              \"quant_speedup_vs_f32\": {:.3},\n  \
              \"f32_storage_bytes\": {f32_bytes},\n  \
              \"quant_storage_bytes\": {q8_bytes},\n  \
-             \"compression_ratio\": {:.3}\n}}\n",
+             \"compression_ratio\": {:.3},\n  \
+             \"pool_workers\": {pool_workers},\n  \
+             \"pool_c1_qps\": {:.1},\n  \
+             \"pool_c4_qps\": {:.1},\n  \
+             \"pool_c8_qps\": {:.1},\n  \
+             \"spawn_c8_qps\": {spawn_qps_c8:.1}\n}}\n",
             f32_mean / quant_mean,
             f32_bytes as f64 / q8_bytes as f64,
+            pool_qps[0],
+            pool_qps[1],
+            pool_qps[2],
         );
         std::fs::write("BENCH_scan.json", &json).unwrap();
         println!("wrote BENCH_scan.json");

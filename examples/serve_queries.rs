@@ -3,10 +3,17 @@
 //!
 //! ```text
 //! cargo run --release --example serve_queries [-- --clients 4 --requests 32]
+//!
+//! # Interleaved serving on the persistent scan pool: shard the store,
+//! # give the pool 4 warm workers, and admit up to 4 query batches whose
+//! # shard tasks interleave (no head-of-line blocking on a large query):
+//! cargo run --release --example serve_queries -- \
+//!     --clients 8 --shards 4 --scan-workers 4 --concurrency 4
 //! ```
 //!
-//! Reports per-request latency percentiles, sustained throughput, and the
-//! dynamic batcher's mean batch fill.
+//! Reports per-request latency percentiles, sustained throughput, the
+//! dynamic batcher's mean batch fill, and (when a pool is active) the scan
+//! pool's worker/task counters.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -26,7 +33,15 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let parsed = logra::cli::parse(
         &args,
-        &["clients", "requests", "n-train", "shards", "scan-workers", "rescore-factor"],
+        &[
+            "clients",
+            "requests",
+            "n-train",
+            "shards",
+            "scan-workers",
+            "rescore-factor",
+            "concurrency",
+        ],
     )?;
     let n_clients = parsed.usize_or("clients", 4)?;
     let n_requests = parsed.usize_or("requests", 24)?;
@@ -37,6 +52,10 @@ fn main() -> Result<()> {
     // quantized copy, exact rescore of rescore_factor x topk candidates.
     let quantized = parsed.has_switch("quantized");
     let rescore_factor = parsed.usize_or("rescore-factor", 4)?;
+    // `--concurrency N`: query batches admitted to the scan pool before
+    // the batcher blocks — N > 1 interleaves batches' shard tasks on the
+    // pool's warm workers.
+    let concurrency = parsed.usize_or("concurrency", 2)?;
 
     let root = std::env::current_dir()?;
     let artifact_dir = root.join("artifacts").join("lm_tiny");
@@ -97,6 +116,7 @@ fn main() -> Result<()> {
         quantized_scan: quantized,
         rescore_factor,
         quant_dir,
+        max_in_flight: concurrency.max(1),
     })?);
 
     let t0 = Instant::now();
@@ -157,6 +177,19 @@ fn main() -> Result<()> {
             snap.stage2_seconds,
             snap.candidates_rescored,
             snap.rescore_fraction() * 100.0
+        );
+    }
+    if let Some(pool) = svc.scan_pool() {
+        let ps = pool.snapshot();
+        println!(
+            "scan pool          {} workers (actual), {} queries admitted, \
+             {} tasks done ({} failed), busy {:.3}s, queue depth {}",
+            ps.workers,
+            ps.queries_submitted,
+            ps.tasks_completed,
+            ps.tasks_failed,
+            ps.total_busy_seconds(),
+            ps.queue_depth
         );
     }
     Arc::try_unwrap(svc).ok().map(|s| s.shutdown());

@@ -25,6 +25,12 @@ pub struct Metrics {
     /// Two-stage engine: candidate rows rescored at exact precision (the
     /// sublinear full-precision workload; compare against `rows_scanned`).
     pub candidates_rescored: AtomicU64,
+    /// Scan-pool workers ACTUALLY spawned (after `workers = 0` auto
+    /// resolution) — the pool, not the config, is the authority. 0 when the
+    /// service runs the sequential engine (no pool). Detailed pool health
+    /// (queue depth, busy nanos, task counts) lives in
+    /// `valuation::PoolSnapshot` via `ValuationService::scan_pool`.
+    pub pool_workers: AtomicU64,
 }
 
 impl Metrics {
@@ -41,6 +47,7 @@ impl Metrics {
             stage1_seconds: self.stage1_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             stage2_seconds: self.stage2_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             candidates_rescored: self.candidates_rescored.load(Ordering::Relaxed),
+            pool_workers: self.pool_workers.load(Ordering::Relaxed),
         }
     }
 
@@ -63,6 +70,7 @@ pub struct MetricsSnapshot {
     pub stage1_seconds: f64,
     pub stage2_seconds: f64,
     pub candidates_rescored: u64,
+    pub pool_workers: u64,
 }
 
 impl MetricsSnapshot {
@@ -121,7 +129,9 @@ mod tests {
         Metrics::add_nanos(&m.stage1_nanos, 1.5);
         Metrics::add_nanos(&m.stage2_nanos, 0.5);
         m.candidates_rescored.store(40, Ordering::Relaxed);
+        m.pool_workers.store(6, Ordering::Relaxed);
         let s = m.snapshot();
+        assert_eq!(s.pool_workers, 6);
         assert!((s.mean_batch_fill() - 2.5).abs() < 1e-12);
         assert!((s.pairs_per_sec(4) - 2000.0).abs() < 1.0);
         assert_eq!(s.shards_scanned, 8);

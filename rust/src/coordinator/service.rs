@@ -1,23 +1,28 @@
 //! Valuation service: dynamic request batching over the query engine —
 //! the serving face of Figure 1 (left top + right).
 //!
-//! PJRT handles are not `Send`, so the service owns runtime + store +
-//! preconditioner inside one worker thread (constructed there from
-//! `Send` ingredients); callers talk to it through bounded channels.
-//! Requests are coalesced up to the artifact's static `test_batch` shape
-//! or until `max_wait` expires — classic dynamic batching: the HLO score
-//! program amortizes its fixed cost over every query in the batch.
+//! PJRT handles are not `Send`, so the service keeps runtime warmup and
+//! gradient extraction inside one worker thread; callers talk to it
+//! through bounded channels. Requests are coalesced up to the artifact's
+//! static `test_batch` shape or until `max_wait` expires — classic dynamic
+//! batching: the HLO score program amortizes its fixed cost over every
+//! query in the batch.
 //!
-//! Scanning dispatches on the store layout: a plain v1 store keeps the
-//! sequential [`QueryEngine`] (HLO score path — there is nothing to fan
-//! out over); a sharded store uses the parallel scan-and-merge engine,
-//! whose results are bit-identical to a sequential NATIVE scan of the
-//! same rows (the HLO and native scorers may differ in f32 rounding, so
-//! resharding a corpus swaps scorer as well as parallelism). With
-//! `quantized_scan` set (plus a `quant_dir` produced by
-//! `logra store quantize`), queries run the two-stage engine instead:
-//! int8 coarse scan over the quantized copy, exact f32 rescore of a
-//! `rescore_factor × topk` candidate pool.
+//! The store fabric, preconditioner, and scan pool are shared-ownership
+//! (`Arc`) and built at `spawn` time, BEFORE the worker starts: scans no
+//! longer belong to the worker thread. Scanning dispatches on the store
+//! layout: a plain v1 store keeps the sequential [`QueryEngine`] (HLO
+//! score path — there is nothing to fan out over); a sharded store uses
+//! the parallel scan-and-merge engine; with `quantized_scan` set (plus a
+//! `quant_dir` produced by `logra store quantize`), queries run the
+//! two-stage engine instead. Both parallel paths run on ONE persistent
+//! [`ScanPool`]: the worker admits a scan (`query_async`) and immediately
+//! returns to batching, so up to `max_in_flight` query batches interleave
+//! their shard tasks on the pool's warm workers (no head-of-line blocking
+//! on a large query), while a responder thread completes scans in
+//! admission order and dispatches responses. Results stay bit-identical
+//! to the sequential native scan for every interleaving (the pool's
+//! shard-slot merge discipline; see `valuation::pool`).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -32,7 +37,8 @@ use crate::runtime::Runtime;
 use crate::store::{QuantShardedStore, ShardedStore};
 use crate::util::pipeline::{bounded, Sender};
 use crate::valuation::{
-    Normalization, ParallelQueryEngine, QueryEngine, QueryResult, TwoStageEngine,
+    Normalization, ParallelQueryEngine, PendingQuery, PendingTwoStage, QueryEngine,
+    QueryResult, ScanPool, TwoStageEngine,
 };
 
 /// Service construction parameters (everything `Send`).
@@ -47,9 +53,11 @@ pub struct ServiceConfig {
     pub norm: Normalization,
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
-    /// Scan worker threads for SHARDED stores (0 = one per core, N =
-    /// fixed count). Unsharded v1 stores always use the sequential HLO
-    /// engine — one shard has nothing to fan out over.
+    /// Scan-pool worker threads for SHARDED stores (0 = one per core,
+    /// capped at 16; N = fixed count). The pool spawned at `spawn` time is
+    /// the single authority — `Metrics::pool_workers` reports the resolved
+    /// count. Unsharded v1 stores always use the sequential HLO engine —
+    /// one shard has nothing to fan out over.
     pub scan_workers: usize,
     /// Serve queries through the two-stage engine: int8 coarse scan over
     /// the quantized copy at `quant_dir`, exact f32 rescore of a
@@ -61,6 +69,14 @@ pub struct ServiceConfig {
     /// Quantized copy of `store_dir` (from `logra store quantize`).
     /// Required when `quantized_scan` is set.
     pub quant_dir: Option<PathBuf>,
+    /// Completion-queue depth for admitted query batches (≥ 1) — the
+    /// batcher blocks once this many completed admissions are waiting on
+    /// the responder. A throttle, not an exact bound: one further batch
+    /// can sit in the responder and one in the batcher, so up to
+    /// `max_in_flight + 2` batches may interleave shard tasks on the
+    /// pool. Higher values overlap gradient extraction of batch N+1 with
+    /// the scan of batch N.
+    pub max_in_flight: usize,
 }
 
 /// One LM valuation request: value this token sequence against the store.
@@ -70,40 +86,46 @@ struct ServiceRequest {
     resp: Sender<QueryResult>,
 }
 
-/// Any scan engine behind one `query` call.
+/// Any scan engine behind one admission call. Only the sequential HLO
+/// engine still borrows the runtime; the pool-backed engines own their
+/// stores via `Arc`.
 enum Scanner<'a> {
     Seq(QueryEngine<'a>),
-    Par(ParallelQueryEngine<'a>),
-    Two(TwoStageEngine<'a>),
+    Par(ParallelQueryEngine),
+    Two(TwoStageEngine),
 }
 
-impl Scanner<'_> {
-    fn query(
-        &self,
-        g: &[f32],
-        nt: usize,
-        topk: usize,
-        norm: Normalization,
-    ) -> Result<Vec<QueryResult>> {
-        match self {
-            Scanner::Seq(e) => e.query(g, nt, topk, norm),
-            Scanner::Par(e) => e.query(g, nt, topk, norm),
-            Scanner::Two(e) => e.query(g, nt, topk, norm),
-        }
-    }
+/// A query batch admitted by the worker, completed by the responder.
+struct InFlight {
+    reqs: Vec<ServiceRequest>,
+    outcome: Outcome,
+    submitted: Instant,
+    /// rows_scanned delta to record once the scan succeeds.
+    rows: u64,
 }
 
-/// Client handle; cloneable across threads.
+enum Outcome {
+    /// Sequential path — already scanned on the worker thread.
+    Ready(Vec<QueryResult>),
+    Par(PendingQuery),
+    Two(PendingTwoStage),
+}
+
+/// Client handle; cloneable across threads (wrap in `Arc`).
 pub struct ValuationService {
     tx: Option<Sender<ServiceRequest>>,
     handle: Option<std::thread::JoinHandle<Result<()>>>,
+    responder: Option<std::thread::JoinHandle<()>>,
+    pool: Option<Arc<ScanPool>>,
     pub metrics: Arc<Metrics>,
     seq_len: usize,
 }
 
 impl ValuationService {
-    /// Spawn the worker. Fails later (on first query) if artifacts are
-    /// missing — construction itself is cheap.
+    /// Open the store fabric, spawn the scan pool and the worker. Store
+    /// and pool errors surface here; artifact errors surface before the
+    /// first query is accepted (the worker signals readiness only after
+    /// warmup).
     pub fn spawn(cfg: ServiceConfig) -> Result<Self> {
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
@@ -112,42 +134,104 @@ impl ValuationService {
         let man = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
         let seq_len = man.seq_len;
         anyhow::ensure!(man.is_lm(), "valuation service currently serves LM queries");
+
+        // Shared-ownership scan substrate, built before the worker exists:
+        // stores, preconditioner, and ONE persistent pool for every scan.
+        let store = Arc::new(ShardedStore::open(&cfg.store_dir)?);
+        // Open (and sanity-check) the quantized companion up front so a
+        // stale copy fails construction, not the first query.
+        let quant: Option<Arc<QuantShardedStore>> = if cfg.quantized_scan {
+            let qdir = cfg.quant_dir.as_ref().ok_or_else(|| {
+                anyhow!("quantized_scan requires quant_dir (run `logra store quantize`)")
+            })?;
+            let q = QuantShardedStore::open(qdir)?;
+            anyhow::ensure!(
+                q.rows() == store.rows() && q.k() == store.k(),
+                "quantized copy {} ({} rows, k={}) does not mirror store {} \
+                 ({} rows, k={}) — re-run `logra store quantize`",
+                qdir.display(),
+                q.rows(),
+                q.k(),
+                cfg.store_dir.display(),
+                store.rows(),
+                store.k()
+            );
+            Some(Arc::new(q))
+        } else {
+            None
+        };
+        let precond = Arc::new(cfg.hessian.preconditioner(cfg.damping)?);
+        // The sequential engine serves single-shard f32 stores; everything
+        // else scans through the pool.
+        let pool: Option<Arc<ScanPool>> = if quant.is_some() || store.as_single().is_none() {
+            let p = Arc::new(ScanPool::spawn(cfg.scan_workers));
+            metrics.pool_workers.store(p.workers() as u64, std::sync::atomic::Ordering::Relaxed);
+            Some(p)
+        } else {
+            None
+        };
+
+        // Responder: completes admitted scans in admission order and
+        // dispatches responses — the other half of pipelined admission.
+        let (done_tx, done_rx) = bounded::<InFlight>(cfg.max_in_flight.max(1));
+        let m3 = metrics.clone();
+        let responder = std::thread::Builder::new()
+            .name("valuation-responder".into())
+            .spawn(move || {
+                while let Some(inflight) = done_rx.recv() {
+                    let InFlight { reqs, outcome, submitted, rows } = inflight;
+                    let timed = !matches!(outcome, Outcome::Ready(_));
+                    let res = match outcome {
+                        Outcome::Ready(results) => Ok(results),
+                        Outcome::Par(pending) => pending.wait(),
+                        Outcome::Two(pending) => pending.wait(),
+                    };
+                    match res {
+                        Ok(results) => {
+                            if timed {
+                                // Admission-to-completion wall time; with
+                                // overlapping batches these sum past wall
+                                // clock, like shard_scan_nanos.
+                                Metrics::add_nanos(
+                                    &m3.scan_nanos,
+                                    submitted.elapsed().as_secs_f64(),
+                                );
+                            }
+                            m3.rows_scanned.fetch_add(rows, std::sync::atomic::Ordering::Relaxed);
+                            for (i, req) in reqs.into_iter().enumerate() {
+                                let mut r = results[i].clone();
+                                r.top.truncate(req.topk);
+                                let _ = req.resp.send(r);
+                            }
+                        }
+                        Err(e) => {
+                            // Per-batch error isolation: dropping `reqs`
+                            // closes the response channels (callers see an
+                            // error); the service keeps serving.
+                            eprintln!("[valuation-service] scan failed: {e:#}");
+                        }
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn responder: {e}"))?;
+
         let (ready_tx, ready_rx) = bounded::<Result<()>>(1);
+        let w_store = store.clone();
+        let w_quant = quant.clone();
+        let w_precond = precond.clone();
+        let w_pool = pool.clone();
         let handle = std::thread::Builder::new()
             .name("valuation-service".into())
             .spawn(move || -> Result<()> {
-                // Pay the one-time setup (store open, eigendecomposition,
-                // XLA compilation) BEFORE signalling readiness, so no
-                // request ever observes it as tail latency (§Perf log).
-                type Setup =
-                    (Runtime, ShardedStore, Option<QuantShardedStore>, crate::hessian::Preconditioner);
-                let setup = (|| -> Result<Setup> {
+                let store = w_store;
+                let quant = w_quant;
+                let precond = w_precond;
+                // Pay the one-time setup (eigendecomposition happened at
+                // spawn; XLA compilation + lazy PJRT init here) BEFORE
+                // signalling readiness, so no request ever observes it as
+                // tail latency (§Perf log).
+                let setup = (|| -> Result<Runtime> {
                     let rt = Runtime::open(&cfg.artifact_dir)?;
-                    let store = ShardedStore::open(&cfg.store_dir)?;
-                    // Open (and sanity-check) the quantized companion up
-                    // front so a stale copy fails construction, not the
-                    // first query.
-                    let quant = if cfg.quantized_scan {
-                        let qdir = cfg.quant_dir.as_ref().ok_or_else(|| {
-                            anyhow!("quantized_scan requires quant_dir (run `logra store quantize`)")
-                        })?;
-                        let q = QuantShardedStore::open(qdir)?;
-                        anyhow::ensure!(
-                            q.rows() == store.rows() && q.k() == store.k(),
-                            "quantized copy {} ({} rows, k={}) does not mirror store {} \
-                             ({} rows, k={}) — re-run `logra store quantize`",
-                            qdir.display(),
-                            q.rows(),
-                            q.k(),
-                            cfg.store_dir.display(),
-                            store.rows(),
-                            store.k()
-                        );
-                        Some(q)
-                    } else {
-                        None
-                    };
-                    let precond = cfg.hessian.preconditioner(cfg.damping)?;
                     rt.warmup(&["logra_log", "score"])?;
                     // Compilation alone is not enough: the first EXECUTION
                     // of each program pays lazy PJRT initialization. Run
@@ -165,9 +249,9 @@ impl ValuationService {
                         let b = f32_lit(&[man.train_chunk, man.k_total], &zeros_b)?;
                         rt.run_ref("score", &[&a, &b])?;
                     }
-                    Ok((rt, store, quant, precond))
+                    Ok(rt)
                 })();
-                let (rt, store, quant, precond) = match setup {
+                let rt = match setup {
                     Ok(v) => {
                         let _ = ready_tx.send(Ok(()));
                         v
@@ -181,22 +265,26 @@ impl ValuationService {
                 let chunk_len = rt.manifest.train_chunk.max(1);
                 let engine = match &quant {
                     // Quantized serving: int8 coarse scan + exact rescore.
-                    // (Setup already validated the copy, so `new` cannot
+                    // (spawn already validated the copy, so `new` cannot
                     // fail here in practice.)
                     Some(q) => Scanner::Two(
-                        TwoStageEngine::new(q, &store, &precond)?
+                        TwoStageEngine::new(q.clone(), store.clone(), precond.clone())?
                             .with_workers(cfg.scan_workers)
                             .with_chunk_len(chunk_len)
                             .with_rescore_factor(cfg.rescore_factor)
-                            .with_metrics(m2.clone()),
+                            .with_metrics(m2.clone())
+                            .with_pool(w_pool.clone().expect("pool spawned for quantized scan")),
                     ),
                     None => match store.as_single() {
-                        Some(single) => Scanner::Seq(QueryEngine::new(&rt, single, &precond)),
+                        Some(single) => {
+                            Scanner::Seq(QueryEngine::new(&rt, single, precond.as_ref()))
+                        }
                         None => Scanner::Par(
-                            ParallelQueryEngine::new(&store, &precond)
+                            ParallelQueryEngine::new(store.clone(), precond.clone())
                                 .with_workers(cfg.scan_workers)
                                 .with_chunk_len(chunk_len)
-                                .with_metrics(m2.clone()),
+                                .with_metrics(m2.clone())
+                                .with_pool(w_pool.clone().expect("pool spawned for sharded store")),
                         ),
                     },
                 };
@@ -228,7 +316,7 @@ impl ValuationService {
                     // Per-batch error isolation: a failing batch drops its
                     // requesters' response channels (they see an error)
                     // but must never kill the worker.
-                    let batch_result = (|| -> Result<Vec<crate::valuation::QueryResult>> {
+                    let admitted = (|| -> Result<Outcome> {
                         // Assemble the fixed-shape token batch at the
                         // gradient artifact's log_batch (pad repeats the
                         // last real row).
@@ -256,31 +344,37 @@ impl ValuationService {
                             g.extend_from_slice(&g_full[src * k..(src + 1) * k]);
                         }
 
-                        let topk = reqs.iter().map(|r| r.topk).max().unwrap_or(1);
-                        let t1 = Instant::now();
+                        let topk = reqs.iter().map(|r| r.topk).max().unwrap_or(1).max(1);
                         // Only the HLO scorer needs the static test_batch
                         // shape; the native engines are shape-flexible, so
                         // drop the padding rows on an underfilled batch —
                         // less scan work, and per-request metrics
                         // (rows_scanned, candidates_rescored) stay honest.
-                        let (q, qn) = match &engine {
-                            Scanner::Seq(_) => (&g[..], nt),
-                            Scanner::Par(_) | Scanner::Two(_) => (&g[..real * k], real),
-                        };
-                        let results = engine.query(q, qn, topk.max(1), cfg.norm)?;
-                        Metrics::add_nanos(&m2.scan_nanos, t1.elapsed().as_secs_f64());
-                        m2.rows_scanned.fetch_add(
-                            (store.rows() * real) as u64,
-                            std::sync::atomic::Ordering::Relaxed,
-                        );
-                        Ok(results)
+                        match &engine {
+                            Scanner::Seq(e) => {
+                                let t1 = Instant::now();
+                                let results = e.query(&g, nt, topk, cfg.norm)?;
+                                Metrics::add_nanos(&m2.scan_nanos, t1.elapsed().as_secs_f64());
+                                Ok(Outcome::Ready(results))
+                            }
+                            Scanner::Par(e) => Ok(Outcome::Par(
+                                e.query_async(&g[..real * k], real, topk, cfg.norm)?,
+                            )),
+                            Scanner::Two(e) => Ok(Outcome::Two(
+                                e.query_async(&g[..real * k], real, topk, cfg.norm)?,
+                            )),
+                        }
                     })();
-                    match batch_result {
-                        Ok(results) => {
-                            for (i, req) in reqs.into_iter().enumerate() {
-                                let mut r = results[i].clone();
-                                r.top.truncate(req.topk);
-                                let _ = req.resp.send(r);
+                    match admitted {
+                        Ok(outcome) => {
+                            let inflight = InFlight {
+                                reqs,
+                                outcome,
+                                submitted: Instant::now(),
+                                rows: (store.rows() * real) as u64,
+                            };
+                            if done_tx.send(inflight).is_err() {
+                                return Err(anyhow!("responder thread died"));
                             }
                         }
                         Err(e) => {
@@ -297,7 +391,21 @@ impl ValuationService {
             Some(Err(e)) => return Err(e),
             None => return Err(anyhow!("service worker died during setup")),
         }
-        Ok(ValuationService { tx: Some(tx), handle: Some(handle), metrics, seq_len })
+        Ok(ValuationService {
+            tx: Some(tx),
+            handle: Some(handle),
+            responder: Some(responder),
+            pool,
+            metrics,
+            seq_len,
+        })
+    }
+
+    /// The persistent scan pool (None when the sequential engine serves an
+    /// unsharded store) — snapshot it for queue depth, per-worker busy
+    /// time, and in-flight query counts.
+    pub fn scan_pool(&self) -> Option<&Arc<ScanPool>> {
+        self.pool.as_ref()
     }
 
     /// Blocking query: value `tokens` (must be exactly seq_len long).
@@ -317,13 +425,21 @@ impl ValuationService {
         rrx.recv().ok_or_else(|| anyhow!("service dropped request"))
     }
 
-    /// Graceful shutdown; propagates worker errors.
+    /// Graceful shutdown: stop admission, drain in-flight scans (the pool
+    /// completes every admitted task), then propagate worker errors.
     pub fn shutdown(mut self) -> Result<()> {
         drop(self.tx.take());
-        match self.handle.take() {
+        let res = match self.handle.take() {
             Some(h) => h.join().map_err(|_| anyhow!("service worker panicked"))?,
             None => Ok(()),
+        };
+        if let Some(r) = self.responder.take() {
+            let _ = r.join();
         }
+        if let Some(p) = self.pool.take() {
+            p.shutdown();
+        }
+        res
     }
 }
 
@@ -332,6 +448,12 @@ impl Drop for ValuationService {
         drop(self.tx.take());
         if let Some(h) = self.handle.take() {
             let _ = h.join();
+        }
+        if let Some(r) = self.responder.take() {
+            let _ = r.join();
+        }
+        if let Some(p) = self.pool.take() {
+            p.shutdown();
         }
     }
 }

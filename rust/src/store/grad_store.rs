@@ -185,6 +185,17 @@ impl GradStore {
     pub fn storage_bytes(&self) -> u64 {
         (self.map.len() + self.ids_map.len()) as u64
     }
+
+    /// Bytes of `grads.bin` (header + f32 rows) — the `store stat`
+    /// per-component breakdown.
+    pub fn grads_bytes(&self) -> u64 {
+        self.map.len() as u64
+    }
+
+    /// Bytes of `ids.bin`.
+    pub fn ids_bytes(&self) -> u64 {
+        self.ids_map.len() as u64
+    }
 }
 
 #[cfg(test)]

@@ -48,7 +48,7 @@ pub use grad_store::{GradStore, GradStoreWriter};
 pub use mmap::Mmap;
 pub use quant::{quantize_store, QuantShardedStore, QuantStore, QuantWriter, QUANT_BLOCK};
 pub use shards::{
-    merge_store, shard_store, stat_store, ShardManifest, ShardWriter, ShardedStore,
-    ShardedWriter, StoreCodec, StoreStat,
+    merge_store, shard_store, stat_store, ShardBytes, ShardManifest, ShardWriter,
+    ShardedStore, ShardedWriter, StoreCodec, StoreStat,
 };
 pub use writer_thread::BackgroundWriter;

@@ -359,6 +359,22 @@ impl QuantStore {
     pub fn storage_bytes(&self) -> u64 {
         (self.codes.len() + self.scales.len() + self.ids.len()) as u64
     }
+
+    /// Bytes of `codes.bin` (header + int8 rows) — the `store stat`
+    /// per-component breakdown.
+    pub fn codes_bytes(&self) -> u64 {
+        self.codes.len() as u64
+    }
+
+    /// Bytes of `scales.bin`.
+    pub fn scales_bytes(&self) -> u64 {
+        self.scales.len() as u64
+    }
+
+    /// Bytes of `ids.bin`.
+    pub fn ids_bytes(&self) -> u64 {
+        self.ids.len() as u64
+    }
 }
 
 // --------------------------------------------------------- sharded fabric

@@ -501,6 +501,28 @@ pub fn merge_store(src: &Path, dst: &Path) -> Result<u64> {
 
 // ------------------------------------------------------------------- stat
 
+/// Per-shard on-disk byte sizes (the `store stat` breakdown): `data` is
+/// `grads.bin` (f32 codec) or `codes.bin` (int8 codec), `scales` is
+/// `scales.bin` (always 0 for f32 shards), `ids` is `ids.bin`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardBytes {
+    pub data: u64,
+    pub scales: u64,
+    pub ids: u64,
+}
+
+impl ShardBytes {
+    pub fn total(&self) -> u64 {
+        self.data + self.scales + self.ids
+    }
+
+    fn add(&mut self, other: &ShardBytes) {
+        self.data += other.data;
+        self.scales += other.scales;
+        self.ids += other.ids;
+    }
+}
+
 /// Summary of any store directory (the `store stat` CLI subcommand).
 #[derive(Clone, Debug)]
 pub struct StoreStat {
@@ -510,6 +532,9 @@ pub struct StoreStat {
     pub k: usize,
     pub storage_bytes: u64,
     pub shard_rows: Vec<usize>,
+    /// Parallel to `shard_rows`: byte breakdown per shard, so bench
+    /// artifacts and CI logs can correlate throughput with store size.
+    pub shard_bytes: Vec<ShardBytes>,
 }
 
 /// Inspect a store directory (v1, sharded, or quantized) from its durable
@@ -532,6 +557,12 @@ pub fn stat_store(dir: &Path) -> Result<StoreStat> {
                 k: store.k(),
                 storage_bytes: store.storage_bytes(),
                 shard_rows: (0..store.n_shards()).map(|i| store.shard(i).rows()).collect(),
+                shard_bytes: (0..store.n_shards())
+                    .map(|i| {
+                        let s = store.shard(i);
+                        ShardBytes { data: s.grads_bytes(), scales: 0, ids: s.ids_bytes() }
+                    })
+                    .collect(),
             })
         }
         StoreCodec::Int8 => {
@@ -543,13 +574,37 @@ pub fn stat_store(dir: &Path) -> Result<StoreStat> {
                 k: store.k(),
                 storage_bytes: store.storage_bytes(),
                 shard_rows: (0..store.n_shards()).map(|i| store.shard(i).rows()).collect(),
+                shard_bytes: (0..store.n_shards())
+                    .map(|i| {
+                        let s = store.shard(i);
+                        ShardBytes {
+                            data: s.codes_bytes(),
+                            scales: s.scales_bytes(),
+                            ids: s.ids_bytes(),
+                        }
+                    })
+                    .collect(),
             })
         }
     }
 }
 
 impl StoreStat {
+    /// Summed per-component bytes across every shard.
+    pub fn fabric_bytes(&self) -> ShardBytes {
+        let mut total = ShardBytes::default();
+        for b in &self.shard_bytes {
+            total.add(b);
+        }
+        total
+    }
+
     pub fn render(&self) -> String {
+        use crate::util::memory::human_bytes;
+        let data_label = match self.codec {
+            StoreCodec::F32 => "grads",
+            StoreCodec::Int8 => "codes",
+        };
         let mut s = String::new();
         s.push_str(&format!("codec         {}\n", self.codec.as_str()));
         s.push_str(&format!("shards        {}\n", self.shards));
@@ -558,11 +613,25 @@ impl StoreStat {
         s.push_str(&format!(
             "storage_bytes {} ({})\n",
             self.storage_bytes,
-            crate::util::memory::human_bytes(self.storage_bytes)
+            human_bytes(self.storage_bytes)
         ));
-        for (i, r) in self.shard_rows.iter().enumerate() {
-            s.push_str(&format!("  shard-{i:04}  {r} rows\n"));
+        for (i, (r, b)) in self.shard_rows.iter().zip(&self.shard_bytes).enumerate() {
+            s.push_str(&format!(
+                "  shard-{i:04}  {r} rows  {data_label} {}  scales {}  ids {}  ({})\n",
+                b.data,
+                b.scales,
+                b.ids,
+                human_bytes(b.total())
+            ));
         }
+        let total = self.fabric_bytes();
+        s.push_str(&format!(
+            "fabric bytes  {data_label} {}  scales {}  ids {}  ({})\n",
+            total.data,
+            total.scales,
+            total.ids,
+            human_bytes(total.total())
+        ));
         s
     }
 }
@@ -972,9 +1041,19 @@ mod tests {
         assert_eq!(st.k, 6);
         assert!(st.storage_bytes > 0);
         assert_eq!(st.shard_rows.iter().sum::<usize>(), ids.len());
+        // Per-shard byte breakdown is consistent with the fabric total.
+        assert_eq!(st.shard_bytes.len(), st.shards);
+        assert_eq!(st.fabric_bytes().total(), st.storage_bytes);
+        for (r, b) in st.shard_rows.iter().zip(&st.shard_bytes) {
+            assert_eq!(b.scales, 0, "f32 shards have no scales file");
+            assert_eq!(b.ids, (*r * 8) as u64);
+            assert_eq!(b.data, 32 + (*r * 6 * 4) as u64); // header + rows*k*f32
+        }
         let text = st.render();
         assert!(text.contains("shards"));
         assert!(text.contains("storage_bytes"));
+        assert!(text.contains("fabric bytes"));
+        assert!(text.contains("grads"));
     }
 
     #[test]

@@ -10,12 +10,17 @@
 //! the scan out across worker threads and merges per-shard top-k heaps
 //! deterministically. Over quantized stores, [`twostage::TwoStageEngine`]
 //! runs the linear pass on the int8 codec and rescores only a small
-//! candidate pool at exact precision.
+//! candidate pool at exact precision. Under serving load, both engines
+//! attach to a persistent [`pool::ScanPool`], which admits concurrent
+//! queries, interleaves their shard tasks across warm workers, and keeps
+//! results bit-identical to the sequential scan.
 
 pub mod parallel;
+pub mod pool;
 pub mod scorer;
 pub mod twostage;
 
-pub use parallel::{ParallelQueryEngine, ParallelScanConfig};
+pub use parallel::{ParallelQueryEngine, ParallelScanConfig, PendingQuery};
+pub use pool::{auto_workers, PendingScan, PoolSnapshot, ScanHandle, ScanPool};
 pub use scorer::{Normalization, QueryEngine, QueryResult};
-pub use twostage::{TwoStageConfig, TwoStageEngine};
+pub use twostage::{PendingTwoStage, TwoStageConfig, TwoStageEngine};

@@ -2,30 +2,31 @@
 //!
 //! The paper's cost trade (§4.2) answers every influence query by scanning
 //! stored projected gradients; this module makes that scan scale past one
-//! thread: N workers pull shard indices off a bounded
-//! [`crate::util::pipeline`] channel, scan their shards chunk-wise through
-//! the native scoring path (PJRT handles are not `Send`, and chunked dot
-//! products are bitwise independent of the chunk split), keep one [`TopK`]
-//! heap per (shard, test row), and a deterministic merge stage folds the
-//! per-shard heaps into final results.
+//! thread: workers run per-shard scans chunk-wise through the native
+//! scoring path (PJRT handles are not `Send`, and chunked dot products are
+//! bitwise independent of the chunk split), keep one [`TopK`] heap per
+//! (shard, test row), and a deterministic merge stage folds the per-shard
+//! heaps into final results.
 //!
 //! Determinism: scores are per-(test,train)-pair dot products, unaffected
 //! by sharding or chunking; [`TopK`]'s total order on (score, id) makes the
 //! kept set a pure function of the candidate multiset. Together these make
 //! the parallel result **bit-identical** to the sequential
 //! [`QueryEngine`](super::QueryEngine) native scan, whatever the shard
-//! decomposition or worker count (verified by `rust/tests/shards.rs`).
-//! (The HLO scorer may round differently — the claim is scoped to the
-//! native path both engines share.)
+//! decomposition, worker count, or interleaving with concurrent queries
+//! (verified by `rust/tests/shards.rs` and `rust/tests/pool.rs`). (The HLO
+//! scorer may round differently — the claim is scoped to the native path
+//! both engines share.)
 //!
-//! Workers are scoped threads spawned per query: the engine borrows the
-//! store, so threads cannot outlive it without `Arc`-ifying the fabric.
-//! Per-query spawn costs ~10s of µs per worker — noise once shards hold
-//! real row counts; a persistent pool is a follow-up once profiling says
-//! it matters.
+//! Execution substrate: the engine shares ownership of the store fabric
+//! (`Arc`), so scans can run EITHER on per-query scoped threads
+//! (`scatter_gather` — the one-shot CLI shape) or on a long-lived
+//! [`ScanPool`](super::ScanPool) attached with
+//! [`ParallelQueryEngine::with_pool`] — the serving shape, where concurrent
+//! queries interleave their shard tasks on warm workers and
+//! [`ParallelQueryEngine::query_async`] overlaps scans with upstream work.
 
-use std::cell::{Ref, RefCell};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
@@ -37,12 +38,15 @@ use crate::store::ShardedStore;
 use crate::util::pipeline::bounded;
 use crate::util::topk::TopK;
 
+use super::pool::{auto_workers, ScanHandle, ScanPool};
 use super::scorer::{Normalization, QueryResult};
 
 /// Knobs for the parallel scan.
 #[derive(Clone, Copy, Debug)]
 pub struct ParallelScanConfig {
-    /// Worker threads; 0 = one per available core (capped at 16).
+    /// Worker threads; 0 = one per available core (capped at 16) — the
+    /// resolution lives in [`auto_workers`]. Ignored when a [`ScanPool`]
+    /// is attached: the pool's worker count is authoritative.
     pub workers: usize,
     /// Rows scored per chunk within a shard.
     pub chunk_len: usize,
@@ -54,30 +58,34 @@ impl Default for ParallelScanConfig {
     }
 }
 
-/// Parallel influence scorer over a sharded store. Runtime-free: scoring
-/// runs on the native matmul path so workers stay `Send`.
-pub struct ParallelQueryEngine<'a> {
-    store: &'a ShardedStore,
-    precond: &'a Preconditioner,
+/// Parallel influence scorer over a shared-ownership sharded store.
+/// Runtime-free: scoring runs on the native matmul path so workers stay
+/// `Send`. The engine itself is `Send + Sync` — share it across client
+/// threads behind an `Arc` and submit concurrent queries.
+pub struct ParallelQueryEngine {
+    store: Arc<ShardedStore>,
+    precond: Arc<Preconditioner>,
     cfg: ParallelScanConfig,
     metrics: Option<Arc<Metrics>>,
+    pool: Option<Arc<ScanPool>>,
     /// Self-influence per GLOBAL row (RelatIF denominators), filled in
-    /// parallel on first use and cached across queries.
-    self_inf: RefCell<Option<Vec<f32>>>,
+    /// parallel on first use and cached across queries (and threads).
+    self_inf: Mutex<Option<Arc<Vec<f32>>>>,
 }
 
-impl<'a> ParallelQueryEngine<'a> {
-    pub fn new(store: &'a ShardedStore, precond: &'a Preconditioner) -> Self {
+impl ParallelQueryEngine {
+    pub fn new(store: Arc<ShardedStore>, precond: Arc<Preconditioner>) -> Self {
         ParallelQueryEngine {
             store,
             precond,
             cfg: ParallelScanConfig::default(),
             metrics: None,
-            self_inf: RefCell::new(None),
+            pool: None,
+            self_inf: Mutex::new(None),
         }
     }
 
-    /// Set worker count (0 = auto).
+    /// Set worker count (0 = auto) for the per-query spawn path.
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.cfg.workers = workers;
         self
@@ -94,10 +102,20 @@ impl<'a> ParallelQueryEngine<'a> {
         self
     }
 
-    /// Resolved worker count: explicit, else one per core, never more than
-    /// there are shards to scan.
+    /// Run scans on a persistent [`ScanPool`] instead of spawning scoped
+    /// threads per query.
+    pub fn with_pool(mut self, pool: Arc<ScanPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Resolved worker count: the pool's actual count when attached, else
+    /// the per-query spawn resolution (never more than there are shards).
     pub fn workers(&self) -> usize {
-        resolve_workers(self.cfg.workers, self.store.n_shards())
+        match &self.pool {
+            Some(pool) => pool.workers(),
+            None => resolve_workers(self.cfg.workers, self.store.n_shards()),
+        }
     }
 
     /// Full scan: top-k most valuable train examples per test row, merged
@@ -112,6 +130,19 @@ impl<'a> ParallelQueryEngine<'a> {
         topk: usize,
         norm: Normalization,
     ) -> Result<Vec<QueryResult>> {
+        self.query_async(test_grads, nt, topk, norm)?.wait()
+    }
+
+    /// Admit a query without blocking on the scan: the shard fan-out runs
+    /// on the attached pool (or eagerly, per-query spawned, without one)
+    /// and [`PendingQuery::wait`] performs the deterministic merge.
+    pub fn query_async(
+        &self,
+        test_grads: &[f32],
+        nt: usize,
+        topk: usize,
+        norm: Normalization,
+    ) -> Result<PendingQuery> {
         let k = self.store.k();
         ensure!(
             test_grads.len() == nt * k,
@@ -119,27 +150,74 @@ impl<'a> ParallelQueryEngine<'a> {
             nt * k,
             test_grads.len()
         );
-        let pre = self.precond.apply_rows(test_grads, nt);
-        let selfs_guard = match norm {
+        let pre = Arc::new(self.precond.apply_rows(test_grads, nt));
+        let selfs: Option<Arc<Vec<f32>>> = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
             Normalization::None => None,
         };
-        let selfs: Option<&[f32]> = selfs_guard.as_deref();
-
-        // Workers capture only Sync borrows (store, precond, slices) — the
-        // engine itself holds a RefCell cache and must stay on this thread.
-        let store = self.store;
         let chunk_len = self.cfg.chunk_len.max(1);
-        let metrics = self.metrics.as_deref();
-        let pre_rows: &[f32] = &pre;
-        let shard_heaps = scatter_gather(self.workers(), store.n_shards(), &|si| {
-            scan_shard(store, si, pre_rows, nt, topk, selfs, chunk_len, metrics)
-        });
+        let scan = match &self.pool {
+            Some(pool) => {
+                let store = self.store.clone();
+                let metrics = self.metrics.clone();
+                let pre = pre.clone();
+                let selfs = selfs.clone();
+                ScanHandle::Pool(pool.submit(self.store.n_shards(), move |si| {
+                    scan_shard(
+                        &store,
+                        si,
+                        &pre,
+                        nt,
+                        topk,
+                        selfs.as_ref().map(|s| s.as_slice()),
+                        chunk_len,
+                        metrics.as_deref(),
+                    )
+                })?)
+            }
+            None => {
+                let store = &self.store;
+                let metrics = self.metrics.as_deref();
+                let pre_rows: &[f32] = &pre;
+                let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
+                ScanHandle::Ready(scatter_gather(self.workers(), store.n_shards(), &|si| {
+                    scan_shard(store, si, pre_rows, nt, topk, selfs_ref, chunk_len, metrics)
+                }))
+            }
+        };
+        Ok(PendingQuery { scan, nt, topk })
+    }
 
+    /// Self-influence of each stored row in global order (computed once in
+    /// parallel on scoped threads, then cached; concurrent callers block on
+    /// the first computation and share the result).
+    pub fn train_self_influences(&self) -> Arc<Vec<f32>> {
+        cached_self_influences(
+            &self.self_inf,
+            &self.store,
+            &self.precond,
+            resolve_workers(self.cfg.workers, self.store.n_shards()),
+            self.cfg.chunk_len.max(1),
+        )
+    }
+}
+
+/// An admitted parallel query: per-shard heaps in flight (or ready), plus
+/// the merge parameters. `wait` performs the shard-major deterministic
+/// merge — identical to the synchronous path.
+pub struct PendingQuery {
+    scan: ScanHandle,
+    nt: usize,
+    topk: usize,
+}
+
+impl PendingQuery {
+    pub fn wait(self) -> Result<Vec<QueryResult>> {
+        let shard_heaps = self.scan.wait()?;
         // Deterministic merge, shard-major: with TopK's total order the
         // merged set equals the sequential scan's set; into_sorted then
         // fixes the output order.
-        let mut finals: Vec<TopK> = (0..nt).map(|_| TopK::new(topk)).collect();
+        let mut finals: Vec<TopK> = (0..self.nt).map(|_| TopK::new(self.topk)).collect();
         for heaps in shard_heaps {
             for (t, h) in heaps.into_iter().enumerate() {
                 finals[t].merge(h);
@@ -147,43 +225,21 @@ impl<'a> ParallelQueryEngine<'a> {
         }
         Ok(finals.into_iter().map(|h| QueryResult { top: h.into_sorted() }).collect())
     }
-
-    /// Self-influence of each stored row in global order (computed once in
-    /// parallel, then cached).
-    pub fn train_self_influences(&self) -> Ref<'_, [f32]> {
-        if self.self_inf.borrow().is_none() {
-            let store = self.store;
-            let precond = self.precond;
-            let chunk_len = self.cfg.chunk_len.max(1);
-            let per_shard = scatter_gather(self.workers(), store.n_shards(), &|si| {
-                shard_self_influences(store, precond, si, chunk_len)
-            });
-            let mut flat = Vec::with_capacity(store.rows());
-            for v in per_shard {
-                flat.extend(v);
-            }
-            *self.self_inf.borrow_mut() = Some(flat);
-        }
-        Ref::map(self.self_inf.borrow(), |o| o.as_deref().unwrap())
-    }
 }
 
-/// Resolve a requested worker count (0 = one per core, capped at 16)
-/// against the number of shards there are to scan.
+/// Resolve a requested worker count for the PER-QUERY spawn path:
+/// [`auto_workers`] (the central `0 = cores, cap 16` rule), additionally
+/// clamped by the number of shards there are to scan.
 pub(crate) fn resolve_workers(requested: usize, n_shards: usize) -> usize {
-    let raw = if requested == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
-    } else {
-        requested
-    };
-    raw.clamp(1, n_shards.max(1))
+    auto_workers(requested).clamp(1, n_shards.max(1))
 }
 
-/// Run `job(shard_idx)` for every shard across `workers` threads and
+/// Run `job(shard_idx)` for every shard across `workers` scoped threads and
 /// return results in shard order. Work distribution goes through a bounded
-/// pipeline channel so an uneven shard mix load-balances. Shared with the
-/// two-stage quantized engine ([`super::twostage`]), whose stage-1 scan is
-/// the same fan-out over quantized shards.
+/// pipeline channel so an uneven shard mix load-balances. This is the
+/// one-shot path; long-lived serving goes through [`ScanPool`]. Shared with
+/// the two-stage quantized engine ([`super::twostage`]), whose stage-1 scan
+/// is the same fan-out over quantized shards.
 pub(crate) fn scatter_gather<T, F>(workers: usize, n_shards: usize, job: &F) -> Vec<T>
 where
     T: Send,
@@ -264,6 +320,34 @@ fn scan_shard(
         Metrics::add_nanos(&m.shard_scan_nanos, t0.elapsed().as_secs_f64());
     }
     heaps
+}
+
+/// Compute-once self-influence cache shared by [`ParallelQueryEngine`]
+/// and the two-stage engine: fan the per-shard computation out over
+/// scoped threads, flatten in shard order, publish the `Arc`. The lock is
+/// held through the computation on purpose — concurrent callers block and
+/// then share the one result instead of racing duplicate scans.
+pub(crate) fn cached_self_influences(
+    cache: &Mutex<Option<Arc<Vec<f32>>>>,
+    store: &ShardedStore,
+    precond: &Preconditioner,
+    workers: usize,
+    chunk_len: usize,
+) -> Arc<Vec<f32>> {
+    let mut guard = cache.lock().unwrap();
+    if let Some(cached) = &*guard {
+        return cached.clone();
+    }
+    let per_shard = scatter_gather(workers, store.n_shards(), &|si| {
+        shard_self_influences(store, precond, si, chunk_len)
+    });
+    let mut flat = Vec::with_capacity(store.rows());
+    for v in per_shard {
+        flat.extend(v);
+    }
+    let arc = Arc::new(flat);
+    *guard = Some(arc.clone());
+    arc
 }
 
 /// Self-influences of one shard's rows, chunk-wise.

@@ -1,0 +1,491 @@
+//! Persistent scan pool: the serving substrate for the paper's
+//! "write projected gradients once, scan forever" cost trade (§4.2).
+//!
+//! The per-query scatter/gather path (scoped threads spawned per query in
+//! [`super::parallel`]) is the right shape for one-shot CLI runs; a service
+//! facing concurrent queries wants warm workers and interleaved admission.
+//! This module provides both:
+//!
+//! - **N persistent workers** pull `(query, shard)` scan tasks off a
+//!   bounded [`crate::util::pipeline`] channel and run them to completion,
+//!   amortizing thread spawn across the service's lifetime.
+//! - A **dispatcher** round-robins shard tasks across every in-flight
+//!   query when feeding the (small, bounded) task queue, so a large query
+//!   cannot head-of-line-block a small one: their shard tasks interleave.
+//! - A per-query **completion tracker** stores each shard's result in a
+//!   slot table indexed by shard; the submitter merges slots in shard
+//!   order. Because [`crate::util::topk::TopK`]'s total order makes the
+//!   kept set independent of push order, the merged result is
+//!   **bit-identical** to the sequential scan for ANY interleaving of
+//!   concurrent queries, worker count, or completion order (verified by
+//!   `rust/tests/pool.rs`).
+//! - **Panic isolation**: a poisoned scan task fails only its own query
+//!   (the submitter gets an error; remaining tasks of that query are
+//!   skipped fast) — the worker survives and the pool keeps serving.
+//! - **Graceful shutdown**: [`ScanPool::shutdown`] stops admission, drains
+//!   every task already submitted, and joins the threads; pending queries
+//!   still complete.
+//!
+//! The pool is also the single authority for resolving
+//! `ParallelScanConfig::workers == 0` ([`auto_workers`]), so service
+//! metrics can report the worker count actually spawned.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::pipeline::{bounded, Receiver, Sender};
+use crate::util::topk::TopK;
+
+/// Resolve a requested worker count: 0 = one per available core, capped at
+/// 16. THE single resolution point for `workers = 0` — the per-query
+/// spawn path (`parallel::resolve_workers`) additionally clamps to the
+/// shard count; the pool deliberately does not, because concurrent queries
+/// keep workers busy beyond one query's shards.
+pub fn auto_workers(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+    } else {
+        requested
+    }
+}
+
+/// One scan job's shard closure: shard index -> per-test-row heaps.
+type ScanFn = Box<dyn Fn(usize) -> Vec<TopK> + Send + Sync>;
+
+/// Per-shard results of one query, in shard order.
+type ShardHeaps = Vec<Vec<TopK>>;
+
+/// One in-flight query: its scan closure plus the completion tracker.
+struct JobInner {
+    scan: ScanFn,
+    n_shards: usize,
+    /// Slot table indexed by shard — completion order cannot perturb the
+    /// merge order, which is what keeps concurrent admission deterministic.
+    slots: Mutex<Vec<Option<Vec<TopK>>>>,
+    /// Tasks not yet finished; the worker that takes this to zero merges.
+    remaining: AtomicUsize,
+    /// First panic message, if any task of this query panicked.
+    failed: Mutex<Option<String>>,
+    done: Sender<Result<ShardHeaps>>,
+    query_id: u64,
+    metrics: Arc<PoolMetrics>,
+}
+
+type Task = (Arc<JobInner>, usize);
+
+/// Handle to one submitted query's eventual result.
+pub struct PendingScan {
+    rx: Receiver<Result<ShardHeaps>>,
+    query_id: u64,
+}
+
+impl PendingScan {
+    pub fn query_id(&self) -> u64 {
+        self.query_id
+    }
+
+    /// Block until every shard task of this query has run; returns the
+    /// per-shard heaps in shard order.
+    pub fn wait(self) -> Result<ShardHeaps> {
+        match self.rx.recv() {
+            Some(res) => res,
+            None => Err(anyhow!(
+                "scan pool dropped query {} before completion",
+                self.query_id
+            )),
+        }
+    }
+}
+
+/// A scan that is either already computed (per-query spawn path) or in
+/// flight on a [`ScanPool`]. Lets the engines expose one async surface
+/// whether or not a pool is attached.
+pub enum ScanHandle {
+    Ready(ShardHeaps),
+    Pool(PendingScan),
+}
+
+impl ScanHandle {
+    pub fn wait(self) -> Result<ShardHeaps> {
+        match self {
+            ScanHandle::Ready(heaps) => Ok(heaps),
+            ScanHandle::Pool(pending) => pending.wait(),
+        }
+    }
+}
+
+/// Shared atomic counters (lock-free reads for snapshots).
+#[derive(Default)]
+struct PoolMetrics {
+    in_flight: AtomicU64,
+    queries_submitted: AtomicU64,
+    tasks_completed: AtomicU64,
+    tasks_failed: AtomicU64,
+    tasks_skipped: AtomicU64,
+}
+
+/// Point-in-time view of pool health (the serving dashboard's scan row).
+#[derive(Clone, Debug)]
+pub struct PoolSnapshot {
+    /// Workers actually spawned (after [`auto_workers`] resolution).
+    pub workers: usize,
+    /// Scan tasks sitting in the bounded queue right now.
+    pub queue_depth: usize,
+    /// Queries submitted but not yet completed.
+    pub in_flight: u64,
+    pub queries_submitted: u64,
+    /// Tasks pulled and run to completion.
+    pub tasks_completed: u64,
+    /// Tasks that panicked (each fails exactly one query).
+    pub tasks_failed: u64,
+    /// Tasks fast-skipped because their query had already failed.
+    pub tasks_skipped: u64,
+    /// Per-worker busy seconds (time inside scan closures).
+    pub busy_seconds: Vec<f64>,
+}
+
+impl PoolSnapshot {
+    /// Summed busy time across workers; divide by wall time for effective
+    /// scan concurrency.
+    pub fn total_busy_seconds(&self) -> f64 {
+        self.busy_seconds.iter().sum()
+    }
+}
+
+/// Long-lived scan worker pool. Spawn once per service, share via `Arc`,
+/// submit concurrent queries from any thread.
+pub struct ScanPool {
+    job_tx: Mutex<Option<Sender<Arc<JobInner>>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    task_rx: Arc<Receiver<Task>>,
+    metrics: Arc<PoolMetrics>,
+    busy: Arc<Vec<AtomicU64>>,
+    n_workers: usize,
+    next_query: AtomicU64,
+}
+
+impl ScanPool {
+    /// Spawn `workers` persistent scan threads (0 = [`auto_workers`])
+    /// plus one dispatcher. The task queue is bounded at ~2 tasks per
+    /// worker: small enough that a newly admitted query starts
+    /// interleaving within a couple of task grants.
+    pub fn spawn(workers: usize) -> Self {
+        let n_workers = auto_workers(workers).max(1);
+        let metrics = Arc::new(PoolMetrics::default());
+        let busy: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_workers).map(|_| AtomicU64::new(0)).collect());
+        let (job_tx, job_rx) = bounded::<Arc<JobInner>>(64);
+        let (task_tx, task_rx) = bounded::<Task>((n_workers * 2).max(4));
+        let task_rx = Arc::new(task_rx);
+        let mut handles = Vec::with_capacity(n_workers + 1);
+        handles.push(
+            std::thread::Builder::new()
+                .name("scan-pool-dispatch".into())
+                .spawn(move || dispatch(job_rx, task_tx))
+                .expect("spawn scan pool dispatcher"),
+        );
+        for w in 0..n_workers {
+            let rx = task_rx.clone();
+            let busy = busy.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("scan-pool-{w}"))
+                    .spawn(move || {
+                        while let Some((job, si)) = rx.recv() {
+                            run_task(&job, si, &busy[w]);
+                        }
+                    })
+                    .expect("spawn scan pool worker"),
+            );
+        }
+        ScanPool {
+            job_tx: Mutex::new(Some(job_tx)),
+            handles: Mutex::new(handles),
+            task_rx,
+            metrics,
+            busy,
+            n_workers,
+            next_query: AtomicU64::new(0),
+        }
+    }
+
+    /// Workers actually running — what service metrics should report.
+    pub fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Admit one query: `scan(shard_idx)` will be called once per shard in
+    /// `0..n_shards`, possibly concurrently and interleaved with other
+    /// queries' tasks. Returns immediately; [`PendingScan::wait`] blocks
+    /// for the per-shard heaps (shard order).
+    pub fn submit<F>(&self, n_shards: usize, scan: F) -> Result<PendingScan>
+    where
+        F: Fn(usize) -> Vec<TopK> + Send + Sync + 'static,
+    {
+        let query_id = self.next_query.fetch_add(1, Ordering::Relaxed);
+        let (done_tx, done_rx) = bounded::<Result<ShardHeaps>>(1);
+        if n_shards == 0 {
+            // Nothing to scan: complete immediately, but still count the
+            // query so PoolSnapshot totals match submit() calls.
+            self.metrics.queries_submitted.fetch_add(1, Ordering::Relaxed);
+            let _ = done_tx.send(Ok(Vec::new()));
+            return Ok(PendingScan { rx: done_rx, query_id });
+        }
+        let job = Arc::new(JobInner {
+            scan: Box::new(scan),
+            n_shards,
+            slots: Mutex::new((0..n_shards).map(|_| None).collect()),
+            remaining: AtomicUsize::new(n_shards),
+            failed: Mutex::new(None),
+            done: done_tx,
+            query_id,
+            metrics: self.metrics.clone(),
+        });
+        // Clone the sender OUT of the lock so a full job queue blocks only
+        // this submitter, never shutdown or sibling submitters.
+        let tx = self.job_tx.lock().unwrap().as_ref().cloned();
+        let tx = tx.ok_or_else(|| anyhow!("scan pool is shut down"))?;
+        self.metrics.in_flight.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queries_submitted.fetch_add(1, Ordering::Relaxed);
+        if tx.send(job).is_err() {
+            self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("scan pool dispatcher died"));
+        }
+        Ok(PendingScan { rx: done_rx, query_id })
+    }
+
+    pub fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            workers: self.n_workers,
+            queue_depth: self.task_rx.depth(),
+            in_flight: self.metrics.in_flight.load(Ordering::Relaxed),
+            queries_submitted: self.metrics.queries_submitted.load(Ordering::Relaxed),
+            tasks_completed: self.metrics.tasks_completed.load(Ordering::Relaxed),
+            tasks_failed: self.metrics.tasks_failed.load(Ordering::Relaxed),
+            tasks_skipped: self.metrics.tasks_skipped.load(Ordering::Relaxed),
+            busy_seconds: self
+                .busy
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed) as f64 / 1e9)
+                .collect(),
+        }
+    }
+
+    /// Stop admission, drain every task already submitted (pending queries
+    /// still complete), and join dispatcher + workers. Idempotent; also
+    /// runs on drop.
+    pub fn shutdown(&self) {
+        let tx = self.job_tx.lock().unwrap().take();
+        drop(tx);
+        let mut handles = self.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ScanPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Dispatcher: round-robin one shard task per in-flight query into the
+/// bounded task queue. Exits (dropping the task sender, which lets workers
+/// drain and stop) once admission is closed AND every accepted query's
+/// tasks have been handed out.
+fn dispatch(job_rx: Receiver<Arc<JobInner>>, task_tx: Sender<Task>) {
+    // (job, next shard to hand out) — front of the deque is next served.
+    let mut active: std::collections::VecDeque<(Arc<JobInner>, usize)> =
+        std::collections::VecDeque::new();
+    let mut open = true;
+    loop {
+        if open {
+            if active.is_empty() {
+                // Idle: park on the job channel.
+                match job_rx.recv() {
+                    Some(j) => active.push_back((j, 0)),
+                    None => open = false,
+                }
+            }
+            // Admit whatever else has arrived without blocking, so new
+            // queries start interleaving at the very next task grant.
+            while let Some(j) = job_rx.try_recv() {
+                active.push_back((j, 0));
+            }
+        }
+        let Some((job, next)) = active.pop_front() else {
+            if open {
+                continue;
+            }
+            break;
+        };
+        if task_tx.send((job.clone(), next)).is_err() {
+            // Workers are gone (pool tearing down hard); nothing to do.
+            break;
+        }
+        if next + 1 < job.n_shards {
+            active.push_back((job, next + 1));
+        }
+    }
+}
+
+/// Run one shard task with panic isolation, then complete the query if
+/// this was its last outstanding task.
+fn run_task(job: &Arc<JobInner>, si: usize, busy: &AtomicU64) {
+    let poisoned = job.failed.lock().unwrap().is_some();
+    if poisoned {
+        // Query already failed: don't burn pool time on its other shards.
+        job.metrics.tasks_skipped.fetch_add(1, Ordering::Relaxed);
+    } else {
+        let t0 = Instant::now();
+        match catch_unwind(AssertUnwindSafe(|| (job.scan)(si))) {
+            Ok(heaps) => {
+                job.slots.lock().unwrap()[si] = Some(heaps);
+                job.metrics.tasks_completed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(panic) => {
+                let mut failed = job.failed.lock().unwrap();
+                if failed.is_none() {
+                    *failed = Some(panic_message(&panic));
+                }
+                job.metrics.tasks_failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        finish(job);
+    }
+}
+
+/// Last task of a query: collect slots (or the failure) and notify the
+/// submitter. Failures never escape the query that caused them.
+fn finish(job: &Arc<JobInner>) {
+    let failed = job.failed.lock().unwrap().take();
+    let res = match failed {
+        Some(msg) => Err(anyhow!(
+            "scan pool query {}: shard scan task panicked: {msg}",
+            job.query_id
+        )),
+        None => {
+            let mut slots = job.slots.lock().unwrap();
+            let mut out = Vec::with_capacity(slots.len());
+            let mut missing = None;
+            for (si, slot) in slots.iter_mut().enumerate() {
+                match slot.take() {
+                    Some(heaps) => out.push(heaps),
+                    None => {
+                        missing = Some(si);
+                        break;
+                    }
+                }
+            }
+            match missing {
+                Some(si) => Err(anyhow!(
+                    "scan pool query {}: shard {si} produced no result (pool bug)",
+                    job.query_id
+                )),
+                None => Ok(out),
+            }
+        }
+    };
+    job.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+    // The submitter may have given up (dropped its handle) — fine.
+    let _ = job.done.send(res);
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_heap(score: f64, id: u64) -> Vec<TopK> {
+        let mut t = TopK::new(1);
+        t.push(score, id);
+        vec![t]
+    }
+
+    #[test]
+    fn results_arrive_in_shard_order() {
+        let pool = ScanPool::spawn(3);
+        let pending = pool
+            .submit(7, |si| one_heap(si as f64, (100 + si) as u64))
+            .unwrap();
+        let out = pending.wait().unwrap();
+        assert_eq!(out.len(), 7);
+        for (si, heaps) in out.into_iter().enumerate() {
+            assert_eq!(heaps.len(), 1);
+            let sorted = heaps.into_iter().next().unwrap().into_sorted();
+            assert_eq!(sorted, vec![(si as f64, (100 + si) as u64)]);
+        }
+        let snap = pool.snapshot();
+        assert_eq!(snap.workers, 3);
+        assert_eq!(snap.tasks_completed, 7);
+        assert_eq!(snap.in_flight, 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn zero_shards_completes_immediately() {
+        let pool = ScanPool::spawn(1);
+        let out = pool.submit(0, |_| Vec::new()).unwrap().wait().unwrap();
+        assert!(out.is_empty());
+        // Even no-op queries show up in the submission count.
+        assert_eq!(pool.snapshot().queries_submitted, 1);
+        assert_eq!(pool.snapshot().in_flight, 0);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_refused() {
+        let pool = ScanPool::spawn(1);
+        pool.shutdown();
+        assert!(pool.submit(1, |_| Vec::new()).is_err());
+        // Idempotent.
+        pool.shutdown();
+    }
+
+    #[test]
+    fn auto_workers_resolution() {
+        assert_eq!(auto_workers(5), 5);
+        let auto = auto_workers(0);
+        assert!(auto >= 1 && auto <= 16, "auto resolved to {auto}");
+    }
+
+    #[test]
+    fn panicked_task_fails_only_its_query() {
+        let pool = ScanPool::spawn(2);
+        let healthy = pool.submit(4, |si| one_heap(1.0, si as u64)).unwrap();
+        let poisoned = pool
+            .submit(4, |si| {
+                if si == 2 {
+                    panic!("poisoned shard");
+                }
+                one_heap(2.0, si as u64)
+            })
+            .unwrap();
+        let after = pool.submit(4, |si| one_heap(3.0, si as u64)).unwrap();
+        assert_eq!(healthy.wait().unwrap().len(), 4);
+        let err = poisoned.wait().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "unexpected error: {err}");
+        assert!(err.contains("poisoned shard"), "message lost: {err}");
+        assert_eq!(after.wait().unwrap().len(), 4);
+        let snap = pool.snapshot();
+        assert_eq!(snap.tasks_failed, 1);
+        assert_eq!(snap.in_flight, 0);
+        pool.shutdown();
+    }
+}

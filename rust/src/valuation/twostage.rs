@@ -10,26 +10,28 @@
 //! reranker substrate any future ANN index will sit on — the coarse scan
 //! is the recall stage, the exact rescore the precision stage.
 //!
-//! Stage 1 fans out per shard through the same scatter/gather worker pool
-//! as [`ParallelQueryEngine`](super::ParallelQueryEngine) and merges
-//! per-shard pools with [`TopK`]'s total order, so the candidate pool — and
-//! therefore the final result — is deterministic for any shard
-//! decomposition and worker count. Stage-2 scores are computed with the
-//! same f32 dot accumulation order and f64 RelatIF division as the
-//! sequential [`QueryEngine`](super::QueryEngine) native scan, so whenever
-//! the pool covers the whole corpus (`rescore_factor × topk ≥ rows`) the
-//! output is **bit-identical** to the exact engine (verified by
-//! `rust/tests/twostage.rs`); smaller pools trade bounded recall for
-//! bandwidth.
+//! Stage 1 fans out per shard either on per-query scoped threads (the same
+//! scatter/gather path as [`ParallelQueryEngine`](super::ParallelQueryEngine))
+//! or on a persistent [`ScanPool`](super::ScanPool) attached with
+//! [`TwoStageEngine::with_pool`], where concurrent queries interleave their
+//! shard tasks on warm workers. Per-shard pools merge with [`TopK`]'s total
+//! order, so the candidate pool — and therefore the final result — is
+//! deterministic for any shard decomposition, worker count, and
+//! interleaving. Stage-2 scores are computed with the same f32 dot
+//! accumulation order and f64 RelatIF division as the sequential
+//! [`QueryEngine`](super::QueryEngine) native scan, so whenever the pool
+//! covers the whole corpus (`rescore_factor × topk ≥ rows`) the output is
+//! **bit-identical** to the exact engine (verified by
+//! `rust/tests/twostage.rs` and `rust/tests/pool.rs`); smaller pools trade
+//! bounded recall for bandwidth.
 //!
-//! The engine needs BOTH stores: the quantized copy (produced by
-//! `logra store quantize`) for stage 1 and the original f32 store for
-//! stage 2. `quantize_store` preserves global row order and ids, which is
-//! what lets stage-1 candidates (global row indices) address the exact
-//! store directly.
+//! The engine needs BOTH stores (shared ownership via `Arc`): the
+//! quantized copy (produced by `logra store quantize`) for stage 1 and the
+//! original f32 store for stage 2. `quantize_store` preserves global row
+//! order and ids, which is what lets stage-1 candidates (global row
+//! indices) address the exact store directly.
 
-use std::cell::{Ref, RefCell};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
@@ -41,13 +43,15 @@ use crate::store::quant::{quantize_rows, scan_scores_q8, QuantShardedStore};
 use crate::store::ShardedStore;
 use crate::util::topk::TopK;
 
-use super::parallel::{resolve_workers, scatter_gather, shard_self_influences};
+use super::parallel::{cached_self_influences, resolve_workers, scatter_gather};
+use super::pool::{ScanHandle, ScanPool};
 use super::scorer::{Normalization, QueryResult};
 
 /// Knobs for the two-stage scan.
 #[derive(Clone, Copy, Debug)]
 pub struct TwoStageConfig {
     /// Worker threads for the stage-1 shard fan-out; 0 = one per core.
+    /// Ignored when a [`ScanPool`] is attached (the pool is authoritative).
     pub workers: usize,
     /// Rows scored per chunk within a shard.
     pub chunk_len: usize,
@@ -63,24 +67,26 @@ impl Default for TwoStageConfig {
 }
 
 /// Two-stage influence scorer: quantized coarse scan + exact rescore.
-pub struct TwoStageEngine<'a> {
-    quant: &'a QuantShardedStore,
-    exact: &'a ShardedStore,
-    precond: &'a Preconditioner,
+/// `Send + Sync` — share behind an `Arc` and query concurrently.
+pub struct TwoStageEngine {
+    quant: Arc<QuantShardedStore>,
+    exact: Arc<ShardedStore>,
+    precond: Arc<Preconditioner>,
     cfg: TwoStageConfig,
     metrics: Option<Arc<Metrics>>,
+    pool: Option<Arc<ScanPool>>,
     /// Self-influence per GLOBAL row (RelatIF denominators), computed from
     /// the EXACT store — both stages divide by the same denominators.
-    self_inf: RefCell<Option<Vec<f32>>>,
+    self_inf: Mutex<Option<Arc<Vec<f32>>>>,
 }
 
-impl<'a> TwoStageEngine<'a> {
+impl TwoStageEngine {
     /// The quantized copy must mirror the exact store row-for-row (use
     /// `quantize_store`, which preserves global order and ids).
     pub fn new(
-        quant: &'a QuantShardedStore,
-        exact: &'a ShardedStore,
-        precond: &'a Preconditioner,
+        quant: Arc<QuantShardedStore>,
+        exact: Arc<ShardedStore>,
+        precond: Arc<Preconditioner>,
     ) -> Result<Self> {
         ensure!(
             quant.k() == exact.k(),
@@ -100,11 +106,12 @@ impl<'a> TwoStageEngine<'a> {
             precond,
             cfg: TwoStageConfig::default(),
             metrics: None,
-            self_inf: RefCell::new(None),
+            pool: None,
+            self_inf: Mutex::new(None),
         })
     }
 
-    /// Set worker count (0 = auto).
+    /// Set worker count (0 = auto) for the per-query spawn path.
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.cfg.workers = workers;
         self
@@ -126,9 +133,19 @@ impl<'a> TwoStageEngine<'a> {
         self
     }
 
-    /// Resolved stage-1 worker count.
+    /// Run stage-1 scans on a persistent [`ScanPool`] instead of spawning
+    /// scoped threads per query.
+    pub fn with_pool(mut self, pool: Arc<ScanPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Resolved stage-1 worker count (the pool's when attached).
     pub fn workers(&self) -> usize {
-        resolve_workers(self.cfg.workers, self.quant.n_shards())
+        match &self.pool {
+            Some(pool) => pool.workers(),
+            None => resolve_workers(self.cfg.workers, self.quant.n_shards()),
+        }
     }
 
     /// Stage-1 candidate pool size for a requested top-k.
@@ -141,23 +158,16 @@ impl<'a> TwoStageEngine<'a> {
     }
 
     /// Self-influence of each stored row in global order, from the exact
-    /// store (computed once in parallel, then cached).
-    pub fn train_self_influences(&self) -> Ref<'_, [f32]> {
-        if self.self_inf.borrow().is_none() {
-            let store = self.exact;
-            let precond = self.precond;
-            let chunk_len = self.cfg.chunk_len.max(1);
-            let workers = resolve_workers(self.cfg.workers, store.n_shards());
-            let per_shard = scatter_gather(workers, store.n_shards(), &|si| {
-                shard_self_influences(store, precond, si, chunk_len)
-            });
-            let mut flat = Vec::with_capacity(store.rows());
-            for v in per_shard {
-                flat.extend(v);
-            }
-            *self.self_inf.borrow_mut() = Some(flat);
-        }
-        Ref::map(self.self_inf.borrow(), |o| o.as_deref().unwrap())
+    /// store (computed once in parallel, then cached; concurrent callers
+    /// block on the first computation and share the result).
+    pub fn train_self_influences(&self) -> Arc<Vec<f32>> {
+        cached_self_influences(
+            &self.self_inf,
+            &self.exact,
+            &self.precond,
+            resolve_workers(self.cfg.workers, self.exact.n_shards()),
+            self.cfg.chunk_len.max(1),
+        )
     }
 
     /// Top-k most valuable train examples per test row. Same contract as
@@ -170,6 +180,20 @@ impl<'a> TwoStageEngine<'a> {
         topk: usize,
         norm: Normalization,
     ) -> Result<Vec<QueryResult>> {
+        self.query_async(test_grads, nt, topk, norm)?.wait()
+    }
+
+    /// Admit a query without blocking on stage 1: the coarse scan runs on
+    /// the attached pool (or eagerly without one);
+    /// [`PendingTwoStage::wait`] merges the candidate pools and performs
+    /// the exact rescore on the calling thread.
+    pub fn query_async(
+        &self,
+        test_grads: &[f32],
+        nt: usize,
+        topk: usize,
+        norm: Normalization,
+    ) -> Result<PendingTwoStage> {
         let k = self.exact.k();
         ensure!(
             test_grads.len() == nt * k,
@@ -178,39 +202,101 @@ impl<'a> TwoStageEngine<'a> {
             test_grads.len()
         );
         let pre = self.precond.apply_rows(test_grads, nt);
-        let selfs_guard = match norm {
+        let selfs: Option<Arc<Vec<f32>>> = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
             Normalization::None => None,
         };
-        let selfs: Option<&[f32]> = selfs_guard.as_deref();
-        let rows = self.exact.rows();
-        if rows == 0 {
-            return Ok((0..nt).map(|_| QueryResult { top: Vec::new() }).collect());
-        }
-        let pool = self.pool_size(topk);
+        let pool_size = self.pool_size(topk);
+        let t0 = Instant::now();
 
         // ------------------------------------------------ stage 1: coarse
         // Quantize the preconditioned test rows with the store's codec so
         // the scan is int8 x int8 with i32 block accumulation.
-        let t0 = Instant::now();
-        let (t_codes, t_scales) = quantize_rows(&pre, nt, k);
-        let quant = self.quant;
-        let chunk_len = self.cfg.chunk_len.max(1);
-        let metrics = self.metrics.as_deref();
-        let tc: &[i8] = &t_codes;
-        let ts: &[f32] = &t_scales;
-        let shard_pools = scatter_gather(self.workers(), quant.n_shards(), &|si| {
-            scan_shard_q8(quant, si, tc, ts, nt, pool, selfs, chunk_len, metrics)
-        });
-        let mut pools: Vec<TopK> = (0..nt).map(|_| TopK::new(pool)).collect();
+        let scan = if self.exact.rows() == 0 {
+            ScanHandle::Ready(Vec::new())
+        } else {
+            let (t_codes, t_scales) = quantize_rows(&pre, nt, k);
+            let chunk_len = self.cfg.chunk_len.max(1);
+            match &self.pool {
+                Some(pool) => {
+                    let quant = self.quant.clone();
+                    let metrics = self.metrics.clone();
+                    let selfs = selfs.clone();
+                    let t_codes = Arc::new(t_codes);
+                    let t_scales = Arc::new(t_scales);
+                    ScanHandle::Pool(pool.submit(self.quant.n_shards(), move |si| {
+                        scan_shard_q8(
+                            &quant,
+                            si,
+                            &t_codes,
+                            &t_scales,
+                            nt,
+                            pool_size,
+                            selfs.as_ref().map(|s| s.as_slice()),
+                            chunk_len,
+                            metrics.as_deref(),
+                        )
+                    })?)
+                }
+                None => {
+                    let quant = &self.quant;
+                    let met = self.metrics.as_deref();
+                    let tc: &[i8] = &t_codes;
+                    let ts: &[f32] = &t_scales;
+                    let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
+                    ScanHandle::Ready(scatter_gather(self.workers(), quant.n_shards(), &|si| {
+                        scan_shard_q8(quant, si, tc, ts, nt, pool_size, selfs_ref, chunk_len, met)
+                    }))
+                }
+            }
+        };
+        Ok(PendingTwoStage {
+            scan,
+            pre,
+            selfs,
+            exact: self.exact.clone(),
+            metrics: self.metrics.clone(),
+            nt,
+            topk,
+            pool_size,
+            t0,
+        })
+    }
+}
+
+/// An admitted two-stage query: stage-1 shard pools in flight (or ready).
+/// `wait` merges them deterministically and runs the exact stage-2 rescore
+/// on the calling thread — same math, same order, same results as the
+/// synchronous path.
+pub struct PendingTwoStage {
+    scan: ScanHandle,
+    /// Preconditioned test rows [nt, k] — stage 2 rescores against these.
+    pre: Vec<f32>,
+    selfs: Option<Arc<Vec<f32>>>,
+    exact: Arc<ShardedStore>,
+    metrics: Option<Arc<Metrics>>,
+    nt: usize,
+    topk: usize,
+    pool_size: usize,
+    /// Stage-1 wall clock starts at admission (includes pool queue wait).
+    t0: Instant,
+}
+
+impl PendingTwoStage {
+    pub fn wait(self) -> Result<Vec<QueryResult>> {
+        let k = self.exact.k();
+        let shard_pools = self.scan.wait()?;
+        let mut pools: Vec<TopK> = (0..self.nt).map(|_| TopK::new(self.pool_size)).collect();
         for heaps in shard_pools {
             for (t, h) in heaps.into_iter().enumerate() {
                 pools[t].merge(h);
             }
         }
+        let metrics = self.metrics.as_deref();
         if let Some(m) = metrics {
-            Metrics::add_nanos(&m.stage1_nanos, t0.elapsed().as_secs_f64());
+            Metrics::add_nanos(&m.stage1_nanos, self.t0.elapsed().as_secs_f64());
         }
+        let selfs: Option<&[f32]> = self.selfs.as_ref().map(|s| s.as_slice());
 
         // ---------------------------------------------- stage 2: rescore
         // Exact f32 dots for pool candidates only — same accumulation order
@@ -218,13 +304,13 @@ impl<'a> TwoStageEngine<'a> {
         // pool reproduces it bit-identically.
         let t1 = Instant::now();
         let mut rescored = 0u64;
-        let mut out = Vec::with_capacity(nt);
+        let mut out = Vec::with_capacity(self.nt);
         for (t, p) in pools.into_iter().enumerate() {
-            let pre_t = &pre[t * k..(t + 1) * k];
+            let pre_t = &self.pre[t * k..(t + 1) * k];
             let mut cand: Vec<u64> = p.into_sorted().into_iter().map(|(_, g)| g).collect();
             // Ascending row order: sequential-ish page access into the mmap.
             cand.sort_unstable();
-            let mut heap = TopK::new(topk.max(1));
+            let mut heap = TopK::new(self.topk.max(1));
             for g in cand {
                 let g = g as usize;
                 let s = dot(pre_t, self.exact.row(g)) as f64;

@@ -254,6 +254,7 @@ fn valuation_service_batches_requests() {
         quantized_scan: false,
         rescore_factor: 4,
         quant_dir: None,
+        max_in_flight: 2,
     })
     .unwrap();
 

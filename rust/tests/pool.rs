@@ -1,0 +1,270 @@
+//! ScanPool integration tests (artifact-free: native scoring only).
+//!
+//! Load-bearing properties of the persistent pool as a serving substrate:
+//!
+//! 1. **Concurrent admission is deterministic**: M queries submitted from
+//!    M threads — a mix of f32 parallel scans and two-stage quantized
+//!    scans — interleave their shard tasks on one shared pool, and every
+//!    result is bit-identical to the sequential `QueryEngine` native scan
+//!    for that query.
+//! 2. **Shutdown drains in-flight work**: queries admitted before
+//!    `shutdown` still complete with correct results; admission afterwards
+//!    is refused.
+//! 3. **Panic isolation**: a poisoned scan task fails only its own query
+//!    with an error — the pool neither hangs nor stops serving others.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use logra::hessian::BlockHessian;
+use logra::store::{
+    quantize_store, shard_store, GradStore, GradStoreWriter, QuantShardedStore, ShardedStore,
+};
+use logra::util::rng::Pcg32;
+use logra::util::topk::TopK;
+use logra::valuation::{
+    Normalization, ParallelQueryEngine, QueryEngine, ScanPool, TwoStageEngine,
+};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-pool-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a v1 store with shuffled (non-sequential) ids so id-based
+/// tie-breaking is exercised honestly.
+fn write_store(dir: &Path, n: usize, k: usize, rng: &mut Pcg32) -> (Vec<u64>, Vec<f32>) {
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let mut ids: Vec<u64> = (0..n as u64).map(|i| i * 7 + 1000).collect();
+    rng.shuffle(&mut ids);
+    let mut w = GradStoreWriter::create(dir, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    (ids, rows)
+}
+
+fn make_precond(rows: &[f32], n: usize, k: usize) -> logra::hessian::Preconditioner {
+    let mut h = BlockHessian::single_block(k);
+    h.accumulate(rows, n);
+    h.preconditioner(0.1).unwrap()
+}
+
+#[test]
+fn concurrent_mixed_queries_bit_identical_to_sequential() {
+    let k = 12;
+    let n = 360;
+    let n_shards = 8;
+    let nt = 2;
+    let topk = 7;
+    let src = tmpdir("conc-src");
+    let mut rng = Pcg32::seeded(90);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("conc-sharded");
+    shard_store(&src, &sharded, n_shards).unwrap();
+    let quant_dir = tmpdir("conc-quant");
+    quantize_store(&sharded, &quant_dir).unwrap();
+
+    let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
+    let single = GradStore::open(&src).unwrap();
+    let precond = Arc::new(make_precond(&rows, n, k));
+    let seq = QueryEngine::new_native(&single, &precond, 64);
+    // Fewer workers than clients: shard tasks of different queries MUST
+    // interleave on the same workers.
+    let pool = Arc::new(ScanPool::spawn(3));
+
+    // Per-thread query plans with the sequential oracle computed up front.
+    let m = 6usize;
+    let reps = 3usize;
+    let mut plans: Vec<(Vec<f32>, Normalization, Vec<logra::valuation::QueryResult>)> =
+        Vec::new();
+    for t in 0..m {
+        let mut trng = Pcg32::seeded(500 + t as u64);
+        let mut test = vec![0.0f32; nt * k];
+        trng.fill_normal(&mut test, 1.0);
+        let norm = if t % 2 == 0 { Normalization::None } else { Normalization::RelatIf };
+        let want = seq.query(&test, nt, topk, norm).unwrap();
+        plans.push((test, norm, want));
+    }
+    // rescore_factor large enough that the two-stage pool covers every
+    // row — the regime where two-stage results are bit-identical too.
+    let factor = n.div_ceil(topk) + 1;
+
+    std::thread::scope(|s| {
+        for (t, (test, norm, want)) in plans.iter().enumerate() {
+            let pool = pool.clone();
+            let exact = exact.clone();
+            let quant = quant.clone();
+            let precond = precond.clone();
+            s.spawn(move || {
+                for _ in 0..reps {
+                    let results = if t % 3 == 0 {
+                        TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone())
+                            .unwrap()
+                            .with_chunk_len(32)
+                            .with_rescore_factor(factor)
+                            .with_pool(pool.clone())
+                            .query(test, nt, topk, *norm)
+                            .unwrap()
+                    } else {
+                        ParallelQueryEngine::new(exact.clone(), precond.clone())
+                            .with_chunk_len(32)
+                            .with_pool(pool.clone())
+                            .query(test, nt, topk, *norm)
+                            .unwrap()
+                    };
+                    assert_eq!(results.len(), want.len(), "thread {t}");
+                    for (row, (a, b)) in results.iter().zip(want).enumerate() {
+                        assert_eq!(
+                            a.top, b.top,
+                            "thread {t} test row {row} diverged from sequential scan"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    let snap = pool.snapshot();
+    assert_eq!(snap.workers, 3);
+    assert_eq!(snap.in_flight, 0);
+    assert_eq!(snap.tasks_failed, 0);
+    // Every query fanned out over every shard.
+    assert_eq!(snap.tasks_completed, (m * reps * n_shards) as u64);
+    assert!(snap.total_busy_seconds() > 0.0);
+    pool.shutdown();
+}
+
+#[test]
+fn pooled_engines_match_unpooled_engines_with_small_rescore_pool() {
+    // Even when the candidate pool does NOT cover the corpus (the lossy
+    // serving regime), pooled execution must agree exactly with per-query
+    // spawn execution: the candidate pool is a pure function of the
+    // candidate multiset, not of scheduling.
+    let k = 10;
+    let n = 300;
+    let src = tmpdir("small-pool-src");
+    let mut rng = Pcg32::seeded(41);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("small-pool-sharded");
+    shard_store(&src, &sharded, 5).unwrap();
+    let quant_dir = tmpdir("small-pool-quant");
+    quantize_store(&sharded, &quant_dir).unwrap();
+
+    let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
+    let precond = Arc::new(make_precond(&rows, n, k));
+    let pool = Arc::new(ScanPool::spawn(2));
+    let mut test = vec![0.0f32; 3 * k];
+    rng.fill_normal(&mut test, 1.0);
+
+    for norm in [Normalization::None, Normalization::RelatIf] {
+        let spawned = TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone())
+            .unwrap()
+            .with_workers(2)
+            .with_chunk_len(64)
+            .with_rescore_factor(2)
+            .query(&test, 3, 9, norm)
+            .unwrap();
+        let pooled = TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone())
+            .unwrap()
+            .with_chunk_len(64)
+            .with_rescore_factor(2)
+            .with_pool(pool.clone())
+            .query(&test, 3, 9, norm)
+            .unwrap();
+        for (a, b) in pooled.iter().zip(&spawned) {
+            assert_eq!(a.top, b.top, "norm {norm:?}");
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_queries() {
+    let pool = Arc::new(ScanPool::spawn(2));
+    let n_jobs = 5usize;
+    let shards = 6usize;
+    let pendings: Vec<_> = (0..n_jobs)
+        .map(|j| {
+            pool.submit(shards, move |si| {
+                // Slow enough that shutdown arrives mid-flight.
+                std::thread::sleep(Duration::from_millis(4));
+                let mut t = TopK::new(1);
+                t.push((j * 100 + si) as f64, si as u64);
+                vec![t]
+            })
+            .unwrap()
+        })
+        .collect();
+    // Shut down while tasks are still queued/running: must drain, not
+    // abandon.
+    pool.shutdown();
+    for (j, pending) in pendings.into_iter().enumerate() {
+        let out = pending.wait().unwrap_or_else(|e| panic!("job {j} lost: {e}"));
+        assert_eq!(out.len(), shards);
+        for (si, heaps) in out.into_iter().enumerate() {
+            let sorted = heaps.into_iter().next().unwrap().into_sorted();
+            assert_eq!(sorted, vec![((j * 100 + si) as f64, si as u64)]);
+        }
+    }
+    // Admission after shutdown is refused, not hung.
+    assert!(pool.submit(1, |_| Vec::new()).is_err());
+    let snap = pool.snapshot();
+    assert_eq!(snap.tasks_completed, (n_jobs * shards) as u64);
+    assert_eq!(snap.in_flight, 0);
+}
+
+#[test]
+fn poisoned_scan_fails_only_its_query_and_pool_keeps_serving() {
+    let k = 8;
+    let n = 120;
+    let src = tmpdir("poison-src");
+    let mut rng = Pcg32::seeded(61);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("poison-sharded");
+    shard_store(&src, &sharded, 4).unwrap();
+    let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let single = GradStore::open(&src).unwrap();
+    let precond = Arc::new(make_precond(&rows, n, k));
+    let seq = QueryEngine::new_native(&single, &precond, 32);
+    let pool = Arc::new(ScanPool::spawn(2));
+
+    let engine = ParallelQueryEngine::new(exact, precond.clone())
+        .with_chunk_len(32)
+        .with_pool(pool.clone());
+    let mut test = vec![0.0f32; k];
+    rng.fill_normal(&mut test, 1.0);
+
+    // Healthy query before the poison.
+    let want = seq.query(&test, 1, 5, Normalization::None).unwrap();
+    let got = engine.query(&test, 1, 5, Normalization::None).unwrap();
+    assert_eq!(got[0].top, want[0].top);
+
+    // A raw poisoned job: one shard task panics. Only ITS query errors.
+    let poisoned = pool
+        .submit(4, |si| {
+            if si == 1 {
+                panic!("injected scan fault");
+            }
+            let mut t = TopK::new(1);
+            t.push(si as f64, si as u64);
+            vec![t]
+        })
+        .unwrap();
+    let err = poisoned.wait().unwrap_err().to_string();
+    assert!(err.contains("panicked"), "unexpected error: {err}");
+    assert!(err.contains("injected scan fault"), "message lost: {err}");
+
+    // The pool survives and keeps producing bit-identical results.
+    let got = engine.query(&test, 1, 5, Normalization::None).unwrap();
+    assert_eq!(got[0].top, want[0].top);
+    let snap = pool.snapshot();
+    assert_eq!(snap.tasks_failed, 1);
+    assert_eq!(snap.in_flight, 0);
+    pool.shutdown();
+}

@@ -7,6 +7,7 @@
 //! unsharded store, and every `chunk()` view is byte-identical.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use logra::hessian::BlockHessian;
 use logra::prop_assert;
@@ -79,14 +80,15 @@ fn prop_shard_decomposition_chunks_and_topk_identical() {
 
         // Identical top-k vs the sequential engine, both normalizations.
         let single = GradStore::open(&src).unwrap();
-        let precond = make_precond(&rows, n, k);
+        let precond = Arc::new(make_precond(&rows, n, k));
         let chunk_len = 1 + g.rng.below_usize(n);
         let seq = QueryEngine::new_native(&single, &precond, chunk_len);
+        let fabric = Arc::new(fabric);
         let mut test = vec![0.0f32; nt * k];
         g.rng.fill_normal(&mut test, 1.0);
         for norm in [Normalization::None, Normalization::RelatIf] {
             let want = seq.query(&test, nt, topk, norm).unwrap();
-            let par = ParallelQueryEngine::new(&fabric, &precond)
+            let par = ParallelQueryEngine::new(fabric.clone(), precond.clone())
                 .with_workers(workers)
                 .with_chunk_len(1 + g.rng.below_usize(n));
             let got = par.query(&test, nt, topk, norm).unwrap();
@@ -127,14 +129,14 @@ fn duplicate_rows_tie_break_identically() {
     let sharded = tmpdir("ties-dst");
     shard_store(&dir, &sharded, 5).unwrap();
     let single = GradStore::open(&dir).unwrap();
-    let fabric = ShardedStore::open(&sharded).unwrap();
-    let precond = make_precond(&rows, n, k);
+    let fabric = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let precond = Arc::new(make_precond(&rows, n, k));
     let mut test = vec![0.0f32; k];
     rng.fill_normal(&mut test, 1.0);
 
     let seq = QueryEngine::new_native(&single, &precond, 7);
     let want = seq.query(&test, 1, 6, Normalization::None).unwrap();
-    let par = ParallelQueryEngine::new(&fabric, &precond).with_workers(3).with_chunk_len(4);
+    let par = ParallelQueryEngine::new(fabric, precond.clone()).with_workers(3).with_chunk_len(4);
     let got = par.query(&test, 1, 6, Normalization::None).unwrap();
     assert_eq!(got[0].top, want[0].top);
     // All scores tie; kept ids must be the 6 smallest.
@@ -156,11 +158,11 @@ fn parallel_self_influences_match_sequential() {
     let sharded = tmpdir("selfinf-dst");
     shard_store(&src, &sharded, 3).unwrap();
     let single = GradStore::open(&src).unwrap();
-    let fabric = ShardedStore::open(&sharded).unwrap();
-    let precond = make_precond(&rows, n, k);
+    let fabric = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let precond = Arc::new(make_precond(&rows, n, k));
     let seq = QueryEngine::new_native(&single, &precond, 8);
-    let par = ParallelQueryEngine::new(&fabric, &precond).with_workers(2).with_chunk_len(8);
-    assert_eq!(&*seq.train_self_influences(), &*par.train_self_influences());
+    let par = ParallelQueryEngine::new(fabric, precond.clone()).with_workers(2).with_chunk_len(8);
+    assert_eq!(&*seq.train_self_influences(), &par.train_self_influences()[..]);
 }
 
 #[test]
@@ -204,11 +206,13 @@ fn crash_unfinalized_shard_serves_durable_rows() {
     let merged = tmpdir("crash-merged");
     merge_store(&dir, &merged).unwrap();
     let single = GradStore::open(&merged).unwrap();
-    let precond = make_precond(&survivors_rows, 10, k);
+    let precond = Arc::new(make_precond(&survivors_rows, 10, k));
     let mut test = vec![0.0f32; k];
     rng.fill_normal(&mut test, 1.0);
     let seq = QueryEngine::new_native(&single, &precond, 4);
-    let par = ParallelQueryEngine::new(&fabric, &precond).with_workers(2).with_chunk_len(4);
+    let par = ParallelQueryEngine::new(Arc::new(fabric), precond.clone())
+        .with_workers(2)
+        .with_chunk_len(4);
     assert_eq!(
         par.query(&test, 1, 5, Normalization::None).unwrap()[0].top,
         seq.query(&test, 1, 5, Normalization::None).unwrap()[0].top
@@ -228,11 +232,13 @@ fn legacy_v1_store_queries_unchanged() {
     let fabric = ShardedStore::open(&dir).unwrap();
     assert_eq!(fabric.n_shards(), 1);
     assert!(fabric.as_single().is_some());
-    let precond = make_precond(&rows, n, k);
+    let precond = Arc::new(make_precond(&rows, n, k));
     let mut test = vec![0.0f32; 2 * k];
     rng.fill_normal(&mut test, 1.0);
     let seq = QueryEngine::new_native(&single, &precond, 6);
-    let par = ParallelQueryEngine::new(&fabric, &precond).with_workers(4).with_chunk_len(6);
+    let par = ParallelQueryEngine::new(Arc::new(fabric), precond.clone())
+        .with_workers(4)
+        .with_chunk_len(6);
     for norm in [Normalization::None, Normalization::RelatIf] {
         let a = seq.query(&test, 2, 4, norm).unwrap();
         let b = par.query(&test, 2, 4, norm).unwrap();

@@ -12,6 +12,7 @@
 //!    quantization step per value, and the quantized copy is ~4x smaller.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use logra::hessian::BlockHessian;
 use logra::prop_assert;
@@ -68,10 +69,10 @@ fn prop_full_pool_reproduces_exact_engine_bit_identically() {
         let quant_dir = tmpdir(&format!("parity-quant-{uniq}"));
         quantize_store(&sharded, &quant_dir).unwrap();
 
-        let exact = ShardedStore::open(&sharded).unwrap();
-        let quant = QuantShardedStore::open(&quant_dir).unwrap();
+        let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+        let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
         let single = GradStore::open(&src).unwrap();
-        let precond = make_precond(&rows, n, k);
+        let precond = Arc::new(make_precond(&rows, n, k));
         let seq = QueryEngine::new_native(&single, &precond, 1 + g.rng.below_usize(n));
         // rescore_factor large enough that the pool covers every row.
         let factor = n.div_ceil(topk) + 1;
@@ -80,7 +81,7 @@ fn prop_full_pool_reproduces_exact_engine_bit_identically() {
 
         for norm in [Normalization::None, Normalization::RelatIf] {
             let want = seq.query(&test, nt, topk, norm).unwrap();
-            let engine = TwoStageEngine::new(&quant, &exact, &precond)
+            let engine = TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone())
                 .unwrap()
                 .with_workers(workers)
                 .with_chunk_len(1 + g.rng.below_usize(n))
@@ -160,12 +161,12 @@ fn small_pool_recall_stays_high() {
     let quant_dir = tmpdir("recall-quant");
     quantize_store(&sharded, &quant_dir).unwrap();
 
-    let exact = ShardedStore::open(&sharded).unwrap();
-    let quant = QuantShardedStore::open(&quant_dir).unwrap();
+    let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
     let single = GradStore::open(&src).unwrap();
-    let precond = make_precond(&rows, n, k);
+    let precond = Arc::new(make_precond(&rows, n, k));
     let seq = QueryEngine::new_native(&single, &precond, 128);
-    let engine = TwoStageEngine::new(&quant, &exact, &precond)
+    let engine = TwoStageEngine::new(quant, exact, precond.clone())
         .unwrap()
         .with_workers(2)
         .with_chunk_len(128)
@@ -218,8 +219,8 @@ fn stale_quantized_copy_rejected() {
     let quant_b = tmpdir("stale-quant-b");
     quantize_store(&src_b, &quant_b).unwrap();
 
-    let exact_a = ShardedStore::open(&src_a).unwrap();
-    let quant = QuantShardedStore::open(&quant_b).unwrap();
-    let precond = make_precond(&rows_a, 20, k);
-    assert!(TwoStageEngine::new(&quant, &exact_a, &precond).is_err());
+    let exact_a = Arc::new(ShardedStore::open(&src_a).unwrap());
+    let quant = Arc::new(QuantShardedStore::open(&quant_b).unwrap());
+    let precond = Arc::new(make_precond(&rows_a, 20, k));
+    assert!(TwoStageEngine::new(quant, exact_a, precond).is_err());
 }

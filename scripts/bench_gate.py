@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate for the scan microbench.
+
+Compares the freshly produced BENCH_scan.json (written by
+`cargo bench --bench microbench`) against the committed
+BENCH_baseline.json and fails when any gated throughput metric drops by
+more than the threshold (default 30%, override with --threshold or the
+BENCH_GATE_THRESHOLD env var).
+
+Two kinds of checks:
+
+1. Cross-run absolute floors (machine-sensitive): rows/s of the f32,
+   quantized, and two-stage scans plus pool queries/s at concurrency 8,
+   each gated at (1 - threshold) * baseline. The committed seed baseline
+   is deliberately CONSERVATIVE (set well below typical CI-runner
+   throughput) so it only catches catastrophic regressions until someone
+   re-baselines on real CI hardware.
+2. Intra-run ratio (machine-independent): the persistent scan pool at
+   concurrency 8 must not lose badly to the per-query thread-spawn path
+   at equal worker count (default floor 0.75x — generous CI-noise slack
+   on the "pool meets or beats spawn" expectation; tune with the
+   BENCH_POOL_VS_SPAWN_FLOOR env var, 0 disables).
+
+Re-baselining (e.g. after an intentional trade-off, or to tighten the
+seed floors to your CI hardware):
+
+    cargo bench --bench microbench
+    python3 scripts/bench_gate.py --rebaseline
+    git add BENCH_baseline.json   # commit the new floors
+
+Exit status: 0 = pass, 1 = regression, 2 = usage/IO error.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# Metrics gated against the committed baseline (higher is better).
+GATED_KEYS = [
+    "f32_rows_per_s",
+    "quant_rows_per_s",
+    "two_stage_rows_per_s",
+    "pool_c8_qps",
+]
+
+# Pool-vs-spawn floor at equal worker count. The microbench's pool-vs-
+# spawn comparison is short (48 queries per concurrency level), so on
+# noisy shared CI runners the honest expectation "pool >= spawn" needs
+# real slack: default 0.75, override with BENCH_POOL_VS_SPAWN_FLOOR
+# (set 0 to disable the check entirely on a hopeless runner).
+POOL_VS_SPAWN_FLOOR = float(os.environ.get("BENCH_POOL_VS_SPAWN_FLOOR", "0.75"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_scan.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=float(os.environ.get("BENCH_GATE_THRESHOLD", "0.30")),
+        help="allowed fractional drop vs baseline (default 0.30)",
+    )
+    ap.add_argument(
+        "--rebaseline",
+        action="store_true",
+        help="overwrite the baseline with the current results and exit",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.current) as f:
+            cur = json.load(f)
+    except OSError as e:
+        print(f"bench gate: cannot read {args.current}: {e}")
+        return 2
+
+    if args.rebaseline:
+        with open(args.baseline, "w") as f:
+            json.dump(cur, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"bench gate: baseline rewritten from {args.current}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except OSError as e:
+        print(f"bench gate: cannot read {args.baseline}: {e}")
+        return 2
+
+    failures = []
+    for key in GATED_KEYS:
+        b, c = base.get(key), cur.get(key)
+        if b is None or c is None:
+            # Tolerate schema drift in either file; absence is not a
+            # regression signal, just say so in the log.
+            print(f"bench gate: skipping {key} (missing from baseline or current)")
+            continue
+        floor = (1.0 - args.threshold) * float(b)
+        ok = float(c) >= floor
+        print(
+            f"bench gate: {key:24s} baseline {float(b):14.1f}  "
+            f"current {float(c):14.1f}  floor {floor:14.1f}  "
+            f"{'ok' if ok else 'REGRESSION'}"
+        )
+        if not ok:
+            failures.append(key)
+
+    pc8, sc8 = cur.get("pool_c8_qps"), cur.get("spawn_c8_qps")
+    if pc8 is not None and sc8 is not None and float(sc8) > 0.0:
+        ratio = float(pc8) / float(sc8)
+        ok = ratio >= POOL_VS_SPAWN_FLOOR
+        print(
+            f"bench gate: pool_c8 / spawn_c8      ratio {ratio:14.3f}  "
+            f"floor {POOL_VS_SPAWN_FLOOR:14.3f}  {'ok' if ok else 'REGRESSION'}"
+        )
+        if not ok:
+            failures.append("pool_vs_spawn_c8")
+
+    if failures:
+        print(f"bench gate FAILED: {', '.join(failures)}")
+        print("(intentional? re-baseline: python3 scripts/bench_gate.py --rebaseline)")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
