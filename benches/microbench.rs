@@ -6,10 +6,12 @@
 //! (DESIGN.md §7).
 //!
 //! Emits `BENCH_scan.json` (rows/s for the f32 scan, the quantized scan,
-//! and the two-stage engine; queries/s for the pool at concurrency 1/4/8
-//! vs per-query thread spawn; storage bytes per codec) so the scan perf
-//! trajectory is tracked across PRs — CI gates on it against
-//! `BENCH_baseline.json` (see `scripts/bench_gate.py`).
+//! and the two-stage engine; kernel-level rows/s for the dispatched f32
+//! and int8 scan microkernels vs the naive reference kernels they
+//! replaced; queries/s for the pool at concurrency 1/4/8 vs per-query
+//! thread spawn; storage bytes per codec) so the scan perf trajectory is
+//! tracked across PRs — CI gates on it against `BENCH_baseline.json`
+//! (see `scripts/bench_gate.py`).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -63,6 +65,77 @@ fn main() {
         );
         report_metric(&format!("micro.eigh.ms.{n}"), res.summary().mean * 1e3, "ms");
     }
+
+    // Scan microkernels in isolation (no store, no heaps): rows/s through
+    // the dispatched kernel layer vs the naive reference kernels the
+    // engines ran before the kernel subsystem — the before/after of the
+    // SIMD register-tiling work, and the kernel-level floors
+    // BENCH_scan.json carries for the CI gate.
+    let (kernel_f32_rows_per_s, kernel_q8_rows_per_s) = {
+        use logra::linalg::kernels::{self, ScanScratch};
+        use logra::store::quant::{blocks_of, dot_q8, quantize_rows};
+
+        let k = 192usize;
+        let nt = 8usize;
+        let len = 1024usize;
+        let mut a = vec![0.0f32; nt * k];
+        let mut b = vec![0.0f32; len * k];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        println!("kernel arm: {}", kernels::kernel_arm().name());
+        let opts = BenchOpts { warmup_iters: 2, iters: 30, max_seconds: 20.0 };
+
+        let naive_f32 = bench("kernel.f32.naive", opts, || {
+            let c = logra::linalg::matrix::matmul_t_slices(&a, nt, &b, len, k);
+            std::hint::black_box(&c);
+        })
+        .summary()
+        .mean;
+        let mut scratch = ScanScratch::new();
+        let tiled_f32 = bench("kernel.f32.tiled", opts, || {
+            let out = scratch.score_buf(nt * len);
+            kernels::matmul_t_into(&a, nt, &b, len, k, out);
+            std::hint::black_box(&out[0]);
+        })
+        .summary()
+        .mean;
+        let f32_rows = len as f64 / tiled_f32;
+        report_metric("micro.kernel.f32.rows_per_s", f32_rows, "rows/s");
+        report_metric("micro.kernel.f32.speedup_vs_naive", naive_f32 / tiled_f32, "x");
+
+        let (ac, asc) = quantize_rows(&a, nt, k);
+        let (bc, bsc) = quantize_rows(&b, len, k);
+        let blocks = blocks_of(k);
+        let naive_q8 = bench("kernel.q8.naive", opts, || {
+            // The pre-kernel shape: a fresh output Vec and a per-pair
+            // dot_q8 walk (test-row-major, chunk streamed nt times).
+            let mut out = vec![0.0f32; nt * len];
+            for t in 0..nt {
+                for j in 0..len {
+                    out[t * len + j] = dot_q8(
+                        &ac[t * k..(t + 1) * k],
+                        &asc[t * blocks..(t + 1) * blocks],
+                        &bc[j * k..(j + 1) * k],
+                        &bsc[j * blocks..(j + 1) * blocks],
+                    );
+                }
+            }
+            std::hint::black_box(&out);
+        })
+        .summary()
+        .mean;
+        let kernel_q8 = bench("kernel.q8.kernel", opts, || {
+            let out = scratch.score_buf(nt * len);
+            kernels::scan_q8_into(&ac, &asc, nt, &bc, &bsc, len, k, out);
+            std::hint::black_box(&out[0]);
+        })
+        .summary()
+        .mean;
+        let q8_rows = len as f64 / kernel_q8;
+        report_metric("micro.kernel.q8.rows_per_s", q8_rows, "rows/s");
+        report_metric("micro.kernel.q8.speedup_vs_naive", naive_q8 / kernel_q8, "x");
+        (f32_rows, q8_rows)
+    };
 
     // Store sequential scan bandwidth.
     {
@@ -292,6 +365,9 @@ fn main() {
 
         let json = format!(
             "{{\n  \"rows\": {rows},\n  \"k\": {k},\n  \"nt\": {nt},\n  \"topk\": {topk},\n  \
+             \"kernel_arm\": \"{}\",\n  \
+             \"kernel_f32_rows_per_s\": {kernel_f32_rows_per_s:.1},\n  \
+             \"kernel_q8_rows_per_s\": {kernel_q8_rows_per_s:.1},\n  \
              \"f32_rows_per_s\": {f32_rows_per_s:.1},\n  \
              \"quant_rows_per_s\": {quant_rows_per_s:.1},\n  \
              \"two_stage_rows_per_s\": {two_stage_rows_per_s:.1},\n  \
@@ -304,6 +380,7 @@ fn main() {
              \"pool_c4_qps\": {:.1},\n  \
              \"pool_c8_qps\": {:.1},\n  \
              \"spawn_c8_qps\": {spawn_qps_c8:.1}\n}}\n",
+            logra::linalg::kernel_arm().name(),
             f32_mean / quant_mean,
             f32_bytes as f64 / q8_bytes as f64,
             pool_qps[0],

@@ -31,6 +31,11 @@ pub struct Metrics {
     /// (queue depth, busy nanos, task counts) lives in
     /// `valuation::PoolSnapshot` via `ValuationService::scan_pool`.
     pub pool_workers: AtomicU64,
+    /// Scan chunk length (rows per kernel call) the native engines
+    /// RESOLVED for the latest query — the L2-fit auto derivation
+    /// (`linalg::kernels::auto_chunk_len`) unless an explicit
+    /// `with_chunk_len` override pinned it. 0 until the first query.
+    pub scan_chunk_len: AtomicU64,
 }
 
 impl Metrics {
@@ -48,6 +53,7 @@ impl Metrics {
             stage2_seconds: self.stage2_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             candidates_rescored: self.candidates_rescored.load(Ordering::Relaxed),
             pool_workers: self.pool_workers.load(Ordering::Relaxed),
+            scan_chunk_len: self.scan_chunk_len.load(Ordering::Relaxed),
         }
     }
 
@@ -71,6 +77,7 @@ pub struct MetricsSnapshot {
     pub stage2_seconds: f64,
     pub candidates_rescored: u64,
     pub pool_workers: u64,
+    pub scan_chunk_len: u64,
 }
 
 impl MetricsSnapshot {
@@ -130,8 +137,10 @@ mod tests {
         Metrics::add_nanos(&m.stage2_nanos, 0.5);
         m.candidates_rescored.store(40, Ordering::Relaxed);
         m.pool_workers.store(6, Ordering::Relaxed);
+        m.scan_chunk_len.store(640, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.pool_workers, 6);
+        assert_eq!(s.scan_chunk_len, 640);
         assert!((s.mean_batch_fill() - 2.5).abs() < 1e-12);
         assert!((s.pairs_per_sec(4) - 2000.0).abs() < 1.0);
         assert_eq!(s.shards_scanned, 8);

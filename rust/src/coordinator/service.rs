@@ -262,7 +262,11 @@ impl ValuationService {
                         return Err(anyhow!("service setup failed: {msg}"));
                     }
                 };
-                let chunk_len = rt.manifest.train_chunk.max(1);
+                // Native engines derive their scan chunk from the query
+                // shape (chunk + test block sized to fit L2;
+                // `linalg::kernels::auto_chunk_len`) — the resolved value
+                // lands in `Metrics::scan_chunk_len`. Only the HLO score
+                // program is pinned to the manifest's static train_chunk.
                 let engine = match &quant {
                     // Quantized serving: int8 coarse scan + exact rescore.
                     // (spawn already validated the copy, so `new` cannot
@@ -270,7 +274,7 @@ impl ValuationService {
                     Some(q) => Scanner::Two(
                         TwoStageEngine::new(q.clone(), store.clone(), precond.clone())?
                             .with_workers(cfg.scan_workers)
-                            .with_chunk_len(chunk_len)
+                            .with_chunk_len(0)
                             .with_rescore_factor(cfg.rescore_factor)
                             .with_metrics(m2.clone())
                             .with_pool(w_pool.clone().expect("pool spawned for quantized scan")),
@@ -282,7 +286,7 @@ impl ValuationService {
                         None => Scanner::Par(
                             ParallelQueryEngine::new(store.clone(), precond.clone())
                                 .with_workers(cfg.scan_workers)
-                                .with_chunk_len(chunk_len)
+                                .with_chunk_len(0)
                                 .with_metrics(m2.clone())
                                 .with_pool(w_pool.clone().expect("pool spawned for sharded store")),
                         ),

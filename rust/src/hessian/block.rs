@@ -11,7 +11,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::linalg::{dot, eigh, Matrix};
+use crate::linalg::{eigh, Matrix};
 use crate::runtime::Manifest;
 
 /// Per-module accumulated second-moment blocks.
@@ -105,54 +105,101 @@ pub struct Preconditioner {
 }
 
 impl Preconditioner {
+    /// Largest block width (the per-apply rotation scratch size).
+    fn max_block(&self) -> usize {
+        self.blocks.iter().map(|b| b.q.rows).max().unwrap_or(0)
+    }
+
     /// out = (H + λI)^{-1} g (new vector).
     pub fn apply(&self, g: &[f32]) -> Vec<f32> {
-        assert_eq!(g.len(), self.k_total);
         let mut out = vec![0.0f32; g.len()];
+        let mut v = vec![0.0f32; self.max_block()];
+        self.apply_into(g, &mut out, &mut v);
+        out
+    }
+
+    /// `out = (H + λI)^{-1} g` into caller-owned storage; `v` is rotation
+    /// scratch of at least [`max_block`](Self::max_block) elements. Same
+    /// math and op order as [`apply`](Self::apply) — the allocation-free
+    /// body both entry points share.
+    fn apply_into(&self, g: &[f32], out: &mut [f32], v: &mut [f32]) {
+        assert_eq!(g.len(), self.k_total);
+        assert_eq!(out.len(), self.k_total);
+        // Blocks assign (not accumulate) their segments; zero first so any
+        // unclaimed gap reads 0 like the allocating path.
+        out.fill(0.0);
         for b in &self.blocks {
             let k = b.q.rows;
             let seg = &g[b.off..b.off + k];
             // v = Q^T seg ; v_i /= (λ_i + damp) ; out_seg = Q v
-            let mut v = vec![0.0f32; k];
+            let vb = &mut v[..k];
             for i in 0..k {
                 let mut acc = 0.0f32;
                 for r in 0..k {
                     acc += b.q.at(r, i) * seg[r];
                 }
-                v[i] = acc / (b.eigenvalues[i].max(0.0) + b.damp);
+                vb[i] = acc / (b.eigenvalues[i].max(0.0) + b.damp);
             }
             let oseg = &mut out[b.off..b.off + k];
             for r in 0..k {
                 let mut acc = 0.0f32;
                 for i in 0..k {
-                    acc += b.q.at(r, i) * v[i];
+                    acc += b.q.at(r, i) * vb[i];
                 }
                 oseg[r] = acc;
             }
         }
-        out
     }
 
     /// Batch apply over row-major [n, k_total].
     pub fn apply_rows(&self, rows: &[f32], n: usize) -> Vec<f32> {
-        let k = self.k_total;
-        let mut out = vec![0.0f32; n * k];
-        for r in 0..n {
-            let applied = self.apply(&rows[r * k..(r + 1) * k]);
-            out[r * k..(r + 1) * k].copy_from_slice(&applied);
-        }
+        let mut out = vec![0.0f32; n * self.k_total];
+        self.apply_rows_into(rows, n, &mut out);
         out
     }
 
-    /// Self-influence g^T (H+λI)^{-1} g (RelatIF denominator).
+    /// Batch apply into caller-owned storage (`out.len() == n * k_total`);
+    /// one rotation-scratch allocation per call, none per row.
+    pub fn apply_rows_into(&self, rows: &[f32], n: usize, out: &mut [f32]) {
+        let k = self.k_total;
+        assert_eq!(rows.len(), n * k);
+        assert_eq!(out.len(), n * k);
+        let mut v = vec![0.0f32; self.max_block()];
+        for r in 0..n {
+            self.apply_into(&rows[r * k..(r + 1) * k], &mut out[r * k..(r + 1) * k], &mut v);
+        }
+    }
+
+    /// Self-influence g^T (H+λI)^{-1} g (RelatIF denominator). Routed
+    /// through the shared kernel dot so single-row and batched
+    /// self-influences are bitwise interchangeable.
     pub fn self_influence(&self, g: &[f32]) -> f32 {
-        dot(&self.apply(g), g)
+        crate::linalg::kernels::dot_f32(&self.apply(g), g)
+    }
+
+    /// Batched self-influences of `n` row-major rows, appended to `out`.
+    /// `applied` is caller scratch of at least `n * k_total` elements
+    /// (lease it from a [`crate::linalg::ScanScratch`]); each row's value
+    /// is bitwise identical to [`self_influence`](Self::self_influence) —
+    /// the invariant that keeps RelatIF denominators engine-independent.
+    pub fn self_influences_into(
+        &self,
+        rows: &[f32],
+        n: usize,
+        applied: &mut [f32],
+        out: &mut Vec<f32>,
+    ) {
+        let k = self.k_total;
+        let applied = &mut applied[..n * k];
+        self.apply_rows_into(rows, n, applied);
+        crate::linalg::kernels::rowwise_dot_extend(applied, rows, n, k, out);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::dot;
     use crate::util::rng::Pcg32;
 
     fn toy_hessian(k_blocks: &[usize], rows: usize, seed: u64) -> (BlockHessian, Vec<f32>) {
@@ -213,6 +260,33 @@ mod tests {
         for r in 0..10 {
             let si = p.self_influence(&data[r * 5..(r + 1) * 5]);
             assert!(si > 0.0);
+        }
+    }
+
+    #[test]
+    fn batched_paths_match_single_row_bitwise() {
+        // apply_rows_into / self_influences_into must be bitwise
+        // interchangeable with the per-row entry points — multi-block
+        // preconditioner, scratch pre-filled with garbage to catch any
+        // missing zeroing.
+        let (h, data) = toy_hessian(&[4, 3], 120, 7);
+        let p = h.preconditioner(0.1).unwrap();
+        let n = 9;
+        let rows = &data[..n * 7];
+        let mut applied = vec![f32::NAN; n * 7];
+        p.apply_rows_into(rows, n, &mut applied);
+        let mut selfs = Vec::new();
+        let mut scratch = vec![f32::NAN; n * 7];
+        p.self_influences_into(rows, n, &mut scratch, &mut selfs);
+        assert_eq!(selfs.len(), n);
+        for r in 0..n {
+            let row = &rows[r * 7..(r + 1) * 7];
+            let single = p.apply(row);
+            for (c, (a, b)) in applied[r * 7..(r + 1) * 7].iter().zip(&single).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {r} col {c}");
+            }
+            let want = p.self_influence(row);
+            assert_eq!(selfs[r].to_bits(), want.to_bits(), "self-influence row {r}");
         }
     }
 

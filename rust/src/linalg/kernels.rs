@@ -1,0 +1,747 @@
+//! Scan-kernel subsystem: the SIMD register-tiled microkernels behind
+//! every influence score in the system, plus the zero-allocation scratch
+//! discipline the scan engines thread through their hot loops.
+//!
+//! The paper's throughput claim (§4.2: "write projected gradients once,
+//! scan forever") lives or dies on the per-chunk score kernel. Before this
+//! module, the f32 path was a single-accumulator triple loop
+//! ([`crate::linalg::matrix::matmul_t_slices`], now the naive test/bench
+//! reference) and the int8 path re-walked [`crate::store::quant::dot_q8`]
+//! pair by pair — both serial-dependency-chained, both allocating a fresh
+//! `[nt, len]` output per chunk. This module replaces them with:
+//!
+//! - **f32**: a register-tiled `A·Bᵀ` microkernel ([`matmul_t_into`]) with
+//!   an AVX2+FMA arm (4×2 output tiles, one 8-lane accumulator per cell —
+//!   eight independent FMA chains in flight, loaded vectors reused across
+//!   the tile) and a portable scalar arm (8 independent accumulator lanes
+//!   per dot, unrolled by 8 with a ragged tail — the shape LLVM
+//!   auto-vectorizes).
+//! - **int8**: a train-row-major quantized scan kernel ([`scan_q8_into`])
+//!   holding the test rows hot so each train row's codes stream exactly
+//!   once per chunk, with an AVX2 `maddubs` block-dot arm (32 int8
+//!   products per instruction via the abs/sign trick) and an unrolled
+//!   scalar arm; per-block scale products are formed once, outside the
+//!   64-wide inner loop.
+//! - **scratch reuse**: `_into` kernels write caller-owned buffers;
+//!   [`ScanScratch`] is the per-worker lease of those buffers, so the
+//!   steady-state scan performs **zero heap allocation per chunk**
+//!   (observable via [`ScanScratch::grows`]).
+//! - **cache blocking**: [`auto_chunk_len`] derives the default scan chunk
+//!   so one train chunk + the test block + the score tile fit in L2.
+//!
+//! # Dispatch
+//!
+//! [`kernel_arm`] resolves ONCE per process: `LOGRA_FORCE_SCALAR=1` pins
+//! the scalar arm (the CI lane that keeps both arms covered); otherwise
+//! `is_x86_feature_detected!` picks AVX2+FMA when the CPU has it. A single
+//! process never mixes arms, which is what makes the determinism contract
+//! below hold.
+//!
+//! # Determinism contract
+//!
+//! Every f32 score is a **pure function of the two rows it scores** —
+//! independent of chunk boundaries, tile position, output shape, worker
+//! count, or which engine asked. Each output cell owns its accumulators
+//! and consumes `k` in the same fixed order (8-wide groups, fixed pairwise
+//! reduction tree, ragged tail appended last), whether it was computed in
+//! the middle of a 4×2 tile, on a remainder edge, or by the standalone
+//! [`dot_f32`] the two-stage rescore uses. SIMD changes the *summation
+//! order vs the old naive kernel* (so absolute scores moved once, at this
+//! PR), but because the sequential reference engine and both parallel
+//! engines share this one kernel layer, cross-engine bit-identity — the
+//! property `rust/tests/pool.rs` and `rust/tests/twostage.rs` pin — is
+//! preserved for any sharding, chunking, or interleaving. The int8 kernel
+//! is stronger still: block sums are exact integers and the per-block f32
+//! combine order is fixed, so its scores are bit-identical **across
+//! arms** and to the [`crate::store::quant::dot_q8`] reference
+//! (property-tested in `rust/tests/kernels.rs`).
+
+use std::sync::OnceLock;
+
+/// Values per int8 quantization block (one f32 scale each). The store
+/// codec's `QUANT_BLOCK` is defined as this constant.
+pub const Q8_BLOCK: usize = 64;
+
+/// Width of the f32 dot discipline: independent accumulator lanes per
+/// output cell (8 f32 = one 256-bit register on the AVX2 arm).
+pub const F32_LANES: usize = 8;
+
+// -------------------------------------------------------------- dispatch
+
+/// Which kernel implementation this process runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelArm {
+    /// `std::arch` AVX2 + FMA intrinsics (x86_64, runtime-detected).
+    Avx2Fma,
+    /// Portable unrolled-scalar fallback (also the forced-scalar CI lane).
+    Scalar,
+}
+
+impl KernelArm {
+    /// Short name for logs / bench reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelArm::Avx2Fma => "avx2+fma",
+            KernelArm::Scalar => "scalar",
+        }
+    }
+}
+
+static ARM: OnceLock<KernelArm> = OnceLock::new();
+
+/// The dispatch arm, resolved once per process: `LOGRA_FORCE_SCALAR`
+/// (any value other than empty/`0`/`false`) pins the scalar arm, else
+/// runtime CPU feature detection picks the widest available. Cached so a
+/// process can never mix summation orders mid-flight.
+pub fn kernel_arm() -> KernelArm {
+    *ARM.get_or_init(|| {
+        if force_scalar_env() {
+            KernelArm::Scalar
+        } else {
+            detect_arm()
+        }
+    })
+}
+
+fn force_scalar_env() -> bool {
+    match std::env::var("LOGRA_FORCE_SCALAR") {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+        }
+        Err(_) => false,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arm() -> KernelArm {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        KernelArm::Avx2Fma
+    } else {
+        KernelArm::Scalar
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_arm() -> KernelArm {
+    KernelArm::Scalar
+}
+
+// --------------------------------------------------------------- scratch
+
+/// Per-worker reusable scratch for the scan hot loop. The `_into` kernels
+/// write caller-owned buffers; this type is where those buffers live
+/// between chunks, so a steady-state shard scan allocates **nothing** per
+/// chunk: each lease grows the backing `Vec` at most once (to the largest
+/// size ever requested) and [`grows`](ScanScratch::grows) counts those
+/// growth events — the zero-alloc claim's observable.
+///
+/// One instance per scan worker: [`crate::valuation::ScanPool`] workers
+/// own one for their lifetime, the per-query scatter/gather path owns one
+/// per scoped thread, and the sequential engine keeps one per engine.
+#[derive(Default)]
+pub struct ScanScratch {
+    score: Vec<f32>,
+    aux: Vec<f32>,
+    grows: u64,
+}
+
+impl ScanScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lease the score buffer at `len` elements (contents unspecified —
+    /// kernels overwrite every cell).
+    pub fn score_buf(&mut self, len: usize) -> &mut [f32] {
+        Self::lease(&mut self.score, &mut self.grows, len)
+    }
+
+    /// Lease the auxiliary f32 buffer (preconditioned-row staging for the
+    /// batched self-influence path).
+    pub fn aux_buf(&mut self, len: usize) -> &mut [f32] {
+        Self::lease(&mut self.aux, &mut self.grows, len)
+    }
+
+    fn lease<'a>(buf: &'a mut Vec<f32>, grows: &mut u64, len: usize) -> &'a mut [f32] {
+        if buf.capacity() < len {
+            *grows += 1;
+        }
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        &mut buf[..len]
+    }
+
+    /// Allocation growth events since construction. In steady state this
+    /// saturates at one per distinct buffer in use (score, aux) and then
+    /// stays flat — asserted by the zero-alloc tests.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+}
+
+// -------------------------------------------------------- cache blocking
+
+/// L2 working-set target for [`auto_chunk_len`]: conservative for any
+/// core this decade (most have 512 KiB–2 MiB private L2).
+const L2_TARGET_BYTES: usize = 512 * 1024;
+
+/// Smallest / largest auto-derived chunk (rows). The floor keeps tiny-k
+/// stores from degenerating into per-row calls; the cap bounds per-task
+/// latency so pool interleaving stays responsive.
+const MIN_CHUNK: usize = 64;
+const MAX_CHUNK: usize = 8192;
+
+/// Derive a scan `chunk_len` from the query shape: the largest multiple
+/// of 64 such that one train chunk (`train_row_bytes` per row), the test
+/// block (`nt × k` f32), and the score tile (`nt` f32 per train row) fit
+/// the L2 target together, clamped to `[64, 8192]`. Engines use this when
+/// their `chunk_len` knob is 0 (the default); an explicit knob value
+/// overrides it unchanged.
+pub fn auto_chunk_len(k: usize, nt: usize, train_row_bytes: usize) -> usize {
+    let test_bytes = nt * k * 4;
+    let per_row = train_row_bytes + nt * 4;
+    let budget = L2_TARGET_BYTES.saturating_sub(test_bytes);
+    let chunk = budget / per_row.max(1);
+    (chunk / 64 * 64).clamp(MIN_CHUNK, MAX_CHUNK)
+}
+
+// -------------------------------------------------------------- f32 dots
+
+/// Shared f32 dot: the one summation discipline every f32 influence score
+/// goes through (chunk kernels, two-stage exact rescore, self-influence
+/// denominators). Dispatches on [`kernel_arm`].
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    // Hard assert: the AVX2 arm does raw-pointer loads sized by `a`, so a
+    // short `b` would be UB from a safe fn, not just a wrong answer.
+    assert_eq!(a.len(), b.len(), "dot_f32: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if kernel_arm() == KernelArm::Avx2Fma {
+        // SAFETY: arm implies avx2+fma are available on this CPU; the
+        // length assert above bounds every pointer the intrinsics touch.
+        return unsafe { avx2::dot(a, b) };
+    }
+    dot_f32_scalar(a, b)
+}
+
+/// Scalar arm of the dot discipline: 8 independent accumulator lanes over
+/// the unrolled body (element `i` lands in lane `i % 8`), the ragged tail
+/// continuing the lane assignment, then a fixed pairwise reduction tree
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`. Breaking the serial FP chain
+/// into 8 lanes is both the ILP win and the shape LLVM vectorizes.
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; F32_LANES];
+    let mut ca = a.chunks_exact(F32_LANES);
+    let mut cb = b.chunks_exact(F32_LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for (lane, (x, y)) in acc.iter_mut().zip(xa.iter().zip(xb)) {
+            *lane += x * y;
+        }
+    }
+    for (lane, (x, y)) in acc.iter_mut().zip(ca.remainder().iter().zip(cb.remainder())) {
+        *lane += x * y;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// `out = A·Bᵀ` over raw row-major slices: A is `[m, k]` (test rows,
+/// preconditioned), B is `[n, k]` (train chunk), `out` is `[m, n]` and
+/// fully overwritten. Every cell equals `dot_f32(a_row, b_row)` bitwise —
+/// the determinism contract — while the AVX2 arm computes interior cells
+/// in 4×2 register tiles for load reuse and ILP.
+pub fn matmul_t_into(a: &[f32], m: usize, b: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    // Hard asserts (not debug_): the AVX2 arm does raw-pointer loads, so
+    // undersized inputs would be UB from a safe fn in release builds. The
+    // cost is nothing next to the O(m·n·k) kernel work.
+    assert_eq!(a.len(), m * k, "matmul_t_into: a is not [m, k]");
+    assert_eq!(b.len(), n * k, "matmul_t_into: b is not [n, k]");
+    assert_eq!(out.len(), m * n, "matmul_t_into: out is not [m, n]");
+    #[cfg(target_arch = "x86_64")]
+    if kernel_arm() == KernelArm::Avx2Fma {
+        // SAFETY: arm implies avx2+fma are available on this CPU; the
+        // shape asserts above bound every pointer the intrinsics touch.
+        unsafe { avx2::matmul_t(a, m, b, n, k, out) };
+        return;
+    }
+    matmul_t_scalar_into(a, m, b, n, k, out);
+}
+
+/// Scalar arm of [`matmul_t_into`]: per-cell [`dot_f32_scalar`]. The
+/// A-row stays L1-hot across the `n` inner iterations; cache blocking of
+/// B is the caller's chunking ([`auto_chunk_len`]).
+pub fn matmul_t_scalar_into(a: &[f32], m: usize, b: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot_f32_scalar(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Row-paired dots: `out.push(dot_f32(a_row_i, b_row_i))` for each of the
+/// `n` rows — the batched self-influence kernel (`a` = preconditioned
+/// rows, `b` = raw rows). Appends to `out` so shard-level callers
+/// accumulate chunk results without a copy.
+pub fn rowwise_dot_extend(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), n * k);
+    out.reserve(n);
+    for r in 0..n {
+        out.push(dot_f32(&a[r * k..(r + 1) * k], &b[r * k..(r + 1) * k]));
+    }
+}
+
+// -------------------------------------------------------------- int8 scan
+
+/// Quantized scan kernel: score `nt` quantized test rows against `len`
+/// quantized train rows into row-major `out` (`[nt, len]`, fully
+/// overwritten). Iterates train-row-major — each train row's codes and
+/// scales are streamed exactly once per chunk while the (small) test
+/// block stays cache-hot — with per-64-block i32 accumulation and the
+/// block's scale product formed once, outside the inner loop.
+///
+/// Block sums are exact integers and the per-block f32 combine order is
+/// fixed, so the result is bit-identical across dispatch arms and to the
+/// [`crate::store::quant::dot_q8`] reference. Codes must lie in
+/// `[-127, 127]` (the store codec's clamp) — the AVX2 arm's abs/sign
+/// trick does not cover `-128`.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_q8_into(
+    t_codes: &[i8],
+    t_scales: &[f32],
+    nt: usize,
+    codes: &[i8],
+    scales: &[f32],
+    len: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let blocks = k.div_ceil(Q8_BLOCK);
+    // Hard asserts (not debug_): the AVX2 arm does raw-pointer 64-byte
+    // block loads, so undersized inputs would be UB from a safe fn in
+    // release builds.
+    assert_eq!(t_codes.len(), nt * k, "scan_q8_into: t_codes is not [nt, k]");
+    assert_eq!(t_scales.len(), nt * blocks, "scan_q8_into: t_scales is not [nt, blocks]");
+    assert_eq!(codes.len(), len * k, "scan_q8_into: codes is not [len, k]");
+    assert_eq!(scales.len(), len * blocks, "scan_q8_into: scales is not [len, blocks]");
+    assert_eq!(out.len(), nt * len, "scan_q8_into: out is not [nt, len]");
+    #[cfg(target_arch = "x86_64")]
+    if kernel_arm() == KernelArm::Avx2Fma {
+        // SAFETY: arm implies avx2 is available; the shape asserts above
+        // bound every pointer the intrinsics touch.
+        unsafe { avx2::scan_q8(t_codes, t_scales, nt, codes, scales, len, k, out) };
+        return;
+    }
+    scan_q8_scalar_into(t_codes, t_scales, nt, codes, scales, len, k, out);
+}
+
+/// Scalar arm of [`scan_q8_into`]: widened i16 products summed in i32
+/// (both factors are in `[-127, 127]`, so an i16 product is exact and
+/// pairs sum without overflow — the `pmaddwd` shape).
+#[allow(clippy::too_many_arguments)]
+pub fn scan_q8_scalar_into(
+    t_codes: &[i8],
+    t_scales: &[f32],
+    nt: usize,
+    codes: &[i8],
+    scales: &[f32],
+    len: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let blocks = k.div_ceil(Q8_BLOCK);
+    for j in 0..len {
+        let jc = &codes[j * k..(j + 1) * k];
+        let js = &scales[j * blocks..(j + 1) * blocks];
+        for t in 0..nt {
+            let tc = &t_codes[t * k..(t + 1) * k];
+            let ts = &t_scales[t * blocks..(t + 1) * blocks];
+            let mut acc = 0.0f32;
+            for b in 0..blocks {
+                let lo = b * Q8_BLOCK;
+                let hi = (lo + Q8_BLOCK).min(k);
+                let mut s = 0i32;
+                for (&x, &y) in tc[lo..hi].iter().zip(&jc[lo..hi]) {
+                    s += (x as i16 * y as i16) as i32;
+                }
+                acc += (ts[b] * js[b]) * s as f32;
+            }
+            out[t * len + j] = acc;
+        }
+    }
+}
+
+// ------------------------------------------------------------- AVX2 arms
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{F32_LANES, Q8_BLOCK};
+    use std::arch::x86_64::*;
+
+    /// Reduce one 8-lane f32 accumulator with the fixed tree
+    /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` (two horizontal adds, then
+    /// the 128-bit halves) — the same tree the scalar arm uses.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn reduce8(v: __m256) -> f32 {
+        unsafe {
+            let h1 = _mm256_hadd_ps(v, v);
+            let h2 = _mm256_hadd_ps(h1, h1);
+            let lo = _mm256_castps256_ps128(h2);
+            let hi = _mm256_extractf128_ps::<1>(h2);
+            _mm_cvtss_f32(_mm_add_ss(lo, hi))
+        }
+    }
+
+    /// Append the ragged tail (k % 8 elements) to a reduced total with
+    /// plain mul+add, in index order — shared by every cell so tails
+    /// cannot perturb per-cell identity.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn tail_mul_add(total: f32, a: &[f32], b: &[f32]) -> f32 {
+        let mut t = total;
+        for (x, y) in a.iter().zip(b) {
+            t += x * y;
+        }
+        t
+    }
+
+    /// AVX2 arm of the dot discipline: one 8-lane FMA accumulator over
+    /// the unrolled body, tree reduction, scalar tail. Exactly the
+    /// per-cell sequence of the tiled kernel, so `dot(a_row, b_row)` is
+    /// bitwise what any tile cell would produce for the same rows.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let k = a.len();
+        let k8 = k - k % F32_LANES;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let mut p = 0usize;
+            while p < k8 {
+                let va = _mm256_loadu_ps(ap.add(p));
+                let vb = _mm256_loadu_ps(bp.add(p));
+                acc = _mm256_fmadd_ps(va, vb, acc);
+                p += F32_LANES;
+            }
+            tail_mul_add(reduce8(acc), &a[k8..], &b[k8..])
+        }
+    }
+
+    /// Register-tiled `A·Bᵀ`: interior cells in 4×2 tiles (8 independent
+    /// FMA chains; each loaded A-vector feeds 2 FMAs, each B-vector 4),
+    /// edges in 1×4 strips / single cells — every shape running the same
+    /// per-cell op sequence as [`dot`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_t(a: &[f32], m: usize, b: &[f32], n: usize, k: usize, out: &mut [f32]) {
+        const MR: usize = 4;
+        const NR: usize = 2;
+        let k8 = k - k % F32_LANES;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        unsafe {
+            let mut i = 0usize;
+            while i + MR <= m {
+                let a0 = ap.add(i * k);
+                let a1 = ap.add((i + 1) * k);
+                let a2 = ap.add((i + 2) * k);
+                let a3 = ap.add((i + 3) * k);
+                let mut j = 0usize;
+                while j + NR <= n {
+                    let b0 = bp.add(j * k);
+                    let b1 = bp.add((j + 1) * k);
+                    let mut c00 = _mm256_setzero_ps();
+                    let mut c01 = _mm256_setzero_ps();
+                    let mut c10 = _mm256_setzero_ps();
+                    let mut c11 = _mm256_setzero_ps();
+                    let mut c20 = _mm256_setzero_ps();
+                    let mut c21 = _mm256_setzero_ps();
+                    let mut c30 = _mm256_setzero_ps();
+                    let mut c31 = _mm256_setzero_ps();
+                    let mut p = 0usize;
+                    while p < k8 {
+                        let vb0 = _mm256_loadu_ps(b0.add(p));
+                        let vb1 = _mm256_loadu_ps(b1.add(p));
+                        let va = _mm256_loadu_ps(a0.add(p));
+                        c00 = _mm256_fmadd_ps(va, vb0, c00);
+                        c01 = _mm256_fmadd_ps(va, vb1, c01);
+                        let va = _mm256_loadu_ps(a1.add(p));
+                        c10 = _mm256_fmadd_ps(va, vb0, c10);
+                        c11 = _mm256_fmadd_ps(va, vb1, c11);
+                        let va = _mm256_loadu_ps(a2.add(p));
+                        c20 = _mm256_fmadd_ps(va, vb0, c20);
+                        c21 = _mm256_fmadd_ps(va, vb1, c21);
+                        let va = _mm256_loadu_ps(a3.add(p));
+                        c30 = _mm256_fmadd_ps(va, vb0, c30);
+                        c31 = _mm256_fmadd_ps(va, vb1, c31);
+                        p += F32_LANES;
+                    }
+                    let tb0 = &b[j * k + k8..(j + 1) * k];
+                    let tb1 = &b[(j + 1) * k + k8..(j + 2) * k];
+                    let ta0 = &a[i * k + k8..(i + 1) * k];
+                    let ta1 = &a[(i + 1) * k + k8..(i + 2) * k];
+                    let ta2 = &a[(i + 2) * k + k8..(i + 3) * k];
+                    let ta3 = &a[(i + 3) * k + k8..(i + 4) * k];
+                    out[i * n + j] = tail_mul_add(reduce8(c00), ta0, tb0);
+                    out[i * n + j + 1] = tail_mul_add(reduce8(c01), ta0, tb1);
+                    out[(i + 1) * n + j] = tail_mul_add(reduce8(c10), ta1, tb0);
+                    out[(i + 1) * n + j + 1] = tail_mul_add(reduce8(c11), ta1, tb1);
+                    out[(i + 2) * n + j] = tail_mul_add(reduce8(c20), ta2, tb0);
+                    out[(i + 2) * n + j + 1] = tail_mul_add(reduce8(c21), ta2, tb1);
+                    out[(i + 3) * n + j] = tail_mul_add(reduce8(c30), ta3, tb0);
+                    out[(i + 3) * n + j + 1] = tail_mul_add(reduce8(c31), ta3, tb1);
+                    j += NR;
+                }
+                while j < n {
+                    let brow = &b[j * k..(j + 1) * k];
+                    for r in 0..MR {
+                        out[(i + r) * n + j] = dot(&a[(i + r) * k..(i + r + 1) * k], brow);
+                    }
+                    j += 1;
+                }
+                i += MR;
+            }
+            // Remainder rows: 1×4 strips keep four independent chains per
+            // loaded A-vector, then single cells.
+            while i < m {
+                let arow = &a[i * k..(i + 1) * k];
+                let ai = ap.add(i * k);
+                let mut j = 0usize;
+                while j + 4 <= n {
+                    let b0 = bp.add(j * k);
+                    let b1 = bp.add((j + 1) * k);
+                    let b2 = bp.add((j + 2) * k);
+                    let b3 = bp.add((j + 3) * k);
+                    let mut c0 = _mm256_setzero_ps();
+                    let mut c1 = _mm256_setzero_ps();
+                    let mut c2 = _mm256_setzero_ps();
+                    let mut c3 = _mm256_setzero_ps();
+                    let mut p = 0usize;
+                    while p < k8 {
+                        let va = _mm256_loadu_ps(ai.add(p));
+                        c0 = _mm256_fmadd_ps(_mm256_loadu_ps(b0.add(p)), va, c0);
+                        c1 = _mm256_fmadd_ps(_mm256_loadu_ps(b1.add(p)), va, c1);
+                        c2 = _mm256_fmadd_ps(_mm256_loadu_ps(b2.add(p)), va, c2);
+                        c3 = _mm256_fmadd_ps(_mm256_loadu_ps(b3.add(p)), va, c3);
+                        p += F32_LANES;
+                    }
+                    let ta = &arow[k8..];
+                    out[i * n + j] = tail_mul_add(reduce8(c0), ta, &b[j * k + k8..(j + 1) * k]);
+                    out[i * n + j + 1] =
+                        tail_mul_add(reduce8(c1), ta, &b[(j + 1) * k + k8..(j + 2) * k]);
+                    out[i * n + j + 2] =
+                        tail_mul_add(reduce8(c2), ta, &b[(j + 2) * k + k8..(j + 3) * k]);
+                    out[i * n + j + 3] =
+                        tail_mul_add(reduce8(c3), ta, &b[(j + 3) * k + k8..(j + 4) * k]);
+                    j += 4;
+                }
+                while j < n {
+                    out[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
+                    j += 1;
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// 64 int8 products accumulated into 8 i32 lanes (exact): the
+    /// llama.cpp-style abs/sign trick makes `maddubs` (u8×i8 → i16 pairs)
+    /// compute signed products — pair sums ≤ 2·127² < i16::MAX, so no
+    /// saturation — then `madd` by 1 widens to i32.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn q8_block_sum(a: *const i8, b: *const i8) -> i32 {
+        unsafe {
+            let va0 = _mm256_loadu_si256(a as *const __m256i);
+            let vb0 = _mm256_loadu_si256(b as *const __m256i);
+            let va1 = _mm256_loadu_si256(a.add(32) as *const __m256i);
+            let vb1 = _mm256_loadu_si256(b.add(32) as *const __m256i);
+            let p0 = _mm256_maddubs_epi16(_mm256_abs_epi8(va0), _mm256_sign_epi8(vb0, va0));
+            let p1 = _mm256_maddubs_epi16(_mm256_abs_epi8(va1), _mm256_sign_epi8(vb1, va1));
+            let ones = _mm256_set1_epi16(1);
+            let s = _mm256_add_epi32(_mm256_madd_epi16(p0, ones), _mm256_madd_epi16(p1, ones));
+            let lo = _mm256_castsi256_si128(s);
+            let hi = _mm256_extracti128_si256::<1>(s);
+            let s4 = _mm_add_epi32(lo, hi);
+            let s2 = _mm_add_epi32(s4, _mm_shuffle_epi32::<0b01_00_11_10>(s4));
+            let s1 = _mm_add_epi32(s2, _mm_shuffle_epi32::<0b00_00_00_01>(s2));
+            _mm_cvtsi128_si32(s1)
+        }
+    }
+
+    /// AVX2 arm of the quantized scan. Train-row-major like the scalar
+    /// arm; block sums are exact i32, so the output is bit-identical to
+    /// the scalar arm and to the `dot_q8` reference.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scan_q8(
+        t_codes: &[i8],
+        t_scales: &[f32],
+        nt: usize,
+        codes: &[i8],
+        scales: &[f32],
+        len: usize,
+        k: usize,
+        out: &mut [f32],
+    ) {
+        let blocks = k.div_ceil(Q8_BLOCK);
+        let full = k / Q8_BLOCK;
+        unsafe {
+            for j in 0..len {
+                let jc = codes.as_ptr().add(j * k);
+                let js = &scales[j * blocks..(j + 1) * blocks];
+                for t in 0..nt {
+                    let tc = t_codes.as_ptr().add(t * k);
+                    let ts = &t_scales[t * blocks..(t + 1) * blocks];
+                    let mut acc = 0.0f32;
+                    for b in 0..full {
+                        let s = q8_block_sum(tc.add(b * Q8_BLOCK), jc.add(b * Q8_BLOCK));
+                        acc += (ts[b] * js[b]) * s as f32;
+                    }
+                    if full < blocks {
+                        let lo = full * Q8_BLOCK;
+                        let mut s = 0i32;
+                        for idx in lo..k {
+                            s += (*tc.add(idx) as i16 * *jc.add(idx) as i16) as i32;
+                        }
+                        acc += (ts[full] * js[full]) * s as f32;
+                    }
+                    out[t * len + j] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::matmul_t_slices;
+    use crate::util::rng::Pcg32;
+
+    fn rand_rows(rng: &mut Pcg32, n: usize, k: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n * k];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn arm_resolves_and_is_stable() {
+        let arm = kernel_arm();
+        assert_eq!(arm, kernel_arm(), "dispatch must be cached");
+        assert!(!arm.name().is_empty());
+    }
+
+    #[test]
+    fn dispatched_matmul_matches_naive_reference() {
+        let mut rng = Pcg32::seeded(11);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (8, 33, 192), (5, 2, 65)] {
+            let a = rand_rows(&mut rng, m, k);
+            let b = rand_rows(&mut rng, n, k);
+            let want = matmul_t_slices(&a, m, &b, n, k);
+            let mut got = vec![0.0f32; m * n];
+            matmul_t_into(&a, m, &b, n, k, &mut got);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                    "({m},{n},{k}) cell {i}: {g} vs naive {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_cell_equals_standalone_dot_bitwise() {
+        // THE determinism contract: a cell's value must not depend on
+        // where in the tile grid it was computed.
+        let mut rng = Pcg32::seeded(12);
+        for &(m, n, k) in &[(4usize, 2usize, 16usize), (9, 7, 21), (1, 11, 8), (6, 3, 200)] {
+            let a = rand_rows(&mut rng, m, k);
+            let b = rand_rows(&mut rng, n, k);
+            let mut got = vec![0.0f32; m * n];
+            matmul_t_into(&a, m, &b, n, k, &mut got);
+            for i in 0..m {
+                for j in 0..n {
+                    let d = dot_f32(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                    assert_eq!(
+                        got[i * n + j].to_bits(),
+                        d.to_bits(),
+                        "cell ({i},{j}) of ({m},{n},{k}) diverged from dot_f32"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_arm_cells_equal_scalar_dot_bitwise() {
+        let mut rng = Pcg32::seeded(13);
+        let (m, n, k) = (5usize, 9usize, 27usize);
+        let a = rand_rows(&mut rng, m, k);
+        let b = rand_rows(&mut rng, n, k);
+        let mut got = vec![0.0f32; m * n];
+        matmul_t_scalar_into(&a, m, &b, n, k, &mut got);
+        for i in 0..m {
+            for j in 0..n {
+                let d = dot_f32_scalar(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                assert_eq!(got[i * n + j].to_bits(), d.to_bits(), "cell ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_grows_once_then_reuses() {
+        let mut s = ScanScratch::new();
+        let _ = s.score_buf(1024);
+        assert_eq!(s.grows(), 1);
+        for _ in 0..100 {
+            let buf = s.score_buf(1024);
+            assert_eq!(buf.len(), 1024);
+            let small = s.score_buf(10);
+            assert_eq!(small.len(), 10);
+        }
+        assert_eq!(s.grows(), 1, "steady-state leases must not allocate");
+        let _ = s.aux_buf(64);
+        assert_eq!(s.grows(), 2);
+        let _ = s.score_buf(2048);
+        assert_eq!(s.grows(), 3, "a larger lease is a growth event");
+    }
+
+    #[test]
+    fn auto_chunk_len_is_bounded_and_l2_sized() {
+        // Paper-shaped: k=192, nt=8, f32 rows.
+        let c = auto_chunk_len(192, 8, 192 * 4);
+        assert!(c % 64 == 0 && (64..=8192).contains(&c), "chunk {c}");
+        assert!(c * (192 * 4 + 32) + 8 * 192 * 4 <= L2_TARGET_BYTES, "chunk {c} busts L2");
+        // Quantized rows are ~4x smaller -> ~4x longer chunks.
+        let cq = auto_chunk_len(192, 8, 192 + 3 * 4);
+        assert!(cq > c, "q8 chunk {cq} should exceed f32 chunk {c}");
+        // Degenerate shapes stay clamped.
+        assert_eq!(auto_chunk_len(1_000_000, 8, 4_000_000), 64);
+        assert_eq!(auto_chunk_len(1, 1, 4), 8192);
+    }
+
+    #[test]
+    fn rowwise_dot_matches_per_row_dot() {
+        let mut rng = Pcg32::seeded(14);
+        let (n, k) = (17usize, 37usize);
+        let a = rand_rows(&mut rng, n, k);
+        let b = rand_rows(&mut rng, n, k);
+        let mut out = Vec::new();
+        rowwise_dot_extend(&a, &b, n, k, &mut out);
+        assert_eq!(out.len(), n);
+        for r in 0..n {
+            let d = dot_f32(&a[r * k..(r + 1) * k], &b[r * k..(r + 1) * k]);
+            assert_eq!(out[r].to_bits(), d.to_bits(), "row {r}");
+        }
+    }
+}

@@ -188,8 +188,12 @@ impl Matrix {
     }
 }
 
-/// `out = A B^T` over raw row-major slices (no intermediate copies) —
-/// the scoring fallback's hot loop. A is [m, k], B is [n, k].
+/// `out = A B^T` over raw row-major slices — the NAIVE single-accumulator
+/// reference kernel. The serving hot path runs
+/// [`crate::linalg::kernels::matmul_t_into`] instead (register-tiled,
+/// SIMD-dispatched, allocation-free); this version is kept as the
+/// plain-ordering oracle for kernel property tests and the bench's
+/// before/after comparison. A is [m, k], B is [n, k].
 pub fn matmul_t_slices(a: &[f32], m: usize, b: &[f32], n: usize, k: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);

@@ -1,10 +1,14 @@
 //! Host-side dense linear algebra: the K×K / n×n work around the AOT HLO
-//! programs (Hessian blocks, eigendecompositions, SPD solves, PCA init).
+//! programs (Hessian blocks, eigendecompositions, SPD solves, PCA init),
+//! plus the scan-kernel subsystem ([`kernels`]) that every influence
+//! score's hot loop runs through.
 
 pub mod eigh;
+pub mod kernels;
 pub mod matrix;
 pub mod solve;
 
 pub use eigh::{eigh, Eigh};
+pub use kernels::{kernel_arm, KernelArm, ScanScratch};
 pub use matrix::{cosine, dot, norm, Matrix};
 pub use solve::{cholesky, solve_spd};

@@ -43,8 +43,9 @@ const MAGIC: &[u8; 8] = b"LOGRAQNT";
 const VERSION: u32 = 2;
 const HEADER_LEN: usize = 32;
 
-/// Values per quantization block (one f32 scale each).
-pub const QUANT_BLOCK: usize = 64;
+/// Values per quantization block (one f32 scale each) — defined by the
+/// scan-kernel subsystem, which owns the block-dot microkernels.
+pub const QUANT_BLOCK: usize = crate::linalg::kernels::Q8_BLOCK;
 
 /// Code file name inside a quantized store directory.
 pub const QUANT_CODES_FILE: &str = "codes.bin";
@@ -123,7 +124,12 @@ pub fn dequantize_row(codes: &[i8], scales: &[f32], out: &mut [f32]) {
 }
 
 /// Approximate dot of two quantized rows: per-block i32 code dot, combined
-/// through both scales in f32. The two-stage engine's stage-1 kernel.
+/// through both scales in f32. This is the REFERENCE kernel: block sums
+/// are exact integers and the combine order is fixed, so the dispatched
+/// scan kernel ([`crate::linalg::kernels::scan_q8_into`], which the
+/// two-stage engine's stage 1 actually runs) must — and does — reproduce
+/// it bit-identically on every arm (property-tested in
+/// `rust/tests/kernels.rs`).
 #[inline]
 pub fn dot_q8(a_codes: &[i8], a_scales: &[f32], b_codes: &[i8], b_scales: &[f32]) -> f32 {
     debug_assert_eq!(a_codes.len(), b_codes.len());
@@ -140,8 +146,12 @@ pub fn dot_q8(a_codes: &[i8], a_scales: &[f32], b_codes: &[i8], b_scales: &[f32]
 }
 
 /// Score `nt` quantized test rows against `len` quantized train rows:
-/// row-major [nt, len] approximate scores (the int8 twin of
-/// [`crate::linalg::matrix::matmul_t_slices`]).
+/// row-major [nt, len] approximate scores (the int8 twin of the f32 scan
+/// kernel). Allocating convenience wrapper over the dispatched
+/// [`crate::linalg::kernels::scan_q8_into`]; the scan engines call the
+/// `_into` form directly with per-worker scratch so the steady-state scan
+/// allocates nothing per chunk.
+#[allow(clippy::too_many_arguments)]
 pub fn scan_scores_q8(
     t_codes: &[i8],
     t_scales: &[f32],
@@ -151,23 +161,8 @@ pub fn scan_scores_q8(
     len: usize,
     k: usize,
 ) -> Vec<f32> {
-    let blocks = blocks_of(k);
-    debug_assert_eq!(t_codes.len(), nt * k);
-    debug_assert_eq!(codes.len(), len * k);
     let mut out = vec![0.0f32; nt * len];
-    for t in 0..nt {
-        let tc = &t_codes[t * k..(t + 1) * k];
-        let ts = &t_scales[t * blocks..(t + 1) * blocks];
-        let orow = &mut out[t * len..(t + 1) * len];
-        for (j, o) in orow.iter_mut().enumerate() {
-            *o = dot_q8(
-                tc,
-                ts,
-                &codes[j * k..(j + 1) * k],
-                &scales[j * blocks..(j + 1) * blocks],
-            );
-        }
-    }
+    crate::linalg::kernels::scan_q8_into(t_codes, t_scales, nt, codes, scales, len, k, &mut out);
     out
 }
 

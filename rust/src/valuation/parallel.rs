@@ -8,15 +8,17 @@
 //! (shard, test row), and a deterministic merge stage folds the per-shard
 //! heaps into final results.
 //!
-//! Determinism: scores are per-(test,train)-pair dot products, unaffected
-//! by sharding or chunking; [`TopK`]'s total order on (score, id) makes the
-//! kept set a pure function of the candidate multiset. Together these make
-//! the parallel result **bit-identical** to the sequential
-//! [`QueryEngine`](super::QueryEngine) native scan, whatever the shard
-//! decomposition, worker count, or interleaving with concurrent queries
-//! (verified by `rust/tests/shards.rs` and `rust/tests/pool.rs`). (The HLO
-//! scorer may round differently — the claim is scoped to the native path
-//! both engines share.)
+//! Determinism: scores are per-(test,train)-pair dot products through the
+//! shared kernel layer ([`crate::linalg::kernels`]), whose per-cell
+//! summation order is independent of chunk boundaries and tile position —
+//! so sharding and chunking cannot move a bit; [`TopK`]'s total order on
+//! (score, id) makes the kept set a pure function of the candidate
+//! multiset. Together these make the parallel result **bit-identical** to
+//! the sequential [`QueryEngine`](super::QueryEngine) native scan,
+//! whatever the shard decomposition, worker count, or interleaving with
+//! concurrent queries (verified by `rust/tests/shards.rs` and
+//! `rust/tests/pool.rs`). (The HLO scorer may round differently — the
+//! claim is scoped to the native path both engines share.)
 //!
 //! Execution substrate: the engine shares ownership of the store fabric
 //! (`Arc`), so scans can run EITHER on per-query scoped threads
@@ -33,7 +35,8 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::metrics::Metrics;
 use crate::hessian::Preconditioner;
-use crate::linalg::matrix::matmul_t_slices;
+use crate::linalg::kernels::{auto_chunk_len, matmul_t_into};
+use crate::linalg::ScanScratch;
 use crate::store::ShardedStore;
 use crate::util::pipeline::bounded;
 use crate::util::topk::TopK;
@@ -48,13 +51,37 @@ pub struct ParallelScanConfig {
     /// resolution lives in [`auto_workers`]. Ignored when a [`ScanPool`]
     /// is attached: the pool's worker count is authoritative.
     pub workers: usize,
-    /// Rows scored per chunk within a shard.
+    /// Rows scored per chunk within a shard; 0 (the default) derives the
+    /// chunk from the query shape so one train chunk + the test block fit
+    /// L2 ([`auto_chunk_len`]). An explicit value overrides unchanged.
     pub chunk_len: usize,
 }
 
 impl Default for ParallelScanConfig {
     fn default() -> Self {
-        ParallelScanConfig { workers: 0, chunk_len: 1024 }
+        ParallelScanConfig { workers: 0, chunk_len: 0 }
+    }
+}
+
+/// Resolve a `chunk_len` knob for an f32 scan: explicit values pass
+/// through, 0 derives from the query shape ([`auto_chunk_len`] with
+/// `k * 4`-byte train rows).
+pub(crate) fn resolve_chunk_len_f32(requested: usize, k: usize, nt: usize) -> usize {
+    if requested != 0 {
+        requested
+    } else {
+        auto_chunk_len(k, nt.max(1), k * 4)
+    }
+}
+
+/// Chunk resolution for the self-influence cache build: rows are read
+/// once and staged once through the preconditioner (`~8k` bytes of L2
+/// footprint per row), with a single-row "test block".
+pub(crate) fn resolve_chunk_len_self_inf(requested: usize, k: usize) -> usize {
+    if requested != 0 {
+        requested
+    } else {
+        auto_chunk_len(k, 1, k * 8)
     }
 }
 
@@ -91,8 +118,10 @@ impl ParallelQueryEngine {
         self
     }
 
+    /// Override the scan chunk length (rows per kernel call); 0 restores
+    /// the auto derivation (chunk + test block sized to fit L2).
     pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
-        self.cfg.chunk_len = chunk_len.max(1);
+        self.cfg.chunk_len = chunk_len;
         self
     }
 
@@ -155,34 +184,55 @@ impl ParallelQueryEngine {
             Normalization::RelatIf => Some(self.train_self_influences()),
             Normalization::None => None,
         };
-        let chunk_len = self.cfg.chunk_len.max(1);
+        let chunk_len = resolve_chunk_len_f32(self.cfg.chunk_len, k, nt);
+        if let Some(m) = &self.metrics {
+            m.scan_chunk_len.store(chunk_len as u64, std::sync::atomic::Ordering::Relaxed);
+        }
         let scan = match &self.pool {
             Some(pool) => {
                 let store = self.store.clone();
                 let metrics = self.metrics.clone();
                 let pre = pre.clone();
                 let selfs = selfs.clone();
-                ScanHandle::Pool(pool.submit(self.store.n_shards(), move |si| {
-                    scan_shard(
-                        &store,
-                        si,
-                        &pre,
-                        nt,
-                        topk,
-                        selfs.as_ref().map(|s| s.as_slice()),
-                        chunk_len,
-                        metrics.as_deref(),
-                    )
-                })?)
+                ScanHandle::Pool(pool.submit_with_scratch(
+                    self.store.n_shards(),
+                    move |si, scratch| {
+                        scan_shard(
+                            &store,
+                            si,
+                            &pre,
+                            nt,
+                            topk,
+                            selfs.as_ref().map(|s| s.as_slice()),
+                            chunk_len,
+                            metrics.as_deref(),
+                            scratch,
+                        )
+                    },
+                )?)
             }
             None => {
                 let store = &self.store;
                 let metrics = self.metrics.as_deref();
                 let pre_rows: &[f32] = &pre;
                 let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
-                ScanHandle::Ready(scatter_gather(self.workers(), store.n_shards(), &|si| {
-                    scan_shard(store, si, pre_rows, nt, topk, selfs_ref, chunk_len, metrics)
-                }))
+                ScanHandle::Ready(scatter_gather(
+                    self.workers(),
+                    store.n_shards(),
+                    &|si, scratch| {
+                        scan_shard(
+                            store,
+                            si,
+                            pre_rows,
+                            nt,
+                            topk,
+                            selfs_ref,
+                            chunk_len,
+                            metrics,
+                            scratch,
+                        )
+                    },
+                ))
             }
         };
         Ok(PendingQuery { scan, nt, topk })
@@ -197,7 +247,7 @@ impl ParallelQueryEngine {
             &self.store,
             &self.precond,
             resolve_workers(self.cfg.workers, self.store.n_shards()),
-            self.cfg.chunk_len.max(1),
+            resolve_chunk_len_self_inf(self.cfg.chunk_len, self.store.k()),
         )
     }
 }
@@ -234,16 +284,19 @@ pub(crate) fn resolve_workers(requested: usize, n_shards: usize) -> usize {
     auto_workers(requested).clamp(1, n_shards.max(1))
 }
 
-/// Run `job(shard_idx)` for every shard across `workers` scoped threads and
-/// return results in shard order. Work distribution goes through a bounded
-/// pipeline channel so an uneven shard mix load-balances. This is the
-/// one-shot path; long-lived serving goes through [`ScanPool`]. Shared with
-/// the two-stage quantized engine ([`super::twostage`]), whose stage-1 scan
-/// is the same fan-out over quantized shards.
+/// Run `job(shard_idx, scratch)` for every shard across `workers` scoped
+/// threads and return results in shard order. Each thread owns one
+/// [`ScanScratch`] reused across every shard (and chunk) it scans — the
+/// per-query-spawn twin of the pool's per-worker scratch. Work
+/// distribution goes through a bounded pipeline channel so an uneven
+/// shard mix load-balances. This is the one-shot path; long-lived serving
+/// goes through [`ScanPool`]. Shared with the two-stage quantized engine
+/// ([`super::twostage`]), whose stage-1 scan is the same fan-out over
+/// quantized shards.
 pub(crate) fn scatter_gather<T, F>(workers: usize, n_shards: usize, job: &F) -> Vec<T>
 where
     T: Send,
-    F: Fn(usize) -> T + Sync,
+    F: Fn(usize, &mut ScanScratch) -> T + Sync,
 {
     let workers = workers.clamp(1, n_shards.max(1));
     let (work_tx, work_rx) = bounded::<usize>(n_shards.max(1));
@@ -254,8 +307,9 @@ where
             let rx = &work_rx;
             let tx = res_tx.clone();
             s.spawn(move || {
+                let mut scratch = ScanScratch::new();
                 while let Some(si) = rx.recv() {
-                    if tx.send((si, job(si))).is_err() {
+                    if tx.send((si, job(si, &mut scratch))).is_err() {
                         break;
                     }
                 }
@@ -275,9 +329,11 @@ where
 }
 
 /// Scan one shard: per-test-row TopK heaps over the shard's rows.
-/// `pre` is already preconditioned ([nt, k]).
+/// `pre` is already preconditioned ([nt, k]); `scratch` holds the score
+/// buffer between chunks, so the steady-state loop allocates nothing per
+/// chunk (kernel writes in place, heap pushes go to pre-sized heaps).
 #[allow(clippy::too_many_arguments)]
-fn scan_shard(
+pub(crate) fn scan_shard(
     store: &ShardedStore,
     si: usize,
     pre: &[f32],
@@ -286,6 +342,7 @@ fn scan_shard(
     selfs: Option<&[f32]>,
     chunk_len: usize,
     metrics: Option<&Metrics>,
+    scratch: &mut ScanScratch,
 ) -> Vec<TopK> {
     let t0 = Instant::now();
     let k = store.k();
@@ -300,7 +357,8 @@ fn scan_shard(
             shard.prefetch(at + len, chunk_len.min(rows - at - len));
         }
         let chunk = shard.chunk(at, len);
-        let scores = matmul_t_slices(pre, nt, chunk, len, k);
+        let scores = scratch.score_buf(nt * len);
+        matmul_t_into(pre, nt, chunk, len, k, scores);
         for (t, heap) in heaps.iter_mut().enumerate() {
             let srow = &scores[t * len..(t + 1) * len];
             for (j, &s) in srow.iter().enumerate() {
@@ -338,8 +396,8 @@ pub(crate) fn cached_self_influences(
     if let Some(cached) = &*guard {
         return cached.clone();
     }
-    let per_shard = scatter_gather(workers, store.n_shards(), &|si| {
-        shard_self_influences(store, precond, si, chunk_len)
+    let per_shard = scatter_gather(workers, store.n_shards(), &|si, scratch| {
+        shard_self_influences(store, precond, si, chunk_len, scratch)
     });
     let mut flat = Vec::with_capacity(store.rows());
     for v in per_shard {
@@ -350,12 +408,18 @@ pub(crate) fn cached_self_influences(
     arc
 }
 
-/// Self-influences of one shard's rows, chunk-wise.
+/// Self-influences of one shard's rows, chunk-wise and batched through
+/// the kernel layer: each chunk is preconditioned in one
+/// `apply_rows_into` pass into scratch and row-dotted by the shared
+/// kernel — same fast path (and bitwise the same values) as the
+/// per-row [`Preconditioner::self_influence`], without its two
+/// allocations per row.
 pub(crate) fn shard_self_influences(
     store: &ShardedStore,
     precond: &Preconditioner,
     si: usize,
     chunk_len: usize,
+    scratch: &mut ScanScratch,
 ) -> Vec<f32> {
     let k = store.k();
     let shard = store.shard(si);
@@ -365,10 +429,85 @@ pub(crate) fn shard_self_influences(
     while at < rows {
         let len = chunk_len.min(rows - at);
         let chunk = shard.chunk(at, len);
-        for r in 0..len {
-            out.push(precond.self_influence(&chunk[r * k..(r + 1) * k]));
-        }
+        let applied = scratch.aux_buf(len * k);
+        precond.self_influences_into(chunk, len, applied, &mut out);
         at += len;
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hessian::BlockHessian;
+    use crate::store::GradStoreWriter;
+    use crate::util::rng::Pcg32;
+    use std::path::PathBuf;
+
+    fn tmp_store(name: &str, n: usize, k: usize) -> (PathBuf, Vec<f32>) {
+        let dir = std::env::temp_dir().join("logra-parallel-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Pcg32::seeded(0xA11C);
+        let mut rows = vec![0.0f32; n * k];
+        rng.fill_normal(&mut rows, 1.0);
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let mut w = GradStoreWriter::create(&dir, k).unwrap();
+        w.append(&ids, &rows).unwrap();
+        w.finalize().unwrap();
+        (dir, rows)
+    }
+
+    #[test]
+    fn steady_state_scan_reuses_scratch() {
+        // The zero-alloc contract: after the first chunk warms the score
+        // buffer, further chunks — and further whole scans — must not
+        // grow it again.
+        let k = 16;
+        let n = 200;
+        let (dir, rows) = tmp_store("zero-alloc", n, k);
+        let store = Arc::new(ShardedStore::open(&dir).unwrap());
+        let mut hess = BlockHessian::single_block(k);
+        hess.accumulate(&rows, n);
+        let precond = hess.preconditioner(0.1).unwrap();
+        let nt = 3;
+        let mut rng = Pcg32::seeded(7);
+        let mut test = vec![0.0f32; nt * k];
+        rng.fill_normal(&mut test, 1.0);
+        let pre = precond.apply_rows(&test, nt);
+
+        let mut scratch = ScanScratch::new();
+        // Multi-chunk scan (chunk_len 32 over 200 rows = 7 chunks).
+        let heaps = scan_shard(&store, 0, &pre, nt, 5, None, 32, None, &mut scratch);
+        assert_eq!(heaps.len(), nt);
+        assert_eq!(scratch.grows(), 1, "one warmup growth for the score buffer");
+        for _ in 0..3 {
+            let again = scan_shard(&store, 0, &pre, nt, 5, None, 32, None, &mut scratch);
+            assert_eq!(again.len(), nt);
+        }
+        assert_eq!(scratch.grows(), 1, "steady-state scans must not allocate");
+    }
+
+    #[test]
+    fn batched_self_influences_match_per_row() {
+        let k = 10;
+        let n = 77;
+        let (dir, rows) = tmp_store("selfinf-batch", n, k);
+        let store = Arc::new(ShardedStore::open(&dir).unwrap());
+        let mut hess = BlockHessian::single_block(k);
+        hess.accumulate(&rows, n);
+        let precond = hess.preconditioner(0.1).unwrap();
+        let mut scratch = ScanScratch::new();
+        // Ragged chunking (13 does not divide 77).
+        let got = shard_self_influences(&store, &precond, 0, 13, &mut scratch);
+        assert_eq!(got.len(), n);
+        for (r, &g) in got.iter().enumerate() {
+            let want = precond.self_influence(&rows[r * k..(r + 1) * k]);
+            assert_eq!(g.to_bits(), want.to_bits(), "row {r}");
+        }
+        // And the batch path, like the scan, reuses its scratch.
+        let grows = scratch.grows();
+        let _ = shard_self_influences(&store, &precond, 0, 13, &mut scratch);
+        assert_eq!(scratch.grows(), grows, "second cache build must not allocate");
+    }
 }

@@ -25,6 +25,13 @@
 //! - **Graceful shutdown**: [`ScanPool::shutdown`] stops admission, drains
 //!   every task already submitted, and joins the threads; pending queries
 //!   still complete.
+//! - **Per-worker scratch**: each persistent worker owns one
+//!   [`ScanScratch`] for its lifetime and hands it to every scan task it
+//!   runs ([`ScanPool::submit_with_scratch`]), so the kernels' `_into`
+//!   score buffers are reused across chunks, shards, and queries — the
+//!   steady-state scan allocates nothing per chunk.
+//!   [`PoolSnapshot::scratch_grows`] exposes the per-worker growth
+//!   counters (they saturate after warmup; the zero-alloc observable).
 //!
 //! The pool is also the single authority for resolving
 //! `ParallelScanConfig::workers == 0` ([`auto_workers`]), so service
@@ -37,6 +44,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::linalg::ScanScratch;
 use crate::util::pipeline::{bounded, Receiver, Sender};
 use crate::util::topk::TopK;
 
@@ -53,8 +61,9 @@ pub fn auto_workers(requested: usize) -> usize {
     }
 }
 
-/// One scan job's shard closure: shard index -> per-test-row heaps.
-type ScanFn = Box<dyn Fn(usize) -> Vec<TopK> + Send + Sync>;
+/// One scan job's shard closure: (shard index, the running worker's
+/// reusable scratch) -> per-test-row heaps.
+type ScanFn = Box<dyn Fn(usize, &mut ScanScratch) -> Vec<TopK> + Send + Sync>;
 
 /// Per-shard results of one query, in shard order.
 type ShardHeaps = Vec<Vec<TopK>>;
@@ -146,6 +155,11 @@ pub struct PoolSnapshot {
     pub tasks_skipped: u64,
     /// Per-worker busy seconds (time inside scan closures).
     pub busy_seconds: Vec<f64>,
+    /// Per-worker scratch-buffer growth events. Saturates after the first
+    /// few tasks (one growth per distinct buffer at its high-water size)
+    /// and then stays flat — steady-state scans allocate nothing per
+    /// chunk (`rust/tests/kernels.rs` pins this).
+    pub scratch_grows: Vec<u64>,
 }
 
 impl PoolSnapshot {
@@ -164,6 +178,7 @@ pub struct ScanPool {
     task_rx: Arc<Receiver<Task>>,
     metrics: Arc<PoolMetrics>,
     busy: Arc<Vec<AtomicU64>>,
+    scratch_grows: Arc<Vec<AtomicU64>>,
     n_workers: usize,
     next_query: AtomicU64,
 }
@@ -178,6 +193,8 @@ impl ScanPool {
         let metrics = Arc::new(PoolMetrics::default());
         let busy: Arc<Vec<AtomicU64>> =
             Arc::new((0..n_workers).map(|_| AtomicU64::new(0)).collect());
+        let scratch_grows: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_workers).map(|_| AtomicU64::new(0)).collect());
         let (job_tx, job_rx) = bounded::<Arc<JobInner>>(64);
         let (task_tx, task_rx) = bounded::<Task>((n_workers * 2).max(4));
         let task_rx = Arc::new(task_rx);
@@ -191,12 +208,18 @@ impl ScanPool {
         for w in 0..n_workers {
             let rx = task_rx.clone();
             let busy = busy.clone();
+            let grows = scratch_grows.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("scan-pool-{w}"))
                     .spawn(move || {
+                        // Worker-lifetime scratch: the kernels' score
+                        // buffers warm up once and are reused by every
+                        // task this worker ever runs.
+                        let mut scratch = ScanScratch::new();
                         while let Some((job, si)) = rx.recv() {
-                            run_task(&job, si, &busy[w]);
+                            run_task(&job, si, &busy[w], &mut scratch);
+                            grows[w].store(scratch.grows(), Ordering::Relaxed);
                         }
                     })
                     .expect("spawn scan pool worker"),
@@ -208,6 +231,7 @@ impl ScanPool {
             task_rx,
             metrics,
             busy,
+            scratch_grows,
             n_workers,
             next_query: AtomicU64::new(0),
         }
@@ -221,10 +245,24 @@ impl ScanPool {
     /// Admit one query: `scan(shard_idx)` will be called once per shard in
     /// `0..n_shards`, possibly concurrently and interleaved with other
     /// queries' tasks. Returns immediately; [`PendingScan::wait`] blocks
-    /// for the per-shard heaps (shard order).
+    /// for the per-shard heaps (shard order). Scratch-oblivious
+    /// convenience over [`submit_with_scratch`](Self::submit_with_scratch)
+    /// (which the scan engines use to reach the zero-alloc kernels).
     pub fn submit<F>(&self, n_shards: usize, scan: F) -> Result<PendingScan>
     where
         F: Fn(usize) -> Vec<TopK> + Send + Sync + 'static,
+    {
+        self.submit_with_scratch(n_shards, move |si, _scratch| scan(si))
+    }
+
+    /// Admit one query whose scan closure receives the running worker's
+    /// per-worker reusable [`ScanScratch`] alongside the shard index —
+    /// the serving path's entry point: kernels write into the leased
+    /// buffers, so a warm pool's scan loop performs no per-chunk heap
+    /// allocation.
+    pub fn submit_with_scratch<F>(&self, n_shards: usize, scan: F) -> Result<PendingScan>
+    where
+        F: Fn(usize, &mut ScanScratch) -> Vec<TopK> + Send + Sync + 'static,
     {
         let query_id = self.next_query.fetch_add(1, Ordering::Relaxed);
         let (done_tx, done_rx) = bounded::<Result<ShardHeaps>>(1);
@@ -271,6 +309,11 @@ impl ScanPool {
                 .busy
                 .iter()
                 .map(|b| b.load(Ordering::Relaxed) as f64 / 1e9)
+                .collect(),
+            scratch_grows: self
+                .scratch_grows
+                .iter()
+                .map(|g| g.load(Ordering::Relaxed))
                 .collect(),
         }
     }
@@ -336,14 +379,14 @@ fn dispatch(job_rx: Receiver<Arc<JobInner>>, task_tx: Sender<Task>) {
 
 /// Run one shard task with panic isolation, then complete the query if
 /// this was its last outstanding task.
-fn run_task(job: &Arc<JobInner>, si: usize, busy: &AtomicU64) {
+fn run_task(job: &Arc<JobInner>, si: usize, busy: &AtomicU64, scratch: &mut ScanScratch) {
     let poisoned = job.failed.lock().unwrap().is_some();
     if poisoned {
         // Query already failed: don't burn pool time on its other shards.
         job.metrics.tasks_skipped.fetch_add(1, Ordering::Relaxed);
     } else {
         let t0 = Instant::now();
-        match catch_unwind(AssertUnwindSafe(|| (job.scan)(si))) {
+        match catch_unwind(AssertUnwindSafe(|| (job.scan)(si, scratch))) {
             Ok(heaps) => {
                 job.slots.lock().unwrap()[si] = Some(heaps);
                 job.metrics.tasks_completed.fetch_add(1, Ordering::Relaxed);

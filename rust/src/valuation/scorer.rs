@@ -1,11 +1,13 @@
 //! Query engine over a finalized gradient store.
 
+use std::borrow::Cow;
 use std::cell::{Ref, RefCell};
 
 use anyhow::Result;
 
 use crate::hessian::Preconditioner;
-use crate::linalg::{dot, Matrix};
+use crate::linalg::kernels::{self, matmul_t_into};
+use crate::linalg::{Matrix, ScanScratch};
 use crate::runtime::literal::{f32_lit, to_f32_vec};
 use crate::runtime::Runtime;
 use crate::store::GradStore;
@@ -41,11 +43,15 @@ pub struct QueryEngine<'a> {
     /// natively.
     pub use_hlo: bool,
     /// Scan chunk length (the manifest's `train_chunk` when a runtime is
-    /// attached).
+    /// attached; 0 = derive per query so chunk + test block fit L2).
     chunk_len: usize,
     /// Lazily computed self-influence of every stored train row
     /// (RelatIF denominators), cached across queries.
     self_inf: RefCell<Option<Vec<f32>>>,
+    /// Reusable kernel scratch: the engine is single-threaded per query,
+    /// so one scratch serves every chunk of every query — zero per-chunk
+    /// allocation, same contract as the pool workers'.
+    scratch: RefCell<ScanScratch>,
 }
 
 impl<'a> QueryEngine<'a> {
@@ -57,12 +63,14 @@ impl<'a> QueryEngine<'a> {
             use_hlo: true,
             chunk_len: rt.manifest.train_chunk.max(1),
             self_inf: RefCell::new(None),
+            scratch: RefCell::new(ScanScratch::new()),
         }
     }
 
     /// Runtime-free engine: native scoring only. The oracle the parallel
     /// scan engine is verified against, and the path tests use without
-    /// artifacts.
+    /// artifacts. `chunk_len` 0 derives the chunk per query
+    /// ([`kernels::auto_chunk_len`]).
     pub fn new_native(
         store: &'a GradStore,
         precond: &'a Preconditioner,
@@ -73,25 +81,38 @@ impl<'a> QueryEngine<'a> {
             store,
             precond,
             use_hlo: false,
-            chunk_len: chunk_len.max(1),
+            chunk_len,
             self_inf: RefCell::new(None),
+            scratch: RefCell::new(ScanScratch::new()),
         }
     }
 
-    /// Self-influence of each stored row (computed chunk-wise once, then
-    /// served from the cache — no per-query clone).
+    /// Scan chunk for an nt-row query: the explicit knob, or the L2-fit
+    /// derivation when the knob is 0.
+    fn resolved_chunk_len(&self, nt: usize) -> usize {
+        if self.chunk_len != 0 {
+            self.chunk_len
+        } else {
+            kernels::auto_chunk_len(self.store.k(), nt.max(1), self.store.k() * 4)
+        }
+    }
+
+    /// Self-influence of each stored row (computed chunk-wise once through
+    /// the batched kernel path, then served from the cache — no per-query
+    /// clone).
     pub fn train_self_influences(&self) -> Ref<'_, [f32]> {
         if self.self_inf.borrow().is_none() {
             let k = self.store.k();
             let rows = self.store.rows();
+            let chunk_len = super::parallel::resolve_chunk_len_self_inf(self.chunk_len, k);
+            let mut scratch = self.scratch.borrow_mut();
             let mut out = Vec::with_capacity(rows);
             let mut at = 0usize;
             while at < rows {
-                let len = self.chunk_len.min(rows - at);
+                let len = chunk_len.min(rows - at);
                 let chunk = self.store.chunk(at, len);
-                for r in 0..len {
-                    out.push(self.precond.self_influence(&chunk[r * k..(r + 1) * k]));
-                }
+                let applied = scratch.aux_buf(len * k);
+                self.precond.self_influences_into(chunk, len, applied, &mut out);
                 at += len;
             }
             *self.self_inf.borrow_mut() = Some(out);
@@ -99,9 +120,19 @@ impl<'a> QueryEngine<'a> {
         Ref::map(self.self_inf.borrow(), |o| o.as_deref().unwrap())
     }
 
-    /// Score one chunk of stored rows against preconditioned test rows.
-    /// `pre_rows` is row-major [nt, k]. Returns row-major [nt, len].
-    fn score_chunk(&self, pre_rows: &[f32], nt: usize, start: usize, len: usize) -> Result<Vec<f32>> {
+    /// Score one chunk of stored rows against preconditioned test rows:
+    /// row-major [nt, len]. The native path writes the engine scratch in
+    /// place (no per-chunk allocation) and borrows it; the HLO path hands
+    /// back the runtime's decoded buffer as-is (its allocation is
+    /// unavoidable — copying it into scratch would only add work).
+    fn score_chunk_into<'s>(
+        &self,
+        pre_rows: &[f32],
+        nt: usize,
+        start: usize,
+        len: usize,
+        scratch: &'s mut ScanScratch,
+    ) -> Result<Cow<'s, [f32]>> {
         let k = self.store.k();
         let chunk = self.store.chunk(start, len);
         if self.use_hlo {
@@ -112,13 +143,16 @@ impl<'a> QueryEngine<'a> {
                         "score",
                         &[f32_lit(&[nt, k], pre_rows)?, f32_lit(&[len, k], chunk)?],
                     )?;
-                    return Ok(to_f32_vec(&out[0])?);
+                    return Ok(Cow::Owned(to_f32_vec(&out[0])?));
                 }
             }
         }
-        // Native fallback (also used by tests as an oracle) — operates on
-        // the mmap chunk in place, no copies.
-        Ok(crate::linalg::matrix::matmul_t_slices(pre_rows, nt, chunk, len, k))
+        // Native fallback (also the oracle the parallel engines are
+        // verified against) — the shared scan kernel, writing the leased
+        // buffer in place: no copies, no per-chunk allocation.
+        let buf = scratch.score_buf(nt * len);
+        matmul_t_into(pre_rows, nt, chunk, len, k, buf);
+        Ok(Cow::Borrowed(buf))
     }
 
     /// Full scan: top-k most valuable train examples per test row.
@@ -142,7 +176,8 @@ impl<'a> QueryEngine<'a> {
         let selfs: Option<&[f32]> = selfs_guard.as_deref();
         let mut heaps: Vec<TopK> = (0..nt).map(|_| TopK::new(topk)).collect();
         let rows = self.store.rows();
-        let chunk_len = self.chunk_len;
+        let chunk_len = self.resolved_chunk_len(nt);
+        let mut scratch = self.scratch.borrow_mut();
         let mut at = 0usize;
         while at < rows {
             let len = chunk_len.min(rows - at);
@@ -150,7 +185,7 @@ impl<'a> QueryEngine<'a> {
             if at + len < rows {
                 self.store.prefetch(at + len, chunk_len.min(rows - at - len));
             }
-            let scores = self.score_chunk(&pre, nt, at, len)?;
+            let scores = self.score_chunk_into(&pre, nt, at, len, &mut scratch)?;
             for t in 0..nt {
                 let heap = &mut heaps[t];
                 let srow = &scores[t * len..(t + 1) * len];
@@ -185,7 +220,8 @@ impl<'a> QueryEngine<'a> {
         let selfs: Option<&[f32]> = selfs_guard.as_deref();
         let rows = self.store.rows();
         let mut out = Matrix::zeros(nt, rows);
-        let chunk_len = self.chunk_len;
+        let chunk_len = self.resolved_chunk_len(nt);
+        let mut scratch = self.scratch.borrow_mut();
         let mut at = 0usize;
         while at < rows {
             let len = chunk_len.min(rows - at);
@@ -194,7 +230,7 @@ impl<'a> QueryEngine<'a> {
             if at + len < rows {
                 self.store.prefetch(at + len, chunk_len.min(rows - at - len));
             }
-            let scores = self.score_chunk(&pre, nt, at, len)?;
+            let scores = self.score_chunk_into(&pre, nt, at, len, &mut scratch)?;
             for t in 0..nt {
                 for j in 0..len {
                     // RelatIF division in f64, exactly as `query` does —
@@ -212,10 +248,12 @@ impl<'a> QueryEngine<'a> {
         Ok(out)
     }
 
-    /// Influence of a single (test, train) pair straight from rows.
+    /// Influence of a single (test, train) pair straight from rows —
+    /// kernel dot, so it agrees bitwise with the scan's cell for the same
+    /// pair.
     pub fn pair_influence(&self, test_row: &[f32], train_idx: usize) -> f32 {
         let pre = self.precond.apply(test_row);
-        dot(&pre, self.store.chunk(train_idx, 1))
+        kernels::dot_f32(&pre, self.store.chunk(train_idx, 1))
     }
 }
 

@@ -38,12 +38,15 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::metrics::Metrics;
 use crate::hessian::Preconditioner;
-use crate::linalg::dot;
-use crate::store::quant::{quantize_rows, scan_scores_q8, QuantShardedStore};
+use crate::linalg::kernels::{auto_chunk_len, dot_f32, scan_q8_into};
+use crate::linalg::ScanScratch;
+use crate::store::quant::{blocks_of, quantize_rows, QuantShardedStore};
 use crate::store::ShardedStore;
 use crate::util::topk::TopK;
 
-use super::parallel::{cached_self_influences, resolve_workers, scatter_gather};
+use super::parallel::{
+    cached_self_influences, resolve_chunk_len_self_inf, resolve_workers, scatter_gather,
+};
 use super::pool::{ScanHandle, ScanPool};
 use super::scorer::{Normalization, QueryResult};
 
@@ -53,7 +56,10 @@ pub struct TwoStageConfig {
     /// Worker threads for the stage-1 shard fan-out; 0 = one per core.
     /// Ignored when a [`ScanPool`] is attached (the pool is authoritative).
     pub workers: usize,
-    /// Rows scored per chunk within a shard.
+    /// Rows scored per chunk within a shard; 0 (the default) derives the
+    /// chunk from the query shape and the int8 row size so one quantized
+    /// chunk + the test block fit L2 ([`auto_chunk_len`]) — quantized rows
+    /// are ~4x smaller, so auto chunks run ~4x longer than the f32 scan's.
     pub chunk_len: usize,
     /// Stage-1 candidate pool per test row, as a multiple of the requested
     /// top-k (clamped to at least 1; pools never exceed the corpus).
@@ -62,7 +68,7 @@ pub struct TwoStageConfig {
 
 impl Default for TwoStageConfig {
     fn default() -> Self {
-        TwoStageConfig { workers: 0, chunk_len: 1024, rescore_factor: 4 }
+        TwoStageConfig { workers: 0, chunk_len: 0, rescore_factor: 4 }
     }
 }
 
@@ -117,8 +123,10 @@ impl TwoStageEngine {
         self
     }
 
+    /// Override the stage-1 scan chunk length (rows per kernel call); 0
+    /// restores the auto derivation (int8 chunk + test block fit L2).
     pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
-        self.cfg.chunk_len = chunk_len.max(1);
+        self.cfg.chunk_len = chunk_len;
         self
     }
 
@@ -166,7 +174,7 @@ impl TwoStageEngine {
             &self.exact,
             &self.precond,
             resolve_workers(self.cfg.workers, self.exact.n_shards()),
-            self.cfg.chunk_len.max(1),
+            resolve_chunk_len_self_inf(self.cfg.chunk_len, self.exact.k()),
         )
     }
 
@@ -216,7 +224,16 @@ impl TwoStageEngine {
             ScanHandle::Ready(Vec::new())
         } else {
             let (t_codes, t_scales) = quantize_rows(&pre, nt, k);
-            let chunk_len = self.cfg.chunk_len.max(1);
+            // Auto chunks size to the int8 row footprint (codes + scales).
+            let q8_row_bytes = k + blocks_of(k) * 4;
+            let chunk_len = if self.cfg.chunk_len != 0 {
+                self.cfg.chunk_len
+            } else {
+                auto_chunk_len(k, nt, q8_row_bytes)
+            };
+            if let Some(m) = &self.metrics {
+                m.scan_chunk_len.store(chunk_len as u64, std::sync::atomic::Ordering::Relaxed);
+            }
             match &self.pool {
                 Some(pool) => {
                     let quant = self.quant.clone();
@@ -224,19 +241,23 @@ impl TwoStageEngine {
                     let selfs = selfs.clone();
                     let t_codes = Arc::new(t_codes);
                     let t_scales = Arc::new(t_scales);
-                    ScanHandle::Pool(pool.submit(self.quant.n_shards(), move |si| {
-                        scan_shard_q8(
-                            &quant,
-                            si,
-                            &t_codes,
-                            &t_scales,
-                            nt,
-                            pool_size,
-                            selfs.as_ref().map(|s| s.as_slice()),
-                            chunk_len,
-                            metrics.as_deref(),
-                        )
-                    })?)
+                    ScanHandle::Pool(pool.submit_with_scratch(
+                        self.quant.n_shards(),
+                        move |si, scratch| {
+                            scan_shard_q8(
+                                &quant,
+                                si,
+                                &t_codes,
+                                &t_scales,
+                                nt,
+                                pool_size,
+                                selfs.as_ref().map(|s| s.as_slice()),
+                                chunk_len,
+                                metrics.as_deref(),
+                                scratch,
+                            )
+                        },
+                    )?)
                 }
                 None => {
                     let quant = &self.quant;
@@ -244,9 +265,24 @@ impl TwoStageEngine {
                     let tc: &[i8] = &t_codes;
                     let ts: &[f32] = &t_scales;
                     let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
-                    ScanHandle::Ready(scatter_gather(self.workers(), quant.n_shards(), &|si| {
-                        scan_shard_q8(quant, si, tc, ts, nt, pool_size, selfs_ref, chunk_len, met)
-                    }))
+                    ScanHandle::Ready(scatter_gather(
+                        self.workers(),
+                        quant.n_shards(),
+                        &|si, scratch| {
+                            scan_shard_q8(
+                                quant,
+                                si,
+                                tc,
+                                ts,
+                                nt,
+                                pool_size,
+                                selfs_ref,
+                                chunk_len,
+                                met,
+                                scratch,
+                            )
+                        },
+                    ))
                 }
             }
         };
@@ -313,7 +349,10 @@ impl PendingTwoStage {
             let mut heap = TopK::new(self.topk.max(1));
             for g in cand {
                 let g = g as usize;
-                let s = dot(pre_t, self.exact.row(g)) as f64;
+                // Kernel dot: the same per-pair summation discipline as
+                // the sequential scan's chunk kernel, which is what keeps
+                // full-coverage pools bit-identical to the exact engine.
+                let s = dot_f32(pre_t, self.exact.row(g)) as f64;
                 let s = match selfs {
                     Some(si) => s / (si[g].max(0.0) as f64).sqrt().max(1e-12),
                     None => s,
@@ -332,7 +371,8 @@ impl PendingTwoStage {
 }
 
 /// Stage-1 scan of one quantized shard: per-test-row candidate pools of
-/// (approximate score, GLOBAL row index).
+/// (approximate score, GLOBAL row index). `scratch` holds the score
+/// buffer between chunks — no per-chunk allocation.
 #[allow(clippy::too_many_arguments)]
 fn scan_shard_q8(
     quant: &QuantShardedStore,
@@ -344,6 +384,7 @@ fn scan_shard_q8(
     selfs: Option<&[f32]>,
     chunk_len: usize,
     metrics: Option<&Metrics>,
+    scratch: &mut ScanScratch,
 ) -> Vec<TopK> {
     let t0 = Instant::now();
     let k = quant.k();
@@ -357,7 +398,8 @@ fn scan_shard_q8(
         if at + len < rows {
             shard.prefetch(at + len, chunk_len.min(rows - at - len));
         }
-        let scores = scan_scores_q8(
+        let scores = scratch.score_buf(nt * len);
+        scan_q8_into(
             t_codes,
             t_scales,
             nt,
@@ -365,6 +407,7 @@ fn scan_shard_q8(
             shard.scales_chunk(at, len),
             len,
             k,
+            scores,
         );
         for (t, heap) in heaps.iter_mut().enumerate() {
             let srow = &scores[t * len..(t + 1) * len];

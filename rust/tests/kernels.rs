@@ -1,0 +1,274 @@
+//! Scan-kernel subsystem tests (artifact-free).
+//!
+//! Load-bearing properties:
+//! 1. The dispatched f32 kernel tracks the naive single-accumulator
+//!    reference within FP-reassociation tolerance over random shapes,
+//!    including ragged tails (k not a multiple of the 8-wide unroll) and
+//!    shapes smaller than a register tile.
+//! 2. Every f32 output cell is BITWISE the standalone kernel dot of its
+//!    two rows — independent of tile position, output shape, and chunk
+//!    split. This is what keeps sequential/parallel/two-stage engines
+//!    bit-identical to each other however the scan is carved up.
+//! 3. The int8 kernel is EXACTLY (bit-for-bit) the `dot_q8` reference on
+//!    every arm: block sums are exact i32, the scale combine order is
+//!    fixed.
+//! 4. Steady-state scans through a warm `ScanPool` stop growing their
+//!    per-worker scratch — the zero-alloc-per-chunk contract.
+//! 5. Auto-derived chunk lengths (`chunk_len = 0`) serve bit-identical
+//!    results to any explicit chunking.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use logra::hessian::BlockHessian;
+use logra::linalg::kernels::{
+    self, dot_f32, dot_f32_scalar, matmul_t_into, matmul_t_scalar_into, scan_q8_into,
+    scan_q8_scalar_into,
+};
+use logra::linalg::matrix::matmul_t_slices;
+use logra::prop_assert;
+use logra::store::quant::{blocks_of, dot_q8, quantize_rows};
+use logra::store::{shard_store, GradStore, GradStoreWriter, ShardedStore};
+use logra::util::proptest::check;
+use logra::util::rng::Pcg32;
+use logra::valuation::{Normalization, ParallelQueryEngine, QueryEngine, ScanPool};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-kernels-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_store(dir: &Path, n: usize, k: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let mut w = GradStoreWriter::create(dir, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    rows
+}
+
+#[test]
+fn prop_f32_kernel_tracks_naive_reference() {
+    check("kernel-f32-vs-naive", 12, |g| {
+        // Shapes deliberately straddle the tile (4x2) and unroll (8)
+        // boundaries: m,n down to 1, k exercising ragged tails.
+        let m = 1 + g.int_in(0, 9);
+        let n = 1 + g.int_in(0, 40);
+        let k = 1 + g.int_in(0, 200);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; n * k];
+        g.rng.fill_normal(&mut a, 1.0);
+        g.rng.fill_normal(&mut b, 1.0);
+        let want = matmul_t_slices(&a, m, &b, n, k);
+        let mut got = vec![0.0f32; m * n];
+        matmul_t_into(&a, m, &b, n, k, &mut got);
+        let mut got_scalar = vec![0.0f32; m * n];
+        matmul_t_scalar_into(&a, m, &b, n, k, &mut got_scalar);
+        for idx in 0..m * n {
+            // Reassociation moves the result by O(k) ulps, not more.
+            let tol = 1e-4 * (1.0 + want[idx].abs() + (k as f32).sqrt());
+            prop_assert!(
+                (got[idx] - want[idx]).abs() <= tol,
+                "dispatched cell {idx} of ({m},{n},{k}): {} vs naive {}",
+                got[idx],
+                want[idx]
+            );
+            prop_assert!(
+                (got_scalar[idx] - want[idx]).abs() <= tol,
+                "scalar cell {idx} of ({m},{n},{k}): {} vs naive {}",
+                got_scalar[idx],
+                want[idx]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f32_cells_are_position_independent() {
+    check("kernel-f32-cell-purity", 12, |g| {
+        let m = 1 + g.int_in(0, 7);
+        let n = 1 + g.int_in(0, 23);
+        let k = 1 + g.int_in(0, 130);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; n * k];
+        g.rng.fill_normal(&mut a, 1.0);
+        g.rng.fill_normal(&mut b, 1.0);
+        let mut got = vec![0.0f32; m * n];
+        matmul_t_into(&a, m, &b, n, k, &mut got);
+        for i in 0..m {
+            for j in 0..n {
+                let d = dot_f32(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                prop_assert!(
+                    got[i * n + j].to_bits() == d.to_bits(),
+                    "cell ({i},{j}) of ({m},{n},{k}) != standalone dot"
+                );
+            }
+        }
+        // Chunk-split invariance: scoring the same rows in two arbitrary
+        // column chunks reproduces the one-shot scores bitwise.
+        if n >= 2 {
+            let split = 1 + g.rng.below_usize(n - 1);
+            let mut left = vec![0.0f32; m * split];
+            let mut right = vec![0.0f32; m * (n - split)];
+            matmul_t_into(&a, m, &b[..split * k], split, k, &mut left);
+            matmul_t_into(&a, m, &b[split * k..], n - split, k, &mut right);
+            for i in 0..m {
+                for j in 0..n {
+                    let v = if j < split {
+                        left[i * split + j]
+                    } else {
+                        right[i * (n - split) + (j - split)]
+                    };
+                    prop_assert!(
+                        v.to_bits() == got[i * n + j].to_bits(),
+                        "chunk split at {split} moved cell ({i},{j}) of ({m},{n},{k})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_q8_kernel_bit_identical_to_dot_q8_reference() {
+    check("kernel-q8-exactness", 12, |g| {
+        let nt = 1 + g.int_in(0, 7);
+        let len = 1 + g.int_in(0, 30);
+        // k straddles the 64-wide block: partial blocks, exact multiples,
+        // and sub-block rows all occur.
+        let k = 1 + g.int_in(0, 300);
+        let blocks = blocks_of(k);
+        let mut a = vec![0.0f32; nt * k];
+        let mut b = vec![0.0f32; len * k];
+        g.rng.fill_normal(&mut a, 2.0);
+        g.rng.fill_normal(&mut b, 2.0);
+        let (ac, asc) = quantize_rows(&a, nt, k);
+        let (bc, bsc) = quantize_rows(&b, len, k);
+        let mut got = vec![0.0f32; nt * len];
+        scan_q8_into(&ac, &asc, nt, &bc, &bsc, len, k, &mut got);
+        let mut got_scalar = vec![0.0f32; nt * len];
+        scan_q8_scalar_into(&ac, &asc, nt, &bc, &bsc, len, k, &mut got_scalar);
+        for t in 0..nt {
+            for j in 0..len {
+                let want = dot_q8(
+                    &ac[t * k..(t + 1) * k],
+                    &asc[t * blocks..(t + 1) * blocks],
+                    &bc[j * k..(j + 1) * k],
+                    &bsc[j * blocks..(j + 1) * blocks],
+                );
+                prop_assert!(
+                    got[t * len + j].to_bits() == want.to_bits(),
+                    "dispatched q8 ({t},{j}) of ({nt},{len},{k}) != dot_q8"
+                );
+                prop_assert!(
+                    got_scalar[t * len + j].to_bits() == want.to_bits(),
+                    "scalar q8 ({t},{j}) of ({nt},{len},{k}) != dot_q8"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scalar_and_dispatched_dots_agree_within_tolerance() {
+    // The arms may round differently (FMA fuses the multiply), but they
+    // must describe the same mathematical dot.
+    let mut rng = Pcg32::seeded(29);
+    for &k in &[1usize, 7, 8, 9, 63, 64, 65, 192, 777] {
+        let mut a = vec![0.0f32; k];
+        let mut b = vec![0.0f32; k];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let d = dot_f32(&a, &b);
+        let s = dot_f32_scalar(&a, &b);
+        let tol = 1e-4 * (1.0 + s.abs() + (k as f32).sqrt());
+        assert!((d - s).abs() <= tol, "k={k}: dispatched {d} vs scalar {s}");
+    }
+}
+
+#[test]
+fn warm_pool_scratch_stops_growing() {
+    // The zero-alloc contract at the serving level: once the pool is
+    // warm, further queries must not grow any worker's scratch.
+    let k = 24;
+    let n = 400;
+    let src = tmpdir("pool-scratch-src");
+    let mut rng = Pcg32::seeded(31);
+    let rows = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("pool-scratch-sharded");
+    shard_store(&src, &sharded, 4).unwrap();
+    let store = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let mut hess = BlockHessian::single_block(k);
+    hess.accumulate(&rows, n);
+    let precond = Arc::new(hess.preconditioner(0.1).unwrap());
+    let workers = 2;
+    let pool = Arc::new(ScanPool::spawn(workers));
+    let engine = ParallelQueryEngine::new(store, precond)
+        .with_chunk_len(32) // 400 rows / 4 shards / 32 = multi-chunk shards
+        .with_pool(pool.clone());
+    let mut test = vec![0.0f32; 2 * k];
+    rng.fill_normal(&mut test, 1.0);
+
+    // Warmup: enough queries that every worker has seen the peak lease.
+    for _ in 0..8 {
+        engine.query(&test, 2, 5, Normalization::None).unwrap();
+    }
+    let warm: u64 = pool.snapshot().scratch_grows.iter().sum();
+    assert!(
+        warm <= 2 * workers as u64,
+        "warmup grew scratch {warm} times across {workers} workers"
+    );
+    for _ in 0..20 {
+        engine.query(&test, 2, 5, Normalization::None).unwrap();
+    }
+    let after: u64 = pool.snapshot().scratch_grows.iter().sum();
+    assert_eq!(after, warm, "steady-state queries grew worker scratch");
+    pool.shutdown();
+}
+
+#[test]
+fn auto_chunk_len_serves_bit_identical_results() {
+    // chunk_len = 0 (the new default) derives an L2-sized chunk; results
+    // must be bitwise what any explicit chunking produces.
+    let k = 18;
+    let n = 500;
+    let src = tmpdir("auto-chunk-src");
+    let mut rng = Pcg32::seeded(37);
+    let rows = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("auto-chunk-sharded");
+    shard_store(&src, &sharded, 3).unwrap();
+    let store = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let single = GradStore::open(&src).unwrap();
+    let mut hess = BlockHessian::single_block(k);
+    hess.accumulate(&rows, n);
+    let precond = Arc::new(hess.preconditioner(0.1).unwrap());
+    let mut test = vec![0.0f32; 3 * k];
+    rng.fill_normal(&mut test, 1.0);
+
+    for norm in [Normalization::None, Normalization::RelatIf] {
+        let seq_explicit = QueryEngine::new_native(&single, &precond, 37);
+        let want = seq_explicit.query(&test, 3, 8, norm).unwrap();
+        let seq_auto = QueryEngine::new_native(&single, &precond, 0);
+        let got = seq_auto.query(&test, 3, 8, norm).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.top, b.top, "sequential auto-chunk diverged (norm {norm:?})");
+        }
+        let par_auto = ParallelQueryEngine::new(store.clone(), precond.clone()).with_workers(2);
+        let got = par_auto.query(&test, 3, 8, norm).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.top, b.top, "parallel auto-chunk diverged (norm {norm:?})");
+        }
+    }
+}
+
+#[test]
+fn kernel_arm_reports_a_name() {
+    let arm = kernels::kernel_arm();
+    assert!(matches!(arm.name(), "avx2+fma" | "scalar"));
+}

@@ -36,8 +36,13 @@ import json
 import os
 import sys
 
-# Metrics gated against the committed baseline (higher is better).
+# Metrics gated against the committed baseline (higher is better). The
+# kernel_* keys gate the scan microkernels directly (no store/pool
+# overhead), so a kernel-level regression trips even if engine-level
+# noise masks it.
 GATED_KEYS = [
+    "kernel_f32_rows_per_s",
+    "kernel_q8_rows_per_s",
     "f32_rows_per_s",
     "quant_rows_per_s",
     "two_stage_rows_per_s",
