@@ -25,7 +25,8 @@ use logra::util::bench::{bench, report_metric, BenchOpts};
 use logra::util::rng::Pcg32;
 use logra::util::topk::TopK;
 use logra::valuation::{
-    Normalization, ParallelQueryEngine, QueryEngine, ScanPool, TwoStageEngine,
+    BackendConfig, Normalization, ParallelQueryEngine, QueryEngine, QueryRequest, ScanBackend,
+    ScanPool, TwoStageEngine,
 };
 
 fn main() {
@@ -201,15 +202,17 @@ fn main() {
         rng.fill_normal(&mut test, 1.0);
         let mut baseline = None;
         for workers in [1usize, 2, 4] {
-            let engine = ParallelQueryEngine::new(store.clone(), precond.clone())
-                .with_workers(workers)
-                .with_chunk_len(512);
+            let engine = ParallelQueryEngine::new(
+                store.clone(),
+                precond.clone(),
+                BackendConfig { workers, chunk_len: 512, ..Default::default() },
+            );
             let res = bench(
                 &format!("store.parallel_scan.w{workers}"),
                 BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 30.0 },
                 || {
                     let out = engine
-                        .query(&test, nt, 10, Normalization::None)
+                        .query(QueryRequest::gradients(test.clone(), nt, 10))
                         .unwrap();
                     std::hint::black_box(&out);
                 },
@@ -257,16 +260,25 @@ fn main() {
         // int8 coarse-scan cost.
         let mut ts_means = [0.0f64; 2];
         for (slot, factor) in [(0usize, 1usize), (1, 4)] {
-            let engine = TwoStageEngine::new(quant.clone(), store.clone(), precond.clone())
-                .unwrap()
-                .with_workers(1)
-                .with_chunk_len(512)
-                .with_rescore_factor(factor);
+            let engine = TwoStageEngine::new(
+                quant.clone(),
+                store.clone(),
+                precond.clone(),
+                BackendConfig {
+                    workers: 1,
+                    chunk_len: 512,
+                    rescore_factor: factor,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
             ts_means[slot] = bench(
                 &format!("store.scan_q8.rf{factor}"),
                 BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 30.0 },
                 || {
-                    let out = engine.query(&test, nt, topk, Normalization::None).unwrap();
+                    let out = engine
+                        .query(QueryRequest::gradients(test.clone(), nt, topk))
+                        .unwrap();
                     std::hint::black_box(&out);
                 },
             )
@@ -303,17 +315,17 @@ fn main() {
         let pool_workers = 4usize;
         let queries_per_client = 6usize;
         let pool = Arc::new(ScanPool::spawn(pool_workers));
-        let pooled = Arc::new(
-            ParallelQueryEngine::new(store.clone(), precond.clone())
-                .with_chunk_len(512)
-                .with_pool(pool.clone()),
-        );
+        let pooled = Arc::new(ParallelQueryEngine::new(
+            store.clone(),
+            precond.clone(),
+            BackendConfig { chunk_len: 512, pool: Some(pool.clone()), ..Default::default() },
+        ));
         // Sanity (and warmup): pooled results are bit-identical to the
         // sequential scan, so the throughput numbers measure the real
         // serving path.
         {
             let want = f32_engine.query(&test, nt, topk, Normalization::None).unwrap();
-            let got = pooled.query(&test, nt, topk, Normalization::None).unwrap();
+            let got = pooled.query(QueryRequest::gradients(test.clone(), nt, topk)).unwrap();
             for (a, b) in got.iter().zip(&want) {
                 assert_eq!(a.top, b.top, "pooled scan diverged from sequential");
             }
@@ -326,7 +338,9 @@ fn main() {
                     let test = &test;
                     s.spawn(move || {
                         for _ in 0..queries_per_client {
-                            let out = engine.query(test, nt, topk, Normalization::None).unwrap();
+                            let out = engine
+                                .query(QueryRequest::gradients(test.clone(), nt, topk))
+                                .unwrap();
                             std::hint::black_box(&out);
                         }
                     });
@@ -343,11 +357,11 @@ fn main() {
                 "queries/s",
             );
         }
-        let spawned = Arc::new(
-            ParallelQueryEngine::new(store.clone(), precond.clone())
-                .with_workers(pool_workers)
-                .with_chunk_len(512),
-        );
+        let spawned = Arc::new(ParallelQueryEngine::new(
+            store.clone(),
+            precond.clone(),
+            BackendConfig { workers: pool_workers, chunk_len: 512, ..Default::default() },
+        ));
         let spawn_qps_c8 = run_clients(&spawned, 8);
         report_metric("micro.store.spawn.qps.c8", spawn_qps_c8, "queries/s");
         report_metric(

@@ -14,10 +14,11 @@
 //! Flags: --steps N (default 300) --n-train N (default 2048) --fast
 //! (shrink everything for CI).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use logra::baselines::{EkfacValuator, Valuator};
+use logra::baselines::{EkfacValuator, Valuator as BaselineValuator};
 use logra::coordinator::{projected_grads, run_logging, LoggingOptions};
 use logra::data::corpus::{generate, CorpusSpec, TOPIC_NAMES};
 use logra::hessian::random_projections;
@@ -27,7 +28,7 @@ use logra::model::trainer::Trainer;
 use logra::runtime::Runtime;
 use logra::util::memory::{human_bytes, peak_rss_bytes};
 use logra::util::rng::Pcg32;
-use logra::valuation::{Normalization, QueryEngine};
+use logra::valuation::{Normalization, QueryRequest, Valuator};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -93,9 +94,13 @@ fn main() -> Result<()> {
         human_bytes(rep.peak_rss_bytes)
     );
 
-    // ---- 3. Queries.
-    let precond = hessian.unwrap().preconditioner(0.1)?;
-    let engine = QueryEngine::new(&rt, &store, &precond);
+    // ---- 3. Queries, through the one-call session facade (fabric opened
+    //         once, codec auto-detected, native SIMD scan kernels).
+    let precond = Arc::new(hessian.unwrap().preconditioner(0.1)?);
+    let valuator = Valuator::open(&store_dir)?
+        .preconditioner(precond)
+        .normalization(Normalization::RelatIf)
+        .build()?;
     let n_queries = man.test_batch;
     // Held-out docs (one per topic) + model generations.
     let held = generate(CorpusSpec::new(man.vocab, man.seq_len, n_queries, 4242));
@@ -103,7 +108,7 @@ fn main() -> Result<()> {
     let qidx: Vec<usize> = (0..n_queries).collect();
     let (qg, _) = projected_grads(&rt, &hds, &qidx, &st.params, &proj)?;
     let t1 = Instant::now();
-    let results = engine.query(&qg, n_queries, 10, Normalization::RelatIf)?;
+    let results = valuator.query(QueryRequest::gradients(qg, n_queries, 10))?;
     let scan_secs = t1.elapsed().as_secs_f64();
     let pairs = (n_queries * store.rows()) as f64;
     println!(
@@ -139,7 +144,7 @@ fn main() -> Result<()> {
     };
     let gds = Dataset::Lm(&gen_holder);
     let (gg, _) = projected_grads(&rt, &gds, &[0], &st.params, &proj)?;
-    let gres = engine.query(&gg, 1, 5, Normalization::RelatIf)?;
+    let gres = valuator.query(QueryRequest::gradients(gg, 1, 5))?;
     for &(s, id) in &gres[0].top {
         let d = &corpus.docs[id as usize];
         println!("  [{s:+.3}] doc {id} ({}) {}", TOPIC_NAMES[d.topic], corpus.render(&d.tokens[..12]));

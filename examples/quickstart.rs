@@ -9,6 +9,8 @@
 //! projected Fisher, and asks: "which training documents are most
 //! valuable for this query?"
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use logra::coordinator::{projected_grads, run_logging, LoggingOptions};
 use logra::data::corpus::{generate, CorpusSpec, TOPIC_NAMES};
@@ -17,7 +19,7 @@ use logra::model::dataset::Dataset;
 use logra::model::trainer::Trainer;
 use logra::runtime::Runtime;
 use logra::util::rng::Pcg32;
-use logra::valuation::{Normalization, QueryEngine};
+use logra::valuation::{Normalization, QueryRequest, Valuator};
 
 fn main() -> Result<()> {
     let root = std::env::current_dir()?;
@@ -49,13 +51,18 @@ fn main() -> Result<()> {
         logra::util::memory::human_bytes(report.storage_bytes)
     );
 
-    // 4. Query: value training docs for a held-out document.
-    let precond = hessian.unwrap().preconditioner(0.1)?;
-    let engine = QueryEngine::new(&rt, &store, &precond);
+    // 4. Query: value training docs for a held-out document. One facade
+    //    call opens the fabric (codec auto-detected) and serves top-k.
+    drop(store);
+    let precond = Arc::new(hessian.unwrap().preconditioner(0.1)?);
+    let valuator = Valuator::open(&store_dir)?
+        .preconditioner(precond)
+        .normalization(Normalization::RelatIf)
+        .build()?;
     let query_corpus = generate(CorpusSpec::new(man.vocab, man.seq_len, 4, 777));
     let qds = Dataset::Lm(&query_corpus);
     let (g, _) = projected_grads(&rt, &qds, &[0, 1, 2, 3], &st.params, &proj)?;
-    let results = engine.query(&g, 4, 5, Normalization::RelatIf)?;
+    let results = valuator.query(QueryRequest::gradients(g, 4, 5))?;
     for (qi, res) in results.iter().enumerate() {
         let qt = query_corpus.docs[qi].topic;
         println!("\nquery {qi} (topic {}):", TOPIC_NAMES[qt]);

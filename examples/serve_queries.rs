@@ -145,6 +145,9 @@ fn main() -> Result<()> {
     let s = summarize(&latencies);
     let snap = svc.metrics.snapshot();
     println!("\n-- serving report --");
+    if let Some(kind) = svc.backend_kind() {
+        println!("scan backend       {}", kind.name());
+    }
     println!("requests           {}", latencies.len());
     println!("throughput         {:.1} req/s", latencies.len() as f64 / wall);
     println!(

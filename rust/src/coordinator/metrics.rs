@@ -34,7 +34,8 @@ pub struct Metrics {
     /// Scan chunk length (rows per kernel call) the native engines
     /// RESOLVED for the latest query — the L2-fit auto derivation
     /// (`linalg::kernels::auto_chunk_len`) unless an explicit
-    /// `with_chunk_len` override pinned it. 0 until the first query.
+    /// `BackendConfig::chunk_len` override pinned it. 0 until the first
+    /// query.
     pub scan_chunk_len: AtomicU64,
 }
 

@@ -1,28 +1,27 @@
-//! Valuation service: dynamic request batching over the query engine —
+//! Valuation service: dynamic request batching over the query side —
 //! the serving face of Figure 1 (left top + right).
 //!
 //! PJRT handles are not `Send`, so the service keeps runtime warmup and
 //! gradient extraction inside one worker thread; callers talk to it
 //! through bounded channels. Requests are coalesced up to the artifact's
 //! static `test_batch` shape or until `max_wait` expires — classic dynamic
-//! batching: the HLO score program amortizes its fixed cost over every
-//! query in the batch.
+//! batching: one `logra_log` artifact call amortizes its fixed cost over
+//! every query in the batch.
 //!
-//! The store fabric, preconditioner, and scan pool are shared-ownership
-//! (`Arc`) and built at `spawn` time, BEFORE the worker starts: scans no
-//! longer belong to the worker thread. Scanning dispatches on the store
-//! layout: a plain v1 store keeps the sequential [`QueryEngine`] (HLO
-//! score path — there is nothing to fan out over); a sharded store uses
-//! the parallel scan-and-merge engine; with `quantized_scan` set (plus a
-//! `quant_dir` produced by `logra store quantize`), queries run the
-//! two-stage engine instead. Both parallel paths run on ONE persistent
-//! [`ScanPool`]: the worker admits a scan (`query_async`) and immediately
-//! returns to batching, so up to `max_in_flight` query batches interleave
-//! their shard tasks on the pool's warm workers (no head-of-line blocking
-//! on a large query), while a responder thread completes scans in
-//! admission order and dispatches responses. Results stay bit-identical
-//! to the sequential native scan for every interleaving (the pool's
-//! shard-slot merge discipline; see `valuation::pool`).
+//! Scanning goes through ONE seam: a [`Valuator`] built at `spawn` time
+//! (before the worker exists). The facade opens the store fabric once,
+//! auto-pairs the quantized copy with its exact rescore substrate, spawns
+//! the persistent scan pool when the backend fans out, and validates the
+//! whole configuration with typed [`ValuationError`]s — a bad
+//! `ServiceConfig` fails `spawn`, never a worker thread. The worker
+//! extracts a batch's gradients, admits them with
+//! [`Valuator::query_async`], and immediately returns to batching; up to
+//! `max_in_flight` query batches interleave their shard tasks on the
+//! pool's warm workers while a responder thread completes scans (one
+//! shared [`PendingScores`] handle per batch) in admission order. Results
+//! stay bit-identical to the sequential native scan for every
+//! interleaving (the pool's shard-slot merge discipline; see
+//! `valuation::pool`).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -34,11 +33,10 @@ use crate::coordinator::metrics::Metrics;
 use crate::hessian::BlockHessian;
 use crate::runtime::literal::{f32_lit, i32_lit, to_f32_vec};
 use crate::runtime::Runtime;
-use crate::store::{QuantShardedStore, ShardedStore};
 use crate::util::pipeline::{bounded, Sender};
 use crate::valuation::{
-    Normalization, ParallelQueryEngine, PendingQuery, PendingTwoStage, QueryEngine,
-    QueryResult, ScanPool, TwoStageEngine,
+    Backend, BackendKind, Normalization, PendingScores, PoolMode, QueryRequest, QueryResult,
+    ScanBackend, ScanPool, ValuationError, Valuator,
 };
 
 /// Service construction parameters (everything `Send`).
@@ -53,25 +51,24 @@ pub struct ServiceConfig {
     pub norm: Normalization,
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
-    /// Scan-pool worker threads for SHARDED stores (0 = one per core,
-    /// capped at 16; N = fixed count). The pool spawned at `spawn` time is
-    /// the single authority — `Metrics::pool_workers` reports the resolved
-    /// count. Unsharded v1 stores always use the sequential HLO engine —
-    /// one shard has nothing to fan out over.
+    /// Scan-pool worker threads (0 = one per core, capped at 16; N = fixed
+    /// count). The pool the `Valuator` spawns is the single authority —
+    /// `Metrics::pool_workers` reports the resolved count. Unsharded f32
+    /// stores serve sequentially — one shard has nothing to fan out over.
     pub scan_workers: usize,
-    /// Serve queries through the two-stage engine: int8 coarse scan over
+    /// Serve queries through the two-stage backend: int8 coarse scan over
     /// the quantized copy at `quant_dir`, exact f32 rescore of a
     /// `rescore_factor × topk` candidate pool against `store_dir`.
     pub quantized_scan: bool,
-    /// Stage-1 candidate pool multiplier (≥ 1; larger = higher recall,
-    /// more exact-precision work). Ignored unless `quantized_scan`.
+    /// Stage-1 candidate pool multiplier (must be ≥ 1; larger = higher
+    /// recall, more exact-precision work). Ignored unless `quantized_scan`.
     pub rescore_factor: usize,
     /// Quantized copy of `store_dir` (from `logra store quantize`).
     /// Required when `quantized_scan` is set.
     pub quant_dir: Option<PathBuf>,
-    /// Completion-queue depth for admitted query batches (≥ 1) — the
-    /// batcher blocks once this many completed admissions are waiting on
-    /// the responder. A throttle, not an exact bound: one further batch
+    /// Completion-queue depth for admitted query batches (must be ≥ 1) —
+    /// the batcher blocks once this many completed admissions are waiting
+    /// on the responder. A throttle, not an exact bound: one further batch
     /// can sit in the responder and one in the batcher, so up to
     /// `max_in_flight + 2` batches may interleave shard tasks on the
     /// pool. Higher values overlap gradient extraction of batch N+1 with
@@ -86,29 +83,17 @@ struct ServiceRequest {
     resp: Sender<QueryResult>,
 }
 
-/// Any scan engine behind one admission call. Only the sequential HLO
-/// engine still borrows the runtime; the pool-backed engines own their
-/// stores via `Arc`.
-enum Scanner<'a> {
-    Seq(QueryEngine<'a>),
-    Par(ParallelQueryEngine),
-    Two(TwoStageEngine),
-}
-
 /// A query batch admitted by the worker, completed by the responder.
 struct InFlight {
     reqs: Vec<ServiceRequest>,
-    outcome: Outcome,
+    /// The one shared completion handle every backend returns.
+    pending: PendingScores,
+    /// False when the backend scanned eagerly at admission (sequential
+    /// path) — its scan time was recorded by the worker already.
+    timed: bool,
     submitted: Instant,
     /// rows_scanned delta to record once the scan succeeds.
     rows: u64,
-}
-
-enum Outcome {
-    /// Sequential path — already scanned on the worker thread.
-    Ready(Vec<QueryResult>),
-    Par(PendingQuery),
-    Two(PendingTwoStage),
 }
 
 /// Client handle; cloneable across threads (wrap in `Arc`).
@@ -116,17 +101,42 @@ pub struct ValuationService {
     tx: Option<Sender<ServiceRequest>>,
     handle: Option<std::thread::JoinHandle<Result<()>>>,
     responder: Option<std::thread::JoinHandle<()>>,
-    pool: Option<Arc<ScanPool>>,
+    valuator: Option<Arc<Valuator>>,
     pub metrics: Arc<Metrics>,
     seq_len: usize,
 }
 
 impl ValuationService {
-    /// Open the store fabric, spawn the scan pool and the worker. Store
-    /// and pool errors surface here; artifact errors surface before the
-    /// first query is accepted (the worker signals readiness only after
-    /// warmup).
+    /// Reject configurations that can never serve BEFORE touching disk or
+    /// spawning threads — the typed twin of the validation the `Valuator`
+    /// builder performs on the store side. The returned error downcasts
+    /// from the `anyhow` chain as a [`ValuationError`].
+    fn validate(cfg: &ServiceConfig) -> std::result::Result<(), ValuationError> {
+        if cfg.max_in_flight == 0 {
+            return Err(ValuationError::InvalidConfig(
+                "max_in_flight must be ≥ 1 (completion-queue depth for admitted batches)"
+                    .into(),
+            ));
+        }
+        if cfg.rescore_factor == 0 {
+            return Err(ValuationError::InvalidConfig(
+                "rescore_factor must be ≥ 1 (stage-1 candidate pool multiplier)".into(),
+            ));
+        }
+        if cfg.quantized_scan && cfg.quant_dir.is_none() {
+            return Err(ValuationError::InvalidConfig(
+                "quantized_scan requires quant_dir (run `logra store quantize`)".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Validate the config, build the `Valuator` (store fabric + scan
+    /// pool), and spawn the worker. Configuration and store errors surface
+    /// here, typed; artifact errors surface before the first query is
+    /// accepted (the worker signals readiness only after warmup).
     pub fn spawn(cfg: ServiceConfig) -> Result<Self> {
+        Self::validate(&cfg)?;
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
         let (tx, rx) = bounded::<ServiceRequest>(64);
@@ -135,58 +145,40 @@ impl ValuationService {
         let seq_len = man.seq_len;
         anyhow::ensure!(man.is_lm(), "valuation service currently serves LM queries");
 
-        // Shared-ownership scan substrate, built before the worker exists:
-        // stores, preconditioner, and ONE persistent pool for every scan.
-        let store = Arc::new(ShardedStore::open(&cfg.store_dir)?);
-        // Open (and sanity-check) the quantized companion up front so a
-        // stale copy fails construction, not the first query.
-        let quant: Option<Arc<QuantShardedStore>> = if cfg.quantized_scan {
-            let qdir = cfg.quant_dir.as_ref().ok_or_else(|| {
-                anyhow!("quantized_scan requires quant_dir (run `logra store quantize`)")
-            })?;
-            let q = QuantShardedStore::open(qdir)?;
-            anyhow::ensure!(
-                q.rows() == store.rows() && q.k() == store.k(),
-                "quantized copy {} ({} rows, k={}) does not mirror store {} \
-                 ({} rows, k={}) — re-run `logra store quantize`",
-                qdir.display(),
-                q.rows(),
-                q.k(),
-                cfg.store_dir.display(),
-                store.rows(),
-                store.k()
-            );
-            Some(Arc::new(q))
-        } else {
-            None
-        };
+        // ONE facade call replaces the old store-open / engine-enum /
+        // pool-spawn choreography: `Backend::Auto` on the exact fabric
+        // serves sequential (1 shard) or parallel (sharded) f32 scans;
+        // pointing the facade at the quantized copy (with the exact store
+        // as its rescore companion) serves the two-stage path. The
+        // eigendecomposition happens here, at spawn, like before.
         let precond = Arc::new(cfg.hessian.preconditioner(cfg.damping)?);
-        // The sequential engine serves single-shard f32 stores; everything
-        // else scans through the pool.
-        let pool: Option<Arc<ScanPool>> = if quant.is_some() || store.as_single().is_none() {
-            let p = Arc::new(ScanPool::spawn(cfg.scan_workers));
-            metrics.pool_workers.store(p.workers() as u64, std::sync::atomic::Ordering::Relaxed);
-            Some(p)
+        let builder = if cfg.quantized_scan {
+            Valuator::open(cfg.quant_dir.as_ref().expect("validated above"))?
+                .rescore_store(&cfg.store_dir)
+                .backend(Backend::Quantized { rescore_factor: cfg.rescore_factor })
         } else {
-            None
+            Valuator::open(&cfg.store_dir)?.backend(Backend::Exact)
         };
+        let valuator = Arc::new(
+            builder
+                .preconditioner(precond)
+                .normalization(cfg.norm)
+                .workers(cfg.scan_workers)
+                .metrics(m2.clone())
+                .pool(PoolMode::Auto)
+                .build()?,
+        );
 
         // Responder: completes admitted scans in admission order and
         // dispatches responses — the other half of pipelined admission.
-        let (done_tx, done_rx) = bounded::<InFlight>(cfg.max_in_flight.max(1));
+        let (done_tx, done_rx) = bounded::<InFlight>(cfg.max_in_flight);
         let m3 = metrics.clone();
         let responder = std::thread::Builder::new()
             .name("valuation-responder".into())
             .spawn(move || {
                 while let Some(inflight) = done_rx.recv() {
-                    let InFlight { reqs, outcome, submitted, rows } = inflight;
-                    let timed = !matches!(outcome, Outcome::Ready(_));
-                    let res = match outcome {
-                        Outcome::Ready(results) => Ok(results),
-                        Outcome::Par(pending) => pending.wait(),
-                        Outcome::Two(pending) => pending.wait(),
-                    };
-                    match res {
+                    let InFlight { reqs, pending, timed, submitted, rows } = inflight;
+                    match pending.wait() {
                         Ok(results) => {
                             if timed {
                                 // Admission-to-completion wall time; with
@@ -207,8 +199,9 @@ impl ValuationService {
                         Err(e) => {
                             // Per-batch error isolation: dropping `reqs`
                             // closes the response channels (callers see an
-                            // error); the service keeps serving.
-                            eprintln!("[valuation-service] scan failed: {e:#}");
+                            // error); the service keeps serving — a
+                            // QueryPoisoned loses only its own batch.
+                            eprintln!("[valuation-service] scan failed: {e}");
                         }
                     }
                 }
@@ -216,26 +209,21 @@ impl ValuationService {
             .map_err(|e| anyhow!("spawn responder: {e}"))?;
 
         let (ready_tx, ready_rx) = bounded::<Result<()>>(1);
-        let w_store = store.clone();
-        let w_quant = quant.clone();
-        let w_precond = precond.clone();
-        let w_pool = pool.clone();
+        let w_val = valuator.clone();
         let handle = std::thread::Builder::new()
             .name("valuation-service".into())
             .spawn(move || -> Result<()> {
-                let store = w_store;
-                let quant = w_quant;
-                let precond = w_precond;
-                // Pay the one-time setup (eigendecomposition happened at
-                // spawn; XLA compilation + lazy PJRT init here) BEFORE
-                // signalling readiness, so no request ever observes it as
-                // tail latency (§Perf log).
+                let valuator = w_val;
+                // Pay the one-time setup (XLA compilation + lazy PJRT init)
+                // BEFORE signalling readiness, so no request ever observes
+                // it as tail latency (§Perf log). Scanning is native-kernel
+                // only, so just the gradient program warms up.
                 let setup = (|| -> Result<Runtime> {
                     let rt = Runtime::open(&cfg.artifact_dir)?;
-                    rt.warmup(&["logra_log", "score"])?;
+                    rt.warmup(&["logra_log"])?;
                     // Compilation alone is not enough: the first EXECUTION
-                    // of each program pays lazy PJRT initialization. Run
-                    // both once with dummy inputs.
+                    // pays lazy PJRT initialization. Run once with dummy
+                    // inputs.
                     {
                         let man = &rt.manifest;
                         let p = f32_lit(&[man.n_params], &cfg.params)?;
@@ -243,11 +231,6 @@ impl ValuationService {
                         let zeros_tok = vec![0i32; man.log_batch * man.seq_len];
                         let tok = i32_lit(&[man.log_batch, man.seq_len], &zeros_tok)?;
                         rt.run_ref("logra_log", &[&p, &pr, &tok])?;
-                        let zeros_a = vec![0.0; man.test_batch * man.k_total];
-                        let a = f32_lit(&[man.test_batch, man.k_total], &zeros_a)?;
-                        let zeros_b = vec![0.0; man.train_chunk * man.k_total];
-                        let b = f32_lit(&[man.train_chunk, man.k_total], &zeros_b)?;
-                        rt.run_ref("score", &[&a, &b])?;
                     }
                     Ok(rt)
                 })();
@@ -262,40 +245,11 @@ impl ValuationService {
                         return Err(anyhow!("service setup failed: {msg}"));
                     }
                 };
-                // Native engines derive their scan chunk from the query
-                // shape (chunk + test block sized to fit L2;
-                // `linalg::kernels::auto_chunk_len`) — the resolved value
-                // lands in `Metrics::scan_chunk_len`. Only the HLO score
-                // program is pinned to the manifest's static train_chunk.
-                let engine = match &quant {
-                    // Quantized serving: int8 coarse scan + exact rescore.
-                    // (spawn already validated the copy, so `new` cannot
-                    // fail here in practice.)
-                    Some(q) => Scanner::Two(
-                        TwoStageEngine::new(q.clone(), store.clone(), precond.clone())?
-                            .with_workers(cfg.scan_workers)
-                            .with_chunk_len(0)
-                            .with_rescore_factor(cfg.rescore_factor)
-                            .with_metrics(m2.clone())
-                            .with_pool(w_pool.clone().expect("pool spawned for quantized scan")),
-                    ),
-                    None => match store.as_single() {
-                        Some(single) => {
-                            Scanner::Seq(QueryEngine::new(&rt, single, precond.as_ref()))
-                        }
-                        None => Scanner::Par(
-                            ParallelQueryEngine::new(store.clone(), precond.clone())
-                                .with_workers(cfg.scan_workers)
-                                .with_chunk_len(0)
-                                .with_metrics(m2.clone())
-                                .with_pool(w_pool.clone().expect("pool spawned for sharded store")),
-                        ),
-                    },
-                };
                 let man = &rt.manifest;
-                // Gradient extraction runs at log_batch; scoring at
-                // test_batch. Batch at most min(log_batch, test_batch)
-                // requests so one artifact call covers both shapes.
+                // Gradient extraction runs at log_batch; batch at most
+                // min(log_batch, test_batch) requests so latency stays in
+                // the envelope the artifact was shaped for. (The native
+                // backends themselves are shape-flexible.)
                 let nt = man.test_batch.min(man.log_batch);
                 let lb = man.log_batch;
                 let t = man.seq_len;
@@ -320,7 +274,7 @@ impl ValuationService {
                     // Per-batch error isolation: a failing batch drops its
                     // requesters' response channels (they see an error)
                     // but must never kill the worker.
-                    let admitted = (|| -> Result<Outcome> {
+                    let admitted = (|| -> Result<(PendingScores, bool)> {
                         // Assemble the fixed-shape token batch at the
                         // gradient artifact's log_batch (pad repeats the
                         // last real row).
@@ -338,44 +292,33 @@ impl ValuationService {
                         let tok_lit = i32_lit(&[lb, t], &tokens)?;
                         let out = rt
                             .run_ref("logra_log", &[&params_lit, &proj_lit, &tok_lit])?;
-                        let g_full = to_f32_vec(&out[0])?;
+                        let mut g = to_f32_vec(&out[0])?;
                         Metrics::add_nanos(&m2.grad_nanos, t0.elapsed().as_secs_f64());
-                        // Re-pad the real gradient rows to the scoring
-                        // batch shape (test_batch) for the HLO score path.
-                        let mut g = Vec::with_capacity(nt * k);
-                        for row in 0..nt {
-                            let src = row.min(real - 1);
-                            g.extend_from_slice(&g_full[src * k..(src + 1) * k]);
-                        }
+                        // Drop the padding rows: the native backends are
+                        // shape-flexible, so an underfilled batch scans
+                        // less and per-request metrics stay honest.
+                        g.truncate(real * k);
 
                         let topk = reqs.iter().map(|r| r.topk).max().unwrap_or(1).max(1);
-                        // Only the HLO scorer needs the static test_batch
-                        // shape; the native engines are shape-flexible, so
-                        // drop the padding rows on an underfilled batch —
-                        // less scan work, and per-request metrics
-                        // (rows_scanned, candidates_rescored) stay honest.
-                        match &engine {
-                            Scanner::Seq(e) => {
-                                let t1 = Instant::now();
-                                let results = e.query(&g, nt, topk, cfg.norm)?;
-                                Metrics::add_nanos(&m2.scan_nanos, t1.elapsed().as_secs_f64());
-                                Ok(Outcome::Ready(results))
-                            }
-                            Scanner::Par(e) => Ok(Outcome::Par(
-                                e.query_async(&g[..real * k], real, topk, cfg.norm)?,
-                            )),
-                            Scanner::Two(e) => Ok(Outcome::Two(
-                                e.query_async(&g[..real * k], real, topk, cfg.norm)?,
-                            )),
+                        let t1 = Instant::now();
+                        let pending = valuator
+                            .query_async(QueryRequest::gradients(g, real, topk))?;
+                        let ready = pending.is_ready();
+                        if ready {
+                            // Sequential backend: the scan ran at
+                            // admission, on this thread.
+                            Metrics::add_nanos(&m2.scan_nanos, t1.elapsed().as_secs_f64());
                         }
+                        Ok((pending, ready))
                     })();
                     match admitted {
-                        Ok(outcome) => {
+                        Ok((pending, ready)) => {
                             let inflight = InFlight {
                                 reqs,
-                                outcome,
+                                pending,
+                                timed: !ready,
                                 submitted: Instant::now(),
-                                rows: (store.rows() * real) as u64,
+                                rows: (valuator.rows() * real) as u64,
                             };
                             if done_tx.send(inflight).is_err() {
                                 return Err(anyhow!("responder thread died"));
@@ -399,17 +342,22 @@ impl ValuationService {
             tx: Some(tx),
             handle: Some(handle),
             responder: Some(responder),
-            pool,
+            valuator: Some(valuator),
             metrics,
             seq_len,
         })
     }
 
-    /// The persistent scan pool (None when the sequential engine serves an
+    /// The persistent scan pool (None when the sequential backend serves an
     /// unsharded store) — snapshot it for queue depth, per-worker busy
     /// time, and in-flight query counts.
     pub fn scan_pool(&self) -> Option<&Arc<ScanPool>> {
-        self.pool.as_ref()
+        self.valuator.as_ref().and_then(|v| v.scan_pool())
+    }
+
+    /// Which scan backend `Backend::Auto`/`Exact`/`Quantized` resolved to.
+    pub fn backend_kind(&self) -> Option<BackendKind> {
+        self.valuator.as_ref().map(|v| v.kind())
     }
 
     /// Blocking query: value `tokens` (must be exactly seq_len long).
@@ -440,8 +388,10 @@ impl ValuationService {
         if let Some(r) = self.responder.take() {
             let _ = r.join();
         }
-        if let Some(p) = self.pool.take() {
-            p.shutdown();
+        if let Some(v) = self.valuator.take() {
+            if let Some(p) = v.scan_pool() {
+                p.shutdown();
+            }
         }
         res
     }
@@ -456,8 +406,10 @@ impl Drop for ValuationService {
         if let Some(r) = self.responder.take() {
             let _ = r.join();
         }
-        if let Some(p) = self.pool.take() {
-            p.shutdown();
+        if let Some(v) = self.valuator.take() {
+            if let Some(p) = v.scan_pool() {
+                p.shutdown();
+            }
         }
     }
 }

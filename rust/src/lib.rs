@@ -3,6 +3,57 @@
 //! Rust coordinator (L3) of the three-layer reproduction of Choe et al.,
 //! "What is Your Data Worth to GPT?" (NeurIPS 2025). See DESIGN.md for the
 //! system inventory and experiment index.
+//!
+//! # Quickstart: one-call valuation with [`valuation::Valuator`]
+//!
+//! The query side has ONE public seam: [`valuation::Valuator`] opens a
+//! gradient-store fabric (v1, sharded, or quantized — the codec is
+//! auto-detected from `shards.json`), resolves [`valuation::Backend::Auto`]
+//! to a concrete [`valuation::ScanBackend`], validates the configuration
+//! with typed [`valuation::ValuationError`]s, and answers
+//! `query` / `query_async` / `query_batch` requests whose `topk` and
+//! [`valuation::Normalization`] are set per call:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use logra::hessian::BlockHessian;
+//! use logra::store::GradStoreWriter;
+//! use logra::valuation::{Backend, Normalization, QueryRequest, Valuator};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // A tiny store: 3 projected "gradient" rows of width 4.
+//! let dir = std::env::temp_dir().join("logra-doc-quickstart");
+//! let _ = std::fs::remove_dir_all(&dir);
+//! let k = 4;
+//! let rows: Vec<f32> = vec![
+//!     1.0, 0.0, 0.0, 0.0, //
+//!     0.0, 1.0, 0.0, 0.0, //
+//!     0.9, 0.1, 0.0, 0.0, //
+//! ];
+//! let mut w = GradStoreWriter::create(&dir, k)?;
+//! w.append(&[10, 11, 12], &rows)?;
+//! w.finalize()?;
+//!
+//! // Fit the projected Fisher from the stored rows, open the fabric, ask
+//! // which stored rows are most valuable for a query gradient.
+//! let mut hess = BlockHessian::single_block(k);
+//! hess.accumulate(&rows, 3);
+//! let valuator = Valuator::open(&dir)?
+//!     .backend(Backend::Auto)
+//!     .preconditioner(Arc::new(hess.preconditioner(0.1)?))
+//!     .normalization(Normalization::RelatIf)
+//!     .build()?;
+//! let results = valuator.query(QueryRequest::gradients(vec![1.0, 0.0, 0.0, 0.0], 1, 2))?;
+//! let top_ids: Vec<u64> = results[0].top.iter().map(|&(_, id)| id).collect();
+//! assert_eq!(top_ids.len(), 2);
+//! assert_eq!(top_ids[0], 10); // the aligned row wins
+//! # Ok(()) }
+//! ```
+//!
+//! The same call shape serves a sharded fabric (parallel scan-and-merge)
+//! and a quantized one (int8 coarse scan + exact rescore) — `Auto` picks
+//! the backend from the store; results are bit-identical to the
+//! sequential scan wherever exactness applies.
 
 pub mod baselines;
 pub mod cli;

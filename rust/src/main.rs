@@ -5,7 +5,8 @@
 //!   fig4         counterfactual accuracy (brittleness + LDS)
 //!   table1       LoGra vs EKFAC efficiency
 //!   qualitative  Fig-5-style top-valued-document inspection
-//!   store        gradient-store maintenance (stat | shard | merge)
+//!   store        gradient-store maintenance (stat | shard | merge | quantize)
+//!   query        value a stored gradient row against any store fabric
 
 use std::path::PathBuf;
 
@@ -17,6 +18,7 @@ use logra::eval::qualitative::{render as render_qual, run_qualitative};
 use logra::eval::table1::{run_table1, TABLE1_HEADER};
 use logra::eval::{BrittlenessConfig, LdsConfig};
 use logra::store::{merge_store, quantize_store, shard_store, stat_store};
+use logra::valuation::{Backend, Normalization, QueryRequest, ScanBackend, Valuator};
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
     ("info", "print an artifact manifest summary"),
@@ -24,6 +26,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("table1", "run the LoGra vs EKFAC efficiency comparison"),
     ("qualitative", "train, log, and inspect top-valued documents"),
     ("store", "store maintenance: store stat|shard|merge|quantize <dir>"),
+    ("query", "query <store_dir>: top-k most influential rows for --row"),
 ];
 
 const FLAGS: &[FlagSpec] = &[
@@ -38,6 +41,13 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "topk", help: "retrieval depth", takes_value: true, default: Some("5") },
     FlagSpec { name: "out", help: "output dir for store shard/merge/quantize", takes_value: true, default: None },
     FlagSpec { name: "shards", help: "shard count for store shard", takes_value: true, default: Some("4") },
+    FlagSpec { name: "row", help: "query: stored row used as the query gradient", takes_value: true, default: Some("0") },
+    FlagSpec { name: "norm", help: "query: normalization none|relatif", takes_value: true, default: Some("relatif") },
+    FlagSpec { name: "backend", help: "query: auto|exact|quantized", takes_value: true, default: Some("auto") },
+    FlagSpec { name: "rescore-factor", help: "query: stage-1 pool multiplier", takes_value: true, default: Some("4") },
+    FlagSpec { name: "rescore-store", help: "query: exact f32 companion for a quantized store", takes_value: true, default: None },
+    FlagSpec { name: "workers", help: "query: scan workers (0 = auto)", takes_value: true, default: Some("0") },
+    FlagSpec { name: "damping", help: "query: Fisher damping factor", takes_value: true, default: Some("0.1") },
 ];
 
 /// Repo root: the directory holding `artifacts/` (cwd, else build-time).
@@ -152,6 +162,11 @@ fn main() -> Result<()> {
             match action {
                 "stat" => {
                     print!("{}", stat_store(&dir)?.render());
+                    // The scan backend `Valuator::open(dir)` + Backend::Auto
+                    // would serve this fabric with.
+                    if let Ok(builder) = Valuator::open(&dir) {
+                        println!("auto backend  {}", builder.auto_kind().name());
+                    }
                     Ok(())
                 }
                 "shard" => {
@@ -203,6 +218,64 @@ fn main() -> Result<()> {
                     Err(anyhow!("unknown store action {other:?}; try stat|shard|merge|quantize"))
                 }
             }
+        }
+        // Store-only valuation: no artifact needed. The projected Fisher
+        // is refit from the stored rows themselves (they ARE projected
+        // gradients), one stored row serves as the query gradient, and the
+        // per-request --norm override threads through QueryRequest.
+        "query" => {
+            let dir = args.positional.first().map(PathBuf::from).ok_or_else(|| {
+                anyhow!(
+                    "usage: query <store_dir> [--row N] [--topk K] [--norm none|relatif] \
+                     [--backend auto|exact|quantized] [--rescore-factor N] [--workers N] \
+                     [--damping X]"
+                )
+            })?;
+            let row = args.usize_or("row", 0)?;
+            let topk = args.usize_or("topk", 5)?;
+            let workers = args.usize_or("workers", 0)?;
+            let rescore_factor = args.usize_or("rescore-factor", 4)?;
+            let damping = args.f64_or("damping", 0.1)? as f32;
+            let norm = Normalization::parse(&args.flag_or("norm", "relatif"))?;
+            let builder = Valuator::open(&dir)?;
+            let backend = match args.flag_or("backend", "auto").as_str() {
+                // Auto on a quantized fabric resolves to the two-stage
+                // backend; spell it out so --rescore-factor is honored
+                // instead of silently falling back to the default pool.
+                "auto" => {
+                    if builder.auto_kind() == logra::valuation::BackendKind::TwoStage {
+                        Backend::Quantized { rescore_factor }
+                    } else {
+                        Backend::Auto
+                    }
+                }
+                "exact" => Backend::Exact,
+                "quantized" => Backend::Quantized { rescore_factor },
+                other => return Err(anyhow!("unknown backend {other:?}; try auto|exact|quantized")),
+            };
+            let mut builder = builder.backend(backend).workers(workers).fit_from_store(damping);
+            // Explicit exact companion for quantized stores whose manifest
+            // predates (or lost) the recorded rescore_dir pointer.
+            if let Some(rs) = args.flag("rescore-store") {
+                builder = builder.rescore_store(rs);
+            }
+            let valuator = builder.build()?;
+            let g = valuator.gradient_row(row).ok_or_else(|| {
+                anyhow!("row {row} out of range (store has {} rows)", valuator.rows())
+            })?;
+            let res = valuator.query(QueryRequest::gradients(g, 1, topk).with_norm(norm))?;
+            println!(
+                "backend       {} ({} rows, k={}, {} workers, norm {:?})",
+                valuator.kind().name(),
+                valuator.rows(),
+                valuator.k(),
+                valuator.workers(),
+                norm
+            );
+            for &(score, id) in &res[0].top {
+                println!("  [{score:+.6}] id {id}");
+            }
+            Ok(())
         }
         other => Err(anyhow!("unknown subcommand {other:?}; try --help")),
     }

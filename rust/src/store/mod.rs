@@ -46,9 +46,11 @@ pub mod writer_thread;
 
 pub use grad_store::{GradStore, GradStoreWriter};
 pub use mmap::Mmap;
-pub use quant::{quantize_store, QuantShardedStore, QuantStore, QuantWriter, QUANT_BLOCK};
+pub use quant::{
+    quantize_store, QuantShardedStore, QuantStore, QuantWriter, QUANT_BLOCK, QUANT_CODES_FILE,
+};
 pub use shards::{
     merge_store, shard_store, stat_store, ShardBytes, ShardManifest, ShardWriter,
-    ShardedStore, ShardedWriter, StoreCodec, StoreStat,
+    ShardedStore, ShardedWriter, StoreCodec, StoreStat, SHARD_MANIFEST,
 };
 pub use writer_thread::BackgroundWriter;

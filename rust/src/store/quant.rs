@@ -474,6 +474,16 @@ pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
     let k = store.k();
     ensure!(k > 0, "cannot quantize a store with k=0");
     std::fs::create_dir_all(dst)?;
+    // Record where the exact f32 source lives (absolute when resolvable)
+    // so `Valuator::open(dst)` can pair the stage-2 rescore substrate
+    // without the caller passing both directories. The manifest parser's
+    // string subset has no escapes — skip the pointer for exotic paths.
+    let rescore_dir = src
+        .canonicalize()
+        .unwrap_or_else(|_| src.to_path_buf())
+        .to_str()
+        .filter(|s| !s.contains('"') && !s.contains('\\'))
+        .map(str::to_string);
     let shard_dirs: Vec<String> =
         (0..store.n_shards()).map(|i| format!("shard-{i:04}")).collect();
     // Create every shard (dir + zero-row header) BEFORE the manifest, then
@@ -487,6 +497,7 @@ pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
     ShardManifest {
         k,
         codec: StoreCodec::Int8,
+        rescore_dir: rescore_dir.clone(),
         shard_dirs: shard_dirs.clone(),
         shard_rows: vec![0; store.n_shards()],
     }
@@ -504,7 +515,7 @@ pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
         }
         shard_rows.push(w.finalize()?);
     }
-    let man = ShardManifest { k, codec: StoreCodec::Int8, shard_dirs, shard_rows };
+    let man = ShardManifest { k, codec: StoreCodec::Int8, rescore_dir, shard_dirs, shard_rows };
     man.save(dst)?;
     Ok(man)
 }

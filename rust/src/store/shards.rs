@@ -72,6 +72,13 @@ impl StoreCodec {
 pub struct ShardManifest {
     pub k: usize,
     pub codec: StoreCodec,
+    /// Quantized stores only: path of the exact f32 source the codes were
+    /// converted from — the stage-2 rescore substrate. Recorded by
+    /// `quantize_store` so `Valuator::open` on a quantized directory can
+    /// find its exact companion with zero codec-specific caller code.
+    /// Advisory (the source may have moved); absent on f32 stores and on
+    /// pre-PR5 quantized manifests.
+    pub rescore_dir: Option<String>,
     pub shard_dirs: Vec<String>,
     pub shard_rows: Vec<u64>,
 }
@@ -104,6 +111,9 @@ impl ShardManifest {
         s.push_str(&format!("  \"version\": {MANIFEST_VERSION},\n"));
         s.push_str(&format!("  \"k\": {},\n", self.k));
         s.push_str(&format!("  \"codec\": \"{}\",\n", self.codec.as_str()));
+        if let Some(rd) = &self.rescore_dir {
+            s.push_str(&format!("  \"rescore_dir\": \"{rd}\",\n"));
+        }
         s.push_str("  \"shards\": [\n");
         for (i, (dir, rows)) in self.shard_dirs.iter().zip(&self.shard_rows).enumerate() {
             let comma = if i + 1 < self.shard_dirs.len() { "," } else { "" };
@@ -137,6 +147,15 @@ impl ShardManifest {
                 v.as_str().ok_or_else(|| anyhow!("shard manifest: \"codec\" must be a string"))?,
             )?,
         };
+        // Optional exact-companion pointer (quantized stores, PR 5+).
+        let rescore_dir = match root.get("rescore_dir") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("shard manifest: \"rescore_dir\" must be a string"))?
+                    .to_string(),
+            ),
+        };
         let shards = root
             .get("shards")
             .and_then(json::Json::as_arr)
@@ -160,7 +179,7 @@ impl ShardManifest {
             shard_rows.push(rows);
         }
         ensure!(!shard_dirs.is_empty(), "shard manifest: zero shards");
-        Ok(ShardManifest { k, codec, shard_dirs, shard_rows })
+        Ok(ShardManifest { k, codec, rescore_dir, shard_dirs, shard_rows })
     }
 
     pub fn load(dir: &Path) -> Result<Self> {
@@ -264,6 +283,7 @@ impl ShardedWriter {
         let man = ShardManifest {
             k,
             codec: StoreCodec::F32,
+            rescore_dir: None,
             shard_dirs: (0..n_shards).map(shard_dir_name).collect(),
             shard_rows: vec![0; n_shards],
         };
@@ -315,6 +335,7 @@ impl ShardedWriter {
         let man = ShardManifest {
             k,
             codec: StoreCodec::F32,
+            rescore_dir: None,
             shard_dirs: (0..shard_rows.len()).map(shard_dir_name).collect(),
             shard_rows,
         };
@@ -851,10 +872,15 @@ mod tests {
 
     #[test]
     fn manifest_json_roundtrip() {
-        for codec in [StoreCodec::F32, StoreCodec::Int8] {
+        for (codec, rescore_dir) in [
+            (StoreCodec::F32, None),
+            (StoreCodec::Int8, None),
+            (StoreCodec::Int8, Some("/data/exact-store".to_string())),
+        ] {
             let man = ShardManifest {
                 k: 192,
                 codec,
+                rescore_dir,
                 shard_dirs: vec!["shard-0000".into(), "shard-0001".into()],
                 shard_rows: vec![128, 130],
             };
@@ -874,6 +900,8 @@ mod tests {
         )
         .unwrap();
         assert_eq!(man.codec, StoreCodec::F32);
+        // And no rescore pointer (pre-PR5 manifests never carry one).
+        assert_eq!(man.rescore_dir, None);
     }
 
     #[test]

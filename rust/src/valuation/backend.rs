@@ -1,0 +1,940 @@
+//! Unified scan-backend abstraction + the [`Valuator`] session facade —
+//! one-call data valuation over any store fabric.
+//!
+//! The paper's software contribution (LogIX, §5) is that valuation should
+//! attach to existing code "with minimal effort". On the query side that
+//! means ONE seam between callers and scan engines:
+//!
+//! - [`ScanBackend`]: any engine that can admit a [`QueryRequest`] and
+//!   hand back a [`PendingScores`] completion handle. Implemented by the
+//!   sequential reference ([`SequentialEngine`]), the parallel f32
+//!   scan-and-merge engine
+//!   ([`ParallelQueryEngine`](super::ParallelQueryEngine)), and the
+//!   two-stage quantized engine
+//!   ([`TwoStageEngine`](super::TwoStageEngine)). Future backends (an ANN
+//!   reranker, remote shards) implement the same trait instead of growing
+//!   another dispatch-enum arm.
+//! - [`PendingScores`]: the ONE completion handle every backend returns —
+//!   `wait()` yields per-test-row [`QueryResult`]s, and a pool-worker
+//!   panic surfaces as [`ValuationError::QueryPoisoned`] (distinguishable
+//!   from a shutdown, which is [`ValuationError::Shutdown`]).
+//! - [`Valuator`]: the session facade. [`Valuator::open`] opens the store
+//!   fabric once and auto-detects the codec from `shards.json`;
+//!   [`ValuatorBuilder::build`] validates the whole configuration with
+//!   typed [`ValuationError`]s (invalid states are rejected at
+//!   construction, not deep inside a worker thread) and resolves
+//!   [`Backend::Auto`] to a concrete engine.
+//!
+//! # `Backend::Auto` resolution rules
+//!
+//! | fabric codec | shards | pool            | backend        |
+//! |--------------|--------|-----------------|----------------|
+//! | f32          | 1      | `Off`/`Auto`    | sequential     |
+//! | f32          | 1      | `Shared`        | parallel-f32   |
+//! | f32          | >1     | any             | parallel-f32   |
+//! | int8         | any    | any             | two-stage      |
+//!
+//! `Backend::Exact` follows the f32 rows of the table; on an int8 fabric
+//! it opens the fabric's exact f32 companion (the `rescore_dir` the
+//! manifest records at `logra store quantize` time, or an explicit
+//! [`ValuatorBuilder::rescore_store`]) and scans that.
+//! `Backend::Quantized` requires an int8 fabric.
+//!
+//! # Error taxonomy
+//!
+//! [`ValuationError`] splits failures by who must act: `InvalidConfig`
+//! (fix the construction call), `StoreOpen` (fix the store directory),
+//! `BadQuery` (fix the request), `QueryPoisoned` (one query lost to a
+//! worker panic; the backend keeps serving), `Shutdown` (the backend is
+//! gone), `Internal` (a bug in the scan substrate).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Metrics;
+use crate::hessian::{BlockHessian, Preconditioner};
+use crate::linalg::ScanScratch;
+use crate::store::{
+    QuantShardedStore, ShardManifest, ShardedStore, StoreCodec, QUANT_CODES_FILE,
+    SHARD_MANIFEST,
+};
+use crate::util::topk::TopK;
+
+use super::parallel::{
+    cached_self_influences, resolve_chunk_len_f32, resolve_chunk_len_self_inf, scan_shard,
+    PendingMerge,
+};
+use super::pool::ScanPool;
+use super::scorer::{Normalization, QueryResult};
+use super::twostage::PendingRescore;
+use super::{ParallelQueryEngine, TwoStageEngine};
+
+// ------------------------------------------------------------------ errors
+
+/// Typed error for the valuation API. Everything a caller can hit at
+/// construction, admission, or completion time — no stringly `anyhow!` in
+/// the hot path.
+#[derive(Clone, Debug)]
+pub enum ValuationError {
+    /// The configuration can never serve; fix the construction call.
+    InvalidConfig(String),
+    /// A store directory failed to open, or a companion store disagrees
+    /// with it; fix the fabric on disk.
+    StoreOpen { dir: PathBuf, message: String },
+    /// The request itself is malformed (shape mismatch, token query on a
+    /// runtime-free backend); fix the request.
+    BadQuery(String),
+    /// A pool worker panicked while scanning this query. Only this query
+    /// failed — the backend keeps serving.
+    QueryPoisoned { query_id: u64, message: String },
+    /// The backend (or its scan pool) has shut down; no more admissions.
+    Shutdown,
+    /// Invariant violation inside the scan substrate (a bug, not a caller
+    /// error).
+    Internal(String),
+}
+
+impl std::fmt::Display for ValuationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValuationError::InvalidConfig(m) => write!(f, "invalid valuation config: {m}"),
+            ValuationError::StoreOpen { dir, message } => {
+                write!(f, "open store {}: {message}", dir.display())
+            }
+            ValuationError::BadQuery(m) => write!(f, "bad query: {m}"),
+            ValuationError::QueryPoisoned { query_id, message } => write!(
+                f,
+                "scan pool query {query_id}: shard scan task panicked: {message}"
+            ),
+            ValuationError::Shutdown => write!(f, "valuation backend is shut down"),
+            ValuationError::Internal(m) => write!(f, "internal valuation error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ValuationError {}
+
+/// Wrap an `anyhow` store-open failure with the directory it came from.
+pub(crate) fn store_open_err(dir: &Path, err: anyhow::Error) -> ValuationError {
+    ValuationError::StoreOpen { dir: dir.to_path_buf(), message: format!("{err:#}") }
+}
+
+// ----------------------------------------------------------------- request
+
+/// What to score: a token sequence (needs a runtime-attached service) or
+/// pre-projected gradient rows (any backend; the substrate for
+/// query-by-gradient and cross-model comparisons).
+#[derive(Clone, Debug)]
+pub enum QueryInput {
+    /// One token sequence of the artifact's `seq_len`. Only the
+    /// [`ValuationService`](crate::coordinator::ValuationService) can
+    /// resolve this (gradient extraction needs the PJRT runtime); scan
+    /// backends reject it with [`ValuationError::BadQuery`].
+    Tokens(Vec<i32>),
+    /// `nt` row-major rows of RAW projected test gradients, each `k`
+    /// floats (preconditioning happens inside the backend).
+    Gradients { rows: Vec<f32>, nt: usize },
+}
+
+impl QueryInput {
+    /// Gradient rows, or `BadQuery` for token input (scan backends are
+    /// runtime-free).
+    pub(crate) fn into_gradients(self) -> Result<(Vec<f32>, usize), ValuationError> {
+        match self {
+            QueryInput::Gradients { rows, nt } => Ok((rows, nt)),
+            QueryInput::Tokens(_) => Err(ValuationError::BadQuery(
+                "token queries need the runtime-attached ValuationService; \
+                 scan backends accept pre-projected gradient rows"
+                    .into(),
+            )),
+        }
+    }
+}
+
+/// One valuation request: input, per-request `topk`, and an optional
+/// per-request [`Normalization`] override (the backend's configured
+/// default applies when `None` — normalization is no longer frozen at
+/// config time).
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    pub input: QueryInput,
+    pub topk: usize,
+    pub norm: Option<Normalization>,
+}
+
+impl QueryRequest {
+    /// Value one token sequence (service-only input).
+    pub fn tokens(tokens: Vec<i32>, topk: usize) -> Self {
+        QueryRequest { input: QueryInput::Tokens(tokens), topk, norm: None }
+    }
+
+    /// Value `nt` pre-projected gradient rows (row-major, `nt × k`).
+    pub fn gradients(rows: Vec<f32>, nt: usize, topk: usize) -> Self {
+        QueryRequest { input: QueryInput::Gradients { rows, nt }, topk, norm: None }
+    }
+
+    /// Override the backend's default normalization for this request.
+    pub fn with_norm(mut self, norm: Normalization) -> Self {
+        self.norm = Some(norm);
+        self
+    }
+
+    /// The one admission preamble every backend shares: resolve the norm
+    /// override against the backend default, clamp `topk`, reject token
+    /// input, and validate the gradient shape against the fabric's `k`.
+    pub(crate) fn resolve(
+        self,
+        default_norm: Normalization,
+        k: usize,
+    ) -> Result<GradQuery, ValuationError> {
+        let norm = self.norm.unwrap_or(default_norm);
+        let topk = self.topk.max(1);
+        let (rows, nt) = self.input.into_gradients()?;
+        if rows.len() != nt * k {
+            return Err(ValuationError::BadQuery(format!(
+                "{nt} rows x k={k} needs {} floats, got {}",
+                nt * k,
+                rows.len()
+            )));
+        }
+        Ok(GradQuery { rows, nt, topk, norm })
+    }
+}
+
+/// A validated gradient-rows request (the output of
+/// [`QueryRequest::resolve`]) — what the engines' admission bodies take.
+pub(crate) struct GradQuery {
+    pub(crate) rows: Vec<f32>,
+    pub(crate) nt: usize,
+    pub(crate) topk: usize,
+    pub(crate) norm: Normalization,
+}
+
+// ------------------------------------------------------------------ config
+
+/// Shared construction knobs for every scan backend — the ONE place the
+/// old per-engine `with_workers/with_chunk_len/with_metrics/with_pool`
+/// builder stacks collapsed into.
+#[derive(Clone)]
+pub struct BackendConfig {
+    /// Worker threads for the per-query spawn path; 0 = one per core
+    /// (capped at 16). Ignored when `pool` is set — the pool's worker
+    /// count is authoritative.
+    pub workers: usize,
+    /// Rows scored per kernel call; 0 (default) derives the chunk from the
+    /// query shape so one train chunk + the test block fit L2.
+    pub chunk_len: usize,
+    /// Two-stage only: stage-1 candidate pool per test row as a multiple
+    /// of the requested top-k (must be ≥ 1).
+    pub rescore_factor: usize,
+    /// Default normalization; any request can override per call.
+    pub norm: Normalization,
+    /// Record scan counters into shared service metrics.
+    pub metrics: Option<Arc<Metrics>>,
+    /// Run scans on a persistent [`ScanPool`] instead of per-query scoped
+    /// threads.
+    pub pool: Option<Arc<ScanPool>>,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig {
+            workers: 0,
+            chunk_len: 0,
+            rescore_factor: 4,
+            norm: Normalization::None,
+            metrics: None,
+            pool: None,
+        }
+    }
+}
+
+// ------------------------------------------------------------------- trait
+
+/// Which concrete engine serves a backend (introspection; also what
+/// `logra store stat` reports as the auto-selected backend).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Sequential,
+    Parallel,
+    TwoStage,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Sequential => "sequential",
+            BackendKind::Parallel => "parallel-f32",
+            BackendKind::TwoStage => "two-stage",
+        }
+    }
+}
+
+/// Any scan engine behind one admission call: submit a [`QueryRequest`],
+/// get a [`PendingScores`] completion handle. Implementations are
+/// `Send + Sync` so a `Box<dyn ScanBackend>` (or the [`Valuator`] facade)
+/// can serve concurrent callers.
+pub trait ScanBackend: Send + Sync {
+    /// Admit one query. Backends attached to a [`ScanPool`] return
+    /// immediately with the scan in flight; unpooled backends may scan
+    /// eagerly on the calling thread and return a ready handle.
+    fn submit(&self, req: QueryRequest) -> Result<PendingScores, ValuationError>;
+
+    /// Which engine this is.
+    fn kind(&self) -> BackendKind;
+
+    /// Rows in the served fabric.
+    fn rows(&self) -> usize;
+
+    /// Projected gradient dimension.
+    fn k(&self) -> usize;
+
+    /// Resolved scan worker count (the pool's when one is attached).
+    fn workers(&self) -> usize;
+
+    /// Whether every request is served at exact full precision over the
+    /// full corpus (false for the two-stage coarse-scan backend, whose
+    /// exactness depends on the rescore pool covering the corpus).
+    fn exact(&self) -> bool;
+
+    /// Raw stored gradient row `i` in global order (from the exact f32
+    /// substrate), if in range — the query-by-gradient convenience.
+    fn gradient_row(&self, i: usize) -> Option<Vec<f32>>;
+
+    /// Submit + wait.
+    fn query(&self, req: QueryRequest) -> Result<Vec<QueryResult>, ValuationError> {
+        self.submit(req)?.wait()
+    }
+}
+
+// ------------------------------------------------------------- completion
+
+/// The ONE completion handle every backend returns. Replaces the old
+/// per-engine `PendingQuery` / `PendingTwoStage` / service `Outcome`
+/// triplet: `wait()` performs whatever deterministic merge or rescore the
+/// originating backend still owes and yields per-test-row results.
+pub struct PendingScores {
+    inner: Pending,
+}
+
+pub(crate) enum Pending {
+    /// Scanned eagerly at admission (sequential backend, empty fabrics).
+    Ready(Vec<QueryResult>),
+    /// Parallel f32 scan in flight; `wait` merges per-shard heaps.
+    Merge(PendingMerge),
+    /// Two-stage coarse scan in flight; `wait` merges candidate pools and
+    /// runs the exact rescore on the calling thread.
+    Rescore(PendingRescore),
+}
+
+impl PendingScores {
+    pub(crate) fn ready(results: Vec<QueryResult>) -> Self {
+        PendingScores { inner: Pending::Ready(results) }
+    }
+
+    pub(crate) fn merge(p: PendingMerge) -> Self {
+        PendingScores { inner: Pending::Merge(p) }
+    }
+
+    pub(crate) fn rescore(p: PendingRescore) -> Self {
+        PendingScores { inner: Pending::Rescore(p) }
+    }
+
+    /// Whether the scan work already ran at admission time, on the
+    /// admitting thread: true for eagerly-scanned results (sequential
+    /// backend, unpooled parallel scatter/gather) — `wait` then performs
+    /// only the cheap local merge. False whenever meaningful work is
+    /// still owed: a pool scan in flight, or the two-stage exact rescore
+    /// (which always runs inside `wait`, whatever stage 1 did).
+    pub fn is_ready(&self) -> bool {
+        match &self.inner {
+            Pending::Ready(_) => true,
+            Pending::Merge(p) => p.is_eager(),
+            Pending::Rescore(_) => false,
+        }
+    }
+
+    /// Block until the scan completes; per-test-row results in request
+    /// order. A pool-worker panic surfaces as
+    /// [`ValuationError::QueryPoisoned`] — only this query is lost.
+    pub fn wait(self) -> Result<Vec<QueryResult>, ValuationError> {
+        match self.inner {
+            Pending::Ready(results) => Ok(results),
+            Pending::Merge(p) => p.finish(),
+            Pending::Rescore(p) => p.finish(),
+        }
+    }
+}
+
+// ------------------------------------------------------- sequential engine
+
+/// The sequential scan backend: one thread, shards scanned in order
+/// through the shared kernel layer — the serving-shaped twin of the
+/// [`QueryEngine`](super::QueryEngine) native reference (bit-identical to
+/// it, like every backend; `rust/tests/backend.rs`). The right shape for
+/// unsharded stores, where there is nothing to fan out over.
+pub struct SequentialEngine {
+    store: Arc<ShardedStore>,
+    precond: Arc<Preconditioner>,
+    cfg: BackendConfig,
+    /// One scratch for the engine — scans are serialized through it, which
+    /// is the point of this backend.
+    scratch: Mutex<ScanScratch>,
+    self_inf: Mutex<Option<Arc<Vec<f32>>>>,
+}
+
+impl SequentialEngine {
+    pub fn new(store: Arc<ShardedStore>, precond: Arc<Preconditioner>, cfg: BackendConfig) -> Self {
+        SequentialEngine {
+            store,
+            precond,
+            cfg,
+            scratch: Mutex::new(ScanScratch::new()),
+            self_inf: Mutex::new(None),
+        }
+    }
+
+    /// Self-influence of each stored row in global order (computed once,
+    /// then cached across queries and threads).
+    pub fn train_self_influences(&self) -> Arc<Vec<f32>> {
+        cached_self_influences(
+            &self.self_inf,
+            &self.store,
+            &self.precond,
+            1,
+            resolve_chunk_len_self_inf(self.cfg.chunk_len, self.store.k()),
+        )
+    }
+}
+
+impl ScanBackend for SequentialEngine {
+    fn submit(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
+        let k = self.store.k();
+        let GradQuery { rows, nt, topk, norm } = req.resolve(self.cfg.norm, k)?;
+        let pre = self.precond.apply_rows(&rows, nt);
+        let selfs: Option<Arc<Vec<f32>>> = match norm {
+            Normalization::RelatIf => Some(self.train_self_influences()),
+            Normalization::None => None,
+        };
+        let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
+        let chunk_len = resolve_chunk_len_f32(self.cfg.chunk_len, k, nt);
+        if let Some(m) = &self.cfg.metrics {
+            m.scan_chunk_len.store(chunk_len as u64, std::sync::atomic::Ordering::Relaxed);
+        }
+        let mut scratch = self.scratch.lock().unwrap();
+        let mut finals: Vec<TopK> = (0..nt).map(|_| TopK::new(topk)).collect();
+        for si in 0..self.store.n_shards() {
+            let heaps = scan_shard(
+                &self.store,
+                si,
+                &pre,
+                nt,
+                topk,
+                selfs_ref,
+                chunk_len,
+                self.cfg.metrics.as_deref(),
+                &mut scratch,
+            );
+            for (t, h) in heaps.into_iter().enumerate() {
+                finals[t].merge(h);
+            }
+        }
+        Ok(PendingScores::ready(
+            finals.into_iter().map(|h| QueryResult { top: h.into_sorted() }).collect(),
+        ))
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sequential
+    }
+
+    fn rows(&self) -> usize {
+        self.store.rows()
+    }
+
+    fn k(&self) -> usize {
+        self.store.k()
+    }
+
+    fn workers(&self) -> usize {
+        1
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn gradient_row(&self, i: usize) -> Option<Vec<f32>> {
+        (i < self.store.rows()).then(|| self.store.row(i).to_vec())
+    }
+}
+
+// ----------------------------------------------------------------- facade
+
+/// Backend selection for [`ValuatorBuilder::backend`]. `Auto` (the
+/// default) picks from the fabric's codec and shard count — see the
+/// module docs for the resolution table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Codec-driven: exact engines for f32 fabrics, two-stage for int8.
+    Auto,
+    /// Full-precision full scan, even over an int8 fabric (serves its f32
+    /// rescore companion).
+    Exact,
+    /// Int8 coarse scan + exact rescore of `rescore_factor × topk`
+    /// candidates per test row. Requires an int8 fabric.
+    Quantized { rescore_factor: usize },
+}
+
+/// How the [`Valuator`] runs its shard fan-out.
+#[derive(Clone)]
+pub enum PoolMode {
+    /// Per-query scoped threads (the one-shot CLI shape). Default.
+    Off,
+    /// Spawn a pool owned by the Valuator when the resolved backend fans
+    /// out (parallel / two-stage); sequential backends skip it.
+    Auto,
+    /// Attach an existing pool (share warm workers across valuators).
+    Shared(Arc<ScanPool>),
+}
+
+enum Fabric {
+    F32(Arc<ShardedStore>),
+    Int8 { quant: Arc<QuantShardedStore>, rescore_dir: Option<PathBuf> },
+}
+
+enum PrecondSource {
+    Missing,
+    Provided(Arc<Preconditioner>),
+    /// Fit the projected Fisher from the stored rows themselves (they ARE
+    /// projected gradients; their second moment is the projected Fisher).
+    FitFromStore { damping: f32 },
+}
+
+/// Builder returned by [`Valuator::open`]: the single configuration point
+/// for the whole query side.
+pub struct ValuatorBuilder {
+    dir: PathBuf,
+    fabric: Fabric,
+    backend: Backend,
+    pool: PoolMode,
+    norm: Normalization,
+    workers: usize,
+    chunk_len: usize,
+    precond: PrecondSource,
+    metrics: Option<Arc<Metrics>>,
+    rescore_override: Option<PathBuf>,
+}
+
+impl ValuatorBuilder {
+    /// Select the engine ([`Backend::Auto`] by default).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Scan execution substrate ([`PoolMode::Off`] by default).
+    pub fn pool(mut self, pool: PoolMode) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Default normalization; any [`QueryRequest`] can override per call.
+    pub fn normalization(mut self, norm: Normalization) -> Self {
+        self.norm = norm;
+        self
+    }
+
+    /// Scan workers (0 = one per core, capped at 16) — feeds both the
+    /// per-query spawn path and [`PoolMode::Auto`]'s pool size.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Rows per kernel call; 0 (default) = L2-fit auto derivation.
+    pub fn chunk_len(mut self, chunk_len: usize) -> Self {
+        self.chunk_len = chunk_len;
+        self
+    }
+
+    /// Record scan counters (and the spawned pool's worker count) into
+    /// shared service metrics.
+    pub fn metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Use a pre-fitted damped iHVP preconditioner (the logging phase's
+    /// Fisher — the normal serving path).
+    pub fn preconditioner(mut self, precond: Arc<Preconditioner>) -> Self {
+        self.precond = PrecondSource::Provided(precond);
+        self
+    }
+
+    /// Fit the preconditioner from the stored rows at `build` time
+    /// (single-block projected Fisher, the paper's damping rule). The
+    /// store-only shape: `logra query` uses this, no artifact needed.
+    pub fn fit_from_store(mut self, damping: f32) -> Self {
+        self.precond = PrecondSource::FitFromStore { damping };
+        self
+    }
+
+    /// Explicitly pair the exact f32 store an int8 fabric rescoring
+    /// against (overrides the manifest's recorded `rescore_dir`).
+    pub fn rescore_store(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.rescore_override = Some(dir.into());
+        self
+    }
+
+    /// The [`BackendKind`] that [`Backend::Auto`] resolves to for this
+    /// fabric (with the default [`PoolMode::Off`]) — what
+    /// `logra store stat` reports.
+    pub fn auto_kind(&self) -> BackendKind {
+        match &self.fabric {
+            Fabric::Int8 { .. } => BackendKind::TwoStage,
+            Fabric::F32(s) => {
+                if s.n_shards() > 1 {
+                    BackendKind::Parallel
+                } else {
+                    BackendKind::Sequential
+                }
+            }
+        }
+    }
+
+    /// Resolve the exact f32 store this builder's int8 fabric rescore
+    /// against: the explicit override, else the manifest's `rescore_dir`
+    /// (a relative recorded path resolves against the quantized store's
+    /// own directory, so hand-edited manifests stay relocatable).
+    fn exact_companion(
+        &self,
+        rescore_dir: &Option<PathBuf>,
+    ) -> Result<Arc<ShardedStore>, ValuationError> {
+        let dir = match (&self.rescore_override, rescore_dir) {
+            (Some(d), _) => d.clone(),
+            (None, Some(d)) if d.is_relative() => self.dir.join(d),
+            (None, Some(d)) => d.clone(),
+            (None, None) => {
+                return Err(ValuationError::InvalidConfig(format!(
+                    "quantized store {} records no exact companion (rescore_dir); \
+                     re-run `logra store quantize`, pass ValuatorBuilder::rescore_store, \
+                     or `logra query --rescore-store <dir>`",
+                    self.dir.display()
+                )))
+            }
+        };
+        let store = ShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?;
+        Ok(Arc::new(store))
+    }
+
+    /// Validate and construct. All configuration errors surface here, as
+    /// typed [`ValuationError`]s, before any query is admitted.
+    pub fn build(self) -> Result<Valuator, ValuationError> {
+        // 1. Resolve the engine choice against the fabric codec.
+        enum Choice {
+            Seq(Arc<ShardedStore>),
+            Par(Arc<ShardedStore>),
+            Two { quant: Arc<QuantShardedStore>, exact: Arc<ShardedStore>, factor: usize },
+        }
+        let choice = match (&self.backend, &self.fabric) {
+            (Backend::Auto | Backend::Exact, Fabric::F32(store)) => {
+                let fan_out =
+                    store.n_shards() > 1 || matches!(self.pool, PoolMode::Shared(_));
+                if fan_out {
+                    Choice::Par(store.clone())
+                } else {
+                    Choice::Seq(store.clone())
+                }
+            }
+            (Backend::Exact, Fabric::Int8 { quant, rescore_dir }) => {
+                let exact = self.exact_companion(rescore_dir)?;
+                // The companion is advisory (the source may have moved):
+                // reject one that no longer mirrors the quantized fabric,
+                // exactly like the two-stage pairing check does.
+                if exact.rows() != quant.rows() || exact.k() != quant.k() {
+                    return Err(ValuationError::InvalidConfig(format!(
+                        "exact companion ({} rows, k={}) does not mirror quantized store {} \
+                         ({} rows, k={}) — re-run `logra store quantize` or pass \
+                         ValuatorBuilder::rescore_store",
+                        exact.rows(),
+                        exact.k(),
+                        self.dir.display(),
+                        quant.rows(),
+                        quant.k()
+                    )));
+                }
+                let fan_out =
+                    exact.n_shards() > 1 || matches!(self.pool, PoolMode::Shared(_));
+                if fan_out {
+                    Choice::Par(exact)
+                } else {
+                    Choice::Seq(exact)
+                }
+            }
+            (Backend::Auto, Fabric::Int8 { quant, rescore_dir }) => Choice::Two {
+                quant: quant.clone(),
+                exact: self.exact_companion(rescore_dir)?,
+                factor: 4,
+            },
+            (Backend::Quantized { rescore_factor }, Fabric::Int8 { quant, rescore_dir }) => {
+                Choice::Two {
+                    quant: quant.clone(),
+                    exact: self.exact_companion(rescore_dir)?,
+                    factor: *rescore_factor,
+                }
+            }
+            (Backend::Quantized { .. }, Fabric::F32(_)) => {
+                return Err(ValuationError::InvalidConfig(format!(
+                    "store {} uses the f32 codec; Backend::Quantized needs an int8 fabric \
+                     (`logra store quantize` one, then open the quantized copy)",
+                    self.dir.display()
+                )))
+            }
+        };
+        // (A zero rescore_factor is rejected by TwoStageEngine::new below
+        // — the single owner of that rule.)
+
+        // 2. Resolve the preconditioner (and validate its width).
+        let exact_for_fit: &Arc<ShardedStore> = match &choice {
+            Choice::Seq(s) | Choice::Par(s) => s,
+            Choice::Two { exact, .. } => exact,
+        };
+        let precond = match self.precond {
+            PrecondSource::Provided(p) => p,
+            PrecondSource::FitFromStore { damping } => {
+                fit_preconditioner(exact_for_fit, damping)?
+            }
+            PrecondSource::Missing => {
+                return Err(ValuationError::InvalidConfig(
+                    "no preconditioner: pass ValuatorBuilder::preconditioner(...) \
+                     or ValuatorBuilder::fit_from_store(damping)"
+                        .into(),
+                ))
+            }
+        };
+        if precond.k_total != exact_for_fit.k() {
+            return Err(ValuationError::InvalidConfig(format!(
+                "preconditioner width k={} disagrees with store k={}",
+                precond.k_total,
+                exact_for_fit.k()
+            )));
+        }
+
+        // 3. Resolve the pool (sequential backends never take one). A
+        // pool the builder spawns belongs to this Valuator; a Shared one
+        // stays the caller's, so shutdown leaves it serving its other
+        // attachees.
+        let (pool, owns_pool): (Option<Arc<ScanPool>>, bool) = match (&choice, &self.pool) {
+            (Choice::Seq(_), _) | (_, PoolMode::Off) => (None, false),
+            (_, PoolMode::Auto) => (Some(Arc::new(ScanPool::spawn(self.workers))), true),
+            (_, PoolMode::Shared(p)) => (Some(p.clone()), false),
+        };
+        if let (Some(p), Some(m)) = (&pool, &self.metrics) {
+            m.pool_workers
+                .store(p.workers() as u64, std::sync::atomic::Ordering::Relaxed);
+        }
+
+        // 4. Build the backend behind the trait.
+        let cfg = BackendConfig {
+            workers: self.workers,
+            chunk_len: self.chunk_len,
+            rescore_factor: match &choice {
+                Choice::Two { factor, .. } => *factor,
+                _ => 4,
+            },
+            norm: self.norm,
+            metrics: self.metrics,
+            pool: pool.clone(),
+        };
+        let backend: Box<dyn ScanBackend> = match choice {
+            Choice::Seq(store) => Box::new(SequentialEngine::new(store, precond, cfg)),
+            Choice::Par(store) => Box::new(ParallelQueryEngine::new(store, precond, cfg)),
+            Choice::Two { quant, exact, .. } => {
+                Box::new(TwoStageEngine::new(quant, exact, precond, cfg)?)
+            }
+        };
+        Ok(Valuator { backend, pool, owns_pool })
+    }
+}
+
+/// Fit the single-block projected Fisher from the stored rows, chunk-wise.
+fn fit_preconditioner(
+    store: &ShardedStore,
+    damping: f32,
+) -> Result<Arc<Preconditioner>, ValuationError> {
+    let k = store.k();
+    let mut hess = BlockHessian::single_block(k);
+    for si in 0..store.n_shards() {
+        let shard = store.shard(si);
+        let rows = shard.rows();
+        let mut at = 0usize;
+        while at < rows {
+            let len = 1024.min(rows - at);
+            hess.accumulate(shard.chunk(at, len), len);
+            at += len;
+        }
+    }
+    hess.preconditioner(damping).map(Arc::new).map_err(|e| {
+        ValuationError::InvalidConfig(format!("fit preconditioner from store: {e:#}"))
+    })
+}
+
+/// Session facade: ONE object that opens the store fabric, owns the
+/// resolved [`ScanBackend`] (and its scan pool, if any), and answers
+/// queries. See the crate docs for a runnable quickstart.
+pub struct Valuator {
+    backend: Box<dyn ScanBackend>,
+    pool: Option<Arc<ScanPool>>,
+    /// True when the builder spawned `pool` ([`PoolMode::Auto`]);
+    /// [`PoolMode::Shared`] pools belong to the caller and survive
+    /// [`Valuator::shutdown`].
+    owns_pool: bool,
+}
+
+impl std::fmt::Debug for Valuator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Valuator")
+            .field("kind", &self.backend.kind())
+            .field("rows", &self.backend.rows())
+            .field("k", &self.backend.k())
+            .field("workers", &self.backend.workers())
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
+}
+
+impl std::fmt::Debug for ValuatorBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ValuatorBuilder")
+            .field("dir", &self.dir)
+            .field("backend", &self.backend)
+            .field("auto_kind", &self.auto_kind())
+            .finish()
+    }
+}
+
+impl Valuator {
+    /// Open the store fabric at `dir` once, auto-detecting the codec from
+    /// `shards.json` (a bare v1 f32 directory and a bare quantized
+    /// directory both work). Configuration continues on the returned
+    /// builder; validation happens at [`ValuatorBuilder::build`].
+    pub fn open(dir: impl AsRef<Path>) -> Result<ValuatorBuilder, ValuationError> {
+        let dir = dir.as_ref().to_path_buf();
+        let fabric = if dir.join(SHARD_MANIFEST).exists() {
+            let man = ShardManifest::load(&dir).map_err(|e| store_open_err(&dir, e))?;
+            match man.codec {
+                StoreCodec::F32 => {
+                    let s = ShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?;
+                    Fabric::F32(Arc::new(s))
+                }
+                StoreCodec::Int8 => {
+                    let q =
+                        QuantShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?;
+                    Fabric::Int8 {
+                        quant: Arc::new(q),
+                        rescore_dir: man.rescore_dir.as_ref().map(PathBuf::from),
+                    }
+                }
+            }
+        } else if dir.join(QUANT_CODES_FILE).exists() {
+            // A bare quantized shard directory (no manifest): int8 fabric
+            // with no recorded companion.
+            let q = QuantShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?;
+            Fabric::Int8 { quant: Arc::new(q), rescore_dir: None }
+        } else {
+            let s = ShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?;
+            Fabric::F32(Arc::new(s))
+        };
+        Ok(ValuatorBuilder {
+            dir,
+            fabric,
+            backend: Backend::Auto,
+            pool: PoolMode::Off,
+            norm: Normalization::None,
+            workers: 0,
+            chunk_len: 0,
+            precond: PrecondSource::Missing,
+            metrics: None,
+            rescore_override: None,
+        })
+    }
+
+    /// Submit + wait (blocking).
+    pub fn query(&self, req: QueryRequest) -> Result<Vec<QueryResult>, ValuationError> {
+        self.backend.query(req)
+    }
+
+    /// Admit a query without blocking on the scan.
+    pub fn query_async(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
+        self.backend.submit(req)
+    }
+
+    /// Admit a batch of requests, then complete them in admission order.
+    /// On a pool-backed backend the requests' shard tasks interleave on
+    /// warm workers. The batch succeeds or fails as a unit: the first
+    /// error (a bad request at admission, or one poisoned query at
+    /// completion) aborts it. Callers who need per-request error
+    /// isolation should hold one [`query_async`](Self::query_async)
+    /// handle per request instead.
+    pub fn query_batch(
+        &self,
+        reqs: Vec<QueryRequest>,
+    ) -> Result<Vec<Vec<QueryResult>>, ValuationError> {
+        let pending: Vec<PendingScores> = reqs
+            .into_iter()
+            .map(|r| self.backend.submit(r))
+            .collect::<Result<_, _>>()?;
+        pending.into_iter().map(PendingScores::wait).collect()
+    }
+
+    /// The scan pool this valuator runs on, if any (snapshot it for queue
+    /// depth and per-worker busy time).
+    pub fn scan_pool(&self) -> Option<&Arc<ScanPool>> {
+        self.pool.as_ref()
+    }
+
+    /// Stop the scan pool this valuator spawned (drains in-flight scans
+    /// first); dropping the valuator does the same via the pool's own
+    /// `Drop`. A [`PoolMode::Shared`] pool is the caller's — it keeps
+    /// serving its other attachees and is left untouched.
+    pub fn shutdown(self) {
+        if self.owns_pool {
+            if let Some(p) = &self.pool {
+                p.shutdown();
+            }
+        }
+    }
+}
+
+/// The facade is itself a [`ScanBackend`]: anything serving through a
+/// `Box<dyn ScanBackend>` can hold a whole `Valuator` in that slot.
+impl ScanBackend for Valuator {
+    fn submit(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
+        self.backend.submit(req)
+    }
+
+    fn kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    fn rows(&self) -> usize {
+        self.backend.rows()
+    }
+
+    fn k(&self) -> usize {
+        self.backend.k()
+    }
+
+    fn workers(&self) -> usize {
+        self.backend.workers()
+    }
+
+    fn exact(&self) -> bool {
+        self.backend.exact()
+    }
+
+    fn gradient_row(&self, i: usize) -> Option<Vec<f32>> {
+        self.backend.gradient_row(i)
+    }
+}

@@ -3,24 +3,35 @@
 //!
 //! This is the paper's recurring "Compute Influence" phase (Table 1,
 //! right): test gradients are preconditioned once, then scanned against
-//! every stored train gradient; the scan is chunked, each chunk's scores
-//! come from the Pallas-authored `score` HLO program (or a native fallback
-//! for odd shapes), and the next chunk is prefetched while the current one
-//! is scored. Over sharded stores, [`parallel::ParallelQueryEngine`] fans
-//! the scan out across worker threads and merges per-shard top-k heaps
-//! deterministically. Over quantized stores, [`twostage::TwoStageEngine`]
-//! runs the linear pass on the int8 codec and rescores only a small
-//! candidate pool at exact precision. Under serving load, both engines
-//! attach to a persistent [`pool::ScanPool`], which admits concurrent
-//! queries, interleaves their shard tasks across warm workers, and keeps
-//! results bit-identical to the sequential scan.
+//! every stored train gradient. The public seam is the [`ScanBackend`]
+//! trait plus the [`Valuator`] session facade ([`backend`]):
+//! `Valuator::open(dir)` opens the store fabric once, auto-detects the
+//! codec, and serves `query` / `query_async` / `query_batch` through ONE
+//! [`PendingScores`] completion handle, with typed [`ValuationError`]s.
+//!
+//! Three backends implement the trait: [`SequentialEngine`] (one thread,
+//! the unsharded shape), [`parallel::ParallelQueryEngine`] (per-shard
+//! fan-out, deterministic merge), and [`twostage::TwoStageEngine`] (int8
+//! coarse scan + exact rescore of a small candidate pool). All three are
+//! bit-identical to the sequential [`QueryEngine`] native scan whenever
+//! exactness applies (`rust/tests/backend.rs`). Under serving load the
+//! fan-out backends attach to a persistent [`pool::ScanPool`], which
+//! admits concurrent queries and interleaves their shard tasks across
+//! warm workers. [`scorer::QueryEngine`] remains the borrow-based
+//! reference engine (and the only one that can score through the AOT HLO
+//! `score` program).
 
+pub mod backend;
 pub mod parallel;
 pub mod pool;
 pub mod scorer;
 pub mod twostage;
 
-pub use parallel::{ParallelQueryEngine, ParallelScanConfig, PendingQuery};
+pub use backend::{
+    Backend, BackendConfig, BackendKind, PendingScores, PoolMode, QueryInput, QueryRequest,
+    ScanBackend, SequentialEngine, ValuationError, Valuator, ValuatorBuilder,
+};
+pub use parallel::ParallelQueryEngine;
 pub use pool::{auto_workers, PendingScan, PoolSnapshot, ScanHandle, ScanPool};
 pub use scorer::{Normalization, QueryEngine, QueryResult};
-pub use twostage::{PendingTwoStage, TwoStageConfig, TwoStageEngine};
+pub use twostage::TwoStageEngine;

@@ -23,15 +23,15 @@
 //! Execution substrate: the engine shares ownership of the store fabric
 //! (`Arc`), so scans can run EITHER on per-query scoped threads
 //! (`scatter_gather` — the one-shot CLI shape) or on a long-lived
-//! [`ScanPool`](super::ScanPool) attached with
-//! [`ParallelQueryEngine::with_pool`] — the serving shape, where concurrent
-//! queries interleave their shard tasks on warm workers and
-//! [`ParallelQueryEngine::query_async`] overlaps scans with upstream work.
+//! [`ScanPool`](super::ScanPool) attached via
+//! [`BackendConfig::pool`](super::BackendConfig) — the serving shape,
+//! where concurrent queries interleave their shard tasks on warm workers.
+//! Admission goes through the [`ScanBackend`](super::ScanBackend) trait:
+//! `submit` returns a [`PendingScores`](super::PendingScores) handle whose
+//! `wait` performs the deterministic merge.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
-
-use anyhow::{ensure, Result};
 
 use crate::coordinator::metrics::Metrics;
 use crate::hessian::Preconditioner;
@@ -41,27 +41,12 @@ use crate::store::ShardedStore;
 use crate::util::pipeline::bounded;
 use crate::util::topk::TopK;
 
-use super::pool::{auto_workers, ScanHandle, ScanPool};
+use super::backend::{
+    BackendConfig, BackendKind, GradQuery, PendingScores, QueryRequest, ScanBackend,
+    ValuationError,
+};
+use super::pool::{auto_workers, ScanHandle};
 use super::scorer::{Normalization, QueryResult};
-
-/// Knobs for the parallel scan.
-#[derive(Clone, Copy, Debug)]
-pub struct ParallelScanConfig {
-    /// Worker threads; 0 = one per available core (capped at 16) — the
-    /// resolution lives in [`auto_workers`]. Ignored when a [`ScanPool`]
-    /// is attached: the pool's worker count is authoritative.
-    pub workers: usize,
-    /// Rows scored per chunk within a shard; 0 (the default) derives the
-    /// chunk from the query shape so one train chunk + the test block fit
-    /// L2 ([`auto_chunk_len`]). An explicit value overrides unchanged.
-    pub chunk_len: usize,
-}
-
-impl Default for ParallelScanConfig {
-    fn default() -> Self {
-        ParallelScanConfig { workers: 0, chunk_len: 0 }
-    }
-}
 
 /// Resolve a `chunk_len` knob for an f32 scan: explicit values pass
 /// through, 0 derives from the query shape ([`auto_chunk_len`] with
@@ -92,106 +77,56 @@ pub(crate) fn resolve_chunk_len_self_inf(requested: usize, k: usize) -> usize {
 pub struct ParallelQueryEngine {
     store: Arc<ShardedStore>,
     precond: Arc<Preconditioner>,
-    cfg: ParallelScanConfig,
-    metrics: Option<Arc<Metrics>>,
-    pool: Option<Arc<ScanPool>>,
+    cfg: BackendConfig,
     /// Self-influence per GLOBAL row (RelatIF denominators), filled in
     /// parallel on first use and cached across queries (and threads).
     self_inf: Mutex<Option<Arc<Vec<f32>>>>,
 }
 
 impl ParallelQueryEngine {
-    pub fn new(store: Arc<ShardedStore>, precond: Arc<Preconditioner>) -> Self {
-        ParallelQueryEngine {
-            store,
-            precond,
-            cfg: ParallelScanConfig::default(),
-            metrics: None,
-            pool: None,
-            self_inf: Mutex::new(None),
-        }
+    /// Construction takes the whole [`BackendConfig`] — the old
+    /// per-engine `with_*` builder stack lives on the
+    /// [`Valuator`](super::Valuator) builder now.
+    pub fn new(
+        store: Arc<ShardedStore>,
+        precond: Arc<Preconditioner>,
+        cfg: BackendConfig,
+    ) -> Self {
+        ParallelQueryEngine { store, precond, cfg, self_inf: Mutex::new(None) }
     }
 
-    /// Set worker count (0 = auto) for the per-query spawn path.
-    pub fn with_workers(mut self, workers: usize) -> Self {
-        self.cfg.workers = workers;
-        self
+    /// Self-influence of each stored row in global order (computed once in
+    /// parallel on scoped threads, then cached; concurrent callers block on
+    /// the first computation and share the result).
+    pub fn train_self_influences(&self) -> Arc<Vec<f32>> {
+        cached_self_influences(
+            &self.self_inf,
+            &self.store,
+            &self.precond,
+            resolve_workers(self.cfg.workers, self.store.n_shards()),
+            resolve_chunk_len_self_inf(self.cfg.chunk_len, self.store.k()),
+        )
     }
 
-    /// Override the scan chunk length (rows per kernel call); 0 restores
-    /// the auto derivation (chunk + test block sized to fit L2).
-    pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
-        self.cfg.chunk_len = chunk_len;
-        self
-    }
-
-    /// Record per-shard scan counters into shared service metrics.
-    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
-        self.metrics = Some(metrics);
-        self
-    }
-
-    /// Run scans on a persistent [`ScanPool`] instead of spawning scoped
-    /// threads per query.
-    pub fn with_pool(mut self, pool: Arc<ScanPool>) -> Self {
-        self.pool = Some(pool);
-        self
-    }
-
-    /// Resolved worker count: the pool's actual count when attached, else
-    /// the per-query spawn resolution (never more than there are shards).
-    pub fn workers(&self) -> usize {
-        match &self.pool {
-            Some(pool) => pool.workers(),
-            None => resolve_workers(self.cfg.workers, self.store.n_shards()),
-        }
-    }
-
-    /// Full scan: top-k most valuable train examples per test row, merged
-    /// across shards. Same contract as the sequential
-    /// [`QueryEngine::query`](super::QueryEngine::query) (`test_grads`
-    /// row-major [nt, k], raw — preconditioning happens here), same
-    /// results.
-    pub fn query(
-        &self,
-        test_grads: &[f32],
-        nt: usize,
-        topk: usize,
-        norm: Normalization,
-    ) -> Result<Vec<QueryResult>> {
-        self.query_async(test_grads, nt, topk, norm)?.wait()
-    }
-
-    /// Admit a query without blocking on the scan: the shard fan-out runs
-    /// on the attached pool (or eagerly, per-query spawned, without one)
-    /// and [`PendingQuery::wait`] performs the deterministic merge.
-    pub fn query_async(
-        &self,
-        test_grads: &[f32],
-        nt: usize,
-        topk: usize,
-        norm: Normalization,
-    ) -> Result<PendingQuery> {
+    /// Admission body behind [`ScanBackend::submit`]: fan the shard
+    /// scan out (pool or per-query spawn) and package the deterministic
+    /// merge into the shared completion handle.
+    fn submit_grads(&self, q: GradQuery) -> Result<PendingScores, ValuationError> {
+        let GradQuery { rows: test_grads, nt, topk, norm } = q;
         let k = self.store.k();
-        ensure!(
-            test_grads.len() == nt * k,
-            "query: {nt} rows x k={k} needs {} floats, got {}",
-            nt * k,
-            test_grads.len()
-        );
-        let pre = Arc::new(self.precond.apply_rows(test_grads, nt));
+        let pre = Arc::new(self.precond.apply_rows(&test_grads, nt));
         let selfs: Option<Arc<Vec<f32>>> = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
             Normalization::None => None,
         };
         let chunk_len = resolve_chunk_len_f32(self.cfg.chunk_len, k, nt);
-        if let Some(m) = &self.metrics {
+        if let Some(m) = &self.cfg.metrics {
             m.scan_chunk_len.store(chunk_len as u64, std::sync::atomic::Ordering::Relaxed);
         }
-        let scan = match &self.pool {
+        let scan = match &self.cfg.pool {
             Some(pool) => {
                 let store = self.store.clone();
-                let metrics = self.metrics.clone();
+                let metrics = self.cfg.metrics.clone();
                 let pre = pre.clone();
                 let selfs = selfs.clone();
                 ScanHandle::Pool(pool.submit_with_scratch(
@@ -213,7 +148,7 @@ impl ParallelQueryEngine {
             }
             None => {
                 let store = &self.store;
-                let metrics = self.metrics.as_deref();
+                let metrics = self.cfg.metrics.as_deref();
                 let pre_rows: &[f32] = &pre;
                 let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
                 ScanHandle::Ready(scatter_gather(
@@ -235,34 +170,63 @@ impl ParallelQueryEngine {
                 ))
             }
         };
-        Ok(PendingQuery { scan, nt, topk })
+        Ok(PendingScores::merge(PendingMerge { scan, nt, topk }))
+    }
+}
+
+impl ScanBackend for ParallelQueryEngine {
+    fn submit(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
+        self.submit_grads(req.resolve(self.cfg.norm, self.store.k())?)
     }
 
-    /// Self-influence of each stored row in global order (computed once in
-    /// parallel on scoped threads, then cached; concurrent callers block on
-    /// the first computation and share the result).
-    pub fn train_self_influences(&self) -> Arc<Vec<f32>> {
-        cached_self_influences(
-            &self.self_inf,
-            &self.store,
-            &self.precond,
-            resolve_workers(self.cfg.workers, self.store.n_shards()),
-            resolve_chunk_len_self_inf(self.cfg.chunk_len, self.store.k()),
-        )
+    fn kind(&self) -> BackendKind {
+        BackendKind::Parallel
+    }
+
+    fn rows(&self) -> usize {
+        self.store.rows()
+    }
+
+    fn k(&self) -> usize {
+        self.store.k()
+    }
+
+    /// Resolved worker count: the pool's actual count when attached, else
+    /// the per-query spawn resolution (never more than there are shards).
+    fn workers(&self) -> usize {
+        match &self.cfg.pool {
+            Some(pool) => pool.workers(),
+            None => resolve_workers(self.cfg.workers, self.store.n_shards()),
+        }
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn gradient_row(&self, i: usize) -> Option<Vec<f32>> {
+        (i < self.store.rows()).then(|| self.store.row(i).to_vec())
     }
 }
 
 /// An admitted parallel query: per-shard heaps in flight (or ready), plus
-/// the merge parameters. `wait` performs the shard-major deterministic
-/// merge — identical to the synchronous path.
-pub struct PendingQuery {
+/// the merge parameters. `finish` performs the shard-major deterministic
+/// merge — identical to the synchronous path. Callers hold this inside the
+/// shared [`PendingScores`] handle.
+pub(crate) struct PendingMerge {
     scan: ScanHandle,
     nt: usize,
     topk: usize,
 }
 
-impl PendingQuery {
-    pub fn wait(self) -> Result<Vec<QueryResult>> {
+impl PendingMerge {
+    /// True when the scan already ran at admission (per-query spawn path):
+    /// only the local merge remains, so `finish` cannot block.
+    pub(crate) fn is_eager(&self) -> bool {
+        matches!(self.scan, ScanHandle::Ready(_))
+    }
+
+    pub(crate) fn finish(self) -> Result<Vec<QueryResult>, ValuationError> {
         let shard_heaps = self.scan.wait()?;
         // Deterministic merge, shard-major: with TopK's total order the
         // merged set equals the sequential scan's set; into_sorted then
@@ -290,7 +254,7 @@ pub(crate) fn resolve_workers(requested: usize, n_shards: usize) -> usize {
 /// per-query-spawn twin of the pool's per-worker scratch. Work
 /// distribution goes through a bounded pipeline channel so an uneven
 /// shard mix load-balances. This is the one-shot path; long-lived serving
-/// goes through [`ScanPool`]. Shared with the two-stage quantized engine
+/// goes through [`super::ScanPool`]. Shared with the two-stage quantized engine
 /// ([`super::twostage`]), whose stage-1 scan is the same fan-out over
 /// quantized shards.
 pub(crate) fn scatter_gather<T, F>(workers: usize, n_shards: usize, job: &F) -> Vec<T>

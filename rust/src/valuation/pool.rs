@@ -34,7 +34,7 @@
 //!   counters (they saturate after warmup; the zero-alloc observable).
 //!
 //! The pool is also the single authority for resolving
-//! `ParallelScanConfig::workers == 0` ([`auto_workers`]), so service
+//! `BackendConfig::workers == 0` ([`auto_workers`]), so service
 //! metrics can report the worker count actually spawned.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -42,11 +42,11 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use crate::linalg::ScanScratch;
 use crate::util::pipeline::{bounded, Receiver, Sender};
 use crate::util::topk::TopK;
+
+use super::backend::ValuationError;
 
 /// Resolve a requested worker count: 0 = one per available core, capped at
 /// 16. THE single resolution point for `workers = 0` — the per-query
@@ -79,7 +79,7 @@ struct JobInner {
     remaining: AtomicUsize,
     /// First panic message, if any task of this query panicked.
     failed: Mutex<Option<String>>,
-    done: Sender<Result<ShardHeaps>>,
+    done: Sender<Result<ShardHeaps, ValuationError>>,
     query_id: u64,
     metrics: Arc<PoolMetrics>,
 }
@@ -88,7 +88,7 @@ type Task = (Arc<JobInner>, usize);
 
 /// Handle to one submitted query's eventual result.
 pub struct PendingScan {
-    rx: Receiver<Result<ShardHeaps>>,
+    rx: Receiver<Result<ShardHeaps, ValuationError>>,
     query_id: u64,
 }
 
@@ -98,14 +98,16 @@ impl PendingScan {
     }
 
     /// Block until every shard task of this query has run; returns the
-    /// per-shard heaps in shard order.
-    pub fn wait(self) -> Result<ShardHeaps> {
+    /// per-shard heaps in shard order. A panicking shard task surfaces as
+    /// [`ValuationError::QueryPoisoned`] — distinguishable from a pool
+    /// shutdown, and scoped to this query alone.
+    pub fn wait(self) -> Result<ShardHeaps, ValuationError> {
         match self.rx.recv() {
             Some(res) => res,
-            None => Err(anyhow!(
+            None => Err(ValuationError::Internal(format!(
                 "scan pool dropped query {} before completion",
                 self.query_id
-            )),
+            ))),
         }
     }
 }
@@ -119,7 +121,7 @@ pub enum ScanHandle {
 }
 
 impl ScanHandle {
-    pub fn wait(self) -> Result<ShardHeaps> {
+    pub fn wait(self) -> Result<ShardHeaps, ValuationError> {
         match self {
             ScanHandle::Ready(heaps) => Ok(heaps),
             ScanHandle::Pool(pending) => pending.wait(),
@@ -248,7 +250,7 @@ impl ScanPool {
     /// for the per-shard heaps (shard order). Scratch-oblivious
     /// convenience over [`submit_with_scratch`](Self::submit_with_scratch)
     /// (which the scan engines use to reach the zero-alloc kernels).
-    pub fn submit<F>(&self, n_shards: usize, scan: F) -> Result<PendingScan>
+    pub fn submit<F>(&self, n_shards: usize, scan: F) -> Result<PendingScan, ValuationError>
     where
         F: Fn(usize) -> Vec<TopK> + Send + Sync + 'static,
     {
@@ -260,12 +262,16 @@ impl ScanPool {
     /// the serving path's entry point: kernels write into the leased
     /// buffers, so a warm pool's scan loop performs no per-chunk heap
     /// allocation.
-    pub fn submit_with_scratch<F>(&self, n_shards: usize, scan: F) -> Result<PendingScan>
+    pub fn submit_with_scratch<F>(
+        &self,
+        n_shards: usize,
+        scan: F,
+    ) -> Result<PendingScan, ValuationError>
     where
         F: Fn(usize, &mut ScanScratch) -> Vec<TopK> + Send + Sync + 'static,
     {
         let query_id = self.next_query.fetch_add(1, Ordering::Relaxed);
-        let (done_tx, done_rx) = bounded::<Result<ShardHeaps>>(1);
+        let (done_tx, done_rx) = bounded::<Result<ShardHeaps, ValuationError>>(1);
         if n_shards == 0 {
             // Nothing to scan: complete immediately, but still count the
             // query so PoolSnapshot totals match submit() calls.
@@ -286,12 +292,12 @@ impl ScanPool {
         // Clone the sender OUT of the lock so a full job queue blocks only
         // this submitter, never shutdown or sibling submitters.
         let tx = self.job_tx.lock().unwrap().as_ref().cloned();
-        let tx = tx.ok_or_else(|| anyhow!("scan pool is shut down"))?;
+        let tx = tx.ok_or(ValuationError::Shutdown)?;
         self.metrics.in_flight.fetch_add(1, Ordering::Relaxed);
         self.metrics.queries_submitted.fetch_add(1, Ordering::Relaxed);
         if tx.send(job).is_err() {
             self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
-            return Err(anyhow!("scan pool dispatcher died"));
+            return Err(ValuationError::Internal("scan pool dispatcher died".into()));
         }
         Ok(PendingScan { rx: done_rx, query_id })
     }
@@ -411,10 +417,9 @@ fn run_task(job: &Arc<JobInner>, si: usize, busy: &AtomicU64, scratch: &mut Scan
 fn finish(job: &Arc<JobInner>) {
     let failed = job.failed.lock().unwrap().take();
     let res = match failed {
-        Some(msg) => Err(anyhow!(
-            "scan pool query {}: shard scan task panicked: {msg}",
-            job.query_id
-        )),
+        Some(message) => {
+            Err(ValuationError::QueryPoisoned { query_id: job.query_id, message })
+        }
         None => {
             let mut slots = job.slots.lock().unwrap();
             let mut out = Vec::with_capacity(slots.len());
@@ -429,10 +434,10 @@ fn finish(job: &Arc<JobInner>) {
                 }
             }
             match missing {
-                Some(si) => Err(anyhow!(
+                Some(si) => Err(ValuationError::Internal(format!(
                     "scan pool query {}: shard {si} produced no result (pool bug)",
                     job.query_id
-                )),
+                ))),
                 None => Ok(out),
             }
         }
@@ -522,9 +527,14 @@ mod tests {
             .unwrap();
         let after = pool.submit(4, |si| one_heap(3.0, si as u64)).unwrap();
         assert_eq!(healthy.wait().unwrap().len(), 4);
-        let err = poisoned.wait().unwrap_err().to_string();
-        assert!(err.contains("panicked"), "unexpected error: {err}");
-        assert!(err.contains("poisoned shard"), "message lost: {err}");
+        let err = poisoned.wait().unwrap_err();
+        assert!(
+            matches!(err, ValuationError::QueryPoisoned { .. }),
+            "expected QueryPoisoned, got {err:?}"
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("panicked"), "unexpected error: {msg}");
+        assert!(msg.contains("poisoned shard"), "message lost: {msg}");
         assert_eq!(after.wait().unwrap().len(), 4);
         let snap = pool.snapshot();
         assert_eq!(snap.tasks_failed, 1);

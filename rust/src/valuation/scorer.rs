@@ -14,14 +14,28 @@ use crate::store::GradStore;
 use crate::util::topk::TopK;
 
 /// Score normalization mode.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Normalization {
-    /// Raw influence g_te^T (H+λI)^{-1} g_tr.
+    /// Raw influence g_te^T (H+λI)^{-1} g_tr (the default).
+    #[default]
     None,
     /// ℓ-RelatIF (Barshan et al.; paper §4.2): influence divided by
     /// sqrt(self-influence of the train example) — suppresses the
     /// high-gradient-norm outliers that otherwise dominate LM valuation.
     RelatIf,
+}
+
+impl Normalization {
+    /// Parse a CLI flag value: `none` | `relatif`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(Normalization::None),
+            "relatif" => Ok(Normalization::RelatIf),
+            other => Err(anyhow::anyhow!(
+                "unknown normalization {other:?}; try none|relatif"
+            )),
+        }
+    }
 }
 
 /// Top-k result for one query row.

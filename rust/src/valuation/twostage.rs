@@ -12,9 +12,9 @@
 //!
 //! Stage 1 fans out per shard either on per-query scoped threads (the same
 //! scatter/gather path as [`ParallelQueryEngine`](super::ParallelQueryEngine))
-//! or on a persistent [`ScanPool`](super::ScanPool) attached with
-//! [`TwoStageEngine::with_pool`], where concurrent queries interleave their
-//! shard tasks on warm workers. Per-shard pools merge with [`TopK`]'s total
+//! or on a persistent [`ScanPool`](super::ScanPool) attached via
+//! [`BackendConfig::pool`](super::BackendConfig), where concurrent queries
+//! interleave their shard tasks on warm workers. Per-shard pools merge with [`TopK`]'s total
 //! order, so the candidate pool — and therefore the final result — is
 //! deterministic for any shard decomposition, worker count, and
 //! interleaving. Stage-2 scores are computed with the same f32 dot
@@ -34,8 +34,6 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
-
 use crate::coordinator::metrics::Metrics;
 use crate::hessian::Preconditioner;
 use crate::linalg::kernels::{auto_chunk_len, dot_f32, scan_q8_into};
@@ -44,33 +42,15 @@ use crate::store::quant::{blocks_of, quantize_rows, QuantShardedStore};
 use crate::store::ShardedStore;
 use crate::util::topk::TopK;
 
+use super::backend::{
+    BackendConfig, BackendKind, GradQuery, PendingScores, QueryRequest, ScanBackend,
+    ValuationError,
+};
 use super::parallel::{
     cached_self_influences, resolve_chunk_len_self_inf, resolve_workers, scatter_gather,
 };
-use super::pool::{ScanHandle, ScanPool};
+use super::pool::ScanHandle;
 use super::scorer::{Normalization, QueryResult};
-
-/// Knobs for the two-stage scan.
-#[derive(Clone, Copy, Debug)]
-pub struct TwoStageConfig {
-    /// Worker threads for the stage-1 shard fan-out; 0 = one per core.
-    /// Ignored when a [`ScanPool`] is attached (the pool is authoritative).
-    pub workers: usize,
-    /// Rows scored per chunk within a shard; 0 (the default) derives the
-    /// chunk from the query shape and the int8 row size so one quantized
-    /// chunk + the test block fit L2 ([`auto_chunk_len`]) — quantized rows
-    /// are ~4x smaller, so auto chunks run ~4x longer than the f32 scan's.
-    pub chunk_len: usize,
-    /// Stage-1 candidate pool per test row, as a multiple of the requested
-    /// top-k (clamped to at least 1; pools never exceed the corpus).
-    pub rescore_factor: usize,
-}
-
-impl Default for TwoStageConfig {
-    fn default() -> Self {
-        TwoStageConfig { workers: 0, chunk_len: 0, rescore_factor: 4 }
-    }
-}
 
 /// Two-stage influence scorer: quantized coarse scan + exact rescore.
 /// `Send + Sync` — share behind an `Arc` and query concurrently.
@@ -78,9 +58,7 @@ pub struct TwoStageEngine {
     quant: Arc<QuantShardedStore>,
     exact: Arc<ShardedStore>,
     precond: Arc<Preconditioner>,
-    cfg: TwoStageConfig,
-    metrics: Option<Arc<Metrics>>,
-    pool: Option<Arc<ScanPool>>,
+    cfg: BackendConfig,
     /// Self-influence per GLOBAL row (RelatIF denominators), computed from
     /// the EXACT store — both stages divide by the same denominators.
     self_inf: Mutex<Option<Arc<Vec<f32>>>>,
@@ -88,72 +66,35 @@ pub struct TwoStageEngine {
 
 impl TwoStageEngine {
     /// The quantized copy must mirror the exact store row-for-row (use
-    /// `quantize_store`, which preserves global order and ids).
+    /// `quantize_store`, which preserves global order and ids). Rejects a
+    /// stale or mismatched pairing — and a zero `rescore_factor` — with a
+    /// typed [`ValuationError`] at construction.
     pub fn new(
         quant: Arc<QuantShardedStore>,
         exact: Arc<ShardedStore>,
         precond: Arc<Preconditioner>,
-    ) -> Result<Self> {
-        ensure!(
-            quant.k() == exact.k(),
-            "quantized store k={} disagrees with exact store k={}",
-            quant.k(),
-            exact.k()
-        );
-        ensure!(
-            quant.rows() == exact.rows(),
-            "quantized store has {} rows, exact store {} — stale quantized copy?",
-            quant.rows(),
-            exact.rows()
-        );
-        Ok(TwoStageEngine {
-            quant,
-            exact,
-            precond,
-            cfg: TwoStageConfig::default(),
-            metrics: None,
-            pool: None,
-            self_inf: Mutex::new(None),
-        })
-    }
-
-    /// Set worker count (0 = auto) for the per-query spawn path.
-    pub fn with_workers(mut self, workers: usize) -> Self {
-        self.cfg.workers = workers;
-        self
-    }
-
-    /// Override the stage-1 scan chunk length (rows per kernel call); 0
-    /// restores the auto derivation (int8 chunk + test block fit L2).
-    pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
-        self.cfg.chunk_len = chunk_len;
-        self
-    }
-
-    pub fn with_rescore_factor(mut self, factor: usize) -> Self {
-        self.cfg.rescore_factor = factor.max(1);
-        self
-    }
-
-    /// Record stage timings and candidate counts into shared metrics.
-    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
-        self.metrics = Some(metrics);
-        self
-    }
-
-    /// Run stage-1 scans on a persistent [`ScanPool`] instead of spawning
-    /// scoped threads per query.
-    pub fn with_pool(mut self, pool: Arc<ScanPool>) -> Self {
-        self.pool = Some(pool);
-        self
-    }
-
-    /// Resolved stage-1 worker count (the pool's when attached).
-    pub fn workers(&self) -> usize {
-        match &self.pool {
-            Some(pool) => pool.workers(),
-            None => resolve_workers(self.cfg.workers, self.quant.n_shards()),
+        cfg: BackendConfig,
+    ) -> Result<Self, ValuationError> {
+        if quant.k() != exact.k() {
+            return Err(ValuationError::InvalidConfig(format!(
+                "quantized store k={} disagrees with exact store k={}",
+                quant.k(),
+                exact.k()
+            )));
         }
+        if quant.rows() != exact.rows() {
+            return Err(ValuationError::InvalidConfig(format!(
+                "quantized store has {} rows, exact store {} — stale quantized copy?",
+                quant.rows(),
+                exact.rows()
+            )));
+        }
+        if cfg.rescore_factor == 0 {
+            return Err(ValuationError::InvalidConfig(
+                "rescore_factor must be ≥ 1 (stage-1 candidate pool multiplier)".into(),
+            ));
+        }
+        Ok(TwoStageEngine { quant, exact, precond, cfg, self_inf: Mutex::new(None) })
     }
 
     /// Stage-1 candidate pool size for a requested top-k.
@@ -178,38 +119,13 @@ impl TwoStageEngine {
         )
     }
 
-    /// Top-k most valuable train examples per test row. Same contract as
-    /// [`QueryEngine::query`](super::QueryEngine::query): `test_grads` is
-    /// row-major [nt, k] of RAW projected test gradients.
-    pub fn query(
-        &self,
-        test_grads: &[f32],
-        nt: usize,
-        topk: usize,
-        norm: Normalization,
-    ) -> Result<Vec<QueryResult>> {
-        self.query_async(test_grads, nt, topk, norm)?.wait()
-    }
-
-    /// Admit a query without blocking on stage 1: the coarse scan runs on
-    /// the attached pool (or eagerly without one);
-    /// [`PendingTwoStage::wait`] merges the candidate pools and performs
-    /// the exact rescore on the calling thread.
-    pub fn query_async(
-        &self,
-        test_grads: &[f32],
-        nt: usize,
-        topk: usize,
-        norm: Normalization,
-    ) -> Result<PendingTwoStage> {
+    /// Admission body behind [`ScanBackend::submit`]: run (or enqueue) the
+    /// stage-1 coarse scan; the returned handle's `wait` merges candidate
+    /// pools and performs the exact rescore on the calling thread.
+    fn submit_grads(&self, q: GradQuery) -> Result<PendingScores, ValuationError> {
+        let GradQuery { rows: test_grads, nt, topk, norm } = q;
         let k = self.exact.k();
-        ensure!(
-            test_grads.len() == nt * k,
-            "query: {nt} rows x k={k} needs {} floats, got {}",
-            nt * k,
-            test_grads.len()
-        );
-        let pre = self.precond.apply_rows(test_grads, nt);
+        let pre = self.precond.apply_rows(&test_grads, nt);
         let selfs: Option<Arc<Vec<f32>>> = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
             Normalization::None => None,
@@ -231,13 +147,13 @@ impl TwoStageEngine {
             } else {
                 auto_chunk_len(k, nt, q8_row_bytes)
             };
-            if let Some(m) = &self.metrics {
+            if let Some(m) = &self.cfg.metrics {
                 m.scan_chunk_len.store(chunk_len as u64, std::sync::atomic::Ordering::Relaxed);
             }
-            match &self.pool {
+            match &self.cfg.pool {
                 Some(pool) => {
                     let quant = self.quant.clone();
-                    let metrics = self.metrics.clone();
+                    let metrics = self.cfg.metrics.clone();
                     let selfs = selfs.clone();
                     let t_codes = Arc::new(t_codes);
                     let t_scales = Arc::new(t_scales);
@@ -261,7 +177,7 @@ impl TwoStageEngine {
                 }
                 None => {
                     let quant = &self.quant;
-                    let met = self.metrics.as_deref();
+                    let met = self.cfg.metrics.as_deref();
                     let tc: &[i8] = &t_codes;
                     let ts: &[f32] = &t_scales;
                     let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
@@ -286,25 +202,62 @@ impl TwoStageEngine {
                 }
             }
         };
-        Ok(PendingTwoStage {
+        Ok(PendingScores::rescore(PendingRescore {
             scan,
             pre,
             selfs,
             exact: self.exact.clone(),
-            metrics: self.metrics.clone(),
+            metrics: self.cfg.metrics.clone(),
             nt,
             topk,
             pool_size,
             t0,
-        })
+        }))
+    }
+}
+
+impl ScanBackend for TwoStageEngine {
+    fn submit(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
+        self.submit_grads(req.resolve(self.cfg.norm, self.exact.k())?)
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::TwoStage
+    }
+
+    fn rows(&self) -> usize {
+        self.exact.rows()
+    }
+
+    fn k(&self) -> usize {
+        self.exact.k()
+    }
+
+    /// Resolved stage-1 worker count (the pool's when attached).
+    fn workers(&self) -> usize {
+        match &self.cfg.pool {
+            Some(pool) => pool.workers(),
+            None => resolve_workers(self.cfg.workers, self.quant.n_shards()),
+        }
+    }
+
+    /// Approximate: exactness depends on the rescore pool covering the
+    /// corpus (`rescore_factor × topk ≥ rows`), a per-request property.
+    fn exact(&self) -> bool {
+        false
+    }
+
+    fn gradient_row(&self, i: usize) -> Option<Vec<f32>> {
+        (i < self.exact.rows()).then(|| self.exact.row(i).to_vec())
     }
 }
 
 /// An admitted two-stage query: stage-1 shard pools in flight (or ready).
-/// `wait` merges them deterministically and runs the exact stage-2 rescore
-/// on the calling thread — same math, same order, same results as the
-/// synchronous path.
-pub struct PendingTwoStage {
+/// `finish` merges them deterministically and runs the exact stage-2
+/// rescore on the calling thread — same math, same order, same results as
+/// the synchronous path. Callers hold this inside the shared
+/// [`PendingScores`] handle.
+pub(crate) struct PendingRescore {
     scan: ScanHandle,
     /// Preconditioned test rows [nt, k] — stage 2 rescores against these.
     pre: Vec<f32>,
@@ -318,8 +271,8 @@ pub struct PendingTwoStage {
     t0: Instant,
 }
 
-impl PendingTwoStage {
-    pub fn wait(self) -> Result<Vec<QueryResult>> {
+impl PendingRescore {
+    pub(crate) fn finish(self) -> Result<Vec<QueryResult>, ValuationError> {
         let k = self.exact.k();
         let shard_pools = self.scan.wait()?;
         let mut pools: Vec<TopK> = (0..self.nt).map(|_| TopK::new(self.pool_size)).collect();

@@ -1,0 +1,464 @@
+//! `ScanBackend` trait + `Valuator` facade integration tests
+//! (artifact-free: native scoring only).
+//!
+//! Load-bearing properties of the unified query seam:
+//!
+//! 1. **Trait-object equivalence**: all three backends behind
+//!    `Box<dyn ScanBackend>` — sequential, parallel-f32, and two-stage
+//!    with a corpus-covering rescore pool — are bit-identical to the
+//!    sequential `QueryEngine` native reference, for both normalizations,
+//!    with and without a shared scan pool. This extends the pool/twostage
+//!    invariants to the new seam: the trait boundary cannot move a bit.
+//! 2. **Facade auto-detection**: `Valuator::open` + `Backend::Auto`
+//!    serves an f32 fabric and a quantized fabric with zero
+//!    codec-specific caller code (the quantized manifest records its
+//!    exact companion), and per-request `topk` / normalization overrides
+//!    thread through `QueryRequest`.
+//! 3. **Typed error paths**: construction-time validation
+//!    (`InvalidConfig`), store pairing failures, token queries on
+//!    runtime-free backends (`BadQuery`), pool-worker panics
+//!    (`QueryPoisoned`), and `ServiceConfig` validation at `spawn` —
+//!    all typed, none panicking deep in a worker.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use logra::hessian::BlockHessian;
+use logra::store::{
+    quantize_store, shard_store, GradStore, GradStoreWriter, QuantShardedStore, ShardManifest,
+    ShardedStore,
+};
+use logra::util::rng::Pcg32;
+use logra::valuation::{
+    Backend, BackendConfig, BackendKind, Normalization, ParallelQueryEngine, PoolMode,
+    QueryEngine, QueryRequest, ScanBackend, ScanPool, SequentialEngine, TwoStageEngine,
+    ValuationError, Valuator,
+};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-backend-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a v1 store with shuffled (non-sequential) ids so id-based
+/// tie-breaking is exercised honestly.
+fn write_store(dir: &Path, n: usize, k: usize, rng: &mut Pcg32) -> (Vec<u64>, Vec<f32>) {
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let mut ids: Vec<u64> = (0..n as u64).map(|i| i * 7 + 1000).collect();
+    rng.shuffle(&mut ids);
+    let mut w = GradStoreWriter::create(dir, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    (ids, rows)
+}
+
+fn make_precond(rows: &[f32], n: usize, k: usize) -> logra::hessian::Preconditioner {
+    let mut h = BlockHessian::single_block(k);
+    h.accumulate(rows, n);
+    h.preconditioner(0.1).unwrap()
+}
+
+#[test]
+fn all_backends_behind_the_trait_are_bit_identical_to_sequential() {
+    let k = 14;
+    let n = 330;
+    let n_shards = 5;
+    let nt = 3;
+    let topk = 8;
+    let src = tmpdir("equiv-src");
+    let mut rng = Pcg32::seeded(2024);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("equiv-sharded");
+    shard_store(&src, &sharded, n_shards).unwrap();
+    let quant_dir = tmpdir("equiv-quant");
+    quantize_store(&sharded, &quant_dir).unwrap();
+
+    let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
+    let single = GradStore::open(&src).unwrap();
+    let precond = Arc::new(make_precond(&rows, n, k));
+    let seq_ref = QueryEngine::new_native(&single, &precond, 64);
+    // Corpus-covering rescore pool: the regime where the two-stage backend
+    // must reproduce the exact engine bit-identically.
+    let factor = n.div_ceil(topk) + 1;
+    let mut test = vec![0.0f32; nt * k];
+    rng.fill_normal(&mut test, 1.0);
+
+    // Pooled and unpooled execution substrates for the fan-out backends.
+    let pool = Arc::new(ScanPool::spawn(2));
+    for pooled in [false, true] {
+        let pool_opt = pooled.then(|| pool.clone());
+        let backends: Vec<(&str, Box<dyn ScanBackend>)> = vec![
+            (
+                "sequential",
+                Box::new(SequentialEngine::new(
+                    exact.clone(),
+                    precond.clone(),
+                    BackendConfig { chunk_len: 32, ..Default::default() },
+                )),
+            ),
+            (
+                "parallel-f32",
+                Box::new(ParallelQueryEngine::new(
+                    exact.clone(),
+                    precond.clone(),
+                    BackendConfig {
+                        workers: 2,
+                        chunk_len: 32,
+                        pool: pool_opt.clone(),
+                        ..Default::default()
+                    },
+                )),
+            ),
+            (
+                "two-stage",
+                Box::new(
+                    TwoStageEngine::new(
+                        quant.clone(),
+                        exact.clone(),
+                        precond.clone(),
+                        BackendConfig {
+                            workers: 2,
+                            chunk_len: 32,
+                            rescore_factor: factor,
+                            pool: pool_opt.clone(),
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap(),
+                ),
+            ),
+        ];
+        for norm in [Normalization::None, Normalization::RelatIf] {
+            let want = seq_ref.query(&test, nt, topk, norm).unwrap();
+            for (name, backend) in &backends {
+                assert_eq!(backend.rows(), n, "{name}: rows");
+                assert_eq!(backend.k(), k, "{name}: k");
+                let got = backend
+                    .query(QueryRequest::gradients(test.clone(), nt, topk).with_norm(norm))
+                    .unwrap();
+                assert_eq!(got.len(), want.len(), "{name}: result count");
+                for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.top, b.top,
+                        "{name} (pooled {pooled}, norm {norm:?}) diverged from the \
+                         sequential reference on test row {t}"
+                    );
+                }
+            }
+        }
+        // Introspection: kinds and exactness are what they claim.
+        assert_eq!(backends[0].1.kind(), BackendKind::Sequential);
+        assert_eq!(backends[1].1.kind(), BackendKind::Parallel);
+        assert_eq!(backends[2].1.kind(), BackendKind::TwoStage);
+        assert!(backends[0].1.exact() && backends[1].1.exact());
+        assert!(!backends[2].1.exact());
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn valuator_auto_serves_f32_and_quantized_fabrics_identically() {
+    let k = 10;
+    let n = 240;
+    let nt = 2;
+    let topk = 6;
+    let src = tmpdir("auto-src");
+    let mut rng = Pcg32::seeded(7);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("auto-sharded");
+    shard_store(&src, &sharded, 4).unwrap();
+    let quant_dir = tmpdir("auto-quant");
+    quantize_store(&sharded, &quant_dir).unwrap();
+    // The quantized manifest recorded its exact companion.
+    assert!(ShardManifest::load(&quant_dir).unwrap().rescore_dir.is_some());
+
+    let single = GradStore::open(&src).unwrap();
+    let precond = Arc::new(make_precond(&rows, n, k));
+    let seq_ref = QueryEngine::new_native(&single, &precond, 32);
+    let mut test = vec![0.0f32; nt * k];
+    rng.fill_normal(&mut test, 1.0);
+    let factor = n.div_ceil(topk) + 1;
+
+    // ONE caller shape for three fabrics: unsharded f32 (sequential),
+    // sharded f32 (parallel), quantized (two-stage against the recorded
+    // companion) — zero codec-specific code here.
+    for (dir, want_kind, backend) in [
+        (&src, BackendKind::Sequential, Backend::Auto),
+        (&sharded, BackendKind::Parallel, Backend::Auto),
+        (&quant_dir, BackendKind::TwoStage, Backend::Quantized { rescore_factor: factor }),
+    ] {
+        let valuator = Valuator::open(dir)
+            .unwrap()
+            .backend(backend)
+            .preconditioner(precond.clone())
+            .build()
+            .unwrap();
+        assert_eq!(valuator.kind(), want_kind, "{}", dir.display());
+        assert_eq!(valuator.rows(), n);
+        for norm in [Normalization::None, Normalization::RelatIf] {
+            let want = seq_ref.query(&test, nt, topk, norm).unwrap();
+            let got = valuator
+                .query(QueryRequest::gradients(test.clone(), nt, topk).with_norm(norm))
+                .unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.top, b.top, "{} (norm {norm:?})", dir.display());
+            }
+        }
+        // Per-request topk override: a smaller request truncates.
+        let small = valuator.query(QueryRequest::gradients(test.clone(), nt, 2)).unwrap();
+        assert_eq!(small[0].top.len(), 2);
+        // Query-by-gradient convenience: a stored row retrieves itself
+        // under RelatIF (it has maximal normalized self-affinity).
+        let g0 = valuator.gradient_row(0).unwrap();
+        let id0 = single.id(0);
+        let hit = valuator
+            .query(QueryRequest::gradients(g0, 1, 3).with_norm(Normalization::RelatIf))
+            .unwrap();
+        assert!(
+            hit[0].top.iter().any(|&(_, id)| id == id0),
+            "row 0 (id {id0}) missing from its own top-3: {:?}",
+            hit[0].top
+        );
+        valuator.shutdown();
+    }
+
+    // Backend::Exact over the quantized fabric serves the f32 companion.
+    let exact_over_quant = Valuator::open(&quant_dir)
+        .unwrap()
+        .backend(Backend::Exact)
+        .preconditioner(precond.clone())
+        .build()
+        .unwrap();
+    assert_eq!(exact_over_quant.kind(), BackendKind::Parallel);
+    let want = seq_ref.query(&test, nt, topk, Normalization::None).unwrap();
+    let got = exact_over_quant
+        .query(QueryRequest::gradients(test.clone(), nt, topk))
+        .unwrap();
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.top, b.top, "exact-over-quantized fabric");
+    }
+}
+
+#[test]
+fn query_batch_admits_everything_then_completes_in_order() {
+    let k = 8;
+    let n = 160;
+    let src = tmpdir("batch-src");
+    let mut rng = Pcg32::seeded(11);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let sharded = tmpdir("batch-sharded");
+    shard_store(&src, &sharded, 4).unwrap();
+    let single = GradStore::open(&src).unwrap();
+    let precond = Arc::new(make_precond(&rows, n, k));
+    let seq_ref = QueryEngine::new_native(&single, &precond, 32);
+
+    let valuator = Valuator::open(&sharded)
+        .unwrap()
+        .preconditioner(precond.clone())
+        .pool(PoolMode::Auto)
+        .workers(2)
+        .build()
+        .unwrap();
+    assert!(valuator.scan_pool().is_some(), "Auto pool on a sharded fabric");
+
+    let mut reqs = Vec::new();
+    let mut wants = Vec::new();
+    for q in 0..6 {
+        let mut test = vec![0.0f32; k];
+        rng.fill_normal(&mut test, 1.0);
+        let norm =
+            if q % 2 == 0 { Normalization::None } else { Normalization::RelatIf };
+        wants.push(seq_ref.query(&test, 1, 5, norm).unwrap());
+        reqs.push(QueryRequest::gradients(test, 1, 5).with_norm(norm));
+    }
+    let results = valuator.query_batch(reqs).unwrap();
+    assert_eq!(results.len(), wants.len());
+    for (q, (got, want)) in results.iter().zip(&wants).enumerate() {
+        assert_eq!(got[0].top, want[0].top, "batched query {q}");
+    }
+    valuator.shutdown();
+
+    // A PoolMode::Shared pool belongs to the caller: a sibling valuator's
+    // shutdown must leave it serving.
+    let shared = Arc::new(ScanPool::spawn(1));
+    let sibling = Valuator::open(&sharded)
+        .unwrap()
+        .preconditioner(precond.clone())
+        .pool(PoolMode::Shared(shared.clone()))
+        .build()
+        .unwrap();
+    sibling.shutdown();
+    assert!(
+        shared.submit(0, |_| Vec::new()).is_ok(),
+        "shared pool must survive a sibling valuator's shutdown"
+    );
+    shared.shutdown();
+}
+
+#[test]
+fn typed_error_paths() {
+    let k = 6;
+    let n = 40;
+    let src = tmpdir("errors-src");
+    let mut rng = Pcg32::seeded(5);
+    let (_, rows) = write_store(&src, n, k, &mut rng);
+    let precond = Arc::new(make_precond(&rows, n, k));
+
+    // Missing directory -> StoreOpen.
+    let missing = tmpdir("errors-missing").join("nope");
+    assert!(matches!(
+        Valuator::open(&missing).err(),
+        Some(ValuationError::StoreOpen { .. })
+    ));
+
+    // No preconditioner -> InvalidConfig at build, not a panic at query.
+    let err = Valuator::open(&src).unwrap().build().unwrap_err();
+    assert!(matches!(err, ValuationError::InvalidConfig(_)), "{err:?}");
+
+    // Quantized backend on an f32 fabric -> InvalidConfig.
+    let err = Valuator::open(&src)
+        .unwrap()
+        .backend(Backend::Quantized { rescore_factor: 4 })
+        .preconditioner(precond.clone())
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, ValuationError::InvalidConfig(_)), "{err:?}");
+
+    // rescore_factor = 0 -> InvalidConfig (construction, not worker).
+    let quant_dir = tmpdir("errors-quant");
+    quantize_store(&src, &quant_dir).unwrap();
+    let err = Valuator::open(&quant_dir)
+        .unwrap()
+        .backend(Backend::Quantized { rescore_factor: 0 })
+        .preconditioner(precond.clone())
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, ValuationError::InvalidConfig(_)), "{err:?}");
+
+    // Preconditioner width mismatch -> InvalidConfig.
+    let wrong_rows = vec![0.5f32; 8 * (k + 1)];
+    let wrong = Arc::new(make_precond(&wrong_rows, 8, k + 1));
+    let err = Valuator::open(&src)
+        .unwrap()
+        .preconditioner(wrong)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, ValuationError::InvalidConfig(_)), "{err:?}");
+
+    // Token queries on a runtime-free backend -> BadQuery.
+    let valuator = Valuator::open(&src)
+        .unwrap()
+        .preconditioner(precond.clone())
+        .build()
+        .unwrap();
+    let err = valuator.query(QueryRequest::tokens(vec![1, 2, 3], 5)).unwrap_err();
+    assert!(matches!(err, ValuationError::BadQuery(_)), "{err:?}");
+
+    // Shape mismatch -> BadQuery.
+    let err = valuator
+        .query(QueryRequest::gradients(vec![0.0; k + 1], 1, 5))
+        .unwrap_err();
+    assert!(matches!(err, ValuationError::BadQuery(_)), "{err:?}");
+
+    // Submitting to a shut-down pool -> Shutdown.
+    let pool = Arc::new(ScanPool::spawn(1));
+    pool.shutdown();
+    assert!(matches!(
+        pool.submit(1, |_| Vec::new()).err(),
+        Some(ValuationError::Shutdown)
+    ));
+
+    // A panicking shard task -> QueryPoisoned on the completion handle
+    // (not a generic channel error, not a shutdown).
+    let pool = Arc::new(ScanPool::spawn(2));
+    let sharded = tmpdir("errors-sharded");
+    shard_store(&src, &sharded, 4).unwrap();
+    let engine = ParallelQueryEngine::new(
+        Arc::new(ShardedStore::open(&sharded).unwrap()),
+        precond.clone(),
+        BackendConfig { chunk_len: 16, pool: Some(pool.clone()), ..Default::default() },
+    );
+    let poisoned = pool
+        .submit(3, |si| {
+            if si == 1 {
+                panic!("backend-suite fault");
+            }
+            Vec::new()
+        })
+        .unwrap();
+    match poisoned.wait().unwrap_err() {
+        ValuationError::QueryPoisoned { message, .. } => {
+            assert!(message.contains("backend-suite fault"), "message lost: {message}")
+        }
+        other => panic!("expected QueryPoisoned, got {other:?}"),
+    }
+    // The engine sharing that pool is unaffected.
+    let mut test = vec![0.0f32; k];
+    rng.fill_normal(&mut test, 1.0);
+    let ok = engine.query(QueryRequest::gradients(test, 1, 3)).unwrap();
+    assert_eq!(ok[0].top.len(), 3);
+    pool.shutdown();
+}
+
+#[test]
+fn service_config_validation_is_typed_and_artifact_free() {
+    // The three historic deep-in-the-worker failure shapes must be
+    // rejected by `ValuationService::spawn` BEFORE it touches the
+    // artifact directory (none exists here) — as ValuationError values
+    // downcastable from the anyhow chain.
+    let mk = |rescore_factor: usize, max_in_flight: usize, quantized: bool| {
+        logra::coordinator::ServiceConfig {
+            artifact_dir: PathBuf::from("/nonexistent/artifacts"),
+            store_dir: PathBuf::from("/nonexistent/store"),
+            params: Vec::new(),
+            proj_flat: Vec::new(),
+            hessian: BlockHessian::single_block(4),
+            damping: 0.1,
+            norm: Normalization::None,
+            max_wait: std::time::Duration::from_millis(1),
+            scan_workers: 1,
+            quantized_scan: quantized,
+            rescore_factor,
+            quant_dir: None,
+            max_in_flight,
+        }
+    };
+    for cfg in [mk(0, 2, false), mk(4, 0, false), mk(4, 2, true)] {
+        let err = logra::coordinator::ValuationService::spawn(cfg).unwrap_err();
+        let typed = err
+            .downcast_ref::<ValuationError>()
+            .unwrap_or_else(|| panic!("not a ValuationError: {err:#}"));
+        assert!(matches!(typed, ValuationError::InvalidConfig(_)), "{typed:?}");
+    }
+}
+
+#[test]
+fn fit_from_store_serves_without_an_artifact() {
+    // The `logra query` shape: no logging-phase hessian, the projected
+    // Fisher is refit from the stored rows at build time.
+    let k = 8;
+    let n = 90;
+    let src = tmpdir("fit-src");
+    let mut rng = Pcg32::seeded(21);
+    let (ids, _) = write_store(&src, n, k, &mut rng);
+    let valuator = Valuator::open(&src)
+        .unwrap()
+        .fit_from_store(0.1)
+        .normalization(Normalization::RelatIf)
+        .build()
+        .unwrap();
+    let g = valuator.gradient_row(3).unwrap();
+    let res = valuator.query(QueryRequest::gradients(g, 1, 5)).unwrap();
+    assert_eq!(res[0].top.len(), 5);
+    assert!(
+        res[0].top.iter().any(|&(_, id)| id == ids[3]),
+        "stored row should retrieve itself: {:?}",
+        res[0].top
+    );
+    // Out-of-range query row is a clean None, not a panic.
+    assert!(valuator.gradient_row(n).is_none());
+}

@@ -31,7 +31,10 @@ use logra::store::quant::{blocks_of, dot_q8, quantize_rows};
 use logra::store::{shard_store, GradStore, GradStoreWriter, ShardedStore};
 use logra::util::proptest::check;
 use logra::util::rng::Pcg32;
-use logra::valuation::{Normalization, ParallelQueryEngine, QueryEngine, ScanPool};
+use logra::valuation::{
+    BackendConfig, Normalization, ParallelQueryEngine, QueryEngine, QueryRequest, ScanBackend,
+    ScanPool,
+};
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("logra-kernels-it").join(name);
@@ -209,15 +212,18 @@ fn warm_pool_scratch_stops_growing() {
     let precond = Arc::new(hess.preconditioner(0.1).unwrap());
     let workers = 2;
     let pool = Arc::new(ScanPool::spawn(workers));
-    let engine = ParallelQueryEngine::new(store, precond)
-        .with_chunk_len(32) // 400 rows / 4 shards / 32 = multi-chunk shards
-        .with_pool(pool.clone());
+    let engine = ParallelQueryEngine::new(
+        store,
+        precond,
+        // 400 rows / 4 shards / 32 = multi-chunk shards
+        BackendConfig { chunk_len: 32, pool: Some(pool.clone()), ..Default::default() },
+    );
     let mut test = vec![0.0f32; 2 * k];
     rng.fill_normal(&mut test, 1.0);
 
     // Warmup: enough queries that every worker has seen the peak lease.
     for _ in 0..8 {
-        engine.query(&test, 2, 5, Normalization::None).unwrap();
+        engine.query(QueryRequest::gradients(test.clone(), 2, 5)).unwrap();
     }
     let warm: u64 = pool.snapshot().scratch_grows.iter().sum();
     assert!(
@@ -225,7 +231,7 @@ fn warm_pool_scratch_stops_growing() {
         "warmup grew scratch {warm} times across {workers} workers"
     );
     for _ in 0..20 {
-        engine.query(&test, 2, 5, Normalization::None).unwrap();
+        engine.query(QueryRequest::gradients(test.clone(), 2, 5)).unwrap();
     }
     let after: u64 = pool.snapshot().scratch_grows.iter().sum();
     assert_eq!(after, warm, "steady-state queries grew worker scratch");
@@ -259,8 +265,14 @@ fn auto_chunk_len_serves_bit_identical_results() {
         for (a, b) in got.iter().zip(&want) {
             assert_eq!(a.top, b.top, "sequential auto-chunk diverged (norm {norm:?})");
         }
-        let par_auto = ParallelQueryEngine::new(store.clone(), precond.clone()).with_workers(2);
-        let got = par_auto.query(&test, 3, 8, norm).unwrap();
+        let par_auto = ParallelQueryEngine::new(
+            store.clone(),
+            precond.clone(),
+            BackendConfig { workers: 2, ..Default::default() },
+        );
+        let got = par_auto
+            .query(QueryRequest::gradients(test.clone(), 3, 8).with_norm(norm))
+            .unwrap();
         for (a, b) in got.iter().zip(&want) {
             assert_eq!(a.top, b.top, "parallel auto-chunk diverged (norm {norm:?})");
         }

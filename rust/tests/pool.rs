@@ -24,7 +24,8 @@ use logra::store::{
 use logra::util::rng::Pcg32;
 use logra::util::topk::TopK;
 use logra::valuation::{
-    Normalization, ParallelQueryEngine, QueryEngine, ScanPool, TwoStageEngine,
+    BackendConfig, Normalization, ParallelQueryEngine, QueryEngine, QueryRequest, ScanBackend,
+    ScanPool, TwoStageEngine, ValuationError,
 };
 
 fn tmpdir(name: &str) -> PathBuf {
@@ -102,20 +103,34 @@ fn concurrent_mixed_queries_bit_identical_to_sequential() {
             let precond = precond.clone();
             s.spawn(move || {
                 for _ in 0..reps {
+                    let req = QueryRequest::gradients(test.clone(), nt, topk).with_norm(*norm);
                     let results = if t % 3 == 0 {
-                        TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone())
-                            .unwrap()
-                            .with_chunk_len(32)
-                            .with_rescore_factor(factor)
-                            .with_pool(pool.clone())
-                            .query(test, nt, topk, *norm)
-                            .unwrap()
+                        TwoStageEngine::new(
+                            quant.clone(),
+                            exact.clone(),
+                            precond.clone(),
+                            BackendConfig {
+                                chunk_len: 32,
+                                rescore_factor: factor,
+                                pool: Some(pool.clone()),
+                                ..Default::default()
+                            },
+                        )
+                        .unwrap()
+                        .query(req)
+                        .unwrap()
                     } else {
-                        ParallelQueryEngine::new(exact.clone(), precond.clone())
-                            .with_chunk_len(32)
-                            .with_pool(pool.clone())
-                            .query(test, nt, topk, *norm)
-                            .unwrap()
+                        ParallelQueryEngine::new(
+                            exact.clone(),
+                            precond.clone(),
+                            BackendConfig {
+                                chunk_len: 32,
+                                pool: Some(pool.clone()),
+                                ..Default::default()
+                            },
+                        )
+                        .query(req)
+                        .unwrap()
                     };
                     assert_eq!(results.len(), want.len(), "thread {t}");
                     for (row, (a, b)) in results.iter().zip(want).enumerate() {
@@ -163,20 +178,29 @@ fn pooled_engines_match_unpooled_engines_with_small_rescore_pool() {
     rng.fill_normal(&mut test, 1.0);
 
     for norm in [Normalization::None, Normalization::RelatIf] {
-        let spawned = TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone())
-            .unwrap()
-            .with_workers(2)
-            .with_chunk_len(64)
-            .with_rescore_factor(2)
-            .query(&test, 3, 9, norm)
-            .unwrap();
-        let pooled = TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone())
-            .unwrap()
-            .with_chunk_len(64)
-            .with_rescore_factor(2)
-            .with_pool(pool.clone())
-            .query(&test, 3, 9, norm)
-            .unwrap();
+        let spawned = TwoStageEngine::new(
+            quant.clone(),
+            exact.clone(),
+            precond.clone(),
+            BackendConfig { workers: 2, chunk_len: 64, rescore_factor: 2, ..Default::default() },
+        )
+        .unwrap()
+        .query(QueryRequest::gradients(test.clone(), 3, 9).with_norm(norm))
+        .unwrap();
+        let pooled = TwoStageEngine::new(
+            quant.clone(),
+            exact.clone(),
+            precond.clone(),
+            BackendConfig {
+                chunk_len: 64,
+                rescore_factor: 2,
+                pool: Some(pool.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .query(QueryRequest::gradients(test.clone(), 3, 9).with_norm(norm))
+        .unwrap();
         for (a, b) in pooled.iter().zip(&spawned) {
             assert_eq!(a.top, b.top, "norm {norm:?}");
         }
@@ -234,18 +258,22 @@ fn poisoned_scan_fails_only_its_query_and_pool_keeps_serving() {
     let seq = QueryEngine::new_native(&single, &precond, 32);
     let pool = Arc::new(ScanPool::spawn(2));
 
-    let engine = ParallelQueryEngine::new(exact, precond.clone())
-        .with_chunk_len(32)
-        .with_pool(pool.clone());
+    let engine = ParallelQueryEngine::new(
+        exact,
+        precond.clone(),
+        BackendConfig { chunk_len: 32, pool: Some(pool.clone()), ..Default::default() },
+    );
     let mut test = vec![0.0f32; k];
     rng.fill_normal(&mut test, 1.0);
 
     // Healthy query before the poison.
     let want = seq.query(&test, 1, 5, Normalization::None).unwrap();
-    let got = engine.query(&test, 1, 5, Normalization::None).unwrap();
+    let got = engine.query(QueryRequest::gradients(test.clone(), 1, 5)).unwrap();
     assert_eq!(got[0].top, want[0].top);
 
-    // A raw poisoned job: one shard task panics. Only ITS query errors.
+    // A raw poisoned job: one shard task panics. Only ITS query errors —
+    // and the completion handle reports it as the typed QueryPoisoned
+    // variant, distinguishable from a shutdown.
     let poisoned = pool
         .submit(4, |si| {
             if si == 1 {
@@ -256,12 +284,17 @@ fn poisoned_scan_fails_only_its_query_and_pool_keeps_serving() {
             vec![t]
         })
         .unwrap();
-    let err = poisoned.wait().unwrap_err().to_string();
-    assert!(err.contains("panicked"), "unexpected error: {err}");
-    assert!(err.contains("injected scan fault"), "message lost: {err}");
+    let err = poisoned.wait().unwrap_err();
+    assert!(
+        matches!(err, ValuationError::QueryPoisoned { .. }),
+        "expected QueryPoisoned, got {err:?}"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("panicked"), "unexpected error: {msg}");
+    assert!(msg.contains("injected scan fault"), "message lost: {msg}");
 
     // The pool survives and keeps producing bit-identical results.
-    let got = engine.query(&test, 1, 5, Normalization::None).unwrap();
+    let got = engine.query(QueryRequest::gradients(test.clone(), 1, 5)).unwrap();
     assert_eq!(got[0].top, want[0].top);
     let snap = pool.snapshot();
     assert_eq!(snap.tasks_failed, 1);

@@ -16,7 +16,9 @@ use logra::store::{
 };
 use logra::util::proptest::check;
 use logra::util::rng::Pcg32;
-use logra::valuation::{Normalization, ParallelQueryEngine, QueryEngine};
+use logra::valuation::{
+    BackendConfig, Normalization, ParallelQueryEngine, QueryEngine, QueryRequest, ScanBackend,
+};
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("logra-shards-it").join(name);
@@ -88,10 +90,18 @@ fn prop_shard_decomposition_chunks_and_topk_identical() {
         g.rng.fill_normal(&mut test, 1.0);
         for norm in [Normalization::None, Normalization::RelatIf] {
             let want = seq.query(&test, nt, topk, norm).unwrap();
-            let par = ParallelQueryEngine::new(fabric.clone(), precond.clone())
-                .with_workers(workers)
-                .with_chunk_len(1 + g.rng.below_usize(n));
-            let got = par.query(&test, nt, topk, norm).unwrap();
+            let par = ParallelQueryEngine::new(
+                fabric.clone(),
+                precond.clone(),
+                BackendConfig {
+                    workers,
+                    chunk_len: 1 + g.rng.below_usize(n),
+                    ..Default::default()
+                },
+            );
+            let got = par
+                .query(QueryRequest::gradients(test.clone(), nt, topk).with_norm(norm))
+                .unwrap();
             prop_assert!(got.len() == want.len(), "result count");
             for (t, (a, b)) in got.iter().zip(&want).enumerate() {
                 prop_assert!(
@@ -136,8 +146,12 @@ fn duplicate_rows_tie_break_identically() {
 
     let seq = QueryEngine::new_native(&single, &precond, 7);
     let want = seq.query(&test, 1, 6, Normalization::None).unwrap();
-    let par = ParallelQueryEngine::new(fabric, precond.clone()).with_workers(3).with_chunk_len(4);
-    let got = par.query(&test, 1, 6, Normalization::None).unwrap();
+    let par = ParallelQueryEngine::new(
+        fabric,
+        precond.clone(),
+        BackendConfig { workers: 3, chunk_len: 4, ..Default::default() },
+    );
+    let got = par.query(QueryRequest::gradients(test.clone(), 1, 6)).unwrap();
     assert_eq!(got[0].top, want[0].top);
     // All scores tie; kept ids must be the 6 smallest.
     let mut kept: Vec<u64> = got[0].top.iter().map(|&(_, id)| id).collect();
@@ -161,7 +175,11 @@ fn parallel_self_influences_match_sequential() {
     let fabric = Arc::new(ShardedStore::open(&sharded).unwrap());
     let precond = Arc::new(make_precond(&rows, n, k));
     let seq = QueryEngine::new_native(&single, &precond, 8);
-    let par = ParallelQueryEngine::new(fabric, precond.clone()).with_workers(2).with_chunk_len(8);
+    let par = ParallelQueryEngine::new(
+        fabric,
+        precond.clone(),
+        BackendConfig { workers: 2, chunk_len: 8, ..Default::default() },
+    );
     assert_eq!(&*seq.train_self_influences(), &par.train_self_influences()[..]);
 }
 
@@ -210,11 +228,13 @@ fn crash_unfinalized_shard_serves_durable_rows() {
     let mut test = vec![0.0f32; k];
     rng.fill_normal(&mut test, 1.0);
     let seq = QueryEngine::new_native(&single, &precond, 4);
-    let par = ParallelQueryEngine::new(Arc::new(fabric), precond.clone())
-        .with_workers(2)
-        .with_chunk_len(4);
+    let par = ParallelQueryEngine::new(
+        Arc::new(fabric),
+        precond.clone(),
+        BackendConfig { workers: 2, chunk_len: 4, ..Default::default() },
+    );
     assert_eq!(
-        par.query(&test, 1, 5, Normalization::None).unwrap()[0].top,
+        par.query(QueryRequest::gradients(test.clone(), 1, 5)).unwrap()[0].top,
         seq.query(&test, 1, 5, Normalization::None).unwrap()[0].top
     );
 }
@@ -236,12 +256,16 @@ fn legacy_v1_store_queries_unchanged() {
     let mut test = vec![0.0f32; 2 * k];
     rng.fill_normal(&mut test, 1.0);
     let seq = QueryEngine::new_native(&single, &precond, 6);
-    let par = ParallelQueryEngine::new(Arc::new(fabric), precond.clone())
-        .with_workers(4)
-        .with_chunk_len(6);
+    let par = ParallelQueryEngine::new(
+        Arc::new(fabric),
+        precond.clone(),
+        BackendConfig { workers: 4, chunk_len: 6, ..Default::default() },
+    );
     for norm in [Normalization::None, Normalization::RelatIf] {
         let a = seq.query(&test, 2, 4, norm).unwrap();
-        let b = par.query(&test, 2, 4, norm).unwrap();
+        let b = par
+            .query(QueryRequest::gradients(test.clone(), 2, 4).with_norm(norm))
+            .unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.top, y.top);
         }

@@ -23,7 +23,9 @@ use logra::store::{
 };
 use logra::util::proptest::check;
 use logra::util::rng::Pcg32;
-use logra::valuation::{Normalization, QueryEngine, TwoStageEngine};
+use logra::valuation::{
+    BackendConfig, Normalization, QueryEngine, QueryRequest, ScanBackend, TwoStageEngine,
+};
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("logra-twostage-it").join(name);
@@ -81,17 +83,26 @@ fn prop_full_pool_reproduces_exact_engine_bit_identically() {
 
         for norm in [Normalization::None, Normalization::RelatIf] {
             let want = seq.query(&test, nt, topk, norm).unwrap();
-            let engine = TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone())
-                .unwrap()
-                .with_workers(workers)
-                .with_chunk_len(1 + g.rng.below_usize(n))
-                .with_rescore_factor(factor);
+            let engine = TwoStageEngine::new(
+                quant.clone(),
+                exact.clone(),
+                precond.clone(),
+                BackendConfig {
+                    workers,
+                    chunk_len: 1 + g.rng.below_usize(n),
+                    rescore_factor: factor,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
             prop_assert!(
                 engine.pool_size(topk) == n,
                 "pool {} != corpus {n}",
                 engine.pool_size(topk)
             );
-            let got = engine.query(&test, nt, topk, norm).unwrap();
+            let got = engine
+                .query(QueryRequest::gradients(test.clone(), nt, topk).with_norm(norm))
+                .unwrap();
             prop_assert!(got.len() == want.len(), "result count");
             for (t, (a, b)) in got.iter().zip(&want).enumerate() {
                 prop_assert!(
@@ -166,16 +177,18 @@ fn small_pool_recall_stays_high() {
     let single = GradStore::open(&src).unwrap();
     let precond = Arc::new(make_precond(&rows, n, k));
     let seq = QueryEngine::new_native(&single, &precond, 128);
-    let engine = TwoStageEngine::new(quant, exact, precond.clone())
-        .unwrap()
-        .with_workers(2)
-        .with_chunk_len(128)
-        .with_rescore_factor(4);
+    let engine = TwoStageEngine::new(
+        quant,
+        exact,
+        precond.clone(),
+        BackendConfig { workers: 2, chunk_len: 128, rescore_factor: 4, ..Default::default() },
+    )
+    .unwrap();
 
     let mut test = vec![0.0f32; nt * k];
     rng.fill_normal(&mut test, 1.0);
     let want = seq.query(&test, nt, topk, Normalization::None).unwrap();
-    let got = engine.query(&test, nt, topk, Normalization::None).unwrap();
+    let got = engine.query(QueryRequest::gradients(test.clone(), nt, topk)).unwrap();
     let mut hits = 0usize;
     for (a, b) in got.iter().zip(&want) {
         assert_eq!(a.top.len(), topk);
@@ -222,5 +235,5 @@ fn stale_quantized_copy_rejected() {
     let exact_a = Arc::new(ShardedStore::open(&src_a).unwrap());
     let quant = Arc::new(QuantShardedStore::open(&quant_b).unwrap());
     let precond = Arc::new(make_precond(&rows_a, 20, k));
-    assert!(TwoStageEngine::new(quant, exact_a, precond).is_err());
+    assert!(TwoStageEngine::new(quant, exact_a, precond, BackendConfig::default()).is_err());
 }
