@@ -9,13 +9,15 @@
 //! and the two-stage engine; kernel-level rows/s for the dispatched f32
 //! and int8 scan microkernels vs the naive reference kernels they
 //! replaced; queries/s for the pool at concurrency 1/4/8 vs per-query
-//! thread spawn; storage bytes per codec) so the scan perf trajectory is
-//! tracked across PRs — CI gates on it against `BENCH_baseline.json`
-//! (see `scripts/bench_gate.py`).
+//! thread spawn, plus the pooled concurrency-8 p50/p99 query latency
+//! read from the observability histograms; storage bytes per codec) so
+//! the scan perf trajectory is tracked across PRs — CI gates on it
+//! against `BENCH_baseline.json` (see `scripts/bench_gate.py`).
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use logra::coordinator::Metrics;
 use logra::hessian::BlockHessian;
 use logra::linalg::{eigh, Matrix};
 use logra::store::{
@@ -348,14 +350,39 @@ fn main() {
             });
             (clients * queries_per_client) as f64 / t0.elapsed().as_secs_f64()
         };
+        // Each concurrency level runs on its own engine with a fresh
+        // Metrics attached, so the gated pool qps numbers include the
+        // observability overhead (histograms + trace spans) that the real
+        // serving path pays, and so the c8 latency percentiles below come
+        // from exactly that run's histogram.
         let mut pool_qps = [0.0f64; 3];
+        let mut pool_c8_p50_ms = 0.0f64;
+        let mut pool_c8_p99_ms = 0.0f64;
         for (slot, conc) in [(0usize, 1usize), (1, 4), (2, 8)] {
-            pool_qps[slot] = run_clients(&pooled, conc);
+            let metrics = Arc::new(Metrics::default());
+            let observed = Arc::new(ParallelQueryEngine::new(
+                store.clone(),
+                precond.clone(),
+                BackendConfig {
+                    chunk_len: 512,
+                    pool: Some(pool.clone()),
+                    metrics: Some(metrics.clone()),
+                    ..Default::default()
+                },
+            ));
+            pool_qps[slot] = run_clients(&observed, conc);
             report_metric(
                 &format!("micro.store.pool.qps.c{conc}"),
                 pool_qps[slot],
                 "queries/s",
             );
+            if conc == 8 {
+                let snap = metrics.obs.query_latency.snapshot();
+                pool_c8_p50_ms = snap.percentile_ms(50.0);
+                pool_c8_p99_ms = snap.percentile_ms(99.0);
+                report_metric("micro.store.pool.p50_ms.c8", pool_c8_p50_ms, "ms");
+                report_metric("micro.store.pool.p99_ms.c8", pool_c8_p99_ms, "ms");
+            }
         }
         let spawned = Arc::new(ParallelQueryEngine::new(
             store.clone(),
@@ -393,6 +420,8 @@ fn main() {
              \"pool_c1_qps\": {:.1},\n  \
              \"pool_c4_qps\": {:.1},\n  \
              \"pool_c8_qps\": {:.1},\n  \
+             \"pool_c8_p50_ms\": {pool_c8_p50_ms:.3},\n  \
+             \"pool_c8_p99_ms\": {pool_c8_p99_ms:.3},\n  \
              \"spawn_c8_qps\": {spawn_qps_c8:.1}\n}}\n",
             logra::linalg::kernel_arm().name(),
             f32_mean / quant_mean,

@@ -14,20 +14,182 @@
 //! Reports per-request latency percentiles, sustained throughput, the
 //! dynamic batcher's mean batch fill, and (when a pool is active) the scan
 //! pool's worker/task counters.
+//!
+//! Observability flags (both modes):
+//!   --metrics            print the Prometheus text exposition at the end
+//!   --metrics-out FILE   write the exposition to FILE
+//!   --trace-out FILE     write the span ring as Chrome trace-event JSON
+//!
+//! `--offline` skips the PJRT runtime entirely: it synthesizes a gradient
+//! store on disk (optionally sharded / quantized) and serves it through
+//! the [`Valuator`] facade on a warm scan pool — the shape CI uses to
+//! validate the exposition and trace without artifacts.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use logra::coordinator::{run_logging, LoggingOptions, ServiceConfig, ValuationService};
+use logra::coordinator::{run_logging, LoggingOptions, Metrics, ServiceConfig, ValuationService};
 use logra::data::corpus::{generate, CorpusSpec};
 use logra::hessian::random_projections;
 use logra::model::dataset::Dataset;
 use logra::model::trainer::Trainer;
+use logra::obs::{chrome_trace_json, render_exposition};
 use logra::runtime::Runtime;
 use logra::util::rng::Pcg32;
 use logra::util::stats::{percentile, summarize};
-use logra::valuation::Normalization;
+use logra::valuation::{
+    Backend, Normalization, PoolMode, QueryRequest, ScanBackend, Valuator,
+};
+
+/// Write/print the exposition and trace per the shared observability
+/// flags. `extra_gauges` carries store-shape context into the exposition.
+fn emit_observability(
+    parsed: &logra::cli::Args,
+    metrics: &Metrics,
+    pool: Option<logra::valuation::PoolSnapshot>,
+    extra_gauges: &[(&str, &str, f64)],
+) -> Result<()> {
+    let expo = render_exposition(metrics, pool.as_ref(), extra_gauges);
+    if let Some(path) = parsed.flag("metrics-out") {
+        std::fs::write(path, &expo)?;
+        println!("wrote exposition -> {path}");
+    }
+    if parsed.has_switch("metrics") {
+        println!("\n-- metrics exposition --");
+        print!("{expo}");
+    }
+    if let Some(path) = parsed.flag("trace-out") {
+        let events = metrics.obs.trace.events();
+        std::fs::write(path, chrome_trace_json(&events))?;
+        println!("wrote {} span events -> {path}", events.len());
+    }
+    Ok(())
+}
+
+/// Runtime-free serving: synthesize a store, serve it via the Valuator on
+/// a pooled backend, and report the same latency/exposition surface.
+fn run_offline(parsed: &logra::cli::Args) -> Result<()> {
+    let n_requests = parsed.usize_or("requests", 24)?;
+    let n_train = parsed.usize_or("n-train", 256)?;
+    let n_shards = parsed.usize_or("shards", 1)?;
+    let scan_workers = parsed.usize_or("scan-workers", 1)?;
+    let quantized = parsed.has_switch("quantized");
+    let rescore_factor = parsed.usize_or("rescore-factor", 4)?;
+    let n_clients =
+        parsed.usize_or("clients", 4)?.max(parsed.usize_or("concurrency", 1)?).max(1);
+    let k = 64usize;
+
+    // Synthetic store fabric (no runtime, no artifacts).
+    let root = std::env::current_dir()?;
+    let base = root.join("runs").join("serve-offline-store");
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base)?;
+    let mut rng = Pcg32::seeded(0x0FF1);
+    let mut rows = vec![0.0f32; n_train * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let ids: Vec<u64> = (0..n_train as u64).collect();
+    let mut w = logra::store::GradStoreWriter::create(&base, k)?;
+    w.append(&ids, &rows)?;
+    w.finalize()?;
+    let store_dir = if n_shards > 1 {
+        let sharded = root.join("runs").join("serve-offline-sharded");
+        let _ = std::fs::remove_dir_all(&sharded);
+        logra::store::shard_store(&base, &sharded, n_shards)?;
+        sharded
+    } else {
+        base
+    };
+    let store_dir = if quantized {
+        let qdir = root.join("runs").join("serve-offline-q8");
+        let _ = std::fs::remove_dir_all(&qdir);
+        logra::store::quantize_store(&store_dir, &qdir)?;
+        qdir
+    } else {
+        store_dir
+    };
+    println!("offline store ready: {n_train} rows, k={k}, {n_shards} shards");
+
+    let metrics = Arc::new(Metrics::default());
+    let backend =
+        if quantized { Backend::Quantized { rescore_factor } } else { Backend::Auto };
+    let valuator = Valuator::open(&store_dir)?
+        .backend(backend)
+        .workers(scan_workers)
+        .fit_from_store(0.1)
+        .pool(PoolMode::Auto)
+        .metrics(metrics.clone())
+        .build()?;
+    println!("scan backend       {}", valuator.kind().name());
+
+    // Hammer the valuator from client threads; each query reuses a stored
+    // row as its gradient (the store-only query shape).
+    let t0 = Instant::now();
+    let vref = &valuator;
+    let latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                s.spawn(move || -> Vec<f64> {
+                    let mut lat = Vec::new();
+                    for q in 0..n_requests {
+                        let row = (c * 37 + q * 13) % n_train;
+                        let g = vref.gradient_row(row).expect("row in range");
+                        let t = Instant::now();
+                        let res = vref
+                            .query(QueryRequest::gradients(g, 1, 5))
+                            .expect("query failed");
+                        assert_eq!(res[0].top.len(), 5.min(n_train));
+                        lat.push(t.elapsed().as_secs_f64());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let s = summarize(&latencies);
+    println!("\n-- serving report (offline) --");
+    println!("requests           {}", latencies.len());
+    println!("throughput         {:.1} req/s", latencies.len() as f64 / wall);
+    println!(
+        "latency mean/p50/p95/p99  {:.1} / {:.1} / {:.1} / {:.1} ms",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        percentile(&latencies, 99.0) * 1e3
+    );
+    let lat = metrics.obs.query_latency.snapshot();
+    println!(
+        "histogram p50/p95/p99     {:.1} / {:.1} / {:.1} ms ({} samples)",
+        lat.percentile_ms(50.0),
+        lat.percentile_ms(95.0),
+        lat.percentile_ms(99.0),
+        lat.count
+    );
+    if let Some(pool) = valuator.scan_pool() {
+        let ps = pool.snapshot();
+        println!(
+            "scan pool          {} workers, {} queries, {} tasks, busy {:.3}s",
+            ps.workers,
+            ps.queries_submitted,
+            ps.tasks_completed,
+            ps.total_busy_seconds()
+        );
+    }
+    let pool_snap = valuator.scan_pool().map(|p| p.snapshot());
+    emit_observability(
+        parsed,
+        &metrics,
+        pool_snap,
+        &[
+            ("logra_store_rows", "Rows in the served store.", n_train as f64),
+            ("logra_store_k", "Projected gradient dimension.", k as f64),
+        ],
+    )?;
+    valuator.shutdown();
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,8 +203,13 @@ fn main() -> Result<()> {
             "scan-workers",
             "rescore-factor",
             "concurrency",
+            "metrics-out",
+            "trace-out",
         ],
     )?;
+    if parsed.has_switch("offline") {
+        return run_offline(&parsed);
+    }
     let n_clients = parsed.usize_or("clients", 4)?;
     let n_requests = parsed.usize_or("requests", 24)?;
     let n_train = parsed.usize_or("n-train", 512)?;
@@ -74,7 +241,8 @@ fn main() -> Result<()> {
     let store_dir = root.join("runs").join("serve-store");
     let (store, hessian, _) =
         run_logging(&rt, &ds, &st.params, &proj, &store_dir, &LoggingOptions::default())?;
-    println!("store ready: {} rows", store.rows());
+    let store_rows = store.rows();
+    println!("store ready: {store_rows} rows");
     drop(store);
     drop(rt);
 
@@ -195,6 +363,13 @@ fn main() -> Result<()> {
             ps.queue_depth
         );
     }
+    let pool_snap = svc.scan_pool().map(|p| p.snapshot());
+    emit_observability(
+        &parsed,
+        &svc.metrics,
+        pool_snap,
+        &[("logra_store_rows", "Rows in the served store.", store_rows as f64)],
+    )?;
     Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
     Ok(())
 }

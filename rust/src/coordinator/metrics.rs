@@ -2,9 +2,15 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::obs::Obs;
+
 /// Shared counters for the valuation service.
 #[derive(Default)]
 pub struct Metrics {
+    /// Observability state (trace ring, latency histograms, query ids) —
+    /// attaching a `Metrics` to a backend opts the whole layer in. See
+    /// [`crate::obs`].
+    pub obs: Obs,
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub rows_scanned: AtomicU64,
@@ -58,7 +64,8 @@ impl Metrics {
         }
     }
 
-    pub fn add_nanos(counter: &AtomicU64, seconds: f64) {
+    /// Add a duration measured in SECONDS to a nanosecond counter.
+    pub fn add_seconds(counter: &AtomicU64, seconds: f64) {
         counter.fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
     }
 }
@@ -131,11 +138,11 @@ mod tests {
         m.requests.store(10, Ordering::Relaxed);
         m.batches.store(4, Ordering::Relaxed);
         m.rows_scanned.store(1000, Ordering::Relaxed);
-        Metrics::add_nanos(&m.scan_nanos, 2.0);
+        Metrics::add_seconds(&m.scan_nanos, 2.0);
         m.shards_scanned.store(8, Ordering::Relaxed);
-        Metrics::add_nanos(&m.shard_scan_nanos, 6.0);
-        Metrics::add_nanos(&m.stage1_nanos, 1.5);
-        Metrics::add_nanos(&m.stage2_nanos, 0.5);
+        Metrics::add_seconds(&m.shard_scan_nanos, 6.0);
+        Metrics::add_seconds(&m.stage1_nanos, 1.5);
+        Metrics::add_seconds(&m.stage2_nanos, 0.5);
         m.candidates_rescored.store(40, Ordering::Relaxed);
         m.pool_workers.store(6, Ordering::Relaxed);
         m.scan_chunk_len.store(640, Ordering::Relaxed);

@@ -184,7 +184,7 @@ impl ValuationService {
                                 // Admission-to-completion wall time; with
                                 // overlapping batches these sum past wall
                                 // clock, like shard_scan_nanos.
-                                Metrics::add_nanos(
+                                Metrics::add_seconds(
                                     &m3.scan_nanos,
                                     submitted.elapsed().as_secs_f64(),
                                 );
@@ -293,7 +293,7 @@ impl ValuationService {
                         let out = rt
                             .run_ref("logra_log", &[&params_lit, &proj_lit, &tok_lit])?;
                         let mut g = to_f32_vec(&out[0])?;
-                        Metrics::add_nanos(&m2.grad_nanos, t0.elapsed().as_secs_f64());
+                        Metrics::add_seconds(&m2.grad_nanos, t0.elapsed().as_secs_f64());
                         // Drop the padding rows: the native backends are
                         // shape-flexible, so an underfilled batch scans
                         // less and per-request metrics stay honest.
@@ -307,7 +307,7 @@ impl ValuationService {
                         if ready {
                             // Sequential backend: the scan ran at
                             // admission, on this thread.
-                            Metrics::add_nanos(&m2.scan_nanos, t1.elapsed().as_secs_f64());
+                            Metrics::add_seconds(&m2.scan_nanos, t1.elapsed().as_secs_f64());
                         }
                         Ok((pending, ready))
                     })();

@@ -66,5 +66,6 @@ pub mod runtime;
 pub mod store;
 pub mod hessian;
 pub mod model;
+pub mod obs;
 pub mod util;
 pub mod valuation;

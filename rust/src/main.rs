@@ -7,18 +7,24 @@
 //!   qualitative  Fig-5-style top-valued-document inspection
 //!   store        gradient-store maintenance (stat | shard | merge | quantize)
 //!   query        value a stored gradient row against any store fabric
+//!   trace        run concurrent queries, export a Chrome trace + percentiles
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use logra::cli::{self, FlagSpec};
+use logra::coordinator::Metrics;
 use logra::eval::fig4::{render_markdown, run_fig4, Fig4Scale};
 use logra::eval::qualitative::{render as render_qual, run_qualitative};
 use logra::eval::table1::{run_table1, TABLE1_HEADER};
 use logra::eval::{BrittlenessConfig, LdsConfig};
+use logra::obs::{chrome_trace_json, render_exposition};
 use logra::store::{merge_store, quantize_store, shard_store, stat_store};
-use logra::valuation::{Backend, Normalization, QueryRequest, ScanBackend, Valuator};
+use logra::valuation::{
+    Backend, Normalization, PoolMode, QueryRequest, ScanBackend, Valuator,
+};
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
     ("info", "print an artifact manifest summary"),
@@ -27,6 +33,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("qualitative", "train, log, and inspect top-valued documents"),
     ("store", "store maintenance: store stat|shard|merge|quantize <dir>"),
     ("query", "query <store_dir>: top-k most influential rows for --row"),
+    ("trace", "trace <store_dir>: concurrent queries -> Chrome trace JSON"),
 ];
 
 const FLAGS: &[FlagSpec] = &[
@@ -48,6 +55,10 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "rescore-store", help: "query: exact f32 companion for a quantized store", takes_value: true, default: None },
     FlagSpec { name: "workers", help: "query: scan workers (0 = auto)", takes_value: true, default: Some("0") },
     FlagSpec { name: "damping", help: "query: Fisher damping factor", takes_value: true, default: Some("0.1") },
+    FlagSpec { name: "repeat", help: "query: run the query N times (latency percentiles)", takes_value: true, default: Some("1") },
+    FlagSpec { name: "queries", help: "trace: queries to run", takes_value: true, default: Some("8") },
+    FlagSpec { name: "concurrency", help: "trace: concurrent client threads", takes_value: true, default: Some("8") },
+    FlagSpec { name: "metrics", help: "store stat: print Prometheus exposition", takes_value: false, default: None },
 ];
 
 /// Repo root: the directory holding `artifacts/` (cwd, else build-time).
@@ -161,11 +172,32 @@ fn main() -> Result<()> {
                 .ok_or_else(|| anyhow!("store {action}: missing store directory"))?;
             match action {
                 "stat" => {
-                    print!("{}", stat_store(&dir)?.render());
+                    let stat = stat_store(&dir)?;
+                    print!("{}", stat.render());
                     // The scan backend `Valuator::open(dir)` + Backend::Auto
                     // would serve this fabric with.
                     if let Ok(builder) = Valuator::open(&dir) {
                         println!("auto backend  {}", builder.auto_kind().name());
+                    }
+                    if args.has_switch("metrics") {
+                        // Exposition over a fresh Metrics: the counter and
+                        // histogram families a serving process would export,
+                        // plus store-shape gauges — what
+                        // scripts/check_metrics.py validates in CI.
+                        let m = Metrics::default();
+                        print!(
+                            "{}",
+                            render_exposition(
+                                &m,
+                                None,
+                                &[
+                                    ("logra_store_rows", "Rows in the store fabric.", stat.rows as f64),
+                                    ("logra_store_shards", "Shards in the store fabric.", stat.shards as f64),
+                                    ("logra_store_k", "Projected gradient dimension.", stat.k as f64),
+                                    ("logra_store_bytes", "Store payload bytes on disk.", stat.storage_bytes as f64),
+                                ],
+                            )
+                        );
                     }
                     Ok(())
                 }
@@ -253,7 +285,13 @@ fn main() -> Result<()> {
                 "quantized" => Backend::Quantized { rescore_factor },
                 other => return Err(anyhow!("unknown backend {other:?}; try auto|exact|quantized")),
             };
-            let mut builder = builder.backend(backend).workers(workers).fit_from_store(damping);
+            let repeat = args.usize_or("repeat", 1)?.max(1);
+            let metrics = Arc::new(Metrics::default());
+            let mut builder = builder
+                .backend(backend)
+                .workers(workers)
+                .fit_from_store(damping)
+                .metrics(metrics.clone());
             // Explicit exact companion for quantized stores whose manifest
             // predates (or lost) the recorded rescore_dir pointer.
             if let Some(rs) = args.flag("rescore-store") {
@@ -263,7 +301,15 @@ fn main() -> Result<()> {
             let g = valuator.gradient_row(row).ok_or_else(|| {
                 anyhow!("row {row} out of range (store has {} rows)", valuator.rows())
             })?;
-            let res = valuator.query(QueryRequest::gradients(g, 1, topk).with_norm(norm))?;
+            let mut res = Vec::new();
+            let mut report = None;
+            for _ in 0..repeat {
+                let (r, rep) = valuator.query_with_report(
+                    QueryRequest::gradients(g.clone(), 1, topk).with_norm(norm),
+                )?;
+                res = r;
+                report = rep;
+            }
             println!(
                 "backend       {} ({} rows, k={}, {} workers, norm {:?})",
                 valuator.kind().name(),
@@ -272,8 +318,104 @@ fn main() -> Result<()> {
                 valuator.workers(),
                 norm
             );
+            if let Some(rep) = &report {
+                print!("{}", rep.render());
+            }
+            if repeat > 1 {
+                let lat = metrics.obs.query_latency.snapshot();
+                println!(
+                    "latency over {repeat} runs: p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms",
+                    lat.percentile_ms(50.0),
+                    lat.percentile_ms(95.0),
+                    lat.percentile_ms(99.0)
+                );
+            }
             for &(score, id) in &res[0].top {
                 println!("  [{score:+.6}] id {id}");
+            }
+            Ok(())
+        }
+        // Observability driver: fire N concurrent queries at the store
+        // (pool-backed so shard tasks interleave), then export the span
+        // ring as Chrome trace-event JSON (load it in chrome://tracing or
+        // Perfetto) and print the latency percentiles.
+        "trace" => {
+            let dir = args.positional.first().map(PathBuf::from).ok_or_else(|| {
+                anyhow!(
+                    "usage: trace <store_dir> [--queries N] [--concurrency N] [--topk K] \
+                     [--workers N] [--damping X] [--out FILE]"
+                )
+            })?;
+            let n_queries = args.usize_or("queries", 8)?.max(1);
+            let concurrency = args.usize_or("concurrency", 8)?.max(1).min(n_queries);
+            let topk = args.usize_or("topk", 5)?;
+            let workers = args.usize_or("workers", 0)?;
+            let damping = args.f64_or("damping", 0.1)? as f32;
+            let out_path = PathBuf::from(args.flag_or("out", "trace.json"));
+            let metrics = Arc::new(Metrics::default());
+            let valuator = Valuator::open(&dir)?
+                .workers(workers)
+                .fit_from_store(damping)
+                .pool(PoolMode::Auto)
+                .metrics(metrics.clone())
+                .build()?;
+            let rows = valuator.rows();
+            if rows == 0 {
+                return Err(anyhow!("store {} is empty — nothing to trace", dir.display()));
+            }
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            let failures = std::sync::Mutex::new(Vec::<String>::new());
+            std::thread::scope(|s| {
+                for _ in 0..concurrency {
+                    s.spawn(|| loop {
+                        let q = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if q >= n_queries {
+                            break;
+                        }
+                        let Some(g) = valuator.gradient_row(q % rows) else { break };
+                        if let Err(e) = valuator.query(QueryRequest::gradients(g, 1, topk)) {
+                            failures.lock().unwrap().push(format!("query {q}: {e}"));
+                        }
+                    });
+                }
+            });
+            let failures = failures.into_inner().unwrap();
+            if !failures.is_empty() {
+                return Err(anyhow!(
+                    "{} of {n_queries} traced queries failed: {}",
+                    failures.len(),
+                    failures.join("; ")
+                ));
+            }
+            let events = metrics.obs.trace.events();
+            std::fs::write(&out_path, chrome_trace_json(&events))?;
+            println!(
+                "traced {n_queries} queries ({} span events) -> {}",
+                events.len(),
+                out_path.display()
+            );
+            let lat = metrics.obs.query_latency.snapshot();
+            println!(
+                "query latency p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms",
+                lat.percentile_ms(50.0),
+                lat.percentile_ms(95.0),
+                lat.percentile_ms(99.0)
+            );
+            let wait = metrics.obs.queue_wait.snapshot();
+            println!(
+                "queue wait    p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms",
+                wait.percentile_ms(50.0),
+                wait.percentile_ms(95.0),
+                wait.percentile_ms(99.0)
+            );
+            if let Some(pool) = valuator.scan_pool() {
+                let snap = pool.snapshot();
+                println!(
+                    "pool          {} workers, {} tasks, {:.3} busy s",
+                    snap.workers,
+                    snap.tasks_completed,
+                    snap.total_busy_seconds()
+                );
             }
             Ok(())
         }

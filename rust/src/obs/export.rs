@@ -1,0 +1,289 @@
+//! Prometheus-style text exposition over service metrics, pool health,
+//! and the latency histograms.
+//!
+//! [`render_exposition`] produces the classic text format (`# HELP` /
+//! `# TYPE` comments, `name{labels} value` samples, cumulative
+//! `_bucket{le="..."}` histogram series) from a
+//! [`Metrics`](crate::coordinator::Metrics) instance, an optional
+//! [`PoolSnapshot`](crate::valuation::PoolSnapshot), and any extra
+//! caller-supplied gauges (e.g. store shape from `logra store stat
+//! --metrics`). `examples/serve_queries.rs --metrics` prints it and CI
+//! validates it with `scripts/check_metrics.py`.
+
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::metrics::Metrics;
+use crate::valuation::PoolSnapshot;
+
+use super::hist::{bucket_bounds, HistogramSnapshot};
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+fn sample(out: &mut String, name: &str, labels: &str, value: f64) {
+    out.push_str(name);
+    out.push_str(labels);
+    out.push(' ');
+    out.push_str(&format!("{value}"));
+    out.push('\n');
+}
+
+fn simple(out: &mut String, name: &str, help: &str, kind: &str, value: f64) {
+    header(out, name, help, kind);
+    sample(out, name, "", value);
+}
+
+/// Render one histogram as a cumulative-bucket Prometheus series (bucket
+/// bounds in SECONDS; empty buckets are skipped, so `le` values are
+/// strictly increasing and the series stays compact).
+fn histogram(out: &mut String, name: &str, help: &str, snap: &HistogramSnapshot) {
+    header(out, name, help, "histogram");
+    let mut cumulative = 0u64;
+    for (i, &c) in snap.counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cumulative += c;
+        let (_, hi) = bucket_bounds(i);
+        out.push_str(&format!(
+            "{name}_bucket{{le=\"{}\"}} {cumulative}\n",
+            hi as f64 / 1e9
+        ));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", snap.count));
+    out.push_str(&format!("{name}_sum {}\n", snap.sum_nanos as f64 / 1e9));
+    out.push_str(&format!("{name}_count {}\n", snap.count));
+}
+
+/// Render the full exposition: `Metrics` counters, the embedded
+/// [`Obs`](super::Obs) histograms, optional pool health, and any extra
+/// gauges as `(name, help, value)` triples (names must be valid
+/// Prometheus metric names).
+pub fn render_exposition(
+    metrics: &Metrics,
+    pool: Option<&PoolSnapshot>,
+    extra_gauges: &[(&str, &str, f64)],
+) -> String {
+    let ld = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed) as f64;
+    let mut out = String::with_capacity(4096);
+
+    simple(
+        &mut out,
+        "logra_requests_total",
+        "Valuation requests admitted.",
+        "counter",
+        ld(&metrics.requests),
+    );
+    simple(
+        &mut out,
+        "logra_batches_total",
+        "Dynamic batches executed by the service worker.",
+        "counter",
+        ld(&metrics.batches),
+    );
+    simple(
+        &mut out,
+        "logra_rows_scanned_total",
+        "Train rows covered by influence scans.",
+        "counter",
+        ld(&metrics.rows_scanned),
+    );
+    simple(
+        &mut out,
+        "logra_shards_scanned_total",
+        "Per-shard scan tasks completed.",
+        "counter",
+        ld(&metrics.shards_scanned),
+    );
+    simple(
+        &mut out,
+        "logra_candidates_rescored_total",
+        "Candidate rows rescored at exact precision (two-stage stage 2).",
+        "counter",
+        ld(&metrics.candidates_rescored),
+    );
+    simple(
+        &mut out,
+        "logra_scan_seconds_total",
+        "Wall seconds spent in influence scans.",
+        "counter",
+        ld(&metrics.scan_nanos) / 1e9,
+    );
+    simple(
+        &mut out,
+        "logra_grad_seconds_total",
+        "Wall seconds spent extracting query gradients.",
+        "counter",
+        ld(&metrics.grad_nanos) / 1e9,
+    );
+    simple(
+        &mut out,
+        "logra_queue_wait_seconds_total",
+        "Summed admission-to-first-scan-task wait across queries.",
+        "counter",
+        ld(&metrics.queue_wait_nanos) / 1e9,
+    );
+    simple(
+        &mut out,
+        "logra_shard_scan_seconds_total",
+        "Summed per-shard scan time across workers.",
+        "counter",
+        ld(&metrics.shard_scan_nanos) / 1e9,
+    );
+    simple(
+        &mut out,
+        "logra_stage1_seconds_total",
+        "Two-stage engine: wall seconds in the quantized coarse scan.",
+        "counter",
+        ld(&metrics.stage1_nanos) / 1e9,
+    );
+    simple(
+        &mut out,
+        "logra_stage2_seconds_total",
+        "Two-stage engine: wall seconds in the exact rescore.",
+        "counter",
+        ld(&metrics.stage2_nanos) / 1e9,
+    );
+    simple(
+        &mut out,
+        "logra_pool_workers",
+        "Scan-pool workers actually spawned (0 = no pool).",
+        "gauge",
+        ld(&metrics.pool_workers),
+    );
+    simple(
+        &mut out,
+        "logra_scan_chunk_len",
+        "Rows per kernel call resolved for the latest query.",
+        "gauge",
+        ld(&metrics.scan_chunk_len),
+    );
+
+    histogram(
+        &mut out,
+        "logra_query_latency_seconds",
+        "End-to-end per-query latency (admission to results).",
+        &metrics.obs.query_latency.snapshot(),
+    );
+    histogram(
+        &mut out,
+        "logra_queue_wait_seconds",
+        "Per-query wait between admission-done and the first scan task.",
+        &metrics.obs.queue_wait.snapshot(),
+    );
+    histogram(
+        &mut out,
+        "logra_shard_scan_seconds",
+        "Wall time of individual (query, shard) scan tasks.",
+        &metrics.obs.shard_scan.snapshot(),
+    );
+
+    if let Some(p) = pool {
+        simple(
+            &mut out,
+            "logra_pool_queue_depth",
+            "Scan tasks sitting in the bounded pool queue.",
+            "gauge",
+            p.queue_depth as f64,
+        );
+        simple(
+            &mut out,
+            "logra_pool_in_flight",
+            "Queries admitted to the pool but not yet completed.",
+            "gauge",
+            p.in_flight as f64,
+        );
+        simple(
+            &mut out,
+            "logra_pool_queries_total",
+            "Queries ever submitted to the scan pool.",
+            "counter",
+            p.queries_submitted as f64,
+        );
+        simple(
+            &mut out,
+            "logra_pool_tasks_completed_total",
+            "Pool scan tasks run to completion.",
+            "counter",
+            p.tasks_completed as f64,
+        );
+        simple(
+            &mut out,
+            "logra_pool_tasks_failed_total",
+            "Pool scan tasks that panicked.",
+            "counter",
+            p.tasks_failed as f64,
+        );
+        simple(
+            &mut out,
+            "logra_pool_tasks_skipped_total",
+            "Pool scan tasks fast-skipped on an already-failed query.",
+            "counter",
+            p.tasks_skipped as f64,
+        );
+        header(
+            &mut out,
+            "logra_pool_worker_busy_seconds_total",
+            "Per-worker seconds inside scan closures.",
+            "counter",
+        );
+        for (w, secs) in p.busy_seconds.iter().enumerate() {
+            sample(
+                &mut out,
+                "logra_pool_worker_busy_seconds_total",
+                &format!("{{worker=\"{w}\"}}"),
+                *secs,
+            );
+        }
+        header(
+            &mut out,
+            "logra_pool_worker_lane",
+            "Trace lane (Chrome trace tid) of each pool worker; -1 until \
+             the worker first runs.",
+            "gauge",
+        );
+        for (w, lane) in p.worker_lanes.iter().enumerate() {
+            let v = if *lane == u32::MAX { -1.0 } else { *lane as f64 };
+            sample(&mut out, "logra_pool_worker_lane", &format!("{{worker=\"{w}\"}}"), v);
+        }
+    }
+
+    for (name, help, value) in extra_gauges {
+        simple(&mut out, name, help, "gauge", *value);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_has_help_type_and_histograms() {
+        let m = Metrics::default();
+        m.requests.store(5, Ordering::Relaxed);
+        m.obs.query_latency.record(1_000_000);
+        m.obs.query_latency.record(2_000_000);
+        let text = render_exposition(&m, None, &[("logra_store_rows", "Rows.", 42.0)]);
+        assert!(text.contains("# HELP logra_requests_total"));
+        assert!(text.contains("# TYPE logra_requests_total counter"));
+        assert!(text.contains("logra_requests_total 5"));
+        assert!(text.contains("# TYPE logra_query_latency_seconds histogram"));
+        assert!(text.contains("logra_query_latency_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("logra_query_latency_seconds_count 2"));
+        assert!(text.contains("logra_store_rows 42"));
+        // Every sample line sits under a TYPE declaration for its family.
+        for line in text.lines() {
+            assert!(!line.is_empty(), "exposition must not contain blank lines");
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Atomic log-bucketed latency histograms (HDR-style).
+//!
+//! A [`Histogram`] is a fixed array of [`BUCKETS`] atomic counters over
+//! nanosecond values: recording a sample is two relaxed `fetch_add`s (one
+//! bucket counter, one running sum) — no locks, no per-sample allocation —
+//! so the scan hot path can feed it from every worker concurrently.
+//!
+//! # Bucket layout
+//!
+//! Buckets are log-linear with 8 sub-buckets per power of two (3
+//! significand bits kept), the classic HDR-histogram shape:
+//!
+//! - values below 8 ns get exact unit buckets (`[v, v+1)`);
+//! - a value with most-significant bit `m` (`8 ≤ 2^m ≤ 2^49`) lands in
+//!   one of 8 sub-buckets of width `2^(m-3)` spanning `[2^m, 2^(m+1))`;
+//! - everything above `2^50` ns (~13 days) collapses into the last bucket.
+//!
+//! The relative bucket width is at most 12.5%, so any quantile read from
+//! bucket bounds is within one bucket width of the exact order statistic —
+//! the property `rust/tests/obs.rs` pins against
+//! [`crate::util::stats::percentile`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: 2^3 = 8 sub-buckets per power of two.
+const SUB_BITS: u32 = 3;
+
+/// Largest most-significant-bit position tracked with full resolution
+/// (values up to `2^(MAX_MSB+1)` ns ≈ 13 days; beyond that the last
+/// bucket absorbs everything).
+const MAX_MSB: u32 = 49;
+
+/// Total bucket count: 8 unit buckets + 8 sub-buckets for each msb in
+/// `3..=49` — `8 + 47 * 8 = 384`.
+pub const BUCKETS: usize = 384;
+
+/// Bucket index for a nanosecond value (monotone non-decreasing in the
+/// value; zero clamps to 1 ns).
+pub fn bucket_index(nanos: u64) -> usize {
+    let v = nanos.max(1);
+    let msb = 63 - v.leading_zeros();
+    if msb < SUB_BITS {
+        v as usize
+    } else if msb > MAX_MSB {
+        BUCKETS - 1
+    } else {
+        let sub = ((v >> (msb - SUB_BITS)) & 0x7) as usize;
+        (msb as usize - 2) * 8 + sub
+    }
+}
+
+/// Half-open nanosecond range `[lo, hi)` covered by bucket `index`.
+/// (The last bucket also absorbs values past its nominal `hi`.)
+pub fn bucket_bounds(index: usize) -> (u64, u64) {
+    if index < 8 {
+        (index as u64, index as u64 + 1)
+    } else {
+        let m = (index / 8 + 2) as u32;
+        let w = 1u64 << (m - SUB_BITS);
+        let lo = (1u64 << m) + (index % 8) as u64 * w;
+        (lo, lo + w)
+    }
+}
+
+/// Lock-free log-bucketed histogram over nanosecond samples.
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    sum_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one nanosecond sample (two relaxed atomic adds).
+    pub fn record(&self, nanos: u64) {
+        self.counts[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Record a duration expressed in seconds.
+    pub fn record_seconds(&self, seconds: f64) {
+        self.record((seconds.max(0.0) * 1e9) as u64);
+    }
+
+    /// Point-in-time copy of the bucket counts (quantiles are read off the
+    /// snapshot so concurrent recording cannot tear a percentile).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        HistogramSnapshot { counts, count, sum_nanos: self.sum_nanos.load(Ordering::Relaxed) }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]'s counters.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts ([`BUCKETS`] entries; see
+    /// [`bucket_bounds`] for each bucket's nanosecond range).
+    pub counts: Vec<u64>,
+    /// Total samples (sum of `counts` — internally consistent even if
+    /// samples landed mid-snapshot).
+    pub count: u64,
+    /// Sum of all recorded nanosecond values.
+    pub sum_nanos: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean_nanos(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_nanos as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket holding the sample of (0-based) `rank`.
+    fn bucket_of_rank(&self, rank: u64) -> usize {
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return i;
+            }
+        }
+        BUCKETS - 1
+    }
+
+    /// Approximate percentile in nanoseconds: the midpoint of the bucket
+    /// holding the round-rank sample (rank = `round(p/100 * (n-1))`, the
+    /// same rank convention as [`crate::util::stats::percentile`]). 0.0
+    /// when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * (self.count - 1) as f64).round() as u64;
+        let (lo, hi) = bucket_bounds(self.bucket_of_rank(rank));
+        (lo as f64 + hi as f64) / 2.0
+    }
+
+    /// Convenience: [`percentile`](Self::percentile) in milliseconds.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.percentile(p) / 1e6
+    }
+
+    /// Nanosecond interval guaranteed to contain the EXACT interpolated
+    /// percentile of the recorded samples: `[lo, hi)` where `lo` is the
+    /// lower bound of the floor-rank sample's bucket and `hi` the upper
+    /// bound of the ceil-rank sample's bucket. `(0, 0)` when empty.
+    pub fn percentile_bounds(&self, p: f64) -> (f64, f64) {
+        if self.count == 0 {
+            return (0.0, 0.0);
+        }
+        let exact = (p.clamp(0.0, 100.0) / 100.0) * (self.count - 1) as f64;
+        let lo = bucket_bounds(self.bucket_of_rank(exact.floor() as u64)).0;
+        let hi = bucket_bounds(self.bucket_of_rank(exact.ceil() as u64)).1;
+        (lo as f64, hi as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_matches_bounds() {
+        // Every probe value must land in a bucket whose bounds contain it.
+        let probes: Vec<u64> = (0..=64)
+            .chain([100, 255, 256, 257, 1_000, 65_535, 1_000_000, 1_000_000_000])
+            .chain((3..=49).flat_map(|m: u32| {
+                let b = 1u64 << m;
+                [b - 1, b, b + 1, b + (b >> 1)]
+            }))
+            .collect();
+        for v in probes {
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            let clamped = v.max(1);
+            assert!(
+                lo <= clamped && clamped < hi,
+                "v={v} index={i} bounds=({lo},{hi})"
+            );
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounds_tile() {
+        // Index is monotone in the value and consecutive buckets tile the
+        // axis with no gaps or overlaps.
+        let mut prev = bucket_index(1);
+        for v in 2..100_000u64 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index regressed at v={v}");
+            prev = i;
+        }
+        for i in 1..BUCKETS - 1 {
+            assert_eq!(
+                bucket_bounds(i).1,
+                bucket_bounds(i + 1).0,
+                "gap between buckets {i} and {}",
+                i + 1
+            );
+        }
+        // Relative width stays within the 12.5% HDR guarantee.
+        for i in 8..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert!((hi - lo) as f64 / lo as f64 <= 0.125 + 1e-12, "bucket {i} too wide");
+        }
+    }
+
+    #[test]
+    fn overflow_lands_in_last_bucket() {
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_index(1u64 << 55), BUCKETS - 1);
+        let (lo, _) = bucket_bounds(BUCKETS - 1);
+        assert!(lo <= 1u64 << 50);
+    }
+
+    #[test]
+    fn snapshot_counts_and_mean() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum_nanos, 60);
+        assert!((s.mean_nanos() - 20.0).abs() < 1e-9);
+        assert!(!s.is_empty());
+        let empty = Histogram::new().snapshot();
+        assert!(empty.is_empty());
+        assert_eq!(empty.percentile(50.0), 0.0);
+        assert_eq!(empty.percentile_bounds(99.0), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,317 @@
+//! Observability for the valuation pipeline: per-query tracing spans,
+//! atomic latency histograms, and Prometheus-style exposition.
+//!
+//! This module is the lock-light instrumentation substrate the serving
+//! path records into (the paper frames valuation as a *service* over
+//! billion-token corpora — LogIX §5 — and a service needs to answer
+//! "where did this query's 40ms go?"):
+//!
+//! - [`trace::TraceRing`]: a bounded ring of timestamped [`SpanEvent`]s
+//!   covering every stage of a query (admission → queue wait → per-shard
+//!   scans → merge → rescore), exportable as Chrome trace-event JSON via
+//!   [`trace::chrome_trace_json`] (`logra trace --out trace.json`).
+//! - [`hist::Histogram`]: HDR-style log-bucketed atomic histograms for
+//!   end-to-end query latency, queue wait, and per-shard scan time —
+//!   p50/p95/p99 without per-sample allocation.
+//! - [`QueryReport`]: the per-query stage breakdown attached to
+//!   [`PendingScores`](crate::valuation::PendingScores) when
+//!   [`BackendConfig::metrics`](crate::valuation::BackendConfig) is set
+//!   (`Valuator::query_with_report` / `PendingScores::wait_with_report`).
+//! - [`export::render_exposition`]: Prometheus text format over
+//!   [`Metrics`](crate::coordinator::Metrics) + pool snapshot +
+//!   histograms (`serve_queries --metrics`, `logra store stat --metrics`).
+//!
+//! One [`Obs`] instance lives inside every
+//! [`Metrics`](crate::coordinator::Metrics), so opting into metrics
+//! (`BackendConfig::metrics` / `ValuatorBuilder::metrics`) opts into the
+//! whole layer; without it the hot path pays nothing.
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use export::render_exposition;
+pub use hist::{bucket_bounds, bucket_index, Histogram, HistogramSnapshot, BUCKETS};
+pub use trace::{chrome_trace_json, thread_lane, SpanEvent, TraceRing};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Span events retained by default (the "last N queries" window of
+/// `logra trace`; a concurrent 8-query run over a few dozen shards emits
+/// a few hundred events).
+pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
+
+/// Process-lifetime observability state: the trace ring, the latency
+/// histograms, the query-id counter, and the monotonic time origin all
+/// spans are stamped against. Embedded in
+/// [`Metrics`](crate::coordinator::Metrics) (one per service / valuator
+/// session).
+pub struct Obs {
+    epoch: Instant,
+    next_query: AtomicU64,
+    /// Recent span events (bounded; oldest overwritten).
+    pub trace: TraceRing,
+    /// End-to-end latency of each completed query (admission → results).
+    pub query_latency: Histogram,
+    /// Admission-to-first-scan-task wait of each query (pool queue depth
+    /// made visible; near-zero on unpooled paths).
+    pub queue_wait: Histogram,
+    /// Wall time of each individual `(query, shard)` scan task.
+    pub shard_scan: Histogram,
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs {
+            epoch: Instant::now(),
+            next_query: AtomicU64::new(0),
+            trace: TraceRing::with_capacity(DEFAULT_TRACE_CAPACITY),
+            query_latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+            shard_scan: Histogram::new(),
+        }
+    }
+}
+
+impl Obs {
+    /// Nanoseconds since this instance's epoch — the time base every
+    /// [`SpanEvent`] uses.
+    pub fn now_nanos(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Next observability query id (process-wide within this `Obs`).
+    pub fn next_query_id(&self) -> u64 {
+        self.next_query.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one completed span into the trace ring, stamped with the
+    /// calling thread's lane.
+    pub fn span(
+        &self,
+        name: &'static str,
+        query: u64,
+        shard: Option<u32>,
+        start_nanos: u64,
+        dur_nanos: u64,
+    ) {
+        self.trace.record(SpanEvent {
+            name,
+            query,
+            shard,
+            lane: thread_lane(),
+            start_nanos,
+            dur_nanos,
+            seq: 0,
+        });
+    }
+}
+
+/// Per-query scan observer, shared between the admitting thread and the
+/// scan workers (pool or scoped). Created at admission; the first scan
+/// task to start stamps the queue wait; every task registers its lane so
+/// the final [`QueryReport`] can show worker spread.
+pub struct ScanObs {
+    query: u64,
+    admitted: Instant,
+    admitted_nanos: u64,
+    /// Elapsed nanos at which admission work (preconditioning, RelatIF
+    /// cache) finished and the scan was handed to its execution substrate.
+    admission_nanos: AtomicU64,
+    started: AtomicBool,
+    queue_wait_nanos: AtomicU64,
+    lanes: Mutex<Vec<u32>>,
+}
+
+impl ScanObs {
+    pub fn new(obs: &Obs) -> Self {
+        ScanObs {
+            query: obs.next_query_id(),
+            admitted: Instant::now(),
+            admitted_nanos: obs.now_nanos(),
+            admission_nanos: AtomicU64::new(0),
+            started: AtomicBool::new(false),
+            queue_wait_nanos: AtomicU64::new(0),
+            lanes: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn query(&self) -> u64 {
+        self.query
+    }
+
+    /// Nanoseconds since admission.
+    pub fn elapsed_nanos(&self) -> u64 {
+        self.admitted.elapsed().as_nanos() as u64
+    }
+
+    /// Obs-epoch timestamp of admission (span time base).
+    pub fn admitted_nanos(&self) -> u64 {
+        self.admitted_nanos
+    }
+
+    /// Mark admission work done (queue wait is measured from here, so
+    /// preconditioning time cannot masquerade as queue depth). Records the
+    /// `"admission"` span.
+    pub fn admission_done(&self, obs: &Obs) {
+        let at = self.elapsed_nanos();
+        self.admission_nanos.store(at, Ordering::Relaxed);
+        obs.span("admission", self.query, None, self.admitted_nanos, at);
+    }
+
+    pub fn admission_nanos(&self) -> u64 {
+        self.admission_nanos.load(Ordering::Relaxed)
+    }
+
+    /// Called by every scan task as it starts: registers the worker lane;
+    /// the FIRST task additionally stamps the query's queue wait into the
+    /// histogram and the trace — uniformly on pooled, scoped-thread, and
+    /// sequential paths, so the queue-wait histogram is populated on every
+    /// backend.
+    pub fn task_started(&self, obs: &Obs) {
+        let lane = thread_lane();
+        {
+            let mut lanes = self.lanes.lock().unwrap();
+            if !lanes.contains(&lane) {
+                lanes.push(lane);
+            }
+        }
+        if !self.started.swap(true, Ordering::Relaxed) {
+            let admission = self.admission_nanos.load(Ordering::Relaxed);
+            let wait = self.elapsed_nanos().saturating_sub(admission);
+            self.queue_wait_nanos.store(wait, Ordering::Relaxed);
+            obs.queue_wait.record(wait);
+            obs.span("queue_wait", self.query, None, self.admitted_nanos + admission, wait);
+        }
+    }
+
+    /// Queue wait stamped by the first scan task (0 until one starts).
+    pub fn queue_wait_nanos(&self) -> u64 {
+        self.queue_wait_nanos.load(Ordering::Relaxed)
+    }
+
+    /// Distinct lanes that ran this query's scan tasks, sorted.
+    pub fn lanes(&self) -> Vec<u32> {
+        let mut lanes = self.lanes.lock().unwrap().clone();
+        lanes.sort_unstable();
+        lanes
+    }
+}
+
+/// Per-query stage breakdown, returned alongside the scores when
+/// [`BackendConfig::metrics`](crate::valuation::BackendConfig) is set
+/// (via `PendingScores::wait_with_report` or
+/// `Valuator::query_with_report`). All times are wall-clock nanoseconds;
+/// the stages partition `total_nanos` (admission + queue wait + scan +
+/// merge + rescore ≈ total, up to clock-read jitter).
+#[derive(Clone, Debug)]
+pub struct QueryReport {
+    /// Observability query id (matches the trace's `query` arg).
+    pub query_id: u64,
+    /// Serving backend name (`"sequential"`, `"parallel-f32"`,
+    /// `"two-stage"`).
+    pub backend: &'static str,
+    /// Shards fanned out over.
+    pub shards: u32,
+    /// Rows covered by the (stage-1) scan.
+    pub rows_scanned: u64,
+    /// Rows rescored at exact precision (two-stage only; 0 elsewhere).
+    pub candidates_rescored: u64,
+    /// Admission work: validation, preconditioning, RelatIF cache.
+    pub admission_nanos: u64,
+    /// Admission-done to first scan task starting.
+    pub queue_wait_nanos: u64,
+    /// First scan task start to last shard result available.
+    pub scan_nanos: u64,
+    /// Deterministic heap merge.
+    pub merge_nanos: u64,
+    /// Two-stage exact rescore (0 on exact backends).
+    pub rescore_nanos: u64,
+    /// Admission to results.
+    pub total_nanos: u64,
+    /// Distinct worker lanes that ran scan tasks (worker spread).
+    pub workers: Vec<u32>,
+}
+
+impl QueryReport {
+    /// Human-readable multi-line stage breakdown (what `logra query`
+    /// prints).
+    pub fn render(&self) -> String {
+        let ms = |n: u64| n as f64 / 1e6;
+        let mut s = format!(
+            "query {} via {} ({} shards, {} rows, {} workers)\n",
+            self.query_id,
+            self.backend,
+            self.shards,
+            self.rows_scanned,
+            self.workers.len().max(1)
+        );
+        s.push_str(&format!("  admission  {:9.3} ms\n", ms(self.admission_nanos)));
+        s.push_str(&format!("  queue wait {:9.3} ms\n", ms(self.queue_wait_nanos)));
+        s.push_str(&format!("  scan       {:9.3} ms\n", ms(self.scan_nanos)));
+        s.push_str(&format!("  merge      {:9.3} ms\n", ms(self.merge_nanos)));
+        if self.candidates_rescored > 0 {
+            s.push_str(&format!(
+                "  rescore    {:9.3} ms ({} candidates)\n",
+                ms(self.rescore_nanos),
+                self.candidates_rescored
+            ));
+        }
+        s.push_str(&format!("  total      {:9.3} ms\n", ms(self.total_nanos)));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_obs_stamps_queue_wait_once() {
+        let obs = Obs::default();
+        let so = ScanObs::new(&obs);
+        assert_eq!(so.queue_wait_nanos(), 0);
+        so.admission_done(&obs);
+        so.task_started(&obs);
+        let first = so.queue_wait_nanos();
+        so.task_started(&obs);
+        assert_eq!(so.queue_wait_nanos(), first, "only the first task stamps the wait");
+        assert_eq!(so.lanes().len(), 1);
+        assert_eq!(obs.queue_wait.snapshot().count, 1);
+        // admission + queue_wait spans recorded.
+        assert_eq!(obs.trace.recorded(), 2);
+    }
+
+    #[test]
+    fn query_ids_are_unique() {
+        let obs = Obs::default();
+        let a = ScanObs::new(&obs).query();
+        let b = ScanObs::new(&obs).query();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn report_renders_every_stage() {
+        let r = QueryReport {
+            query_id: 3,
+            backend: "two-stage",
+            shards: 4,
+            rows_scanned: 1000,
+            candidates_rescored: 40,
+            admission_nanos: 1_000_000,
+            queue_wait_nanos: 500_000,
+            scan_nanos: 8_000_000,
+            merge_nanos: 100_000,
+            rescore_nanos: 2_000_000,
+            total_nanos: 11_600_000,
+            workers: vec![1, 2],
+        };
+        let text = r.render();
+        for needle in ["two-stage", "admission", "queue wait", "scan", "merge", "rescore", "total"]
+        {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Per-query span tracing: a bounded ring of timestamped span events,
+//! exportable as Chrome trace-event JSON.
+//!
+//! Every instrumented stage of the query path (admission, queue wait,
+//! each `(query, shard)` scan task, merge, rescore, the whole query)
+//! records one [`SpanEvent`] into the shared [`TraceRing`]. Recording is
+//! one relaxed atomic increment to claim a slot plus one short per-slot
+//! mutex write — bounded memory, no allocation, and the ring simply
+//! overwrites the oldest events under sustained load, so it always holds
+//! the trace of the most recent queries.
+//!
+//! [`chrome_trace_json`] renders events in the Chrome trace-event format
+//! (`{"traceEvents": [...]}` with complete `"ph": "X"` events), loadable
+//! in `chrome://tracing` or Perfetto; `logra trace` writes it to disk.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Small dense id for the calling thread ("lane"), assigned on first use.
+/// Lanes map to Chrome trace `tid`s and to `PoolSnapshot::worker_lanes`,
+/// so trace rows line up with pool workers.
+pub fn thread_lane() -> u32 {
+    static NEXT_LANE: AtomicU32 = AtomicU32::new(0);
+    thread_local! {
+        static LANE: u32 = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+    }
+    LANE.with(|l| *l)
+}
+
+/// One completed span on the query path. Times are nanoseconds since the
+/// owning [`Obs`](super::Obs) epoch (a per-process monotonic origin).
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Stage name from the fixed span taxonomy (`"admission"`,
+    /// `"queue_wait"`, `"scan"`, `"merge"`, `"rescore"`, `"query"`).
+    pub name: &'static str,
+    /// Observability query id (one per admitted query, process-wide).
+    pub query: u64,
+    /// Shard index for per-shard scan spans; `None` for query-level spans.
+    pub shard: Option<u32>,
+    /// Lane (thread) the span ran on — the Chrome trace `tid`.
+    pub lane: u32,
+    pub start_nanos: u64,
+    pub dur_nanos: u64,
+    /// Global record sequence number (assigned by the ring; later events
+    /// have larger `seq`, which survives ring wraparound).
+    pub seq: u64,
+}
+
+/// Bounded lock-light ring buffer of the most recent [`SpanEvent`]s.
+pub struct TraceRing {
+    next: AtomicU64,
+    slots: Vec<Mutex<Option<SpanEvent>>>,
+}
+
+impl TraceRing {
+    /// Ring holding the most recent `capacity` events (min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        TraceRing {
+            next: AtomicU64::new(0),
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Record one event (its `seq` field is assigned here). Under
+    /// contention the claim is a single relaxed `fetch_add`; an event
+    /// overwritten before a concurrent reader copies its slot simply drops
+    /// out of that reader's view — the ring never blocks the hot path on
+    /// readers.
+    pub fn record(&self, mut event: SpanEvent) {
+        let seq = self.next.fetch_add(1, Ordering::Relaxed);
+        event.seq = seq;
+        let slot = (seq % self.slots.len() as u64) as usize;
+        *self.slots[slot].lock().unwrap() = Some(event);
+    }
+
+    /// Total events ever recorded (including ones already overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The retained events, oldest first (at most `capacity`, with
+    /// monotonically increasing `seq`).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let mut out: Vec<SpanEvent> =
+            self.slots.iter().filter_map(|s| s.lock().unwrap().clone()).collect();
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+/// Render span events as Chrome trace-event JSON (complete `"X"` events,
+/// microsecond integer timestamps — `chrome://tracing` / Perfetto /
+/// [`crate::util::json`]-parseable). Lanes become `tid`s so each worker
+/// thread gets its own track; the query id (and shard, when present) ride
+/// in `args`. Durations round up to 1 µs so sub-microsecond spans stay
+/// visible.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 112 + 32);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"logra\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":1,\"tid\":{},\"args\":{{\"query\":{}",
+            e.name,
+            e.start_nanos / 1_000,
+            (e.dur_nanos / 1_000).max(1),
+            e.lane,
+            e.query
+        ));
+        if let Some(shard) = e.shard {
+            out.push_str(&format!(",\"shard\":{shard}"));
+        }
+        out.push_str("}}");
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, start: u64) -> SpanEvent {
+        SpanEvent {
+            name,
+            query: 7,
+            shard: None,
+            lane: thread_lane(),
+            start_nanos: start,
+            dur_nanos: 500,
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn ring_retains_most_recent_in_seq_order() {
+        let ring = TraceRing::with_capacity(4);
+        for i in 0..10u64 {
+            ring.record(ev("scan", i * 1000));
+        }
+        assert_eq!(ring.recorded(), 10);
+        assert_eq!(ring.capacity(), 4);
+        let events = ring.events();
+        assert_eq!(events.len(), 4);
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn lanes_are_stable_per_thread() {
+        let a = thread_lane();
+        let b = thread_lane();
+        assert_eq!(a, b);
+        let other = std::thread::spawn(thread_lane).join().unwrap();
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let mut e = ev("query", 2_000);
+        e.shard = Some(3);
+        let json = chrome_trace_json(&[e]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ts\":2"));
+        assert!(json.contains("\"shard\":3"));
+        assert!(json.ends_with("]}"));
+        assert_eq!(chrome_trace_json(&[]), "{\"traceEvents\":[]}");
+    }
+}

@@ -657,172 +657,10 @@ impl StoreStat {
     }
 }
 
-// ---------------------------------------------------- minimal JSON subset
-
-/// Hand-rolled parser for the JSON subset `shards.json` uses (objects,
-/// arrays, strings without escapes, unsigned integers) — no serde offline.
-mod json {
-    use anyhow::{anyhow, ensure, Result};
-
-    #[derive(Clone, Debug, PartialEq)]
-    pub enum Json {
-        Num(u64),
-        Str(String),
-        Arr(Vec<Json>),
-        Obj(Vec<(String, Json)>),
-    }
-
-    impl Json {
-        pub fn get(&self, key: &str) -> Option<&Json> {
-            match self {
-                Json::Obj(pairs) => {
-                    pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
-                }
-                _ => None,
-            }
-        }
-
-        pub fn as_u64(&self) -> Option<u64> {
-            match self {
-                Json::Num(n) => Some(*n),
-                _ => None,
-            }
-        }
-
-        pub fn as_str(&self) -> Option<&str> {
-            match self {
-                Json::Str(s) => Some(s),
-                _ => None,
-            }
-        }
-
-        pub fn as_arr(&self) -> Option<&[Json]> {
-            match self {
-                Json::Arr(v) => Some(v),
-                _ => None,
-            }
-        }
-    }
-
-    pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
-        let v = p.value()?;
-        p.skip_ws();
-        ensure!(p.i == p.b.len(), "trailing bytes after JSON value");
-        Ok(v)
-    }
-
-    struct Parser<'a> {
-        b: &'a [u8],
-        i: usize,
-    }
-
-    impl Parser<'_> {
-        fn skip_ws(&mut self) {
-            while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
-                self.i += 1;
-            }
-        }
-
-        fn peek(&mut self) -> Result<u8> {
-            self.skip_ws();
-            self.b
-                .get(self.i)
-                .copied()
-                .ok_or_else(|| anyhow!("unexpected end of JSON"))
-        }
-
-        fn expect(&mut self, ch: u8) -> Result<()> {
-            let got = self.peek()?;
-            ensure!(got == ch, "expected {:?}, got {:?}", ch as char, got as char);
-            self.i += 1;
-            Ok(())
-        }
-
-        fn value(&mut self) -> Result<Json> {
-            match self.peek()? {
-                b'{' => self.object(),
-                b'[' => self.array(),
-                b'"' => Ok(Json::Str(self.string()?)),
-                b'0'..=b'9' => self.number(),
-                other => Err(anyhow!("unexpected JSON byte {:?}", other as char)),
-            }
-        }
-
-        fn object(&mut self) -> Result<Json> {
-            self.expect(b'{')?;
-            let mut pairs = Vec::new();
-            if self.peek()? == b'}' {
-                self.i += 1;
-                return Ok(Json::Obj(pairs));
-            }
-            loop {
-                let key = self.string()?;
-                self.expect(b':')?;
-                pairs.push((key, self.value()?));
-                match self.peek()? {
-                    b',' => self.i += 1,
-                    b'}' => {
-                        self.i += 1;
-                        return Ok(Json::Obj(pairs));
-                    }
-                    other => {
-                        return Err(anyhow!("expected ',' or '}}', got {:?}", other as char))
-                    }
-                }
-            }
-        }
-
-        fn array(&mut self) -> Result<Json> {
-            self.expect(b'[')?;
-            let mut items = Vec::new();
-            if self.peek()? == b']' {
-                self.i += 1;
-                return Ok(Json::Arr(items));
-            }
-            loop {
-                items.push(self.value()?);
-                match self.peek()? {
-                    b',' => self.i += 1,
-                    b']' => {
-                        self.i += 1;
-                        return Ok(Json::Arr(items));
-                    }
-                    other => {
-                        return Err(anyhow!("expected ',' or ']', got {:?}", other as char))
-                    }
-                }
-            }
-        }
-
-        fn string(&mut self) -> Result<String> {
-            self.expect(b'"')?;
-            let start = self.i;
-            while self.i < self.b.len() {
-                match self.b[self.i] {
-                    b'"' => {
-                        let s = std::str::from_utf8(&self.b[start..self.i])?.to_string();
-                        self.i += 1;
-                        return Ok(s);
-                    }
-                    b'\\' => return Err(anyhow!("escapes unsupported in shard manifest")),
-                    _ => self.i += 1,
-                }
-            }
-            Err(anyhow!("unterminated JSON string"))
-        }
-
-        fn number(&mut self) -> Result<Json> {
-            let start = self.i;
-            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
-                self.i += 1;
-            }
-            let s = std::str::from_utf8(&self.b[start..self.i])?;
-            ensure!(!s.is_empty(), "empty JSON number");
-            Ok(Json::Num(s.parse()?))
-        }
-    }
-}
+// The minimal JSON-subset parser the manifest uses lives in
+// `crate::util::json` (shared with the trace/bench JSON validation in
+// tests).
+use crate::util::json;
 
 #[cfg(test)]
 mod tests {

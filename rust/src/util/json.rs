@@ -1,0 +1,198 @@
+//! Hand-rolled parser for the JSON subset this crate emits and reads —
+//! objects, arrays, escape-free strings, unsigned integers. No serde in
+//! the offline crate set, so both the shard manifest (`shards.json`,
+//! [`crate::store::ShardManifest`]) and the test-side validation of
+//! generated JSON (Chrome trace events, bench reports) go through here.
+//!
+//! Deliberately NOT a general JSON parser: no floats, no negatives, no
+//! booleans/null, no string escapes. Everything the crate writes for its
+//! own consumption sticks to this subset (e.g.
+//! [`crate::obs::chrome_trace_json`] emits integer microsecond
+//! timestamps), which keeps the parser ~150 lines and obviously correct.
+
+use anyhow::{anyhow, ensure, Result};
+
+/// A parsed JSON value (the supported subset).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Num(u64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (`None` on non-objects or missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON value; the whole input must be consumed (trailing
+/// whitespace allowed).
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    ensure!(p.i == p.b.len(), "trailing bytes after JSON value");
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of JSON"))
+    }
+
+    fn expect(&mut self, ch: u8) -> Result<()> {
+        let got = self.peek()?;
+        ensure!(got == ch, "expected {:?}, got {:?}", ch as char, got as char);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'0'..=b'9' => self.number(),
+            other => Err(anyhow!("unexpected JSON byte {:?}", other as char)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            pairs.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                other => {
+                    return Err(anyhow!("expected ',' or '}}', got {:?}", other as char))
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => {
+                    return Err(anyhow!("expected ',' or ']', got {:?}", other as char))
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.b[start..self.i])?.to_string();
+                    self.i += 1;
+                    return Ok(s);
+                }
+                b'\\' => return Err(anyhow!("escapes unsupported in this JSON subset")),
+                _ => self.i += 1,
+            }
+        }
+        Err(anyhow!("unterminated JSON string"))
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        ensure!(!s.is_empty(), "empty JSON number");
+        Ok(Json::Num(s.parse()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_subset() {
+        let v = parse(r#"{"a": [1, 2, {"b": "x"}], "n": 7}"#).unwrap();
+        assert_eq!(v.get("n").and_then(Json::as_u64), Some(7));
+        let arr = v.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("b").and_then(Json::as_str), Some("x"));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_out_of_subset_input() {
+        assert!(parse("{\"a\": -1}").is_err(), "negatives unsupported");
+        assert!(parse("{\"a\": 1.5}").is_err(), "floats unsupported");
+        assert!(parse("{\"a\": \"x\\n\"}").is_err(), "escapes unsupported");
+        assert!(parse("{} trailing").is_err());
+        assert!(parse("").is_err());
+    }
+}

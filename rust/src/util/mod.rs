@@ -3,6 +3,7 @@
 //! bounded pipelines, property testing, micro-benchmarking, memory probes.
 
 pub mod bench;
+pub mod json;
 pub mod memory;
 pub mod pipeline;
 pub mod proptest;

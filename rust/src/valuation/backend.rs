@@ -54,6 +54,7 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::metrics::Metrics;
 use crate::hessian::{BlockHessian, Preconditioner};
 use crate::linalg::ScanScratch;
+use crate::obs::{QueryReport, ScanObs};
 use crate::store::{
     QuantShardedStore, ShardManifest, ShardedStore, StoreCodec, QUANT_CODES_FILE,
     SHARD_MANIFEST,
@@ -305,6 +306,16 @@ pub trait ScanBackend: Send + Sync {
     fn query(&self, req: QueryRequest) -> Result<Vec<QueryResult>, ValuationError> {
         self.submit(req)?.wait()
     }
+
+    /// Submit + wait, returning the per-query [`QueryReport`] stage
+    /// breakdown alongside the scores. The report is `Some` exactly when
+    /// the backend was built with [`BackendConfig::metrics`].
+    fn query_with_report(
+        &self,
+        req: QueryRequest,
+    ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
+        self.submit(req)?.wait_with_report()
+    }
 }
 
 // ------------------------------------------------------------- completion
@@ -318,8 +329,9 @@ pub struct PendingScores {
 }
 
 pub(crate) enum Pending {
-    /// Scanned eagerly at admission (sequential backend, empty fabrics).
-    Ready(Vec<QueryResult>),
+    /// Scanned eagerly at admission (sequential backend, empty fabrics),
+    /// report already final.
+    Ready(Vec<QueryResult>, Option<QueryReport>),
     /// Parallel f32 scan in flight; `wait` merges per-shard heaps.
     Merge(PendingMerge),
     /// Two-stage coarse scan in flight; `wait` merges candidate pools and
@@ -328,8 +340,8 @@ pub(crate) enum Pending {
 }
 
 impl PendingScores {
-    pub(crate) fn ready(results: Vec<QueryResult>) -> Self {
-        PendingScores { inner: Pending::Ready(results) }
+    pub(crate) fn ready(results: Vec<QueryResult>, report: Option<QueryReport>) -> Self {
+        PendingScores { inner: Pending::Ready(results, report) }
     }
 
     pub(crate) fn merge(p: PendingMerge) -> Self {
@@ -348,7 +360,7 @@ impl PendingScores {
     /// (which always runs inside `wait`, whatever stage 1 did).
     pub fn is_ready(&self) -> bool {
         match &self.inner {
-            Pending::Ready(_) => true,
+            Pending::Ready(..) => true,
             Pending::Merge(p) => p.is_eager(),
             Pending::Rescore(_) => false,
         }
@@ -358,10 +370,98 @@ impl PendingScores {
     /// order. A pool-worker panic surfaces as
     /// [`ValuationError::QueryPoisoned`] — only this query is lost.
     pub fn wait(self) -> Result<Vec<QueryResult>, ValuationError> {
+        self.wait_with_report().map(|(results, _)| results)
+    }
+
+    /// [`wait`](Self::wait), plus the per-query [`QueryReport`] stage
+    /// breakdown (`Some` exactly when the backend carries a
+    /// [`BackendConfig::metrics`] handle).
+    pub fn wait_with_report(
+        self,
+    ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
         match self.inner {
-            Pending::Ready(results) => Ok(results),
+            Pending::Ready(results, report) => Ok((results, report)),
             Pending::Merge(p) => p.finish(),
             Pending::Rescore(p) => p.finish(),
+        }
+    }
+}
+
+// ---------------------------------------------------------- query reports
+
+/// Everything a backend needs to finalize a [`QueryReport`] (and the
+/// query-level histogram/trace records) at completion time. Built at
+/// admission — which also records the `"admission"` span and marks the
+/// [`ScanObs`] admission boundary — and carried inside the pending handle.
+pub(crate) struct ReportCtx {
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) scan: Arc<ScanObs>,
+    backend: &'static str,
+    shards: u32,
+    rows: u64,
+}
+
+impl ReportCtx {
+    pub(crate) fn new(
+        metrics: Arc<Metrics>,
+        scan: Arc<ScanObs>,
+        backend: &'static str,
+        shards: u32,
+        rows: u64,
+    ) -> Self {
+        scan.admission_done(&metrics.obs);
+        ReportCtx { metrics, scan, backend, shards, rows }
+    }
+
+    /// Finalize at completion: record the `"merge"`, `"rescore"` (when
+    /// candidates were rescored), and `"query"` spans, feed the
+    /// end-to-end latency histogram and the aggregate
+    /// `queue_wait_nanos` counter, and build the [`QueryReport`].
+    /// `scan_done_nanos` / `rescore_start_nanos` are [`ScanObs`]-elapsed
+    /// stamps taken when the shard results became available and when the
+    /// exact rescore began (equal to merge-done on exact backends).
+    pub(crate) fn complete(
+        self,
+        scan_done_nanos: u64,
+        rescore_start_nanos: u64,
+        candidates_rescored: u64,
+    ) -> QueryReport {
+        let total = self.scan.elapsed_nanos();
+        let obs = &self.metrics.obs;
+        let admitted = self.scan.admitted_nanos();
+        let admission = self.scan.admission_nanos();
+        let queue_wait = self.scan.queue_wait_nanos();
+        let scan_nanos = scan_done_nanos.saturating_sub(admission + queue_wait);
+        let merge_nanos = rescore_start_nanos.saturating_sub(scan_done_nanos);
+        let rescore_nanos = total.saturating_sub(rescore_start_nanos);
+        self.metrics
+            .queue_wait_nanos
+            .fetch_add(queue_wait, std::sync::atomic::Ordering::Relaxed);
+        obs.query_latency.record(total);
+        obs.span("merge", self.scan.query(), None, admitted + scan_done_nanos, merge_nanos);
+        if candidates_rescored > 0 {
+            obs.span(
+                "rescore",
+                self.scan.query(),
+                None,
+                admitted + rescore_start_nanos,
+                rescore_nanos,
+            );
+        }
+        obs.span("query", self.scan.query(), None, admitted, total);
+        QueryReport {
+            query_id: self.scan.query(),
+            backend: self.backend,
+            shards: self.shards,
+            rows_scanned: self.rows,
+            candidates_rescored,
+            admission_nanos: admission,
+            queue_wait_nanos: queue_wait,
+            scan_nanos,
+            merge_nanos,
+            rescore_nanos,
+            total_nanos: total,
+            workers: self.scan.lanes(),
         }
     }
 }
@@ -411,6 +511,7 @@ impl ScanBackend for SequentialEngine {
     fn submit(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
         let k = self.store.k();
         let GradQuery { rows, nt, topk, norm } = req.resolve(self.cfg.norm, k)?;
+        let scan_obs = self.cfg.metrics.as_ref().map(|m| Arc::new(ScanObs::new(&m.obs)));
         let pre = self.precond.apply_rows(&rows, nt);
         let selfs: Option<Arc<Vec<f32>>> = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
@@ -421,6 +522,16 @@ impl ScanBackend for SequentialEngine {
         if let Some(m) = &self.cfg.metrics {
             m.scan_chunk_len.store(chunk_len as u64, std::sync::atomic::Ordering::Relaxed);
         }
+        let ctx = match (&self.cfg.metrics, &scan_obs) {
+            (Some(m), Some(so)) => Some(ReportCtx::new(
+                m.clone(),
+                so.clone(),
+                BackendKind::Sequential.name(),
+                self.store.n_shards() as u32,
+                self.store.rows() as u64,
+            )),
+            _ => None,
+        };
         let mut scratch = self.scratch.lock().unwrap();
         let mut finals: Vec<TopK> = (0..nt).map(|_| TopK::new(topk)).collect();
         for si in 0..self.store.n_shards() {
@@ -433,14 +544,22 @@ impl ScanBackend for SequentialEngine {
                 selfs_ref,
                 chunk_len,
                 self.cfg.metrics.as_deref(),
+                scan_obs.as_deref(),
                 &mut scratch,
             );
             for (t, h) in heaps.into_iter().enumerate() {
                 finals[t].merge(h);
             }
         }
+        // Scan and merge are interleaved here (heaps merge as each shard
+        // finishes), so the whole loop reports as scan time.
+        let report = ctx.map(|c| {
+            let done = c.scan.elapsed_nanos();
+            c.complete(done, done, 0)
+        });
         Ok(PendingScores::ready(
             finals.into_iter().map(|h| QueryResult { top: h.into_sorted() }).collect(),
+            report,
         ))
     }
 
@@ -863,6 +982,16 @@ impl Valuator {
     /// Submit + wait (blocking).
     pub fn query(&self, req: QueryRequest) -> Result<Vec<QueryResult>, ValuationError> {
         self.backend.query(req)
+    }
+
+    /// Submit + wait, returning the per-query [`QueryReport`] stage
+    /// breakdown alongside the scores (`Some` exactly when the valuator
+    /// was built with [`ValuatorBuilder::metrics`]).
+    pub fn query_with_report(
+        &self,
+        req: QueryRequest,
+    ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
+        self.backend.query_with_report(req)
     }
 
     /// Admit a query without blocking on the scan.

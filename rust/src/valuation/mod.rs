@@ -20,6 +20,11 @@
 //! warm workers. [`scorer::QueryEngine`] remains the borrow-based
 //! reference engine (and the only one that can score through the AOT HLO
 //! `score` program).
+//!
+//! With [`BackendConfig::metrics`] attached, every backend also records
+//! per-query trace spans and latency histograms ([`crate::obs`]) and can
+//! return a [`crate::obs::QueryReport`] stage breakdown via
+//! `query_with_report` / [`PendingScores::wait_with_report`].
 
 pub mod backend;
 pub mod parallel;

@@ -37,13 +37,14 @@ use crate::coordinator::metrics::Metrics;
 use crate::hessian::Preconditioner;
 use crate::linalg::kernels::{auto_chunk_len, matmul_t_into};
 use crate::linalg::ScanScratch;
+use crate::obs::{QueryReport, ScanObs};
 use crate::store::ShardedStore;
 use crate::util::pipeline::bounded;
 use crate::util::topk::TopK;
 
 use super::backend::{
-    BackendConfig, BackendKind, GradQuery, PendingScores, QueryRequest, ScanBackend,
-    ValuationError,
+    BackendConfig, BackendKind, GradQuery, PendingScores, QueryRequest, ReportCtx,
+    ScanBackend, ValuationError,
 };
 use super::pool::{auto_workers, ScanHandle};
 use super::scorer::{Normalization, QueryResult};
@@ -114,6 +115,7 @@ impl ParallelQueryEngine {
     fn submit_grads(&self, q: GradQuery) -> Result<PendingScores, ValuationError> {
         let GradQuery { rows: test_grads, nt, topk, norm } = q;
         let k = self.store.k();
+        let scan_obs = self.cfg.metrics.as_ref().map(|m| Arc::new(ScanObs::new(&m.obs)));
         let pre = Arc::new(self.precond.apply_rows(&test_grads, nt));
         let selfs: Option<Arc<Vec<f32>>> = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
@@ -123,12 +125,23 @@ impl ParallelQueryEngine {
         if let Some(m) = &self.cfg.metrics {
             m.scan_chunk_len.store(chunk_len as u64, std::sync::atomic::Ordering::Relaxed);
         }
+        let ctx = match (&self.cfg.metrics, &scan_obs) {
+            (Some(m), Some(so)) => Some(ReportCtx::new(
+                m.clone(),
+                so.clone(),
+                BackendKind::Parallel.name(),
+                self.store.n_shards() as u32,
+                self.store.rows() as u64,
+            )),
+            _ => None,
+        };
         let scan = match &self.cfg.pool {
             Some(pool) => {
                 let store = self.store.clone();
                 let metrics = self.cfg.metrics.clone();
                 let pre = pre.clone();
                 let selfs = selfs.clone();
+                let scan_obs = scan_obs.clone();
                 ScanHandle::Pool(pool.submit_with_scratch(
                     self.store.n_shards(),
                     move |si, scratch| {
@@ -141,6 +154,7 @@ impl ParallelQueryEngine {
                             selfs.as_ref().map(|s| s.as_slice()),
                             chunk_len,
                             metrics.as_deref(),
+                            scan_obs.as_deref(),
                             scratch,
                         )
                     },
@@ -151,6 +165,7 @@ impl ParallelQueryEngine {
                 let metrics = self.cfg.metrics.as_deref();
                 let pre_rows: &[f32] = &pre;
                 let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
+                let scan_obs_ref = scan_obs.as_deref();
                 ScanHandle::Ready(scatter_gather(
                     self.workers(),
                     store.n_shards(),
@@ -164,13 +179,14 @@ impl ParallelQueryEngine {
                             selfs_ref,
                             chunk_len,
                             metrics,
+                            scan_obs_ref,
                             scratch,
                         )
                     },
                 ))
             }
         };
-        Ok(PendingScores::merge(PendingMerge { scan, nt, topk }))
+        Ok(PendingScores::merge(PendingMerge { scan, nt, topk, ctx }))
     }
 }
 
@@ -217,6 +233,8 @@ pub(crate) struct PendingMerge {
     scan: ScanHandle,
     nt: usize,
     topk: usize,
+    /// Report finalizer when the backend carries metrics.
+    ctx: Option<ReportCtx>,
 }
 
 impl PendingMerge {
@@ -226,8 +244,11 @@ impl PendingMerge {
         matches!(self.scan, ScanHandle::Ready(_))
     }
 
-    pub(crate) fn finish(self) -> Result<Vec<QueryResult>, ValuationError> {
+    pub(crate) fn finish(
+        self,
+    ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
         let shard_heaps = self.scan.wait()?;
+        let scan_done = self.ctx.as_ref().map(|c| c.scan.elapsed_nanos()).unwrap_or(0);
         // Deterministic merge, shard-major: with TopK's total order the
         // merged set equals the sequential scan's set; into_sorted then
         // fixes the output order.
@@ -237,7 +258,14 @@ impl PendingMerge {
                 finals[t].merge(h);
             }
         }
-        Ok(finals.into_iter().map(|h| QueryResult { top: h.into_sorted() }).collect())
+        let report = self.ctx.map(|c| {
+            let merge_done = c.scan.elapsed_nanos();
+            c.complete(scan_done, merge_done, 0)
+        });
+        Ok((
+            finals.into_iter().map(|h| QueryResult { top: h.into_sorted() }).collect(),
+            report,
+        ))
     }
 }
 
@@ -296,6 +324,10 @@ where
 /// `pre` is already preconditioned ([nt, k]); `scratch` holds the score
 /// buffer between chunks, so the steady-state loop allocates nothing per
 /// chunk (kernel writes in place, heap pushes go to pre-sized heaps).
+/// With `metrics` attached the task also feeds the shard-scan histogram
+/// and records a per-(query, shard) `"scan"` trace span; `scan_obs` lets
+/// the first task of a query stamp its queue wait and every task register
+/// its worker lane.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn scan_shard(
     store: &ShardedStore,
@@ -306,9 +338,14 @@ pub(crate) fn scan_shard(
     selfs: Option<&[f32]>,
     chunk_len: usize,
     metrics: Option<&Metrics>,
+    scan_obs: Option<&ScanObs>,
     scratch: &mut ScanScratch,
 ) -> Vec<TopK> {
     let t0 = Instant::now();
+    let obs_start = metrics.map(|m| m.obs.now_nanos());
+    if let (Some(m), Some(so)) = (metrics, scan_obs) {
+        so.task_started(&m.obs);
+    }
     let k = store.k();
     let shard = store.shard(si);
     let base = store.shard_start(si);
@@ -339,7 +376,17 @@ pub(crate) fn scan_shard(
     }
     if let Some(m) = metrics {
         m.shards_scanned.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Metrics::add_nanos(&m.shard_scan_nanos, t0.elapsed().as_secs_f64());
+        let dur = t0.elapsed();
+        Metrics::add_seconds(&m.shard_scan_nanos, dur.as_secs_f64());
+        let dur_nanos = dur.as_nanos() as u64;
+        m.obs.shard_scan.record(dur_nanos);
+        m.obs.span(
+            "scan",
+            scan_obs.map(|s| s.query()).unwrap_or(0),
+            Some(si as u32),
+            obs_start.unwrap_or(0),
+            dur_nanos,
+        );
     }
     heaps
 }
@@ -442,11 +489,11 @@ mod tests {
 
         let mut scratch = ScanScratch::new();
         // Multi-chunk scan (chunk_len 32 over 200 rows = 7 chunks).
-        let heaps = scan_shard(&store, 0, &pre, nt, 5, None, 32, None, &mut scratch);
+        let heaps = scan_shard(&store, 0, &pre, nt, 5, None, 32, None, None, &mut scratch);
         assert_eq!(heaps.len(), nt);
         assert_eq!(scratch.grows(), 1, "one warmup growth for the score buffer");
         for _ in 0..3 {
-            let again = scan_shard(&store, 0, &pre, nt, 5, None, 32, None, &mut scratch);
+            let again = scan_shard(&store, 0, &pre, nt, 5, None, 32, None, None, &mut scratch);
             assert_eq!(again.len(), nt);
         }
         assert_eq!(scratch.grows(), 1, "steady-state scans must not allocate");

@@ -38,7 +38,7 @@
 //! metrics can report the worker count actually spawned.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -162,6 +162,11 @@ pub struct PoolSnapshot {
     /// and then stays flat — steady-state scans allocate nothing per
     /// chunk (`rust/tests/kernels.rs` pins this).
     pub scratch_grows: Vec<u64>,
+    /// Per-worker trace lane ([`crate::obs::thread_lane`]) — matches the
+    /// `tid` of that worker's spans in exported Chrome traces, so a trace
+    /// row can be tied back to a pool worker. `u32::MAX` until the worker
+    /// has run its first task.
+    pub worker_lanes: Vec<u32>,
 }
 
 impl PoolSnapshot {
@@ -181,6 +186,7 @@ pub struct ScanPool {
     metrics: Arc<PoolMetrics>,
     busy: Arc<Vec<AtomicU64>>,
     scratch_grows: Arc<Vec<AtomicU64>>,
+    lanes: Arc<Vec<AtomicU32>>,
     n_workers: usize,
     next_query: AtomicU64,
 }
@@ -197,6 +203,8 @@ impl ScanPool {
             Arc::new((0..n_workers).map(|_| AtomicU64::new(0)).collect());
         let scratch_grows: Arc<Vec<AtomicU64>> =
             Arc::new((0..n_workers).map(|_| AtomicU64::new(0)).collect());
+        let lanes: Arc<Vec<AtomicU32>> =
+            Arc::new((0..n_workers).map(|_| AtomicU32::new(u32::MAX)).collect());
         let (job_tx, job_rx) = bounded::<Arc<JobInner>>(64);
         let (task_tx, task_rx) = bounded::<Task>((n_workers * 2).max(4));
         let task_rx = Arc::new(task_rx);
@@ -211,10 +219,14 @@ impl ScanPool {
             let rx = task_rx.clone();
             let busy = busy.clone();
             let grows = scratch_grows.clone();
+            let lanes = lanes.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("scan-pool-{w}"))
                     .spawn(move || {
+                        // Publish this worker's trace lane so snapshots can
+                        // map Chrome-trace tids back to pool workers.
+                        lanes[w].store(crate::obs::thread_lane(), Ordering::Relaxed);
                         // Worker-lifetime scratch: the kernels' score
                         // buffers warm up once and are reused by every
                         // task this worker ever runs.
@@ -234,6 +246,7 @@ impl ScanPool {
             metrics,
             busy,
             scratch_grows,
+            lanes,
             n_workers,
             next_query: AtomicU64::new(0),
         }
@@ -321,6 +334,7 @@ impl ScanPool {
                 .iter()
                 .map(|g| g.load(Ordering::Relaxed))
                 .collect(),
+            worker_lanes: self.lanes.iter().map(|l| l.load(Ordering::Relaxed)).collect(),
         }
     }
 

@@ -38,13 +38,14 @@ use crate::coordinator::metrics::Metrics;
 use crate::hessian::Preconditioner;
 use crate::linalg::kernels::{auto_chunk_len, dot_f32, scan_q8_into};
 use crate::linalg::ScanScratch;
+use crate::obs::{QueryReport, ScanObs};
 use crate::store::quant::{blocks_of, quantize_rows, QuantShardedStore};
 use crate::store::ShardedStore;
 use crate::util::topk::TopK;
 
 use super::backend::{
-    BackendConfig, BackendKind, GradQuery, PendingScores, QueryRequest, ScanBackend,
-    ValuationError,
+    BackendConfig, BackendKind, GradQuery, PendingScores, QueryRequest, ReportCtx,
+    ScanBackend, ValuationError,
 };
 use super::parallel::{
     cached_self_influences, resolve_chunk_len_self_inf, resolve_workers, scatter_gather,
@@ -125,12 +126,23 @@ impl TwoStageEngine {
     fn submit_grads(&self, q: GradQuery) -> Result<PendingScores, ValuationError> {
         let GradQuery { rows: test_grads, nt, topk, norm } = q;
         let k = self.exact.k();
+        let scan_obs = self.cfg.metrics.as_ref().map(|m| Arc::new(ScanObs::new(&m.obs)));
         let pre = self.precond.apply_rows(&test_grads, nt);
         let selfs: Option<Arc<Vec<f32>>> = match norm {
             Normalization::RelatIf => Some(self.train_self_influences()),
             Normalization::None => None,
         };
         let pool_size = self.pool_size(topk);
+        let ctx = match (&self.cfg.metrics, &scan_obs) {
+            (Some(m), Some(so)) => Some(ReportCtx::new(
+                m.clone(),
+                so.clone(),
+                BackendKind::TwoStage.name(),
+                self.quant.n_shards() as u32,
+                self.quant.rows() as u64,
+            )),
+            _ => None,
+        };
         let t0 = Instant::now();
 
         // ------------------------------------------------ stage 1: coarse
@@ -155,6 +167,7 @@ impl TwoStageEngine {
                     let quant = self.quant.clone();
                     let metrics = self.cfg.metrics.clone();
                     let selfs = selfs.clone();
+                    let scan_obs = scan_obs.clone();
                     let t_codes = Arc::new(t_codes);
                     let t_scales = Arc::new(t_scales);
                     ScanHandle::Pool(pool.submit_with_scratch(
@@ -170,6 +183,7 @@ impl TwoStageEngine {
                                 selfs.as_ref().map(|s| s.as_slice()),
                                 chunk_len,
                                 metrics.as_deref(),
+                                scan_obs.as_deref(),
                                 scratch,
                             )
                         },
@@ -178,6 +192,7 @@ impl TwoStageEngine {
                 None => {
                     let quant = &self.quant;
                     let met = self.cfg.metrics.as_deref();
+                    let so_ref = scan_obs.as_deref();
                     let tc: &[i8] = &t_codes;
                     let ts: &[f32] = &t_scales;
                     let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
@@ -195,6 +210,7 @@ impl TwoStageEngine {
                                 selfs_ref,
                                 chunk_len,
                                 met,
+                                so_ref,
                                 scratch,
                             )
                         },
@@ -212,6 +228,7 @@ impl TwoStageEngine {
             topk,
             pool_size,
             t0,
+            ctx,
         }))
     }
 }
@@ -269,12 +286,17 @@ pub(crate) struct PendingRescore {
     pool_size: usize,
     /// Stage-1 wall clock starts at admission (includes pool queue wait).
     t0: Instant,
+    /// Per-query report builder — present when metrics are attached.
+    ctx: Option<ReportCtx>,
 }
 
 impl PendingRescore {
-    pub(crate) fn finish(self) -> Result<Vec<QueryResult>, ValuationError> {
+    pub(crate) fn finish(
+        self,
+    ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
         let k = self.exact.k();
         let shard_pools = self.scan.wait()?;
+        let scan_done = self.ctx.as_ref().map(|c| c.scan.elapsed_nanos()).unwrap_or(0);
         let mut pools: Vec<TopK> = (0..self.nt).map(|_| TopK::new(self.pool_size)).collect();
         for heaps in shard_pools {
             for (t, h) in heaps.into_iter().enumerate() {
@@ -283,7 +305,7 @@ impl PendingRescore {
         }
         let metrics = self.metrics.as_deref();
         if let Some(m) = metrics {
-            Metrics::add_nanos(&m.stage1_nanos, self.t0.elapsed().as_secs_f64());
+            Metrics::add_seconds(&m.stage1_nanos, self.t0.elapsed().as_secs_f64());
         }
         let selfs: Option<&[f32]> = self.selfs.as_ref().map(|s| s.as_slice());
 
@@ -291,6 +313,7 @@ impl PendingRescore {
         // Exact f32 dots for pool candidates only — same accumulation order
         // and f64 normalization as the sequential engine, so a full-corpus
         // pool reproduces it bit-identically.
+        let rescore_start = self.ctx.as_ref().map(|c| c.scan.elapsed_nanos()).unwrap_or(0);
         let t1 = Instant::now();
         let mut rescored = 0u64;
         let mut out = Vec::with_capacity(self.nt);
@@ -316,10 +339,11 @@ impl PendingRescore {
             out.push(QueryResult { top: heap.into_sorted() });
         }
         if let Some(m) = metrics {
-            Metrics::add_nanos(&m.stage2_nanos, t1.elapsed().as_secs_f64());
+            Metrics::add_seconds(&m.stage2_nanos, t1.elapsed().as_secs_f64());
             m.candidates_rescored.fetch_add(rescored, std::sync::atomic::Ordering::Relaxed);
         }
-        Ok(out)
+        let report = self.ctx.map(|c| c.complete(scan_done, rescore_start, rescored));
+        Ok((out, report))
     }
 }
 
@@ -337,8 +361,13 @@ fn scan_shard_q8(
     selfs: Option<&[f32]>,
     chunk_len: usize,
     metrics: Option<&Metrics>,
+    scan_obs: Option<&ScanObs>,
     scratch: &mut ScanScratch,
 ) -> Vec<TopK> {
+    let obs_start = metrics.map(|m| m.obs.now_nanos());
+    if let (Some(m), Some(so)) = (metrics, scan_obs) {
+        so.task_started(&m.obs);
+    }
     let t0 = Instant::now();
     let k = quant.k();
     let shard = quant.shard(si);
@@ -381,7 +410,17 @@ fn scan_shard_q8(
     }
     if let Some(m) = metrics {
         m.shards_scanned.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Metrics::add_nanos(&m.shard_scan_nanos, t0.elapsed().as_secs_f64());
+        let dur = t0.elapsed();
+        Metrics::add_seconds(&m.shard_scan_nanos, dur.as_secs_f64());
+        let dur_nanos = dur.as_nanos() as u64;
+        m.obs.shard_scan.record(dur_nanos);
+        m.obs.span(
+            "scan",
+            scan_obs.map(|s| s.query()).unwrap_or(0),
+            Some(si as u32),
+            obs_start.unwrap_or(0),
+            dur_nanos,
+        );
     }
     heaps
 }

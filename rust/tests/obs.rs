@@ -1,0 +1,455 @@
+//! Observability integration tests: histogram quantile accuracy against
+//! the exact reference percentiles, trace-ring wraparound, Chrome
+//! trace-event JSON schema, per-backend [`QueryReport`]s, and the
+//! concurrent pooled timeline.
+//!
+//! Load-bearing properties:
+//!
+//! 1. **Histogram quantiles are honest**: the log-bucketed histogram's
+//!    p50/p95/p99 agree with the exact `util::stats::percentile` of the
+//!    same samples to within one bucket width (≤ 12.5% relative), and
+//!    `percentile_bounds` always brackets the exact value.
+//! 2. **Trace export is well-formed**: `chrome_trace_json` output parses
+//!    under the crate's own JSON subset parser and every event carries
+//!    the full Chrome trace-event shape.
+//! 3. **Every backend reports**: sequential, parallel, and two-stage all
+//!    return a `QueryReport` whose stages exactly partition the total,
+//!    and all three populate the queue-wait histogram uniformly.
+//! 4. **Concurrent pooled timelines are consistent**: 8 queries racing
+//!    on one pool each leave n_shards "scan" spans inside their own
+//!    "query" span window, and their reported worker lanes are real pool
+//!    worker lanes.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use logra::coordinator::Metrics;
+use logra::hessian::BlockHessian;
+use logra::obs::{
+    bucket_bounds, bucket_index, chrome_trace_json, Histogram, QueryReport, SpanEvent, TraceRing,
+};
+use logra::store::{
+    quantize_store, shard_store, GradStoreWriter, QuantShardedStore, ShardedStore,
+};
+use logra::util::json::{self, Json};
+use logra::util::rng::Pcg32;
+use logra::util::stats;
+use logra::valuation::{
+    BackendConfig, ParallelQueryEngine, QueryRequest, ScanBackend, ScanPool, SequentialEngine,
+    TwoStageEngine,
+};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-obs-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_store(dir: &Path, n: usize, k: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let mut w = GradStoreWriter::create(dir, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    rows
+}
+
+fn make_precond(rows: &[f32], n: usize, k: usize) -> logra::hessian::Preconditioner {
+    let mut h = BlockHessian::single_block(k);
+    h.accumulate(rows, n);
+    h.preconditioner(0.1).unwrap()
+}
+
+/// Build an n-row, n_shards-shard f32 + int8 store fabric.
+fn fixture(
+    name: &str,
+    n: usize,
+    k: usize,
+    n_shards: usize,
+    rng: &mut Pcg32,
+) -> (Arc<ShardedStore>, Arc<QuantShardedStore>, Arc<logra::hessian::Preconditioner>) {
+    let src = tmpdir(&format!("{name}-src"));
+    let rows = write_store(&src, n, k, rng);
+    let sharded = tmpdir(&format!("{name}-sharded"));
+    shard_store(&src, &sharded, n_shards).unwrap();
+    let quant_dir = tmpdir(&format!("{name}-quant"));
+    quantize_store(&sharded, &quant_dir).unwrap();
+    (
+        Arc::new(ShardedStore::open(&sharded).unwrap()),
+        Arc::new(QuantShardedStore::open(&quant_dir).unwrap()),
+        Arc::new(make_precond(&rows, n, k)),
+    )
+}
+
+// ---------------------------------------------------------------- histogram
+
+#[test]
+fn histogram_percentiles_track_exact_reference() {
+    // 1001 samples so p in {50, 95, 99} has an integral rank
+    // (p/100 * 1000) — the exact percentile IS an order statistic, and
+    // the histogram's round-rank bucket must contain it.
+    let mut rng = Pcg32::seeded(11);
+    let h = Histogram::new();
+    let mut samples: Vec<f64> = Vec::with_capacity(1001);
+    for _ in 0..1001 {
+        // Log-spread nanosecond values across 26 octaves, the shape of
+        // real mixed-latency data.
+        let e = rng.below(26) + 4;
+        let v = (1u64 << e) + rng.next_u64() % (1u64 << e);
+        h.record(v);
+        samples.push(v as f64);
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.count, 1001);
+
+    for p in [50.0, 95.0, 99.0] {
+        let exact = stats::percentile(&samples, p);
+        let approx = snap.percentile(p);
+        let (lo, hi) = snap.percentile_bounds(p);
+        assert!(
+            lo <= exact && exact < hi,
+            "p{p}: exact {exact} outside bounds [{lo}, {hi})"
+        );
+        assert!(
+            lo <= approx && approx <= hi,
+            "p{p}: approx {approx} outside bounds [{lo}, {hi})"
+        );
+        // Integral rank => floor and ceil buckets coincide, so the
+        // midpoint estimate sits within one bucket width of the exact
+        // order statistic...
+        let (blo, bhi) = bucket_bounds(bucket_index(exact as u64));
+        let width = (bhi - blo) as f64;
+        assert!(
+            (approx - exact).abs() <= width,
+            "p{p}: |{approx} - {exact}| > bucket width {width}"
+        );
+        // ...which is the <= 12.5% HDR relative-error guarantee.
+        assert!(
+            (approx - exact).abs() / exact <= 0.125 + 1e-9,
+            "p{p}: relative error too large ({approx} vs {exact})"
+        );
+    }
+
+    // Fractional ranks only widen the bracket to two (adjacent-rank)
+    // buckets; the exact interpolated value must still be inside.
+    for p in [12.3, 61.8, 97.3] {
+        let exact = stats::percentile(&samples, p);
+        let (lo, hi) = snap.percentile_bounds(p);
+        assert!(
+            lo <= exact && exact <= hi,
+            "p{p}: exact {exact} outside bounds [{lo}, {hi}]"
+        );
+    }
+}
+
+// -------------------------------------------------------------------- trace
+
+#[test]
+fn trace_ring_wraps_without_losing_order() {
+    let ring = TraceRing::with_capacity(16);
+    for i in 0..100u64 {
+        ring.record(SpanEvent {
+            name: if i % 2 == 0 { "scan" } else { "merge" },
+            query: i / 10,
+            shard: Some((i % 4) as u32),
+            lane: 0,
+            start_nanos: i * 1_000,
+            dur_nanos: 750,
+            seq: 0,
+        });
+    }
+    assert_eq!(ring.recorded(), 100);
+    let events = ring.events();
+    assert_eq!(events.len(), 16, "ring retains exactly its capacity");
+    // The survivors are the 16 MOST RECENT events, in seq order.
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, (84..100).collect::<Vec<u64>>());
+    assert_eq!(events[0].start_nanos, 84_000);
+}
+
+/// Validate one parsed Chrome trace event object.
+fn check_trace_event(ev: &Json) {
+    const TAXONOMY: [&str; 6] =
+        ["admission", "queue_wait", "scan", "merge", "rescore", "query"];
+    let name = ev.get("name").and_then(Json::as_str).expect("event missing name");
+    assert!(TAXONOMY.contains(&name), "unknown span name {name:?}");
+    assert_eq!(ev.get("cat").and_then(Json::as_str), Some("logra"));
+    assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+    assert_eq!(ev.get("pid").and_then(Json::as_u64), Some(1));
+    ev.get("tid").and_then(Json::as_u64).expect("event missing integer tid");
+    ev.get("ts").and_then(Json::as_u64).expect("event missing integer ts");
+    let dur = ev.get("dur").and_then(Json::as_u64).expect("event missing integer dur");
+    assert!(dur >= 1, "durations round up to 1us");
+    let args = ev.get("args").expect("event missing args");
+    args.get("query").and_then(Json::as_u64).expect("args missing query id");
+    if name == "scan" {
+        args.get("shard").and_then(Json::as_u64).expect("scan span missing shard");
+    }
+}
+
+#[test]
+fn chrome_trace_json_is_schema_valid_under_subset_parser() {
+    let ring = TraceRing::with_capacity(64);
+    for i in 0..10u64 {
+        ring.record(SpanEvent {
+            name: "scan",
+            query: 3,
+            shard: Some(i as u32),
+            lane: i as u32 % 2,
+            start_nanos: 5_000 + i * 2_000,
+            dur_nanos: if i == 0 { 120 } else { 1_900 }, // sub-us dur too
+            seq: 0,
+        });
+    }
+    ring.record(SpanEvent {
+        name: "query",
+        query: 3,
+        shard: None,
+        lane: 9,
+        start_nanos: 0,
+        dur_nanos: 40_000,
+        seq: 0,
+    });
+    let text = chrome_trace_json(&ring.events());
+    let parsed = json::parse(&text).expect("chrome trace JSON must parse");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("top-level traceEvents array");
+    assert_eq!(events.len(), 11);
+    for ev in events {
+        check_trace_event(ev);
+    }
+}
+
+// ------------------------------------------------------------ query reports
+
+fn assert_report_partitions(rep: &QueryReport) {
+    let sum = rep.admission_nanos
+        + rep.queue_wait_nanos
+        + rep.scan_nanos
+        + rep.merge_nanos
+        + rep.rescore_nanos;
+    assert_eq!(
+        sum, rep.total_nanos,
+        "stages must partition the total exactly ({rep:?})"
+    );
+    assert!(!rep.workers.is_empty(), "scan tasks must register lanes");
+    let text = rep.render();
+    assert!(text.contains("total"), "render must include the total line");
+}
+
+#[test]
+fn every_backend_returns_a_report_and_records_queue_wait() {
+    let k = 12;
+    let n = 240;
+    let n_shards = 4;
+    let mut rng = Pcg32::seeded(21);
+    let (exact, quant, precond) = fixture("backends", n, k, n_shards, &mut rng);
+    let nt = 2;
+    let topk = 5;
+    let mut test = vec![0.0f32; nt * k];
+    rng.fill_normal(&mut test, 1.0);
+    let req = || QueryRequest::gradients(test.clone(), nt, topk);
+
+    // Sequential.
+    {
+        let metrics = Arc::new(Metrics::default());
+        let engine = SequentialEngine::new(
+            exact.clone(),
+            precond.clone(),
+            BackendConfig { chunk_len: 32, metrics: Some(metrics.clone()), ..Default::default() },
+        );
+        let (results, rep) = engine.query_with_report(req()).unwrap();
+        assert_eq!(results.len(), nt);
+        let rep = rep.expect("metrics attached => report present");
+        assert_eq!(rep.backend, "sequential");
+        assert_eq!(rep.shards, n_shards as u32);
+        assert_eq!(rep.rows_scanned, n as u64);
+        assert_eq!(rep.candidates_rescored, 0);
+        assert_report_partitions(&rep);
+        assert_eq!(metrics.obs.queue_wait.snapshot().count, 1);
+        assert_eq!(metrics.obs.query_latency.snapshot().count, 1);
+        assert_eq!(metrics.obs.shard_scan.snapshot().count, n_shards as u64);
+    }
+
+    // Parallel (scoped-thread fan-out, no pool).
+    {
+        let metrics = Arc::new(Metrics::default());
+        let engine = ParallelQueryEngine::new(
+            exact.clone(),
+            precond.clone(),
+            BackendConfig {
+                workers: 2,
+                chunk_len: 32,
+                metrics: Some(metrics.clone()),
+                ..Default::default()
+            },
+        );
+        let (results, rep) = engine.query_with_report(req()).unwrap();
+        assert_eq!(results.len(), nt);
+        let rep = rep.expect("metrics attached => report present");
+        assert_eq!(rep.backend, "parallel-f32");
+        assert_eq!(rep.shards, n_shards as u32);
+        assert_eq!(rep.candidates_rescored, 0);
+        assert_report_partitions(&rep);
+        assert_eq!(metrics.obs.queue_wait.snapshot().count, 1);
+        assert_eq!(metrics.obs.shard_scan.snapshot().count, n_shards as u64);
+    }
+
+    // Two-stage (int8 coarse scan + exact rescore).
+    {
+        let metrics = Arc::new(Metrics::default());
+        let engine = TwoStageEngine::new(
+            quant.clone(),
+            exact.clone(),
+            precond.clone(),
+            BackendConfig {
+                workers: 2,
+                chunk_len: 32,
+                rescore_factor: 3,
+                metrics: Some(metrics.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (results, rep) = engine.query_with_report(req()).unwrap();
+        assert_eq!(results.len(), nt);
+        let rep = rep.expect("metrics attached => report present");
+        assert_eq!(rep.backend, "two-stage");
+        assert_eq!(rep.shards, n_shards as u32);
+        assert!(rep.candidates_rescored > 0, "two-stage must rescore candidates");
+        assert_report_partitions(&rep);
+        assert_eq!(metrics.obs.queue_wait.snapshot().count, 1);
+        assert_eq!(metrics.obs.shard_scan.snapshot().count, n_shards as u64);
+    }
+
+    // No metrics => no report, and no overhead switches flipped.
+    {
+        let engine = SequentialEngine::new(
+            exact.clone(),
+            precond.clone(),
+            BackendConfig { chunk_len: 32, ..Default::default() },
+        );
+        let (results, rep) = engine.query_with_report(req()).unwrap();
+        assert_eq!(results.len(), nt);
+        assert!(rep.is_none(), "no metrics => no report");
+    }
+}
+
+// ----------------------------------------------------- concurrent pool trace
+
+#[test]
+fn concurrent_pooled_queries_leave_consistent_timelines() {
+    let k = 12;
+    let n = 360;
+    let n_shards = 6;
+    let n_queries = 8usize;
+    let mut rng = Pcg32::seeded(31);
+    let (exact, _quant, precond) = fixture("pool-trace", n, k, n_shards, &mut rng);
+    let metrics = Arc::new(Metrics::default());
+    let pool = Arc::new(ScanPool::spawn(3));
+    let engine = Arc::new(ParallelQueryEngine::new(
+        exact,
+        precond,
+        BackendConfig {
+            chunk_len: 32,
+            pool: Some(pool.clone()),
+            metrics: Some(metrics.clone()),
+            ..Default::default()
+        },
+    ));
+
+    let reports: Mutex<Vec<QueryReport>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for q in 0..n_queries {
+            let engine = engine.clone();
+            let reports = &reports;
+            let mut qrng = Pcg32::seeded(700 + q as u64);
+            s.spawn(move || {
+                let mut test = vec![0.0f32; k];
+                qrng.fill_normal(&mut test, 1.0);
+                let (results, rep) = engine
+                    .query_with_report(QueryRequest::gradients(test, 1, 5))
+                    .unwrap();
+                assert_eq!(results.len(), 1);
+                reports.lock().unwrap().push(rep.expect("report"));
+            });
+        }
+    });
+    let reports = reports.into_inner().unwrap();
+    assert_eq!(reports.len(), n_queries);
+
+    // Distinct query ids; every query fed the latency histograms.
+    let ids: BTreeSet<u64> = reports.iter().map(|r| r.query_id).collect();
+    assert_eq!(ids.len(), n_queries);
+    assert_eq!(metrics.obs.query_latency.snapshot().count, n_queries as u64);
+    assert_eq!(metrics.obs.queue_wait.snapshot().count, n_queries as u64);
+    assert_eq!(
+        metrics.obs.shard_scan.snapshot().count,
+        (n_queries * n_shards) as u64
+    );
+
+    let snap = pool.snapshot();
+    assert_eq!(snap.tasks_completed, (n_queries * n_shards) as u64);
+    let pool_lanes: BTreeSet<u32> =
+        snap.worker_lanes.iter().copied().filter(|&l| l != u32::MAX).collect();
+    assert!(
+        !pool_lanes.is_empty() && pool_lanes.len() <= 3,
+        "workers register lanes on startup, before any task runs: {pool_lanes:?}"
+    );
+
+    let events = metrics.obs.trace.events();
+    // Mixed time bases (obs epoch vs per-query Instant) can skew span
+    // endpoints by the nanoseconds between two adjacent clock reads;
+    // 1ms of slack keeps the containment check honest but unflaky.
+    let slack = 1_000_000u64;
+    for rep in &reports {
+        let scans: Vec<&SpanEvent> = events
+            .iter()
+            .filter(|e| e.name == "scan" && e.query == rep.query_id)
+            .collect();
+        assert_eq!(scans.len(), n_shards, "one scan span per shard for query {}", rep.query_id);
+        let shards: BTreeSet<u32> = scans.iter().map(|e| e.shard.unwrap()).collect();
+        assert_eq!(shards, (0..n_shards as u32).collect::<BTreeSet<u32>>());
+
+        let query_span = events
+            .iter()
+            .find(|e| e.name == "query" && e.query == rep.query_id)
+            .expect("query span recorded");
+        let q_end = query_span.start_nanos + query_span.dur_nanos;
+        for scan in &scans {
+            assert!(
+                scan.start_nanos + slack >= query_span.start_nanos,
+                "scan span starts before its query was admitted"
+            );
+            assert!(
+                scan.start_nanos + scan.dur_nanos <= q_end + slack,
+                "scan span outlives its query span"
+            );
+        }
+
+        // Reported worker lanes are REAL pool worker lanes (the scan ran
+        // on the pool, not on ad-hoc threads).
+        for lane in &rep.workers {
+            assert!(
+                pool_lanes.contains(lane),
+                "report lane {lane} not a pool worker lane {pool_lanes:?}"
+            );
+        }
+    }
+
+    // The full concurrent trace round-trips through the Chrome exporter
+    // and our own JSON subset parser.
+    let text = chrome_trace_json(&events);
+    let parsed = json::parse(&text).expect("trace JSON parses");
+    let arr = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert_eq!(arr.len(), events.len());
+    for ev in arr {
+        check_trace_event(ev);
+    }
+    pool.shutdown();
+}

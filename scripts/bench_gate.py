@@ -49,6 +49,15 @@ GATED_KEYS = [
     "pool_c8_qps",
 ]
 
+# Latency metrics gated the other way around (lower is better): the
+# pooled concurrency-8 run's per-query p50/p99 from the observability
+# histograms must not exceed baseline / (1 - threshold). Seeds are
+# conservative ceilings; tighten via --rebaseline on real CI hardware.
+LATENCY_GATED_KEYS = [
+    "pool_c8_p50_ms",
+    "pool_c8_p99_ms",
+]
+
 # Pool-vs-spawn floor at equal worker count. The microbench's pool-vs-
 # spawn comparison is short (48 queries per concurrency level), so on
 # noisy shared CI runners the honest expectation "pool >= spawn" needs
@@ -108,6 +117,21 @@ def main() -> int:
         print(
             f"bench gate: {key:24s} baseline {float(b):14.1f}  "
             f"current {float(c):14.1f}  floor {floor:14.1f}  "
+            f"{'ok' if ok else 'REGRESSION'}"
+        )
+        if not ok:
+            failures.append(key)
+
+    for key in LATENCY_GATED_KEYS:
+        b, c = base.get(key), cur.get(key)
+        if b is None or c is None:
+            print(f"bench gate: skipping {key} (missing from baseline or current)")
+            continue
+        ceiling = float(b) / (1.0 - args.threshold)
+        ok = float(c) <= ceiling
+        print(
+            f"bench gate: {key:24s} baseline {float(b):14.1f}  "
+            f"current {float(c):14.1f}  ceiling {ceiling:12.1f}  "
             f"{'ok' if ok else 'REGRESSION'}"
         )
         if not ok:

@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""CI validator for the Prometheus text exposition logra emits.
+
+Parses the exposition produced by `serve_queries --metrics-out` (or
+`logra store stat --metrics`) and enforces the format invariants the
+renderer in rust/src/obs/export.rs promises:
+
+1. Every sample line belongs to a family that declared both `# HELP` and
+   `# TYPE` before its first sample.
+2. Metric names and label syntax match the Prometheus grammar subset we
+   emit (`name{label="value",...} number`).
+3. Histogram families are internally consistent: `le` values strictly
+   increase, cumulative bucket counts are monotone non-decreasing, the
+   `+Inf` bucket equals `_count`, and `_sum`/`_count` are present.
+4. Values parse as finite floats.
+
+Exit status: 0 = valid, 1 = violation, 2 = usage/IO error.
+"""
+
+import math
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r" (?P<value>\S+)$"
+)
+LABEL_RE = re.compile(r'^[a-zA-Z_][a-zA-Z0-9_]*="[^"\\]*"$')
+
+
+def base_family(name: str) -> str:
+    """Family a sample belongs to (histogram series share one TYPE)."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(f"usage: {sys.argv[0]} <exposition.prom>")
+        return 2
+    try:
+        with open(sys.argv[1]) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        print(f"check_metrics: cannot read {sys.argv[1]}: {e}")
+        return 2
+
+    errors = []
+    helped, typed = set(), {}
+    samples = []  # (name, labels_dict, value)
+    for ln, line in enumerate(lines, 1):
+        if not line:
+            errors.append(f"line {ln}: blank line in exposition")
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or not NAME_RE.match(parts[2]):
+                errors.append(f"line {ln}: malformed HELP: {line!r}")
+            else:
+                helped.add(parts[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4 or not NAME_RE.match(parts[2]) or parts[3] not in (
+                "counter",
+                "gauge",
+                "histogram",
+            ):
+                errors.append(f"line {ln}: malformed TYPE: {line!r}")
+            else:
+                typed[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            errors.append(f"line {ln}: unexpected comment: {line!r}")
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"line {ln}: unparseable sample: {line!r}")
+            continue
+        name = m.group("name")
+        labels = {}
+        if m.group("labels"):
+            for pair in m.group("labels").split(","):
+                if not LABEL_RE.match(pair):
+                    errors.append(f"line {ln}: bad label {pair!r}")
+                    continue
+                k, v = pair.split("=", 1)
+                labels[k] = v.strip('"')
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            errors.append(f"line {ln}: non-numeric value: {line!r}")
+            continue
+        if not math.isfinite(value):
+            errors.append(f"line {ln}: non-finite value: {line!r}")
+            continue
+        family = base_family(name)
+        if family not in typed:
+            errors.append(f"line {ln}: sample {name} before any TYPE for {family}")
+        if family not in helped:
+            errors.append(f"line {ln}: sample {name} before any HELP for {family}")
+        samples.append((name, labels, value))
+
+    # Histogram internal consistency.
+    for family, kind in typed.items():
+        if kind != "histogram":
+            continue
+        buckets = [
+            (labels.get("le"), value)
+            for name, labels, value in samples
+            if name == f"{family}_bucket"
+        ]
+        counts = [v for name, _, v in samples if name == f"{family}_count"]
+        sums = [v for name, _, v in samples if name == f"{family}_sum"]
+        if len(counts) != 1 or len(sums) != 1:
+            errors.append(f"{family}: expected exactly one _count and one _sum")
+            continue
+        if not buckets or buckets[-1][0] != "+Inf":
+            errors.append(f"{family}: bucket series must end with le=\"+Inf\"")
+            continue
+        if buckets[-1][1] != counts[0]:
+            errors.append(
+                f"{family}: +Inf bucket {buckets[-1][1]} != _count {counts[0]}"
+            )
+        prev_le, prev_n = -math.inf, -math.inf
+        for le, n in buckets[:-1]:
+            try:
+                le_v = float(le)
+            except (TypeError, ValueError):
+                errors.append(f"{family}: non-numeric le {le!r}")
+                continue
+            if le_v <= prev_le:
+                errors.append(f"{family}: le values not strictly increasing at {le}")
+            if n < prev_n:
+                errors.append(f"{family}: cumulative counts decreased at le={le}")
+            prev_le, prev_n = le_v, n
+        if buckets[:-1] and buckets[-2][1] > counts[0]:
+            errors.append(f"{family}: last finite bucket exceeds _count")
+
+    if not samples:
+        errors.append("no samples at all — empty or truncated exposition")
+    if errors:
+        for e in errors:
+            print(f"check_metrics: {e}")
+        print(f"check_metrics FAILED ({len(errors)} violations)")
+        return 1
+    n_hist = sum(1 for k in typed.values() if k == "histogram")
+    print(
+        f"check_metrics passed: {len(samples)} samples, "
+        f"{len(typed)} families ({n_hist} histograms)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
