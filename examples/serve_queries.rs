@@ -123,34 +123,59 @@ fn run_offline(parsed: &logra::cli::Args) -> Result<()> {
     println!("scan backend       {}", valuator.kind().name());
 
     // Hammer the valuator from client threads; each query reuses a stored
-    // row as its gradient (the store-only query shape).
+    // row as its gradient (the store-only query shape). A failed query
+    // counts against its client instead of killing the thread — the
+    // summary reports per-client error counts.
     let t0 = Instant::now();
     let vref = &valuator;
-    let latencies: Vec<f64> = std::thread::scope(|s| {
+    let outcomes: Vec<(Vec<f64>, usize)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..n_clients)
             .map(|c| {
-                s.spawn(move || -> Vec<f64> {
+                s.spawn(move || -> (Vec<f64>, usize) {
                     let mut lat = Vec::new();
+                    let mut errors = 0usize;
                     for q in 0..n_requests {
                         let row = (c * 37 + q * 13) % n_train;
                         let g = vref.gradient_row(row).expect("row in range");
                         let t = Instant::now();
-                        let res = vref
-                            .query(QueryRequest::gradients(g, 1, 5))
-                            .expect("query failed");
-                        assert_eq!(res[0].top.len(), 5.min(n_train));
-                        lat.push(t.elapsed().as_secs_f64());
+                        match vref.query(QueryRequest::gradients(g, 1, 5)) {
+                            Ok(res) if res[0].top.len() == 5.min(n_train) => {
+                                lat.push(t.elapsed().as_secs_f64());
+                            }
+                            Ok(res) => {
+                                eprintln!(
+                                    "client {c} query {q}: expected {} results, got {}",
+                                    5.min(n_train),
+                                    res[0].top.len()
+                                );
+                                errors += 1;
+                            }
+                            Err(e) => {
+                                eprintln!("client {c} query {q}: {e}");
+                                errors += 1;
+                            }
+                        }
                     }
-                    lat
+                    (lat, errors)
                 })
             })
             .collect();
-        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
     });
     let wall = t0.elapsed().as_secs_f64();
+    let mut latencies = Vec::new();
+    let mut per_client_errors = Vec::with_capacity(n_clients);
+    for (lat, errors) in outcomes {
+        latencies.extend(lat);
+        per_client_errors.push(errors);
+    }
+    let n_errors: usize = per_client_errors.iter().sum();
     let s = summarize(&latencies);
     println!("\n-- serving report (offline) --");
-    println!("requests           {}", latencies.len());
+    println!("requests           {} ok / {} errors", latencies.len(), n_errors);
+    if n_errors > 0 {
+        println!("per-client errors  {per_client_errors:?}");
+    }
     println!("throughput         {:.1} req/s", latencies.len() as f64 / wall);
     println!(
         "latency mean/p50/p95/p99  {:.1} / {:.1} / {:.1} / {:.1} ms",
@@ -287,6 +312,8 @@ fn main() -> Result<()> {
         max_in_flight: concurrency.max(1),
     })?);
 
+    // A failed query counts against its client instead of killing the
+    // thread — the summary reports per-client error counts.
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
@@ -294,21 +321,37 @@ fn main() -> Result<()> {
         let queries: Vec<Vec<i32>> = (0..n_requests)
             .map(|q| corpus.docs[(c * 37 + q * 13) % corpus.docs.len()].tokens.clone())
             .collect();
-        handles.push(std::thread::spawn(move || -> Vec<f64> {
+        handles.push(std::thread::spawn(move || -> (Vec<f64>, usize) {
             let mut lat = Vec::new();
-            for q in queries {
+            let mut errors = 0usize;
+            for (q, tokens) in queries.into_iter().enumerate() {
                 let t = Instant::now();
-                let res = svc2.query(q, 5).expect("query failed");
-                assert_eq!(res.top.len(), 5);
-                lat.push(t.elapsed().as_secs_f64());
+                match svc2.query(tokens, 5) {
+                    Ok(res) if res.top.len() == 5 => lat.push(t.elapsed().as_secs_f64()),
+                    Ok(res) => {
+                        eprintln!(
+                            "client {c} query {q}: expected 5 results, got {}",
+                            res.top.len()
+                        );
+                        errors += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("client {c} query {q}: {e}");
+                        errors += 1;
+                    }
+                }
             }
-            lat
+            (lat, errors)
         }));
     }
     let mut latencies = Vec::new();
+    let mut per_client_errors = Vec::with_capacity(n_clients);
     for h in handles {
-        latencies.extend(h.join().expect("client thread"));
+        let (lat, errors) = h.join().expect("client thread");
+        latencies.extend(lat);
+        per_client_errors.push(errors);
     }
+    let n_errors: usize = per_client_errors.iter().sum();
     let wall = t0.elapsed().as_secs_f64();
     let s = summarize(&latencies);
     let snap = svc.metrics.snapshot();
@@ -316,7 +359,10 @@ fn main() -> Result<()> {
     if let Some(kind) = svc.backend_kind() {
         println!("scan backend       {}", kind.name());
     }
-    println!("requests           {}", latencies.len());
+    println!("requests           {} ok / {} errors", latencies.len(), n_errors);
+    if n_errors > 0 {
+        println!("per-client errors  {per_client_errors:?}");
+    }
     println!("throughput         {:.1} req/s", latencies.len() as f64 / wall);
     println!(
         "latency mean/p50/p95/p99  {:.1} / {:.1} / {:.1} / {:.1} ms",

@@ -63,6 +63,7 @@ pub mod data;
 pub mod eval;
 pub mod linalg;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod hessian;
 pub mod model;

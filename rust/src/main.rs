@@ -8,6 +8,8 @@
 //!   store        gradient-store maintenance (stat | shard | merge | quantize)
 //!   query        value a stored gradient row against any store fabric
 //!   trace        run concurrent queries, export a Chrome trace + percentiles
+//!   serve        HTTP valuation server (/query /metrics /healthz /debug/trace)
+//!   loadgen      closed-loop load bench against a running serve instance
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -21,6 +23,7 @@ use logra::eval::qualitative::{render as render_qual, run_qualitative};
 use logra::eval::table1::{run_table1, TABLE1_HEADER};
 use logra::eval::{BrittlenessConfig, LdsConfig};
 use logra::obs::{chrome_trace_json, render_exposition};
+use logra::serve::{loadgen, ServeConfig, Server};
 use logra::store::{merge_store, quantize_store, shard_store, stat_store};
 use logra::valuation::{
     Backend, Normalization, PoolMode, QueryRequest, ScanBackend, Valuator,
@@ -34,6 +37,8 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("store", "store maintenance: store stat|shard|merge|quantize <dir>"),
     ("query", "query <store_dir>: top-k most influential rows for --row"),
     ("trace", "trace <store_dir>: concurrent queries -> Chrome trace JSON"),
+    ("serve", "serve <store_dir>: HTTP server (/query /metrics /healthz /debug/trace)"),
+    ("loadgen", "loadgen: closed-loop query load against a running serve"),
 ];
 
 const FLAGS: &[FlagSpec] = &[
@@ -59,6 +64,14 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "queries", help: "trace: queries to run", takes_value: true, default: Some("8") },
     FlagSpec { name: "concurrency", help: "trace: concurrent client threads", takes_value: true, default: Some("8") },
     FlagSpec { name: "metrics", help: "store stat: print Prometheus exposition", takes_value: false, default: None },
+    FlagSpec { name: "addr", help: "serve/loadgen: bind/target address", takes_value: true, default: Some("127.0.0.1:7878") },
+    FlagSpec { name: "max-in-flight", help: "serve: queries admitted at once (excess -> 429)", takes_value: true, default: Some("8") },
+    FlagSpec { name: "deadline-ms", help: "serve: default per-query deadline (0 = none)", takes_value: true, default: Some("0") },
+    FlagSpec { name: "poll-ms", help: "serve: deadline/disconnect poll interval", takes_value: true, default: Some("15") },
+    FlagSpec { name: "offline", help: "serve: synthesize a sharded store (no artifacts)", takes_value: false, default: None },
+    FlagSpec { name: "clients", help: "loadgen: concurrent closed-loop clients", takes_value: true, default: Some("8") },
+    FlagSpec { name: "requests", help: "loadgen: requests per client", takes_value: true, default: Some("32") },
+    FlagSpec { name: "bench-out", help: "loadgen: merge serve_c*_{qps,p50_ms,p99_ms} into this JSON", takes_value: true, default: None },
 ];
 
 /// Repo root: the directory holding `artifacts/` (cwd, else build-time).
@@ -416,6 +429,105 @@ fn main() -> Result<()> {
                     snap.tasks_completed,
                     snap.total_busy_seconds()
                 );
+            }
+            Ok(())
+        }
+        // The valuation server: Valuator + shared Metrics behind four HTTP
+        // endpoints, with admission control, per-request deadlines, and
+        // client-disconnect cancellation. `--offline` synthesizes a
+        // sharded store first (the runtime-free shape CI boots).
+        "serve" => {
+            let offline = args.has_switch("offline");
+            let dir = if offline {
+                let n_train = args.usize_or("n-train", 2048)?.max(1);
+                let n_shards = args.usize_or("shards", 4)?.max(1);
+                let k = 64usize;
+                let base = root.join("runs").join("serve-offline");
+                let _ = std::fs::remove_dir_all(&base);
+                std::fs::create_dir_all(&base)?;
+                let mut rng = logra::util::rng::Pcg32::seeded(0x5EBE);
+                let mut rows = vec![0.0f32; n_train * k];
+                rng.fill_normal(&mut rows, 1.0);
+                let ids: Vec<u64> = (0..n_train as u64).collect();
+                let mut w = logra::store::GradStoreWriter::create(&base, k)?;
+                w.append(&ids, &rows)?;
+                w.finalize()?;
+                // Shard so the pool-backed parallel engine serves it —
+                // cancellation needs in-flight shard tasks to skip.
+                let dir = if n_shards > 1 {
+                    let sharded = root.join("runs").join("serve-offline-sharded");
+                    let _ = std::fs::remove_dir_all(&sharded);
+                    shard_store(&base, &sharded, n_shards)?;
+                    sharded
+                } else {
+                    base
+                };
+                println!("offline store ready: {n_train} rows, k={k}, {n_shards} shards");
+                dir
+            } else {
+                args.positional.first().map(PathBuf::from).ok_or_else(|| {
+                    anyhow!(
+                        "usage: serve <store_dir> [--addr A] [--max-in-flight N] \
+                         [--deadline-ms N] [--poll-ms N] [--topk K] [--workers N] \
+                         [--damping X] | serve --offline [--n-train N] [--shards N]"
+                    )
+                })?
+            };
+            let workers = args.usize_or("workers", 0)?;
+            let damping = args.f64_or("damping", 0.1)? as f32;
+            let metrics = Arc::new(Metrics::default());
+            let valuator = Arc::new(
+                Valuator::open(&dir)?
+                    .workers(workers)
+                    .fit_from_store(damping)
+                    .pool(PoolMode::Auto)
+                    .metrics(metrics.clone())
+                    .build()?,
+            );
+            let cfg = ServeConfig {
+                addr: args.flag_or("addr", "127.0.0.1:7878"),
+                max_in_flight: args.usize_or("max-in-flight", 8)?.max(1),
+                default_deadline_ms: args.usize_or("deadline-ms", 0)? as u64,
+                default_topk: args.usize_or("topk", 5)?.max(1),
+                poll_interval: std::time::Duration::from_millis(
+                    args.usize_or("poll-ms", 15)?.max(1) as u64,
+                ),
+            };
+            println!(
+                "serving {} — {} rows, k={}, backend {}, {} workers, max_in_flight {}",
+                dir.display(),
+                valuator.rows(),
+                valuator.k(),
+                valuator.kind().name(),
+                valuator.workers(),
+                cfg.max_in_flight
+            );
+            let server = Server::start(valuator, metrics, cfg)?;
+            println!(
+                "listening on http://{} (POST /query, GET /metrics /healthz /debug/trace)",
+                server.addr()
+            );
+            server.join();
+            Ok(())
+        }
+        // Closed-loop load bench against a running serve instance;
+        // `--bench-out BENCH_scan.json` merges the gated serve_c*_* keys.
+        "loadgen" => {
+            let cfg = loadgen::LoadgenConfig {
+                addr: args.flag_or("addr", "127.0.0.1:7878"),
+                clients: args.usize_or("clients", 8)?.max(1),
+                requests_per_client: args.usize_or("requests", 32)?.max(1),
+                topk: args.usize_or("topk", 5)?.max(1),
+            };
+            let report = loadgen::run(&cfg)?;
+            print!("{}", report.render());
+            if report.completed == 0 {
+                return Err(anyhow!("no request completed — is the server up?"));
+            }
+            if let Some(path) = args.flag("bench-out") {
+                let entries = loadgen::bench_entries(&report);
+                loadgen::merge_bench_json(&PathBuf::from(path), &entries)?;
+                println!("merged {} serve keys -> {path}", entries.len());
             }
             Ok(())
         }

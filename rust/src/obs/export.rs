@@ -17,7 +17,7 @@ use crate::valuation::PoolSnapshot;
 
 use super::hist::{bucket_bounds, HistogramSnapshot};
 
-fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+pub(crate) fn header(out: &mut String, name: &str, help: &str, kind: &str) {
     out.push_str("# HELP ");
     out.push_str(name);
     out.push(' ');
@@ -29,7 +29,7 @@ fn header(out: &mut String, name: &str, help: &str, kind: &str) {
     out.push('\n');
 }
 
-fn sample(out: &mut String, name: &str, labels: &str, value: f64) {
+pub(crate) fn sample(out: &mut String, name: &str, labels: &str, value: f64) {
     out.push_str(name);
     out.push_str(labels);
     out.push(' ');
@@ -37,7 +37,7 @@ fn sample(out: &mut String, name: &str, labels: &str, value: f64) {
     out.push('\n');
 }
 
-fn simple(out: &mut String, name: &str, help: &str, kind: &str, value: f64) {
+pub(crate) fn simple(out: &mut String, name: &str, help: &str, kind: &str, value: f64) {
     header(out, name, help, kind);
     sample(out, name, "", value);
 }
@@ -229,6 +229,14 @@ pub fn render_exposition(
             "Pool scan tasks fast-skipped on an already-failed query.",
             "counter",
             p.tasks_skipped as f64,
+        );
+        simple(
+            &mut out,
+            "logra_pool_tasks_cancelled_total",
+            "Pool scan tasks skipped because their query was cancelled \
+             (client disconnect or deadline expiry).",
+            "counter",
+            p.tasks_cancelled as f64,
         );
         header(
             &mut out,

@@ -106,10 +106,14 @@ pub fn chrome_trace_json(events: &[SpanEvent]) -> String {
         if i > 0 {
             out.push(',');
         }
+        // Span names come from the fixed taxonomy today, but they still go
+        // through the crate's one escape-correct string writer — a future
+        // name must not be able to corrupt the trace document.
+        out.push_str("{\"name\":\"");
+        crate::util::json::escape_into(&mut out, e.name);
         out.push_str(&format!(
-            "{{\"name\":\"{}\",\"cat\":\"logra\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+            "\",\"cat\":\"logra\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
              \"pid\":1,\"tid\":{},\"args\":{{\"query\":{}",
-            e.name,
             e.start_nanos / 1_000,
             (e.dur_nanos / 1_000).max(1),
             e.lane,

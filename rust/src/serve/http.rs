@@ -1,0 +1,291 @@
+//! Minimal HTTP/1.1 framing for `logra serve` and `logra loadgen` — no
+//! new dependencies, same hand-rolled-subset philosophy as
+//! [`crate::util::json`].
+//!
+//! Supports exactly what the valuation server needs: one request line,
+//! `name: value` headers, a `Content-Length`-framed body, keep-alive
+//! connection reuse, and the mirror-image response framing the load
+//! generator and the integration tests read back. Deliberately NOT a
+//! general HTTP stack: no chunked transfer encoding, no trailers, no
+//! `Expect: 100-continue`, no TLS.
+
+use std::io::{self, BufRead, Write};
+
+/// Hard cap on request/response bodies (a valuation query is a few KiB of
+/// JSON; a gradient body tops out around `nt * k` floats).
+pub const MAX_BODY: usize = 16 * 1024 * 1024;
+/// Hard cap on one header/request line.
+const MAX_LINE: usize = 8 * 1024;
+/// Hard cap on header count.
+const MAX_HEADERS: usize = 64;
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 defaults to keep-alive; `Connection: close` (any case)
+    /// opts out, and HTTP/1.0 must opt in explicitly.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            Some(_) => self.version != "HTTP/1.0",
+            None => self.version != "HTTP/1.0",
+        }
+    }
+}
+
+/// One parsed HTTP response (client side: `logra loadgen`, tests).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Read one CRLF (or bare-LF) terminated line. `Ok(None)` only on clean
+/// EOF before the first byte — EOF mid-line is an error.
+fn read_line<R: BufRead>(r: &mut R) -> io::Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = r.take(MAX_LINE as u64 + 1).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(if buf.len() > MAX_LINE {
+            bad("header line exceeds limit")
+        } else {
+            io::ErrorKind::UnexpectedEof.into()
+        });
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| bad("non-UTF-8 header line"))
+}
+
+/// Parse `Name: value` header lines until the blank separator line.
+fn read_headers<R: BufRead>(r: &mut R) -> io::Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?.ok_or(io::ErrorKind::UnexpectedEof)?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(bad("too many headers"));
+        }
+        let (name, value) =
+            line.split_once(':').ok_or_else(|| bad("malformed header line"))?;
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+}
+
+fn read_body<R: BufRead>(
+    r: &mut R,
+    headers: &[(String, String)],
+) -> io::Result<Vec<u8>> {
+    let len = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.parse::<usize>().map_err(|_| bad("bad Content-Length")))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        return Err(bad(format!("body of {len} bytes exceeds limit ({MAX_BODY})")));
+    }
+    let mut body = vec![0u8; len];
+    io::Read::read_exact(r, &mut body)?;
+    Ok(body)
+}
+
+/// Read one request off a (possibly keep-alive) connection. `Ok(None)`
+/// means the peer closed cleanly between requests; a malformed request
+/// surfaces as [`io::ErrorKind::InvalidData`] (answer 400, then close).
+pub fn read_request<R: BufRead>(r: &mut R) -> io::Result<Option<Request>> {
+    // Tolerate stray blank lines between pipelined requests (RFC 9112 §2.2).
+    let line = loop {
+        match read_line(r)? {
+            None => return Ok(None),
+            Some(l) if l.is_empty() => continue,
+            Some(l) => break l,
+        }
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/") => {
+            (m.to_string(), p.to_string(), v.to_string())
+        }
+        _ => return Err(bad(format!("malformed request line {line:?}"))),
+    };
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    Ok(Some(Request { method, path, version, headers, body }))
+}
+
+/// Read one response (client side). EOF before the status line is an
+/// error here — a client that just sent a request expects an answer.
+pub fn read_response<R: BufRead>(r: &mut R) -> io::Result<Response> {
+    let line = read_line(r)?.ok_or(io::ErrorKind::UnexpectedEof)?;
+    let mut parts = line.split_whitespace();
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/") => {
+            code.parse::<u16>().map_err(|_| bad("bad status code"))?
+        }
+        _ => return Err(bad(format!("malformed status line {line:?}"))),
+    };
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    Ok(Response { status, headers, body })
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one `Content-Length`-framed response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write one request (client side).
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nHost: logra\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\n{\"row\":1}";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/query");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"{\"row\":1}");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_between_requests_is_none() {
+        assert!(read_request(&mut Cursor::new(&b""[..])).unwrap().is_none());
+    }
+
+    #[test]
+    fn connection_close_and_http10() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: Close\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let raw = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        let err = read_request(&mut Cursor::new(&b"not an http line\r\n\r\n"[..]))
+            .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        let err = read_request(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // Truncated body: EOF mid-read, not a silent short body.
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort";
+        assert!(read_request(&mut Cursor::new(&raw[..])).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, "application/json", b"{\"error\":1}", true)
+            .unwrap();
+        let res = read_response(&mut Cursor::new(&wire[..])).unwrap();
+        assert_eq!(res.status, 429);
+        assert_eq!(res.header("content-type"), Some("application/json"));
+        assert_eq!(res.body, b"{\"error\":1}");
+
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/query", b"{}").unwrap();
+        let req = read_request(&mut Cursor::new(&wire[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{}");
+    }
+}

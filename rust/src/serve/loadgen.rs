@@ -1,0 +1,318 @@
+//! `logra loadgen` — closed-loop load bench against a running
+//! `logra serve` instance, with a `BENCH_scan.json` read-modify-write so
+//! the serving SLO rides the same CI gate as the scan benches.
+//!
+//! N client threads each hold one keep-alive connection and issue
+//! `POST /query` requests back-to-back (closed loop: a client's next
+//! request starts when its previous response lands). Per-request wall
+//! latency feeds p50/p99; a client that hits an I/O or non-200 response
+//! counts an error and reconnects instead of dying — the summary reports
+//! per-client error counts (the serving mirror of the
+//! `examples/serve_queries.rs` fix).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::stats::percentile;
+
+use super::http;
+
+/// Load-generator knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests each client issues.
+    pub requests_per_client: usize,
+    /// `topk` per query.
+    pub topk: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7878".into(),
+            clients: 8,
+            requests_per_client: 32,
+            topk: 5,
+        }
+    }
+}
+
+/// What one run measured.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    /// Requests attempted across all clients.
+    pub attempted: usize,
+    /// Requests that returned 200 with a parseable body.
+    pub completed: usize,
+    /// Failed requests per client (I/O error, non-200, bad body). Clients
+    /// reconnect and continue instead of dying.
+    pub per_client_errors: Vec<usize>,
+    pub wall_seconds: f64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl LoadgenReport {
+    pub fn errors(&self) -> usize {
+        self.per_client_errors.iter().sum()
+    }
+
+    /// Human-readable summary (what `logra loadgen` prints).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "loadgen: {} clients x {} requests, {} ok / {} errors in {:.2}s\n\
+             throughput  {:.1} queries/s\n\
+             latency     p50 {:.3} ms, p99 {:.3} ms\n",
+            self.clients,
+            if self.clients > 0 { self.attempted / self.clients } else { 0 },
+            self.completed,
+            self.errors(),
+            self.wall_seconds,
+            self.qps,
+            self.p50_ms,
+            self.p99_ms
+        );
+        if self.errors() > 0 {
+            s.push_str("per-client errors: ");
+            for (c, e) in self.per_client_errors.iter().enumerate() {
+                if c > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("client {c}: {e}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// One-shot HTTP request on a fresh connection (health checks, tests).
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<http::Response> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    http::write_request(&mut writer, method, path, body)?;
+    Ok(http::read_response(&mut reader)?)
+}
+
+/// One keep-alive client connection.
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { writer, reader: BufReader::new(stream) })
+    }
+
+    fn query(&mut self, body: &str) -> Result<()> {
+        http::write_request(&mut self.writer, "POST", "/query", body.as_bytes())?;
+        let res = http::read_response(&mut self.reader)?;
+        if res.status != 200 {
+            bail!("status {}: {}", res.status, res.body_str());
+        }
+        // Parse so "completed" means a well-formed scored response, not
+        // just 200 bytes on the wire.
+        let v = json::parse(&res.body_str())?;
+        v.get("results")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("response missing results array"))?;
+        Ok(())
+    }
+}
+
+/// Run the closed loop. Row indices cycle deterministically per client so
+/// runs are comparable; the store size comes from `GET /healthz`.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let health = http_request(&cfg.addr, "GET", "/healthz", b"")?;
+    if health.status != 200 {
+        bail!("healthz returned {}: {}", health.status, health.body_str());
+    }
+    let rows = json::parse(&health.body_str())?
+        .get("rows")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("healthz body missing rows"))? as usize;
+    if rows == 0 {
+        bail!("server store is empty — nothing to query");
+    }
+
+    let clients = cfg.clients.max(1);
+    let per_client = cfg.requests_per_client.max(1);
+    let t0 = Instant::now();
+    let outcomes: Vec<(Vec<f64>, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut latencies = Vec::with_capacity(per_client);
+                    let mut errors = 0usize;
+                    let mut conn = Client::connect(&cfg.addr).ok();
+                    for q in 0..per_client {
+                        let row = (c * 37 + q * 13) % rows;
+                        let body =
+                            format!("{{\"row\":{row},\"topk\":{}}}", cfg.topk.max(1));
+                        let t = Instant::now();
+                        let ok = match conn.as_mut() {
+                            Some(client) => client.query(&body).is_ok(),
+                            None => false,
+                        };
+                        if ok {
+                            latencies.push(t.elapsed().as_secs_f64());
+                        } else {
+                            // Count it and reconnect — one bad response
+                            // must not kill the client thread.
+                            errors += 1;
+                            conn = Client::connect(&cfg.addr).ok();
+                        }
+                    }
+                    (latencies, errors)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or((Vec::new(), per_client)))
+            .collect()
+    });
+    let wall_seconds = t0.elapsed().as_secs_f64();
+
+    let mut latencies = Vec::new();
+    let mut per_client_errors = Vec::with_capacity(clients);
+    for (lat, errs) in outcomes {
+        latencies.extend(lat);
+        per_client_errors.push(errs);
+    }
+    let completed = latencies.len();
+    Ok(LoadgenReport {
+        clients,
+        attempted: clients * per_client,
+        completed,
+        per_client_errors,
+        wall_seconds,
+        qps: completed as f64 / wall_seconds.max(1e-9),
+        p50_ms: percentile(&latencies, 50.0) * 1e3,
+        p99_ms: percentile(&latencies, 99.0) * 1e3,
+    })
+}
+
+/// The gated bench keys for a run at `clients` concurrency:
+/// `serve_cN_qps` (higher is better) and `serve_cN_p50_ms` /
+/// `serve_cN_p99_ms` (latency ceilings), matching
+/// `scripts/bench_gate.py`.
+pub fn bench_entries(report: &LoadgenReport) -> Vec<(String, f64)> {
+    let c = report.clients;
+    vec![
+        (format!("serve_c{c}_qps"), report.qps),
+        (format!("serve_c{c}_p50_ms"), report.p50_ms),
+        (format!("serve_c{c}_p99_ms"), report.p99_ms),
+    ]
+}
+
+/// Read-modify-write `entries` into the JSON object at `path`
+/// (`BENCH_scan.json`): existing keys are replaced in place, new keys
+/// appended, every other key (the microbench rows) left untouched. The
+/// file is created as a fresh object when missing.
+pub fn merge_bench_json(path: &Path, entries: &[(String, f64)]) -> Result<()> {
+    let mut root = if path.exists() {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        json::parse(&text).with_context(|| format!("parse {}", path.display()))?
+    } else {
+        Json::Obj(Vec::new())
+    };
+    let Json::Obj(pairs) = &mut root else {
+        bail!("{} is not a JSON object", path.display());
+    };
+    for (key, value) in entries {
+        let v = Json::Float(*value);
+        match pairs.iter_mut().find(|(k, _)| k == key) {
+            Some((_, slot)) => *slot = v,
+            None => pairs.push((key.clone(), v)),
+        }
+    }
+    let mut text = root.render();
+    text.push('\n');
+    std::fs::write(path, text).with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_updates_and_preserves_keys() {
+        let dir = std::env::temp_dir().join("logra-loadgen-merge-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_scan.json");
+        std::fs::write(
+            &path,
+            "{\n  \"rows\": 8192,\n  \"kernel_arm\": \"avx2\",\n  \"serve_c8_qps\": 1.0\n}\n",
+        )
+        .unwrap();
+        merge_bench_json(
+            &path,
+            &[
+                ("serve_c8_qps".to_string(), 120.5),
+                ("serve_c8_p50_ms".to_string(), 12.25),
+            ],
+        )
+        .unwrap();
+        let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("rows").and_then(Json::as_u64), Some(8192));
+        assert_eq!(v.get("kernel_arm").and_then(Json::as_str), Some("avx2"));
+        assert_eq!(v.get("serve_c8_qps").and_then(Json::as_f64), Some(120.5));
+        assert_eq!(v.get("serve_c8_p50_ms").and_then(Json::as_f64), Some(12.25));
+    }
+
+    #[test]
+    fn merge_creates_missing_file() {
+        let dir = std::env::temp_dir().join("logra-loadgen-merge-create");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_scan.json");
+        merge_bench_json(&path, &[("serve_c8_qps".to_string(), 9.5)]).unwrap();
+        let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("serve_c8_qps").and_then(Json::as_f64), Some(9.5));
+    }
+
+    #[test]
+    fn report_renders_per_client_errors() {
+        let r = LoadgenReport {
+            clients: 2,
+            attempted: 8,
+            completed: 6,
+            per_client_errors: vec![0, 2],
+            wall_seconds: 1.0,
+            qps: 6.0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+        };
+        let s = r.render();
+        assert!(s.contains("6 ok / 2 errors"));
+        assert!(s.contains("client 1: 2"));
+    }
+}

@@ -1,0 +1,797 @@
+//! `logra serve` — the observability-first valuation server.
+//!
+//! A threaded HTTP/1.1 server (hand-rolled framing over
+//! `std::net::TcpListener`, no new dependencies — see [`http`]) over the
+//! [`Valuator`] facade. One accept thread, one thread per connection
+//! (keep-alive), one shared `Arc<Metrics>`:
+//!
+//! - `POST /query` — JSON body `{"row": N}` or
+//!   `{"gradient": [...], "nt": 1}`, optional per-request `"topk"`,
+//!   `"norm"` (`"none"`/`"relatif"`), and `"deadline_ms"`. The response
+//!   carries ids + scores (floats rendered shortest-roundtrip, so they
+//!   re-parse bit-identical), a server-wide `request_id`, and the full
+//!   [`QueryReport`] stage breakdown.
+//! - `GET /metrics` — [`render_exposition`] verbatim (counters, pool
+//!   snapshot, histograms) plus the server's own `logra_serve_*`
+//!   families, from the one shared `Arc<Metrics>`.
+//! - `GET /healthz` — store / backend / pool liveness as JSON.
+//! - `GET /debug/trace` — the [`TraceRing`](crate::obs::TraceRing) as
+//!   Chrome trace-event JSON ([`chrome_trace_json`]).
+//!
+//! # Admission control, deadlines, cancellation
+//!
+//! At most [`ServeConfig::max_in_flight`] queries run at once; excess
+//! `POST /query` requests are rejected immediately with a 429 JSON error
+//! (no queueing — the caller retries, the scan pool never sees the
+//! query). While a query is in flight the handler waits through
+//! [`PendingScores::wait_with_report_until`], re-checking every
+//! [`ServeConfig::poll_interval`]:
+//!
+//! - **deadline** (per-request `deadline_ms`, default
+//!   [`ServeConfig::default_deadline_ms`]; 0 = none) → the wait cancels,
+//!   the pool skips the query's unstarted shard tasks (the
+//!   `tasks_cancelled` pool counter), and the client gets a 504.
+//! - **client disconnect** (detected with a non-blocking `peek` on the
+//!   connection) → same cancellation, no response (nobody is listening),
+//!   counted in `logra_serve_disconnects_total`.
+//!
+//! Cancellation needs a pool-backed backend (a sharded f32 or quantized
+//! fabric): the sequential engine scans eagerly at admission, so there is
+//! nothing left to cancel by the time the handler waits.
+
+pub mod http;
+pub mod loadgen;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::Metrics;
+use crate::obs::export::simple;
+use crate::obs::{chrome_trace_json, render_exposition, QueryReport};
+use crate::util::json::{self, Json};
+use crate::valuation::{
+    Normalization, QueryRequest, QueryResult, ScanBackend, ValuationError, Valuator,
+};
+
+/// Server construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (tests).
+    pub addr: String,
+    /// Queries allowed in flight at once; excess is rejected with 429.
+    pub max_in_flight: usize,
+    /// Default per-query deadline in ms (0 = none); any request can
+    /// override with `"deadline_ms"`.
+    pub default_deadline_ms: u64,
+    /// `topk` when the request omits it.
+    pub default_topk: usize,
+    /// How often an in-flight query re-checks deadline + disconnect.
+    pub poll_interval: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_in_flight: 8,
+            default_deadline_ms: 0,
+            default_topk: 5,
+            poll_interval: Duration::from_millis(15),
+        }
+    }
+}
+
+/// Server-side counters, exported as `logra_serve_*` families on
+/// `/metrics` alongside the shared [`Metrics`] exposition.
+#[derive(Default)]
+struct ServeStats {
+    /// HTTP requests handled (all endpoints, all statuses).
+    requests: AtomicU64,
+    /// `POST /query` requests admitted past the in-flight gate.
+    queries: AtomicU64,
+    /// Queries rejected at admission (`max_in_flight` exceeded).
+    rejected: AtomicU64,
+    /// Queries cancelled by deadline expiry.
+    deadline_expired: AtomicU64,
+    /// Queries cancelled because the client disconnected mid-flight.
+    disconnects: AtomicU64,
+    /// Requests answered with a 4xx/5xx status.
+    errors: AtomicU64,
+}
+
+struct Shared {
+    valuator: Arc<Valuator>,
+    metrics: Arc<Metrics>,
+    cfg: ServeConfig,
+    stats: ServeStats,
+    in_flight: AtomicUsize,
+    next_request_id: AtomicU64,
+}
+
+/// RAII decrement for the admission gate.
+struct InFlightGuard<'a>(&'a Shared);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Shared {
+    /// Claim an in-flight slot, or `None` when the server is saturated.
+    fn admit(&self) -> Option<InFlightGuard<'_>> {
+        let limit = self.cfg.max_in_flight.max(1);
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= limit {
+                return None;
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(InFlightGuard(self)),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// `/metrics`: the shared exposition plus the `logra_serve_*` families.
+    fn render_metrics(&self) -> String {
+        let pool = self.valuator.scan_pool().map(|p| p.snapshot());
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let mut out = render_exposition(
+            &self.metrics,
+            pool.as_ref(),
+            &[
+                (
+                    "logra_store_rows",
+                    "Rows in the served store fabric.",
+                    self.valuator.rows() as f64,
+                ),
+                (
+                    "logra_store_k",
+                    "Projected gradient dimension.",
+                    self.valuator.k() as f64,
+                ),
+            ],
+        );
+        simple(
+            &mut out,
+            "logra_serve_requests_total",
+            "HTTP requests handled by logra serve (all endpoints).",
+            "counter",
+            ld(&self.stats.requests),
+        );
+        simple(
+            &mut out,
+            "logra_serve_queries_total",
+            "POST /query requests admitted past the in-flight gate.",
+            "counter",
+            ld(&self.stats.queries),
+        );
+        simple(
+            &mut out,
+            "logra_serve_rejected_total",
+            "Queries rejected at admission (max_in_flight exceeded).",
+            "counter",
+            ld(&self.stats.rejected),
+        );
+        simple(
+            &mut out,
+            "logra_serve_deadline_expired_total",
+            "Queries cancelled by per-request deadline expiry.",
+            "counter",
+            ld(&self.stats.deadline_expired),
+        );
+        simple(
+            &mut out,
+            "logra_serve_disconnects_total",
+            "Queries cancelled because the client disconnected mid-flight.",
+            "counter",
+            ld(&self.stats.disconnects),
+        );
+        simple(
+            &mut out,
+            "logra_serve_errors_total",
+            "Requests answered with a 4xx/5xx status.",
+            "counter",
+            ld(&self.stats.errors),
+        );
+        simple(
+            &mut out,
+            "logra_serve_in_flight",
+            "Queries currently inside the admission gate.",
+            "gauge",
+            self.in_flight.load(Ordering::Relaxed) as f64,
+        );
+        simple(
+            &mut out,
+            "logra_serve_max_in_flight",
+            "Admission gate capacity.",
+            "gauge",
+            self.cfg.max_in_flight.max(1) as f64,
+        );
+        out
+    }
+
+    /// `/healthz`: store / backend / pool liveness (the JSON subset has
+    /// no booleans, so liveness is `"status": "ok"` plus numbers).
+    fn render_healthz(&self) -> String {
+        let mut pairs = vec![
+            ("status".to_string(), Json::Str("ok".into())),
+            ("backend".to_string(), Json::Str(self.valuator.kind().name().into())),
+            ("rows".to_string(), Json::Num(self.valuator.rows() as u64)),
+            ("k".to_string(), Json::Num(self.valuator.k() as u64)),
+            ("workers".to_string(), Json::Num(self.valuator.workers() as u64)),
+            (
+                "in_flight".to_string(),
+                Json::Num(self.in_flight.load(Ordering::Relaxed) as u64),
+            ),
+            (
+                "max_in_flight".to_string(),
+                Json::Num(self.cfg.max_in_flight.max(1) as u64),
+            ),
+        ];
+        if let Some(p) = self.valuator.scan_pool() {
+            let s = p.snapshot();
+            pairs.push((
+                "pool".to_string(),
+                Json::Obj(vec![
+                    ("workers".to_string(), Json::Num(s.workers as u64)),
+                    ("in_flight".to_string(), Json::Num(s.in_flight as u64)),
+                    ("queue_depth".to_string(), Json::Num(s.queue_depth as u64)),
+                    ("tasks_completed".to_string(), Json::Num(s.tasks_completed)),
+                    ("tasks_cancelled".to_string(), Json::Num(s.tasks_cancelled)),
+                ]),
+            ));
+        }
+        Json::Obj(pairs).render()
+    }
+}
+
+// ------------------------------------------------------------ query bodies
+
+/// Query input: a stored row index, or inline gradient rows.
+pub(crate) enum QueryBody {
+    Row(u64),
+    Gradient { rows: Vec<f32>, nt: usize },
+}
+
+/// A parsed `POST /query` body.
+pub(crate) struct ParsedQuery {
+    pub(crate) body: QueryBody,
+    pub(crate) topk: usize,
+    pub(crate) norm: Option<Normalization>,
+    pub(crate) deadline_ms: Option<u64>,
+}
+
+/// Parse a query body against the server defaults. Errors are
+/// caller-facing strings (they become 400 JSON errors).
+pub(crate) fn parse_query_body(
+    text: &str,
+    default_topk: usize,
+) -> Result<ParsedQuery, String> {
+    let v = json::parse(text).map_err(|e| format!("invalid JSON body: {e:#}"))?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err("query body must be a JSON object".into());
+    }
+    let topk = match v.get("topk") {
+        None => default_topk,
+        Some(t) => t
+            .as_u64()
+            .filter(|&t| t > 0)
+            .ok_or("\"topk\" must be a positive integer")? as usize,
+    };
+    let norm = match v.get("norm") {
+        None => None,
+        Some(n) => {
+            let s = n.as_str().ok_or("\"norm\" must be \"none\" or \"relatif\"")?;
+            Some(Normalization::parse(s).map_err(|e| format!("{e:#}"))?)
+        }
+    };
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(d) => {
+            Some(d.as_u64().ok_or("\"deadline_ms\" must be a non-negative integer")?)
+        }
+    };
+    let body = match (v.get("row"), v.get("gradient")) {
+        (Some(_), Some(_)) => {
+            return Err("pass either \"row\" or \"gradient\", not both".into())
+        }
+        (Some(r), None) => {
+            QueryBody::Row(r.as_u64().ok_or("\"row\" must be a non-negative integer")?)
+        }
+        (None, Some(g)) => {
+            let arr = g.as_arr().ok_or("\"gradient\" must be an array of numbers")?;
+            let rows: Vec<f32> = arr
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as f32))
+                .collect::<Option<_>>()
+                .ok_or("\"gradient\" must be an array of numbers")?;
+            let nt = match v.get("nt") {
+                None => 1,
+                Some(n) => n
+                    .as_u64()
+                    .filter(|&n| n > 0)
+                    .ok_or("\"nt\" must be a positive integer")? as usize,
+            };
+            QueryBody::Gradient { rows, nt }
+        }
+        (None, None) => return Err("query body needs \"row\" or \"gradient\"".into()),
+    };
+    Ok(ParsedQuery { body, topk, norm, deadline_ms })
+}
+
+// -------------------------------------------------------------- responses
+
+/// `{"error":{"code":...,"message":...}}` through the shared escape-safe
+/// JSON writer.
+fn error_body(code: &str, message: &str) -> String {
+    Json::Obj(vec![(
+        "error".to_string(),
+        Json::Obj(vec![
+            ("code".to_string(), Json::Str(code.to_string())),
+            ("message".to_string(), Json::Str(message.to_string())),
+        ]),
+    )])
+    .render()
+}
+
+fn report_json(rep: &QueryReport) -> Json {
+    Json::Obj(vec![
+        ("query_id".to_string(), Json::Num(rep.query_id)),
+        ("backend".to_string(), Json::Str(rep.backend.to_string())),
+        ("shards".to_string(), Json::Num(rep.shards as u64)),
+        ("rows_scanned".to_string(), Json::Num(rep.rows_scanned)),
+        ("candidates_rescored".to_string(), Json::Num(rep.candidates_rescored)),
+        ("admission_nanos".to_string(), Json::Num(rep.admission_nanos)),
+        ("queue_wait_nanos".to_string(), Json::Num(rep.queue_wait_nanos)),
+        ("scan_nanos".to_string(), Json::Num(rep.scan_nanos)),
+        ("merge_nanos".to_string(), Json::Num(rep.merge_nanos)),
+        ("rescore_nanos".to_string(), Json::Num(rep.rescore_nanos)),
+        ("total_nanos".to_string(), Json::Num(rep.total_nanos)),
+        (
+            "workers".to_string(),
+            Json::Arr(rep.workers.iter().map(|&w| Json::Num(w as u64)).collect()),
+        ),
+    ])
+}
+
+/// The `POST /query` 200 body. Scores go through [`Json::Float`]'s
+/// shortest-roundtrip rendering, so a client parsing them back recovers
+/// the exact bits `Valuator::query` produced.
+fn query_response_body(
+    request_id: u64,
+    backend: &str,
+    results: &[QueryResult],
+    report: Option<&QueryReport>,
+) -> String {
+    let results_json: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                (
+                    "ids".to_string(),
+                    Json::Arr(r.top.iter().map(|&(_, id)| Json::Num(id)).collect()),
+                ),
+                (
+                    "scores".to_string(),
+                    Json::Arr(r.top.iter().map(|&(s, _)| Json::Float(s)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    let mut pairs = vec![
+        ("request_id".to_string(), Json::Num(request_id)),
+        ("backend".to_string(), Json::Str(backend.to_string())),
+        ("results".to_string(), Json::Arr(results_json)),
+    ];
+    if let Some(rep) = report {
+        pairs.push(("report".to_string(), report_json(rep)));
+    }
+    Json::Obj(pairs).render()
+}
+
+// ----------------------------------------------------------------- server
+
+/// A running `logra serve` instance. Dropping (or [`Server::stop`]) shuts
+/// the accept loop down; in-flight connection threads notice on their
+/// next read/write against a closed socket or idle timeout.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and start serving `valuator` (which should have
+    /// been built with the same `metrics` handle — `/metrics` and
+    /// `/query` reports read from it).
+    pub fn start(
+        valuator: Arc<Valuator>,
+        metrics: Arc<Metrics>,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(Shared {
+            valuator,
+            metrics,
+            cfg,
+            stats: ServeStats::default(),
+            in_flight: AtomicUsize::new(0),
+            next_request_id: AtomicU64::new(0),
+        });
+        let flag = shutdown.clone();
+        let accept = std::thread::Builder::new()
+            .name("logra-serve-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let shared = shared.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("logra-serve-conn".into())
+                        .spawn(move || handle_conn(&shared, stream));
+                }
+            })?;
+        Ok(Server { addr, shutdown, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (it only exits on `stop`).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn shut(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.shutdown.store(true, Ordering::Release);
+            // Wake the blocking accept with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting and join the accept thread.
+    pub fn stop(mut self) {
+        self.shut();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shut();
+    }
+}
+
+/// Per-connection idle read timeout — a keep-alive client that goes
+/// silent for this long is dropped so connection threads don't pile up.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Has the peer gone away? A non-blocking 1-byte peek distinguishes
+/// "closed" (`Ok(0)` / hard error) from "quiet but alive" (`WouldBlock`)
+/// and "pipelined bytes waiting" (`Ok(n)`).
+fn peer_closed(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut buf = [0u8; 1];
+    let closed = match stream.peek(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    closed
+}
+
+/// What one routed request resolves to.
+enum Outcome {
+    /// Write this response, keep serving the connection.
+    Respond { status: u16, content_type: &'static str, body: String },
+    /// The client vanished mid-query; there is nobody to answer.
+    Disconnected,
+}
+
+fn respond(status: u16, body: String) -> Outcome {
+    Outcome::Respond { status, content_type: "application/json", body }
+}
+
+fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            // Clean close between requests.
+            Ok(None) => return,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // Malformed framing: answer 400 once, then close.
+                shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let body = error_body("bad_request", &format!("{e}"));
+                let _ = http::write_response(
+                    &mut writer,
+                    400,
+                    "application/json",
+                    body.as_bytes(),
+                    false,
+                );
+                return;
+            }
+            Err(_) => return,
+        };
+        shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let keep_alive = req.keep_alive();
+        match route(shared, &req, &writer) {
+            Outcome::Respond { status, content_type, body } => {
+                if status >= 400 {
+                    shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                if http::write_response(
+                    &mut writer,
+                    status,
+                    content_type,
+                    body.as_bytes(),
+                    keep_alive,
+                )
+                .is_err()
+                {
+                    return;
+                }
+            }
+            Outcome::Disconnected => return,
+        }
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+fn route(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -> Outcome {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => respond(200, shared.render_healthz()),
+        ("GET", "/metrics") => Outcome::Respond {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            body: shared.render_metrics(),
+        },
+        ("GET", "/debug/trace") => {
+            respond(200, chrome_trace_json(&shared.metrics.obs.trace.events()))
+        }
+        ("POST", "/query") => handle_query(shared, req, stream),
+        (_, "/healthz" | "/metrics" | "/debug/trace" | "/query") => respond(
+            405,
+            error_body("method_not_allowed", &format!("{} not allowed here", req.method)),
+        ),
+        (_, path) => respond(404, error_body("not_found", &format!("no route {path}"))),
+    }
+}
+
+fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -> Outcome {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return respond(400, error_body("bad_request", "body is not UTF-8"));
+    };
+    let parsed = match parse_query_body(text, shared.cfg.default_topk) {
+        Ok(p) => p,
+        Err(msg) => return respond(400, error_body("bad_request", &msg)),
+    };
+
+    // Admission: reject fast instead of queueing — the client can retry,
+    // and the scan pool's own queue stays reserved for admitted work.
+    let Some(_guard) = shared.admit() else {
+        shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        return respond(
+            429,
+            error_body(
+                "overloaded",
+                &format!(
+                    "{} queries already in flight (max_in_flight)",
+                    shared.cfg.max_in_flight.max(1)
+                ),
+            ),
+        );
+    };
+    shared.stats.queries.fetch_add(1, Ordering::Relaxed);
+    let request_id = shared.next_request_id.fetch_add(1, Ordering::Relaxed) + 1;
+
+    let query = match parsed.body {
+        QueryBody::Row(row) => match shared.valuator.gradient_row(row as usize) {
+            Some(g) => QueryRequest::gradients(g, 1, parsed.topk),
+            None => {
+                return respond(
+                    400,
+                    error_body(
+                        "bad_request",
+                        &format!(
+                            "row {row} out of range (store has {} rows)",
+                            shared.valuator.rows()
+                        ),
+                    ),
+                )
+            }
+        },
+        QueryBody::Gradient { rows, nt } => QueryRequest::gradients(rows, nt, parsed.topk),
+    };
+    let query = match parsed.norm {
+        Some(n) => query.with_norm(n),
+        None => query,
+    };
+
+    let deadline_ms = parsed.deadline_ms.unwrap_or(shared.cfg.default_deadline_ms);
+    let deadline =
+        (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
+
+    let pending = match shared.valuator.query_async(query) {
+        Ok(p) => p,
+        Err(ValuationError::BadQuery(m)) => {
+            return respond(400, error_body("bad_request", &m))
+        }
+        Err(ValuationError::Shutdown) => {
+            return respond(503, error_body("shutting_down", "backend is shut down"))
+        }
+        Err(e) => return respond(500, error_body("internal", &format!("{e}"))),
+    };
+
+    // Wait, re-checking disconnect + deadline each poll interval. A
+    // cancellation makes the pool skip this query's unstarted shard tasks
+    // (PoolSnapshot::tasks_cancelled).
+    let disconnected = std::cell::Cell::new(false);
+    let mut should_cancel = || {
+        if peer_closed(stream) {
+            disconnected.set(true);
+            return true;
+        }
+        matches!(deadline, Some(d) if Instant::now() >= d)
+    };
+    match pending.wait_with_report_until(&mut should_cancel, shared.cfg.poll_interval) {
+        Ok((results, report)) => respond(
+            200,
+            query_response_body(
+                request_id,
+                shared.valuator.kind().name(),
+                &results,
+                report.as_ref(),
+            ),
+        ),
+        Err(ValuationError::Cancelled { .. }) => {
+            if disconnected.get() {
+                shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                Outcome::Disconnected
+            } else {
+                shared.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                respond(
+                    504,
+                    error_body(
+                        "deadline_expired",
+                        &format!("query exceeded its {deadline_ms} ms deadline"),
+                    ),
+                )
+            }
+        }
+        Err(ValuationError::QueryPoisoned { query_id, message }) => respond(
+            500,
+            error_body("query_poisoned", &format!("query {query_id}: {message}")),
+        ),
+        Err(ValuationError::Shutdown) => {
+            respond(503, error_body("shutting_down", "backend is shut down"))
+        }
+        Err(e) => respond(500, error_body("internal", &format!("{e}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_row_query_with_defaults() {
+        let p = parse_query_body(r#"{"row": 3}"#, 7).unwrap();
+        assert!(matches!(p.body, QueryBody::Row(3)));
+        assert_eq!(p.topk, 7);
+        assert!(p.norm.is_none());
+        assert!(p.deadline_ms.is_none());
+    }
+
+    #[test]
+    fn parses_gradient_query_with_overrides() {
+        let p = parse_query_body(
+            r#"{"gradient": [1.0, -2.5, 3, 4.0], "nt": 2, "topk": 9,
+               "norm": "relatif", "deadline_ms": 250}"#,
+            5,
+        )
+        .unwrap();
+        match p.body {
+            QueryBody::Gradient { rows, nt } => {
+                assert_eq!(rows, vec![1.0, -2.5, 3.0, 4.0]);
+                assert_eq!(nt, 2);
+            }
+            _ => panic!("expected gradient body"),
+        }
+        assert_eq!(p.topk, 9);
+        assert_eq!(p.norm, Some(Normalization::RelatIf));
+        assert_eq!(p.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn rejects_malformed_query_bodies() {
+        for bad in [
+            "not json",
+            "[1,2]",
+            "{}",
+            r#"{"row": 1, "gradient": [1.0]}"#,
+            r#"{"row": -1}"#,
+            r#"{"row": 1, "topk": 0}"#,
+            r#"{"gradient": ["x"]}"#,
+            r#"{"gradient": [1.0], "nt": 0}"#,
+            r#"{"row": 1, "norm": "weird"}"#,
+            r#"{"row": 1, "deadline_ms": "soon"}"#,
+        ] {
+            assert!(parse_query_body(bad, 5).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn error_body_escapes_messages() {
+        let body = error_body("bad_request", "quote\" and\nnewline");
+        let v = json::parse(&body).unwrap();
+        let err = v.get("error").unwrap();
+        assert_eq!(err.get("code").and_then(Json::as_str), Some("bad_request"));
+        assert_eq!(
+            err.get("message").and_then(Json::as_str),
+            Some("quote\" and\nnewline")
+        );
+    }
+
+    #[test]
+    fn query_response_roundtrips_scores_bit_exact() {
+        let results = vec![QueryResult {
+            top: vec![(0.12345678901234567, 42), (-3.5e-5, 7)],
+        }];
+        let body = query_response_body(9, "parallel-f32", &results, None);
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("request_id").and_then(Json::as_u64), Some(9));
+        assert_eq!(v.get("backend").and_then(Json::as_str), Some("parallel-f32"));
+        let r0 = &v.get("results").and_then(Json::as_arr).unwrap()[0];
+        let ids: Vec<u64> = r0
+            .get("ids")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|x| x.as_u64().unwrap())
+            .collect();
+        assert_eq!(ids, vec![42, 7]);
+        let scores: Vec<f64> = r0
+            .get("scores")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        assert_eq!(scores[0].to_bits(), 0.12345678901234567f64.to_bits());
+        assert_eq!(scores[1].to_bits(), (-3.5e-5f64).to_bits());
+    }
+}

@@ -1,21 +1,30 @@
-//! Hand-rolled parser for the JSON subset this crate emits and reads —
-//! objects, arrays, escape-free strings, unsigned integers. No serde in
-//! the offline crate set, so both the shard manifest (`shards.json`,
-//! [`crate::store::ShardManifest`]) and the test-side validation of
-//! generated JSON (Chrome trace events, bench reports) go through here.
+//! Hand-rolled parser + writer for the JSON subset this crate emits and
+//! reads — objects, arrays, strings (with the standard escapes), unsigned
+//! integers, and floats. No serde in the offline crate set, so the shard
+//! manifest (`shards.json`, [`crate::store::ShardManifest`]), the bench
+//! report read-modify-write in `logra loadgen`, the `logra serve` request
+//! bodies, and the test-side validation of generated JSON (Chrome trace
+//! events) all go through here.
 //!
-//! Deliberately NOT a general JSON parser: no floats, no negatives, no
-//! booleans/null, no string escapes. Everything the crate writes for its
-//! own consumption sticks to this subset (e.g.
-//! [`crate::obs::chrome_trace_json`] emits integer microsecond
-//! timestamps), which keeps the parser ~150 lines and obviously correct.
+//! Deliberately NOT a general JSON parser: no booleans, no null, no
+//! duplicate-key detection. Digit-only literals stay exact `u64`s (row
+//! ids must not round-trip through f64); anything signed, fractional, or
+//! exponent-bearing becomes [`Json::Float`]. The writer side is
+//! [`escape_into`]/[`escaped`] — the single escape-correct string
+//! serializer shared by [`crate::obs::chrome_trace_json`] and the
+//! `logra serve` response writers — plus [`Json::render`] for
+//! re-serializing parsed values.
 
 use anyhow::{anyhow, ensure, Result};
+use std::fmt::Write as _;
 
 /// A parsed JSON value (the supported subset).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// Digit-only literal (kept exact: row ids are u64).
     Num(u64),
+    /// Signed, fractional, or exponent-bearing literal.
+    Float(f64),
     Str(String),
     Arr(Vec<Json>),
     Obj(Vec<(String, Json)>),
@@ -37,6 +46,16 @@ impl Json {
         }
     }
 
+    /// Numeric value as f64 — accepts both [`Json::Num`] and
+    /// [`Json::Float`].
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n as f64),
+            Json::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -50,6 +69,90 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize back to JSON text. Floats use Rust's shortest-roundtrip
+    /// `{:?}` formatting (integral floats keep a trailing `.0`, so the
+    /// value re-parses as a `Float`); non-finite floats are not
+    /// representable in JSON and render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Num(n) => {
+                let _ = write!(out, "{}", n);
+            }
+            Json::Float(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{:?}", x);
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                escape_into(out, s);
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    escape_into(out, k);
+                    out.push_str("\":");
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Append `s` to `out` with JSON string escaping (the content only — the
+/// caller writes the surrounding quotes). Escapes `"`, `\`, and all
+/// control bytes below 0x20 (named short forms where JSON has them,
+/// `\u00XX` otherwise). This is the one escape path every writer in the
+/// crate shares; emitting a string any other way is a bug.
+pub fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Convenience form of [`escape_into`] returning a fresh `String`
+/// (content only, no surrounding quotes).
+pub fn escaped(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    escape_into(&mut out, s);
+    out
 }
 
 /// Parse one JSON value; the whole input must be consumed (trailing
@@ -94,7 +197,7 @@ impl Parser<'_> {
             b'{' => self.object(),
             b'[' => self.array(),
             b'"' => Ok(Json::Str(self.string()?)),
-            b'0'..=b'9' => self.number(),
+            b'0'..=b'9' | b'-' => self.number(),
             other => Err(anyhow!("unexpected JSON byte {:?}", other as char)),
         }
     }
@@ -107,6 +210,7 @@ impl Parser<'_> {
             return Ok(Json::Obj(pairs));
         }
         loop {
+            self.skip_ws();
             let key = self.string()?;
             self.expect(b':')?;
             pairs.push((key, self.value()?));
@@ -147,29 +251,115 @@ impl Parser<'_> {
 
     fn string(&mut self) -> Result<String> {
         self.expect(b'"')?;
-        let start = self.i;
+        let mut out = String::new();
         while self.i < self.b.len() {
             match self.b[self.i] {
                 b'"' => {
-                    let s = std::str::from_utf8(&self.b[start..self.i])?.to_string();
                     self.i += 1;
-                    return Ok(s);
+                    return Ok(out);
                 }
-                b'\\' => return Err(anyhow!("escapes unsupported in this JSON subset")),
-                _ => self.i += 1,
+                b'\\' => {
+                    self.i += 1;
+                    let esc = *self
+                        .b
+                        .get(self.i)
+                        .ok_or_else(|| anyhow!("unterminated escape in JSON string"))?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        other => {
+                            return Err(anyhow!(
+                                "unsupported escape \\{:?} in JSON string",
+                                other as char
+                            ))
+                        }
+                    }
+                }
+                _ => {
+                    // Copy a full UTF-8 scalar, not byte-by-byte, so
+                    // multi-byte content survives intact.
+                    let rest = std::str::from_utf8(&self.b[self.i..])?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
             }
         }
         Err(anyhow!("unterminated JSON string"))
     }
 
+    /// Parse the 4 hex digits after `\u` (the `\u` itself is consumed).
+    /// UTF-16 surrogate pairs (`\uD83D\uDE00`) are combined.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        if (0xD800..0xDC00).contains(&hi) {
+            ensure!(
+                self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u'),
+                "unpaired UTF-16 high surrogate in JSON string"
+            );
+            self.i += 2;
+            let lo = self.hex4()?;
+            ensure!(
+                (0xDC00..0xE000).contains(&lo),
+                "invalid UTF-16 low surrogate in JSON string"
+            );
+            let code = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+            return char::from_u32(code).ok_or_else(|| anyhow!("invalid surrogate pair"));
+        }
+        ensure!(!(0xDC00..0xE000).contains(&hi), "unpaired UTF-16 low surrogate");
+        char::from_u32(hi).ok_or_else(|| anyhow!("invalid \\u escape"))
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        ensure!(self.i + 4 <= self.b.len(), "truncated \\u escape");
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        self.i += 4;
+        u32::from_str_radix(s, 16).map_err(|_| anyhow!("non-hex \\u escape {:?}", s))
+    }
+
     fn number(&mut self) -> Result<Json> {
         let start = self.i;
+        let mut exact = true; // digits only => keep as u64
+        if self.b.get(self.i) == Some(&b'-') {
+            exact = false;
+            self.i += 1;
+        }
         while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
             self.i += 1;
         }
+        if self.b.get(self.i) == Some(&b'.') {
+            exact = false;
+            self.i += 1;
+            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
+        if matches!(self.b.get(self.i), Some(&b'e') | Some(&b'E')) {
+            exact = false;
+            self.i += 1;
+            if matches!(self.b.get(self.i), Some(&b'+') | Some(&b'-')) {
+                self.i += 1;
+            }
+            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
-        ensure!(!s.is_empty(), "empty JSON number");
-        Ok(Json::Num(s.parse()?))
+        ensure!(!s.is_empty() && s != "-", "empty JSON number");
+        if exact {
+            if let Ok(n) = s.parse::<u64>() {
+                return Ok(Json::Num(n));
+            }
+        }
+        Ok(Json::Float(s.parse::<f64>()?))
     }
 }
 
@@ -188,11 +378,66 @@ mod tests {
     }
 
     #[test]
+    fn parses_floats_and_negatives() {
+        let v = parse(r#"{"a": -1, "b": 1.5, "c": 2e3, "d": -0.25, "e": 7}"#).unwrap();
+        assert_eq!(v.get("a").and_then(Json::as_f64), Some(-1.0));
+        assert_eq!(v.get("b").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(v.get("c").and_then(Json::as_f64), Some(2000.0));
+        assert_eq!(v.get("d").and_then(Json::as_f64), Some(-0.25));
+        // Digit-only literals stay exact u64s, but as_f64 still reads them.
+        assert_eq!(v.get("e").and_then(Json::as_u64), Some(7));
+        assert_eq!(v.get("e").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(v.get("a").and_then(Json::as_u64), None);
+    }
+
+    #[test]
+    fn float_roundtrips_bit_exact() {
+        // {:?} on f64 is shortest-roundtrip, so render -> parse recovers
+        // the exact bits (the serve responses rely on the same property).
+        for x in [1.5e-300f64, -0.1, 3.141592653589793, 1e17 + 1.0] {
+            let v = parse(&Json::Float(x).render()).unwrap();
+            match v {
+                Json::Float(y) => assert_eq!(x.to_bits(), y.to_bits()),
+                other => panic!("expected Float, got {:?}", other),
+            }
+        }
+    }
+
+    #[test]
+    fn parses_string_escapes() {
+        let v = parse(r#"{"s": "a\"b\\c\nd\te\u0041", "t": "\ud83d\ude00"}"#).unwrap();
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("a\"b\\c\nd\teA"));
+        assert_eq!(v.get("t").and_then(Json::as_str), Some("\u{1F600}"));
+    }
+
+    #[test]
+    fn escape_writer_roundtrips_through_parser() {
+        let nasty = "quote\" slash\\ nl\n tab\t ctrl\u{0001} uni\u{1F600}";
+        let mut doc = String::from("{\"k\":\"");
+        escape_into(&mut doc, nasty);
+        doc.push_str("\"}");
+        let v = parse(&doc).unwrap();
+        assert_eq!(v.get("k").and_then(Json::as_str), Some(nasty));
+        assert_eq!(escaped("a\"b"), "a\\\"b");
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let src = r#"{"a":[1,2,{"b":"x\ny"}],"n":7,"f":-1.5}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(parse(&v.render()).unwrap(), v);
+        assert_eq!(v.render(), src);
+    }
+
+    #[test]
     fn rejects_out_of_subset_input() {
-        assert!(parse("{\"a\": -1}").is_err(), "negatives unsupported");
-        assert!(parse("{\"a\": 1.5}").is_err(), "floats unsupported");
-        assert!(parse("{\"a\": \"x\\n\"}").is_err(), "escapes unsupported");
+        assert!(parse("{\"a\": true}").is_err(), "booleans unsupported");
+        assert!(parse("{\"a\": null}").is_err(), "null unsupported");
+        assert!(parse("{\"a\": \"x\\q\"}").is_err(), "unknown escape");
+        assert!(parse("{\"a\": \"\\u12\"}").is_err(), "truncated \\u escape");
+        assert!(parse("{\"a\": \"\\ud800\"}").is_err(), "unpaired surrogate");
         assert!(parse("{} trailing").is_err());
+        assert!(parse("-").is_err());
         assert!(parse("").is_err());
     }
 }

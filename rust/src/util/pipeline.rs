@@ -120,6 +120,16 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// True once every sender has dropped AND the queue is drained —
+    /// i.e. `recv` would return `None` because the channel is finished,
+    /// not because a deadline passed. Disambiguates the two `None` cases
+    /// of [`Receiver::recv_deadline`] for callers that poll with short
+    /// deadlines (the serve path's cancellable waits).
+    pub fn is_disconnected(&self) -> bool {
+        let g = self.inner.0.lock().unwrap();
+        g.senders == 0 && g.queue.is_empty()
+    }
+
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Option<T> {
         let (lock, not_full, _) = &*self.inner;

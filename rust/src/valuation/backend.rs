@@ -45,11 +45,14 @@
 //! [`ValuationError`] splits failures by who must act: `InvalidConfig`
 //! (fix the construction call), `StoreOpen` (fix the store directory),
 //! `BadQuery` (fix the request), `QueryPoisoned` (one query lost to a
-//! worker panic; the backend keeps serving), `Shutdown` (the backend is
-//! gone), `Internal` (a bug in the scan substrate).
+//! worker panic; the backend keeps serving), `Cancelled` (the waiter gave
+//! up — deadline or disconnect — and the pool skipped the rest of the
+//! query), `Shutdown` (the backend is gone), `Internal` (a bug in the
+//! scan substrate).
 
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::coordinator::metrics::Metrics;
 use crate::hessian::{BlockHessian, Preconditioner};
@@ -88,6 +91,10 @@ pub enum ValuationError {
     /// A pool worker panicked while scanning this query. Only this query
     /// failed — the backend keeps serving.
     QueryPoisoned { query_id: u64, message: String },
+    /// The waiter cancelled this query (per-request deadline expired, or
+    /// the serving client disconnected); the pool skips its unstarted
+    /// shard tasks. Only this query is affected.
+    Cancelled { query_id: u64 },
     /// The backend (or its scan pool) has shut down; no more admissions.
     Shutdown,
     /// Invariant violation inside the scan substrate (a bug, not a caller
@@ -107,6 +114,9 @@ impl std::fmt::Display for ValuationError {
                 f,
                 "scan pool query {query_id}: shard scan task panicked: {message}"
             ),
+            ValuationError::Cancelled { query_id } => {
+                write!(f, "scan pool query {query_id}: cancelled by the waiter")
+            }
             ValuationError::Shutdown => write!(f, "valuation backend is shut down"),
             ValuationError::Internal(m) => write!(f, "internal valuation error: {m}"),
         }
@@ -383,6 +393,26 @@ impl PendingScores {
             Pending::Ready(results, report) => Ok((results, report)),
             Pending::Merge(p) => p.finish(),
             Pending::Rescore(p) => p.finish(),
+        }
+    }
+
+    /// Cancellable [`wait_with_report`](Self::wait_with_report): while a
+    /// pool scan is in flight, `should_cancel` is re-checked every `poll`
+    /// interval; when it reports true the query is cancelled (the pool
+    /// skips its unstarted shard tasks, counted as `tasks_cancelled`) and
+    /// [`ValuationError::Cancelled`] is returned. The serve path's
+    /// deadline/disconnect seam. Already-computed results return
+    /// immediately without consulting `should_cancel` — an eagerly-scanned
+    /// query has no remaining work to cancel.
+    pub fn wait_with_report_until(
+        self,
+        should_cancel: &mut dyn FnMut() -> bool,
+        poll: Duration,
+    ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
+        match self.inner {
+            Pending::Ready(results, report) => Ok((results, report)),
+            Pending::Merge(p) => p.finish_until(should_cancel, poll),
+            Pending::Rescore(p) => p.finish_until(should_cancel, poll),
         }
     }
 }

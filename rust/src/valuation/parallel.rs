@@ -46,7 +46,7 @@ use super::backend::{
     BackendConfig, BackendKind, GradQuery, PendingScores, QueryRequest, ReportCtx,
     ScanBackend, ValuationError,
 };
-use super::pool::{auto_workers, ScanHandle};
+use super::pool::{auto_workers, ScanHandle, NEVER_POLL};
 use super::scorer::{Normalization, QueryResult};
 
 /// Resolve a `chunk_len` knob for an f32 scan: explicit values pass
@@ -247,7 +247,19 @@ impl PendingMerge {
     pub(crate) fn finish(
         self,
     ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
-        let shard_heaps = self.scan.wait()?;
+        self.finish_until(&mut || false, NEVER_POLL)
+    }
+
+    /// [`finish`](Self::finish) with a cancellation seam: while a pool
+    /// scan is in flight, `should_cancel` is re-checked every `poll`
+    /// interval; true cancels the query ([`ValuationError::Cancelled`],
+    /// unstarted shard tasks skipped). Eager scans merge immediately.
+    pub(crate) fn finish_until(
+        self,
+        should_cancel: &mut dyn FnMut() -> bool,
+        poll: std::time::Duration,
+    ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
+        let shard_heaps = self.scan.wait_until(should_cancel, poll)?;
         let scan_done = self.ctx.as_ref().map(|c| c.scan.elapsed_nanos()).unwrap_or(0);
         // Deterministic merge, shard-major: with TopK's total order the
         // merged set equals the sequential scan's set; into_sorted then

@@ -38,9 +38,9 @@
 //! metrics can report the worker count actually spawned.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::linalg::ScanScratch;
 use crate::util::pipeline::{bounded, Receiver, Sender};
@@ -61,6 +61,11 @@ pub fn auto_workers(requested: usize) -> usize {
     }
 }
 
+/// Poll interval for non-cancellable waits expressed through the
+/// cancellable seam (`should_cancel` is constantly false there, so the
+/// interval only bounds how often the loop wakes for nothing).
+pub(crate) const NEVER_POLL: Duration = Duration::from_secs(3600);
+
 /// One scan job's shard closure: (shard index, the running worker's
 /// reusable scratch) -> per-test-row heaps.
 type ScanFn = Box<dyn Fn(usize, &mut ScanScratch) -> Vec<TopK> + Send + Sync>;
@@ -79,6 +84,10 @@ struct JobInner {
     remaining: AtomicUsize,
     /// First panic message, if any task of this query panicked.
     failed: Mutex<Option<String>>,
+    /// Set (by [`PendingScan`]'s drop or an explicit cancel) when nobody
+    /// is waiting for this query anymore: workers fast-skip its unstarted
+    /// shard tasks instead of scanning an abandoned query to completion.
+    cancelled: Arc<AtomicBool>,
     done: Sender<Result<ShardHeaps, ValuationError>>,
     query_id: u64,
     metrics: Arc<PoolMetrics>,
@@ -86,9 +95,14 @@ struct JobInner {
 
 type Task = (Arc<JobInner>, usize);
 
-/// Handle to one submitted query's eventual result.
+/// Handle to one submitted query's eventual result. Dropping the handle
+/// without waiting **cancels** the query: workers skip its unstarted
+/// shard tasks (counted as [`PoolSnapshot::tasks_cancelled`]) instead of
+/// scanning an abandoned query to completion — the serve path's
+/// client-disconnect semantics.
 pub struct PendingScan {
     rx: Receiver<Result<ShardHeaps, ValuationError>>,
+    cancelled: Arc<AtomicBool>,
     query_id: u64,
 }
 
@@ -110,6 +124,42 @@ impl PendingScan {
             ))),
         }
     }
+
+    /// Like [`wait`](Self::wait), but re-checks `should_cancel` every
+    /// `poll` interval while the scan is in flight. When it reports true,
+    /// the query is cancelled (unstarted shard tasks will be skipped) and
+    /// [`ValuationError::Cancelled`] is returned — the serve path's
+    /// deadline/disconnect seam.
+    pub fn wait_until(
+        self,
+        should_cancel: &mut dyn FnMut() -> bool,
+        poll: Duration,
+    ) -> Result<ShardHeaps, ValuationError> {
+        loop {
+            if let Some(res) = self.rx.recv_deadline(Instant::now() + poll) {
+                return res;
+            }
+            if self.rx.is_disconnected() {
+                return Err(ValuationError::Internal(format!(
+                    "scan pool dropped query {} before completion",
+                    self.query_id
+                )));
+            }
+            if should_cancel() {
+                self.cancelled.store(true, Ordering::Release);
+                return Err(ValuationError::Cancelled { query_id: self.query_id });
+            }
+        }
+    }
+}
+
+impl Drop for PendingScan {
+    fn drop(&mut self) {
+        // Nobody can receive this query's result anymore — let workers
+        // skip whatever of it hasn't started. Harmless after a successful
+        // wait (every task is already accounted for by then).
+        self.cancelled.store(true, Ordering::Release);
+    }
 }
 
 /// A scan that is either already computed (per-query spawn path) or in
@@ -127,6 +177,19 @@ impl ScanHandle {
             ScanHandle::Pool(pending) => pending.wait(),
         }
     }
+
+    /// Cancellable wait: already-computed scans return immediately;
+    /// pooled scans poll `should_cancel` via [`PendingScan::wait_until`].
+    pub fn wait_until(
+        self,
+        should_cancel: &mut dyn FnMut() -> bool,
+        poll: Duration,
+    ) -> Result<ShardHeaps, ValuationError> {
+        match self {
+            ScanHandle::Ready(heaps) => Ok(heaps),
+            ScanHandle::Pool(pending) => pending.wait_until(should_cancel, poll),
+        }
+    }
 }
 
 /// Shared atomic counters (lock-free reads for snapshots).
@@ -137,6 +200,7 @@ struct PoolMetrics {
     tasks_completed: AtomicU64,
     tasks_failed: AtomicU64,
     tasks_skipped: AtomicU64,
+    tasks_cancelled: AtomicU64,
 }
 
 /// Point-in-time view of pool health (the serving dashboard's scan row).
@@ -155,6 +219,9 @@ pub struct PoolSnapshot {
     pub tasks_failed: u64,
     /// Tasks fast-skipped because their query had already failed.
     pub tasks_skipped: u64,
+    /// Tasks fast-skipped because their query was cancelled (the waiter
+    /// dropped its [`PendingScan`] — client disconnect, deadline expiry).
+    pub tasks_cancelled: u64,
     /// Per-worker busy seconds (time inside scan closures).
     pub busy_seconds: Vec<f64>,
     /// Per-worker scratch-buffer growth events. Saturates after the first
@@ -285,12 +352,13 @@ impl ScanPool {
     {
         let query_id = self.next_query.fetch_add(1, Ordering::Relaxed);
         let (done_tx, done_rx) = bounded::<Result<ShardHeaps, ValuationError>>(1);
+        let cancelled = Arc::new(AtomicBool::new(false));
         if n_shards == 0 {
             // Nothing to scan: complete immediately, but still count the
             // query so PoolSnapshot totals match submit() calls.
             self.metrics.queries_submitted.fetch_add(1, Ordering::Relaxed);
             let _ = done_tx.send(Ok(Vec::new()));
-            return Ok(PendingScan { rx: done_rx, query_id });
+            return Ok(PendingScan { rx: done_rx, cancelled, query_id });
         }
         let job = Arc::new(JobInner {
             scan: Box::new(scan),
@@ -298,6 +366,7 @@ impl ScanPool {
             slots: Mutex::new((0..n_shards).map(|_| None).collect()),
             remaining: AtomicUsize::new(n_shards),
             failed: Mutex::new(None),
+            cancelled: cancelled.clone(),
             done: done_tx,
             query_id,
             metrics: self.metrics.clone(),
@@ -312,7 +381,7 @@ impl ScanPool {
             self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
             return Err(ValuationError::Internal("scan pool dispatcher died".into()));
         }
-        Ok(PendingScan { rx: done_rx, query_id })
+        Ok(PendingScan { rx: done_rx, cancelled, query_id })
     }
 
     pub fn snapshot(&self) -> PoolSnapshot {
@@ -324,6 +393,7 @@ impl ScanPool {
             tasks_completed: self.metrics.tasks_completed.load(Ordering::Relaxed),
             tasks_failed: self.metrics.tasks_failed.load(Ordering::Relaxed),
             tasks_skipped: self.metrics.tasks_skipped.load(Ordering::Relaxed),
+            tasks_cancelled: self.metrics.tasks_cancelled.load(Ordering::Relaxed),
             busy_seconds: self
                 .busy
                 .iter()
@@ -401,7 +471,11 @@ fn dispatch(job_rx: Receiver<Arc<JobInner>>, task_tx: Sender<Task>) {
 /// this was its last outstanding task.
 fn run_task(job: &Arc<JobInner>, si: usize, busy: &AtomicU64, scratch: &mut ScanScratch) {
     let poisoned = job.failed.lock().unwrap().is_some();
-    if poisoned {
+    if job.cancelled.load(Ordering::Acquire) {
+        // Nobody is waiting for this query anymore (disconnect/deadline):
+        // don't scan an abandoned query to completion.
+        job.metrics.tasks_cancelled.fetch_add(1, Ordering::Relaxed);
+    } else if poisoned {
         // Query already failed: don't burn pool time on its other shards.
         job.metrics.tasks_skipped.fetch_add(1, Ordering::Relaxed);
     } else {
@@ -430,30 +504,32 @@ fn run_task(job: &Arc<JobInner>, si: usize, busy: &AtomicU64, scratch: &mut Scan
 /// submitter. Failures never escape the query that caused them.
 fn finish(job: &Arc<JobInner>) {
     let failed = job.failed.lock().unwrap().take();
-    let res = match failed {
-        Some(message) => {
-            Err(ValuationError::QueryPoisoned { query_id: job.query_id, message })
-        }
-        None => {
-            let mut slots = job.slots.lock().unwrap();
-            let mut out = Vec::with_capacity(slots.len());
-            let mut missing = None;
-            for (si, slot) in slots.iter_mut().enumerate() {
-                match slot.take() {
-                    Some(heaps) => out.push(heaps),
-                    None => {
-                        missing = Some(si);
-                        break;
-                    }
+    let res = if job.cancelled.load(Ordering::Acquire) {
+        // Short-circuit: skipped shards left empty slots, and the waiter
+        // (if any is still racing the cancel) must see Cancelled, not the
+        // "pool bug" missing-slot error.
+        Err(ValuationError::Cancelled { query_id: job.query_id })
+    } else if let Some(message) = failed {
+        Err(ValuationError::QueryPoisoned { query_id: job.query_id, message })
+    } else {
+        let mut slots = job.slots.lock().unwrap();
+        let mut out = Vec::with_capacity(slots.len());
+        let mut missing = None;
+        for (si, slot) in slots.iter_mut().enumerate() {
+            match slot.take() {
+                Some(heaps) => out.push(heaps),
+                None => {
+                    missing = Some(si);
+                    break;
                 }
             }
-            match missing {
-                Some(si) => Err(ValuationError::Internal(format!(
-                    "scan pool query {}: shard {si} produced no result (pool bug)",
-                    job.query_id
-                ))),
-                None => Ok(out),
-            }
+        }
+        match missing {
+            Some(si) => Err(ValuationError::Internal(format!(
+                "scan pool query {}: shard {si} produced no result (pool bug)",
+                job.query_id
+            ))),
+            None => Ok(out),
         }
     };
     job.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
@@ -554,5 +630,80 @@ mod tests {
         assert_eq!(snap.tasks_failed, 1);
         assert_eq!(snap.in_flight, 0);
         pool.shutdown();
+    }
+
+    /// Block the single worker on one query so a second query's tasks
+    /// provably cannot start; the assertions are then deterministic.
+    fn blocking_query(
+        pool: &ScanPool,
+        gate: &Arc<AtomicBool>,
+    ) -> PendingScan {
+        let g = gate.clone();
+        pool.submit(1, move |_| {
+            while !g.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            one_heap(0.0, 0)
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn dropping_handle_cancels_unstarted_tasks() {
+        let pool = ScanPool::spawn(1);
+        let gate = Arc::new(AtomicBool::new(false));
+        let blocker = blocking_query(&pool, &gate);
+        let doomed = pool.submit(4, |si| one_heap(1.0, si as u64)).unwrap();
+        // The worker is parked inside the blocker's only shard, so none of
+        // the doomed query's 4 tasks have started; dropping the handle
+        // must make the worker skip all of them.
+        drop(doomed);
+        gate.store(true, Ordering::Release);
+        assert_eq!(blocker.wait().unwrap().len(), 1);
+        pool.shutdown(); // drains the skipped tasks
+        let snap = pool.snapshot();
+        assert_eq!(snap.tasks_cancelled, 4);
+        assert_eq!(snap.tasks_completed, 1);
+        assert_eq!(snap.in_flight, 0);
+    }
+
+    #[test]
+    fn wait_until_cancels_on_signal() {
+        let pool = ScanPool::spawn(1);
+        let gate = Arc::new(AtomicBool::new(false));
+        let blocker = blocking_query(&pool, &gate);
+        let doomed = pool.submit(3, |si| one_heap(1.0, si as u64)).unwrap();
+        let mut polls = 0u32;
+        let err = doomed
+            .wait_until(
+                &mut || {
+                    polls += 1;
+                    polls >= 2
+                },
+                Duration::from_millis(5),
+            )
+            .unwrap_err();
+        assert!(
+            matches!(err, ValuationError::Cancelled { .. }),
+            "expected Cancelled, got {err:?}"
+        );
+        gate.store(true, Ordering::Release);
+        assert_eq!(blocker.wait().unwrap().len(), 1);
+        pool.shutdown();
+        let snap = pool.snapshot();
+        assert_eq!(snap.tasks_cancelled, 3);
+        assert_eq!(snap.in_flight, 0);
+    }
+
+    #[test]
+    fn wait_until_returns_result_without_cancelling() {
+        let pool = ScanPool::spawn(2);
+        let pending = pool.submit(5, |si| one_heap(si as f64, si as u64)).unwrap();
+        let out = pending
+            .wait_until(&mut || false, Duration::from_millis(2))
+            .unwrap();
+        assert_eq!(out.len(), 5);
+        pool.shutdown();
+        assert_eq!(pool.snapshot().tasks_cancelled, 0);
     }
 }

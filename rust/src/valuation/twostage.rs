@@ -50,7 +50,7 @@ use super::backend::{
 use super::parallel::{
     cached_self_influences, resolve_chunk_len_self_inf, resolve_workers, scatter_gather,
 };
-use super::pool::ScanHandle;
+use super::pool::{ScanHandle, NEVER_POLL};
 use super::scorer::{Normalization, QueryResult};
 
 /// Two-stage influence scorer: quantized coarse scan + exact rescore.
@@ -294,8 +294,28 @@ impl PendingRescore {
     pub(crate) fn finish(
         self,
     ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
+        self.finish_until(&mut || false, NEVER_POLL)
+    }
+
+    /// [`finish`](Self::finish) with a cancellation seam: `should_cancel`
+    /// is re-checked every `poll` interval while the stage-1 scan is in
+    /// flight, and once more before starting the stage-2 rescore (the
+    /// rescore runs on the calling thread, so a deadline that expired
+    /// during stage 1 should not buy a full rescore it will discard).
+    pub(crate) fn finish_until(
+        self,
+        should_cancel: &mut dyn FnMut() -> bool,
+        poll: std::time::Duration,
+    ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
         let k = self.exact.k();
-        let shard_pools = self.scan.wait()?;
+        let query_id = match &self.scan {
+            ScanHandle::Pool(p) => p.query_id(),
+            ScanHandle::Ready(_) => 0,
+        };
+        let shard_pools = self.scan.wait_until(should_cancel, poll)?;
+        if should_cancel() {
+            return Err(ValuationError::Cancelled { query_id });
+        }
         let scan_done = self.ctx.as_ref().map(|c| c.scan.elapsed_nanos()).unwrap_or(0);
         let mut pools: Vec<TopK> = (0..self.nt).map(|_| TopK::new(self.pool_size)).collect();
         for heaps in shard_pools {

@@ -1,0 +1,365 @@
+//! Socket-level integration tests for `logra serve` — real TCP
+//! connections against a [`Server`] bound to port 0.
+//!
+//! Load-bearing properties of the serving layer:
+//!
+//! 1. **Wire fidelity**: a `POST /query` response re-parses to the exact
+//!    bits `Valuator::query` produces locally (ids AND score bits) and
+//!    carries the full QueryReport breakdown.
+//! 2. **Malformed input degrades structurally**: bad bodies get a 400
+//!    with a `{"error":{...}}` JSON body — no hang, no panic — and the
+//!    keep-alive connection keeps serving afterwards.
+//! 3. **Deadlines are enforced**: a query whose deadline expires while
+//!    queued behind heavy work gets a 504 and its unstarted shard tasks
+//!    are skipped (`tasks_cancelled` rises on the pool).
+//! 4. **Disconnects cancel**: dropping the connection mid-query cancels
+//!    the query the same way, observable as `logra_serve_disconnects_total`
+//!    and `logra_pool_tasks_cancelled_total` on `/metrics`.
+//! 5. **`/metrics` scrapes**: the exposition carries the shared, pool,
+//!    and `logra_serve_*` families; `/healthz` and `/debug/trace` parse.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use logra::coordinator::Metrics;
+use logra::serve::{http, loadgen, ServeConfig, Server};
+use logra::store::{shard_store, GradStoreWriter};
+use logra::util::json::{self, Json};
+use logra::util::rng::Pcg32;
+use logra::valuation::{PoolMode, QueryRequest, ScanBackend, Valuator};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-serve-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write an n x k store and shard it: cancellation needs a pool-backed
+/// (sharded) fabric — a 1-shard store resolves to the eager sequential
+/// engine, which has nothing left to cancel by the time a client waits.
+fn sharded_store(name: &str, n: usize, k: usize, shards: usize, seed: u64) -> PathBuf {
+    let src = tmpdir(&format!("{name}-src"));
+    let mut rng = Pcg32::seeded(seed);
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let ids: Vec<u64> = (0..n as u64).map(|i| i * 3 + 5).collect();
+    let mut w = GradStoreWriter::create(&src, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    let dir = tmpdir(name);
+    shard_store(&src, &dir, shards).unwrap();
+    dir
+}
+
+/// Boot a server on a free port over a pool-backed valuator; the test
+/// keeps its own `Arc<Valuator>` handle to query locally and to read the
+/// pool snapshot.
+fn start_server(
+    dir: &Path,
+    workers: usize,
+    tweak: impl FnOnce(&mut ServeConfig),
+) -> (Server, Arc<Valuator>, String) {
+    let metrics = Arc::new(Metrics::default());
+    let valuator = Arc::new(
+        Valuator::open(dir)
+            .unwrap()
+            .fit_from_store(0.1)
+            .pool(PoolMode::Auto)
+            .workers(workers)
+            .metrics(metrics.clone())
+            .build()
+            .unwrap(),
+    );
+    let mut cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() };
+    tweak(&mut cfg);
+    let server = Server::start(valuator.clone(), metrics, cfg).unwrap();
+    let addr = server.addr().to_string();
+    (server, valuator, addr)
+}
+
+/// `{"gradient": [...], "nt": N, "topk": 8}` with seeded values, plus an
+/// optional `"deadline_ms"`.
+fn gradient_body(nt: usize, k: usize, seed: u64, deadline_ms: Option<u64>) -> String {
+    let mut rng = Pcg32::seeded(seed);
+    let mut g = vec![0.0f32; nt * k];
+    rng.fill_normal(&mut g, 1.0);
+    let mut pairs = vec![
+        (
+            "gradient".to_string(),
+            Json::Arr(g.iter().map(|&x| Json::Float(x as f64)).collect()),
+        ),
+        ("nt".to_string(), Json::Num(nt as u64)),
+        ("topk".to_string(), Json::Num(8)),
+    ];
+    if let Some(d) = deadline_ms {
+        pairs.push(("deadline_ms".to_string(), Json::Num(d)));
+    }
+    Json::Obj(pairs).render()
+}
+
+/// First sample value of an unlabelled family in an exposition body.
+fn metric_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        let rest = l.strip_prefix(name)?;
+        let rest = rest.strip_prefix(' ')?;
+        rest.trim().parse().ok()
+    })
+}
+
+#[test]
+fn query_roundtrip_bit_identical_to_valuator() {
+    let dir = sharded_store("roundtrip", 96, 8, 4, 40);
+    let (_server, valuator, addr) = start_server(&dir, 2, |_| {});
+
+    let res =
+        loadgen::http_request(&addr, "POST", "/query", br#"{"row": 3, "topk": 7}"#).unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+    let v = json::parse(&res.body_str()).unwrap();
+    assert_eq!(v.get("backend").and_then(Json::as_str), Some(valuator.kind().name()));
+    assert!(v.get("request_id").and_then(Json::as_u64).unwrap() >= 1);
+
+    // Local oracle: the same facade, the same request shape.
+    let g = valuator.gradient_row(3).unwrap();
+    let want = valuator.query(QueryRequest::gradients(g, 1, 7)).unwrap();
+    let r0 = &v.get("results").and_then(Json::as_arr).unwrap()[0];
+    let ids: Vec<u64> = r0
+        .get("ids")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_u64().unwrap())
+        .collect();
+    let score_bits: Vec<u64> = r0
+        .get("scores")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap().to_bits())
+        .collect();
+    let want_ids: Vec<u64> = want[0].top.iter().map(|&(_, id)| id).collect();
+    let want_bits: Vec<u64> = want[0].top.iter().map(|&(s, _)| s.to_bits()).collect();
+    assert_eq!(ids, want_ids, "served ids diverge from Valuator::query");
+    assert_eq!(score_bits, want_bits, "served scores are not bit-identical");
+
+    // The report rides along: full stage breakdown, correct shard count.
+    let rep = v.get("report").expect("response must carry the QueryReport");
+    assert_eq!(rep.get("shards").and_then(Json::as_u64), Some(4));
+    assert_eq!(rep.get("backend").and_then(Json::as_str), Some(valuator.kind().name()));
+    assert!(rep.get("total_nanos").and_then(Json::as_u64).unwrap() > 0);
+    assert!(rep.get("rows_scanned").and_then(Json::as_u64).unwrap() >= 96);
+}
+
+#[test]
+fn malformed_bodies_get_structured_errors_on_a_surviving_connection() {
+    let dir = sharded_store("malformed", 48, 8, 2, 41);
+    let (_server, _valuator, addr) = start_server(&dir, 1, |_| {});
+
+    // ONE keep-alive connection for the whole exchange: every 400 must
+    // leave it serving.
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    for (body, frag) in [
+        (&b"{not json"[..], "invalid JSON"),
+        (&b"[1, 2]"[..], "JSON object"),
+        (&b"{}"[..], "\"row\" or \"gradient\""),
+        (&br#"{"row": 999999}"#[..], "out of range"),
+        (&br#"{"row": 1, "topk": 0}"#[..], "topk"),
+        (&br#"{"row": 1, "norm": "weird"}"#[..], "normalization"),
+    ] {
+        http::write_request(&mut writer, "POST", "/query", body).unwrap();
+        let res = http::read_response(&mut reader).unwrap();
+        assert_eq!(res.status, 400, "body {body:?}: {}", res.body_str());
+        let v = json::parse(&res.body_str())
+            .unwrap_or_else(|e| panic!("400 body must be JSON, got {e}: {}", res.body_str()));
+        let err = v.get("error").expect("400 body must carry an error object");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some("bad_request"));
+        let msg = err.get("message").and_then(Json::as_str).unwrap();
+        assert!(msg.contains(frag), "message {msg:?} missing {frag:?}");
+    }
+
+    // Unknown routes and wrong methods are structured too.
+    http::write_request(&mut writer, "GET", "/nope", b"").unwrap();
+    let res = http::read_response(&mut reader).unwrap();
+    assert_eq!(res.status, 404);
+    assert!(res.body_str().contains("not_found"));
+    http::write_request(&mut writer, "GET", "/query", b"").unwrap();
+    let res = http::read_response(&mut reader).unwrap();
+    assert_eq!(res.status, 405);
+
+    // ...and the same connection still answers a good query.
+    http::write_request(&mut writer, "POST", "/query", br#"{"row": 0}"#).unwrap();
+    let res = http::read_response(&mut reader).unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+    json::parse(&res.body_str()).unwrap().get("results").expect("scored response");
+}
+
+#[test]
+fn metrics_healthz_and_trace_scrape() {
+    let dir = sharded_store("scrape", 64, 8, 4, 42);
+    let (_server, _valuator, addr) = start_server(&dir, 2, |_| {});
+
+    for row in [0u64, 1, 2] {
+        let body = format!("{{\"row\":{row}}}");
+        let res = loadgen::http_request(&addr, "POST", "/query", body.as_bytes()).unwrap();
+        assert_eq!(res.status, 200, "{}", res.body_str());
+    }
+
+    let res = loadgen::http_request(&addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(res.status, 200);
+    assert!(
+        res.header("content-type").is_some_and(|c| c.starts_with("text/plain")),
+        "exposition content type: {:?}",
+        res.header("content-type")
+    );
+    let text = res.body_str();
+    for family in [
+        "logra_requests_total",
+        "logra_query_latency_seconds",
+        "logra_pool_tasks_completed_total",
+        "logra_pool_tasks_cancelled_total",
+        "logra_store_rows",
+        "logra_serve_requests_total",
+        "logra_serve_queries_total",
+        "logra_serve_rejected_total",
+        "logra_serve_deadline_expired_total",
+        "logra_serve_disconnects_total",
+        "logra_serve_in_flight",
+    ] {
+        assert!(text.contains(family), "exposition missing {family}");
+    }
+    assert_eq!(metric_value(&text, "logra_serve_queries_total"), Some(3.0));
+    assert_eq!(metric_value(&text, "logra_store_rows"), Some(64.0));
+
+    let res = loadgen::http_request(&addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(res.status, 200);
+    let h = json::parse(&res.body_str()).unwrap();
+    assert_eq!(h.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(h.get("rows").and_then(Json::as_u64), Some(64));
+    let pool = h.get("pool").expect("pool-backed server must report pool health");
+    assert!(pool.get("tasks_completed").and_then(Json::as_u64).unwrap() > 0);
+
+    let res = loadgen::http_request(&addr, "GET", "/debug/trace", b"").unwrap();
+    assert_eq!(res.status, 200);
+    let t = json::parse(&res.body_str()).unwrap();
+    let events = t.get("traceEvents").and_then(Json::as_arr).expect("chrome trace shape");
+    assert!(!events.is_empty(), "three queries must leave trace spans");
+}
+
+/// Heavy fabric + a single pool worker: enough queued scan work that a
+/// tiny deadline reliably expires while its shard tasks are unstarted.
+const HEAVY_N: usize = 4096;
+const HEAVY_K: usize = 128;
+const HEAVY_SHARDS: usize = 16;
+const HEAVY_NT: usize = 32;
+
+fn saturate(addr: &str, clients: usize) -> Vec<std::thread::JoinHandle<u16>> {
+    (0..clients)
+        .map(|c| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let body = gradient_body(HEAVY_NT, HEAVY_K, 1000 + c as u64, None);
+                loadgen::http_request(&addr, "POST", "/query", body.as_bytes())
+                    .map(|r| r.status)
+                    .unwrap_or(0)
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn deadline_expiry_returns_504_and_cancels_pool_tasks() {
+    let dir = sharded_store("deadline", HEAVY_N, HEAVY_K, HEAVY_SHARDS, 43);
+    let (_server, valuator, addr) = start_server(&dir, 1, |cfg| {
+        cfg.max_in_flight = 64;
+        cfg.poll_interval = Duration::from_millis(1);
+    });
+
+    // Fill the single worker's queue with heavy queries, then ask for one
+    // with a 1 ms deadline: its tasks sit behind ~hundreds of heavy shard
+    // scans, so the deadline expires at the first poll.
+    let background = saturate(&addr, 12);
+    // Long enough for the clients to be admitted, short enough that the
+    // single worker still has a deep queue when the victim arrives.
+    std::thread::sleep(Duration::from_millis(30));
+    let body = gradient_body(HEAVY_NT, HEAVY_K, 2000, Some(1));
+    let res = loadgen::http_request(&addr, "POST", "/query", body.as_bytes()).unwrap();
+    assert_eq!(res.status, 504, "{}", res.body_str());
+    let v = json::parse(&res.body_str()).unwrap();
+    assert_eq!(
+        v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("deadline_expired")
+    );
+
+    // The pool must skip the cancelled query's unstarted tasks as the
+    // worker drains past them.
+    let pool = valuator.scan_pool().expect("sharded fabric is pool-backed");
+    let t0 = Instant::now();
+    while pool.snapshot().tasks_cancelled == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "tasks_cancelled never rose: {:?}",
+            pool.snapshot()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    for h in background {
+        assert_eq!(h.join().unwrap(), 200, "background query failed");
+    }
+    let m = loadgen::http_request(&addr, "GET", "/metrics", b"").unwrap();
+    let text = m.body_str();
+    assert!(metric_value(&text, "logra_serve_deadline_expired_total").unwrap() >= 1.0);
+    assert!(metric_value(&text, "logra_pool_tasks_cancelled_total").unwrap() >= 1.0);
+}
+
+#[test]
+fn client_disconnect_cancels_in_flight_query() {
+    let dir = sharded_store("disconnect", HEAVY_N, HEAVY_K, HEAVY_SHARDS, 44);
+    let (_server, valuator, addr) = start_server(&dir, 1, |cfg| {
+        cfg.max_in_flight = 64;
+        cfg.poll_interval = Duration::from_millis(1);
+    });
+
+    let background = saturate(&addr, 8);
+    std::thread::sleep(Duration::from_millis(30));
+
+    // Send a heavy query, then vanish without reading the response.
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let body = gradient_body(HEAVY_NT, HEAVY_K, 3000, None);
+        http::write_request(&mut writer, "POST", "/query", body.as_bytes()).unwrap();
+        // Both halves drop here: the server's next poll peeks EOF.
+    }
+
+    // The disconnect is observable on /metrics, and the orphaned query's
+    // unstarted shard tasks get skipped.
+    let pool = valuator.scan_pool().expect("sharded fabric is pool-backed");
+    let t0 = Instant::now();
+    loop {
+        let m = loadgen::http_request(&addr, "GET", "/metrics", b"").unwrap();
+        let text = m.body_str();
+        let disconnects =
+            metric_value(&text, "logra_serve_disconnects_total").unwrap_or(0.0);
+        if disconnects >= 1.0 && pool.snapshot().tasks_cancelled > 0 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "disconnect never cancelled: disconnects={disconnects} pool={:?}",
+            pool.snapshot()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    for h in background {
+        assert_eq!(h.join().unwrap(), 200, "background query failed");
+    }
+}

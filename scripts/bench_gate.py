@@ -10,8 +10,10 @@ BENCH_GATE_THRESHOLD env var).
 Two kinds of checks:
 
 1. Cross-run absolute floors (machine-sensitive): rows/s of the f32,
-   quantized, and two-stage scans plus pool queries/s at concurrency 8,
-   each gated at (1 - threshold) * baseline. The committed seed baseline
+   quantized, and two-stage scans, pool queries/s at concurrency 8, and
+   the end-to-end `logra serve` SLO at concurrency 8 (serve_c8_qps floor,
+   serve_c8_p50_ms/p99_ms ceilings, written by `logra loadgen
+   --bench-out`), each gated at (1 - threshold) * baseline. The committed seed baseline
    is deliberately CONSERVATIVE (set well below typical CI-runner
    throughput) so it only catches catastrophic regressions until someone
    re-baselines on real CI hardware.
@@ -47,6 +49,7 @@ GATED_KEYS = [
     "quant_rows_per_s",
     "two_stage_rows_per_s",
     "pool_c8_qps",
+    "serve_c8_qps",
 ]
 
 # Latency metrics gated the other way around (lower is better): the
@@ -56,6 +59,8 @@ GATED_KEYS = [
 LATENCY_GATED_KEYS = [
     "pool_c8_p50_ms",
     "pool_c8_p99_ms",
+    "serve_c8_p50_ms",
+    "serve_c8_p99_ms",
 ]
 
 # Pool-vs-spawn floor at equal worker count. The microbench's pool-vs-
