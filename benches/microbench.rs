@@ -6,13 +6,15 @@
 //! (DESIGN.md §7).
 //!
 //! Emits `BENCH_scan.json` (rows/s for the f32 scan, the quantized scan,
-//! and the two-stage engine; kernel-level rows/s for the dispatched f32
-//! and int8 scan microkernels vs the naive reference kernels they
-//! replaced; queries/s for the pool at concurrency 1/4/8 vs per-query
-//! thread spawn, plus the pooled concurrency-8 p50/p99 query latency
-//! read from the observability histograms; storage bytes per codec) so
-//! the scan perf trajectory is tracked across PRs — CI gates on it
-//! against `BENCH_baseline.json` (see `scripts/bench_gate.py`).
+//! the two-stage engine, and the IVF engine at a pruned probe; IVF
+//! recall@10 on a clustered corpus plus a full-probe bit-identity bit;
+//! kernel-level rows/s for the dispatched f32 and int8 scan microkernels
+//! vs the naive reference kernels they replaced; queries/s for the pool
+//! at concurrency 1/4/8 vs per-query thread spawn, plus the pooled
+//! concurrency-8 p50/p99 query latency read from the observability
+//! histograms; storage bytes per codec) so the scan perf trajectory is
+//! tracked across PRs — CI gates on it against `BENCH_baseline.json`
+//! (see `scripts/bench_gate.py`).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -21,14 +23,15 @@ use logra::coordinator::Metrics;
 use logra::hessian::BlockHessian;
 use logra::linalg::{eigh, Matrix};
 use logra::store::{
-    quantize_store, shard_store, GradStore, GradStoreWriter, QuantShardedStore, ShardedStore,
+    build_index, quantize_store, shard_store, GradStore, GradStoreWriter, IvfIndex,
+    QuantShardedStore, ShardedStore,
 };
 use logra::util::bench::{bench, report_metric, BenchOpts};
 use logra::util::rng::Pcg32;
 use logra::util::topk::TopK;
 use logra::valuation::{
-    BackendConfig, Normalization, ParallelQueryEngine, QueryEngine, QueryRequest, ScanBackend,
-    ScanPool, TwoStageEngine,
+    BackendConfig, IvfEngine, Normalization, ParallelQueryEngine, QueryEngine, QueryRequest,
+    ScanBackend, ScanPool, TwoStageEngine,
 };
 
 fn main() {
@@ -404,6 +407,140 @@ fn main() {
         );
         pool.shutdown();
 
+        // IVF stage-0 probe: query throughput at nprobe 4/16 on the same
+        // corpus and queries as the scans above, plus the full-probe
+        // bit-identity bit the CI gate holds at 1.0.
+        build_index(&quant_dir, 16, 42).unwrap();
+        let index = Arc::new(IvfIndex::open(&quant_dir, &quant).unwrap());
+        let ivf_cfg = |nprobe: usize| BackendConfig {
+            workers: 1,
+            chunk_len: 512,
+            rescore_factor: 4,
+            nprobe,
+            ..Default::default()
+        };
+        let ivf = IvfEngine::new(
+            quant.clone(),
+            index.clone(),
+            store.clone(),
+            precond.clone(),
+            ivf_cfg(4),
+        )
+        .unwrap();
+        let ann_mean = bench(
+            "store.scan_ivf.np4",
+            BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 30.0 },
+            || {
+                let out = ivf.query(QueryRequest::gradients(test.clone(), nt, topk)).unwrap();
+                std::hint::black_box(&out);
+            },
+        )
+        .summary()
+        .mean;
+        let ann_rows_per_s = rows as f64 / ann_mean;
+        report_metric("micro.store.ivf.rows_per_s", ann_rows_per_s, "rows/s at np4/16");
+        report_metric("micro.store.ivf.speedup_vs_two_stage", two_stage_mean / ann_mean, "x");
+
+        let full = IvfEngine::new(
+            quant.clone(),
+            index.clone(),
+            store.clone(),
+            precond.clone(),
+            ivf_cfg(16),
+        )
+        .unwrap();
+        let two = TwoStageEngine::new(
+            quant.clone(),
+            store.clone(),
+            precond.clone(),
+            ivf_cfg(16),
+        )
+        .unwrap();
+        let want = two.query(QueryRequest::gradients(test.clone(), nt, topk)).unwrap();
+        let got = full.query(QueryRequest::gradients(test.clone(), nt, topk)).unwrap();
+        let identical = got.iter().zip(&want).all(|(a, b)| a.top == b.top);
+        let ann_full_probe_bitident = if identical { 1.0f64 } else { 0.0 };
+        report_metric("micro.store.ivf.full_probe_bitident", ann_full_probe_bitident, "1=yes");
+
+        // Recall@10 at nprobe 2/8 on a CLUSTERED corpus vs the exact scan
+        // — the geometry IVF exists for; the gaussian corpus above has no
+        // cluster structure a pruned probe could respect.
+        let ann_recall_at_10 = {
+            let csrc = std::env::temp_dir().join("logra-microbench-ivf-src");
+            let _ = std::fs::remove_dir_all(&csrc);
+            let ck = 32usize;
+            let centers = 8usize;
+            let per_center = 100usize;
+            let mut cvecs = vec![0.0f32; centers * ck];
+            rng.fill_normal(&mut cvecs, 4.0);
+            let mut w = GradStoreWriter::create(&csrc, ck).unwrap();
+            let mut row = vec![0.0f32; ck];
+            let mut noise = vec![0.0f32; ck];
+            for c in 0..centers {
+                for r in 0..per_center {
+                    rng.fill_normal(&mut noise, 0.2);
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = cvecs[c * ck + j] + noise[j];
+                    }
+                    w.append(&[(c * per_center + r) as u64], &row).unwrap();
+                }
+            }
+            w.finalize().unwrap();
+            let csharded = std::env::temp_dir().join("logra-microbench-ivf-sharded");
+            let _ = std::fs::remove_dir_all(&csharded);
+            shard_store(&csrc, &csharded, 2).unwrap();
+            let cquant = std::env::temp_dir().join("logra-microbench-ivf-q8");
+            let _ = std::fs::remove_dir_all(&cquant);
+            quantize_store(&csharded, &cquant).unwrap();
+            build_index(&cquant, centers, 42).unwrap();
+            let cexact = Arc::new(ShardedStore::open(&csharded).unwrap());
+            let cq = Arc::new(QuantShardedStore::open(&cquant).unwrap());
+            let cindex = Arc::new(IvfIndex::open(&cquant, &cq).unwrap());
+            // Near-isotropic preconditioner so the cluster geometry
+            // survives preconditioning.
+            let mut iso = vec![0.0f32; 256 * ck];
+            rng.fill_normal(&mut iso, 1.0);
+            let mut ch = BlockHessian::single_block(ck);
+            ch.accumulate(&iso, 256);
+            let cprecond = Arc::new(ch.preconditioner(0.1).unwrap());
+            let reference = ParallelQueryEngine::new(
+                cexact.clone(),
+                cprecond.clone(),
+                BackendConfig { chunk_len: 512, ..Default::default() },
+            );
+            let pruned = IvfEngine::new(
+                cq,
+                cindex,
+                cexact,
+                cprecond,
+                BackendConfig {
+                    chunk_len: 512,
+                    rescore_factor: 4,
+                    nprobe: 2,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let mut hits = 0usize;
+            let mut total = 0usize;
+            for c in 0..centers {
+                for _ in 0..2 {
+                    rng.fill_normal(&mut noise, 0.2);
+                    let q: Vec<f32> =
+                        (0..ck).map(|j| cvecs[c * ck + j] + noise[j]).collect();
+                    let exact10 =
+                        reference.query(QueryRequest::gradients(q.clone(), 1, 10)).unwrap();
+                    let ivf10 = pruned.query(QueryRequest::gradients(q, 1, 10)).unwrap();
+                    let want_ids: Vec<u64> =
+                        exact10[0].top.iter().map(|&(_, id)| id).collect();
+                    hits += ivf10[0].top.iter().filter(|&&(_, id)| want_ids.contains(&id)).count();
+                    total += 10;
+                }
+            }
+            hits as f64 / total as f64
+        };
+        report_metric("micro.store.ivf.recall_at_10", ann_recall_at_10, "frac at np2/8");
+
         let json = format!(
             "{{\n  \"rows\": {rows},\n  \"k\": {k},\n  \"nt\": {nt},\n  \"topk\": {topk},\n  \
              \"kernel_arm\": \"{}\",\n  \
@@ -412,6 +549,9 @@ fn main() {
              \"f32_rows_per_s\": {f32_rows_per_s:.1},\n  \
              \"quant_rows_per_s\": {quant_rows_per_s:.1},\n  \
              \"two_stage_rows_per_s\": {two_stage_rows_per_s:.1},\n  \
+             \"ann_rows_per_s\": {ann_rows_per_s:.1},\n  \
+             \"ann_recall_at_10\": {ann_recall_at_10:.4},\n  \
+             \"ann_full_probe_bitident\": {ann_full_probe_bitident:.1},\n  \
              \"quant_speedup_vs_f32\": {:.3},\n  \
              \"f32_storage_bytes\": {f32_bytes},\n  \
              \"quant_storage_bytes\": {q8_bytes},\n  \

@@ -284,15 +284,17 @@ fn main() -> Result<()> {
     };
 
     // Optionally quantize the (possibly resharded) store so the service
-    // can run the two-stage int8-scan + exact-rescore path.
-    let quant_dir = if quantized {
+    // can run the two-stage int8-scan + exact-rescore path. The service
+    // opens whatever fabric `store_dir` holds, so point it at the
+    // quantized copy (its manifest records the f32 rescore companion).
+    let (store_dir, backend) = if quantized {
         let qdir = root.join("runs").join("serve-store-q8");
         let _ = std::fs::remove_dir_all(&qdir);
         let man = logra::store::quantize_store(&store_dir, &qdir)?;
         println!("quantized copy ready ({} rows, int8 codec)", man.total_rows());
-        Some(qdir)
+        (qdir, Backend::Quantized { rescore_factor })
     } else {
-        None
+        (store_dir, Backend::Auto)
     };
 
     // Online phase: spawn the service, hammer it from client threads.
@@ -306,9 +308,7 @@ fn main() -> Result<()> {
         norm: Normalization::RelatIf,
         max_wait: Duration::from_millis(4),
         scan_workers,
-        quantized_scan: quantized,
-        rescore_factor,
-        quant_dir,
+        backend,
         max_in_flight: concurrency.max(1),
     })?);
 

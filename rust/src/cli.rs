@@ -87,6 +87,66 @@ pub fn parse(argv: &[String], value_flags: &[&str]) -> anyhow::Result<Args> {
     Ok(out)
 }
 
+/// The shared `--backend / --nprobe / --rescore-factor / --workers`
+/// quartet that `logra query`, `trace`, and `serve` all accept — parsed
+/// once, resolved against the store fabric's auto-detected kind so the
+/// three subcommands cannot drift apart in how they spell backend
+/// selection.
+#[derive(Clone, Debug)]
+pub struct BackendArgs {
+    /// Wire name: `auto | exact | quantized | ann`.
+    pub backend: String,
+    /// IVF stage-0 clusters probed per shard.
+    pub nprobe: usize,
+    /// Stage-1 candidate pool multiplier (two-stage / IVF).
+    pub rescore_factor: usize,
+    /// Scan workers (0 = auto).
+    pub workers: usize,
+}
+
+impl BackendArgs {
+    pub fn from_args(args: &Args) -> anyhow::Result<BackendArgs> {
+        Ok(BackendArgs {
+            backend: args.flag_or("backend", "auto"),
+            nprobe: args.usize_or("nprobe", 4)?,
+            rescore_factor: args.usize_or("rescore-factor", 4)?,
+            workers: args.usize_or("workers", 0)?,
+        })
+    }
+
+    /// Resolve the wire name to a [`Backend`](crate::valuation::Backend),
+    /// spelling `auto` out against what the fabric would auto-select so
+    /// `--rescore-factor` / `--nprobe` are honored instead of silently
+    /// falling back to the builder defaults.
+    pub fn resolve(
+        &self,
+        auto_kind: crate::valuation::BackendKind,
+    ) -> anyhow::Result<crate::valuation::Backend> {
+        use crate::valuation::{Backend, BackendKind};
+        match self.backend.as_str() {
+            "auto" => Ok(match auto_kind {
+                BackendKind::TwoStage => {
+                    Backend::Quantized { rescore_factor: self.rescore_factor }
+                }
+                BackendKind::Ivf => Backend::Ann {
+                    nprobe: self.nprobe,
+                    rescore_factor: self.rescore_factor,
+                },
+                _ => Backend::Auto,
+            }),
+            "exact" => Ok(Backend::Exact),
+            "quantized" => Ok(Backend::Quantized { rescore_factor: self.rescore_factor }),
+            "ann" => Ok(Backend::Ann {
+                nprobe: self.nprobe,
+                rescore_factor: self.rescore_factor,
+            }),
+            other => Err(anyhow::anyhow!(
+                "unknown backend {other:?}; try auto|exact|quantized|ann"
+            )),
+        }
+    }
+}
+
 /// Render a usage block for `--help`.
 pub fn usage(program: &str, subcommands: &[(&str, &str)], flags: &[FlagSpec]) -> String {
     let mut s = format!("usage: {program} <command> [flags]\n\ncommands:\n");
@@ -141,6 +201,38 @@ mod tests {
         assert!((a.f64_or("damp", 0.0).unwrap() - 0.1).abs() < 1e-12);
         assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
         assert!(a.usize_or("damp", 1).is_err());
+    }
+
+    #[test]
+    fn backend_args_resolve_against_the_fabric() {
+        use crate::valuation::{Backend, BackendKind};
+        let a = parse(
+            &v(&["query", "--backend", "ann", "--nprobe", "3", "--rescore-factor", "7"]),
+            &["backend", "nprobe", "rescore-factor"],
+        )
+        .unwrap();
+        let ba = BackendArgs::from_args(&a).unwrap();
+        assert_eq!(ba.workers, 0);
+        assert_eq!(
+            ba.resolve(BackendKind::Sequential).unwrap(),
+            Backend::Ann { nprobe: 3, rescore_factor: 7 }
+        );
+
+        // `auto` spells out what the fabric would pick, carrying the
+        // tuning flags along.
+        let auto = BackendArgs::from_args(&parse(&v(&["query"]), &[]).unwrap()).unwrap();
+        assert_eq!(auto.resolve(BackendKind::Parallel).unwrap(), Backend::Auto);
+        assert_eq!(
+            auto.resolve(BackendKind::TwoStage).unwrap(),
+            Backend::Quantized { rescore_factor: 4 }
+        );
+        assert_eq!(
+            auto.resolve(BackendKind::Ivf).unwrap(),
+            Backend::Ann { nprobe: 4, rescore_factor: 4 }
+        );
+
+        let bogus = BackendArgs { backend: "bogus".into(), ..auto };
+        assert!(bogus.resolve(BackendKind::Parallel).is_err());
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub struct Metrics {
     /// Two-stage engine: candidate rows rescored at exact precision (the
     /// sublinear full-precision workload; compare against `rows_scanned`).
     pub candidates_rescored: AtomicU64,
+    /// IVF engine: rows named by the stage-0 probe (the stage-1 coarse
+    /// scan's workload — strictly below the corpus row count whenever the
+    /// index is pruning).
+    pub rows_probed: AtomicU64,
     /// Scan-pool workers ACTUALLY spawned (after `workers = 0` auto
     /// resolution) — the pool, not the config, is the authority. 0 when the
     /// service runs the sequential engine (no pool). Detailed pool health
@@ -59,6 +63,7 @@ impl Metrics {
             stage1_seconds: self.stage1_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             stage2_seconds: self.stage2_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             candidates_rescored: self.candidates_rescored.load(Ordering::Relaxed),
+            rows_probed: self.rows_probed.load(Ordering::Relaxed),
             pool_workers: self.pool_workers.load(Ordering::Relaxed),
             scan_chunk_len: self.scan_chunk_len.load(Ordering::Relaxed),
         }
@@ -84,6 +89,7 @@ pub struct MetricsSnapshot {
     pub stage1_seconds: f64,
     pub stage2_seconds: f64,
     pub candidates_rescored: u64,
+    pub rows_probed: u64,
     pub pool_workers: u64,
     pub scan_chunk_len: u64,
 }

@@ -56,16 +56,13 @@ pub struct ServiceConfig {
     /// `Metrics::pool_workers` reports the resolved count. Unsharded f32
     /// stores serve sequentially — one shard has nothing to fan out over.
     pub scan_workers: usize,
-    /// Serve queries through the two-stage backend: int8 coarse scan over
-    /// the quantized copy at `quant_dir`, exact f32 rescore of a
-    /// `rescore_factor × topk` candidate pool against `store_dir`.
-    pub quantized_scan: bool,
-    /// Stage-1 candidate pool multiplier (must be ≥ 1; larger = higher
-    /// recall, more exact-precision work). Ignored unless `quantized_scan`.
-    pub rescore_factor: usize,
-    /// Quantized copy of `store_dir` (from `logra store quantize`).
-    /// Required when `quantized_scan` is set.
-    pub quant_dir: Option<PathBuf>,
+    /// Scan backend the service serves through ([`Backend::Auto`] picks
+    /// from `store_dir`'s codec: exact engines on f32 fabrics, two-stage
+    /// on int8, IVF when the int8 manifest advertises a `logra store
+    /// index` sidecar). Point `store_dir` at the quantized copy for
+    /// [`Backend::Quantized`] / [`Backend::Ann`] — its manifest records
+    /// the f32 rescore companion.
+    pub backend: Backend,
     /// Completion-queue depth for admitted query batches (must be ≥ 1) —
     /// the batcher blocks once this many completed admissions are waiting
     /// on the responder. A throttle, not an exact bound: one further batch
@@ -118,15 +115,20 @@ impl ValuationService {
                     .into(),
             ));
         }
-        if cfg.rescore_factor == 0 {
-            return Err(ValuationError::InvalidConfig(
-                "rescore_factor must be ≥ 1 (stage-1 candidate pool multiplier)".into(),
-            ));
-        }
-        if cfg.quantized_scan && cfg.quant_dir.is_none() {
-            return Err(ValuationError::InvalidConfig(
-                "quantized_scan requires quant_dir (run `logra store quantize`)".into(),
-            ));
+        match cfg.backend {
+            Backend::Quantized { rescore_factor: 0 }
+            | Backend::Ann { rescore_factor: 0, .. } => {
+                return Err(ValuationError::InvalidConfig(
+                    "rescore_factor must be ≥ 1 (stage-1 candidate pool multiplier)"
+                        .into(),
+                ));
+            }
+            Backend::Ann { nprobe: 0, .. } => {
+                return Err(ValuationError::InvalidConfig(
+                    "nprobe must be ≥ 1 (clusters probed per shard)".into(),
+                ));
+            }
+            _ => {}
         }
         Ok(())
     }
@@ -146,21 +148,15 @@ impl ValuationService {
         anyhow::ensure!(man.is_lm(), "valuation service currently serves LM queries");
 
         // ONE facade call replaces the old store-open / engine-enum /
-        // pool-spawn choreography: `Backend::Auto` on the exact fabric
-        // serves sequential (1 shard) or parallel (sharded) f32 scans;
-        // pointing the facade at the quantized copy (with the exact store
-        // as its rescore companion) serves the two-stage path. The
-        // eigendecomposition happens here, at spawn, like before.
+        // pool-spawn choreography: the facade opens whatever fabric
+        // `store_dir` holds (f32 or quantized-with-companion), resolves
+        // `cfg.backend` against it, and rejects unservable pairings with a
+        // typed error. The eigendecomposition happens here, at spawn, like
+        // before.
         let precond = Arc::new(cfg.hessian.preconditioner(cfg.damping)?);
-        let builder = if cfg.quantized_scan {
-            Valuator::open(cfg.quant_dir.as_ref().expect("validated above"))?
-                .rescore_store(&cfg.store_dir)
-                .backend(Backend::Quantized { rescore_factor: cfg.rescore_factor })
-        } else {
-            Valuator::open(&cfg.store_dir)?.backend(Backend::Exact)
-        };
         let valuator = Arc::new(
-            builder
+            Valuator::open(&cfg.store_dir)?
+                .backend(cfg.backend)
                 .preconditioner(precond)
                 .normalization(cfg.norm)
                 .workers(cfg.scan_workers)
@@ -355,7 +351,7 @@ impl ValuationService {
         self.valuator.as_ref().and_then(|v| v.scan_pool())
     }
 
-    /// Which scan backend `Backend::Auto`/`Exact`/`Quantized` resolved to.
+    /// Which scan backend [`ServiceConfig::backend`] resolved to.
     pub fn backend_kind(&self) -> Option<BackendKind> {
         self.valuator.as_ref().map(|v| v.kind())
     }

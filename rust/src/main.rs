@@ -5,7 +5,7 @@
 //!   fig4         counterfactual accuracy (brittleness + LDS)
 //!   table1       LoGra vs EKFAC efficiency
 //!   qualitative  Fig-5-style top-valued-document inspection
-//!   store        gradient-store maintenance (stat | shard | merge | quantize)
+//!   store        gradient-store maintenance (stat | shard | merge | quantize | index)
 //!   query        value a stored gradient row against any store fabric
 //!   trace        run concurrent queries, export a Chrome trace + percentiles
 //!   serve        HTTP valuation server (/query /metrics /healthz /debug/trace)
@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use logra::cli::{self, FlagSpec};
+use logra::cli::{self, BackendArgs, FlagSpec};
 use logra::coordinator::Metrics;
 use logra::eval::fig4::{render_markdown, run_fig4, Fig4Scale};
 use logra::eval::qualitative::{render as render_qual, run_qualitative};
@@ -24,17 +24,15 @@ use logra::eval::table1::{run_table1, TABLE1_HEADER};
 use logra::eval::{BrittlenessConfig, LdsConfig};
 use logra::obs::{chrome_trace_json, render_exposition};
 use logra::serve::{loadgen, ServeConfig, Server};
-use logra::store::{merge_store, quantize_store, shard_store, stat_store};
-use logra::valuation::{
-    Backend, Normalization, PoolMode, QueryRequest, ScanBackend, Valuator,
-};
+use logra::store::{build_index, merge_store, quantize_store, shard_store, stat_store};
+use logra::valuation::{Normalization, PoolMode, QueryRequest, ScanBackend, Valuator};
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
     ("info", "print an artifact manifest summary"),
     ("fig4", "run brittleness + LDS counterfactual evals"),
     ("table1", "run the LoGra vs EKFAC efficiency comparison"),
     ("qualitative", "train, log, and inspect top-valued documents"),
-    ("store", "store maintenance: store stat|shard|merge|quantize <dir>"),
+    ("store", "store maintenance: store stat|shard|merge|quantize|index <dir>"),
     ("query", "query <store_dir>: top-k most influential rows for --row"),
     ("trace", "trace <store_dir>: concurrent queries -> Chrome trace JSON"),
     ("serve", "serve <store_dir>: HTTP server (/query /metrics /healthz /debug/trace)"),
@@ -53,12 +51,15 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "topk", help: "retrieval depth", takes_value: true, default: Some("5") },
     FlagSpec { name: "out", help: "output dir for store shard/merge/quantize", takes_value: true, default: None },
     FlagSpec { name: "shards", help: "shard count for store shard", takes_value: true, default: Some("4") },
+    FlagSpec { name: "clusters", help: "store index: IVF clusters per shard", takes_value: true, default: Some("16") },
+    FlagSpec { name: "seed", help: "store index: k-means seed", takes_value: true, default: Some("42") },
     FlagSpec { name: "row", help: "query: stored row used as the query gradient", takes_value: true, default: Some("0") },
     FlagSpec { name: "norm", help: "query: normalization none|relatif", takes_value: true, default: Some("relatif") },
-    FlagSpec { name: "backend", help: "query: auto|exact|quantized", takes_value: true, default: Some("auto") },
-    FlagSpec { name: "rescore-factor", help: "query: stage-1 pool multiplier", takes_value: true, default: Some("4") },
+    FlagSpec { name: "backend", help: "query/trace/serve: auto|exact|quantized|ann", takes_value: true, default: Some("auto") },
+    FlagSpec { name: "nprobe", help: "query/trace/serve: IVF clusters probed per shard", takes_value: true, default: Some("4") },
+    FlagSpec { name: "rescore-factor", help: "query/trace/serve: stage-1 pool multiplier", takes_value: true, default: Some("4") },
     FlagSpec { name: "rescore-store", help: "query: exact f32 companion for a quantized store", takes_value: true, default: None },
-    FlagSpec { name: "workers", help: "query: scan workers (0 = auto)", takes_value: true, default: Some("0") },
+    FlagSpec { name: "workers", help: "query/trace/serve: scan workers (0 = auto)", takes_value: true, default: Some("0") },
     FlagSpec { name: "damping", help: "query: Fisher damping factor", takes_value: true, default: Some("0.1") },
     FlagSpec { name: "repeat", help: "query: run the query N times (latency percentiles)", takes_value: true, default: Some("1") },
     FlagSpec { name: "queries", help: "trace: queries to run", takes_value: true, default: Some("8") },
@@ -176,7 +177,10 @@ fn main() -> Result<()> {
                 .first()
                 .map(String::as_str)
                 .ok_or_else(|| {
-                    anyhow!("usage: store stat|shard|merge|quantize <dir> [--out DIR] [--shards N]")
+                    anyhow!(
+                        "usage: store stat|shard|merge|quantize|index <dir> \
+                         [--out DIR] [--shards N] [--clusters C] [--seed S]"
+                    )
                 })?;
             let dir = args
                 .positional
@@ -259,9 +263,26 @@ fn main() -> Result<()> {
                     );
                     Ok(())
                 }
-                other => {
-                    Err(anyhow!("unknown store action {other:?}; try stat|shard|merge|quantize"))
+                "index" => {
+                    let clusters = args.usize_or("clusters", 16)?;
+                    let seed = args.usize_or("seed", 42)? as u64;
+                    let rep = build_index(&dir, clusters, seed)?;
+                    println!(
+                        "indexed {} ({} shards, seed {seed})",
+                        dir.display(),
+                        rep.shards
+                    );
+                    for si in 0..rep.shards {
+                        println!(
+                            "  shard {si}: {} clusters over {} rows",
+                            rep.clusters[si], rep.rows[si]
+                        );
+                    }
+                    Ok(())
                 }
+                other => Err(anyhow!(
+                    "unknown store action {other:?}; try stat|shard|merge|quantize|index"
+                )),
             }
         }
         // Store-only valuation: no artifact needed. The projected Fisher
@@ -272,37 +293,24 @@ fn main() -> Result<()> {
             let dir = args.positional.first().map(PathBuf::from).ok_or_else(|| {
                 anyhow!(
                     "usage: query <store_dir> [--row N] [--topk K] [--norm none|relatif] \
-                     [--backend auto|exact|quantized] [--rescore-factor N] [--workers N] \
-                     [--damping X]"
+                     [--backend auto|exact|quantized|ann] [--nprobe N] \
+                     [--rescore-factor N] [--workers N] [--damping X]"
                 )
             })?;
             let row = args.usize_or("row", 0)?;
             let topk = args.usize_or("topk", 5)?;
-            let workers = args.usize_or("workers", 0)?;
-            let rescore_factor = args.usize_or("rescore-factor", 4)?;
+            let ba = BackendArgs::from_args(&args)?;
             let damping = args.f64_or("damping", 0.1)? as f32;
             let norm = Normalization::parse(&args.flag_or("norm", "relatif"))?;
             let builder = Valuator::open(&dir)?;
-            let backend = match args.flag_or("backend", "auto").as_str() {
-                // Auto on a quantized fabric resolves to the two-stage
-                // backend; spell it out so --rescore-factor is honored
-                // instead of silently falling back to the default pool.
-                "auto" => {
-                    if builder.auto_kind() == logra::valuation::BackendKind::TwoStage {
-                        Backend::Quantized { rescore_factor }
-                    } else {
-                        Backend::Auto
-                    }
-                }
-                "exact" => Backend::Exact,
-                "quantized" => Backend::Quantized { rescore_factor },
-                other => return Err(anyhow!("unknown backend {other:?}; try auto|exact|quantized")),
-            };
+            // `auto` spells out the fabric's pick so --rescore-factor /
+            // --nprobe are honored instead of the builder defaults.
+            let backend = ba.resolve(builder.auto_kind())?;
             let repeat = args.usize_or("repeat", 1)?.max(1);
             let metrics = Arc::new(Metrics::default());
             let mut builder = builder
                 .backend(backend)
-                .workers(workers)
+                .workers(ba.workers)
                 .fit_from_store(damping)
                 .metrics(metrics.clone());
             // Explicit exact companion for quantized stores whose manifest
@@ -356,18 +364,22 @@ fn main() -> Result<()> {
             let dir = args.positional.first().map(PathBuf::from).ok_or_else(|| {
                 anyhow!(
                     "usage: trace <store_dir> [--queries N] [--concurrency N] [--topk K] \
-                     [--workers N] [--damping X] [--out FILE]"
+                     [--backend auto|exact|quantized|ann] [--nprobe N] \
+                     [--rescore-factor N] [--workers N] [--damping X] [--out FILE]"
                 )
             })?;
             let n_queries = args.usize_or("queries", 8)?.max(1);
             let concurrency = args.usize_or("concurrency", 8)?.max(1).min(n_queries);
             let topk = args.usize_or("topk", 5)?;
-            let workers = args.usize_or("workers", 0)?;
+            let ba = BackendArgs::from_args(&args)?;
             let damping = args.f64_or("damping", 0.1)? as f32;
             let out_path = PathBuf::from(args.flag_or("out", "trace.json"));
             let metrics = Arc::new(Metrics::default());
-            let valuator = Valuator::open(&dir)?
-                .workers(workers)
+            let builder = Valuator::open(&dir)?;
+            let backend = ba.resolve(builder.auto_kind())?;
+            let valuator = builder
+                .backend(backend)
+                .workers(ba.workers)
                 .fit_from_store(damping)
                 .pool(PoolMode::Auto)
                 .metrics(metrics.clone())
@@ -468,17 +480,22 @@ fn main() -> Result<()> {
                 args.positional.first().map(PathBuf::from).ok_or_else(|| {
                     anyhow!(
                         "usage: serve <store_dir> [--addr A] [--max-in-flight N] \
-                         [--deadline-ms N] [--poll-ms N] [--topk K] [--workers N] \
-                         [--damping X] | serve --offline [--n-train N] [--shards N]"
+                         [--deadline-ms N] [--poll-ms N] [--topk K] \
+                         [--backend auto|exact|quantized|ann] [--nprobe N] \
+                         [--rescore-factor N] [--workers N] [--damping X] \
+                         | serve --offline [--n-train N] [--shards N]"
                     )
                 })?
             };
-            let workers = args.usize_or("workers", 0)?;
+            let ba = BackendArgs::from_args(&args)?;
             let damping = args.f64_or("damping", 0.1)? as f32;
             let metrics = Arc::new(Metrics::default());
+            let builder = Valuator::open(&dir)?;
+            let backend = ba.resolve(builder.auto_kind())?;
             let valuator = Arc::new(
-                Valuator::open(&dir)?
-                    .workers(workers)
+                builder
+                    .backend(backend)
+                    .workers(ba.workers)
                     .fit_from_store(damping)
                     .pool(PoolMode::Auto)
                     .metrics(metrics.clone())

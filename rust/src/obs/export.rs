@@ -113,6 +113,13 @@ pub fn render_exposition(
     );
     simple(
         &mut out,
+        "logra_rows_probed_total",
+        "Rows named by IVF stage-0 probes (the pruned coarse-scan workload).",
+        "counter",
+        ld(&metrics.rows_probed),
+    );
+    simple(
+        &mut out,
         "logra_scan_seconds_total",
         "Wall seconds spent in influence scans.",
         "counter",

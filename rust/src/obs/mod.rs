@@ -7,8 +7,9 @@
 //! "where did this query's 40ms go?"):
 //!
 //! - [`trace::TraceRing`]: a bounded ring of timestamped [`SpanEvent`]s
-//!   covering every stage of a query (admission → queue wait → per-shard
-//!   scans → merge → rescore), exportable as Chrome trace-event JSON via
+//!   covering every stage of a query (admission → IVF probe, when an
+//!   index serves → queue wait → per-shard scans → merge → rescore),
+//!   exportable as Chrome trace-event JSON via
 //!   [`trace::chrome_trace_json`] (`logra trace --out trace.json`).
 //! - [`hist::Histogram`]: HDR-style log-bucketed atomic histograms for
 //!   end-to-end query latency, queue wait, and per-shard scan time —
@@ -211,11 +212,13 @@ pub struct QueryReport {
     /// Observability query id (matches the trace's `query` arg).
     pub query_id: u64,
     /// Serving backend name (`"sequential"`, `"parallel-f32"`,
-    /// `"two-stage"`).
+    /// `"two-stage"`, `"ivf"`).
     pub backend: &'static str,
     /// Shards fanned out over.
     pub shards: u32,
-    /// Rows covered by the (stage-1) scan.
+    /// Rows covered by the (stage-1) scan. On the IVF backend this is the
+    /// PROBED row count — below the corpus row count when the index
+    /// prunes.
     pub rows_scanned: u64,
     /// Rows rescored at exact precision (two-stage only; 0 elsewhere).
     pub candidates_rescored: u64,

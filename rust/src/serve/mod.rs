@@ -7,9 +7,12 @@
 //!
 //! - `POST /query` — JSON body `{"row": N}` or
 //!   `{"gradient": [...], "nt": 1}`, optional per-request `"topk"`,
-//!   `"norm"` (`"none"`/`"relatif"`), and `"deadline_ms"`. The response
+//!   `"norm"` (`"none"`/`"relatif"`), `"deadline_ms"`, and `"backend"`
+//!   (`"auto"`/`"exact"`/`"quantized"`/`"ann"`, plus `"nprobe"` with
+//!   `"ann"`) — a backend the fabric cannot serve is a 400. The response
 //!   carries ids + scores (floats rendered shortest-roundtrip, so they
-//!   re-parse bit-identical), a server-wide `request_id`, and the full
+//!   re-parse bit-identical), a server-wide `request_id`, the name of the
+//!   backend that ACTUALLY served (after `auto` resolution), and the full
 //!   [`QueryReport`] stage breakdown.
 //! - `GET /metrics` — [`render_exposition`] verbatim (counters, pool
 //!   snapshot, histograms) plus the server's own `logra_serve_*`
@@ -55,7 +58,8 @@ use crate::obs::export::simple;
 use crate::obs::{chrome_trace_json, render_exposition, QueryReport};
 use crate::util::json::{self, Json};
 use crate::valuation::{
-    Normalization, QueryRequest, QueryResult, ScanBackend, ValuationError, Valuator,
+    BackendChoice, Normalization, QueryRequest, QueryResult, ScanBackend, ValuationError,
+    Valuator,
 };
 
 /// Server construction knobs.
@@ -271,6 +275,7 @@ pub(crate) struct ParsedQuery {
     pub(crate) topk: usize,
     pub(crate) norm: Option<Normalization>,
     pub(crate) deadline_ms: Option<u64>,
+    pub(crate) backend: Option<BackendChoice>,
 }
 
 /// Parse a query body against the server defaults. Errors are
@@ -301,6 +306,32 @@ pub(crate) fn parse_query_body(
         None => None,
         Some(d) => {
             Some(d.as_u64().ok_or("\"deadline_ms\" must be a non-negative integer")?)
+        }
+    };
+    let backend = match v.get("backend") {
+        None => None,
+        Some(b) => {
+            let s = b.as_str().ok_or(
+                "\"backend\" must be \"auto\", \"exact\", \"quantized\", or \"ann\"",
+            )?;
+            Some(BackendChoice::parse(s).ok_or(
+                "\"backend\" must be \"auto\", \"exact\", \"quantized\", or \"ann\"",
+            )?)
+        }
+    };
+    let backend = match v.get("nprobe") {
+        None => backend,
+        Some(n) => {
+            let n = n
+                .as_u64()
+                .filter(|&n| n > 0)
+                .ok_or("\"nprobe\" must be a positive integer")? as usize;
+            match backend {
+                Some(BackendChoice::Ann { .. }) => {
+                    Some(BackendChoice::Ann { nprobe: Some(n) })
+                }
+                _ => return Err("\"nprobe\" requires \"backend\": \"ann\"".into()),
+            }
         }
     };
     let body = match (v.get("row"), v.get("gradient")) {
@@ -618,6 +649,18 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
     shared.stats.queries.fetch_add(1, Ordering::Relaxed);
     let request_id = shared.next_request_id.fetch_add(1, Ordering::Relaxed) + 1;
 
+    // Resolve which engine a per-request backend choice lands on BEFORE
+    // building the query: an unservable choice is the caller's mistake
+    // (400), and the 200 response names the engine that actually served
+    // (after "auto" resolution), not the wire-level choice.
+    let served = match shared.valuator.resolved_kind(parsed.backend) {
+        Ok(kind) => kind.name(),
+        Err(ValuationError::InvalidConfig(m)) => {
+            return respond(400, error_body("bad_request", &m))
+        }
+        Err(e) => return respond(500, error_body("internal", &format!("{e}"))),
+    };
+
     let query = match parsed.body {
         QueryBody::Row(row) => match shared.valuator.gradient_row(row as usize) {
             Some(g) => QueryRequest::gradients(g, 1, parsed.topk),
@@ -640,6 +683,10 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
         Some(n) => query.with_norm(n),
         None => query,
     };
+    let query = match parsed.backend {
+        Some(b) => query.with_backend(b),
+        None => query,
+    };
 
     let deadline_ms = parsed.deadline_ms.unwrap_or(shared.cfg.default_deadline_ms);
     let deadline =
@@ -647,7 +694,7 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
 
     let pending = match shared.valuator.query_async(query) {
         Ok(p) => p,
-        Err(ValuationError::BadQuery(m)) => {
+        Err(ValuationError::BadQuery(m) | ValuationError::InvalidConfig(m)) => {
             return respond(400, error_body("bad_request", &m))
         }
         Err(ValuationError::Shutdown) => {
@@ -670,12 +717,7 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
     match pending.wait_with_report_until(&mut should_cancel, shared.cfg.poll_interval) {
         Ok((results, report)) => respond(
             200,
-            query_response_body(
-                request_id,
-                shared.valuator.kind().name(),
-                &results,
-                report.as_ref(),
-            ),
+            query_response_body(request_id, served, &results, report.as_ref()),
         ),
         Err(ValuationError::Cancelled { .. }) => {
             if disconnected.get() {
@@ -734,6 +776,36 @@ mod tests {
         assert_eq!(p.topk, 9);
         assert_eq!(p.norm, Some(Normalization::RelatIf));
         assert_eq!(p.deadline_ms, Some(250));
+        assert!(p.backend.is_none());
+    }
+
+    #[test]
+    fn parses_backend_and_nprobe_overrides() {
+        let p = parse_query_body(r#"{"row": 1, "backend": "exact"}"#, 5).unwrap();
+        assert_eq!(p.backend, Some(BackendChoice::Exact));
+        let p = parse_query_body(r#"{"row": 1, "backend": "quantized"}"#, 5).unwrap();
+        assert_eq!(p.backend, Some(BackendChoice::Quantized));
+        let p = parse_query_body(r#"{"row": 1, "backend": "auto"}"#, 5).unwrap();
+        assert_eq!(p.backend, Some(BackendChoice::Auto));
+        let p = parse_query_body(r#"{"row": 1, "backend": "ann"}"#, 5).unwrap();
+        assert_eq!(p.backend, Some(BackendChoice::Ann { nprobe: None }));
+        let p = parse_query_body(r#"{"row": 1, "backend": "ann", "nprobe": 3}"#, 5)
+            .unwrap();
+        assert_eq!(p.backend, Some(BackendChoice::Ann { nprobe: Some(3) }));
+    }
+
+    #[test]
+    fn rejects_bad_backend_and_stray_nprobe() {
+        for bad in [
+            r#"{"row": 1, "backend": "bogus"}"#,
+            r#"{"row": 1, "backend": 7}"#,
+            r#"{"row": 1, "nprobe": 4}"#,
+            r#"{"row": 1, "backend": "exact", "nprobe": 4}"#,
+            r#"{"row": 1, "backend": "ann", "nprobe": 0}"#,
+            r#"{"row": 1, "backend": "ann", "nprobe": "many"}"#,
+        ] {
+            assert!(parse_query_body(bad, 5).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

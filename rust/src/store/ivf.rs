@@ -1,0 +1,594 @@
+//! IVF (inverted-file) stage-0 index over a quantized store: per-shard
+//! k-means centroids plus row-to-cluster assignment lists, so a query can
+//! scan only the `nprobe` most promising clusters instead of every int8
+//! row — the sublinear candidate generator in front of the two-stage
+//! funnel (probe → int8 coarse scan → exact f32 rescore). "Sketching the
+//! Readout of LLMs" (PAPERS.md) motivates exactly this retrieval structure
+//! over a projected-gradient corpus.
+//!
+//! Layout (two files per shard, next to `codes.bin`):
+//!
+//! ```text
+//! <shard>/centroids.bin  header(32B) + clusters * k * f32 (row-major)
+//! <shard>/lists.bin      header(32B) + clusters * u64 list lengths
+//!                        + rows * u32 local row indices (per-cluster
+//!                        lists concatenated, each sorted ascending)
+//! ```
+//!
+//! Headers follow the LOGRA convention: `centroids.bin` is magic
+//! "LOGRAIVC", u32 version=1, u32 k, u64 clusters, 8B pad; `lists.bin` is
+//! magic "LOGRAIVL", u32 version=1, u32 clusters, u64 rows, 8B pad. The
+//! manifest advertises a built index via `"index": "ivf"` — manifests
+//! without the field parse unchanged, so pre-index stores keep opening.
+//!
+//! Crash/staleness consistency: the index is DERIVED data. [`IvfIndex::open`]
+//! validates each shard's pair of files (magic, version, k, cluster/row
+//! agreement with the live quantized shard, list coverage of every row
+//! exactly once) and **falls back per shard** — a truncated `lists.bin`
+//! or a shard re-written after indexing degrades that one shard to a full
+//! coarse scan instead of corrupting results or failing the open. Within
+//! a shard, `centroids.bin` is written (and synced) before `lists.bin`,
+//! so a crash mid-build never leaves lists without their centroids.
+//!
+//! Determinism: k-means is seeded ([`crate::util::rng::Pcg32`], one
+//! stream per shard), initialized by distinct-row sampling, iterated a
+//! fixed number of rounds with first-wins tie-breaking — `build_index`
+//! over the same store and seed reproduces the same bytes.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::quant::{QuantShardedStore, QuantStore};
+use super::shards::{ShardManifest, StoreCodec, SHARD_MANIFEST};
+
+/// Centroid file name inside a shard directory.
+pub const IVF_CENTROIDS_FILE: &str = "centroids.bin";
+/// Assignment-list file name inside a shard directory.
+pub const IVF_LISTS_FILE: &str = "lists.bin";
+/// Manifest `"index"` value advertising this index type.
+pub const IVF_INDEX_NAME: &str = "ivf";
+
+const CENTROIDS_MAGIC: &[u8; 8] = b"LOGRAIVC";
+const LISTS_MAGIC: &[u8; 8] = b"LOGRAIVL";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 32;
+
+/// Fixed k-means rounds: enough to settle the well-separated case this
+/// index targets, bounded so build time stays linear and deterministic.
+const KMEANS_ITERS: usize = 10;
+
+fn centroids_header(k: u32, clusters: u64) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(CENTROIDS_MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&k.to_le_bytes());
+    h[16..24].copy_from_slice(&clusters.to_le_bytes());
+    h
+}
+
+fn lists_header(clusters: u32, rows: u64) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(LISTS_MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&clusters.to_le_bytes());
+    h[16..24].copy_from_slice(&rows.to_le_bytes());
+    h
+}
+
+// ------------------------------------------------------------------ build
+
+/// Build summary returned by [`build_index`] (the `store index` CLI
+/// report): per-shard cluster and row counts.
+#[derive(Clone, Debug)]
+pub struct IvfBuildReport {
+    pub shards: usize,
+    /// Clusters actually built per shard (≤ requested: capped at rows).
+    pub clusters: Vec<usize>,
+    pub rows: Vec<usize>,
+}
+
+/// Run seeded k-means over each shard of the quantized store at `dir`,
+/// persist per-shard `centroids.bin` + `lists.bin`, and advertise the
+/// index in the manifest (`"index": "ivf"`). Deterministic in
+/// (store bytes, `clusters`, `seed`). The cluster count is capped per
+/// shard at the shard's row count; empty shards get empty index files.
+pub fn build_index(dir: &Path, clusters: usize, seed: u64) -> Result<IvfBuildReport> {
+    ensure!(clusters >= 1, "index needs at least one cluster");
+    ensure!(
+        dir.join(SHARD_MANIFEST).exists(),
+        "store {} has no {SHARD_MANIFEST} manifest; \
+         `logra store quantize` writes one — the index must be advertised there",
+        dir.display()
+    );
+    let man = ShardManifest::load(dir)?;
+    ensure!(
+        man.codec == StoreCodec::Int8,
+        "store {} uses the {} codec; the IVF index clusters int8 codes — \
+         run `logra store quantize` first",
+        dir.display(),
+        man.codec.as_str()
+    );
+    let store = QuantShardedStore::open(dir)?;
+    let mut report = IvfBuildReport {
+        shards: store.n_shards(),
+        clusters: Vec::with_capacity(store.n_shards()),
+        rows: Vec::with_capacity(store.n_shards()),
+    };
+    for si in 0..store.n_shards() {
+        let shard = store.shard(si);
+        let shard_dir = dir.join(&man.shard_dirs[si]);
+        let built = build_shard_index(shard, &shard_dir, clusters, seed, si as u64)
+            .with_context(|| format!("index shard {si} of {}", dir.display()))?;
+        report.clusters.push(built);
+        report.rows.push(shard.rows());
+    }
+    let mut man = man;
+    man.index = Some(IVF_INDEX_NAME.to_string());
+    man.save(dir)?;
+    Ok(report)
+}
+
+/// K-means one shard and write its two index files. Returns the cluster
+/// count actually built. `centroids.bin` is written and synced before
+/// `lists.bin` so a crash between the two leaves an openable (rejected,
+/// fallback) state rather than lists pointing at missing centroids.
+fn build_shard_index(
+    shard: &QuantStore,
+    shard_dir: &Path,
+    clusters: usize,
+    seed: u64,
+    stream: u64,
+) -> Result<usize> {
+    let k = shard.k();
+    let rows = shard.rows();
+    let c = clusters.min(rows);
+    // Dequantize once: k-means runs in f32 over the reconstructed rows
+    // (the same values stage 1 scores against, up to quantization).
+    let mut data = vec![0.0f32; rows * k];
+    for r in 0..rows {
+        super::quant::dequantize_row(
+            shard.codes_chunk(r, 1),
+            shard.scales_chunk(r, 1),
+            &mut data[r * k..(r + 1) * k],
+        );
+    }
+    let (centroids, assign) = kmeans(&data, rows, k, c, seed, stream);
+
+    // Per-cluster lists, each sorted ascending (rows are visited in order).
+    let mut lists: Vec<Vec<u32>> = vec![Vec::new(); c];
+    for (r, &a) in assign.iter().enumerate() {
+        lists[a as usize].push(r as u32);
+    }
+
+    let cpath = shard_dir.join(IVF_CENTROIDS_FILE);
+    let mut cf = File::create(&cpath).with_context(|| format!("create {}", cpath.display()))?;
+    cf.write_all(&centroids_header(k as u32, c as u64))?;
+    cf.write_all(f32_bytes(&centroids))?;
+    cf.sync_all()?;
+
+    let lpath = shard_dir.join(IVF_LISTS_FILE);
+    let mut lf = File::create(&lpath).with_context(|| format!("create {}", lpath.display()))?;
+    lf.write_all(&lists_header(c as u32, rows as u64))?;
+    for l in &lists {
+        lf.write_all(&(l.len() as u64).to_le_bytes())?;
+    }
+    for l in &lists {
+        lf.write_all(u32_bytes(l))?;
+    }
+    lf.sync_all()?;
+    Ok(c)
+}
+
+fn f32_bytes(v: &[f32]) -> &[u8] {
+    // f32 bytes come from (and are read back on) this machine.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn u32_bytes(v: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Seeded Lloyd k-means over `n` row-major rows of width `k`: returns
+/// (centroids [c, k], per-row assignment [n]). Sequential and
+/// deterministic: distinct-row init via [`Pcg32::sample_indices`], fixed
+/// iteration count, first-wins tie-breaking, empty clusters reseeded to a
+/// seeded random row.
+fn kmeans(data: &[f32], n: usize, k: usize, c: usize, seed: u64, stream: u64) -> (Vec<f32>, Vec<u32>) {
+    use crate::util::rng::Pcg32;
+    if c == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let mut rng = Pcg32::new(seed, stream);
+    let mut centroids = vec![0.0f32; c * k];
+    for (ci, &r) in rng.sample_indices(n, c).iter().enumerate() {
+        centroids[ci * k..(ci + 1) * k].copy_from_slice(&data[r * k..(r + 1) * k]);
+    }
+    let mut assign = vec![0u32; n];
+    let mut counts = vec![0usize; c];
+    for _ in 0..KMEANS_ITERS {
+        // Assignment: nearest centroid by squared L2, first wins on ties.
+        for (r, a) in assign.iter_mut().enumerate() {
+            let x = &data[r * k..(r + 1) * k];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for (ci, cen) in centroids.chunks_exact(k).enumerate() {
+                let mut d = 0.0f32;
+                for (xv, cv) in x.iter().zip(cen) {
+                    let t = xv - cv;
+                    d += t * t;
+                }
+                if d < best_d {
+                    best_d = d;
+                    best = ci;
+                }
+            }
+            *a = best as u32;
+        }
+        // Update: means per cluster; empty clusters reseed to a random row.
+        centroids.iter_mut().for_each(|v| *v = 0.0);
+        counts.iter_mut().for_each(|v| *v = 0);
+        for (r, &a) in assign.iter().enumerate() {
+            let cen = &mut centroids[a as usize * k..(a as usize + 1) * k];
+            for (cv, xv) in cen.iter_mut().zip(&data[r * k..(r + 1) * k]) {
+                *cv += xv;
+            }
+            counts[a as usize] += 1;
+        }
+        for (ci, &cnt) in counts.iter().enumerate() {
+            let cen = &mut centroids[ci * k..(ci + 1) * k];
+            if cnt > 0 {
+                let inv = 1.0 / cnt as f32;
+                cen.iter_mut().for_each(|v| *v *= inv);
+            } else {
+                let r = rng.below_usize(n);
+                cen.copy_from_slice(&data[r * k..(r + 1) * k]);
+            }
+        }
+    }
+    // Final assignment against the settled centroids (the lists must match
+    // the centroids that were just written).
+    for (r, a) in assign.iter_mut().enumerate() {
+        let x = &data[r * k..(r + 1) * k];
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (ci, cen) in centroids.chunks_exact(k).enumerate() {
+            let mut d = 0.0f32;
+            for (xv, cv) in x.iter().zip(cen) {
+                let t = xv - cv;
+                d += t * t;
+            }
+            if d < best_d {
+                best_d = d;
+                best = ci;
+            }
+        }
+        *a = best as u32;
+    }
+    (centroids, assign)
+}
+
+// ------------------------------------------------------------------- open
+
+/// One shard's loaded index: centroids and per-cluster row lists.
+#[derive(Clone, Debug)]
+pub struct IvfShard {
+    k: usize,
+    /// Row-major [clusters, k] cluster centers.
+    centroids: Vec<f32>,
+    /// Per-cluster local row indices, each sorted ascending; disjoint and
+    /// jointly covering every shard row exactly once (validated at open).
+    lists: Vec<Vec<u32>>,
+}
+
+impl IvfShard {
+    pub fn clusters(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// Local rows assigned to cluster `ci`, sorted ascending.
+    pub fn list(&self, ci: usize) -> &[u32] {
+        &self.lists[ci]
+    }
+
+    pub fn centroid(&self, ci: usize) -> &[f32] {
+        &self.centroids[ci * self.k..(ci + 1) * self.k]
+    }
+
+    /// Stage-0 probe: rank clusters by inner product against each of the
+    /// `nt` (already preconditioned) test rows, union each row's top
+    /// `nprobe` clusters, and return the union's local rows, sorted
+    /// ascending. With `nprobe >= clusters()` this is every row of the
+    /// shard — the bit-identity anchor for the full-probe equivalence.
+    pub fn probe(&self, pre: &[f32], nt: usize, nprobe: usize) -> Vec<u32> {
+        let c = self.clusters();
+        if c == 0 {
+            return Vec::new();
+        }
+        let nprobe = nprobe.min(c);
+        let mut selected = vec![false; c];
+        let mut scored: Vec<(f64, usize)> = Vec::with_capacity(c);
+        for t in 0..nt {
+            let x = &pre[t * self.k..(t + 1) * self.k];
+            scored.clear();
+            for ci in 0..c {
+                let mut s = 0.0f32;
+                for (xv, cv) in x.iter().zip(self.centroid(ci)) {
+                    s += xv * cv;
+                }
+                scored.push((s as f64, ci));
+            }
+            // Descending score, ties to the smaller cluster index — the
+            // same total-order discipline as TopK, so the probed set is a
+            // pure function of the scores.
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            for &(_, ci) in scored.iter().take(nprobe) {
+                selected[ci] = true;
+            }
+        }
+        let mut rows: Vec<u32> = Vec::new();
+        for (ci, sel) in selected.iter().enumerate() {
+            if *sel {
+                rows.extend_from_slice(&self.lists[ci]);
+            }
+        }
+        // Lists are disjoint; sorting restores global ascending order so
+        // the scan can coalesce contiguous runs.
+        rows.sort_unstable();
+        rows
+    }
+}
+
+/// Loaded IVF index over a quantized fabric: one optional entry per
+/// shard. `None` means that shard's index files were missing, truncated,
+/// or stale against the live shard — the engine falls back to a full
+/// coarse scan there (correctness is never a function of index health).
+pub struct IvfIndex {
+    shards: Vec<Option<IvfShard>>,
+}
+
+impl IvfIndex {
+    /// Load the index for every shard of `store` from `dir`, tolerating
+    /// per-shard damage (see type docs). Errors only on structural
+    /// impossibilities (manifest unreadable), not on index-file damage.
+    pub fn open(dir: &Path, store: &QuantShardedStore) -> Result<Self> {
+        let man = ShardManifest::load(dir)?;
+        ensure!(
+            man.n_shards() == store.n_shards(),
+            "manifest shard count {} disagrees with store {}",
+            man.n_shards(),
+            store.n_shards()
+        );
+        let mut shards = Vec::with_capacity(store.n_shards());
+        for si in 0..store.n_shards() {
+            let shard_dir = dir.join(&man.shard_dirs[si]);
+            shards.push(load_shard_index(&shard_dir, store.shard(si)).ok());
+        }
+        Ok(IvfIndex { shards })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The loaded index of shard `si`, or `None` if that shard fell back.
+    pub fn shard(&self, si: usize) -> Option<&IvfShard> {
+        self.shards[si].as_ref()
+    }
+
+    /// Shards that fell back to a full coarse scan (damaged/missing/stale
+    /// index files) — surfaced so operators can see degraded probes.
+    pub fn fallback_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.is_none()).count()
+    }
+
+    /// Largest per-shard cluster count (0 when every shard fell back) —
+    /// `nprobe >= max_clusters()` probes every cluster everywhere.
+    pub fn max_clusters(&self) -> usize {
+        self.shards
+            .iter()
+            .filter_map(|s| s.as_ref().map(IvfShard::clusters))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Validate and load one shard's index pair. Every rejection path is an
+/// `Err` — the caller degrades it to a per-shard fallback.
+fn load_shard_index(shard_dir: &Path, shard: &QuantStore) -> Result<IvfShard> {
+    let k = shard.k();
+    let rows = shard.rows();
+
+    let cbytes = std::fs::read(shard_dir.join(IVF_CENTROIDS_FILE))?;
+    ensure!(cbytes.len() >= HEADER_LEN, "centroids.bin truncated header");
+    ensure!(&cbytes[..8] == CENTROIDS_MAGIC, "bad centroids.bin magic");
+    let cver = u32::from_le_bytes(cbytes[8..12].try_into().unwrap());
+    ensure!(cver == VERSION, "centroids.bin version {cver} unsupported");
+    let ck = u32::from_le_bytes(cbytes[12..16].try_into().unwrap()) as usize;
+    ensure!(ck == k, "centroids.bin k={ck} != shard k={k}");
+    let c = u64::from_le_bytes(cbytes[16..24].try_into().unwrap()) as usize;
+    ensure!(c <= rows, "centroids.bin clusters {c} > shard rows {rows}");
+    ensure!(c >= 1 || rows == 0, "centroids.bin has zero clusters");
+    let need = HEADER_LEN + c * k * 4;
+    ensure!(cbytes.len() >= need, "centroids.bin truncated payload");
+    let mut centroids = vec![0.0f32; c * k];
+    for (i, v) in centroids.iter_mut().enumerate() {
+        let at = HEADER_LEN + i * 4;
+        *v = f32::from_le_bytes(cbytes[at..at + 4].try_into().unwrap());
+    }
+
+    let lbytes = std::fs::read(shard_dir.join(IVF_LISTS_FILE))?;
+    ensure!(lbytes.len() >= HEADER_LEN, "lists.bin truncated header");
+    ensure!(&lbytes[..8] == LISTS_MAGIC, "bad lists.bin magic");
+    let lver = u32::from_le_bytes(lbytes[8..12].try_into().unwrap());
+    ensure!(lver == VERSION, "lists.bin version {lver} unsupported");
+    let lc = u32::from_le_bytes(lbytes[12..16].try_into().unwrap()) as usize;
+    ensure!(lc == c, "lists.bin clusters {lc} != centroids.bin {c}");
+    let lrows = u64::from_le_bytes(lbytes[16..24].try_into().unwrap()) as usize;
+    // Staleness fence: a shard re-written (or re-finalized) after indexing
+    // invalidates the assignment lists.
+    ensure!(lrows == rows, "lists.bin rows {lrows} != live shard rows {rows} (stale index)");
+    let need = HEADER_LEN + c * 8 + rows * 4;
+    ensure!(lbytes.len() >= need, "lists.bin truncated payload");
+    let mut lens = Vec::with_capacity(c);
+    for ci in 0..c {
+        let at = HEADER_LEN + ci * 8;
+        lens.push(u64::from_le_bytes(lbytes[at..at + 8].try_into().unwrap()) as usize);
+    }
+    ensure!(
+        lens.iter().sum::<usize>() == rows,
+        "lists.bin lengths do not cover the shard"
+    );
+    let mut lists = Vec::with_capacity(c);
+    let mut seen = vec![false; rows];
+    let mut at = HEADER_LEN + c * 8;
+    for (ci, &len) in lens.iter().enumerate() {
+        let mut list = Vec::with_capacity(len);
+        let mut prev: Option<u32> = None;
+        for _ in 0..len {
+            let r = u32::from_le_bytes(lbytes[at..at + 4].try_into().unwrap());
+            at += 4;
+            ensure!((r as usize) < rows, "lists.bin row {r} out of range in cluster {ci}");
+            ensure!(prev.map_or(true, |p| p < r), "lists.bin cluster {ci} not sorted");
+            ensure!(!seen[r as usize], "lists.bin row {r} assigned twice");
+            seen[r as usize] = true;
+            prev = Some(r);
+            list.push(r);
+        }
+        lists.push(list);
+    }
+    Ok(IvfShard { k, centroids, lists })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::quant::quantize_store;
+    use crate::store::GradStoreWriter;
+    use crate::util::rng::Pcg32;
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("logra-ivf-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// f32 source -> sharded -> quantized store; returns the quantized dir.
+    fn quantized_fixture(name: &str, n: usize, k: usize, shards: usize) -> PathBuf {
+        let src = tmpdir(&format!("{name}-src"));
+        let mut rng = Pcg32::seeded(0x1F5);
+        let mut rows = vec![0.0f32; n * k];
+        rng.fill_normal(&mut rows, 1.0);
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let mut w = GradStoreWriter::create(&src, k).unwrap();
+        w.append(&ids, &rows).unwrap();
+        w.finalize().unwrap();
+        let sharded = tmpdir(&format!("{name}-sharded"));
+        crate::store::shard_store(&src, &sharded, shards).unwrap();
+        let dst = tmpdir(&format!("{name}-q8"));
+        quantize_store(&sharded, &dst).unwrap();
+        dst
+    }
+
+    #[test]
+    fn build_open_roundtrip_covers_every_row() {
+        let dir = quantized_fixture("roundtrip", 120, 12, 3);
+        let report = build_index(&dir, 5, 42).unwrap();
+        assert_eq!(report.shards, 3);
+        assert_eq!(report.clusters, vec![5, 5, 5]);
+        assert_eq!(ShardManifest::load(&dir).unwrap().index.as_deref(), Some("ivf"));
+
+        let store = QuantShardedStore::open(&dir).unwrap();
+        let index = IvfIndex::open(&dir, &store).unwrap();
+        assert_eq!(index.fallback_shards(), 0);
+        assert_eq!(index.max_clusters(), 5);
+        for si in 0..3 {
+            let sh = index.shard(si).expect("valid shard index");
+            let total: usize = (0..sh.clusters()).map(|c| sh.list(c).len()).sum();
+            assert_eq!(total, store.shard(si).rows());
+            // Full probe touches every row exactly once, sorted.
+            let pre = vec![0.5f32; 12];
+            let probed = sh.probe(&pre, 1, sh.clusters());
+            assert_eq!(probed.len(), store.shard(si).rows());
+            assert!(probed.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic_per_seed() {
+        let dir_a = quantized_fixture("det-a", 80, 8, 2);
+        let dir_b = quantized_fixture("det-b", 80, 8, 2);
+        build_index(&dir_a, 4, 7).unwrap();
+        build_index(&dir_b, 4, 7).unwrap();
+        for si in 0..2 {
+            let sd = format!("shard-{si:04}");
+            for f in [IVF_CENTROIDS_FILE, IVF_LISTS_FILE] {
+                let a = std::fs::read(dir_a.join(&sd).join(f)).unwrap();
+                let b = std::fs::read(dir_b.join(&sd).join(f)).unwrap();
+                assert_eq!(a, b, "{sd}/{f} differs across identical builds");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_lists_fall_back_per_shard() {
+        let dir = quantized_fixture("truncate", 90, 6, 3);
+        build_index(&dir, 4, 1).unwrap();
+        // Crash simulation: shard 1's lists.bin is cut mid-payload.
+        let lpath = dir.join("shard-0001").join(IVF_LISTS_FILE);
+        let bytes = std::fs::read(&lpath).unwrap();
+        std::fs::write(&lpath, &bytes[..bytes.len() / 2]).unwrap();
+
+        let store = QuantShardedStore::open(&dir).unwrap();
+        let index = IvfIndex::open(&dir, &store).unwrap();
+        assert_eq!(index.fallback_shards(), 1);
+        assert!(index.shard(0).is_some());
+        assert!(index.shard(1).is_none(), "damaged shard must fall back");
+        assert!(index.shard(2).is_some());
+    }
+
+    #[test]
+    fn missing_files_and_bad_magic_fall_back() {
+        let dir = quantized_fixture("missing", 40, 4, 2);
+        // No index built at all: every shard falls back, open still works.
+        let store = QuantShardedStore::open(&dir).unwrap();
+        let index = IvfIndex::open(&dir, &store).unwrap();
+        assert_eq!(index.fallback_shards(), 2);
+        assert_eq!(index.max_clusters(), 0);
+
+        build_index(&dir, 3, 2).unwrap();
+        std::fs::write(dir.join("shard-0000").join(IVF_CENTROIDS_FILE), b"JUNKJUNK").unwrap();
+        let index = IvfIndex::open(&dir, &store).unwrap();
+        assert_eq!(index.fallback_shards(), 1);
+    }
+
+    #[test]
+    fn clusters_capped_at_shard_rows() {
+        let dir = quantized_fixture("cap", 10, 4, 2);
+        let report = build_index(&dir, 64, 3).unwrap();
+        assert_eq!(report.clusters, vec![5, 5]);
+        let store = QuantShardedStore::open(&dir).unwrap();
+        let index = IvfIndex::open(&dir, &store).unwrap();
+        assert_eq!(index.fallback_shards(), 0);
+        assert_eq!(index.max_clusters(), 5);
+    }
+
+    #[test]
+    fn rejects_f32_and_unmanifested_stores() {
+        let src = tmpdir("reject-f32");
+        let mut w = GradStoreWriter::create(&src, 4).unwrap();
+        w.append(&[0], &[1.0; 4]).unwrap();
+        w.finalize().unwrap();
+        // Bare v1 dir: no manifest to advertise the index in.
+        assert!(build_index(&src, 2, 0).is_err());
+        let sharded = tmpdir("reject-f32-sharded");
+        crate::store::shard_store(&src, &sharded, 1).unwrap();
+        // Manifested but f32: the index clusters int8 codes.
+        let err = build_index(&sharded, 2, 0).unwrap_err().to_string();
+        assert!(err.contains("codec"), "unexpected error: {err}");
+    }
+}

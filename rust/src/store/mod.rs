@@ -37,14 +37,25 @@
 //! `scales.bin` + `ids.bin`, manifest `"codec": "int8"`) — ~4x smaller and
 //! ~4x less scan bandwidth; see [`quant`] and the two-stage query engine
 //! in `valuation::twostage`.
+//!
+//! An **IVF index** (`logra store index`) adds per-shard
+//! `centroids.bin` + `lists.bin` files next to the codes and an
+//! `"index": "ivf"` manifest field, giving queries a sublinear stage-0
+//! candidate generator; see [`ivf`] and the IVF engine in
+//! `valuation::ann`. Manifests without the field parse unchanged.
 
 pub mod grad_store;
+pub mod ivf;
 pub mod mmap;
 pub mod quant;
 pub mod shards;
 pub mod writer_thread;
 
 pub use grad_store::{GradStore, GradStoreWriter};
+pub use ivf::{
+    build_index, IvfBuildReport, IvfIndex, IvfShard, IVF_CENTROIDS_FILE, IVF_INDEX_NAME,
+    IVF_LISTS_FILE,
+};
 pub use mmap::Mmap;
 pub use quant::{
     quantize_store, QuantShardedStore, QuantStore, QuantWriter, QUANT_BLOCK, QUANT_CODES_FILE,

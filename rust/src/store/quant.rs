@@ -498,6 +498,7 @@ pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
         k,
         codec: StoreCodec::Int8,
         rescore_dir: rescore_dir.clone(),
+        index: None,
         shard_dirs: shard_dirs.clone(),
         shard_rows: vec![0; store.n_shards()],
     }
@@ -515,7 +516,14 @@ pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
         }
         shard_rows.push(w.finalize()?);
     }
-    let man = ShardManifest { k, codec: StoreCodec::Int8, rescore_dir, shard_dirs, shard_rows };
+    let man = ShardManifest {
+        k,
+        codec: StoreCodec::Int8,
+        rescore_dir,
+        index: None,
+        shard_dirs,
+        shard_rows,
+    };
     man.save(dst)?;
     Ok(man)
 }

@@ -79,6 +79,12 @@ pub struct ShardManifest {
     /// Advisory (the source may have moved); absent on f32 stores and on
     /// pre-PR5 quantized manifests.
     pub rescore_dir: Option<String>,
+    /// Quantized stores only: name of the stage-0 ANN index persisted
+    /// alongside the codes (`"ivf"` once `logra store index` has run —
+    /// per-shard `centroids.bin` + `lists.bin`, see [`super::ivf`]).
+    /// Absent on f32 stores and on pre-index manifests, which parse
+    /// unchanged.
+    pub index: Option<String>,
     pub shard_dirs: Vec<String>,
     pub shard_rows: Vec<u64>,
 }
@@ -113,6 +119,9 @@ impl ShardManifest {
         s.push_str(&format!("  \"codec\": \"{}\",\n", self.codec.as_str()));
         if let Some(rd) = &self.rescore_dir {
             s.push_str(&format!("  \"rescore_dir\": \"{rd}\",\n"));
+        }
+        if let Some(ix) = &self.index {
+            s.push_str(&format!("  \"index\": \"{ix}\",\n"));
         }
         s.push_str("  \"shards\": [\n");
         for (i, (dir, rows)) in self.shard_dirs.iter().zip(&self.shard_rows).enumerate() {
@@ -156,6 +165,15 @@ impl ShardManifest {
                     .to_string(),
             ),
         };
+        // Optional stage-0 index advertisement (quantized stores, PR 8+).
+        let index = match root.get("index") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("shard manifest: \"index\" must be a string"))?
+                    .to_string(),
+            ),
+        };
         let shards = root
             .get("shards")
             .and_then(json::Json::as_arr)
@@ -179,7 +197,7 @@ impl ShardManifest {
             shard_rows.push(rows);
         }
         ensure!(!shard_dirs.is_empty(), "shard manifest: zero shards");
-        Ok(ShardManifest { k, codec, rescore_dir, shard_dirs, shard_rows })
+        Ok(ShardManifest { k, codec, rescore_dir, index, shard_dirs, shard_rows })
     }
 
     pub fn load(dir: &Path) -> Result<Self> {
@@ -284,6 +302,7 @@ impl ShardedWriter {
             k,
             codec: StoreCodec::F32,
             rescore_dir: None,
+            index: None,
             shard_dirs: (0..n_shards).map(shard_dir_name).collect(),
             shard_rows: vec![0; n_shards],
         };
@@ -336,6 +355,7 @@ impl ShardedWriter {
             k,
             codec: StoreCodec::F32,
             rescore_dir: None,
+            index: None,
             shard_dirs: (0..shard_rows.len()).map(shard_dir_name).collect(),
             shard_rows,
         };
@@ -548,6 +568,8 @@ impl ShardBytes {
 #[derive(Clone, Debug)]
 pub struct StoreStat {
     pub codec: StoreCodec,
+    /// Stage-0 index advertised by the manifest (`"ivf"`), if any.
+    pub index: Option<String>,
     pub shards: usize,
     pub rows: usize,
     pub k: usize,
@@ -561,18 +583,20 @@ pub struct StoreStat {
 /// Inspect a store directory (v1, sharded, or quantized) from its durable
 /// headers, dispatching on the manifest's codec.
 pub fn stat_store(dir: &Path) -> Result<StoreStat> {
-    let codec = if dir.join(SHARD_MANIFEST).exists() {
-        ShardManifest::load(dir)?.codec
+    let (codec, index) = if dir.join(SHARD_MANIFEST).exists() {
+        let man = ShardManifest::load(dir)?;
+        (man.codec, man.index)
     } else if dir.join(super::quant::QUANT_CODES_FILE).exists() {
-        StoreCodec::Int8
+        (StoreCodec::Int8, None)
     } else {
-        StoreCodec::F32
+        (StoreCodec::F32, None)
     };
     match codec {
         StoreCodec::F32 => {
             let store = ShardedStore::open(dir)?;
             Ok(StoreStat {
                 codec,
+                index,
                 shards: store.n_shards(),
                 rows: store.rows(),
                 k: store.k(),
@@ -590,6 +614,7 @@ pub fn stat_store(dir: &Path) -> Result<StoreStat> {
             let store = super::quant::QuantShardedStore::open(dir)?;
             Ok(StoreStat {
                 codec,
+                index,
                 shards: store.n_shards(),
                 rows: store.rows(),
                 k: store.k(),
@@ -628,6 +653,9 @@ impl StoreStat {
         };
         let mut s = String::new();
         s.push_str(&format!("codec         {}\n", self.codec.as_str()));
+        if let Some(ix) = &self.index {
+            s.push_str(&format!("index         {ix}\n"));
+        }
         s.push_str(&format!("shards        {}\n", self.shards));
         s.push_str(&format!("rows          {}\n", self.rows));
         s.push_str(&format!("k             {}\n", self.k));
@@ -710,15 +738,21 @@ mod tests {
 
     #[test]
     fn manifest_json_roundtrip() {
-        for (codec, rescore_dir) in [
-            (StoreCodec::F32, None),
-            (StoreCodec::Int8, None),
-            (StoreCodec::Int8, Some("/data/exact-store".to_string())),
+        for (codec, rescore_dir, index) in [
+            (StoreCodec::F32, None, None),
+            (StoreCodec::Int8, None, None),
+            (StoreCodec::Int8, Some("/data/exact-store".to_string()), None),
+            (
+                StoreCodec::Int8,
+                Some("/data/exact-store".to_string()),
+                Some("ivf".to_string()),
+            ),
         ] {
             let man = ShardManifest {
                 k: 192,
                 codec,
                 rescore_dir,
+                index,
                 shard_dirs: vec!["shard-0000".into(), "shard-0001".into()],
                 shard_rows: vec![128, 130],
             };
@@ -740,6 +774,8 @@ mod tests {
         assert_eq!(man.codec, StoreCodec::F32);
         // And no rescore pointer (pre-PR5 manifests never carry one).
         assert_eq!(man.rescore_dir, None);
+        // Nor an index advertisement (pre-PR8).
+        assert_eq!(man.index, None);
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! IVF-probed sublinear query engine over an indexed quantized store.
+//!
+//! Stage 0 probes each shard's IVF index ([`IvfIndex`], built by
+//! `logra store index`): the preconditioned test rows rank the shard's
+//! k-means centroids by inner product and the union of each row's top
+//! `nprobe` clusters names the candidate rows. Stage 1 then runs the SAME
+//! int8 block-dot coarse scan as [`TwoStageEngine`](super::TwoStageEngine)
+//! — but only over the probed rows, coalesced into contiguous runs —
+//! and stage 2 is the two-stage engine's exact f32 rescore, shared
+//! verbatim through its pending-rescore handle. The linear int8 pass
+//! becomes sublinear in corpus size; the rescore was already sublinear.
+//!
+//! Determinism and the bit-identity anchor: the probed row set is a pure
+//! function of (index bytes, test rows, `nprobe`), the scan kernel scores
+//! each row independently of its chunk neighbors, and [`TopK`]'s total
+//! order is push-order independent — so with `nprobe >=` every shard's
+//! cluster count the probe names every row and the output is
+//! **bit-identical** to the two-stage engine (`rust/tests/ann.rs`,
+//! `rust/tests/backend.rs`). Smaller probes trade recall for scanned
+//! rows; the probed-rows counter (`logra_rows_probed_total`) makes the
+//! saving observable.
+//!
+//! Index health is per shard: a shard whose index files are missing,
+//! truncated, or stale opens as a fallback ([`IvfIndex::shard`] returns
+//! `None`) and is scanned in full — degraded latency, never degraded
+//! correctness.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::hessian::Preconditioner;
+use crate::linalg::kernels::{auto_chunk_len, scan_q8_into};
+use crate::linalg::ScanScratch;
+use crate::obs::ScanObs;
+use crate::store::quant::{blocks_of, quantize_rows, QuantShardedStore};
+use crate::store::{IvfIndex, ShardedStore};
+use crate::util::topk::TopK;
+
+use super::backend::{
+    BackendChoice, BackendConfig, BackendKind, GradQuery, PendingScores, QueryRequest,
+    ReportCtx, ScanBackend, ValuationError,
+};
+use super::parallel::{
+    cached_self_influences, resolve_chunk_len_self_inf, resolve_workers, scatter_gather,
+};
+use super::pool::ScanHandle;
+use super::scorer::Normalization;
+use super::twostage::PendingRescore;
+
+/// IVF-probed influence scorer: stage-0 centroid probe, stage-1 int8
+/// coarse scan of the probed rows, stage-2 exact rescore. `Send + Sync` —
+/// share behind an `Arc` and query concurrently.
+pub struct IvfEngine {
+    quant: Arc<QuantShardedStore>,
+    index: Arc<IvfIndex>,
+    exact: Arc<ShardedStore>,
+    precond: Arc<Preconditioner>,
+    cfg: BackendConfig,
+    /// Self-influence per GLOBAL row (RelatIF denominators), computed from
+    /// the EXACT store — all stages divide by the same denominators.
+    self_inf: Mutex<Option<Arc<Vec<f32>>>>,
+}
+
+impl IvfEngine {
+    /// The index must have been built over THIS quantized store (same
+    /// shard decomposition; stale shards degrade to full scans), and the
+    /// quantized copy must mirror the exact store row-for-row. Rejects a
+    /// mismatched pairing — and a zero `rescore_factor` or `nprobe` —
+    /// with a typed [`ValuationError`] at construction.
+    pub fn new(
+        quant: Arc<QuantShardedStore>,
+        index: Arc<IvfIndex>,
+        exact: Arc<ShardedStore>,
+        precond: Arc<Preconditioner>,
+        cfg: BackendConfig,
+    ) -> Result<Self, ValuationError> {
+        if quant.k() != exact.k() {
+            return Err(ValuationError::InvalidConfig(format!(
+                "quantized store k={} disagrees with exact store k={}",
+                quant.k(),
+                exact.k()
+            )));
+        }
+        if quant.rows() != exact.rows() {
+            return Err(ValuationError::InvalidConfig(format!(
+                "quantized store has {} rows, exact store {} — stale quantized copy?",
+                quant.rows(),
+                exact.rows()
+            )));
+        }
+        if index.n_shards() != quant.n_shards() {
+            return Err(ValuationError::InvalidConfig(format!(
+                "IVF index covers {} shards, quantized store has {} — stale index?",
+                index.n_shards(),
+                quant.n_shards()
+            )));
+        }
+        if cfg.rescore_factor == 0 {
+            return Err(ValuationError::InvalidConfig(
+                "rescore_factor must be ≥ 1 (stage-1 candidate pool multiplier)".into(),
+            ));
+        }
+        if cfg.nprobe == 0 {
+            return Err(ValuationError::InvalidConfig(
+                "nprobe must be ≥ 1 (clusters probed per shard)".into(),
+            ));
+        }
+        Ok(IvfEngine { quant, index, exact, precond, cfg, self_inf: Mutex::new(None) })
+    }
+
+    /// Stage-1 candidate pool size for a requested top-k.
+    pub fn pool_size(&self, topk: usize) -> usize {
+        self.cfg
+            .rescore_factor
+            .max(1)
+            .saturating_mul(topk.max(1))
+            .min(self.exact.rows().max(1))
+    }
+
+    /// Shards currently degraded to a full coarse scan (damaged or stale
+    /// index files).
+    pub fn fallback_shards(&self) -> usize {
+        self.index.fallback_shards()
+    }
+
+    /// Self-influence of each stored row in global order, from the exact
+    /// store (computed once in parallel, then cached).
+    pub fn train_self_influences(&self) -> Arc<Vec<f32>> {
+        cached_self_influences(
+            &self.self_inf,
+            &self.exact,
+            &self.precond,
+            resolve_workers(self.cfg.workers, self.exact.n_shards()),
+            resolve_chunk_len_self_inf(self.cfg.chunk_len, self.exact.k()),
+        )
+    }
+
+    /// Admission body behind [`ScanBackend::submit`]: probe the index,
+    /// run (or enqueue) the stage-1 coarse scan over the probed rows; the
+    /// returned handle's `wait` merges candidate pools and performs the
+    /// exact rescore on the calling thread (shared with the two-stage
+    /// engine via [`PendingRescore`]).
+    fn submit_grads(&self, q: GradQuery, nprobe: usize) -> Result<PendingScores, ValuationError> {
+        let GradQuery { rows: test_grads, nt, topk, norm } = q;
+        let k = self.exact.k();
+        let scan_obs = self.cfg.metrics.as_ref().map(|m| Arc::new(ScanObs::new(&m.obs)));
+        let pre = self.precond.apply_rows(&test_grads, nt);
+        let selfs: Option<Arc<Vec<f32>>> = match norm {
+            Normalization::RelatIf => Some(self.train_self_influences()),
+            Normalization::None => None,
+        };
+        let pool_size = self.pool_size(topk);
+
+        // ------------------------------------------------- stage 0: probe
+        // Rank centroids per shard and name the candidate rows. Runs at
+        // admission, on the admitting thread — it is tiny (clusters × k
+        // per shard) next to the scan it prunes.
+        let probe_start = self.cfg.metrics.as_ref().map(|m| m.obs.now_nanos());
+        let tp = Instant::now();
+        let probed: Vec<Vec<u32>> = (0..self.quant.n_shards())
+            .map(|si| match self.index.shard(si) {
+                Some(sh) => sh.probe(&pre, nt, nprobe),
+                // Fallback shard: scan it in full.
+                None => (0..self.quant.shard(si).rows() as u32).collect(),
+            })
+            .collect();
+        let probed_rows: u64 = probed.iter().map(|p| p.len() as u64).sum();
+        if let Some(m) = &self.cfg.metrics {
+            m.rows_probed.fetch_add(probed_rows, std::sync::atomic::Ordering::Relaxed);
+            if let Some(so) = &scan_obs {
+                m.obs.span(
+                    "probe",
+                    so.query(),
+                    None,
+                    probe_start.unwrap_or(0),
+                    tp.elapsed().as_nanos() as u64,
+                );
+            }
+        }
+
+        // The report's `rows_scanned` is the PROBED row count — the whole
+        // point of the index is that it is below the corpus row count.
+        let ctx = match (&self.cfg.metrics, &scan_obs) {
+            (Some(m), Some(so)) => Some(ReportCtx::new(
+                m.clone(),
+                so.clone(),
+                BackendKind::Ivf.name(),
+                self.quant.n_shards() as u32,
+                probed_rows,
+            )),
+            _ => None,
+        };
+        let t0 = Instant::now();
+
+        // ------------------------------------------------ stage 1: coarse
+        let scan = if self.exact.rows() == 0 {
+            ScanHandle::Ready(Vec::new())
+        } else {
+            let (t_codes, t_scales) = quantize_rows(&pre, nt, k);
+            let q8_row_bytes = k + blocks_of(k) * 4;
+            let chunk_len = if self.cfg.chunk_len != 0 {
+                self.cfg.chunk_len
+            } else {
+                auto_chunk_len(k, nt, q8_row_bytes)
+            };
+            if let Some(m) = &self.cfg.metrics {
+                m.scan_chunk_len.store(chunk_len as u64, std::sync::atomic::Ordering::Relaxed);
+            }
+            match &self.cfg.pool {
+                Some(pool) => {
+                    let quant = self.quant.clone();
+                    let metrics = self.cfg.metrics.clone();
+                    let selfs = selfs.clone();
+                    let scan_obs = scan_obs.clone();
+                    let t_codes = Arc::new(t_codes);
+                    let t_scales = Arc::new(t_scales);
+                    let probed = Arc::new(probed);
+                    ScanHandle::Pool(pool.submit_with_scratch(
+                        self.quant.n_shards(),
+                        move |si, scratch| {
+                            scan_shard_q8_probed(
+                                &quant,
+                                si,
+                                &probed[si],
+                                &t_codes,
+                                &t_scales,
+                                nt,
+                                pool_size,
+                                selfs.as_ref().map(|s| s.as_slice()),
+                                chunk_len,
+                                metrics.as_deref(),
+                                scan_obs.as_deref(),
+                                scratch,
+                            )
+                        },
+                    )?)
+                }
+                None => {
+                    let quant = &self.quant;
+                    let met = self.cfg.metrics.as_deref();
+                    let so_ref = scan_obs.as_deref();
+                    let tc: &[i8] = &t_codes;
+                    let ts: &[f32] = &t_scales;
+                    let selfs_ref: Option<&[f32]> = selfs.as_ref().map(|s| s.as_slice());
+                    let probed_ref: &[Vec<u32>] = &probed;
+                    ScanHandle::Ready(scatter_gather(
+                        self.workers(),
+                        quant.n_shards(),
+                        &|si, scratch| {
+                            scan_shard_q8_probed(
+                                quant,
+                                si,
+                                &probed_ref[si],
+                                tc,
+                                ts,
+                                nt,
+                                pool_size,
+                                selfs_ref,
+                                chunk_len,
+                                met,
+                                so_ref,
+                                scratch,
+                            )
+                        },
+                    ))
+                }
+            }
+        };
+        Ok(PendingScores::rescore(PendingRescore::new(
+            scan,
+            pre,
+            selfs,
+            self.exact.clone(),
+            self.cfg.metrics.clone(),
+            nt,
+            topk,
+            pool_size,
+            t0,
+            ctx,
+        )))
+    }
+}
+
+impl ScanBackend for IvfEngine {
+    fn submit(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
+        // Per-request probe width: the one IVF knob a request may carry.
+        let nprobe = match req.backend {
+            Some(BackendChoice::Ann { nprobe: Some(n) }) => {
+                if n == 0 {
+                    return Err(ValuationError::InvalidConfig(
+                        "nprobe must be ≥ 1 (clusters probed per shard)".into(),
+                    ));
+                }
+                n
+            }
+            _ => self.cfg.nprobe,
+        };
+        self.submit_grads(req.resolve(self.cfg.norm, self.exact.k())?, nprobe)
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Ivf
+    }
+
+    fn rows(&self) -> usize {
+        self.exact.rows()
+    }
+
+    fn k(&self) -> usize {
+        self.exact.k()
+    }
+
+    /// Resolved stage-1 worker count (the pool's when attached).
+    fn workers(&self) -> usize {
+        match &self.cfg.pool {
+            Some(pool) => pool.workers(),
+            None => resolve_workers(self.cfg.workers, self.quant.n_shards()),
+        }
+    }
+
+    /// Approximate twice over: the probe bounds recall before the rescore
+    /// pool does.
+    fn exact(&self) -> bool {
+        false
+    }
+
+    fn gradient_row(&self, i: usize) -> Option<Vec<f32>> {
+        (i < self.exact.rows()).then(|| self.exact.row(i).to_vec())
+    }
+}
+
+/// Stage-1 scan of one shard's PROBED rows (local indices, sorted
+/// ascending): contiguous index runs are coalesced into single kernel
+/// calls capped at `chunk_len`, so a full probe degenerates into exactly
+/// the two-stage engine's chunk walk. Pools hold (approximate score,
+/// GLOBAL row index) like the full scan's.
+#[allow(clippy::too_many_arguments)]
+fn scan_shard_q8_probed(
+    quant: &QuantShardedStore,
+    si: usize,
+    probed: &[u32],
+    t_codes: &[i8],
+    t_scales: &[f32],
+    nt: usize,
+    pool: usize,
+    selfs: Option<&[f32]>,
+    chunk_len: usize,
+    metrics: Option<&Metrics>,
+    scan_obs: Option<&ScanObs>,
+    scratch: &mut ScanScratch,
+) -> Vec<TopK> {
+    let obs_start = metrics.map(|m| m.obs.now_nanos());
+    if let (Some(m), Some(so)) = (metrics, scan_obs) {
+        so.task_started(&m.obs);
+    }
+    let t0 = Instant::now();
+    let k = quant.k();
+    let shard = quant.shard(si);
+    let base = quant.shard_start(si);
+    let mut heaps: Vec<TopK> = (0..nt).map(|_| TopK::new(pool)).collect();
+    let mut i = 0usize;
+    while i < probed.len() {
+        // Coalesce a contiguous ascending run, capped at the chunk size.
+        let at = probed[i] as usize;
+        let mut len = 1usize;
+        while i + len < probed.len()
+            && len < chunk_len
+            && probed[i + len] as usize == at + len
+        {
+            len += 1;
+        }
+        let scores = scratch.score_buf(nt * len);
+        scan_q8_into(
+            t_codes,
+            t_scales,
+            nt,
+            shard.codes_chunk(at, len),
+            shard.scales_chunk(at, len),
+            len,
+            k,
+            scores,
+        );
+        for (t, heap) in heaps.iter_mut().enumerate() {
+            let srow = &scores[t * len..(t + 1) * len];
+            for (j, &s) in srow.iter().enumerate() {
+                let g = base + at + j;
+                // Same RelatIF denominators as stage 2, so the pool chases
+                // the ranking the rescore will finalize.
+                let s = match selfs {
+                    Some(si_all) => {
+                        s as f64 / (si_all[g].max(0.0) as f64).sqrt().max(1e-12)
+                    }
+                    None => s as f64,
+                };
+                heap.push(s, g as u64);
+            }
+        }
+        i += len;
+    }
+    if let Some(m) = metrics {
+        m.shards_scanned.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dur = t0.elapsed();
+        Metrics::add_seconds(&m.shard_scan_nanos, dur.as_secs_f64());
+        let dur_nanos = dur.as_nanos() as u64;
+        m.obs.shard_scan.record(dur_nanos);
+        m.obs.span(
+            "scan",
+            scan_obs.map(|s| s.query()).unwrap_or(0),
+            Some(si as u32),
+            obs_start.unwrap_or(0),
+            dur_nanos,
+        );
+    }
+    heaps
+}

@@ -9,11 +9,11 @@
 //!   hand back a [`PendingScores`] completion handle. Implemented by the
 //!   sequential reference ([`SequentialEngine`]), the parallel f32
 //!   scan-and-merge engine
-//!   ([`ParallelQueryEngine`](super::ParallelQueryEngine)), and the
-//!   two-stage quantized engine
-//!   ([`TwoStageEngine`](super::TwoStageEngine)). Future backends (an ANN
-//!   reranker, remote shards) implement the same trait instead of growing
-//!   another dispatch-enum arm.
+//!   ([`ParallelQueryEngine`](super::ParallelQueryEngine)), the two-stage
+//!   quantized engine ([`TwoStageEngine`](super::TwoStageEngine)), and the
+//!   IVF-probed sublinear engine ([`IvfEngine`](super::IvfEngine)).
+//!   Future backends (remote shards) implement the same trait instead of
+//!   growing another dispatch-enum arm.
 //! - [`PendingScores`]: the ONE completion handle every backend returns —
 //!   `wait()` yields per-test-row [`QueryResult`]s, and a pool-worker
 //!   panic surfaces as [`ValuationError::QueryPoisoned`] (distinguishable
@@ -27,18 +27,31 @@
 //!
 //! # `Backend::Auto` resolution rules
 //!
-//! | fabric codec | shards | pool            | backend        |
-//! |--------------|--------|-----------------|----------------|
-//! | f32          | 1      | `Off`/`Auto`    | sequential     |
-//! | f32          | 1      | `Shared`        | parallel-f32   |
-//! | f32          | >1     | any             | parallel-f32   |
-//! | int8         | any    | any             | two-stage      |
+//! | fabric codec | IVF index | shards | pool            | backend        |
+//! |--------------|-----------|--------|-----------------|----------------|
+//! | f32          | —         | 1      | `Off`/`Auto`    | sequential     |
+//! | f32          | —         | 1      | `Shared`        | parallel-f32   |
+//! | f32          | —         | >1     | any             | parallel-f32   |
+//! | int8         | absent    | any    | any             | two-stage      |
+//! | int8         | present   | any    | any             | ivf            |
 //!
 //! `Backend::Exact` follows the f32 rows of the table; on an int8 fabric
 //! it opens the fabric's exact f32 companion (the `rescore_dir` the
 //! manifest records at `logra store quantize` time, or an explicit
 //! [`ValuatorBuilder::rescore_store`]) and scans that.
-//! `Backend::Quantized` requires an int8 fabric.
+//! `Backend::Quantized` requires an int8 fabric (and stays two-stage even
+//! when an index is present); `Backend::Ann` additionally requires the
+//! `logra store index` IVF sidecar the manifest advertises.
+//!
+//! # Per-request backend selection
+//!
+//! The `Backend` passed to the builder only picks the DEFAULT engine. A
+//! [`Valuator`] builds every engine its fabric can serve (the exact f32
+//! scan always; two-stage and IVF on int8 fabrics) and routes each
+//! request by its optional [`QueryRequest::backend`] choice
+//! ([`BackendChoice`]) — `ann` queries can set a per-request `nprobe`. A
+//! choice the fabric cannot serve (e.g. `quantized` over an f32 store)
+//! is rejected at admission with [`ValuationError::InvalidConfig`].
 //!
 //! # Error taxonomy
 //!
@@ -59,11 +72,12 @@ use crate::hessian::{BlockHessian, Preconditioner};
 use crate::linalg::ScanScratch;
 use crate::obs::{QueryReport, ScanObs};
 use crate::store::{
-    QuantShardedStore, ShardManifest, ShardedStore, StoreCodec, QUANT_CODES_FILE,
-    SHARD_MANIFEST,
+    IvfIndex, QuantShardedStore, ShardManifest, ShardedStore, StoreCodec, IVF_INDEX_NAME,
+    QUANT_CODES_FILE, SHARD_MANIFEST,
 };
 use crate::util::topk::TopK;
 
+use super::ann::IvfEngine;
 use super::parallel::{
     cached_self_influences, resolve_chunk_len_f32, resolve_chunk_len_self_inf, scan_shard,
     PendingMerge,
@@ -162,31 +176,88 @@ impl QueryInput {
     }
 }
 
-/// One valuation request: input, per-request `topk`, and an optional
-/// per-request [`Normalization`] override (the backend's configured
-/// default applies when `None` — normalization is no longer frozen at
-/// config time).
+/// Per-request engine selection — the wire-level twin of the
+/// construction-time [`Backend`] enum, carried on [`QueryRequest`]. `Auto`
+/// (or an absent choice) serves on the valuator's default engine; the
+/// other variants route to a specific engine in the fabric's roster, and
+/// a choice the fabric cannot serve is rejected at admission with
+/// [`ValuationError::InvalidConfig`]. Construction-time knobs
+/// (`rescore_factor`) stay construction-time; only `nprobe`, the
+/// per-query recall/latency dial, is overridable per request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Whatever engine the valuator resolved as its default.
+    Auto,
+    /// The exact full-precision full scan.
+    Exact,
+    /// The two-stage int8 coarse scan + exact rescore.
+    Quantized,
+    /// The IVF-probed sublinear scan; `nprobe` overrides the engine's
+    /// configured probe width for this request (`None` = engine default).
+    Ann { nprobe: Option<usize> },
+}
+
+impl BackendChoice {
+    /// Parse the serve/CLI wire name (`auto | exact | quantized | ann`).
+    pub fn parse(s: &str) -> Option<BackendChoice> {
+        match s {
+            "auto" => Some(BackendChoice::Auto),
+            "exact" => Some(BackendChoice::Exact),
+            "quantized" => Some(BackendChoice::Quantized),
+            "ann" => Some(BackendChoice::Ann { nprobe: None }),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Exact => "exact",
+            BackendChoice::Quantized => "quantized",
+            BackendChoice::Ann { .. } => "ann",
+        }
+    }
+}
+
+/// One valuation request: input, per-request `topk`, an optional
+/// per-request [`Normalization`] override, and an optional per-request
+/// [`BackendChoice`] (the backend's configured defaults apply when `None`
+/// — neither normalization nor engine selection is frozen at config
+/// time).
 #[derive(Clone, Debug)]
 pub struct QueryRequest {
     pub input: QueryInput,
     pub topk: usize,
     pub norm: Option<Normalization>,
+    pub backend: Option<BackendChoice>,
 }
 
 impl QueryRequest {
     /// Value one token sequence (service-only input).
     pub fn tokens(tokens: Vec<i32>, topk: usize) -> Self {
-        QueryRequest { input: QueryInput::Tokens(tokens), topk, norm: None }
+        QueryRequest { input: QueryInput::Tokens(tokens), topk, norm: None, backend: None }
     }
 
     /// Value `nt` pre-projected gradient rows (row-major, `nt × k`).
     pub fn gradients(rows: Vec<f32>, nt: usize, topk: usize) -> Self {
-        QueryRequest { input: QueryInput::Gradients { rows, nt }, topk, norm: None }
+        QueryRequest {
+            input: QueryInput::Gradients { rows, nt },
+            topk,
+            norm: None,
+            backend: None,
+        }
     }
 
     /// Override the backend's default normalization for this request.
     pub fn with_norm(mut self, norm: Normalization) -> Self {
         self.norm = Some(norm);
+        self
+    }
+
+    /// Route this request to a specific engine (the [`Valuator`] honors
+    /// it; a bare engine serves whatever it is).
+    pub fn with_backend(mut self, backend: BackendChoice) -> Self {
+        self.backend = Some(backend);
         self
     }
 
@@ -235,9 +306,13 @@ pub struct BackendConfig {
     /// Rows scored per kernel call; 0 (default) derives the chunk from the
     /// query shape so one train chunk + the test block fit L2.
     pub chunk_len: usize,
-    /// Two-stage only: stage-1 candidate pool per test row as a multiple
-    /// of the requested top-k (must be ≥ 1).
+    /// Two-stage/IVF only: stage-1 candidate pool per test row as a
+    /// multiple of the requested top-k (must be ≥ 1).
     pub rescore_factor: usize,
+    /// IVF only: clusters probed per shard in stage 0 (must be ≥ 1; a
+    /// request can override it via [`BackendChoice::Ann`]). Probing every
+    /// cluster reproduces the two-stage engine bit-identically.
+    pub nprobe: usize,
     /// Default normalization; any request can override per call.
     pub norm: Normalization,
     /// Record scan counters into shared service metrics.
@@ -253,6 +328,7 @@ impl Default for BackendConfig {
             workers: 0,
             chunk_len: 0,
             rescore_factor: 4,
+            nprobe: 4,
             norm: Normalization::None,
             metrics: None,
             pool: None,
@@ -269,6 +345,7 @@ pub enum BackendKind {
     Sequential,
     Parallel,
     TwoStage,
+    Ivf,
 }
 
 impl BackendKind {
@@ -277,6 +354,7 @@ impl BackendKind {
             BackendKind::Sequential => "sequential",
             BackendKind::Parallel => "parallel-f32",
             BackendKind::TwoStage => "two-stage",
+            BackendKind::Ivf => "ivf",
         }
     }
 }
@@ -633,6 +711,10 @@ pub enum Backend {
     /// Int8 coarse scan + exact rescore of `rescore_factor × topk`
     /// candidates per test row. Requires an int8 fabric.
     Quantized { rescore_factor: usize },
+    /// IVF stage-0 probe (`nprobe` nearest clusters per shard) feeding the
+    /// int8 coarse scan + exact rescore. Requires an int8 fabric whose
+    /// manifest advertises a `logra store index` sidecar.
+    Ann { nprobe: usize, rescore_factor: usize },
 }
 
 /// How the [`Valuator`] runs its shard fan-out.
@@ -649,7 +731,12 @@ pub enum PoolMode {
 
 enum Fabric {
     F32(Arc<ShardedStore>),
-    Int8 { quant: Arc<QuantShardedStore>, rescore_dir: Option<PathBuf> },
+    Int8 {
+        quant: Arc<QuantShardedStore>,
+        rescore_dir: Option<PathBuf>,
+        /// Manifest advertises a `logra store index` IVF sidecar.
+        indexed: bool,
+    },
 }
 
 enum PrecondSource {
@@ -741,7 +828,8 @@ impl ValuatorBuilder {
     /// `logra store stat` reports.
     pub fn auto_kind(&self) -> BackendKind {
         match &self.fabric {
-            Fabric::Int8 { .. } => BackendKind::TwoStage,
+            Fabric::Int8 { indexed: true, .. } => BackendKind::Ivf,
+            Fabric::Int8 { indexed: false, .. } => BackendKind::TwoStage,
             Fabric::F32(s) => {
                 if s.n_shards() > 1 {
                     BackendKind::Parallel
@@ -779,28 +867,48 @@ impl ValuatorBuilder {
 
     /// Validate and construct. All configuration errors surface here, as
     /// typed [`ValuationError`]s, before any query is admitted.
+    ///
+    /// Every engine the fabric can serve is built (sharing the stores,
+    /// preconditioner, and pool), so per-request [`BackendChoice`]
+    /// overrides route without re-opening anything; `self.backend` only
+    /// picks which engine is the default.
     pub fn build(self) -> Result<Valuator, ValuationError> {
-        // 1. Resolve the engine choice against the fabric codec.
-        enum Choice {
-            Seq(Arc<ShardedStore>),
-            Par(Arc<ShardedStore>),
-            Two { quant: Arc<QuantShardedStore>, exact: Arc<ShardedStore>, factor: usize },
+        enum PrimaryKind {
+            ExactScan,
+            TwoStage,
+            Ivf,
         }
-        let choice = match (&self.backend, &self.fabric) {
+
+        // 1. Resolve the stores the engine roster shares: the exact f32
+        // substrate (always), the quantized copy and the IVF index (int8
+        // fabrics), and which engine `self.backend` makes primary.
+        let (exact, quant, index, primary): (
+            Arc<ShardedStore>,
+            Option<Arc<QuantShardedStore>>,
+            Option<Arc<IvfIndex>>,
+            PrimaryKind,
+        ) = match (&self.backend, &self.fabric) {
             (Backend::Auto | Backend::Exact, Fabric::F32(store)) => {
-                let fan_out =
-                    store.n_shards() > 1 || matches!(self.pool, PoolMode::Shared(_));
-                if fan_out {
-                    Choice::Par(store.clone())
-                } else {
-                    Choice::Seq(store.clone())
-                }
+                (store.clone(), None, None, PrimaryKind::ExactScan)
             }
-            (Backend::Exact, Fabric::Int8 { quant, rescore_dir }) => {
+            (Backend::Quantized { .. }, Fabric::F32(_)) => {
+                return Err(ValuationError::InvalidConfig(format!(
+                    "store {} uses the f32 codec; Backend::Quantized needs an int8 fabric \
+                     (`logra store quantize` one, then open the quantized copy)",
+                    self.dir.display()
+                )))
+            }
+            (Backend::Ann { .. }, Fabric::F32(_)) => {
+                return Err(ValuationError::InvalidConfig(format!(
+                    "store {} uses the f32 codec; Backend::Ann needs an int8 fabric with \
+                     an IVF index (`logra store quantize`, then `logra store index`)",
+                    self.dir.display()
+                )))
+            }
+            (_, Fabric::Int8 { quant, rescore_dir, indexed }) => {
                 let exact = self.exact_companion(rescore_dir)?;
                 // The companion is advisory (the source may have moved):
-                // reject one that no longer mirrors the quantized fabric,
-                // exactly like the two-stage pairing check does.
+                // reject one that no longer mirrors the quantized fabric.
                 if exact.rows() != quant.rows() || exact.k() != quant.k() {
                     return Err(ValuationError::InvalidConfig(format!(
                         "exact companion ({} rows, k={}) does not mirror quantized store {} \
@@ -813,47 +921,37 @@ impl ValuatorBuilder {
                         quant.k()
                     )));
                 }
-                let fan_out =
-                    exact.n_shards() > 1 || matches!(self.pool, PoolMode::Shared(_));
-                if fan_out {
-                    Choice::Par(exact)
+                let index = if *indexed {
+                    let ix = IvfIndex::open(&self.dir, quant)
+                        .map_err(|e| store_open_err(&self.dir, e))?;
+                    Some(Arc::new(ix))
                 } else {
-                    Choice::Seq(exact)
-                }
-            }
-            (Backend::Auto, Fabric::Int8 { quant, rescore_dir }) => Choice::Two {
-                quant: quant.clone(),
-                exact: self.exact_companion(rescore_dir)?,
-                factor: 4,
-            },
-            (Backend::Quantized { rescore_factor }, Fabric::Int8 { quant, rescore_dir }) => {
-                Choice::Two {
-                    quant: quant.clone(),
-                    exact: self.exact_companion(rescore_dir)?,
-                    factor: *rescore_factor,
-                }
-            }
-            (Backend::Quantized { .. }, Fabric::F32(_)) => {
-                return Err(ValuationError::InvalidConfig(format!(
-                    "store {} uses the f32 codec; Backend::Quantized needs an int8 fabric \
-                     (`logra store quantize` one, then open the quantized copy)",
-                    self.dir.display()
-                )))
+                    None
+                };
+                let primary = match &self.backend {
+                    Backend::Exact => PrimaryKind::ExactScan,
+                    Backend::Quantized { .. } => PrimaryKind::TwoStage,
+                    Backend::Ann { .. } if index.is_none() => {
+                        return Err(ValuationError::InvalidConfig(format!(
+                            "store {} has no IVF index; `logra store index` builds the \
+                             stage-0 sidecar Backend::Ann probes",
+                            self.dir.display()
+                        )))
+                    }
+                    Backend::Ann { .. } => PrimaryKind::Ivf,
+                    Backend::Auto if index.is_some() => PrimaryKind::Ivf,
+                    Backend::Auto => PrimaryKind::TwoStage,
+                };
+                (exact, Some(quant.clone()), index, primary)
             }
         };
-        // (A zero rescore_factor is rejected by TwoStageEngine::new below
-        // — the single owner of that rule.)
+        // (Zero rescore_factor / nprobe are rejected by the engine
+        // constructors below — the single owners of those rules.)
 
         // 2. Resolve the preconditioner (and validate its width).
-        let exact_for_fit: &Arc<ShardedStore> = match &choice {
-            Choice::Seq(s) | Choice::Par(s) => s,
-            Choice::Two { exact, .. } => exact,
-        };
         let precond = match self.precond {
             PrecondSource::Provided(p) => p,
-            PrecondSource::FitFromStore { damping } => {
-                fit_preconditioner(exact_for_fit, damping)?
-            }
+            PrecondSource::FitFromStore { damping } => fit_preconditioner(&exact, damping)?,
             PrecondSource::Missing => {
                 return Err(ValuationError::InvalidConfig(
                     "no preconditioner: pass ValuatorBuilder::preconditioner(...) \
@@ -862,48 +960,96 @@ impl ValuatorBuilder {
                 ))
             }
         };
-        if precond.k_total != exact_for_fit.k() {
+        if precond.k_total != exact.k() {
             return Err(ValuationError::InvalidConfig(format!(
                 "preconditioner width k={} disagrees with store k={}",
                 precond.k_total,
-                exact_for_fit.k()
+                exact.k()
             )));
         }
 
-        // 3. Resolve the pool (sequential backends never take one). A
-        // pool the builder spawns belongs to this Valuator; a Shared one
-        // stays the caller's, so shutdown leaves it serving its other
-        // attachees.
-        let (pool, owns_pool): (Option<Arc<ScanPool>>, bool) = match (&choice, &self.pool) {
-            (Choice::Seq(_), _) | (_, PoolMode::Off) => (None, false),
-            (_, PoolMode::Auto) => (Some(Arc::new(ScanPool::spawn(self.workers))), true),
-            (_, PoolMode::Shared(p)) => (Some(p.clone()), false),
+        // 3. Resolve the pool, keyed off the PRIMARY engine's fan-out
+        // shape (a sequential primary never takes one). A pool the
+        // builder spawns belongs to this Valuator; a Shared one stays the
+        // caller's, so shutdown leaves it serving its other attachees.
+        let shared_pool = matches!(self.pool, PoolMode::Shared(_));
+        let primary_fans_out = match primary {
+            PrimaryKind::ExactScan => exact.n_shards() > 1 || shared_pool,
+            PrimaryKind::TwoStage | PrimaryKind::Ivf => true,
         };
+        let (pool, owns_pool): (Option<Arc<ScanPool>>, bool) =
+            match (&self.pool, primary_fans_out) {
+                (PoolMode::Off, _) | (_, false) => (None, false),
+                (PoolMode::Auto, true) => (Some(Arc::new(ScanPool::spawn(self.workers))), true),
+                (PoolMode::Shared(p), true) => (Some(p.clone()), false),
+            };
         if let (Some(p), Some(m)) = (&pool, &self.metrics) {
             m.pool_workers
                 .store(p.workers() as u64, std::sync::atomic::Ordering::Relaxed);
         }
 
-        // 4. Build the backend behind the trait.
-        let cfg = BackendConfig {
+        // 4. Build the roster behind the trait. Index 0 is always the
+        // exact engine; two-stage and IVF follow on int8 fabrics.
+        let base_cfg = BackendConfig {
             workers: self.workers,
             chunk_len: self.chunk_len,
-            rescore_factor: match &choice {
-                Choice::Two { factor, .. } => *factor,
-                _ => 4,
-            },
+            rescore_factor: 4,
+            nprobe: 4,
             norm: self.norm,
             metrics: self.metrics,
             pool: pool.clone(),
         };
-        let backend: Box<dyn ScanBackend> = match choice {
-            Choice::Seq(store) => Box::new(SequentialEngine::new(store, precond, cfg)),
-            Choice::Par(store) => Box::new(ParallelQueryEngine::new(store, precond, cfg)),
-            Choice::Two { quant, exact, .. } => {
-                Box::new(TwoStageEngine::new(quant, exact, precond, cfg)?)
-            }
+        let mut engines: Vec<Box<dyn ScanBackend>> = Vec::new();
+        let exact_fans_out = exact.n_shards() > 1 || pool.is_some();
+        let exact_engine: Box<dyn ScanBackend> = if exact_fans_out {
+            Box::new(ParallelQueryEngine::new(exact.clone(), precond.clone(), base_cfg.clone()))
+        } else {
+            Box::new(SequentialEngine::new(exact.clone(), precond.clone(), base_cfg.clone()))
         };
-        Ok(Valuator { backend, pool, owns_pool })
+        engines.push(exact_engine);
+        if let Some(quant) = &quant {
+            let two_cfg = BackendConfig {
+                rescore_factor: match self.backend {
+                    Backend::Quantized { rescore_factor } => rescore_factor,
+                    _ => 4,
+                },
+                ..base_cfg.clone()
+            };
+            engines.push(Box::new(TwoStageEngine::new(
+                quant.clone(),
+                exact.clone(),
+                precond.clone(),
+                two_cfg,
+            )?));
+            if let Some(index) = &index {
+                let ivf_cfg = BackendConfig {
+                    rescore_factor: match self.backend {
+                        Backend::Ann { rescore_factor, .. } => rescore_factor,
+                        _ => 4,
+                    },
+                    // Auto default: probe a quarter of the clusters —
+                    // sublinear out of the box, overridable per request.
+                    nprobe: match self.backend {
+                        Backend::Ann { nprobe, .. } => nprobe,
+                        _ => index.max_clusters().div_ceil(4).max(1),
+                    },
+                    ..base_cfg.clone()
+                };
+                engines.push(Box::new(IvfEngine::new(
+                    quant.clone(),
+                    index.clone(),
+                    exact.clone(),
+                    precond.clone(),
+                    ivf_cfg,
+                )?));
+            }
+        }
+        let primary = match primary {
+            PrimaryKind::ExactScan => 0,
+            PrimaryKind::TwoStage => 1,
+            PrimaryKind::Ivf => engines.len() - 1,
+        };
+        Ok(Valuator { engines, primary, pool, owns_pool })
     }
 }
 
@@ -930,10 +1076,16 @@ fn fit_preconditioner(
 }
 
 /// Session facade: ONE object that opens the store fabric, owns the
-/// resolved [`ScanBackend`] (and its scan pool, if any), and answers
-/// queries. See the crate docs for a runnable quickstart.
+/// resolved engine roster (and its scan pool, if any), and answers
+/// queries — routing each request by its per-request [`BackendChoice`],
+/// defaulting to the builder-selected primary engine. See the crate docs
+/// for a runnable quickstart.
 pub struct Valuator {
-    backend: Box<dyn ScanBackend>,
+    /// Every engine the fabric can serve; index 0 is always the exact
+    /// f32 scan, so per-request `exact` routing never misses.
+    engines: Vec<Box<dyn ScanBackend>>,
+    /// Index of the builder-selected default engine.
+    primary: usize,
     pool: Option<Arc<ScanPool>>,
     /// True when the builder spawned `pool` ([`PoolMode::Auto`]);
     /// [`PoolMode::Shared`] pools belong to the caller and survive
@@ -944,10 +1096,11 @@ pub struct Valuator {
 impl std::fmt::Debug for Valuator {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Valuator")
-            .field("kind", &self.backend.kind())
-            .field("rows", &self.backend.rows())
-            .field("k", &self.backend.k())
-            .field("workers", &self.backend.workers())
+            .field("kind", &self.primary_engine().kind())
+            .field("engines", &self.engines.len())
+            .field("rows", &self.primary_engine().rows())
+            .field("k", &self.primary_engine().k())
+            .field("workers", &self.primary_engine().workers())
             .field("pooled", &self.pool.is_some())
             .finish()
     }
@@ -983,6 +1136,7 @@ impl Valuator {
                     Fabric::Int8 {
                         quant: Arc::new(q),
                         rescore_dir: man.rescore_dir.as_ref().map(PathBuf::from),
+                        indexed: man.index.as_deref() == Some(IVF_INDEX_NAME),
                     }
                 }
             }
@@ -990,7 +1144,7 @@ impl Valuator {
             // A bare quantized shard directory (no manifest): int8 fabric
             // with no recorded companion.
             let q = QuantShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?;
-            Fabric::Int8 { quant: Arc::new(q), rescore_dir: None }
+            Fabric::Int8 { quant: Arc::new(q), rescore_dir: None, indexed: false }
         } else {
             let s = ShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?;
             Fabric::F32(Arc::new(s))
@@ -1009,9 +1163,63 @@ impl Valuator {
         })
     }
 
+    fn primary_engine(&self) -> &dyn ScanBackend {
+        self.engines[self.primary].as_ref()
+    }
+
+    /// The engine a per-request [`BackendChoice`] routes to. `None` /
+    /// `Auto` serve on the primary; a choice this fabric cannot serve is
+    /// an [`ValuationError::InvalidConfig`] — the admission-time twin of
+    /// the builder's backend/codec validation.
+    fn engine_for(
+        &self,
+        choice: Option<BackendChoice>,
+    ) -> Result<&dyn ScanBackend, ValuationError> {
+        let want = match choice {
+            None | Some(BackendChoice::Auto) => return Ok(self.primary_engine()),
+            Some(BackendChoice::Exact) => {
+                // Index 0 is the exact engine by construction.
+                return Ok(self.engines[0].as_ref());
+            }
+            Some(BackendChoice::Quantized) => BackendKind::TwoStage,
+            Some(BackendChoice::Ann { .. }) => BackendKind::Ivf,
+        };
+        self.engines
+            .iter()
+            .map(|e| e.as_ref())
+            .find(|e| e.kind() == want)
+            .ok_or_else(|| {
+                let (name, hint) = match want {
+                    BackendKind::Ivf => (
+                        "ann",
+                        "the store has no IVF index — `logra store quantize` it, \
+                         then `logra store index`",
+                    ),
+                    _ => (
+                        "quantized",
+                        "the store uses the f32 codec — `logra store quantize` it, \
+                         then open the quantized copy",
+                    ),
+                };
+                ValuationError::InvalidConfig(format!(
+                    "this valuator cannot serve backend \"{name}\": {hint}"
+                ))
+            })
+    }
+
+    /// The [`BackendKind`] a request carrying `choice` would be served by
+    /// (what the serve layer reports as the actually-serving backend), or
+    /// the same [`ValuationError::InvalidConfig`] admission would raise.
+    pub fn resolved_kind(
+        &self,
+        choice: Option<BackendChoice>,
+    ) -> Result<BackendKind, ValuationError> {
+        self.engine_for(choice).map(|e| e.kind())
+    }
+
     /// Submit + wait (blocking).
     pub fn query(&self, req: QueryRequest) -> Result<Vec<QueryResult>, ValuationError> {
-        self.backend.query(req)
+        self.engine_for(req.backend)?.query(req)
     }
 
     /// Submit + wait, returning the per-query [`QueryReport`] stage
@@ -1021,12 +1229,12 @@ impl Valuator {
         &self,
         req: QueryRequest,
     ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {
-        self.backend.query_with_report(req)
+        self.engine_for(req.backend)?.query_with_report(req)
     }
 
     /// Admit a query without blocking on the scan.
     pub fn query_async(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
-        self.backend.submit(req)
+        self.engine_for(req.backend)?.submit(req)
     }
 
     /// Admit a batch of requests, then complete them in admission order.
@@ -1042,7 +1250,7 @@ impl Valuator {
     ) -> Result<Vec<Vec<QueryResult>>, ValuationError> {
         let pending: Vec<PendingScores> = reqs
             .into_iter()
-            .map(|r| self.backend.submit(r))
+            .map(|r| self.query_async(r))
             .collect::<Result<_, _>>()?;
         pending.into_iter().map(PendingScores::wait).collect()
     }
@@ -1068,32 +1276,34 @@ impl Valuator {
 
 /// The facade is itself a [`ScanBackend`]: anything serving through a
 /// `Box<dyn ScanBackend>` can hold a whole `Valuator` in that slot.
+/// Introspection reports the primary engine; `submit` honors per-request
+/// [`BackendChoice`] routing like the inherent query methods do.
 impl ScanBackend for Valuator {
     fn submit(&self, req: QueryRequest) -> Result<PendingScores, ValuationError> {
-        self.backend.submit(req)
+        self.engine_for(req.backend)?.submit(req)
     }
 
     fn kind(&self) -> BackendKind {
-        self.backend.kind()
+        self.primary_engine().kind()
     }
 
     fn rows(&self) -> usize {
-        self.backend.rows()
+        self.primary_engine().rows()
     }
 
     fn k(&self) -> usize {
-        self.backend.k()
+        self.primary_engine().k()
     }
 
     fn workers(&self) -> usize {
-        self.backend.workers()
+        self.primary_engine().workers()
     }
 
     fn exact(&self) -> bool {
-        self.backend.exact()
+        self.primary_engine().exact()
     }
 
     fn gradient_row(&self, i: usize) -> Option<Vec<f32>> {
-        self.backend.gradient_row(i)
+        self.primary_engine().gradient_row(i)
     }
 }

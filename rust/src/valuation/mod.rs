@@ -9,12 +9,16 @@
 //! codec, and serves `query` / `query_async` / `query_batch` through ONE
 //! [`PendingScores`] completion handle, with typed [`ValuationError`]s.
 //!
-//! Three backends implement the trait: [`SequentialEngine`] (one thread,
+//! Four backends implement the trait: [`SequentialEngine`] (one thread,
 //! the unsharded shape), [`parallel::ParallelQueryEngine`] (per-shard
-//! fan-out, deterministic merge), and [`twostage::TwoStageEngine`] (int8
-//! coarse scan + exact rescore of a small candidate pool). All three are
-//! bit-identical to the sequential [`QueryEngine`] native scan whenever
-//! exactness applies (`rust/tests/backend.rs`). Under serving load the
+//! fan-out, deterministic merge), [`twostage::TwoStageEngine`] (int8
+//! coarse scan + exact rescore of a small candidate pool), and
+//! [`ann::IvfEngine`] (IVF stage-0 probe pruning the coarse scan to the
+//! `nprobe` nearest clusters per shard). All four are bit-identical to
+//! the sequential [`QueryEngine`] native scan whenever exactness applies
+//! (`rust/tests/backend.rs`). A [`Valuator`] builds every engine its
+//! fabric can serve and routes per request via
+//! [`QueryRequest::backend`](backend::BackendChoice). Under serving load the
 //! fan-out backends attach to a persistent [`pool::ScanPool`], which
 //! admits concurrent queries and interleaves their shard tasks across
 //! warm workers. [`scorer::QueryEngine`] remains the borrow-based
@@ -26,15 +30,17 @@
 //! return a [`crate::obs::QueryReport`] stage breakdown via
 //! `query_with_report` / [`PendingScores::wait_with_report`].
 
+pub mod ann;
 pub mod backend;
 pub mod parallel;
 pub mod pool;
 pub mod scorer;
 pub mod twostage;
 
+pub use ann::IvfEngine;
 pub use backend::{
-    Backend, BackendConfig, BackendKind, PendingScores, PoolMode, QueryInput, QueryRequest,
-    ScanBackend, SequentialEngine, ValuationError, Valuator, ValuatorBuilder,
+    Backend, BackendChoice, BackendConfig, BackendKind, PendingScores, PoolMode, QueryInput,
+    QueryRequest, ScanBackend, SequentialEngine, ValuationError, Valuator, ValuatorBuilder,
 };
 pub use parallel::ParallelQueryEngine;
 pub use pool::{auto_workers, PendingScan, PoolSnapshot, ScanHandle, ScanPool};

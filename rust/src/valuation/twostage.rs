@@ -291,6 +291,26 @@ pub(crate) struct PendingRescore {
 }
 
 impl PendingRescore {
+    /// Assemble a pending rescore from a different stage-1 implementation
+    /// (the IVF engine's probed scan in [`super::ann`]) — the merge +
+    /// exact-rescore stage 2 is shared verbatim, which is what makes the
+    /// full-probe IVF path bit-identical to this engine.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        scan: ScanHandle,
+        pre: Vec<f32>,
+        selfs: Option<Arc<Vec<f32>>>,
+        exact: Arc<ShardedStore>,
+        metrics: Option<Arc<Metrics>>,
+        nt: usize,
+        topk: usize,
+        pool_size: usize,
+        t0: Instant,
+        ctx: Option<ReportCtx>,
+    ) -> Self {
+        PendingRescore { scan, pre, selfs, exact, metrics, nt, topk, pool_size, t0, ctx }
+    }
+
     pub(crate) fn finish(
         self,
     ) -> Result<(Vec<QueryResult>, Option<QueryReport>), ValuationError> {

@@ -1,0 +1,378 @@
+//! IVF backend integration tests (artifact-free: native scoring only).
+//!
+//! Load-bearing properties of the stage-0 index:
+//!
+//! 1. **Full-probe bit-identity**: with `nprobe >=` every shard's cluster
+//!    count the IVF engine reproduces the two-stage engine bit-for-bit —
+//!    even with a SMALL rescore pool, where both engines are approximate
+//!    in exactly the same way. The per-request `nprobe` override hits the
+//!    same anchor from a config whose default probe is narrow.
+//! 2. **Crash consistency**: a truncated `lists.bin` degrades its one
+//!    shard to a full coarse scan (fallback), never to wrong results —
+//!    the damaged-index engine still matches two-stage bit-identically.
+//! 3. **Recall under pruning**: on a clustered corpus, probing 2 of 8
+//!    clusters keeps recall@10 >= 0.95 while the probed-rows counter
+//!    stays strictly below the corpus row count — the sublinearity is
+//!    observable, not assumed.
+//! 4. **Per-request routing**: one `Valuator` over an indexed fabric
+//!    serves `exact` / `quantized` / `ann` per request; unservable
+//!    choices are typed `InvalidConfig` errors, not panics.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use logra::coordinator::Metrics;
+use logra::hessian::BlockHessian;
+use logra::obs::render_exposition;
+use logra::store::{
+    build_index, quantize_store, shard_store, GradStoreWriter, IvfIndex, QuantShardedStore,
+    ShardedStore, IVF_LISTS_FILE,
+};
+use logra::util::rng::Pcg32;
+use logra::valuation::{
+    Backend, BackendChoice, BackendConfig, BackendKind, IvfEngine, Normalization,
+    ParallelQueryEngine, QueryRequest, ScanBackend, TwoStageEngine, ValuationError, Valuator,
+};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-ann-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_store(dir: &Path, rows: &[f32], n: usize, k: usize) {
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let mut w = GradStoreWriter::create(dir, k).unwrap();
+    w.append(&ids, rows).unwrap();
+    w.finalize().unwrap();
+}
+
+/// Near-isotropic preconditioner fit from standard-normal rows, so the
+/// preconditioned query keeps its direction (the recall test's cluster
+/// geometry must survive preconditioning).
+fn isotropic_precond(k: usize) -> Arc<logra::hessian::Preconditioner> {
+    let mut rng = Pcg32::seeded(0x150);
+    let m = 256;
+    let mut rows = vec![0.0f32; m * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let mut h = BlockHessian::single_block(k);
+    h.accumulate(&rows, m);
+    Arc::new(h.preconditioner(0.1).unwrap())
+}
+
+/// f32 source -> sharded -> quantized + IVF index. Returns
+/// (sharded_dir, quant_dir).
+fn indexed_fixture(
+    name: &str,
+    rows: &[f32],
+    n: usize,
+    k: usize,
+    shards: usize,
+    clusters: usize,
+) -> (PathBuf, PathBuf) {
+    let src = tmpdir(&format!("{name}-src"));
+    write_store(&src, rows, n, k);
+    let sharded = tmpdir(&format!("{name}-sharded"));
+    shard_store(&src, &sharded, shards).unwrap();
+    let quant = tmpdir(&format!("{name}-q8"));
+    quantize_store(&sharded, &quant).unwrap();
+    build_index(&quant, clusters, 42).unwrap();
+    (sharded, quant)
+}
+
+fn gaussian_rows(n: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    rows
+}
+
+/// `centers` well-separated cluster centers, `per_center` rows each:
+/// row = center + small noise. Returns (rows, fresh same-cluster queries).
+fn clustered_rows(
+    centers: usize,
+    per_center: usize,
+    k: usize,
+    queries_per_center: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let mut rng = Pcg32::seeded(0xC1);
+    let mut cvecs = vec![0.0f32; centers * k];
+    rng.fill_normal(&mut cvecs, 4.0);
+    let n = centers * per_center;
+    let mut rows = vec![0.0f32; n * k];
+    let mut noise = vec![0.0f32; k];
+    for c in 0..centers {
+        for r in 0..per_center {
+            rng.fill_normal(&mut noise, 0.2);
+            let at = (c * per_center + r) * k;
+            for j in 0..k {
+                rows[at + j] = cvecs[c * k + j] + noise[j];
+            }
+        }
+    }
+    let mut queries = Vec::new();
+    for c in 0..centers {
+        for _ in 0..queries_per_center {
+            rng.fill_normal(&mut noise, 0.2);
+            queries.push((0..k).map(|j| cvecs[c * k + j] + noise[j]).collect());
+        }
+    }
+    (rows, queries)
+}
+
+#[test]
+fn full_probe_is_bit_identical_to_two_stage() {
+    let (k, n, shards, clusters) = (14, 330, 5, 6);
+    let nt = 3;
+    let topk = 8;
+    let rows = gaussian_rows(n, k, 2025);
+    let (sharded, quant_dir) = indexed_fixture("bitident", &rows, n, k, shards, clusters);
+    let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
+    let index = Arc::new(IvfIndex::open(&quant_dir, &quant).unwrap());
+    assert_eq!(index.fallback_shards(), 0);
+    let precond = isotropic_precond(k);
+
+    // A SMALL rescore pool: both engines are approximate, and they must
+    // be approximate identically — the funnel above the rescore is the
+    // only thing the index changes.
+    let cfg = |nprobe: usize| BackendConfig {
+        workers: 2,
+        chunk_len: 32,
+        rescore_factor: 4,
+        nprobe,
+        ..Default::default()
+    };
+    let two = TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone(), cfg(1))
+        .unwrap();
+    let ivf = IvfEngine::new(
+        quant.clone(),
+        index.clone(),
+        exact.clone(),
+        precond.clone(),
+        cfg(clusters),
+    )
+    .unwrap();
+
+    let mut rng = Pcg32::seeded(9);
+    let mut test = vec![0.0f32; nt * k];
+    rng.fill_normal(&mut test, 1.0);
+    for norm in [Normalization::None, Normalization::RelatIf] {
+        let want = two
+            .query(QueryRequest::gradients(test.clone(), nt, topk).with_norm(norm))
+            .unwrap();
+        let got = ivf
+            .query(QueryRequest::gradients(test.clone(), nt, topk).with_norm(norm))
+            .unwrap();
+        for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.top, b.top, "full probe diverged (norm {norm:?}, test {t})");
+        }
+    }
+
+    // Per-request nprobe override reaches the same anchor from a config
+    // whose default probe is narrow.
+    let narrow = IvfEngine::new(quant, index, exact, precond, cfg(1)).unwrap();
+    let want = two.query(QueryRequest::gradients(test.clone(), nt, topk)).unwrap();
+    let got = narrow
+        .query(
+            QueryRequest::gradients(test.clone(), nt, topk)
+                .with_backend(BackendChoice::Ann { nprobe: Some(clusters) }),
+        )
+        .unwrap();
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.top, b.top, "per-request full probe diverged");
+    }
+
+    // nprobe = 0 on the wire is a typed error, not a silent full scan.
+    let err = narrow
+        .query(
+            QueryRequest::gradients(test, nt, topk)
+                .with_backend(BackendChoice::Ann { nprobe: Some(0) }),
+        )
+        .unwrap_err();
+    assert!(matches!(err, ValuationError::InvalidConfig(_)), "{err:?}");
+}
+
+#[test]
+fn truncated_lists_degrade_to_full_scan_not_wrong_results() {
+    let (k, n, shards, clusters) = (10, 240, 4, 5);
+    let rows = gaussian_rows(n, k, 77);
+    let (sharded, quant_dir) = indexed_fixture("crash", &rows, n, k, shards, clusters);
+    // Crash simulation: one shard's lists.bin is cut mid-payload.
+    let lpath = quant_dir.join("shard-0002").join(IVF_LISTS_FILE);
+    let bytes = std::fs::read(&lpath).unwrap();
+    std::fs::write(&lpath, &bytes[..bytes.len() / 2]).unwrap();
+
+    let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
+    let index = Arc::new(IvfIndex::open(&quant_dir, &quant).unwrap());
+    assert_eq!(index.fallback_shards(), 1, "exactly the damaged shard falls back");
+    let precond = isotropic_precond(k);
+    let cfg = BackendConfig {
+        chunk_len: 32,
+        rescore_factor: 4,
+        nprobe: clusters,
+        ..Default::default()
+    };
+    let two =
+        TwoStageEngine::new(quant.clone(), exact.clone(), precond.clone(), cfg.clone())
+            .unwrap();
+    let ivf = IvfEngine::new(quant, index, exact, precond, cfg).unwrap();
+    assert_eq!(ivf.fallback_shards(), 1);
+
+    // The healthy shards probe, the damaged shard scans in full; the
+    // result is still bit-identical to the un-indexed engine.
+    let mut rng = Pcg32::seeded(3);
+    let mut test = vec![0.0f32; 2 * k];
+    rng.fill_normal(&mut test, 1.0);
+    let want = two.query(QueryRequest::gradients(test.clone(), 2, 7)).unwrap();
+    let got = ivf.query(QueryRequest::gradients(test, 2, 7)).unwrap();
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.top, b.top, "damaged index changed results");
+    }
+}
+
+#[test]
+fn pruned_probe_keeps_recall_and_scans_fewer_rows() {
+    let (centers, per_center, k) = (8, 100, 32);
+    let n = centers * per_center;
+    let topk = 10;
+    let (rows, queries) = clustered_rows(centers, per_center, k, 2);
+    let (sharded, quant_dir) = indexed_fixture("recall", &rows, n, k, 2, centers);
+    let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
+    let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
+    let index = Arc::new(IvfIndex::open(&quant_dir, &quant).unwrap());
+    assert_eq!(index.fallback_shards(), 0);
+    let precond = isotropic_precond(k);
+
+    let reference = ParallelQueryEngine::new(
+        exact.clone(),
+        precond.clone(),
+        BackendConfig { chunk_len: 64, ..Default::default() },
+    );
+    let metrics = Arc::new(Metrics::default());
+    let ivf = IvfEngine::new(
+        quant,
+        index,
+        exact,
+        precond,
+        BackendConfig {
+            chunk_len: 64,
+            rescore_factor: 4,
+            nprobe: 2,
+            metrics: Some(metrics.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for q in &queries {
+        let want = reference.query(QueryRequest::gradients(q.clone(), 1, topk)).unwrap();
+        let got = ivf.query(QueryRequest::gradients(q.clone(), 1, topk)).unwrap();
+        let want_ids: Vec<u64> = want[0].top.iter().map(|&(_, id)| id).collect();
+        for &(_, id) in &got[0].top {
+            if want_ids.contains(&id) {
+                hits += 1;
+            }
+        }
+        total += topk;
+    }
+    let recall = hits as f64 / total as f64;
+    assert!(recall >= 0.95, "recall@{topk} = {recall:.3} below 0.95");
+
+    // Sublinearity is observable: the probe named strictly fewer rows
+    // than the corpus holds, per query, on average.
+    let probed = metrics.rows_probed.load(std::sync::atomic::Ordering::Relaxed);
+    let full = (n * queries.len()) as u64;
+    assert!(probed > 0, "probe counter never moved");
+    assert!(probed < full, "probed {probed} rows >= full-scan {full}");
+    let expo = render_exposition(&metrics, None, &[]);
+    assert!(expo.contains("logra_rows_probed_total"), "missing probe family:\n{expo}");
+}
+
+#[test]
+fn valuator_routes_backends_per_request() {
+    let (k, n, shards, clusters) = (12, 200, 3, 4);
+    let rows = gaussian_rows(n, k, 5150);
+    let (sharded, quant_dir) = indexed_fixture("route", &rows, n, k, shards, clusters);
+
+    // Indexed int8 fabric: Auto resolves to IVF, and one valuator serves
+    // all four wire names.
+    let v = Valuator::open(&quant_dir).unwrap().fit_from_store(0.1).build().unwrap();
+    assert_eq!(v.kind(), BackendKind::Ivf);
+    assert_eq!(v.resolved_kind(None).unwrap(), BackendKind::Ivf);
+    assert_eq!(v.resolved_kind(Some(BackendChoice::Auto)).unwrap(), BackendKind::Ivf);
+    assert_eq!(
+        v.resolved_kind(Some(BackendChoice::Exact)).unwrap(),
+        BackendKind::Parallel
+    );
+    assert_eq!(
+        v.resolved_kind(Some(BackendChoice::Quantized)).unwrap(),
+        BackendKind::TwoStage
+    );
+    assert_eq!(
+        v.resolved_kind(Some(BackendChoice::Ann { nprobe: None })).unwrap(),
+        BackendKind::Ivf
+    );
+
+    // A full-probe ann request and a quantized request are bit-identical
+    // THROUGH THE FACADE (same rescore pool, same fabric).
+    let g = v.gradient_row(0).unwrap();
+    let quantized = v
+        .query(
+            QueryRequest::gradients(g.clone(), 1, 6).with_backend(BackendChoice::Quantized),
+        )
+        .unwrap();
+    let ann_full = v
+        .query(
+            QueryRequest::gradients(g.clone(), 1, 6)
+                .with_backend(BackendChoice::Ann { nprobe: Some(clusters) }),
+        )
+        .unwrap();
+    assert_eq!(quantized[0].top, ann_full[0].top, "facade routing moved a bit");
+    // The exact route serves f32 results with the requested depth.
+    let exact = v
+        .query(QueryRequest::gradients(g, 1, 6).with_backend(BackendChoice::Exact))
+        .unwrap();
+    assert_eq!(exact[0].top.len(), 6);
+    v.shutdown();
+
+    // f32 fabric: quantized/ann requests are typed errors.
+    let v32 = Valuator::open(&sharded).unwrap().fit_from_store(0.1).build().unwrap();
+    let g = v32.gradient_row(0).unwrap();
+    for choice in [BackendChoice::Quantized, BackendChoice::Ann { nprobe: None }] {
+        let err = v32
+            .query(QueryRequest::gradients(g.clone(), 1, 3).with_backend(choice))
+            .unwrap_err();
+        assert!(matches!(err, ValuationError::InvalidConfig(_)), "{err:?}");
+    }
+    v32.shutdown();
+
+    // Quantized fabric WITHOUT an index: ann is unservable — per request
+    // and at build.
+    let bare_quant = tmpdir("route-bare-q8");
+    quantize_store(&sharded, &bare_quant).unwrap();
+    let vq = Valuator::open(&bare_quant).unwrap().fit_from_store(0.1).build().unwrap();
+    assert_eq!(vq.kind(), BackendKind::TwoStage, "no index -> two-stage auto");
+    let g = vq.gradient_row(0).unwrap();
+    let err = vq
+        .query(
+            QueryRequest::gradients(g, 1, 3)
+                .with_backend(BackendChoice::Ann { nprobe: None }),
+        )
+        .unwrap_err();
+    assert!(matches!(err, ValuationError::InvalidConfig(_)), "{err:?}");
+    vq.shutdown();
+    let built = Valuator::open(&bare_quant)
+        .unwrap()
+        .backend(Backend::Ann { nprobe: 2, rescore_factor: 4 })
+        .fit_from_store(0.1)
+        .build();
+    assert!(
+        matches!(built, Err(ValuationError::InvalidConfig(_))),
+        "ann on an unindexed fabric must be rejected at build"
+    );
+}

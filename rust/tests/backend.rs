@@ -3,12 +3,13 @@
 //!
 //! Load-bearing properties of the unified query seam:
 //!
-//! 1. **Trait-object equivalence**: all three backends behind
-//!    `Box<dyn ScanBackend>` — sequential, parallel-f32, and two-stage
-//!    with a corpus-covering rescore pool — are bit-identical to the
-//!    sequential `QueryEngine` native reference, for both normalizations,
-//!    with and without a shared scan pool. This extends the pool/twostage
-//!    invariants to the new seam: the trait boundary cannot move a bit.
+//! 1. **Trait-object equivalence**: all four backends behind
+//!    `Box<dyn ScanBackend>` — sequential, parallel-f32, two-stage with a
+//!    corpus-covering rescore pool, and IVF probing every cluster — are
+//!    bit-identical to the sequential `QueryEngine` native reference, for
+//!    both normalizations, with and without a shared scan pool. This
+//!    extends the pool/twostage invariants to the new seam: the trait
+//!    boundary cannot move a bit.
 //! 2. **Facade auto-detection**: `Valuator::open` + `Backend::Auto`
 //!    serves an f32 fabric and a quantized fabric with zero
 //!    codec-specific caller code (the quantized manifest records its
@@ -25,14 +26,14 @@ use std::sync::Arc;
 
 use logra::hessian::BlockHessian;
 use logra::store::{
-    quantize_store, shard_store, GradStore, GradStoreWriter, QuantShardedStore, ShardManifest,
-    ShardedStore,
+    build_index, quantize_store, shard_store, GradStore, GradStoreWriter, IvfIndex,
+    QuantShardedStore, ShardManifest, ShardedStore,
 };
 use logra::util::rng::Pcg32;
 use logra::valuation::{
-    Backend, BackendConfig, BackendKind, Normalization, ParallelQueryEngine, PoolMode,
-    QueryEngine, QueryRequest, ScanBackend, ScanPool, SequentialEngine, TwoStageEngine,
-    ValuationError, Valuator,
+    Backend, BackendConfig, BackendKind, IvfEngine, Normalization, ParallelQueryEngine,
+    PoolMode, QueryEngine, QueryRequest, ScanBackend, ScanPool, SequentialEngine,
+    TwoStageEngine, ValuationError, Valuator,
 };
 
 fn tmpdir(name: &str) -> PathBuf {
@@ -75,9 +76,12 @@ fn all_backends_behind_the_trait_are_bit_identical_to_sequential() {
     shard_store(&src, &sharded, n_shards).unwrap();
     let quant_dir = tmpdir("equiv-quant");
     quantize_store(&sharded, &quant_dir).unwrap();
+    let clusters = 6;
+    build_index(&quant_dir, clusters, 42).unwrap();
 
     let exact = Arc::new(ShardedStore::open(&sharded).unwrap());
     let quant = Arc::new(QuantShardedStore::open(&quant_dir).unwrap());
+    let index = Arc::new(IvfIndex::open(&quant_dir, &quant).unwrap());
     let single = GradStore::open(&src).unwrap();
     let precond = Arc::new(make_precond(&rows, n, k));
     let seq_ref = QueryEngine::new_native(&single, &precond, 64);
@@ -131,6 +135,29 @@ fn all_backends_behind_the_trait_are_bit_identical_to_sequential() {
                     .unwrap(),
                 ),
             ),
+            (
+                // Full probe (nprobe = clusters): the IVF funnel must
+                // reproduce the two-stage engine — and through it the
+                // sequential reference — bit-identically.
+                "ivf",
+                Box::new(
+                    IvfEngine::new(
+                        quant.clone(),
+                        index.clone(),
+                        exact.clone(),
+                        precond.clone(),
+                        BackendConfig {
+                            workers: 2,
+                            chunk_len: 32,
+                            rescore_factor: factor,
+                            nprobe: clusters,
+                            pool: pool_opt.clone(),
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap(),
+                ),
+            ),
         ];
         for norm in [Normalization::None, Normalization::RelatIf] {
             let want = seq_ref.query(&test, nt, topk, norm).unwrap();
@@ -154,8 +181,9 @@ fn all_backends_behind_the_trait_are_bit_identical_to_sequential() {
         assert_eq!(backends[0].1.kind(), BackendKind::Sequential);
         assert_eq!(backends[1].1.kind(), BackendKind::Parallel);
         assert_eq!(backends[2].1.kind(), BackendKind::TwoStage);
+        assert_eq!(backends[3].1.kind(), BackendKind::Ivf);
         assert!(backends[0].1.exact() && backends[1].1.exact());
-        assert!(!backends[2].1.exact());
+        assert!(!backends[2].1.exact() && !backends[3].1.exact());
     }
     pool.shutdown();
 }
@@ -406,29 +434,33 @@ fn typed_error_paths() {
 
 #[test]
 fn service_config_validation_is_typed_and_artifact_free() {
-    // The three historic deep-in-the-worker failure shapes must be
-    // rejected by `ValuationService::spawn` BEFORE it touches the
-    // artifact directory (none exists here) — as ValuationError values
-    // downcastable from the anyhow chain.
-    let mk = |rescore_factor: usize, max_in_flight: usize, quantized: bool| {
-        logra::coordinator::ServiceConfig {
-            artifact_dir: PathBuf::from("/nonexistent/artifacts"),
-            store_dir: PathBuf::from("/nonexistent/store"),
-            params: Vec::new(),
-            proj_flat: Vec::new(),
-            hessian: BlockHessian::single_block(4),
-            damping: 0.1,
-            norm: Normalization::None,
-            max_wait: std::time::Duration::from_millis(1),
-            scan_workers: 1,
-            quantized_scan: quantized,
-            rescore_factor,
-            quant_dir: None,
-            max_in_flight,
-        }
+    // Configurations that can never serve must be rejected by
+    // `ValuationService::spawn` BEFORE it touches the artifact directory
+    // (none exists here) — as ValuationError values downcastable from the
+    // anyhow chain.
+    let mk = |backend: Backend, max_in_flight: usize| logra::coordinator::ServiceConfig {
+        artifact_dir: PathBuf::from("/nonexistent/artifacts"),
+        store_dir: PathBuf::from("/nonexistent/store"),
+        params: Vec::new(),
+        proj_flat: Vec::new(),
+        hessian: BlockHessian::single_block(4),
+        damping: 0.1,
+        norm: Normalization::None,
+        max_wait: std::time::Duration::from_millis(1),
+        scan_workers: 1,
+        backend,
+        max_in_flight,
     };
-    for cfg in [mk(0, 2, false), mk(4, 0, false), mk(4, 2, true)] {
-        let err = logra::coordinator::ValuationService::spawn(cfg).unwrap_err();
+    for cfg in [
+        mk(Backend::Quantized { rescore_factor: 0 }, 2),
+        mk(Backend::Auto, 0),
+        mk(Backend::Ann { nprobe: 0, rescore_factor: 4 }, 2),
+        mk(Backend::Ann { nprobe: 4, rescore_factor: 0 }, 2),
+    ] {
+        let err = match logra::coordinator::ValuationService::spawn(cfg) {
+            Err(e) => e,
+            Ok(_) => panic!("invalid config accepted"),
+        };
         let typed = err
             .downcast_ref::<ValuationError>()
             .unwrap_or_else(|| panic!("not a ValuationError: {err:#}"));

@@ -251,9 +251,7 @@ fn valuation_service_batches_requests() {
         norm: Normalization::None,
         max_wait: std::time::Duration::from_millis(5),
         scan_workers: 1,
-        quantized_scan: false,
-        rescore_factor: 4,
-        quant_dir: None,
+        backend: logra::valuation::Backend::Auto,
         max_in_flight: 2,
     })
     .unwrap();

@@ -22,6 +22,11 @@ Two kinds of checks:
    at equal worker count (default floor 0.75x — generous CI-noise slack
    on the "pool meets or beats spawn" expectation; tune with the
    BENCH_POOL_VS_SPAWN_FLOOR env var, 0 disables).
+3. Absolute quality floors (machine-independent correctness): IVF
+   recall@10 of a pruned probe on the clustered bench corpus must stay
+   >= 0.95, and a full probe must stay bit-identical to the two-stage
+   engine (ann_full_probe_bitident == 1.0). These ignore --threshold:
+   wrong answers are not a throughput trade-off.
 
 Re-baselining (e.g. after an intentional trade-off, or to tighten the
 seed floors to your CI hardware):
@@ -48,9 +53,21 @@ GATED_KEYS = [
     "f32_rows_per_s",
     "quant_rows_per_s",
     "two_stage_rows_per_s",
+    "ann_rows_per_s",
     "pool_c8_qps",
     "serve_c8_qps",
 ]
+
+# Quality metrics gated at an ABSOLUTE floor, independent of baseline and
+# threshold: these are correctness properties of the IVF index (recall of
+# a pruned probe on the clustered bench corpus; bit-identity of a full
+# probe vs the two-stage engine), not machine-sensitive throughput. A
+# drop here means the index returns wrong answers, and no amount of
+# CI-runner noise excuses it.
+ABSOLUTE_FLOOR_KEYS = {
+    "ann_recall_at_10": 0.95,
+    "ann_full_probe_bitident": 1.0,
+}
 
 # Latency metrics gated the other way around (lower is better): the
 # pooled concurrency-8 run's per-query p50/p99 from the observability
@@ -138,6 +155,19 @@ def main() -> int:
             f"bench gate: {key:24s} baseline {float(b):14.1f}  "
             f"current {float(c):14.1f}  ceiling {ceiling:12.1f}  "
             f"{'ok' if ok else 'REGRESSION'}"
+        )
+        if not ok:
+            failures.append(key)
+
+    for key, floor in ABSOLUTE_FLOOR_KEYS.items():
+        c = cur.get(key)
+        if c is None:
+            print(f"bench gate: skipping {key} (missing from current)")
+            continue
+        ok = float(c) >= floor
+        print(
+            f"bench gate: {key:24s} absolute floor {floor:6.2f}  "
+            f"current {float(c):14.4f}  {'ok' if ok else 'REGRESSION'}"
         )
         if not ok:
             failures.append(key)
