@@ -23,8 +23,11 @@ use logra::eval::qualitative::{render as render_qual, run_qualitative};
 use logra::eval::table1::{run_table1, TABLE1_HEADER};
 use logra::eval::{BrittlenessConfig, LdsConfig};
 use logra::obs::{chrome_trace_json, render_exposition};
-use logra::serve::{loadgen, ServeConfig, Server};
-use logra::store::{build_index, merge_store, quantize_store, shard_store, stat_store};
+use logra::serve::{loadgen, ReloadConfig, ServeConfig, Server};
+use logra::store::{
+    append_shard, build_index, merge_store, quantize_store, quantize_store_incremental,
+    shard_store, stat_store, ShardManifest,
+};
 use logra::valuation::{Normalization, PoolMode, QueryRequest, ScanBackend, Valuator};
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
@@ -32,7 +35,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("fig4", "run brittleness + LDS counterfactual evals"),
     ("table1", "run the LoGra vs EKFAC efficiency comparison"),
     ("qualitative", "train, log, and inspect top-valued documents"),
-    ("store", "store maintenance: store stat|shard|merge|quantize|index <dir>"),
+    ("store", "store maintenance: store stat|shard|merge|quantize|index|append <dir>"),
     ("query", "query <store_dir>: top-k most influential rows for --row"),
     ("trace", "trace <store_dir>: concurrent queries -> Chrome trace JSON"),
     ("serve", "serve <store_dir>: HTTP server (/query /metrics /healthz /debug/trace)"),
@@ -52,7 +55,9 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "out", help: "output dir for store shard/merge/quantize", takes_value: true, default: None },
     FlagSpec { name: "shards", help: "shard count for store shard", takes_value: true, default: Some("4") },
     FlagSpec { name: "clusters", help: "store index: IVF clusters per shard", takes_value: true, default: Some("16") },
-    FlagSpec { name: "seed", help: "store index: k-means seed", takes_value: true, default: Some("42") },
+    FlagSpec { name: "seed", help: "store index/append: k-means / synthesis seed", takes_value: true, default: Some("42") },
+    FlagSpec { name: "rows", help: "store append: synthetic rows to append", takes_value: true, default: Some("128") },
+    FlagSpec { name: "incremental", help: "store quantize: skip shards already mirrored in --out", takes_value: false, default: None },
     FlagSpec { name: "row", help: "query: stored row used as the query gradient", takes_value: true, default: Some("0") },
     FlagSpec { name: "norm", help: "query: normalization none|relatif", takes_value: true, default: Some("relatif") },
     FlagSpec { name: "backend", help: "query/trace/serve: auto|exact|quantized|ann", takes_value: true, default: Some("auto") },
@@ -69,9 +74,11 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "max-in-flight", help: "serve: queries admitted at once (excess -> 429)", takes_value: true, default: Some("8") },
     FlagSpec { name: "deadline-ms", help: "serve: default per-query deadline (0 = none)", takes_value: true, default: Some("0") },
     FlagSpec { name: "poll-ms", help: "serve: deadline/disconnect poll interval", takes_value: true, default: Some("15") },
+    FlagSpec { name: "reload-ms", help: "serve: manifest generation probe interval (0 = static)", takes_value: true, default: Some("0") },
     FlagSpec { name: "offline", help: "serve: synthesize a sharded store (no artifacts)", takes_value: false, default: None },
     FlagSpec { name: "clients", help: "loadgen: concurrent closed-loop clients", takes_value: true, default: Some("8") },
     FlagSpec { name: "requests", help: "loadgen: requests per client", takes_value: true, default: Some("32") },
+    FlagSpec { name: "max-retries", help: "loadgen: backoff retries per request on 429/503", takes_value: true, default: Some("3") },
     FlagSpec { name: "bench-out", help: "loadgen: merge serve_c*_{qps,p50_ms,p99_ms} into this JSON", takes_value: true, default: None },
 ];
 
@@ -178,8 +185,9 @@ fn main() -> Result<()> {
                 .map(String::as_str)
                 .ok_or_else(|| {
                     anyhow!(
-                        "usage: store stat|shard|merge|quantize|index <dir> \
-                         [--out DIR] [--shards N] [--clusters C] [--seed S]"
+                        "usage: store stat|shard|merge|quantize|index|append <dir> \
+                         [--out DIR] [--shards N] [--clusters C] [--seed S] \
+                         [--incremental] [--rows N]"
                     )
                 })?;
             let dir = args
@@ -248,7 +256,17 @@ fn main() -> Result<()> {
                         .flag("out")
                         .map(PathBuf::from)
                         .ok_or_else(|| anyhow!("store quantize: --out <dir> required"))?;
-                    let man = quantize_store(&dir, &out)?;
+                    let man = if args.has_switch("incremental") {
+                        let (man, rep) = quantize_store_incremental(&dir, &out)?;
+                        println!(
+                            "incremental quantize: {} shards converted, {} up to date \
+                             (generation {})",
+                            rep.converted, rep.skipped, man.generation
+                        );
+                        man
+                    } else {
+                        quantize_store(&dir, &out)?
+                    };
                     let before = stat_store(&dir)?.storage_bytes;
                     let after = stat_store(&out)?.storage_bytes;
                     println!(
@@ -280,8 +298,32 @@ fn main() -> Result<()> {
                     }
                     Ok(())
                 }
+                // Live growth: append one synthetic shard and publish the
+                // next manifest generation — the writer side of
+                // `serve --reload-ms` (and the CI append-while-serving
+                // smoke test).
+                "append" => {
+                    let n = args.usize_or("rows", 128)?.max(1);
+                    let seed = args.usize_or("seed", 42)? as u64;
+                    let man = ShardManifest::load(&dir)?;
+                    let next_id = man.total_rows();
+                    let ids: Vec<u64> = (next_id..next_id + n as u64).collect();
+                    let mut rows = vec![0.0f32; n * man.k];
+                    logra::util::rng::Pcg32::new(seed, man.generation)
+                        .fill_normal(&mut rows, 1.0);
+                    let rep = append_shard(&dir, &ids, &rows)?;
+                    println!(
+                        "appended {} ({} rows, ids {}..{}) -> generation {}",
+                        rep.shard_dir,
+                        rep.rows,
+                        next_id,
+                        next_id + rep.rows - 1,
+                        rep.generation
+                    );
+                    Ok(())
+                }
                 other => Err(anyhow!(
-                    "unknown store action {other:?}; try stat|shard|merge|quantize|index"
+                    "unknown store action {other:?}; try stat|shard|merge|quantize|index|append"
                 )),
             }
         }
@@ -480,7 +522,7 @@ fn main() -> Result<()> {
                 args.positional.first().map(PathBuf::from).ok_or_else(|| {
                     anyhow!(
                         "usage: serve <store_dir> [--addr A] [--max-in-flight N] \
-                         [--deadline-ms N] [--poll-ms N] [--topk K] \
+                         [--deadline-ms N] [--poll-ms N] [--reload-ms N] [--topk K] \
                          [--backend auto|exact|quantized|ann] [--nprobe N] \
                          [--rescore-factor N] [--workers N] [--damping X] \
                          | serve --offline [--n-train N] [--shards N]"
@@ -489,15 +531,25 @@ fn main() -> Result<()> {
             };
             let ba = BackendArgs::from_args(&args)?;
             let damping = args.f64_or("damping", 0.1)? as f32;
+            let reload_ms = args.usize_or("reload-ms", 0)? as u64;
             let metrics = Arc::new(Metrics::default());
             let builder = Valuator::open(&dir)?;
             let backend = ba.resolve(builder.auto_kind())?;
+            // With live reload the scan pool must outlive any one
+            // snapshot, so it is spawned here and shared into every
+            // rebuilt valuator; a static serve keeps the old Auto shape.
+            let pool = (reload_ms > 0)
+                .then(|| Arc::new(logra::valuation::ScanPool::spawn(ba.workers)));
+            let pool_mode = match &pool {
+                Some(p) => PoolMode::Shared(p.clone()),
+                None => PoolMode::Auto,
+            };
             let valuator = Arc::new(
                 builder
                     .backend(backend)
                     .workers(ba.workers)
                     .fit_from_store(damping)
-                    .pool(PoolMode::Auto)
+                    .pool(pool_mode)
                     .metrics(metrics.clone())
                     .build()?,
             );
@@ -511,15 +563,33 @@ fn main() -> Result<()> {
                 ),
             };
             println!(
-                "serving {} — {} rows, k={}, backend {}, {} workers, max_in_flight {}",
+                "serving {} — {} rows, k={}, backend {}, {} workers, max_in_flight {}, \
+                 generation {}{}",
                 dir.display(),
                 valuator.rows(),
                 valuator.k(),
                 valuator.kind().name(),
                 valuator.workers(),
-                cfg.max_in_flight
+                cfg.max_in_flight,
+                valuator.generation(),
+                if reload_ms > 0 {
+                    format!(" (reload every {reload_ms} ms)")
+                } else {
+                    String::new()
+                }
             );
-            let server = Server::start(valuator, metrics, cfg)?;
+            let reload = pool.map(|pool| {
+                ReloadConfig::standard(
+                    dir.clone(),
+                    std::time::Duration::from_millis(reload_ms),
+                    backend,
+                    damping,
+                    ba.workers,
+                    pool,
+                    metrics.clone(),
+                )
+            });
+            let server = Server::start_with_reload(valuator, metrics, cfg, reload)?;
             println!(
                 "listening on http://{} (POST /query, GET /metrics /healthz /debug/trace)",
                 server.addr()
@@ -535,6 +605,7 @@ fn main() -> Result<()> {
                 clients: args.usize_or("clients", 8)?.max(1),
                 requests_per_client: args.usize_or("requests", 32)?.max(1),
                 topk: args.usize_or("topk", 5)?.max(1),
+                max_retries: args.usize_or("max-retries", 3)?,
             };
             let report = loadgen::run(&cfg)?;
             print!("{}", report.render());

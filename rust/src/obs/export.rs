@@ -9,6 +9,13 @@
 //! caller-supplied gauges (e.g. store shape from `logra store stat
 //! --metrics`). `examples/serve_queries.rs --metrics` prints it and CI
 //! validates it with `scripts/check_metrics.py`.
+//!
+//! `logra serve` appends its own families on top of this exposition via
+//! the same `simple` helper: the `logra_serve_*` request counters and
+//! the live-store families (`logra_store_generation`,
+//! `logra_store_reloads_total`, `logra_store_reload_errors_total`,
+//! `logra_store_quarantined_shards`, `logra_store_ivf_fallback_shards`)
+//! that track generation-snapshotted reload — see `serve::render_metrics`.
 
 use std::sync::atomic::Ordering;
 

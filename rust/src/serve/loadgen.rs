@@ -9,6 +9,14 @@
 //! counts an error and reconnects instead of dying — the summary reports
 //! per-client error counts (the serving mirror of the
 //! `examples/serve_queries.rs` fix).
+//!
+//! A 429 (admission gate full) or 503 (backend shutting down / reloading)
+//! is the server ASKING for a retry, not a failure: the client backs off
+//! with jittered exponential delay (base 2 ms doubled per attempt, capped
+//! at 100 ms) and re-sends on the same keep-alive connection, up to
+//! [`LoadgenConfig::max_retries`] times before counting an error. Retries
+//! are reported separately from errors — a run that rode out overload is
+//! distinguishable from one that dropped work.
 
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -18,6 +26,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::{self, Json};
+use crate::util::rng::Pcg32;
 use crate::util::stats::percentile;
 
 use super::http;
@@ -33,6 +42,9 @@ pub struct LoadgenConfig {
     pub requests_per_client: usize,
     /// `topk` per query.
     pub topk: usize,
+    /// Backoff-and-retry budget per request for 429/503 responses; after
+    /// this many retries the request counts as an error.
+    pub max_retries: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -42,6 +54,7 @@ impl Default for LoadgenConfig {
             clients: 8,
             requests_per_client: 32,
             topk: 5,
+            max_retries: 3,
         }
     }
 }
@@ -57,6 +70,10 @@ pub struct LoadgenReport {
     /// Failed requests per client (I/O error, non-200, bad body). Clients
     /// reconnect and continue instead of dying.
     pub per_client_errors: Vec<usize>,
+    /// Backoff-and-retry attempts across all clients (429/503 responses
+    /// that were re-sent; not counted in `per_client_errors` unless the
+    /// retry budget ran out).
+    pub retries: usize,
     pub wall_seconds: f64,
     pub qps: f64,
     pub p50_ms: f64,
@@ -71,13 +88,14 @@ impl LoadgenReport {
     /// Human-readable summary (what `logra loadgen` prints).
     pub fn render(&self) -> String {
         let mut s = format!(
-            "loadgen: {} clients x {} requests, {} ok / {} errors in {:.2}s\n\
+            "loadgen: {} clients x {} requests, {} ok / {} errors / {} retries in {:.2}s\n\
              throughput  {:.1} queries/s\n\
              latency     p50 {:.3} ms, p99 {:.3} ms\n",
             self.clients,
             if self.clients > 0 { self.attempted / self.clients } else { 0 },
             self.completed,
             self.errors(),
+            self.retries,
             self.wall_seconds,
             self.qps,
             self.p50_ms,
@@ -113,6 +131,17 @@ pub fn http_request(
     Ok(http::read_response(&mut reader)?)
 }
 
+/// Why one `POST /query` attempt did not complete.
+enum QueryFailure {
+    /// The server answered cleanly but asked us to come back: 429
+    /// (admission gate full) or 503 (backend unavailable). The keep-alive
+    /// connection is still good — back off and re-send on it.
+    Retryable(u16),
+    /// Anything else: I/O error, other non-200, malformed body. The
+    /// connection state is suspect — count an error and reconnect.
+    Other(String),
+}
+
 /// One keep-alive client connection.
 struct Client {
     writer: TcpStream,
@@ -128,20 +157,36 @@ impl Client {
         Ok(Client { writer, reader: BufReader::new(stream) })
     }
 
-    fn query(&mut self, body: &str) -> Result<()> {
-        http::write_request(&mut self.writer, "POST", "/query", body.as_bytes())?;
-        let res = http::read_response(&mut self.reader)?;
-        if res.status != 200 {
-            bail!("status {}: {}", res.status, res.body_str());
+    fn query(&mut self, body: &str) -> std::result::Result<(), QueryFailure> {
+        let io = |e: std::io::Error| QueryFailure::Other(e.to_string());
+        http::write_request(&mut self.writer, "POST", "/query", body.as_bytes())
+            .map_err(io)?;
+        let res = http::read_response(&mut self.reader).map_err(io)?;
+        match res.status {
+            200 => {}
+            429 | 503 => return Err(QueryFailure::Retryable(res.status)),
+            s => {
+                return Err(QueryFailure::Other(format!("status {s}: {}", res.body_str())))
+            }
         }
         // Parse so "completed" means a well-formed scored response, not
         // just 200 bytes on the wire.
-        let v = json::parse(&res.body_str())?;
+        let v = json::parse(&res.body_str())
+            .map_err(|e| QueryFailure::Other(format!("{e:#}")))?;
         v.get("results")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("response missing results array"))?;
+            .ok_or_else(|| QueryFailure::Other("response missing results array".into()))?;
         Ok(())
     }
+}
+
+/// Jittered exponential backoff before retry number `attempt` (0-based):
+/// 2 ms doubled per attempt, capped at 100 ms, with up to one extra base
+/// delay of uniform jitter so clients that collided on a 429 don't all
+/// come back in lockstep.
+fn backoff_delay(attempt: usize, rng: &mut Pcg32) -> Duration {
+    let base_ms = (2u64 << attempt.min(16)).min(100);
+    Duration::from_micros(base_ms * 1000 + rng.below(1000) as u64 * base_ms)
 }
 
 /// Run the closed loop. Row indices cycle deterministically per client so
@@ -162,47 +207,70 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let clients = cfg.clients.max(1);
     let per_client = cfg.requests_per_client.max(1);
     let t0 = Instant::now();
-    let outcomes: Vec<(Vec<f64>, usize)> = std::thread::scope(|s| {
+    let outcomes: Vec<(Vec<f64>, usize, usize)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 s.spawn(move || {
                     let mut latencies = Vec::with_capacity(per_client);
                     let mut errors = 0usize;
+                    let mut retries = 0usize;
+                    let mut rng = Pcg32::new(0xB0FF, c as u64);
                     let mut conn = Client::connect(&cfg.addr).ok();
                     for q in 0..per_client {
                         let row = (c * 37 + q * 13) % rows;
                         let body =
                             format!("{{\"row\":{row},\"topk\":{}}}", cfg.topk.max(1));
                         let t = Instant::now();
-                        let ok = match conn.as_mut() {
-                            Some(client) => client.query(&body).is_ok(),
-                            None => false,
-                        };
-                        if ok {
-                            latencies.push(t.elapsed().as_secs_f64());
-                        } else {
-                            // Count it and reconnect — one bad response
-                            // must not kill the client thread.
-                            errors += 1;
-                            conn = Client::connect(&cfg.addr).ok();
+                        // The request's retry budget: a 429/503 backs off
+                        // and re-sends (the latency sample includes the
+                        // backoff — that wait IS the cost of overload);
+                        // anything else, or running out of budget, counts
+                        // an error and reconnects so one bad response
+                        // can't kill the client thread.
+                        let mut attempt = 0usize;
+                        loop {
+                            let outcome = match conn.as_mut() {
+                                Some(client) => client.query(&body),
+                                None => Err(QueryFailure::Other("not connected".into())),
+                            };
+                            match outcome {
+                                Ok(()) => {
+                                    latencies.push(t.elapsed().as_secs_f64());
+                                    break;
+                                }
+                                Err(QueryFailure::Retryable(_))
+                                    if attempt < cfg.max_retries =>
+                                {
+                                    retries += 1;
+                                    std::thread::sleep(backoff_delay(attempt, &mut rng));
+                                    attempt += 1;
+                                }
+                                Err(_) => {
+                                    errors += 1;
+                                    conn = Client::connect(&cfg.addr).ok();
+                                    break;
+                                }
+                            }
                         }
                     }
-                    (latencies, errors)
+                    (latencies, errors, retries)
                 })
             })
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().unwrap_or((Vec::new(), per_client)))
+            .map(|h| h.join().unwrap_or((Vec::new(), per_client, 0)))
             .collect()
     });
     let wall_seconds = t0.elapsed().as_secs_f64();
 
     let mut latencies = Vec::new();
     let mut per_client_errors = Vec::with_capacity(clients);
-    for (lat, errs) in outcomes {
+    let mut retries = 0usize;
+    for (lat, errs, rts) in outcomes {
         latencies.extend(lat);
         per_client_errors.push(errs);
+        retries += rts;
     }
     let completed = latencies.len();
     Ok(LoadgenReport {
@@ -210,6 +278,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         attempted: clients * per_client,
         completed,
         per_client_errors,
+        retries,
         wall_seconds,
         qps: completed as f64 / wall_seconds.max(1e-9),
         p50_ms: percentile(&latencies, 50.0) * 1e3,
@@ -306,13 +375,32 @@ mod tests {
             attempted: 8,
             completed: 6,
             per_client_errors: vec![0, 2],
+            retries: 3,
             wall_seconds: 1.0,
             qps: 6.0,
             p50_ms: 1.0,
             p99_ms: 2.0,
         };
         let s = r.render();
-        assert!(s.contains("6 ok / 2 errors"));
+        assert!(s.contains("6 ok / 2 errors / 3 retries"));
         assert!(s.contains("client 1: 2"));
+    }
+
+    #[test]
+    fn backoff_doubles_with_cap_and_bounded_jitter() {
+        let mut rng = Pcg32::new(0xB0FF, 0);
+        for (attempt, base_ms) in [(0u64, 2u64), (1, 4), (2, 8), (5, 64), (6, 100), (40, 100)]
+        {
+            let d = backoff_delay(attempt as usize, &mut rng);
+            assert!(
+                d >= Duration::from_millis(base_ms),
+                "attempt {attempt}: {d:?} under base {base_ms}ms"
+            );
+            assert!(
+                d <= Duration::from_millis(2 * base_ms),
+                "attempt {attempt}: {d:?} over base+jitter {}ms",
+                2 * base_ms
+            );
+        }
     }
 }

@@ -41,12 +41,29 @@
 //! Cancellation needs a pool-backed backend (a sharded f32 or quantized
 //! fabric): the sequential engine scans eagerly at admission, so there is
 //! nothing left to cancel by the time the handler waits.
+//!
+//! # Live reload (generation-snapshotted serving)
+//!
+//! With a [`ReloadConfig`] ([`Server::start_with_reload`], or
+//! `logra serve --reload-ms N`), the server follows a live-growing store:
+//! a reloader thread re-reads the manifest generation every `interval`
+//! and, when it advances, rebuilds the valuator (via the config's
+//! `rebuild` closure — normally [`Valuator::open_degraded`], so a shard
+//! failing validation is quarantined rather than fatal) and swaps it into
+//! the shared [`Slot`]. Every query pins one snapshot at admission and
+//! serves entirely from it: responses carry the `generation` they were
+//! answered under, and no response ever blends shards from two
+//! generations. A failed rebuild leaves the previous snapshot serving and
+//! increments `logra_store_reload_errors_total`; `/healthz` and
+//! `/metrics` expose the live generation, quarantined-shard count, and
+//! IVF fallback-shard count.
 
 pub mod http;
 pub mod loadgen;
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -56,10 +73,11 @@ use anyhow::Result;
 use crate::coordinator::Metrics;
 use crate::obs::export::simple;
 use crate::obs::{chrome_trace_json, render_exposition, QueryReport};
+use crate::store::{current_generation, Slot};
 use crate::util::json::{self, Json};
 use crate::valuation::{
-    BackendChoice, Normalization, QueryRequest, QueryResult, ScanBackend, ValuationError,
-    Valuator,
+    Backend, BackendChoice, Normalization, PoolMode, QueryRequest, QueryResult, ScanBackend,
+    ScanPool, ValuationError, Valuator,
 };
 
 /// Server construction knobs.
@@ -106,10 +124,17 @@ struct ServeStats {
     disconnects: AtomicU64,
     /// Requests answered with a 4xx/5xx status.
     errors: AtomicU64,
+    /// Successful manifest reloads (valuator snapshot swaps).
+    reloads: AtomicU64,
+    /// Reload attempts that failed (previous snapshot kept serving).
+    reload_errors: AtomicU64,
 }
 
 struct Shared {
-    valuator: Arc<Valuator>,
+    /// The serving snapshot. Queries pin one `Arc<Valuator>` at admission
+    /// and never observe a mid-flight swap; the reloader thread publishes
+    /// new generations here.
+    valuator: Slot<Valuator>,
     metrics: Arc<Metrics>,
     cfg: ServeConfig,
     stats: ServeStats,
@@ -149,7 +174,8 @@ impl Shared {
 
     /// `/metrics`: the shared exposition plus the `logra_serve_*` families.
     fn render_metrics(&self) -> String {
-        let pool = self.valuator.scan_pool().map(|p| p.snapshot());
+        let valuator = self.valuator.load();
+        let pool = valuator.scan_pool().map(|p| p.snapshot());
         let ld = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
         let mut out = render_exposition(
             &self.metrics,
@@ -158,14 +184,49 @@ impl Shared {
                 (
                     "logra_store_rows",
                     "Rows in the served store fabric.",
-                    self.valuator.rows() as f64,
+                    valuator.rows() as f64,
                 ),
                 (
                     "logra_store_k",
                     "Projected gradient dimension.",
-                    self.valuator.k() as f64,
+                    valuator.k() as f64,
                 ),
             ],
+        );
+        simple(
+            &mut out,
+            "logra_store_generation",
+            "Manifest generation of the serving snapshot.",
+            "gauge",
+            valuator.generation() as f64,
+        );
+        simple(
+            &mut out,
+            "logra_store_reloads_total",
+            "Successful manifest reloads (snapshot swaps).",
+            "counter",
+            ld(&self.stats.reloads),
+        );
+        simple(
+            &mut out,
+            "logra_store_reload_errors_total",
+            "Reload attempts that failed; the previous snapshot kept serving.",
+            "counter",
+            ld(&self.stats.reload_errors),
+        );
+        simple(
+            &mut out,
+            "logra_store_quarantined_shards",
+            "Shards that failed validation at reload and were quarantined.",
+            "gauge",
+            valuator.quarantined().len() as f64,
+        );
+        simple(
+            &mut out,
+            "logra_store_ivf_fallback_shards",
+            "Shards the IVF engine serves via dense fallback (no index sidecar).",
+            "gauge",
+            valuator.ivf_fallback_shards() as f64,
         );
         simple(
             &mut out,
@@ -229,12 +290,30 @@ impl Shared {
     /// `/healthz`: store / backend / pool liveness (the JSON subset has
     /// no booleans, so liveness is `"status": "ok"` plus numbers).
     fn render_healthz(&self) -> String {
+        let valuator = self.valuator.load();
         let mut pairs = vec![
             ("status".to_string(), Json::Str("ok".into())),
-            ("backend".to_string(), Json::Str(self.valuator.kind().name().into())),
-            ("rows".to_string(), Json::Num(self.valuator.rows() as u64)),
-            ("k".to_string(), Json::Num(self.valuator.k() as u64)),
-            ("workers".to_string(), Json::Num(self.valuator.workers() as u64)),
+            ("backend".to_string(), Json::Str(valuator.kind().name().into())),
+            ("rows".to_string(), Json::Num(valuator.rows() as u64)),
+            ("k".to_string(), Json::Num(valuator.k() as u64)),
+            ("workers".to_string(), Json::Num(valuator.workers() as u64)),
+            ("generation".to_string(), Json::Num(valuator.generation())),
+            (
+                "quarantined_shards".to_string(),
+                Json::Num(valuator.quarantined().len() as u64),
+            ),
+            (
+                "ivf_fallback_shards".to_string(),
+                Json::Num(valuator.ivf_fallback_shards() as u64),
+            ),
+            (
+                "reloads".to_string(),
+                Json::Num(self.stats.reloads.load(Ordering::Relaxed)),
+            ),
+            (
+                "reload_errors".to_string(),
+                Json::Num(self.stats.reload_errors.load(Ordering::Relaxed)),
+            ),
             (
                 "in_flight".to_string(),
                 Json::Num(self.in_flight.load(Ordering::Relaxed) as u64),
@@ -244,7 +323,7 @@ impl Shared {
                 Json::Num(self.cfg.max_in_flight.max(1) as u64),
             ),
         ];
-        if let Some(p) = self.valuator.scan_pool() {
+        if let Some(p) = valuator.scan_pool() {
             let s = p.snapshot();
             pairs.push((
                 "pool".to_string(),
@@ -359,7 +438,7 @@ pub(crate) fn parse_query_body(
         }
         (None, None) => return Err("query body needs \"row\" or \"gradient\"".into()),
     };
-    Ok(ParsedQuery { body, topk, norm, deadline_ms })
+    Ok(ParsedQuery { body, topk, norm, deadline_ms, backend })
 }
 
 // -------------------------------------------------------------- responses
@@ -403,6 +482,7 @@ fn report_json(rep: &QueryReport) -> Json {
 fn query_response_body(
     request_id: u64,
     backend: &str,
+    generation: u64,
     results: &[QueryResult],
     report: Option<&QueryReport>,
 ) -> String {
@@ -424,6 +504,7 @@ fn query_response_body(
     let mut pairs = vec![
         ("request_id".to_string(), Json::Num(request_id)),
         ("backend".to_string(), Json::Str(backend.to_string())),
+        ("generation".to_string(), Json::Num(generation)),
         ("results".to_string(), Json::Arr(results_json)),
     ];
     if let Some(rep) = report {
@@ -434,6 +515,47 @@ fn query_response_body(
 
 // ----------------------------------------------------------------- server
 
+/// How a server follows a live-growing store. See the module docs'
+/// "Live reload" section.
+pub struct ReloadConfig {
+    /// The store directory whose manifest generation is probed.
+    pub dir: PathBuf,
+    /// How often the reloader thread probes for a new generation.
+    pub interval: Duration,
+    /// Rebuild the serving valuator after the generation advanced. Runs
+    /// on the reloader thread; an `Err` keeps the previous snapshot
+    /// serving and counts in `logra_store_reload_errors_total`.
+    pub rebuild: Box<dyn Fn() -> Result<Valuator, ValuationError> + Send + Sync>,
+}
+
+impl ReloadConfig {
+    /// The standard rebuild recipe: reopen the store degraded (corrupt
+    /// shards quarantined, not fatal), keep the backend/damping/worker
+    /// choices from startup, and attach the long-lived shared scan pool
+    /// so warm workers survive the swap.
+    pub fn standard(
+        dir: PathBuf,
+        interval: Duration,
+        backend: Backend,
+        damping: f32,
+        workers: usize,
+        pool: Arc<ScanPool>,
+        metrics: Arc<Metrics>,
+    ) -> ReloadConfig {
+        let store_dir = dir.clone();
+        let rebuild = Box::new(move || {
+            Valuator::open_degraded(&store_dir)?
+                .backend(backend)
+                .workers(workers)
+                .fit_from_store(damping)
+                .pool(PoolMode::Shared(pool.clone()))
+                .metrics(metrics.clone())
+                .build()
+        });
+        ReloadConfig { dir, interval, rebuild }
+    }
+}
+
 /// A running `logra serve` instance. Dropping (or [`Server::stop`]) shuts
 /// the accept loop down; in-flight connection threads notice on their
 /// next read/write against a closed socket or idle timeout.
@@ -441,6 +563,7 @@ pub struct Server {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
+    reloader: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -452,17 +575,33 @@ impl Server {
         metrics: Arc<Metrics>,
         cfg: ServeConfig,
     ) -> Result<Server> {
+        Self::start_with_reload(valuator, metrics, cfg, None)
+    }
+
+    /// [`Server::start`], optionally following a live-growing store:
+    /// with a [`ReloadConfig`] a reloader thread probes the manifest
+    /// generation and swaps in rebuilt snapshots as it advances.
+    pub fn start_with_reload(
+        valuator: Arc<Valuator>,
+        metrics: Arc<Metrics>,
+        cfg: ServeConfig,
+        reload: Option<ReloadConfig>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(Shared {
-            valuator,
+            valuator: Slot::new(valuator),
             metrics,
             cfg,
             stats: ServeStats::default(),
             in_flight: AtomicUsize::new(0),
             next_request_id: AtomicU64::new(0),
         });
+        let reloader = match reload {
+            None => None,
+            Some(r) => Some(spawn_reloader(shared.clone(), shutdown.clone(), r)?),
+        };
         let flag = shutdown.clone();
         let accept = std::thread::Builder::new()
             .name("logra-serve-accept".into())
@@ -478,7 +617,7 @@ impl Server {
                         .spawn(move || handle_conn(&shared, stream));
                 }
             })?;
-        Ok(Server { addr, shutdown, accept: Some(accept) })
+        Ok(Server { addr, shutdown, accept: Some(accept), reloader })
     }
 
     /// The bound address (resolves port 0).
@@ -500,6 +639,10 @@ impl Server {
             let _ = TcpStream::connect(self.addr);
             let _ = h.join();
         }
+        if let Some(h) = self.reloader.take() {
+            self.shutdown.store(true, Ordering::Release);
+            let _ = h.join();
+        }
     }
 
     /// Stop accepting and join the accept thread.
@@ -512,6 +655,49 @@ impl Drop for Server {
     fn drop(&mut self) {
         self.shut();
     }
+}
+
+/// The reloader thread: probe the store's manifest generation every
+/// `cfg.interval` and, when it advances past the serving snapshot's,
+/// rebuild and swap. Queries already pinned to the old snapshot finish
+/// against it (the `Arc` keeps it alive); new admissions pin the new one.
+/// Sleeps in short slices so shutdown stays responsive.
+fn spawn_reloader(
+    shared: Arc<Shared>,
+    shutdown: Arc<AtomicBool>,
+    cfg: ReloadConfig,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new().name("logra-serve-reload".into()).spawn(move || {
+        let slice = Duration::from_millis(100);
+        let mut next = Instant::now() + cfg.interval;
+        while !shutdown.load(Ordering::Acquire) {
+            let wait = next.saturating_duration_since(Instant::now());
+            if !wait.is_zero() {
+                std::thread::sleep(wait.min(slice));
+                continue;
+            }
+            next = Instant::now() + cfg.interval;
+            let serving = shared.valuator.load().generation();
+            match current_generation(&cfg.dir) {
+                // A generation BEHIND the serving one is not a reload
+                // trigger: publishers only move forward, so it means the
+                // probe raced a store rebuild — wait for it to finish.
+                Ok(published) if published > serving => match (cfg.rebuild)() {
+                    Ok(v) => {
+                        shared.valuator.store(Arc::new(v));
+                        shared.stats.reloads.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        shared.stats.reload_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+                Ok(_) => {}
+                Err(_) => {
+                    shared.stats.reload_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    })
 }
 
 /// Per-connection idle read timeout — a keep-alive client that goes
@@ -649,11 +835,17 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
     shared.stats.queries.fetch_add(1, Ordering::Relaxed);
     let request_id = shared.next_request_id.fetch_add(1, Ordering::Relaxed) + 1;
 
+    // Pin ONE snapshot for the whole query: admission, row lookup, scan,
+    // and the response's generation all come from this Arc, so a reload
+    // swapping the slot mid-flight can never mix two generations into
+    // one answer.
+    let valuator = shared.valuator.load();
+
     // Resolve which engine a per-request backend choice lands on BEFORE
     // building the query: an unservable choice is the caller's mistake
     // (400), and the 200 response names the engine that actually served
     // (after "auto" resolution), not the wire-level choice.
-    let served = match shared.valuator.resolved_kind(parsed.backend) {
+    let served = match valuator.resolved_kind(parsed.backend) {
         Ok(kind) => kind.name(),
         Err(ValuationError::InvalidConfig(m)) => {
             return respond(400, error_body("bad_request", &m))
@@ -662,7 +854,7 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
     };
 
     let query = match parsed.body {
-        QueryBody::Row(row) => match shared.valuator.gradient_row(row as usize) {
+        QueryBody::Row(row) => match valuator.gradient_row(row as usize) {
             Some(g) => QueryRequest::gradients(g, 1, parsed.topk),
             None => {
                 return respond(
@@ -671,7 +863,7 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
                         "bad_request",
                         &format!(
                             "row {row} out of range (store has {} rows)",
-                            shared.valuator.rows()
+                            valuator.rows()
                         ),
                     ),
                 )
@@ -692,7 +884,7 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
     let deadline =
         (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
 
-    let pending = match shared.valuator.query_async(query) {
+    let pending = match valuator.query_async(query) {
         Ok(p) => p,
         Err(ValuationError::BadQuery(m) | ValuationError::InvalidConfig(m)) => {
             return respond(400, error_body("bad_request", &m))
@@ -717,7 +909,13 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
     match pending.wait_with_report_until(&mut should_cancel, shared.cfg.poll_interval) {
         Ok((results, report)) => respond(
             200,
-            query_response_body(request_id, served, &results, report.as_ref()),
+            query_response_body(
+                request_id,
+                served,
+                valuator.generation(),
+                &results,
+                report.as_ref(),
+            ),
         ),
         Err(ValuationError::Cancelled { .. }) => {
             if disconnected.get() {
@@ -843,10 +1041,11 @@ mod tests {
         let results = vec![QueryResult {
             top: vec![(0.12345678901234567, 42), (-3.5e-5, 7)],
         }];
-        let body = query_response_body(9, "parallel-f32", &results, None);
+        let body = query_response_body(9, "parallel-f32", 3, &results, None);
         let v = json::parse(&body).unwrap();
         assert_eq!(v.get("request_id").and_then(Json::as_u64), Some(9));
         assert_eq!(v.get("backend").and_then(Json::as_str), Some("parallel-f32"));
+        assert_eq!(v.get("generation").and_then(Json::as_u64), Some(3));
         let r0 = &v.get("results").and_then(Json::as_arr).unwrap()[0];
         let ids: Vec<u64> = r0
             .get("ids")

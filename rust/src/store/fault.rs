@@ -1,0 +1,182 @@
+//! Test-only fault injection for the store I/O path.
+//!
+//! The live-growing store promises that a reader always sees either the
+//! previous generation intact or the new one completely — never a blend.
+//! That promise is only worth anything if it survives torn writes, crashes
+//! mid-finalize, and silent sidecar corruption, so the durability-critical
+//! code paths carry named *fault points* that this module can arm:
+//!
+//! | point               | where it fires                       | effect |
+//! |---------------------|--------------------------------------|--------|
+//! | `manifest_tear`     | [`ShardManifest::save`]              | temp file written + synced, rename skipped, `Err` returned (crash before publish) |
+//! | `publish_delay`     | [`ShardManifest::save`]              | sleep `arg` ms between fsync and rename (widens the publish race window) |
+//! | `finalize_truncate` | [`GradStoreWriter::finalize`]        | header patched with the full row count but the data payload truncated, `Err` returned (torn write) |
+//! | `quant_corrupt`     | [`QuantWriter::finalize`]            | `codes.bin` silently truncated after an otherwise successful finalize (bit rot) |
+//! | `ivf_corrupt`       | [`build_index`]                      | a shard's `lists.bin` silently truncated after the build (stale/damaged sidecar) |
+//!
+//! Faults are armed either from the `LOGRA_FAULT` environment variable
+//! (comma-separated `point` or `point=arg` entries, read once at first
+//! use — the right interface for CLI-level tests that fault a whole
+//! `logra store append` process) or programmatically via [`arm`] /
+//! [`disarm`] (the right interface for in-process `cargo test`, where
+//! mutating the environment from multiple test threads is unsound).
+//!
+//! The armed set is process-global, and `cargo test` runs tests
+//! concurrently in one process — so for every path-bearing point
+//! (`manifest_tear`, `finalize_truncate`, `quant_corrupt`,
+//! `ivf_corrupt`), the optional `=arg` is a **path substring filter**:
+//! `finalize_truncate=my-test-dir` only fires on files whose path
+//! contains `my-test-dir`. Tests arm faults filtered to their own temp
+//! directories and never perturb a concurrently running sibling. A bare
+//! point (no `=arg`) fires everywhere, which is what `LOGRA_FAULT` wants
+//! in a single-operation CLI process. `publish_delay`'s arg is the delay
+//! in milliseconds instead.
+//!
+//! When nothing is armed every hook is a single mutex-guarded `Option`
+//! check on a cold path (manifest publication, shard finalize) — the hot
+//! scan path never consults this module.
+//!
+//! [`ShardManifest::save`]: super::ShardManifest::save
+//! [`GradStoreWriter::finalize`]: super::GradStoreWriter::finalize
+//! [`QuantWriter::finalize`]: super::QuantWriter::finalize
+//! [`build_index`]: super::build_index
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// Armed fault entries as `(point, optional arg)` pairs. `None` means the
+/// `LOGRA_FAULT` environment variable has not been consulted yet.
+static ARMED: Mutex<Option<Vec<(String, Option<String>)>>> = Mutex::new(None);
+
+/// Serializes fault-driven tests: [`arm`] and [`disarm`] replace the whole
+/// armed set, so two tests interleaving them would cancel each other's
+/// faults. Hold the returned guard for the entire armed window.
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+pub fn exclusive() -> std::sync::MutexGuard<'static, ()> {
+    EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn parse_spec(spec: &str) -> Vec<(String, Option<String>)> {
+    spec.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|entry| match entry.split_once('=') {
+            Some((point, arg)) => (point.to_string(), Some(arg.to_string())),
+            None => (entry.to_string(), None),
+        })
+        .collect()
+}
+
+/// Arm the given fault spec for this process, replacing whatever was armed
+/// before (including anything inherited from `LOGRA_FAULT`).
+pub fn arm(spec: &str) {
+    let mut armed = ARMED.lock().unwrap_or_else(|e| e.into_inner());
+    *armed = Some(parse_spec(spec));
+}
+
+/// Disarm every fault. The environment variable is *not* re-read: after
+/// `disarm()` the process runs fault-free until the next [`arm`].
+pub fn disarm() {
+    let mut armed = ARMED.lock().unwrap_or_else(|e| e.into_inner());
+    *armed = Some(Vec::new());
+}
+
+/// Look up a fault point. Returns `Some(arg)` when armed (`arg` is the
+/// `=value` part, if any). First call initializes from `LOGRA_FAULT`.
+pub fn armed(point: &str) -> Option<Option<String>> {
+    let mut guard = ARMED.lock().unwrap_or_else(|e| e.into_inner());
+    let entries = guard.get_or_insert_with(|| {
+        std::env::var("LOGRA_FAULT")
+            .map(|s| parse_spec(&s))
+            .unwrap_or_default()
+    });
+    entries
+        .iter()
+        .find(|(p, _)| p == point)
+        .map(|(_, arg)| arg.clone())
+}
+
+/// Does an armed entry's path filter accept this path? Bare entries
+/// accept everything.
+fn path_matches(arg: &Option<String>, path: &std::path::Path) -> bool {
+    match arg {
+        None => true,
+        Some(filter) => path.to_string_lossy().contains(filter.as_str()),
+    }
+}
+
+/// Fail with an injected-fault error if `point` is armed and its path
+/// filter (if any) matches `path`.
+pub fn fail_point_at(point: &str, path: &std::path::Path) -> Result<()> {
+    if let Some(arg) = armed(point) {
+        if path_matches(&arg, path) {
+            bail!("fault injected: {point}");
+        }
+    }
+    Ok(())
+}
+
+/// Sleep for the armed delay (in milliseconds) if `point` is armed with a
+/// numeric argument; `point` alone defaults to 10ms.
+pub fn delay_point(point: &str) {
+    if let Some(arg) = armed(point) {
+        let ms = arg.and_then(|a| a.parse::<u64>().ok()).unwrap_or(10);
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// If `point` is armed and its path filter matches, truncate `path` to
+/// half its current length (simulating a torn write / bit rot that
+/// invalidates the tail of the file). Returns whether the fault fired.
+pub fn maybe_truncate(point: &str, path: &std::path::Path) -> bool {
+    match armed(point) {
+        None => return false,
+        Some(arg) => {
+            if !path_matches(&arg, path) {
+                return false;
+            }
+        }
+    }
+    if let Ok(f) = std::fs::OpenOptions::new().write(true).open(path) {
+        if let Ok(meta) = f.metadata() {
+            let _ = f.set_len(meta.len() / 2);
+            let _ = f.sync_all();
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fault state is process-global and cargo runs tests concurrently, so
+    // this self-test only arms entries carrying a path filter no other
+    // test's paths can contain.
+    #[test]
+    fn arm_parse_and_disarm_roundtrip() {
+        let _x = exclusive();
+        arm("manifest_tear=fault-selftest, finalize_truncate=fault-selftest ,,");
+        let elsewhere = std::path::Path::new("/tmp/anywhere");
+        let here = std::path::Path::new("/tmp/fault-selftest/store");
+        assert_eq!(armed("manifest_tear"), Some(Some("fault-selftest".to_string())));
+        assert_eq!(
+            armed("finalize_truncate"),
+            Some(Some("fault-selftest".to_string()))
+        );
+        assert_eq!(armed("publish_delay"), None);
+        // Path filters scope a fault to matching paths only.
+        assert!(fail_point_at("manifest_tear", elsewhere).is_ok());
+        let err = fail_point_at("manifest_tear", here).unwrap_err().to_string();
+        assert!(err.contains("fault injected"), "got: {err}");
+        // Truncation on a missing file is a no-op beyond reporting `fired`.
+        assert!(!maybe_truncate("finalize_truncate", elsewhere));
+        assert!(maybe_truncate("finalize_truncate", here));
+        disarm();
+        assert_eq!(armed("manifest_tear"), None);
+        assert!(fail_point_at("manifest_tear", here).is_ok());
+        assert!(!maybe_truncate("finalize_truncate", here));
+    }
+}

@@ -1,0 +1,217 @@
+//! Live corpus growth: generation probes, shard appends, and the
+//! snapshot slot that lets `logra serve` swap fabrics under load.
+//!
+//! The contract, end to end:
+//!
+//! 1. A writer appends a new `shard-NNNN/` directory next to the existing
+//!    shards and finalizes it through the crash-consistent
+//!    [`GradStoreWriter`] path (data flushed, header patched last,
+//!    `sync_all`). Until the manifest mentions the shard, it is invisible
+//!    to every reader — a crash here leaves the store exactly as it was.
+//! 2. The writer publishes a new manifest with `generation + 1` via
+//!    write-temp + fsync + atomic rename ([`ShardManifest::save`]), so a
+//!    concurrent reader loads either the old manifest or the new one,
+//!    never a torn blend.
+//! 3. Readers that want a consistent view pin an `Arc` snapshot from a
+//!    [`Slot`] once per query; a reload stores a new `Arc` and in-flight
+//!    queries keep scanning the generation they admitted under.
+//!
+//! [`GradStoreWriter`]: super::GradStoreWriter
+//! [`ShardManifest::save`]: super::ShardManifest::save
+
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use super::{GradStoreWriter, ShardManifest, StoreCodec, SHARD_MANIFEST};
+
+/// Minimal ArcSwap-style slot, std-only: readers clone the current `Arc`
+/// under a briefly-held read lock, writers swap the pointer under the
+/// write lock. Clones taken before a [`store`](Slot::store) keep the old
+/// value alive for as long as they need it — that is the snapshot pin.
+pub struct Slot<T> {
+    inner: RwLock<Arc<T>>,
+}
+
+impl<T> Slot<T> {
+    pub fn new(value: Arc<T>) -> Self {
+        Slot {
+            inner: RwLock::new(value),
+        }
+    }
+
+    /// Pin the current snapshot.
+    pub fn load(&self) -> Arc<T> {
+        self.inner
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Publish a new snapshot; existing pins are unaffected.
+    pub fn store(&self, value: Arc<T>) {
+        *self.inner.write().unwrap_or_else(|e| e.into_inner()) = value;
+    }
+}
+
+/// Cheap manifest probe: the published generation of `dir`, without
+/// opening any shard. Legacy single-store directories (no manifest)
+/// report generation 0 and never advance.
+pub fn current_generation(dir: &Path) -> Result<u64> {
+    if !dir.join(SHARD_MANIFEST).is_file() {
+        return Ok(0);
+    }
+    Ok(ShardManifest::load(dir)?.generation)
+}
+
+/// What [`append_shard`] published.
+#[derive(Debug)]
+pub struct AppendReport {
+    /// Directory name of the new shard (e.g. `shard-0004`).
+    pub shard_dir: String,
+    /// Rows in the new shard.
+    pub rows: u64,
+    /// Generation the store now serves.
+    pub generation: u64,
+}
+
+/// Append one finalized shard to a sharded f32 store and publish it as
+/// the next generation. `rows.len()` must equal `ids.len() * k`.
+///
+/// The shard is written and finalized *before* the manifest is touched,
+/// so a crash at any point leaves the previous generation fully
+/// servable; a leftover directory from an earlier torn publish is
+/// removed and rewritten.
+pub fn append_shard(dir: &Path, ids: &[u64], rows: &[f32]) -> Result<AppendReport> {
+    let mut man = ShardManifest::load(dir)
+        .with_context(|| format!("append requires a shard manifest in {}", dir.display()))?;
+    if man.codec != StoreCodec::F32 {
+        bail!(
+            "append targets the f32 fabric; {} is {} — append to its source store, \
+             then run `store quantize --incremental`",
+            dir.display(),
+            man.codec.as_str()
+        );
+    }
+    if ids.is_empty() {
+        bail!("append of zero rows");
+    }
+    if rows.len() != ids.len() * man.k {
+        bail!(
+            "append shape mismatch: {} ids x k={} needs {} floats, got {}",
+            ids.len(),
+            man.k,
+            ids.len() * man.k,
+            rows.len()
+        );
+    }
+
+    // Pick the first shard-NNNN name not already claimed by the manifest.
+    // An on-disk directory with that name can only be debris from a
+    // publish that never happened — safe to clear.
+    let mut idx = man.shard_dirs.len();
+    let name = loop {
+        let candidate = super::shards::shard_dir_name(idx);
+        if !man.shard_dirs.iter().any(|d| d == &candidate) {
+            break candidate;
+        }
+        idx += 1;
+    };
+    let shard_dir = dir.join(&name);
+    if shard_dir.exists() {
+        std::fs::remove_dir_all(&shard_dir)
+            .with_context(|| format!("clear stale shard dir {}", shard_dir.display()))?;
+    }
+
+    let mut w = GradStoreWriter::create(&shard_dir, man.k)?;
+    w.append(ids, rows)?;
+    let n = w.finalize()?;
+
+    man.shard_dirs.push(name.clone());
+    man.shard_rows.push(n);
+    man.generation += 1;
+    man.save(dir)?;
+    Ok(AppendReport {
+        shard_dir: name,
+        rows: n,
+        generation: man.generation,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::ShardedStore;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("logra-gen-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn seed_store(dir: &Path, k: usize, shards: usize, rows_per: usize) {
+        let mut w = crate::store::ShardedWriter::create(dir, k, shards).unwrap();
+        for s in 0..shards {
+            for r in 0..rows_per {
+                let id = (s * rows_per + r) as u64;
+                let row: Vec<f32> = (0..k).map(|j| (id as f32) + j as f32 * 0.5).collect();
+                w.append_shard(s, &[id], &row).unwrap();
+            }
+        }
+        w.finalize().unwrap();
+    }
+
+    #[test]
+    fn slot_pins_survive_swap() {
+        let slot = Slot::new(Arc::new(1u64));
+        let pinned = slot.load();
+        slot.store(Arc::new(2u64));
+        assert_eq!(*pinned, 1, "pre-swap pin must keep old snapshot");
+        assert_eq!(*slot.load(), 2);
+    }
+
+    #[test]
+    fn append_publishes_next_generation() {
+        let dir = tmpdir("append");
+        seed_store(&dir, 4, 2, 3);
+        assert_eq!(current_generation(&dir).unwrap(), 1);
+
+        let ids = [6u64, 7];
+        let rows: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let rep = append_shard(&dir, &ids, &rows).unwrap();
+        assert_eq!(rep.shard_dir, "shard-0002");
+        assert_eq!(rep.rows, 2);
+        assert_eq!(rep.generation, 2);
+        assert_eq!(current_generation(&dir).unwrap(), 2);
+
+        let store = ShardedStore::open(&dir).unwrap();
+        assert_eq!(store.rows(), 8);
+        assert_eq!(store.id(6), 6);
+        assert_eq!(store.row(7), &rows[4..8]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_rejects_shape_and_codec_errors() {
+        let dir = tmpdir("append-rej");
+        seed_store(&dir, 4, 1, 2);
+        let err = append_shard(&dir, &[9], &[0.0; 3]).unwrap_err().to_string();
+        assert!(err.contains("shape mismatch"), "got: {err}");
+        assert!(append_shard(&dir, &[], &[]).is_err());
+        // Generation untouched by rejected appends.
+        assert_eq!(current_generation(&dir).unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_dir_probes_generation_zero() {
+        let dir = tmpdir("legacy-probe");
+        let mut w = GradStoreWriter::create(&dir, 4).unwrap();
+        w.append(&[0], &[0.0; 4]).unwrap();
+        w.finalize().unwrap();
+        assert_eq!(current_generation(&dir).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -90,6 +90,16 @@ impl GradStoreWriter {
         f.seek(SeekFrom::Start(0))?;
         f.write_all(&header_bytes(self.k as u32, self.rows))?;
         f.sync_all()?;
+        // Fault point: a crash that persists the patched header but loses
+        // tail data pages leaves a shard whose header over-claims — the
+        // torn state `GradStore::open`'s length check must catch and the
+        // quarantine path must contain.
+        if super::fault::maybe_truncate("finalize_truncate", &self.dir.join("grads.bin")) {
+            return Err(anyhow!(
+                "fault injected: finalize_truncate in {}",
+                self.dir.display()
+            ));
+        }
         Ok(self.rows)
     }
 }

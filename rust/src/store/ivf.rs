@@ -125,8 +125,20 @@ pub fn build_index(dir: &Path, clusters: usize, seed: u64) -> Result<IvfBuildRep
         report.clusters.push(built);
         report.rows.push(shard.rows());
     }
+    // Fault point: silent sidecar damage after a successful build — the
+    // per-shard validation in `IvfIndex::open` must degrade this to a
+    // full-scan fallback, never a wrong answer.
+    if !man.shard_dirs.is_empty() {
+        super::fault::maybe_truncate(
+            "ivf_corrupt",
+            &dir.join(&man.shard_dirs[0]).join(IVF_LISTS_FILE),
+        );
+    }
     let mut man = man;
     man.index = Some(IVF_INDEX_NAME.to_string());
+    // Advertising the index is a content change readers may be polling
+    // for: republish as the next generation.
+    man.generation += 1;
     man.save(dir)?;
     Ok(report)
 }

@@ -43,7 +43,21 @@
 //! `"index": "ivf"` manifest field, giving queries a sublinear stage-0
 //! candidate generator; see [`ivf`] and the IVF engine in
 //! `valuation::ann`. Manifests without the field parse unchanged.
+//!
+//! # Live growth
+//!
+//! The manifest carries a monotonic `"generation"` counter, bumped on
+//! every publication (initial finalize, `logra store append`, incremental
+//! quantize, index build). Writers finalize new `shard-NNNN/` directories
+//! *before* publishing the manifest via write-temp + fsync + atomic
+//! rename, so a reader always loads either the previous generation intact
+//! or the new one completely — never a blend. Manifests written before
+//! the field existed parse as generation 0. See [`generation`] for the
+//! append/snapshot-slot machinery and [`fault`] for the `LOGRA_FAULT`
+//! injection layer that the crash-consistency tests drive.
 
+pub mod fault;
+pub mod generation;
 pub mod grad_store;
 pub mod ivf;
 pub mod mmap;
@@ -51,6 +65,7 @@ pub mod quant;
 pub mod shards;
 pub mod writer_thread;
 
+pub use generation::{append_shard, current_generation, AppendReport, Slot};
 pub use grad_store::{GradStore, GradStoreWriter};
 pub use ivf::{
     build_index, IvfBuildReport, IvfIndex, IvfShard, IVF_CENTROIDS_FILE, IVF_INDEX_NAME,
@@ -58,7 +73,8 @@ pub use ivf::{
 };
 pub use mmap::Mmap;
 pub use quant::{
-    quantize_store, QuantShardedStore, QuantStore, QuantWriter, QUANT_BLOCK, QUANT_CODES_FILE,
+    quantize_store, quantize_store_incremental, QuantShardedStore, QuantStore, QuantWriter,
+    QuantizeReport, QUANT_BLOCK, QUANT_CODES_FILE,
 };
 pub use shards::{
     merge_store, shard_store, stat_store, ShardBytes, ShardManifest, ShardWriter,

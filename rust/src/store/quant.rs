@@ -232,6 +232,10 @@ impl QuantWriter {
         f.seek(SeekFrom::Start(0))?;
         f.write_all(&header_bytes(self.k as u32, self.rows))?;
         f.sync_all()?;
+        // Fault point: silent int8 sidecar damage (bit rot / lost pages)
+        // that finalize does NOT notice — `QuantStore::open`'s length
+        // checks must catch it at the next reload.
+        super::fault::maybe_truncate("quant_corrupt", &self.dir.join(QUANT_CODES_FILE));
         Ok(self.rows)
     }
 }
@@ -394,9 +398,19 @@ impl QuantShardedStore {
                 man.codec.as_str()
             );
             let mut shards = Vec::with_capacity(man.n_shards());
-            for name in &man.shard_dirs {
-                let s = QuantStore::open(&dir.join(name))
-                    .with_context(|| format!("shard {name} of {}", dir.display()))?;
+            for (i, name) in man.shard_dirs.iter().enumerate() {
+                let sdir = dir.join(name);
+                let s = QuantStore::open(&sdir).map_err(|e| {
+                    let actual = read_quant_header(&sdir.join(QUANT_CODES_FILE))
+                        .map(|(_, rows)| rows.to_string())
+                        .unwrap_or_else(|_| "unreadable".to_string());
+                    e.context(format!(
+                        "shard {name} at {} failed validation: manifest expects {} rows, \
+                         header reports {actual}",
+                        sdir.display(),
+                        man.shard_rows[i]
+                    ))
+                })?;
                 ensure!(
                     s.k() == man.k,
                     "shard {name}: k={} disagrees with manifest k={}",
@@ -497,6 +511,7 @@ pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
     ShardManifest {
         k,
         codec: StoreCodec::Int8,
+        generation: 0,
         rescore_dir: rescore_dir.clone(),
         index: None,
         shard_dirs: shard_dirs.clone(),
@@ -505,20 +520,13 @@ pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
     .save(dst)?;
     let mut shard_rows = Vec::with_capacity(store.n_shards());
     for (si, mut w) in writers.into_iter().enumerate() {
-        let shard = store.shard(si);
-        let rows = shard.rows();
-        let mut at = 0usize;
-        while at < rows {
-            let len = 1024.min(rows - at);
-            let ids: Vec<u64> = (at..at + len).map(|r| shard.id(r)).collect();
-            w.append(&ids, shard.chunk(at, len))?;
-            at += len;
-        }
+        convert_shard(&store, si, &mut w)?;
         shard_rows.push(w.finalize()?);
     }
     let man = ShardManifest {
         k,
         codec: StoreCodec::Int8,
+        generation: 1,
         rescore_dir,
         index: None,
         shard_dirs,
@@ -526,6 +534,103 @@ pub fn quantize_store(src: &Path, dst: &Path) -> Result<ShardManifest> {
     };
     man.save(dst)?;
     Ok(man)
+}
+
+/// Stream one f32 shard into a quant writer in bounded chunks.
+fn convert_shard(store: &ShardedStore, si: usize, w: &mut QuantWriter) -> Result<()> {
+    let shard = store.shard(si);
+    let rows = shard.rows();
+    let mut at = 0usize;
+    while at < rows {
+        let len = 1024.min(rows - at);
+        let ids: Vec<u64> = (at..at + len).map(|r| shard.id(r)).collect();
+        w.append(&ids, shard.chunk(at, len))?;
+        at += len;
+    }
+    Ok(())
+}
+
+/// What an incremental quantize pass did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuantizeReport {
+    /// Shards (re)converted this pass.
+    pub converted: usize,
+    /// Shards whose int8 mirror already matched the f32 source row count.
+    pub skipped: usize,
+}
+
+/// Incremental [`quantize_store`]: bring the int8 mirror at `dst` up to
+/// date with a (possibly grown) f32 store at `src`, skipping every shard
+/// whose mirror already exists with a matching row count. This is how the
+/// quantized fabric tracks a live-growing f32 fabric without re-encoding
+/// the whole corpus per append.
+///
+/// New shards carry no IVF sidecars; the manifest's `index` advertisement
+/// is preserved, so an indexed store keeps serving with the unindexed
+/// shards on the per-shard full-scan fallback until `logra store index`
+/// is re-run. The destination generation advances only when something
+/// actually changed.
+pub fn quantize_store_incremental(
+    src: &Path,
+    dst: &Path,
+) -> Result<(ShardManifest, QuantizeReport)> {
+    if !dst.join(SHARD_MANIFEST).exists() {
+        let man = quantize_store(src, dst)?;
+        let converted = man.n_shards();
+        return Ok((man, QuantizeReport { converted, skipped: 0 }));
+    }
+    let store = ShardedStore::open(src)?;
+    let k = store.k();
+    let man = ShardManifest::load(dst)?;
+    ensure!(
+        man.codec == StoreCodec::Int8,
+        "incremental quantize target {} is not an int8 store",
+        dst.display()
+    );
+    ensure!(
+        man.k == k,
+        "incremental quantize: source k={k} disagrees with target k={}",
+        man.k
+    );
+    let mut report = QuantizeReport::default();
+    let mut shard_dirs = Vec::with_capacity(store.n_shards());
+    let mut shard_rows = Vec::with_capacity(store.n_shards());
+    for si in 0..store.n_shards() {
+        let name = super::shards::shard_dir_name(si);
+        let src_rows = store.shard(si).rows() as u64;
+        let up_to_date = man.shard_dirs.get(si) == Some(&name)
+            && read_quant_header(&dst.join(&name).join(QUANT_CODES_FILE))
+                .map(|(qk, qrows)| qk == k && qrows == src_rows)
+                .unwrap_or(false);
+        if up_to_date {
+            report.skipped += 1;
+        } else {
+            // Rebuild this shard's mirror from scratch; any IVF sidecars
+            // in the old directory would be stale and go with it.
+            let sdir = dst.join(&name);
+            let _ = std::fs::remove_dir_all(&sdir);
+            let mut w = QuantWriter::create(&sdir, k)?;
+            convert_shard(&store, si, &mut w)?;
+            w.finalize()?;
+            report.converted += 1;
+        }
+        shard_dirs.push(name);
+        shard_rows.push(src_rows);
+    }
+    if report.converted == 0 && shard_dirs == man.shard_dirs {
+        return Ok((man, report));
+    }
+    let man = ShardManifest {
+        k,
+        codec: StoreCodec::Int8,
+        generation: man.generation + 1,
+        rescore_dir: man.rescore_dir,
+        index: man.index,
+        shard_dirs,
+        shard_rows,
+    };
+    man.save(dst)?;
+    Ok((man, report))
 }
 
 #[cfg(test)]

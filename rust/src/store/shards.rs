@@ -13,17 +13,25 @@
 //! global row g lives at shard s, local row g - offset(s).
 //!
 //! Crash consistency: the manifest is written (atomically, via temp file +
-//! rename) at creation time with zero row counts, and each shard owns its
-//! durability through the v1 header-patching `finalize`. Opening trusts the
-//! per-shard headers, never the manifest row counts — a crash mid-extraction
-//! leaves every finalized shard intact and the unfinalized shard reporting
-//! its last durable count, exactly like a v1 store.
+//! fsync + rename) at creation time with zero row counts, and each shard
+//! owns its durability through the v1 header-patching `finalize`. Opening
+//! trusts the per-shard headers, never the manifest row counts — a crash
+//! mid-extraction leaves every finalized shard intact and the unfinalized
+//! shard reporting its last durable count, exactly like a v1 store.
+//!
+//! Live growth: the manifest carries a monotonic `generation` counter,
+//! bumped on every publication. Writers append and finalize new shard
+//! directories *first* (invisible until referenced), then publish the new
+//! generation atomically — a reader therefore always sees either the
+//! previous generation intact or the new one completely, never a blend
+//! (see [`super::generation`] for the append/reload orchestration and
+//! [`super::fault`] for the injection points that prove it).
 //!
 //! A directory without `shards.json` opens as a 1-shard fabric over the v1
 //! layout, so every existing store keeps working unchanged.
 
 use std::fs::File;
-use std::io::Read;
+use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, ensure, Context, Result};
@@ -72,6 +80,12 @@ impl StoreCodec {
 pub struct ShardManifest {
     pub k: usize,
     pub codec: StoreCodec,
+    /// Monotonic publication counter: bumped by every writer that
+    /// publishes a content change (initial finalize, shard append,
+    /// incremental quantize, index build, reconcile). Readers use it to
+    /// detect growth cheaply and to pin query snapshots; manifests
+    /// written before live growth carry no field and parse as 0.
+    pub generation: u64,
     /// Quantized stores only: path of the exact f32 source the codes were
     /// converted from — the stage-2 rescore substrate. Recorded by
     /// `quantize_store` so `Valuator::open` on a quantized directory can
@@ -116,6 +130,7 @@ impl ShardManifest {
         s.push_str("{\n");
         s.push_str(&format!("  \"version\": {MANIFEST_VERSION},\n"));
         s.push_str(&format!("  \"k\": {},\n", self.k));
+        s.push_str(&format!("  \"generation\": {},\n", self.generation));
         s.push_str(&format!("  \"codec\": \"{}\",\n", self.codec.as_str()));
         if let Some(rd) = &self.rescore_dir {
             s.push_str(&format!("  \"rescore_dir\": \"{rd}\",\n"));
@@ -149,6 +164,12 @@ impl ShardManifest {
             .get("k")
             .and_then(json::Json::as_u64)
             .ok_or_else(|| anyhow!("shard manifest: missing \"k\""))? as usize;
+        // Pre-live-growth manifests carry no "generation": 0, never bumped
+        // by anything that predates the field.
+        let generation = root
+            .get("generation")
+            .and_then(json::Json::as_u64)
+            .unwrap_or(0);
         // Pre-codec manifests (PR 1) carry no "codec" field: f32.
         let codec = match root.get("codec") {
             None => StoreCodec::F32,
@@ -197,7 +218,7 @@ impl ShardManifest {
             shard_rows.push(rows);
         }
         ensure!(!shard_dirs.is_empty(), "shard manifest: zero shards");
-        Ok(ShardManifest { k, codec, rescore_dir, index, shard_dirs, shard_rows })
+        Ok(ShardManifest { k, codec, generation, rescore_dir, index, shard_dirs, shard_rows })
     }
 
     pub fn load(dir: &Path) -> Result<Self> {
@@ -207,18 +228,41 @@ impl ShardManifest {
         Self::parse(&text).with_context(|| format!("parse {}", path.display()))
     }
 
-    /// Atomically (temp file + rename) write the manifest into `dir`.
+    /// Publish the manifest into `dir`: write a temp file, fsync it, then
+    /// atomically rename over `shards.json` (and best-effort fsync the
+    /// directory so the rename itself is durable). A crash or injected
+    /// fault at any point leaves the previously published manifest
+    /// untouched — readers see old or new, never a torn blend.
     pub fn save(&self, dir: &Path) -> Result<()> {
         let tmp = dir.join(".shards.json.tmp");
-        std::fs::write(&tmp, self.to_json())
-            .with_context(|| format!("write {}", tmp.display()))?;
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(self.to_json().as_bytes())
+                .with_context(|| format!("write {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("fsync {}", tmp.display()))?;
+        }
+        // Fault points: a torn publication crashes after the temp write
+        // but before the rename; a delayed one widens the race window the
+        // snapshot-pinned readers must tolerate.
+        super::fault::fail_point_at("manifest_tear", dir)
+            .with_context(|| format!("publish {}", dir.join(SHARD_MANIFEST).display()))?;
+        super::fault::delay_point("publish_delay");
         std::fs::rename(&tmp, dir.join(SHARD_MANIFEST))?;
+        // Durability of the rename needs the directory entry flushed too;
+        // opening a directory for fsync is Linux-specific, so tolerate
+        // failure rather than gating correctness on it.
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
         Ok(())
     }
 
     /// Rewrite the manifest's advisory row counts from the durable
     /// per-shard headers (used after per-thread shard finalization, where
-    /// no single writer knows every count).
+    /// no single writer knows every count). Republishes, so the
+    /// generation advances.
     pub fn reconcile(dir: &Path) -> Result<Self> {
         let mut man = Self::load(dir)?;
         for (name, rows) in man.shard_dirs.iter().zip(man.shard_rows.iter_mut()) {
@@ -230,13 +274,14 @@ impl ShardManifest {
             };
             *rows = hdr_rows;
         }
+        man.generation += 1;
         man.save(dir)?;
         Ok(man)
     }
 }
 
 /// Read (k, rows) from a v1 `grads.bin` header without mapping the file.
-fn read_v1_header(path: &Path) -> Result<(usize, u64)> {
+pub(crate) fn read_v1_header(path: &Path) -> Result<(usize, u64)> {
     let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut h = [0u8; 32];
     f.read_exact(&mut h).with_context(|| format!("header of {}", path.display()))?;
@@ -246,7 +291,7 @@ fn read_v1_header(path: &Path) -> Result<(usize, u64)> {
     Ok((k, rows))
 }
 
-fn shard_dir_name(i: usize) -> String {
+pub(crate) fn shard_dir_name(i: usize) -> String {
     format!("shard-{i:04}")
 }
 
@@ -301,6 +346,8 @@ impl ShardedWriter {
         let man = ShardManifest {
             k,
             codec: StoreCodec::F32,
+            // Generation 0 = "under construction"; finalize publishes 1.
+            generation: 0,
             rescore_dir: None,
             index: None,
             shard_dirs: (0..n_shards).map(shard_dir_name).collect(),
@@ -351,9 +398,13 @@ impl ShardedWriter {
         for w in self.writers {
             shard_rows.push(w.finalize()?);
         }
+        // Publication: advance past whatever generation the in-progress
+        // manifest carried (0 from `create`).
+        let generation = ShardManifest::load(&dir).map(|m| m.generation).unwrap_or(0) + 1;
         let man = ShardManifest {
             k,
             codec: StoreCodec::F32,
+            generation,
             rescore_dir: None,
             index: None,
             shard_dirs: (0..shard_rows.len()).map(shard_dir_name).collect(),
@@ -389,9 +440,8 @@ impl ShardedStore {
                 man.codec.as_str()
             );
             let mut shards = Vec::with_capacity(man.n_shards());
-            for name in &man.shard_dirs {
-                let s = GradStore::open(&dir.join(name))
-                    .with_context(|| format!("shard {name} of {}", dir.display()))?;
+            for (i, name) in man.shard_dirs.iter().enumerate() {
+                let s = open_manifest_shard(&man, dir, i)?;
                 ensure!(
                     s.k() == man.k,
                     "shard {name}: k={} disagrees with manifest k={}",
@@ -409,7 +459,9 @@ impl ShardedStore {
         }
     }
 
-    fn from_shards(shards: Vec<GradStore>, k: usize) -> Self {
+    /// Assemble a fabric from pre-opened shards (quarantined reloads open
+    /// shards individually and skip the damaged ones).
+    pub(crate) fn from_shards(shards: Vec<GradStore>, k: usize) -> Self {
         let mut offsets = Vec::with_capacity(shards.len() + 1);
         let mut acc = 0usize;
         offsets.push(0);
@@ -495,6 +547,30 @@ impl ShardedStore {
     pub fn storage_bytes(&self) -> u64 {
         self.shards.iter().map(GradStore::storage_bytes).sum()
     }
+}
+
+/// Open shard `i` of a manifest, wrapping failure with the shard's path
+/// plus the manifest-expected vs header-reported row counts — the error a
+/// quarantine decision (and an operator) needs, instead of the bare
+/// header complaint.
+pub(crate) fn open_manifest_shard(
+    man: &ShardManifest,
+    dir: &Path,
+    i: usize,
+) -> Result<GradStore> {
+    let name = &man.shard_dirs[i];
+    let sdir = dir.join(name);
+    GradStore::open(&sdir).map_err(|e| {
+        let actual = read_v1_header(&sdir.join("grads.bin"))
+            .map(|(_, rows)| rows.to_string())
+            .unwrap_or_else(|_| "unreadable".to_string());
+        e.context(format!(
+            "shard {name} at {} failed validation: manifest expects {} rows, \
+             header reports {actual}",
+            sdir.display(),
+            man.shard_rows[i]
+        ))
+    })
 }
 
 // ------------------------------------------------------------- operations
@@ -751,6 +827,7 @@ mod tests {
             let man = ShardManifest {
                 k: 192,
                 codec,
+                generation: 7,
                 rescore_dir,
                 index,
                 shard_dirs: vec!["shard-0000".into(), "shard-0001".into()],
@@ -776,6 +853,8 @@ mod tests {
         assert_eq!(man.rescore_dir, None);
         // Nor an index advertisement (pre-PR8).
         assert_eq!(man.index, None);
+        // Nor a generation (pre-live-growth): 0, never bumped.
+        assert_eq!(man.generation, 0);
     }
 
     #[test]
@@ -877,6 +956,8 @@ mod tests {
         let man = shard_store(&src, &sharded, 4).unwrap();
         assert_eq!(man.n_shards(), 4);
         assert_eq!(man.total_rows(), n as u64);
+        // First publication of a freshly built store.
+        assert_eq!(man.generation, 1);
         // Contiguous split: 5, 4, 4, 4.
         assert_eq!(man.shard_rows, vec![5, 4, 4, 4]);
         let s = ShardedStore::open(&sharded).unwrap();
@@ -927,9 +1008,11 @@ mod tests {
         assert_eq!(s.shard(2).chunk(0, 4), &per_shard[2][..]);
         assert_eq!(s.id(4), 20); // global row 4 = shard 2 local 0
 
-        // Reconcile syncs the advisory manifest counts to the headers.
+        // Reconcile syncs the advisory manifest counts to the headers and
+        // republishes (generation 0 in the unfinalized manifest -> 1).
         let man = ShardManifest::reconcile(&dir).unwrap();
         assert_eq!(man.shard_rows, vec![4, 0, 4]);
+        assert_eq!(man.generation, 1);
         assert_eq!(ShardManifest::load(&dir).unwrap(), man);
     }
 

@@ -1,6 +1,12 @@
 //! Background store writer: overlaps gradient disk writes with the next
 //! batch's PJRT execution (the paper's §E.2 logging-phase overlap,
 //! implemented with a bounded pipeline instead of Python multiprocessing).
+//!
+//! Durability errors on the writer thread — including faults injected via
+//! [`super::fault`] into the finalize path — are captured and re-raised
+//! from [`BackgroundWriter::finish`], never swallowed: a caller that gets
+//! `Ok` from `finish` holds a fully finalized, reopenable shard, which is
+//! the invariant the live-growth publish step builds on.
 
 use std::path::Path;
 use std::thread::JoinHandle;
@@ -89,5 +95,21 @@ mod tests {
         assert_eq!(s.rows(), 60);
         assert_eq!(s.chunk(0, 60), &want[..]);
         assert_eq!(s.id(59), 59);
+    }
+
+    #[test]
+    fn finalize_fault_surfaces_through_finish() {
+        // Path-filtered arm: fault state is process-global, the filter
+        // keeps concurrently running tests out of the blast radius.
+        let dir = std::env::temp_dir().join("logra-store-tests").join("bg-fault");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _x = crate::store::fault::exclusive();
+        let w = BackgroundWriter::spawn(&dir, 4, 2).unwrap();
+        w.submit(vec![0, 1], vec![0.5; 8]).unwrap();
+        crate::store::fault::arm("finalize_truncate=bg-fault");
+        let err = w.finish();
+        crate::store::fault::disarm();
+        let msg = err.unwrap_err().to_string();
+        assert!(msg.contains("fault injected"), "got: {msg}");
     }
 }

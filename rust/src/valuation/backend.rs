@@ -739,6 +739,16 @@ enum Fabric {
     },
 }
 
+/// A shard that failed validation during a [`Valuator::open_degraded`]
+/// open and was excluded from the fabric instead of failing it.
+#[derive(Clone, Debug)]
+pub struct QuarantinedShard {
+    /// Manifest directory name of the shard (e.g. `shard-0003`).
+    pub name: String,
+    /// Why validation rejected it (path + expected/actual rows included).
+    pub error: String,
+}
+
 enum PrecondSource {
     Missing,
     Provided(Arc<Preconditioner>),
@@ -760,6 +770,12 @@ pub struct ValuatorBuilder {
     precond: PrecondSource,
     metrics: Option<Arc<Metrics>>,
     rescore_override: Option<PathBuf>,
+    /// Manifest generation observed at open (0 for pre-generation
+    /// manifests and bare directories) — carried into the Valuator so the
+    /// serve layer can pin query snapshots to it.
+    generation: u64,
+    /// Shards excluded by a degraded open (empty on strict opens).
+    quarantined: Vec<QuarantinedShard>,
 }
 
 impl ValuatorBuilder {
@@ -1049,8 +1065,59 @@ impl ValuatorBuilder {
             PrimaryKind::TwoStage => 1,
             PrimaryKind::Ivf => engines.len() - 1,
         };
-        Ok(Valuator { engines, primary, pool, owns_pool })
+        let ivf_fallback = index.as_ref().map_or(0, |ix| ix.fallback_shards());
+        Ok(Valuator {
+            engines,
+            primary,
+            pool,
+            owns_pool,
+            generation: self.generation,
+            quarantined: self.quarantined,
+            ivf_fallback,
+        })
     }
+}
+
+/// Open an f32 fabric from its manifest, excluding (and recording) every
+/// shard that fails validation instead of failing the open. Fails only
+/// when no shard survives. Finalized shards are immutable, so a
+/// quarantined shard is either brand new (never served) or damaged on
+/// disk — excluding it serves exactly the rows that still validate.
+fn open_f32_degraded(
+    dir: &Path,
+    man: &ShardManifest,
+    quarantined: &mut Vec<QuarantinedShard>,
+) -> Result<ShardedStore, ValuationError> {
+    let mut shards = Vec::with_capacity(man.n_shards());
+    for (i, name) in man.shard_dirs.iter().enumerate() {
+        match crate::store::shards::open_manifest_shard(man, dir, i) {
+            Ok(s) if s.k() == man.k => shards.push(s),
+            Ok(s) => quarantined.push(QuarantinedShard {
+                name: name.clone(),
+                error: format!(
+                    "shard {name}: k={} disagrees with manifest k={}",
+                    s.k(),
+                    man.k
+                ),
+            }),
+            Err(e) => quarantined.push(QuarantinedShard {
+                name: name.clone(),
+                error: format!("{e:#}"),
+            }),
+        }
+    }
+    if shards.is_empty() {
+        let detail = quarantined
+            .iter()
+            .map(|q| q.error.as_str())
+            .collect::<Vec<_>>()
+            .join("; ");
+        return Err(store_open_err(
+            dir,
+            anyhow::anyhow!("every shard failed validation: {detail}"),
+        ));
+    }
+    Ok(ShardedStore::from_shards(shards, man.k))
 }
 
 /// Fit the single-block projected Fisher from the stored rows, chunk-wise.
@@ -1091,6 +1158,13 @@ pub struct Valuator {
     /// [`PoolMode::Shared`] pools belong to the caller and survive
     /// [`Valuator::shutdown`].
     owns_pool: bool,
+    /// Manifest generation this snapshot was opened at (0 for bare
+    /// directories and pre-generation manifests).
+    generation: u64,
+    /// Shards a degraded open excluded from the fabric.
+    quarantined: Vec<QuarantinedShard>,
+    /// IVF-indexed shards serving via the per-shard full-scan fallback.
+    ivf_fallback: usize,
 }
 
 impl std::fmt::Debug for Valuator {
@@ -1102,6 +1176,8 @@ impl std::fmt::Debug for Valuator {
             .field("k", &self.primary_engine().k())
             .field("workers", &self.primary_engine().workers())
             .field("pooled", &self.pool.is_some())
+            .field("generation", &self.generation)
+            .field("quarantined", &self.quarantined.len())
             .finish()
     }
 }
@@ -1122,12 +1198,38 @@ impl Valuator {
     /// directory both work). Configuration continues on the returned
     /// builder; validation happens at [`ValuatorBuilder::build`].
     pub fn open(dir: impl AsRef<Path>) -> Result<ValuatorBuilder, ValuationError> {
-        let dir = dir.as_ref().to_path_buf();
+        Self::open_with(dir.as_ref(), false)
+    }
+
+    /// Like [`Valuator::open`], but an f32 shard failing validation is
+    /// **quarantined** — excluded from the fabric and reported via
+    /// [`Valuator::quarantined`] — instead of failing the open. This is
+    /// the reload path of a live-serving process: a newly appended (or
+    /// damaged) shard must degrade the new snapshot, never poison it;
+    /// the previously served generation keeps serving until the swap, so
+    /// every row that still validates stays available. The open still
+    /// fails if *every* shard is rejected, and int8 fabrics keep strict
+    /// validation (their global row numbering feeds exact rescoring, so
+    /// skipping a shard would mis-map candidates — a reload error there
+    /// keeps the previous generation serving instead).
+    pub fn open_degraded(dir: impl AsRef<Path>) -> Result<ValuatorBuilder, ValuationError> {
+        Self::open_with(dir.as_ref(), true)
+    }
+
+    fn open_with(dir: &Path, tolerate: bool) -> Result<ValuatorBuilder, ValuationError> {
+        let dir = dir.to_path_buf();
+        let mut generation = 0u64;
+        let mut quarantined: Vec<QuarantinedShard> = Vec::new();
         let fabric = if dir.join(SHARD_MANIFEST).exists() {
             let man = ShardManifest::load(&dir).map_err(|e| store_open_err(&dir, e))?;
+            generation = man.generation;
             match man.codec {
                 StoreCodec::F32 => {
-                    let s = ShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?;
+                    let s = if tolerate {
+                        open_f32_degraded(&dir, &man, &mut quarantined)?
+                    } else {
+                        ShardedStore::open(&dir).map_err(|e| store_open_err(&dir, e))?
+                    };
                     Fabric::F32(Arc::new(s))
                 }
                 StoreCodec::Int8 => {
@@ -1160,11 +1262,33 @@ impl Valuator {
             precond: PrecondSource::Missing,
             metrics: None,
             rescore_override: None,
+            generation,
+            quarantined,
         })
     }
 
     fn primary_engine(&self) -> &dyn ScanBackend {
         self.engines[self.primary].as_ref()
+    }
+
+    /// Manifest generation this valuator's snapshot was opened at (0 for
+    /// bare directories and manifests that predate the field). A serving
+    /// process reports this per response: every query is answered by
+    /// exactly one generation's fabric.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Shards a [`Valuator::open_degraded`] open excluded from the
+    /// fabric (empty after a strict [`Valuator::open`]).
+    pub fn quarantined(&self) -> &[QuarantinedShard] {
+        &self.quarantined
+    }
+
+    /// IVF-indexed shards currently serving through the per-shard
+    /// full-scan fallback (0 when the fabric has no index).
+    pub fn ivf_fallback_shards(&self) -> usize {
+        self.ivf_fallback
     }
 
     /// The engine a per-request [`BackendChoice`] routes to. `None` /

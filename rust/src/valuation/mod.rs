@@ -39,8 +39,9 @@ pub mod twostage;
 
 pub use ann::IvfEngine;
 pub use backend::{
-    Backend, BackendChoice, BackendConfig, BackendKind, PendingScores, PoolMode, QueryInput,
-    QueryRequest, ScanBackend, SequentialEngine, ValuationError, Valuator, ValuatorBuilder,
+    Backend, BackendChoice, BackendConfig, BackendKind, PendingScores, PoolMode,
+    QuarantinedShard, QueryInput, QueryRequest, ScanBackend, SequentialEngine, ValuationError,
+    Valuator, ValuatorBuilder,
 };
 pub use parallel::ParallelQueryEngine;
 pub use pool::{auto_workers, PendingScan, PoolSnapshot, ScanHandle, ScanPool};

@@ -1,0 +1,434 @@
+//! Live-growth integration tests: generation-numbered manifests, the
+//! fault-injection harness, and generation-snapshotted serving.
+//!
+//! The contract under test, end to end:
+//!
+//! 1. **Publish is atomic**: an append that crashes mid-finalize or tears
+//!    the manifest rename leaves the previous generation fully servable —
+//!    bit-identical scores before and after the failed publish — and a
+//!    later retry succeeds over the debris.
+//! 2. **Degradation is graceful**: a shard that fails validation makes
+//!    the strict open name the shard and its row counts, while
+//!    [`Valuator::open_degraded`] quarantines it and keeps serving.
+//! 3. **Serving is snapshot-pinned**: `logra serve` with a reload
+//!    interval follows the manifest generation; every response carries
+//!    the generation it was answered under, and appends racing a query
+//!    stream never produce an error or a generation that was never
+//!    published.
+//! 4. **IVF follows growth**: a shard added by `store quantize
+//!    --incremental` serves through the per-shard full-scan fallback,
+//!    visible on `/metrics`.
+//!
+//! Fault-driven tests hold [`fault::exclusive`] and arm only
+//! path-filtered fault specs (the fault set is process-global and cargo
+//! runs tests concurrently).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use logra::coordinator::Metrics;
+use logra::serve::{loadgen, ReloadConfig, ServeConfig, Server};
+use logra::store::{
+    append_shard, build_index, current_generation, fault, quantize_store,
+    quantize_store_incremental, shard_store, AppendReport, GradStoreWriter, ShardManifest,
+    ShardedStore,
+};
+use logra::util::json::{self, Json};
+use logra::util::rng::Pcg32;
+use logra::valuation::{Backend, PoolMode, QueryRequest, ScanBackend, ScanPool, Valuator};
+
+fn sharded_store(name: &str, n: usize, k: usize, shards: usize, seed: u64) -> PathBuf {
+    let base = std::env::temp_dir().join("logra-live-it").join(name);
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    let src = base.join("flat");
+    let mut rng = Pcg32::seeded(seed);
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let mut w = GradStoreWriter::create(&src, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    let dir = base.join("sharded");
+    shard_store(&src, &dir, shards).unwrap();
+    dir
+}
+
+/// Append `n` synthetic rows as one new shard, ids continuing from the
+/// current total.
+fn grow(dir: &Path, n: usize, k: usize, seed: u64) -> AppendReport {
+    let mut rng = Pcg32::seeded(seed);
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let start = ShardManifest::load(dir).unwrap().total_rows();
+    let ids: Vec<u64> = (start..start + n as u64).collect();
+    append_shard(dir, &ids, &rows).unwrap()
+}
+
+/// Top-k (score bits, id) of querying row 0 through a fresh Valuator —
+/// the bit-exact oracle for "the previous generation still serves".
+fn topk_bits(dir: &Path) -> Vec<(u64, u64)> {
+    let v = Valuator::open(dir).unwrap().fit_from_store(0.1).build().unwrap();
+    let g = v.gradient_row(0).unwrap();
+    let res = v.query(QueryRequest::gradients(g, 1, 5)).unwrap();
+    res[0].top.iter().map(|&(s, id)| (s.to_bits(), id)).collect()
+}
+
+/// Boot a reload-following server on a free port over a shared pool.
+fn start_reload_server(dir: &Path, interval_ms: u64) -> (Server, String) {
+    let metrics = Arc::new(Metrics::default());
+    let pool = Arc::new(ScanPool::spawn(2));
+    let valuator = Arc::new(
+        Valuator::open_degraded(dir)
+            .unwrap()
+            .backend(Backend::Auto)
+            .workers(2)
+            .fit_from_store(0.1)
+            .pool(PoolMode::Shared(pool.clone()))
+            .metrics(metrics.clone())
+            .build()
+            .unwrap(),
+    );
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() };
+    let reload = ReloadConfig::standard(
+        dir.to_path_buf(),
+        Duration::from_millis(interval_ms),
+        Backend::Auto,
+        0.1,
+        2,
+        pool,
+        metrics.clone(),
+    );
+    let server = Server::start_with_reload(valuator, metrics, cfg, Some(reload)).unwrap();
+    let addr = server.addr().to_string();
+    (server, addr)
+}
+
+/// First sample value of an unlabelled family in an exposition body.
+fn metric_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        let rest = l.strip_prefix(name)?;
+        let rest = rest.strip_prefix(' ')?;
+        rest.trim().parse().ok()
+    })
+}
+
+fn scrape(addr: &str) -> String {
+    let res = loadgen::http_request(addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(res.status, 200);
+    res.body_str()
+}
+
+fn healthz(addr: &str) -> Json {
+    let res = loadgen::http_request(addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+    json::parse(&res.body_str()).unwrap()
+}
+
+/// Poll `/metrics` until `name` reaches `want` (reloads are asynchronous).
+fn await_metric(addr: &str, name: &str, want: f64) {
+    let t0 = Instant::now();
+    loop {
+        let text = scrape(addr);
+        if metric_value(&text, name).is_some_and(|v| v >= want) {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "{name} never reached {want}: {:?}",
+            metric_value(&text, name)
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn append_advances_generation_and_valuator_sees_it() {
+    let dir = sharded_store("gen-roundtrip", 48, 8, 3, 50);
+    assert_eq!(current_generation(&dir).unwrap(), 1);
+    let v = Valuator::open(&dir).unwrap().fit_from_store(0.1).build().unwrap();
+    assert_eq!(v.generation(), 1);
+    assert_eq!(v.rows(), 48);
+    assert!(v.quarantined().is_empty());
+
+    let rep = grow(&dir, 6, 8, 51);
+    assert_eq!(rep.generation, 2);
+    assert_eq!(rep.rows, 6);
+    assert_eq!(current_generation(&dir).unwrap(), 2);
+
+    let v = Valuator::open(&dir).unwrap().fit_from_store(0.1).build().unwrap();
+    assert_eq!(v.generation(), 2);
+    assert_eq!(v.rows(), 54, "appended rows must be servable");
+}
+
+#[test]
+fn torn_manifest_rename_preserves_previous_generation_bit_identical() {
+    let dir = sharded_store("live-tear", 48, 8, 3, 52);
+    let before = topk_bits(&dir);
+
+    let _x = fault::exclusive();
+    fault::arm("manifest_tear=live-tear");
+    let err = {
+        let mut rng = Pcg32::seeded(53);
+        let mut rows = vec![0.0f32; 4 * 8];
+        rng.fill_normal(&mut rows, 1.0);
+        append_shard(&dir, &[48, 49, 50, 51], &rows).unwrap_err()
+    };
+    fault::disarm();
+    drop(_x);
+    assert!(format!("{err:#}").contains("fault injected"), "got: {err:#}");
+
+    // The publish never happened: same generation, same row count, and
+    // the exact same score bits as before the failed append.
+    assert_eq!(current_generation(&dir).unwrap(), 1);
+    assert_eq!(ShardedStore::open(&dir).unwrap().rows(), 48);
+    assert_eq!(topk_bits(&dir), before, "failed publish must not perturb scores");
+
+    // Recovery: the same append over the leftover temp file and shard
+    // debris publishes cleanly.
+    let rep = grow(&dir, 4, 8, 53);
+    assert_eq!(rep.generation, 2);
+    assert_eq!(ShardedStore::open(&dir).unwrap().rows(), 52);
+}
+
+#[test]
+fn mid_finalize_crash_leaves_old_generation_servable() {
+    let dir = sharded_store("live-crash", 48, 8, 3, 54);
+    let before = topk_bits(&dir);
+
+    let _x = fault::exclusive();
+    fault::arm("finalize_truncate=live-crash");
+    let err = {
+        let mut rng = Pcg32::seeded(55);
+        let mut rows = vec![0.0f32; 4 * 8];
+        rng.fill_normal(&mut rows, 1.0);
+        append_shard(&dir, &[48, 49, 50, 51], &rows).unwrap_err()
+    };
+    fault::disarm();
+    drop(_x);
+    assert!(format!("{err:#}").contains("fault injected"), "got: {err:#}");
+
+    // The torn shard is invisible: the manifest never mentioned it.
+    assert_eq!(current_generation(&dir).unwrap(), 1);
+    assert_eq!(ShardedStore::open(&dir).unwrap().rows(), 48);
+    assert_eq!(topk_bits(&dir), before);
+
+    // The debris directory is cleared and rewritten by the retry.
+    let rep = grow(&dir, 4, 8, 55);
+    assert_eq!(rep.shard_dir, "shard-0003");
+    assert_eq!(rep.generation, 2);
+    assert_eq!(ShardedStore::open(&dir).unwrap().rows(), 52);
+}
+
+#[test]
+fn corrupt_shard_fails_strict_open_with_context_and_quarantines_degraded() {
+    let dir = sharded_store("quarantine", 48, 8, 4, 56);
+    let man = ShardManifest::load(&dir).unwrap();
+    let victim = man.shard_dirs[1].clone();
+    let victim_rows = man.shard_rows[1];
+
+    // Bit rot: halve the payload of one finalized shard.
+    let grads = dir.join(&victim).join("grads.bin");
+    let len = std::fs::metadata(&grads).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&grads).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+
+    // Strict open names the shard and the row counts involved.
+    let err = ShardedStore::open(&dir).unwrap_err().to_string();
+    assert!(err.contains(&victim), "error {err:?} must name {victim}");
+    assert!(
+        err.contains(&format!("{victim_rows} rows")),
+        "error {err:?} must carry the expected row count"
+    );
+
+    // The degraded open quarantines it and serves the survivors.
+    let v = Valuator::open_degraded(&dir)
+        .unwrap()
+        .fit_from_store(0.1)
+        .build()
+        .unwrap();
+    assert_eq!(v.quarantined().len(), 1);
+    assert_eq!(v.quarantined()[0].name, victim);
+    assert_eq!(v.generation(), 1);
+    assert_eq!(v.rows() as u64, 48 - victim_rows);
+    let g = v.gradient_row(0).unwrap();
+    let res = v.query(QueryRequest::gradients(g, 1, 5)).unwrap();
+    assert_eq!(res[0].top.len(), 5, "survivors must keep answering");
+}
+
+#[test]
+fn serve_reload_swaps_generation_under_load() {
+    let dir = sharded_store("serve-reload", 64, 8, 4, 57);
+    let (_server, addr) = start_reload_server(&dir, 25);
+
+    let h = healthz(&addr);
+    assert_eq!(h.get("generation").and_then(Json::as_u64), Some(1));
+    assert_eq!(h.get("rows").and_then(Json::as_u64), Some(64));
+
+    // A response names the generation it was answered under.
+    let res = loadgen::http_request(&addr, "POST", "/query", br#"{"row": 0}"#).unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+    let v = json::parse(&res.body_str()).unwrap();
+    assert_eq!(v.get("generation").and_then(Json::as_u64), Some(1));
+
+    // Publish generation 2; the reloader swaps it in without a restart.
+    let rep = grow(&dir, 8, 8, 58);
+    assert_eq!(rep.generation, 2);
+    await_metric(&addr, "logra_store_generation", 2.0);
+    await_metric(&addr, "logra_store_reloads_total", 1.0);
+
+    let h = healthz(&addr);
+    assert_eq!(h.get("generation").and_then(Json::as_u64), Some(2));
+    assert_eq!(h.get("rows").and_then(Json::as_u64), Some(72));
+    assert_eq!(h.get("quarantined_shards").and_then(Json::as_u64), Some(0));
+
+    // The appended rows are queryable on the new snapshot.
+    let res = loadgen::http_request(&addr, "POST", "/query", br#"{"row": 70}"#).unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+    let v = json::parse(&res.body_str()).unwrap();
+    assert_eq!(v.get("generation").and_then(Json::as_u64), Some(2));
+}
+
+#[test]
+fn reload_quarantines_bad_shard_instead_of_dying() {
+    let dir = sharded_store("serve-quarantine", 48, 8, 3, 59);
+    let (_server, addr) = start_reload_server(&dir, 25);
+    assert_eq!(healthz(&addr).get("generation").and_then(Json::as_u64), Some(1));
+
+    // Publish a generation whose new shard is garbage (references a
+    // directory that does not exist). The strict open would die; the
+    // reload path must quarantine it and keep serving everything else.
+    let mut man = ShardManifest::load(&dir).unwrap();
+    man.shard_dirs.push("shard-0099".into());
+    man.shard_rows.push(7);
+    man.generation += 1;
+    man.save(&dir).unwrap();
+
+    await_metric(&addr, "logra_store_generation", 2.0);
+    await_metric(&addr, "logra_store_quarantined_shards", 1.0);
+
+    let h = healthz(&addr);
+    assert_eq!(h.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(h.get("generation").and_then(Json::as_u64), Some(2));
+    assert_eq!(h.get("quarantined_shards").and_then(Json::as_u64), Some(1));
+    assert_eq!(h.get("rows").and_then(Json::as_u64), Some(48));
+
+    let res = loadgen::http_request(&addr, "POST", "/query", br#"{"row": 0}"#).unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+}
+
+#[test]
+fn concurrent_appends_never_blend_generations() {
+    let dir = sharded_store("serve-blend", 64, 8, 4, 60);
+    let (_server, addr) = start_reload_server(&dir, 10);
+
+    // Two query threads hammer row 0 while the main thread publishes
+    // three more generations. Every response must be a 200 whose
+    // generation is one that was actually published (1..=4) — a blend or
+    // an unpublished generation is the bug this PR exists to prevent.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let clients: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut gens = Vec::new();
+                while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                    let res =
+                        loadgen::http_request(&addr, "POST", "/query", br#"{"row": 0}"#)
+                            .expect("query I/O failed");
+                    assert_eq!(res.status, 200, "{}", res.body_str());
+                    let v = json::parse(&res.body_str()).unwrap();
+                    gens.push(v.get("generation").and_then(Json::as_u64).unwrap());
+                }
+                gens
+            })
+        })
+        .collect();
+
+    for (i, seed) in [(2u64, 61u64), (3, 62), (4, 63)] {
+        let rep = grow(&dir, 8, 8, seed);
+        assert_eq!(rep.generation, i);
+        std::thread::sleep(Duration::from_millis(40));
+    }
+    await_metric(&addr, "logra_store_generation", 4.0);
+    // Let the clients take a few laps against the final snapshot before
+    // stopping, so the assertion below sees post-reload generations.
+    std::thread::sleep(Duration::from_millis(150));
+    stop.store(true, std::sync::atomic::Ordering::Release);
+
+    let mut seen = Vec::new();
+    for c in clients {
+        let gens = c.join().unwrap();
+        assert!(!gens.is_empty(), "client issued no queries");
+        for g in gens {
+            assert!(
+                (1..=4).contains(&g),
+                "response generation {g} was never published"
+            );
+            seen.push(g);
+        }
+    }
+    assert!(
+        seen.iter().any(|&g| g > 1),
+        "reload never became visible to the query stream: {seen:?}"
+    );
+}
+
+#[test]
+fn incremental_quantize_skips_up_to_date_shards() {
+    let dir = sharded_store("inc-quant", 60, 8, 3, 64);
+    let base = dir.parent().unwrap().to_path_buf();
+    let q8 = base.join("q8");
+    let man = quantize_store(&dir, &q8).unwrap();
+    assert_eq!(man.generation, 1);
+
+    // Nothing changed: no conversion, no new generation published.
+    let (man, rep) = quantize_store_incremental(&dir, &q8).unwrap();
+    assert_eq!((rep.converted, rep.skipped), (0, 3));
+    assert_eq!(man.generation, 1);
+    assert_eq!(ShardManifest::load(&q8).unwrap().generation, 1);
+
+    // Grow the source: exactly the new shard is converted.
+    grow(&dir, 10, 8, 65);
+    let (man, rep) = quantize_store_incremental(&dir, &q8).unwrap();
+    assert_eq!((rep.converted, rep.skipped), (1, 3));
+    assert_eq!(man.generation, 2);
+    assert_eq!(man.total_rows(), 70);
+}
+
+#[test]
+fn ivf_fallback_shard_appears_under_reload() {
+    let dir = sharded_store("ivf-grow", 60, 8, 3, 66);
+    let base = dir.parent().unwrap().to_path_buf();
+    let q8 = base.join("q8");
+    quantize_store(&dir, &q8).unwrap();
+    build_index(&q8, 4, 7).unwrap();
+    assert_eq!(current_generation(&q8).unwrap(), 2);
+
+    let (_server, addr) = start_reload_server(&q8, 25);
+    let text = scrape(&addr);
+    assert_eq!(metric_value(&text, "logra_store_ivf_fallback_shards"), Some(0.0));
+
+    // Grow the f32 source, mirror it incrementally: the new int8 shard
+    // has no IVF sidecars, so the reloaded index serves it via the
+    // per-shard full-scan fallback — visible, not fatal.
+    grow(&dir, 10, 8, 67);
+    let (man, rep) = quantize_store_incremental(&dir, &q8).unwrap();
+    assert_eq!(rep.converted, 1);
+    assert_eq!(man.generation, 3);
+
+    await_metric(&addr, "logra_store_generation", 3.0);
+    await_metric(&addr, "logra_store_ivf_fallback_shards", 1.0);
+    let h = healthz(&addr);
+    assert_eq!(h.get("ivf_fallback_shards").and_then(Json::as_u64), Some(1));
+    assert_eq!(h.get("rows").and_then(Json::as_u64), Some(70));
+
+    // Queries keep answering across the whole grown fabric.
+    let res = loadgen::http_request(&addr, "POST", "/query", br#"{"row": 65}"#).unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+    let v = json::parse(&res.body_str()).unwrap();
+    assert_eq!(v.get("generation").and_then(Json::as_u64), Some(3));
+}
