@@ -22,6 +22,7 @@ use std::time::Instant;
 use logra::coordinator::Metrics;
 use logra::hessian::BlockHessian;
 use logra::linalg::{eigh, Matrix};
+use logra::session::{stage_spec, Combine, Session, SessionConfig, SessionManifest, SESSION_VERSION};
 use logra::store::{
     build_index, quantize_store, shard_store, GradStore, GradStoreWriter, IvfIndex,
     QuantShardedStore, ShardedStore,
@@ -541,6 +542,63 @@ fn main() {
         };
         report_metric("micro.store.ivf.recall_at_10", ann_recall_at_10, "frac at np2/8");
 
+        // Multi-stage session fan-out: TWO stages over one shared pool,
+        // one query scored against both concurrently, vs the same two
+        // stage queries run back-to-back through the identical session
+        // machinery. The fan-out interleaves both stages' shard tasks on
+        // the shared workers, so it should beat sequential. Feeds the
+        // gated `session_2stage_qps` key.
+        let session_2stage_qps = {
+            let sess_dir = std::env::temp_dir().join("logra-microbench-session");
+            let _ = std::fs::remove_dir_all(&sess_dir);
+            SessionManifest {
+                version: SESSION_VERSION,
+                stages: vec![
+                    stage_spec("a", sharded_dir.clone()),
+                    stage_spec("b", sharded_dir.clone()),
+                ],
+            }
+            .save(&sess_dir)
+            .unwrap();
+            let session = Session::open(
+                &sess_dir,
+                SessionConfig { combine: Combine::WeightedSum, workers: 4 },
+            )
+            .unwrap();
+            let opts = BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 30.0 };
+            let fan_mean = bench("session.2stage.fanout", opts, || {
+                let out = session
+                    .query(QueryRequest::gradients(test.clone(), nt, topk))
+                    .unwrap();
+                std::hint::black_box(&out);
+            })
+            .summary()
+            .mean;
+            let subsets = [vec!["a".to_string()], vec!["b".to_string()]];
+            let seq_mean = bench("session.2stage.sequential", opts, || {
+                for subset in &subsets {
+                    let out = session
+                        .query_stages(
+                            QueryRequest::gradients(test.clone(), nt, topk),
+                            Some(subset.as_slice()),
+                        )
+                        .unwrap();
+                    std::hint::black_box(&out);
+                }
+            })
+            .summary()
+            .mean;
+            let qps = 1.0 / fan_mean;
+            report_metric("micro.session.2stage.qps", qps, "queries/s");
+            report_metric(
+                "micro.session.2stage.speedup_vs_sequential",
+                seq_mean / fan_mean,
+                "x vs back-to-back stages",
+            );
+            session.shutdown();
+            qps
+        };
+
         let json = format!(
             "{{\n  \"rows\": {rows},\n  \"k\": {k},\n  \"nt\": {nt},\n  \"topk\": {topk},\n  \
              \"kernel_arm\": \"{}\",\n  \
@@ -562,6 +620,7 @@ fn main() {
              \"pool_c8_qps\": {:.1},\n  \
              \"pool_c8_p50_ms\": {pool_c8_p50_ms:.3},\n  \
              \"pool_c8_p99_ms\": {pool_c8_p99_ms:.3},\n  \
+             \"session_2stage_qps\": {session_2stage_qps:.1},\n  \
              \"spawn_c8_qps\": {spawn_qps_c8:.1}\n}}\n",
             logra::linalg::kernel_arm().name(),
             f32_mean / quant_mean,

@@ -1,0 +1,96 @@
+//! Multi-stage session: one query, many checkpoints, one shared pool.
+//!
+//! ```text
+//! cargo run --release --example session_stages
+//! ```
+//!
+//! Synthesizes two gradient stores standing in for a pretrain and a
+//! finetune checkpoint of the same model (same projection width `k`,
+//! different gradients), binds them into one session via `session.json`,
+//! and scores a single query against BOTH stages over one shared scan
+//! pool — then prints the per-stage rankings next to the weighted-sum
+//! combination. The offline twin of `logra session init` + `logra
+//! session query`; point the manifest at real logged stores to compare
+//! actual checkpoints.
+
+use anyhow::Result;
+use logra::session::{
+    stage_spec, Combine, Session, SessionConfig, SessionManifest, StageSpec, SESSION_VERSION,
+};
+use logra::store::{shard_store, GradStoreWriter};
+use logra::util::rng::Pcg32;
+use logra::valuation::QueryRequest;
+
+const N_TRAIN: usize = 512;
+const K: usize = 64;
+const SHARDS: usize = 4;
+
+/// One synthetic sharded stage store: `n` rows of `K`-wide gradients
+/// drawn from the stage's own rng stream (checkpoints diverge).
+fn stage_store(dir: &std::path::Path, stream: u64) -> Result<()> {
+    let mut rows = vec![0.0f32; N_TRAIN * K];
+    Pcg32::new(1234, stream).fill_normal(&mut rows, 1.0);
+    let ids: Vec<u64> = (0..N_TRAIN as u64).collect();
+    let flat = dir.with_extension("src");
+    let _ = std::fs::remove_dir_all(&flat);
+    std::fs::create_dir_all(&flat)?;
+    let mut w = GradStoreWriter::create(&flat, K)?;
+    w.append(&ids, &rows)?;
+    w.finalize()?;
+    let _ = std::fs::remove_dir_all(dir);
+    shard_store(&flat, dir, SHARDS)?;
+    std::fs::remove_dir_all(&flat)?;
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let dir = std::env::current_dir()?.join("runs").join("session-example");
+    std::fs::create_dir_all(&dir)?;
+    stage_store(&dir.join("pretrain"), 0)?;
+    stage_store(&dir.join("finetune"), 1)?;
+
+    // The finetune stage gets double weight in the combined ranking;
+    // both stages keep the default fisher preconditioner and no
+    // normalization (weighted-sum needs ONE shared norm across stages).
+    let manifest = SessionManifest {
+        version: SESSION_VERSION,
+        stages: vec![
+            StageSpec { weight: 0.5, ..stage_spec("pretrain", "pretrain") },
+            stage_spec("finetune", "finetune"),
+        ],
+    };
+    manifest.save(&dir)?;
+
+    let sess = Session::open(
+        &dir,
+        SessionConfig { combine: Combine::WeightedSum, workers: 4 },
+    )?;
+    println!(
+        "session {} — {} stages over {} shared workers",
+        sess.dir().display(),
+        sess.stages().len(),
+        sess.pool().workers()
+    );
+
+    // Query by gradient: row 3 of the pretrain store is the reference
+    // row space, scored against EVERY stage (shard tasks interleave on
+    // the shared pool rather than running stage after stage).
+    let g = sess.gradient_row(3).expect("row 3 exists");
+    let report = sess.query(QueryRequest::gradients(g, 1, 5))?;
+
+    for sr in &report.stages {
+        println!("\nstage {} (weight {}):", sr.name, sr.weight);
+        for &(score, id) in &sr.results[0].top {
+            println!("  [{score:+.4}] row {id}");
+        }
+    }
+    if let Some(combined) = &report.combined {
+        println!("\ncombined ({}):", report.combine.name());
+        for &(score, id) in &combined[0].top {
+            println!("  [{score:+.4}] row {id}");
+        }
+    }
+
+    sess.shutdown();
+    Ok(())
+}

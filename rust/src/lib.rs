@@ -54,6 +54,19 @@
 //! and a quantized one (int8 coarse scan + exact rescore) — `Auto` picks
 //! the backend from the store; results are bit-identical to the
 //! sequential scan wherever exactness applies.
+//!
+//! # Multi-stage sessions
+//!
+//! [`session::Session`] opens SEVERAL stores (checkpoints, or pretrain +
+//! finetune stages) from one `session.json` manifest and fans a single
+//! query out to all of them over ONE shared scan pool, merging per-stage
+//! top-k into combined rankings. Note the normalization constraint:
+//! [`session::Combine::WeightedSum`] adds raw per-stage scores, which is
+//! only meaningful when every stage shares one normalization (all `none`
+//! or all `relatif`) — mixing raw influence with ℓ-RelatIF scores puts
+//! the addends on incompatible scales, so `Session::open` rejects that
+//! combination; use Borda rank aggregation (scale-free) or
+//! [`session::Combine::PerStageOnly`] for mixed-norm sessions.
 
 pub mod baselines;
 pub mod cli;
@@ -64,6 +77,7 @@ pub mod eval;
 pub mod linalg;
 pub mod runtime;
 pub mod serve;
+pub mod session;
 pub mod store;
 pub mod hessian;
 pub mod model;

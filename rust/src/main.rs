@@ -7,8 +7,10 @@
 //!   qualitative  Fig-5-style top-valued-document inspection
 //!   store        gradient-store maintenance (stat | shard | merge | quantize | index)
 //!   query        value a stored gradient row against any store fabric
+//!   session      multi-stage sessions: one query across many checkpoints
 //!   trace        run concurrent queries, export a Chrome trace + percentiles
-//!   serve        HTTP valuation server (/query /metrics /healthz /debug/trace)
+//!   serve        HTTP valuation server (/query /metrics /healthz /debug/trace);
+//!                --session serves a whole multi-stage session
 //!   loadgen      closed-loop load bench against a running serve instance
 
 use std::path::PathBuf;
@@ -24,11 +26,14 @@ use logra::eval::table1::{run_table1, TABLE1_HEADER};
 use logra::eval::{BrittlenessConfig, LdsConfig};
 use logra::obs::{chrome_trace_json, render_exposition};
 use logra::serve::{loadgen, ReloadConfig, ServeConfig, Server};
+use logra::session::{stage_spec, Combine, Session, SessionConfig, SessionManifest, SESSION_VERSION};
 use logra::store::{
-    append_shard, build_index, merge_store, quantize_store, quantize_store_incremental,
-    shard_store, stat_store, ShardManifest,
+    append_shard, build_index, build_index_incremental, merge_store, quantize_store,
+    quantize_store_incremental, shard_store, stat_store, ShardManifest,
 };
-use logra::valuation::{Normalization, PoolMode, QueryRequest, ScanBackend, Valuator};
+use logra::valuation::{
+    BackendChoice, Normalization, PoolMode, QueryRequest, ScanBackend, Valuator,
+};
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
     ("info", "print an artifact manifest summary"),
@@ -37,8 +42,9 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("qualitative", "train, log, and inspect top-valued documents"),
     ("store", "store maintenance: store stat|shard|merge|quantize|index|append <dir>"),
     ("query", "query <store_dir>: top-k most influential rows for --row"),
+    ("session", "session init|stat|query <dir>: one query across many checkpoints"),
     ("trace", "trace <store_dir>: concurrent queries -> Chrome trace JSON"),
-    ("serve", "serve <store_dir>: HTTP server (/query /metrics /healthz /debug/trace)"),
+    ("serve", "serve <store_dir> | serve --session <dir>: HTTP valuation server"),
     ("loadgen", "loadgen: closed-loop query load against a running serve"),
 ];
 
@@ -57,7 +63,7 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "clusters", help: "store index: IVF clusters per shard", takes_value: true, default: Some("16") },
     FlagSpec { name: "seed", help: "store index/append: k-means / synthesis seed", takes_value: true, default: Some("42") },
     FlagSpec { name: "rows", help: "store append: synthetic rows to append", takes_value: true, default: Some("128") },
-    FlagSpec { name: "incremental", help: "store quantize: skip shards already mirrored in --out", takes_value: false, default: None },
+    FlagSpec { name: "incremental", help: "store quantize/index: skip shards already converted/indexed", takes_value: false, default: None },
     FlagSpec { name: "row", help: "query: stored row used as the query gradient", takes_value: true, default: Some("0") },
     FlagSpec { name: "norm", help: "query: normalization none|relatif", takes_value: true, default: Some("relatif") },
     FlagSpec { name: "backend", help: "query/trace/serve: auto|exact|quantized|ann", takes_value: true, default: Some("auto") },
@@ -76,6 +82,9 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "poll-ms", help: "serve: deadline/disconnect poll interval", takes_value: true, default: Some("15") },
     FlagSpec { name: "reload-ms", help: "serve: manifest generation probe interval (0 = static)", takes_value: true, default: Some("0") },
     FlagSpec { name: "offline", help: "serve: synthesize a sharded store (no artifacts)", takes_value: false, default: None },
+    FlagSpec { name: "session", help: "serve: multi-stage session directory to serve", takes_value: true, default: None },
+    FlagSpec { name: "combine", help: "session/serve: weighted-sum|borda|per-stage", takes_value: true, default: Some("weighted-sum") },
+    FlagSpec { name: "stages", help: "session init: stage count | session query: comma-list subset", takes_value: true, default: None },
     FlagSpec { name: "clients", help: "loadgen: concurrent closed-loop clients", takes_value: true, default: Some("8") },
     FlagSpec { name: "requests", help: "loadgen: requests per client", takes_value: true, default: Some("32") },
     FlagSpec { name: "max-retries", help: "loadgen: backoff retries per request on 429/503", takes_value: true, default: Some("3") },
@@ -284,6 +293,19 @@ fn main() -> Result<()> {
                 "index" => {
                     let clusters = args.usize_or("clusters", 16)?;
                     let seed = args.usize_or("seed", 42)? as u64;
+                    if args.has_switch("incremental") {
+                        // Index only the shards with a missing sidecar —
+                        // the recovery path `store append` points at when
+                        // it staled the advertised index.
+                        let rep = build_index_incremental(&dir, clusters, seed)?;
+                        println!(
+                            "incremental index: {} shards indexed, {} up to date ({})",
+                            rep.indexed,
+                            rep.skipped,
+                            dir.display()
+                        );
+                        return Ok(());
+                    }
                     let rep = build_index(&dir, clusters, seed)?;
                     println!(
                         "indexed {} ({} shards, seed {seed})",
@@ -320,6 +342,14 @@ fn main() -> Result<()> {
                         next_id + rep.rows - 1,
                         rep.generation
                     );
+                    if man.index.is_some() {
+                        eprintln!(
+                            "warning: store advertises an IVF index but the appended shard \
+                             has no sidecar — ANN queries fall back to exact scans on it; \
+                             run `logra store index {} --incremental` to reindex",
+                            dir.display()
+                        );
+                    }
                     Ok(())
                 }
                 other => Err(anyhow!(
@@ -397,6 +427,164 @@ fn main() -> Result<()> {
                 println!("  [{score:+.6}] id {id}");
             }
             Ok(())
+        }
+        // Multi-stage sessions: one query scored across many checkpoints
+        // over ONE shared scan pool. `init` synthesizes an offline
+        // session (N stage stores + session.json — the CI/bench fixture),
+        // `stat` opens and describes it, `query` fans a stored row out to
+        // every stage and prints per-stage + combined rankings.
+        "session" => {
+            let action = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "usage: session init|stat|query <session_dir> \
+                         [--combine weighted-sum|borda|per-stage] [--workers N] \
+                         [--row N] [--topk K] [--stages a,b] \
+                         | session init <dir> [--stages N] [--n-train N] [--shards N] [--seed S]"
+                    )
+                })?;
+            let dir = args
+                .positional
+                .get(1)
+                .map(PathBuf::from)
+                .ok_or_else(|| anyhow!("session {action}: missing session directory"))?;
+            if action == "init" {
+                let n_stages = args.usize_or("stages", 2)?.max(1);
+                let n_train = args.usize_or("n-train", 1024)?.max(1);
+                let n_shards = args.usize_or("shards", 2)?.max(1);
+                let seed = args.usize_or("seed", 42)? as u64;
+                let k = 64usize;
+                std::fs::create_dir_all(&dir)?;
+                let mut specs = Vec::with_capacity(n_stages);
+                for si in 0..n_stages {
+                    // One rng stream per stage: stages hold DIFFERENT
+                    // gradients (checkpoints diverge), same k.
+                    let mut rows = vec![0.0f32; n_train * k];
+                    logra::util::rng::Pcg32::new(seed, si as u64).fill_normal(&mut rows, 1.0);
+                    let ids: Vec<u64> = (0..n_train as u64).collect();
+                    let flat = dir.join(format!(".stage-{si}-src"));
+                    let _ = std::fs::remove_dir_all(&flat);
+                    std::fs::create_dir_all(&flat)?;
+                    let mut w = logra::store::GradStoreWriter::create(&flat, k)?;
+                    w.append(&ids, &rows)?;
+                    w.finalize()?;
+                    let name = format!("stage-{si}");
+                    let sdir = dir.join(&name);
+                    let _ = std::fs::remove_dir_all(&sdir);
+                    shard_store(&flat, &sdir, n_shards)?;
+                    std::fs::remove_dir_all(&flat)?;
+                    specs.push(stage_spec(&name, &name));
+                }
+                let man = SessionManifest { version: SESSION_VERSION, stages: specs };
+                man.save(&dir)?;
+                println!(
+                    "session ready: {} ({n_stages} stages x {n_train} rows, k={k}, \
+                     {n_shards} shards each)",
+                    dir.display()
+                );
+                return Ok(());
+            }
+            let combine_name = args.flag_or("combine", "weighted-sum");
+            let combine = Combine::parse(&combine_name).ok_or_else(|| {
+                anyhow!("unknown --combine {combine_name:?}; try weighted-sum|borda|per-stage")
+            })?;
+            let ba = BackendArgs::from_args(&args)?;
+            let sess = Session::open(&dir, SessionConfig { combine, workers: ba.workers })?;
+            match action {
+                "stat" => {
+                    println!(
+                        "session {} — {} stages, combine {}, {} shared workers",
+                        dir.display(),
+                        sess.stages().len(),
+                        sess.combine().name(),
+                        sess.workers()
+                    );
+                    for st in sess.stages() {
+                        let v = st.valuator();
+                        let kind = v
+                            .resolved_kind(st.spec().backend)
+                            .map(|k| k.name())
+                            .unwrap_or("?");
+                        println!(
+                            "  stage {:<12} {:>7} rows, k={}, backend {}, weight {}, \
+                             damping {}, precond {}, norm {:?}, generation {}, quarantined {}",
+                            st.name(),
+                            v.rows(),
+                            v.k(),
+                            kind,
+                            st.spec().weight,
+                            st.spec().damping,
+                            st.spec().preconditioner.name(),
+                            st.spec().norm,
+                            v.generation(),
+                            v.quarantined().len()
+                        );
+                    }
+                    sess.shutdown();
+                    Ok(())
+                }
+                "query" => {
+                    let row = args.usize_or("row", 0)?;
+                    let topk = args.usize_or("topk", 5)?;
+                    let g = sess.gradient_row(row).ok_or_else(|| {
+                        anyhow!("row {row} out of range of the session's first stage")
+                    })?;
+                    let mut req = QueryRequest::gradients(g, 1, topk);
+                    // Flags override per-stage manifest defaults only when
+                    // explicitly passed — otherwise each stage keeps its
+                    // own spec'd norm and backend route.
+                    if let Some(n) = args.flag("norm") {
+                        req = req.with_norm(Normalization::parse(n)?);
+                    }
+                    if ba.backend != "auto" {
+                        let choice = match ba.backend.as_str() {
+                            "exact" => BackendChoice::Exact,
+                            "quantized" => BackendChoice::Quantized,
+                            "ann" => BackendChoice::Ann { nprobe: Some(ba.nprobe) },
+                            other => {
+                                return Err(anyhow!(
+                                    "unknown backend {other:?}; try auto|exact|quantized|ann"
+                                ))
+                            }
+                        };
+                        req = req.with_backend(choice);
+                    }
+                    let subset: Option<Vec<String>> = args
+                        .flag("stages")
+                        .map(|s| s.split(',').map(str::to_string).collect());
+                    let report = sess.query_stages(req, subset.as_deref())?;
+                    for sr in &report.stages {
+                        println!(
+                            "stage {} (weight {}, generation {}, quarantined {}):",
+                            sr.name, sr.weight, sr.generation, sr.quarantined_shards
+                        );
+                        if let Some(rep) = &sr.report {
+                            println!(
+                                "  via {} — {} shards, {} rows, {:.3} ms",
+                                rep.backend,
+                                rep.shards,
+                                rep.rows_scanned,
+                                rep.total_nanos as f64 / 1e6
+                            );
+                        }
+                        for &(score, id) in &sr.results[0].top {
+                            println!("  [{score:+.6}] id {id}");
+                        }
+                    }
+                    if let Some(combined) = &report.combined {
+                        println!("combined ({}):", report.combine.name());
+                        for &(score, id) in &combined[0].top {
+                            println!("  [{score:+.6}] id {id}");
+                        }
+                    }
+                    sess.shutdown();
+                    Ok(())
+                }
+                other => Err(anyhow!("unknown session action {other:?}; try init|stat|query")),
+            }
         }
         // Observability driver: fire N concurrent queries at the store
         // (pool-backed so shard tasks interleave), then export the span
@@ -491,6 +679,64 @@ fn main() -> Result<()> {
         // client-disconnect cancellation. `--offline` synthesizes a
         // sharded store first (the runtime-free shape CI boots).
         "serve" => {
+            // Session serving: every stage behind one listener, one
+            // shared scan pool, per-stage reload slots. The single-store
+            // path below is untouched.
+            if let Some(sdir) = args.flag("session") {
+                let combine_name = args.flag_or("combine", "weighted-sum");
+                let combine = Combine::parse(&combine_name).ok_or_else(|| {
+                    anyhow!(
+                        "unknown --combine {combine_name:?}; try weighted-sum|borda|per-stage"
+                    )
+                })?;
+                let ba = BackendArgs::from_args(&args)?;
+                let reload_ms = args.usize_or("reload-ms", 0)? as u64;
+                let sess = Session::open(
+                    PathBuf::from(sdir),
+                    SessionConfig { combine, workers: ba.workers },
+                )?;
+                let cfg = ServeConfig {
+                    addr: args.flag_or("addr", "127.0.0.1:7878"),
+                    max_in_flight: args.usize_or("max-in-flight", 8)?.max(1),
+                    default_deadline_ms: args.usize_or("deadline-ms", 0)? as u64,
+                    default_topk: args.usize_or("topk", 5)?.max(1),
+                    poll_interval: std::time::Duration::from_millis(
+                        args.usize_or("poll-ms", 15)?.max(1) as u64,
+                    ),
+                };
+                println!(
+                    "serving session {} — {} stages, combine {}, {} shared workers, \
+                     max_in_flight {}{}",
+                    sess.dir().display(),
+                    sess.stages().len(),
+                    sess.combine().name(),
+                    sess.workers(),
+                    cfg.max_in_flight,
+                    if reload_ms > 0 {
+                        format!(" (per-stage reload every {reload_ms} ms)")
+                    } else {
+                        String::new()
+                    }
+                );
+                for st in sess.stages() {
+                    println!(
+                        "  stage {:<12} {:>7} rows, k={}, generation {}",
+                        st.name(),
+                        st.valuator().rows(),
+                        st.valuator().k(),
+                        st.valuator().generation()
+                    );
+                }
+                let reload_every = (reload_ms > 0)
+                    .then(|| std::time::Duration::from_millis(reload_ms));
+                let server = Server::start_session(sess, cfg, reload_every)?;
+                println!(
+                    "listening on http://{} (POST /query, GET /metrics /healthz /debug/trace)",
+                    server.addr()
+                );
+                server.join();
+                return Ok(());
+            }
             let offline = args.has_switch("offline");
             let dir = if offline {
                 let n_train = args.usize_or("n-train", 2048)?.max(1);
@@ -525,7 +771,8 @@ fn main() -> Result<()> {
                          [--deadline-ms N] [--poll-ms N] [--reload-ms N] [--topk K] \
                          [--backend auto|exact|quantized|ann] [--nprobe N] \
                          [--rescore-factor N] [--workers N] [--damping X] \
-                         | serve --offline [--n-train N] [--shards N]"
+                         | serve --offline [--n-train N] [--shards N] \
+                         | serve --session <session_dir> [--combine C]"
                     )
                 })?
             };

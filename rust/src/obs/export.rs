@@ -71,6 +71,172 @@ fn histogram(out: &mut String, name: &str, help: &str, snap: &HistogramSnapshot)
     out.push_str(&format!("{name}_count {}\n", snap.count));
 }
 
+/// One stage's slice of a multi-stage session exposition: the stage's own
+/// [`Metrics`] instance plus the snapshot facts its valuator reports.
+pub struct StageMetrics<'a> {
+    /// Stage name — becomes the `stage` label on every family.
+    pub stage: &'a str,
+    pub metrics: &'a Metrics,
+    pub generation: u64,
+    pub quarantined_shards: usize,
+}
+
+/// Render one histogram per stage under a single family header, each
+/// series carrying the `stage` label (same compaction as the unlabeled
+/// renderer: empty buckets are skipped).
+fn labeled_histogram(out: &mut String, name: &str, help: &str, series: &[(&str, HistogramSnapshot)]) {
+    header(out, name, help, "histogram");
+    for (stage, snap) in series {
+        let mut cumulative = 0u64;
+        for (i, &c) in snap.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cumulative += c;
+            let (_, hi) = bucket_bounds(i);
+            out.push_str(&format!(
+                "{name}_bucket{{stage=\"{stage}\",le=\"{}\"}} {cumulative}\n",
+                hi as f64 / 1e9
+            ));
+        }
+        out.push_str(&format!(
+            "{name}_bucket{{stage=\"{stage}\",le=\"+Inf\"}} {}\n",
+            snap.count
+        ));
+        out.push_str(&format!(
+            "{name}_sum{{stage=\"{stage}\"}} {}\n",
+            snap.sum_nanos as f64 / 1e9
+        ));
+        out.push_str(&format!("{name}_count{{stage=\"{stage}\"}} {}\n", snap.count));
+    }
+}
+
+/// Append the `logra_session_stage_*` families of a multi-stage session:
+/// one `# HELP`/`# TYPE` header per family, one `{stage="..."}`-labeled
+/// sample (or bucket series) per stage. Each stage carries its OWN
+/// `Metrics` instance, so these families are exact per-stage slices —
+/// `logra serve --session` appends this after its session-level
+/// exposition.
+pub fn render_session_exposition(out: &mut String, stages: &[StageMetrics<'_>]) {
+    if stages.is_empty() {
+        return;
+    }
+    let ld = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed) as f64;
+    let lbl = |s: &StageMetrics<'_>| format!("{{stage=\"{}\"}}", s.stage);
+
+    header(
+        out,
+        "logra_session_stage_requests_total",
+        "Queries admitted, per session stage.",
+        "counter",
+    );
+    for s in stages {
+        sample(out, "logra_session_stage_requests_total", &lbl(s), ld(&s.metrics.requests));
+    }
+    header(
+        out,
+        "logra_session_stage_rows_scanned_total",
+        "Train rows covered by influence scans, per session stage.",
+        "counter",
+    );
+    for s in stages {
+        sample(out, "logra_session_stage_rows_scanned_total", &lbl(s), ld(&s.metrics.rows_scanned));
+    }
+    header(
+        out,
+        "logra_session_stage_shards_scanned_total",
+        "Per-shard scan tasks completed, per session stage.",
+        "counter",
+    );
+    for s in stages {
+        sample(
+            out,
+            "logra_session_stage_shards_scanned_total",
+            &lbl(s),
+            ld(&s.metrics.shards_scanned),
+        );
+    }
+    header(
+        out,
+        "logra_session_stage_candidates_rescored_total",
+        "Candidate rows rescored at exact precision, per session stage.",
+        "counter",
+    );
+    for s in stages {
+        sample(
+            out,
+            "logra_session_stage_candidates_rescored_total",
+            &lbl(s),
+            ld(&s.metrics.candidates_rescored),
+        );
+    }
+    header(
+        out,
+        "logra_session_stage_scan_seconds_total",
+        "Wall seconds spent in influence scans, per session stage.",
+        "counter",
+    );
+    for s in stages {
+        sample(
+            out,
+            "logra_session_stage_scan_seconds_total",
+            &lbl(s),
+            ld(&s.metrics.scan_nanos) / 1e9,
+        );
+    }
+    header(
+        out,
+        "logra_session_stage_generation",
+        "Manifest generation each stage's current snapshot was opened at.",
+        "gauge",
+    );
+    for s in stages {
+        sample(out, "logra_session_stage_generation", &lbl(s), s.generation as f64);
+    }
+    header(
+        out,
+        "logra_session_stage_quarantined_shards",
+        "Shards a degraded open excluded from each stage's fabric.",
+        "gauge",
+    );
+    for s in stages {
+        sample(
+            out,
+            "logra_session_stage_quarantined_shards",
+            &lbl(s),
+            s.quarantined_shards as f64,
+        );
+    }
+
+    labeled_histogram(
+        out,
+        "logra_session_stage_query_latency_seconds",
+        "End-to-end per-query latency, per session stage.",
+        &stages
+            .iter()
+            .map(|s| (s.stage, s.metrics.obs.query_latency.snapshot()))
+            .collect::<Vec<_>>(),
+    );
+    labeled_histogram(
+        out,
+        "logra_session_stage_queue_wait_seconds",
+        "Per-query admission-to-first-scan-task wait, per session stage.",
+        &stages
+            .iter()
+            .map(|s| (s.stage, s.metrics.obs.queue_wait.snapshot()))
+            .collect::<Vec<_>>(),
+    );
+    labeled_histogram(
+        out,
+        "logra_session_stage_shard_scan_seconds",
+        "Wall time of individual (query, shard) scan tasks, per session stage.",
+        &stages
+            .iter()
+            .map(|s| (s.stage, s.metrics.obs.shard_scan.snapshot()))
+            .collect::<Vec<_>>(),
+    );
+}
+
 /// Render the full exposition: `Metrics` counters, the embedded
 /// [`Obs`](super::Obs) histograms, optional pool health, and any extra
 /// gauges as `(name, help, value)` triples (names must be valid
@@ -202,87 +368,94 @@ pub fn render_exposition(
     );
 
     if let Some(p) = pool {
-        simple(
-            &mut out,
-            "logra_pool_queue_depth",
-            "Scan tasks sitting in the bounded pool queue.",
-            "gauge",
-            p.queue_depth as f64,
-        );
-        simple(
-            &mut out,
-            "logra_pool_in_flight",
-            "Queries admitted to the pool but not yet completed.",
-            "gauge",
-            p.in_flight as f64,
-        );
-        simple(
-            &mut out,
-            "logra_pool_queries_total",
-            "Queries ever submitted to the scan pool.",
-            "counter",
-            p.queries_submitted as f64,
-        );
-        simple(
-            &mut out,
-            "logra_pool_tasks_completed_total",
-            "Pool scan tasks run to completion.",
-            "counter",
-            p.tasks_completed as f64,
-        );
-        simple(
-            &mut out,
-            "logra_pool_tasks_failed_total",
-            "Pool scan tasks that panicked.",
-            "counter",
-            p.tasks_failed as f64,
-        );
-        simple(
-            &mut out,
-            "logra_pool_tasks_skipped_total",
-            "Pool scan tasks fast-skipped on an already-failed query.",
-            "counter",
-            p.tasks_skipped as f64,
-        );
-        simple(
-            &mut out,
-            "logra_pool_tasks_cancelled_total",
-            "Pool scan tasks skipped because their query was cancelled \
-             (client disconnect or deadline expiry).",
-            "counter",
-            p.tasks_cancelled as f64,
-        );
-        header(
-            &mut out,
-            "logra_pool_worker_busy_seconds_total",
-            "Per-worker seconds inside scan closures.",
-            "counter",
-        );
-        for (w, secs) in p.busy_seconds.iter().enumerate() {
-            sample(
-                &mut out,
-                "logra_pool_worker_busy_seconds_total",
-                &format!("{{worker=\"{w}\"}}"),
-                *secs,
-            );
-        }
-        header(
-            &mut out,
-            "logra_pool_worker_lane",
-            "Trace lane (Chrome trace tid) of each pool worker; -1 until \
-             the worker first runs.",
-            "gauge",
-        );
-        for (w, lane) in p.worker_lanes.iter().enumerate() {
-            let v = if *lane == u32::MAX { -1.0 } else { *lane as f64 };
-            sample(&mut out, "logra_pool_worker_lane", &format!("{{worker=\"{w}\"}}"), v);
-        }
+        pool_families(&mut out, p);
     }
 
     for (name, help, value) in extra_gauges {
         simple(&mut out, name, help, "gauge", *value);
     }
     out
+}
+
+/// The `logra_pool_*` families for one [`PoolSnapshot`] — shared between
+/// the single-store exposition above and the session server, where the
+/// ONE shared pool is session-level rather than per-stage.
+pub(crate) fn pool_families(out: &mut String, p: &PoolSnapshot) {
+    simple(
+        out,
+        "logra_pool_queue_depth",
+        "Scan tasks sitting in the bounded pool queue.",
+        "gauge",
+        p.queue_depth as f64,
+    );
+    simple(
+        out,
+        "logra_pool_in_flight",
+        "Queries admitted to the pool but not yet completed.",
+        "gauge",
+        p.in_flight as f64,
+    );
+    simple(
+        out,
+        "logra_pool_queries_total",
+        "Queries ever submitted to the scan pool.",
+        "counter",
+        p.queries_submitted as f64,
+    );
+    simple(
+        out,
+        "logra_pool_tasks_completed_total",
+        "Pool scan tasks run to completion.",
+        "counter",
+        p.tasks_completed as f64,
+    );
+    simple(
+        out,
+        "logra_pool_tasks_failed_total",
+        "Pool scan tasks that panicked.",
+        "counter",
+        p.tasks_failed as f64,
+    );
+    simple(
+        out,
+        "logra_pool_tasks_skipped_total",
+        "Pool scan tasks fast-skipped on an already-failed query.",
+        "counter",
+        p.tasks_skipped as f64,
+    );
+    simple(
+        out,
+        "logra_pool_tasks_cancelled_total",
+        "Pool scan tasks skipped because their query was cancelled \
+         (client disconnect or deadline expiry).",
+        "counter",
+        p.tasks_cancelled as f64,
+    );
+    header(
+        out,
+        "logra_pool_worker_busy_seconds_total",
+        "Per-worker seconds inside scan closures.",
+        "counter",
+    );
+    for (w, secs) in p.busy_seconds.iter().enumerate() {
+        sample(
+            out,
+            "logra_pool_worker_busy_seconds_total",
+            &format!("{{worker=\"{w}\"}}"),
+            *secs,
+        );
+    }
+    header(
+        out,
+        "logra_pool_worker_lane",
+        "Trace lane (Chrome trace tid) of each pool worker; -1 until \
+         the worker first runs.",
+        "gauge",
+    );
+    for (w, lane) in p.worker_lanes.iter().enumerate() {
+        let v = if *lane == u32::MAX { -1.0 } else { *lane as f64 };
+        sample(out, "logra_pool_worker_lane", &format!("{{worker=\"{w}\"}}"), v);
+    }
 }
 
 #[cfg(test)]
@@ -307,5 +480,38 @@ mod tests {
         for line in text.lines() {
             assert!(!line.is_empty(), "exposition must not contain blank lines");
         }
+    }
+
+    #[test]
+    fn session_exposition_labels_every_family_per_stage() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.requests.store(3, Ordering::Relaxed);
+        b.requests.store(7, Ordering::Relaxed);
+        a.obs.query_latency.record(1_000_000);
+        let mut out = String::new();
+        render_session_exposition(
+            &mut out,
+            &[
+                StageMetrics { stage: "pretrain", metrics: &a, generation: 2, quarantined_shards: 0 },
+                StageMetrics { stage: "finetune", metrics: &b, generation: 5, quarantined_shards: 1 },
+            ],
+        );
+        assert!(out.contains("# TYPE logra_session_stage_requests_total counter"));
+        assert!(out.contains("logra_session_stage_requests_total{stage=\"pretrain\"} 3"));
+        assert!(out.contains("logra_session_stage_requests_total{stage=\"finetune\"} 7"));
+        assert!(out.contains("logra_session_stage_generation{stage=\"finetune\"} 5"));
+        assert!(out.contains("logra_session_stage_quarantined_shards{stage=\"finetune\"} 1"));
+        assert!(out.contains(
+            "logra_session_stage_query_latency_seconds_bucket{stage=\"pretrain\",le=\"+Inf\"} 1"
+        ));
+        assert!(out
+            .contains("logra_session_stage_query_latency_seconds_count{stage=\"finetune\"} 0"));
+        // One header per family, not one per stage.
+        assert_eq!(out.matches("# TYPE logra_session_stage_requests_total").count(), 1);
+        // Empty input renders nothing.
+        let mut empty = String::new();
+        render_session_exposition(&mut empty, &[]);
+        assert!(empty.is_empty());
     }
 }

@@ -31,7 +31,7 @@ pub mod export;
 pub mod hist;
 pub mod trace;
 
-pub use export::render_exposition;
+pub use export::{render_exposition, render_session_exposition, StageMetrics};
 pub use hist::{bucket_bounds, bucket_index, Histogram, HistogramSnapshot, BUCKETS};
 pub use trace::{chrome_trace_json, thread_lane, SpanEvent, TraceRing};
 

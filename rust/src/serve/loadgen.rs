@@ -74,6 +74,12 @@ pub struct LoadgenReport {
     /// that were re-sent; not counted in `per_client_errors` unless the
     /// retry budget ran out).
     pub retries: usize,
+    /// Session servers only: (stage name, responses in which that stage
+    /// carried an `"error"` entry), aggregated across clients and sorted
+    /// by name. A 200 with stage errors still counts as completed — the
+    /// combined ranking degraded, the request did not fail. Empty against
+    /// single-store servers (their responses carry no `"stage_errors"`).
+    pub stage_errors: Vec<(String, usize)>,
     pub wall_seconds: f64,
     pub qps: f64,
     pub p50_ms: f64,
@@ -108,6 +114,16 @@ impl LoadgenReport {
                     s.push_str(", ");
                 }
                 s.push_str(&format!("client {c}: {e}"));
+            }
+            s.push('\n');
+        }
+        if !self.stage_errors.is_empty() {
+            s.push_str("per-stage errors: ");
+            for (i, (name, n)) in self.stage_errors.iter().enumerate() {
+                if i > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("{name}: {n}"));
             }
             s.push('\n');
         }
@@ -157,7 +173,7 @@ impl Client {
         Ok(Client { writer, reader: BufReader::new(stream) })
     }
 
-    fn query(&mut self, body: &str) -> std::result::Result<(), QueryFailure> {
+    fn query(&mut self, body: &str) -> std::result::Result<Vec<String>, QueryFailure> {
         let io = |e: std::io::Error| QueryFailure::Other(e.to_string());
         http::write_request(&mut self.writer, "POST", "/query", body.as_bytes())
             .map_err(io)?;
@@ -176,8 +192,27 @@ impl Client {
         v.get("results")
             .and_then(Json::as_arr)
             .ok_or_else(|| QueryFailure::Other("response missing results array".into()))?;
-        Ok(())
+        Ok(stage_error_names(&v))
     }
+}
+
+/// Names of the stages that carried an `"error"` entry in a session
+/// server's 200 response (empty for single-store responses, which have
+/// no `"stage_errors"` field).
+fn stage_error_names(v: &Json) -> Vec<String> {
+    let mut names = Vec::new();
+    if v.get("stage_errors").and_then(Json::as_u64).unwrap_or(0) > 0 {
+        if let Some(stages) = v.get("stages").and_then(Json::as_arr) {
+            for st in stages {
+                if st.get("error").is_some() {
+                    if let Some(name) = st.get("name").and_then(Json::as_str) {
+                        names.push(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+    names
 }
 
 /// Jittered exponential backoff before retry number `attempt` (0-based):
@@ -207,13 +242,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let clients = cfg.clients.max(1);
     let per_client = cfg.requests_per_client.max(1);
     let t0 = Instant::now();
-    let outcomes: Vec<(Vec<f64>, usize, usize)> = std::thread::scope(|s| {
+    type ClientOutcome = (Vec<f64>, usize, usize, std::collections::BTreeMap<String, usize>);
+    let outcomes: Vec<ClientOutcome> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 s.spawn(move || {
                     let mut latencies = Vec::with_capacity(per_client);
                     let mut errors = 0usize;
                     let mut retries = 0usize;
+                    let mut stage_errs = std::collections::BTreeMap::<String, usize>::new();
                     let mut rng = Pcg32::new(0xB0FF, c as u64);
                     let mut conn = Client::connect(&cfg.addr).ok();
                     for q in 0..per_client {
@@ -234,8 +271,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                                 None => Err(QueryFailure::Other("not connected".into())),
                             };
                             match outcome {
-                                Ok(()) => {
+                                Ok(staged) => {
                                     latencies.push(t.elapsed().as_secs_f64());
+                                    for name in staged {
+                                        *stage_errs.entry(name).or_insert(0) += 1;
+                                    }
                                     break;
                                 }
                                 Err(QueryFailure::Retryable(_))
@@ -253,13 +293,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                             }
                         }
                     }
-                    (latencies, errors, retries)
+                    (latencies, errors, retries, stage_errs)
                 })
             })
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().unwrap_or((Vec::new(), per_client, 0)))
+            .map(|h| {
+                h.join().unwrap_or((Vec::new(), per_client, 0, Default::default()))
+            })
             .collect()
     });
     let wall_seconds = t0.elapsed().as_secs_f64();
@@ -267,10 +309,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let mut latencies = Vec::new();
     let mut per_client_errors = Vec::with_capacity(clients);
     let mut retries = 0usize;
-    for (lat, errs, rts) in outcomes {
+    let mut stage_error_map = std::collections::BTreeMap::<String, usize>::new();
+    for (lat, errs, rts, staged) in outcomes {
         latencies.extend(lat);
         per_client_errors.push(errs);
         retries += rts;
+        for (name, n) in staged {
+            *stage_error_map.entry(name).or_insert(0) += n;
+        }
     }
     let completed = latencies.len();
     Ok(LoadgenReport {
@@ -279,6 +325,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         completed,
         per_client_errors,
         retries,
+        stage_errors: stage_error_map.into_iter().collect(),
         wall_seconds,
         qps: completed as f64 / wall_seconds.max(1e-9),
         p50_ms: percentile(&latencies, 50.0) * 1e3,
@@ -376,6 +423,7 @@ mod tests {
             completed: 6,
             per_client_errors: vec![0, 2],
             retries: 3,
+            stage_errors: Vec::new(),
             wall_seconds: 1.0,
             qps: 6.0,
             p50_ms: 1.0,
@@ -384,6 +432,46 @@ mod tests {
         let s = r.render();
         assert!(s.contains("6 ok / 2 errors / 3 retries"));
         assert!(s.contains("client 1: 2"));
+        assert!(!s.contains("per-stage"));
+    }
+
+    #[test]
+    fn report_renders_stage_errors() {
+        let r = LoadgenReport {
+            clients: 1,
+            attempted: 4,
+            completed: 4,
+            per_client_errors: vec![0],
+            retries: 0,
+            stage_errors: vec![("finetune".to_string(), 3)],
+            wall_seconds: 1.0,
+            qps: 4.0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+        };
+        assert!(r.render().contains("per-stage errors: finetune: 3"));
+    }
+
+    #[test]
+    fn stage_error_names_reads_session_bodies() {
+        // Single-store response: no stage_errors field -> nothing.
+        let single = json::parse(r#"{"results": []}"#).unwrap();
+        assert!(stage_error_names(&single).is_empty());
+        // Session response with one degraded stage.
+        let session = json::parse(
+            r#"{"results": [], "stage_errors": 1, "stages": [
+                {"name": "pretrain", "results": []},
+                {"name": "finetune", "error": "store open failed"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(stage_error_names(&session), vec!["finetune".to_string()]);
+        // stage_errors 0 short-circuits the scan.
+        let clean = json::parse(
+            r#"{"results": [], "stage_errors": 0, "stages": [{"name": "a", "results": []}]}"#,
+        )
+        .unwrap();
+        assert!(stage_error_names(&clean).is_empty());
     }
 
     #[test]

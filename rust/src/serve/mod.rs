@@ -57,6 +57,21 @@
 //! increments `logra_store_reload_errors_total`; `/healthz` and
 //! `/metrics` expose the live generation, quarantined-shard count, and
 //! IVF fallback-shard count.
+//!
+//! # Session serving (`logra serve --session`)
+//!
+//! [`Server::start_session`] fronts a multi-stage
+//! [`Session`](crate::session::Session) instead of one store: `POST
+//! /query` fans out to every stage (or a per-request `"stages": [...]`
+//! subset) over the session's ONE shared scan pool and answers with the
+//! combined ranking in the usual top-level `results` array plus a
+//! per-stage `stages` breakdown (name, weight, generation, backend, ids
+//! + scores, `QueryReport`) and a `stage_errors` count — a stage failing
+//! mid-query degrades to an `error` entry for that stage while the
+//! others still answer. Each stage is pinned to its OWN generation
+//! snapshot at admission and reloaded independently; `/healthz` reports
+//! the per-stage `{name, generation, quarantined_shards}` array and
+//! `/metrics` adds the stage-labeled `logra_session_stage_*` families.
 
 pub mod http;
 pub mod loadgen;
@@ -71,13 +86,18 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::Metrics;
-use crate::obs::export::simple;
-use crate::obs::{chrome_trace_json, render_exposition, QueryReport};
+use crate::obs::export::{pool_families, simple};
+use crate::obs::{
+    chrome_trace_json, render_exposition, render_session_exposition, QueryReport, SpanEvent,
+    StageMetrics,
+};
+use crate::session::{build_stage_valuator, combine_rankings, Combine, Session, StageReport,
+    StageSpec};
 use crate::store::{current_generation, Slot};
 use crate::util::json::{self, Json};
 use crate::valuation::{
-    Backend, BackendChoice, Normalization, PoolMode, QueryRequest, QueryResult, ScanBackend,
-    ScanPool, ValuationError, Valuator,
+    Backend, BackendChoice, Normalization, PendingScores, PoolMode, QueryRequest, QueryResult,
+    ScanBackend, ScanPool, ValuationError, Valuator,
 };
 
 /// Server construction knobs.
@@ -130,11 +150,48 @@ struct ServeStats {
     reload_errors: AtomicU64,
 }
 
+/// One stage of a session server: the stage's manifest spec plus its own
+/// reloadable snapshot slot and metrics instance. Each stage is pinned
+/// and reloaded INDEPENDENTLY — one stage's store growing never blurs
+/// another stage's generation.
+struct ServeStage {
+    spec: StageSpec,
+    /// Resolved store directory the per-stage reloader probes.
+    store_dir: PathBuf,
+    slot: Slot<Valuator>,
+    metrics: Arc<Metrics>,
+}
+
+/// A session server's serving state: the manifest's stages over ONE
+/// shared scan pool (owned here; stage valuators attach via
+/// `PoolMode::Shared`).
+struct SessionServing {
+    combine: Combine,
+    pool: Arc<ScanPool>,
+    stages: Vec<ServeStage>,
+}
+
+impl SessionServing {
+    fn stage_named(&self, name: &str) -> Option<&ServeStage> {
+        self.stages.iter().find(|st| st.spec.name == name)
+    }
+}
+
+/// What this server fronts: one store, or a multi-stage session.
+enum Serving {
+    Single {
+        /// The serving snapshot. Queries pin one `Arc<Valuator>` at
+        /// admission and never observe a mid-flight swap; the reloader
+        /// thread publishes new generations here.
+        valuator: Slot<Valuator>,
+    },
+    Session(SessionServing),
+}
+
 struct Shared {
-    /// The serving snapshot. Queries pin one `Arc<Valuator>` at admission
-    /// and never observe a mid-flight swap; the reloader thread publishes
-    /// new generations here.
-    valuator: Slot<Valuator>,
+    serving: Serving,
+    /// Single mode: the one Metrics instance the valuator records into.
+    /// Session mode: unused placeholder — each stage carries its own.
     metrics: Arc<Metrics>,
     cfg: ServeConfig,
     stats: ServeStats,
@@ -172,125 +229,183 @@ impl Shared {
         }
     }
 
-    /// `/metrics`: the shared exposition plus the `logra_serve_*` families.
-    fn render_metrics(&self) -> String {
-        let valuator = self.valuator.load();
-        let pool = valuator.scan_pool().map(|p| p.snapshot());
+    /// The single-store slot. Only reachable from code paths that already
+    /// branched on [`Serving`]; a session server never calls this.
+    fn single_slot(&self) -> &Slot<Valuator> {
+        match &self.serving {
+            Serving::Single { valuator } => valuator,
+            Serving::Session(_) => unreachable!("single-store slot on a session server"),
+        }
+    }
+
+    /// The `logra_store_reload*_` + `logra_serve_*` families shared by
+    /// both serving modes.
+    fn serve_families(&self, out: &mut String) {
         let ld = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
-        let mut out = render_exposition(
-            &self.metrics,
-            pool.as_ref(),
-            &[
-                (
-                    "logra_store_rows",
-                    "Rows in the served store fabric.",
-                    valuator.rows() as f64,
-                ),
-                (
-                    "logra_store_k",
-                    "Projected gradient dimension.",
-                    valuator.k() as f64,
-                ),
-            ],
-        );
         simple(
-            &mut out,
-            "logra_store_generation",
-            "Manifest generation of the serving snapshot.",
-            "gauge",
-            valuator.generation() as f64,
-        );
-        simple(
-            &mut out,
+            out,
             "logra_store_reloads_total",
             "Successful manifest reloads (snapshot swaps).",
             "counter",
             ld(&self.stats.reloads),
         );
         simple(
-            &mut out,
+            out,
             "logra_store_reload_errors_total",
             "Reload attempts that failed; the previous snapshot kept serving.",
             "counter",
             ld(&self.stats.reload_errors),
         );
         simple(
-            &mut out,
-            "logra_store_quarantined_shards",
-            "Shards that failed validation at reload and were quarantined.",
-            "gauge",
-            valuator.quarantined().len() as f64,
-        );
-        simple(
-            &mut out,
-            "logra_store_ivf_fallback_shards",
-            "Shards the IVF engine serves via dense fallback (no index sidecar).",
-            "gauge",
-            valuator.ivf_fallback_shards() as f64,
-        );
-        simple(
-            &mut out,
+            out,
             "logra_serve_requests_total",
             "HTTP requests handled by logra serve (all endpoints).",
             "counter",
             ld(&self.stats.requests),
         );
         simple(
-            &mut out,
+            out,
             "logra_serve_queries_total",
             "POST /query requests admitted past the in-flight gate.",
             "counter",
             ld(&self.stats.queries),
         );
         simple(
-            &mut out,
+            out,
             "logra_serve_rejected_total",
             "Queries rejected at admission (max_in_flight exceeded).",
             "counter",
             ld(&self.stats.rejected),
         );
         simple(
-            &mut out,
+            out,
             "logra_serve_deadline_expired_total",
             "Queries cancelled by per-request deadline expiry.",
             "counter",
             ld(&self.stats.deadline_expired),
         );
         simple(
-            &mut out,
+            out,
             "logra_serve_disconnects_total",
             "Queries cancelled because the client disconnected mid-flight.",
             "counter",
             ld(&self.stats.disconnects),
         );
         simple(
-            &mut out,
+            out,
             "logra_serve_errors_total",
             "Requests answered with a 4xx/5xx status.",
             "counter",
             ld(&self.stats.errors),
         );
         simple(
-            &mut out,
+            out,
             "logra_serve_in_flight",
             "Queries currently inside the admission gate.",
             "gauge",
             self.in_flight.load(Ordering::Relaxed) as f64,
         );
         simple(
-            &mut out,
+            out,
             "logra_serve_max_in_flight",
             "Admission gate capacity.",
             "gauge",
             self.cfg.max_in_flight.max(1) as f64,
         );
-        out
+    }
+
+    /// `/metrics`: the shared exposition plus the `logra_serve_*` families
+    /// — and, on a session server, the `logra_session_stage_*` families
+    /// (each stage's OWN `Metrics` instance, labeled by stage name).
+    fn render_metrics(&self) -> String {
+        match &self.serving {
+            Serving::Single { valuator } => {
+                let valuator = valuator.load();
+                let pool = valuator.scan_pool().map(|p| p.snapshot());
+                let mut out = render_exposition(
+                    &self.metrics,
+                    pool.as_ref(),
+                    &[
+                        (
+                            "logra_store_rows",
+                            "Rows in the served store fabric.",
+                            valuator.rows() as f64,
+                        ),
+                        (
+                            "logra_store_k",
+                            "Projected gradient dimension.",
+                            valuator.k() as f64,
+                        ),
+                    ],
+                );
+                simple(
+                    &mut out,
+                    "logra_store_generation",
+                    "Manifest generation of the serving snapshot.",
+                    "gauge",
+                    valuator.generation() as f64,
+                );
+                simple(
+                    &mut out,
+                    "logra_store_quarantined_shards",
+                    "Shards that failed validation at reload and were quarantined.",
+                    "gauge",
+                    valuator.quarantined().len() as f64,
+                );
+                simple(
+                    &mut out,
+                    "logra_store_ivf_fallback_shards",
+                    "Shards the IVF engine serves via dense fallback (no index sidecar).",
+                    "gauge",
+                    valuator.ivf_fallback_shards() as f64,
+                );
+                self.serve_families(&mut out);
+                out
+            }
+            Serving::Session(sess) => {
+                let mut out = String::with_capacity(4096);
+                simple(
+                    &mut out,
+                    "logra_session_stages",
+                    "Stages served by this session.",
+                    "gauge",
+                    sess.stages.len() as f64,
+                );
+                simple(
+                    &mut out,
+                    "logra_pool_workers",
+                    "Scan-pool workers of the ONE session-shared pool.",
+                    "gauge",
+                    sess.pool.workers() as f64,
+                );
+                pool_families(&mut out, &sess.pool.snapshot());
+                self.serve_families(&mut out);
+                let pinned: Vec<(Arc<Valuator>, &ServeStage)> =
+                    sess.stages.iter().map(|st| (st.slot.load(), st)).collect();
+                let stage_metrics: Vec<StageMetrics<'_>> = pinned
+                    .iter()
+                    .map(|(v, st)| StageMetrics {
+                        stage: &st.spec.name,
+                        metrics: &*st.metrics,
+                        generation: v.generation(),
+                        quarantined_shards: v.quarantined().len(),
+                    })
+                    .collect();
+                render_session_exposition(&mut out, &stage_metrics);
+                out
+            }
+        }
     }
 
     /// `/healthz`: store / backend / pool liveness (the JSON subset has
-    /// no booleans, so liveness is `"status": "ok"` plus numbers).
+    /// no booleans, so liveness is `"status": "ok"` plus numbers). A
+    /// session server reports a per-stage array — each stage's own name,
+    /// generation, and quarantine state — instead of a single store's.
     fn render_healthz(&self) -> String {
-        let valuator = self.valuator.load();
+        let valuator = match &self.serving {
+            Serving::Single { valuator } => valuator.load(),
+            Serving::Session(sess) => return self.render_session_healthz(sess),
+        };
         let mut pairs = vec![
             ("status".to_string(), Json::Str("ok".into())),
             ("backend".to_string(), Json::Str(valuator.kind().name().into())),
@@ -338,6 +453,71 @@ impl Shared {
         }
         Json::Obj(pairs).render()
     }
+
+    /// Session `/healthz`: the per-stage `{name, generation,
+    /// quarantined_shards, ...}` array plus the shared-pool snapshot.
+    fn render_session_healthz(&self, sess: &SessionServing) -> String {
+        let stages_json: Vec<Json> = sess
+            .stages
+            .iter()
+            .map(|st| {
+                let v = st.slot.load();
+                Json::Obj(vec![
+                    ("name".to_string(), Json::Str(st.spec.name.clone())),
+                    ("backend".to_string(), Json::Str(v.kind().name().into())),
+                    ("rows".to_string(), Json::Num(v.rows() as u64)),
+                    ("generation".to_string(), Json::Num(v.generation())),
+                    (
+                        "quarantined_shards".to_string(),
+                        Json::Num(v.quarantined().len() as u64),
+                    ),
+                    (
+                        "ivf_fallback_shards".to_string(),
+                        Json::Num(v.ivf_fallback_shards() as u64),
+                    ),
+                ])
+            })
+            .collect();
+        let s = sess.pool.snapshot();
+        // Top-level "rows" mirrors the first stage — the session's
+        // reference row space for `{"row": N}` queries — so loadgen's
+        // row-cycling works unchanged against a session server.
+        let rows0 = sess.stages.first().map_or(0, |st| st.slot.load().rows() as u64);
+        Json::Obj(vec![
+            ("status".to_string(), Json::Str("ok".into())),
+            ("combine".to_string(), Json::Str(sess.combine.name().into())),
+            ("rows".to_string(), Json::Num(rows0)),
+            ("workers".to_string(), Json::Num(s.workers as u64)),
+            ("stages".to_string(), Json::Arr(stages_json)),
+            (
+                "reloads".to_string(),
+                Json::Num(self.stats.reloads.load(Ordering::Relaxed)),
+            ),
+            (
+                "reload_errors".to_string(),
+                Json::Num(self.stats.reload_errors.load(Ordering::Relaxed)),
+            ),
+            (
+                "in_flight".to_string(),
+                Json::Num(self.in_flight.load(Ordering::Relaxed) as u64),
+            ),
+            (
+                "max_in_flight".to_string(),
+                Json::Num(self.cfg.max_in_flight.max(1) as u64),
+            ),
+            (
+                "pool".to_string(),
+                Json::Obj(vec![
+                    ("workers".to_string(), Json::Num(s.workers as u64)),
+                    ("in_flight".to_string(), Json::Num(s.in_flight as u64)),
+                    ("queue_depth".to_string(), Json::Num(s.queue_depth as u64)),
+                    ("tasks_completed".to_string(), Json::Num(s.tasks_completed)),
+                    ("tasks_cancelled".to_string(), Json::Num(s.tasks_cancelled)),
+                ]),
+            ),
+        ])
+        .render()
+    }
 }
 
 // ------------------------------------------------------------ query bodies
@@ -355,6 +535,8 @@ pub(crate) struct ParsedQuery {
     pub(crate) norm: Option<Normalization>,
     pub(crate) deadline_ms: Option<u64>,
     pub(crate) backend: Option<BackendChoice>,
+    /// Session servers only: restrict the fan-out to these stage names.
+    pub(crate) stages: Option<Vec<String>>,
 }
 
 /// Parse a query body against the server defaults. Errors are
@@ -413,6 +595,21 @@ pub(crate) fn parse_query_body(
             }
         }
     };
+    let stages = match v.get("stages") {
+        None => None,
+        Some(s) => {
+            let arr = s.as_arr().ok_or("\"stages\" must be an array of stage names")?;
+            if arr.is_empty() {
+                return Err("\"stages\" must name at least one stage".into());
+            }
+            let names: Vec<String> = arr
+                .iter()
+                .map(|x| x.as_str().map(str::to_string))
+                .collect::<Option<_>>()
+                .ok_or("\"stages\" must be an array of stage names")?;
+            Some(names)
+        }
+    };
     let body = match (v.get("row"), v.get("gradient")) {
         (Some(_), Some(_)) => {
             return Err("pass either \"row\" or \"gradient\", not both".into())
@@ -438,7 +635,7 @@ pub(crate) fn parse_query_body(
         }
         (None, None) => return Err("query body needs \"row\" or \"gradient\"".into()),
     };
-    Ok(ParsedQuery { body, topk, norm, deadline_ms, backend })
+    Ok(ParsedQuery { body, topk, norm, deadline_ms, backend, stages })
 }
 
 // -------------------------------------------------------------- responses
@@ -476,9 +673,30 @@ fn report_json(rep: &QueryReport) -> Json {
     ])
 }
 
-/// The `POST /query` 200 body. Scores go through [`Json::Float`]'s
-/// shortest-roundtrip rendering, so a client parsing them back recovers
-/// the exact bits `Valuator::query` produced.
+/// Per-test-row `{ids, scores}` objects. Scores go through
+/// [`Json::Float`]'s shortest-roundtrip rendering, so a client parsing
+/// them back recovers the exact bits `Valuator::query` produced.
+fn results_json(results: &[QueryResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    (
+                        "ids".to_string(),
+                        Json::Arr(r.top.iter().map(|&(_, id)| Json::Num(id)).collect()),
+                    ),
+                    (
+                        "scores".to_string(),
+                        Json::Arr(r.top.iter().map(|&(s, _)| Json::Float(s)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// The `POST /query` 200 body (single-store mode).
 fn query_response_body(
     request_id: u64,
     backend: &str,
@@ -486,26 +704,11 @@ fn query_response_body(
     results: &[QueryResult],
     report: Option<&QueryReport>,
 ) -> String {
-    let results_json: Vec<Json> = results
-        .iter()
-        .map(|r| {
-            Json::Obj(vec![
-                (
-                    "ids".to_string(),
-                    Json::Arr(r.top.iter().map(|&(_, id)| Json::Num(id)).collect()),
-                ),
-                (
-                    "scores".to_string(),
-                    Json::Arr(r.top.iter().map(|&(s, _)| Json::Float(s)).collect()),
-                ),
-            ])
-        })
-        .collect();
     let mut pairs = vec![
         ("request_id".to_string(), Json::Num(request_id)),
         ("backend".to_string(), Json::Str(backend.to_string())),
         ("generation".to_string(), Json::Num(generation)),
-        ("results".to_string(), Json::Arr(results_json)),
+        ("results".to_string(), results_json(results)),
     ];
     if let Some(rep) = report {
         pairs.push(("report".to_string(), report_json(rep)));
@@ -587,20 +790,62 @@ impl Server {
         cfg: ServeConfig,
         reload: Option<ReloadConfig>,
     ) -> Result<Server> {
+        Self::launch(Serving::Single { valuator: Slot::new(valuator) }, metrics, cfg, reload, None)
+    }
+
+    /// Serve a multi-stage [`Session`]: `POST /query` fans out to every
+    /// stage (or a per-request `"stages"` subset) over the session's ONE
+    /// shared pool and answers with per-stage + combined scores. With
+    /// `reload_interval`, a reloader thread probes EVERY stage's store
+    /// generation and swaps rebuilt snapshots per stage — each query pins
+    /// each selected stage's snapshot at admission, so no answer ever
+    /// blends two generations of one stage.
+    pub fn start_session(
+        session: Session,
+        cfg: ServeConfig,
+        reload_interval: Option<Duration>,
+    ) -> Result<Server> {
+        let (stages, pool, combine) = session.into_parts();
+        let stages: Vec<ServeStage> = stages
+            .into_iter()
+            .map(|st| {
+                let (spec, store_dir, valuator, metrics) = st.into_parts();
+                ServeStage { spec, store_dir, slot: Slot::new(valuator), metrics }
+            })
+            .collect();
+        Self::launch(
+            Serving::Session(SessionServing { combine, pool, stages }),
+            Arc::new(Metrics::default()),
+            cfg,
+            None,
+            reload_interval,
+        )
+    }
+
+    fn launch(
+        serving: Serving,
+        metrics: Arc<Metrics>,
+        cfg: ServeConfig,
+        reload: Option<ReloadConfig>,
+        session_reload_interval: Option<Duration>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(Shared {
-            valuator: Slot::new(valuator),
+            serving,
             metrics,
             cfg,
             stats: ServeStats::default(),
             in_flight: AtomicUsize::new(0),
             next_request_id: AtomicU64::new(0),
         });
-        let reloader = match reload {
-            None => None,
-            Some(r) => Some(spawn_reloader(shared.clone(), shutdown.clone(), r)?),
+        let reloader = match (reload, session_reload_interval) {
+            (Some(r), _) => Some(spawn_reloader(shared.clone(), shutdown.clone(), r)?),
+            (None, Some(interval)) => {
+                Some(spawn_session_reloader(shared.clone(), shutdown.clone(), interval)?)
+            }
+            (None, None) => None,
         };
         let flag = shutdown.clone();
         let accept = std::thread::Builder::new()
@@ -677,14 +922,14 @@ fn spawn_reloader(
                 continue;
             }
             next = Instant::now() + cfg.interval;
-            let serving = shared.valuator.load().generation();
+            let serving = shared.single_slot().load().generation();
             match current_generation(&cfg.dir) {
                 // A generation BEHIND the serving one is not a reload
                 // trigger: publishers only move forward, so it means the
                 // probe raced a store rebuild — wait for it to finish.
                 Ok(published) if published > serving => match (cfg.rebuild)() {
                     Ok(v) => {
-                        shared.valuator.store(Arc::new(v));
+                        shared.single_slot().store(Arc::new(v));
                         shared.stats.reloads.fetch_add(1, Ordering::Relaxed);
                     }
                     Err(_) => {
@@ -694,6 +939,58 @@ fn spawn_reloader(
                 Ok(_) => {}
                 Err(_) => {
                     shared.stats.reload_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    })
+}
+
+/// The session reloader: one thread probing EVERY stage's store
+/// generation, rebuilding stages independently with the same recipe the
+/// session was opened with ([`build_stage_valuator`] — same spec, same
+/// shared pool, same per-stage metrics). A failed stage rebuild keeps
+/// that stage's previous snapshot serving; the other stages are
+/// unaffected either way.
+fn spawn_session_reloader(
+    shared: Arc<Shared>,
+    shutdown: Arc<AtomicBool>,
+    interval: Duration,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new().name("logra-serve-reload".into()).spawn(move || {
+        let slice = Duration::from_millis(100);
+        let mut next = Instant::now() + interval;
+        while !shutdown.load(Ordering::Acquire) {
+            let wait = next.saturating_duration_since(Instant::now());
+            if !wait.is_zero() {
+                std::thread::sleep(wait.min(slice));
+                continue;
+            }
+            next = Instant::now() + interval;
+            let Serving::Session(sess) = &shared.serving else { return };
+            for st in &sess.stages {
+                let serving = st.slot.load().generation();
+                match current_generation(&st.store_dir) {
+                    Ok(published) if published > serving => {
+                        match build_stage_valuator(
+                            &st.spec,
+                            &st.store_dir,
+                            &sess.pool,
+                            sess.pool.workers(),
+                            &st.metrics,
+                        ) {
+                            Ok(v) => {
+                                st.slot.store(Arc::new(v));
+                                shared.stats.reloads.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                shared.stats.reload_errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Ok(_) => {}
+                    Err(_) => {
+                        shared.stats.reload_errors.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             }
         }
@@ -797,9 +1094,26 @@ fn route(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -> Outco
             body: shared.render_metrics(),
         },
         ("GET", "/debug/trace") => {
-            respond(200, chrome_trace_json(&shared.metrics.obs.trace.events()))
+            let events: Vec<SpanEvent> = match &shared.serving {
+                Serving::Single { .. } => shared.metrics.obs.trace.events(),
+                // Session: one merged trace over every stage's ring (the
+                // spans already interleave on the shared pool's lanes).
+                Serving::Session(sess) => {
+                    let mut ev: Vec<SpanEvent> = sess
+                        .stages
+                        .iter()
+                        .flat_map(|st| st.metrics.obs.trace.events())
+                        .collect();
+                    ev.sort_by_key(|e| e.seq);
+                    ev
+                }
+            };
+            respond(200, chrome_trace_json(&events))
         }
-        ("POST", "/query") => handle_query(shared, req, stream),
+        ("POST", "/query") => match &shared.serving {
+            Serving::Single { .. } => handle_query(shared, req, stream),
+            Serving::Session(_) => handle_session_query(shared, req, stream),
+        },
         (_, "/healthz" | "/metrics" | "/debug/trace" | "/query") => respond(
             405,
             error_body("method_not_allowed", &format!("{} not allowed here", req.method)),
@@ -816,6 +1130,15 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
         Ok(p) => p,
         Err(msg) => return respond(400, error_body("bad_request", &msg)),
     };
+    if parsed.stages.is_some() {
+        return respond(
+            400,
+            error_body(
+                "bad_request",
+                "\"stages\" requires a session server (logra serve --session)",
+            ),
+        );
+    }
 
     // Admission: reject fast instead of queueing — the client can retry,
     // and the scan pool's own queue stays reserved for admitted work.
@@ -839,7 +1162,7 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
     // and the response's generation all come from this Arc, so a reload
     // swapping the slot mid-flight can never mix two generations into
     // one answer.
-    let valuator = shared.valuator.load();
+    let valuator = shared.single_slot().load();
 
     // Resolve which engine a per-request backend choice lands on BEFORE
     // building the query: an unservable choice is the caller's mistake
@@ -943,6 +1266,280 @@ fn handle_query(shared: &Arc<Shared>, req: &http::Request, stream: &TcpStream) -
     }
 }
 
+/// One stage's share of a session query, accumulated for the response.
+struct SessionStageOutcome {
+    name: String,
+    weight: f64,
+    served: &'static str,
+    generation: u64,
+    quarantined: usize,
+    result: Result<(Vec<QueryResult>, Option<QueryReport>), String>,
+}
+
+/// The session `POST /query` 200 body: the top-level `results` array
+/// (the combined ranking — or the first successful stage's results under
+/// per-stage-only combining, so single-store clients like `logra loadgen`
+/// keep parsing session responses unchanged), plus the per-stage
+/// breakdown and a `stage_errors` count.
+fn session_response_body(
+    request_id: u64,
+    combine: Combine,
+    outcomes: &[SessionStageOutcome],
+    combined: Option<&[QueryResult]>,
+    results: &[QueryResult],
+) -> String {
+    let stage_errors = outcomes.iter().filter(|o| o.result.is_err()).count() as u64;
+    let stages_json: Vec<Json> = outcomes
+        .iter()
+        .map(|o| {
+            let mut pairs = vec![
+                ("name".to_string(), Json::Str(o.name.clone())),
+                ("weight".to_string(), Json::Float(o.weight)),
+                ("generation".to_string(), Json::Num(o.generation)),
+                ("quarantined_shards".to_string(), Json::Num(o.quarantined as u64)),
+            ];
+            match &o.result {
+                Ok((results, report)) => {
+                    pairs.push(("backend".to_string(), Json::Str(o.served.to_string())));
+                    pairs.push(("results".to_string(), results_json(results)));
+                    if let Some(rep) = report {
+                        pairs.push(("report".to_string(), report_json(rep)));
+                    }
+                }
+                Err(m) => pairs.push(("error".to_string(), Json::Str(m.clone()))),
+            }
+            Json::Obj(pairs)
+        })
+        .collect();
+    Json::Obj(vec![
+        ("request_id".to_string(), Json::Num(request_id)),
+        ("combine".to_string(), Json::Str(combine.name().to_string())),
+        ("results".to_string(), results_json(combined.unwrap_or(results))),
+        ("stages".to_string(), Json::Arr(stages_json)),
+        ("stage_errors".to_string(), Json::Num(stage_errors)),
+    ])
+    .render()
+}
+
+/// Session fan-out: pin every selected stage's snapshot at admission,
+/// admit the query to all of them via `query_async` (their shard tasks
+/// interleave on the ONE shared pool), then wait each out and combine.
+/// A stage failing mid-query degrades to a per-stage `error` entry;
+/// cancellation (deadline/disconnect) aborts the whole request, exactly
+/// like the single-store path.
+fn handle_session_query(
+    shared: &Arc<Shared>,
+    req: &http::Request,
+    stream: &TcpStream,
+) -> Outcome {
+    let Serving::Session(sess) = &shared.serving else {
+        return respond(500, error_body("internal", "session route on a single-store server"));
+    };
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return respond(400, error_body("bad_request", "body is not UTF-8"));
+    };
+    let parsed = match parse_query_body(text, shared.cfg.default_topk) {
+        Ok(p) => p,
+        Err(msg) => return respond(400, error_body("bad_request", &msg)),
+    };
+
+    // Stage selection: always manifest order, so a subset never reorders
+    // the fan-out (and duplicate names collapse).
+    let selected: Vec<&ServeStage> = match &parsed.stages {
+        None => sess.stages.iter().collect(),
+        Some(names) => {
+            for name in names {
+                if sess.stage_named(name).is_none() {
+                    let known: Vec<&str> =
+                        sess.stages.iter().map(|st| st.spec.name.as_str()).collect();
+                    return respond(
+                        400,
+                        error_body(
+                            "bad_request",
+                            &format!("unknown stage {name:?}; this session has {known:?}"),
+                        ),
+                    );
+                }
+            }
+            sess.stages
+                .iter()
+                .filter(|st| names.iter().any(|n| n == &st.spec.name))
+                .collect()
+        }
+    };
+
+    let Some(_guard) = shared.admit() else {
+        shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        return respond(
+            429,
+            error_body(
+                "overloaded",
+                &format!(
+                    "{} queries already in flight (max_in_flight)",
+                    shared.cfg.max_in_flight.max(1)
+                ),
+            ),
+        );
+    };
+    shared.stats.queries.fetch_add(1, Ordering::Relaxed);
+    let request_id = shared.next_request_id.fetch_add(1, Ordering::Relaxed) + 1;
+
+    // Pin EVERY selected stage's snapshot here: each stage's admission,
+    // scan, and reported generation come from its own pinned Arc, so a
+    // per-stage reload mid-flight never blends generations.
+    let pinned: Vec<Arc<Valuator>> = selected.iter().map(|st| st.slot.load()).collect();
+
+    // Per-stage serving engine: a request-level backend override beats
+    // the stage's manifest default; an unservable choice is a 400.
+    let mut served: Vec<&'static str> = Vec::with_capacity(selected.len());
+    for (st, v) in selected.iter().zip(&pinned) {
+        match v.resolved_kind(parsed.backend.or(st.spec.backend)) {
+            Ok(kind) => served.push(kind.name()),
+            Err(ValuationError::InvalidConfig(m)) => {
+                return respond(
+                    400,
+                    error_body("bad_request", &format!("stage {:?}: {m}", st.spec.name)),
+                )
+            }
+            Err(e) => return respond(500, error_body("internal", &format!("{e}"))),
+        }
+    }
+
+    // `"row"` queries resolve against the FIRST selected stage's store —
+    // the session's reference row space.
+    let (rows, nt) = match parsed.body {
+        QueryBody::Row(row) => match pinned[0].gradient_row(row as usize) {
+            Some(g) => (g, 1),
+            None => {
+                return respond(
+                    400,
+                    error_body(
+                        "bad_request",
+                        &format!(
+                            "row {row} out of range (stage {:?} has {} rows)",
+                            selected[0].spec.name,
+                            pinned[0].rows()
+                        ),
+                    ),
+                )
+            }
+        },
+        QueryBody::Gradient { rows, nt } => (rows, nt),
+    };
+
+    let deadline_ms = parsed.deadline_ms.unwrap_or(shared.cfg.default_deadline_ms);
+    let deadline =
+        (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
+
+    // Admit to EVERY stage first, wait after — that is the whole point of
+    // the shared pool: stage A's shard tasks run while stage B's queue.
+    let mut pendings: Vec<Result<PendingScores, String>> =
+        Vec::with_capacity(selected.len());
+    for (st, v) in selected.iter().zip(&pinned) {
+        let mut q = QueryRequest::gradients(rows.clone(), nt, parsed.topk);
+        if let Some(n) = parsed.norm {
+            q = q.with_norm(n);
+        }
+        if let Some(b) = parsed.backend.or(st.spec.backend) {
+            q = q.with_backend(b);
+        }
+        match v.query_async(q) {
+            Ok(p) => pendings.push(Ok(p)),
+            // A malformed query is malformed for every stage: 400 now.
+            Err(ValuationError::BadQuery(m) | ValuationError::InvalidConfig(m)) => {
+                return respond(
+                    400,
+                    error_body("bad_request", &format!("stage {:?}: {m}", st.spec.name)),
+                )
+            }
+            Err(e) => pendings.push(Err(format!("{e}"))),
+        }
+    }
+
+    let disconnected = std::cell::Cell::new(false);
+    let mut should_cancel = || {
+        if peer_closed(stream) {
+            disconnected.set(true);
+            return true;
+        }
+        matches!(deadline, Some(d) if Instant::now() >= d)
+    };
+    let mut outcomes: Vec<SessionStageOutcome> = Vec::with_capacity(selected.len());
+    for (i, pending) in pendings.into_iter().enumerate() {
+        let result = match pending {
+            Err(m) => Err(m),
+            Ok(p) => {
+                match p.wait_with_report_until(&mut should_cancel, shared.cfg.poll_interval) {
+                    Ok(ok) => Ok(ok),
+                    Err(ValuationError::Cancelled { .. }) => {
+                        // Cancellation aborts the WHOLE request; remaining
+                        // pendings are dropped and their unstarted shard
+                        // tasks skipped by the pool.
+                        if disconnected.get() {
+                            shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                            return Outcome::Disconnected;
+                        }
+                        shared.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                        return respond(
+                            504,
+                            error_body(
+                                "deadline_expired",
+                                &format!("query exceeded its {deadline_ms} ms deadline"),
+                            ),
+                        );
+                    }
+                    Err(e) => Err(format!("{e}")),
+                }
+            }
+        };
+        outcomes.push(SessionStageOutcome {
+            name: selected[i].spec.name.clone(),
+            weight: selected[i].spec.weight,
+            served: served[i],
+            generation: pinned[i].generation(),
+            quarantined: pinned[i].quarantined().len(),
+            result,
+        });
+    }
+
+    // Combine over the stages that SUCCEEDED; every stage failing is the
+    // whole request failing.
+    let ok_reports: Vec<StageReport> = outcomes
+        .iter()
+        .filter_map(|o| {
+            o.result.as_ref().ok().map(|(results, _)| StageReport {
+                name: o.name.clone(),
+                weight: o.weight,
+                generation: o.generation,
+                quarantined_shards: o.quarantined,
+                results: results.clone(),
+                report: None,
+            })
+        })
+        .collect();
+    if ok_reports.is_empty() {
+        let first = outcomes
+            .iter()
+            .find_map(|o| o.result.as_ref().err().cloned())
+            .unwrap_or_else(|| "no stages selected".into());
+        return respond(
+            500,
+            error_body("internal", &format!("every selected stage failed: {first}")),
+        );
+    }
+    let combined = combine_rankings(sess.combine, &ok_reports, parsed.topk.max(1));
+    respond(
+        200,
+        session_response_body(
+            request_id,
+            sess.combine,
+            &outcomes,
+            combined.as_deref(),
+            &ok_reports[0].results,
+        ),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1004,6 +1601,69 @@ mod tests {
         ] {
             assert!(parse_query_body(bad, 5).is_err(), "accepted {bad:?}");
         }
+    }
+
+    #[test]
+    fn parses_stage_subsets() {
+        let p = parse_query_body(r#"{"row": 1}"#, 5).unwrap();
+        assert!(p.stages.is_none());
+        let p = parse_query_body(r#"{"row": 1, "stages": ["pretrain", "finetune"]}"#, 5)
+            .unwrap();
+        assert_eq!(
+            p.stages,
+            Some(vec!["pretrain".to_string(), "finetune".to_string()])
+        );
+        for bad in [
+            r#"{"row": 1, "stages": []}"#,
+            r#"{"row": 1, "stages": "pretrain"}"#,
+            r#"{"row": 1, "stages": [3]}"#,
+        ] {
+            assert!(parse_query_body(bad, 5).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn session_response_keeps_toplevel_results() {
+        let outcomes = vec![
+            SessionStageOutcome {
+                name: "pt".into(),
+                weight: 1.0,
+                served: "parallel-f32",
+                generation: 2,
+                quarantined: 0,
+                result: Ok((vec![QueryResult { top: vec![(1.5, 4)] }], None)),
+            },
+            SessionStageOutcome {
+                name: "ft".into(),
+                weight: 0.5,
+                served: "parallel-f32",
+                generation: 7,
+                quarantined: 1,
+                result: Err("store went away".into()),
+            },
+        ];
+        let combined = vec![QueryResult { top: vec![(1.5, 4)] }];
+        let body =
+            session_response_body(3, Combine::WeightedSum, &outcomes, Some(&combined), &[]);
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("request_id").and_then(Json::as_u64), Some(3));
+        assert_eq!(v.get("combine").and_then(Json::as_str), Some("weighted-sum"));
+        assert_eq!(v.get("stage_errors").and_then(Json::as_u64), Some(1));
+        // The top-level results array survives for single-store clients.
+        let r0 = &v.get("results").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(
+            r0.get("ids").and_then(Json::as_arr).unwrap()[0].as_u64(),
+            Some(4)
+        );
+        let stages = v.get("stages").and_then(Json::as_arr).unwrap();
+        assert_eq!(stages[0].get("name").and_then(Json::as_str), Some("pt"));
+        assert_eq!(stages[0].get("generation").and_then(Json::as_u64), Some(2));
+        assert!(stages[0].get("error").is_none());
+        assert_eq!(
+            stages[1].get("error").and_then(Json::as_str),
+            Some("store went away")
+        );
+        assert_eq!(stages[1].get("quarantined_shards").and_then(Json::as_u64), Some(1));
     }
 
     #[test]

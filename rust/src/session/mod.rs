@@ -1,0 +1,947 @@
+//! Multi-stage valuation sessions: one query scored across many
+//! checkpoints over ONE shared scan pool.
+//!
+//! The paper's pipeline is single-checkpoint, but the question users
+//! actually ask — "which *pretraining* data mattered for this *finetuned*
+//! behavior?" — spans stages. "Scalable Multi-Stage Influence Function
+//! for LLMs" (PAPERS.md) gives the recipe this module executes: per-stage
+//! influence with a per-stage (optionally EKFAC-parameterized)
+//! preconditioner, combined across checkpoints. A [`Session`] opens
+//! SEVERAL gradient stores — different checkpoints, or pretrain +
+//! finetune stages — as named stages from one `session.json` manifest,
+//! builds one [`Valuator`] per stage over
+//! [`PoolMode::Shared`](crate::valuation::PoolMode), and fans a single
+//! [`QueryRequest`] out through the existing `query_async` seam so every
+//! stage's shard tasks interleave on the SAME warm workers (the pool's
+//! worker count does not grow with the stage count).
+//!
+//! # `session.json`
+//!
+//! ```text
+//! {
+//!   "version": 1,
+//!   "stages": [
+//!     {"name": "pretrain", "dir": "stage-pt", "weight": 1.0},
+//!     {"name": "finetune", "dir": "stage-ft", "weight": 0.5,
+//!      "backend": "auto", "damping": 0.1,
+//!      "preconditioner": "ekfac", "norm": "none"}
+//!   ]
+//! }
+//! ```
+//!
+//! Per stage: `name` + `dir` (relative dirs resolve against the session
+//! directory) are required; `weight` defaults to 1.0; `backend`
+//! (`auto|exact|quantized|ann`) picks the per-request route the stage's
+//! queries default to, validated against the stage's fabric at open;
+//! `damping` (default 0.1) feeds the store-side preconditioner fit;
+//! `preconditioner` is `fisher` (default) or `ekfac`
+//! ([`ValuatorBuilder::fit_ekfac_from_store`](crate::valuation::ValuatorBuilder::fit_ekfac_from_store));
+//! `norm` is `none` (default) or `relatif`. Unknown fields — top-level or
+//! per-stage — are rejected with typed [`SessionError`]s, not silently
+//! ignored: a manifest field the reader does not understand could change
+//! scoring semantics.
+//!
+//! # Combining stages
+//!
+//! [`Combine`] picks how per-stage rankings merge into the combined one:
+//! weighted score sums ([`Combine::WeightedSum`] — only defined when
+//! every stage shares one normalization, validated at open, since raw
+//! influence and ℓ-RelatIF scores are not on a common scale), Borda rank
+//! aggregation ([`Combine::RankAggregation`] — scale-free, so
+//! mixed-normalization sessions can still combine), or none
+//! ([`Combine::PerStageOnly`]). Zero-weight stages still report their
+//! per-stage top-k but contribute nothing to the combined ranking — with
+//! weights `{1.0, 0.0}` the combined ranking IS stage 0's, bit-identical
+//! (`rust/tests/session.rs`).
+//!
+//! Each stage keeps its own codec auto-detection, generation, and
+//! quarantine state; the serve layer (`logra serve --session`) pins each
+//! stage to its own generation snapshot at admission and reloads stages
+//! independently via the existing `Slot` machinery.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::obs::QueryReport;
+use crate::util::json::{self, Json};
+use crate::valuation::{
+    Backend, BackendChoice, Normalization, PendingScores, PoolMode, QueryRequest, QueryResult,
+    ScanBackend, ScanPool, ValuationError, Valuator,
+};
+
+/// Manifest file name inside a session directory.
+pub const SESSION_MANIFEST: &str = "session.json";
+
+/// The one manifest version this reader understands.
+pub const SESSION_VERSION: u64 = 1;
+
+// ------------------------------------------------------------------ errors
+
+/// Typed error for the session API, split by who must act.
+#[derive(Clone, Debug)]
+pub enum SessionError {
+    /// `session.json` is missing, unreadable, or structurally malformed
+    /// (including unknown fields); fix the manifest.
+    Manifest { dir: PathBuf, message: String },
+    /// The manifest parsed but the session can never serve (duplicate
+    /// stage names, mixed normalization under weighted-sum, mismatched
+    /// gradient widths); fix the configuration.
+    InvalidConfig(String),
+    /// One stage failed to open or to serve a query; the error names it.
+    Stage { stage: String, source: ValuationError },
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Manifest { dir, message } => {
+                write!(f, "session manifest {}: {message}", dir.join(SESSION_MANIFEST).display())
+            }
+            SessionError::InvalidConfig(m) => write!(f, "invalid session config: {m}"),
+            SessionError::Stage { stage, source } => {
+                write!(f, "session stage {stage:?}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SessionError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SessionError::Stage { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+fn manifest_err(dir: &Path, message: impl Into<String>) -> SessionError {
+    SessionError::Manifest { dir: dir.to_path_buf(), message: message.into() }
+}
+
+// ----------------------------------------------------------------- combine
+
+/// Rank-aggregation rule for [`Combine::RankAggregation`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankRule {
+    /// Borda count: rank `r` (0-based) in a stage's top-`K` list earns
+    /// `K - r` points, scaled by the stage weight; absent ids earn 0.
+    Borda,
+}
+
+/// How per-stage rankings merge into the session's combined ranking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Combine {
+    /// Per data id, the weighted sum of its per-stage influence scores
+    /// over the stages whose top-k lists contain it (positive-weight
+    /// stages only). Only defined when every stage shares one
+    /// normalization — validated at [`Session::open`].
+    WeightedSum,
+    /// Scale-free rank aggregation over the per-stage top-k lists.
+    RankAggregation(RankRule),
+    /// No combined ranking: per-stage results only.
+    PerStageOnly,
+}
+
+impl Combine {
+    /// Parse the CLI/wire name: `weighted-sum | borda | per-stage`.
+    pub fn parse(s: &str) -> Option<Combine> {
+        match s {
+            "weighted-sum" => Some(Combine::WeightedSum),
+            "borda" => Some(Combine::RankAggregation(RankRule::Borda)),
+            "per-stage" => Some(Combine::PerStageOnly),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Combine::WeightedSum => "weighted-sum",
+            Combine::RankAggregation(RankRule::Borda) => "borda",
+            Combine::PerStageOnly => "per-stage",
+        }
+    }
+}
+
+// ---------------------------------------------------------------- manifest
+
+/// Which store-side preconditioner fit a stage uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecondKind {
+    /// Exact projected Fisher from the stored rows (the default).
+    Fisher,
+    /// Fisher eigenbasis with EKFAC-corrected eigenvalues
+    /// (`ValuatorBuilder::fit_ekfac_from_store`).
+    Ekfac,
+}
+
+impl PrecondKind {
+    pub fn parse(s: &str) -> Option<PrecondKind> {
+        match s {
+            "fisher" => Some(PrecondKind::Fisher),
+            "ekfac" => Some(PrecondKind::Ekfac),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PrecondKind::Fisher => "fisher",
+            PrecondKind::Ekfac => "ekfac",
+        }
+    }
+}
+
+/// One stage entry of `session.json`.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    /// Stage name — the key per-request `"stages"` subsets and metric
+    /// labels use. Unique within the session.
+    pub name: String,
+    /// Store directory; relative paths resolve against the session dir.
+    pub dir: PathBuf,
+    /// Combined-ranking weight (>= 0, finite; default 1.0). Weight 0
+    /// excludes the stage from combined rankings without dropping its
+    /// per-stage results.
+    pub weight: f64,
+    /// Default per-request backend route for this stage's queries
+    /// (`None` = the stage valuator's auto resolution).
+    pub backend: Option<BackendChoice>,
+    /// Damping factor for the store-side preconditioner fit.
+    pub damping: f32,
+    /// Store-side preconditioner flavor.
+    pub preconditioner: PrecondKind,
+    /// Stage default normalization.
+    pub norm: Normalization,
+}
+
+impl StageSpec {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name".to_string(), Json::Str(self.name.clone())),
+            ("dir".to_string(), Json::Str(self.dir.to_string_lossy().into_owned())),
+            ("weight".to_string(), Json::Float(self.weight)),
+        ];
+        if let Some(b) = self.backend {
+            pairs.push(("backend".to_string(), Json::Str(b.name().to_string())));
+        }
+        pairs.push(("damping".to_string(), Json::Float(self.damping as f64)));
+        if self.preconditioner != PrecondKind::Fisher {
+            pairs.push((
+                "preconditioner".to_string(),
+                Json::Str(self.preconditioner.name().to_string()),
+            ));
+        }
+        if self.norm != Normalization::None {
+            pairs.push(("norm".to_string(), Json::Str("relatif".to_string())));
+        }
+        Json::Obj(pairs)
+    }
+}
+
+/// Convenience constructor for the common "name + dir, defaults for the
+/// rest" stage entry (tests, offline CI sessions).
+pub fn stage_spec(name: &str, dir: impl Into<PathBuf>) -> StageSpec {
+    StageSpec {
+        name: name.to_string(),
+        dir: dir.into(),
+        weight: 1.0,
+        backend: None,
+        damping: 0.1,
+        preconditioner: PrecondKind::Fisher,
+        norm: Normalization::None,
+    }
+}
+
+/// Parsed `session.json`.
+#[derive(Clone, Debug)]
+pub struct SessionManifest {
+    pub version: u64,
+    pub stages: Vec<StageSpec>,
+}
+
+impl SessionManifest {
+    /// Parse the manifest text. Unknown fields anywhere are rejected: a
+    /// field this reader does not understand could change scoring
+    /// semantics, and silently ignoring it would misreport results.
+    pub fn parse(dir: &Path, text: &str) -> Result<SessionManifest, SessionError> {
+        let v = json::parse(text).map_err(|e| manifest_err(dir, format!("{e:#}")))?;
+        let Json::Obj(pairs) = &v else {
+            return Err(manifest_err(dir, "top level must be an object"));
+        };
+        for (key, _) in pairs {
+            if key != "version" && key != "stages" {
+                return Err(manifest_err(dir, format!("unknown top-level field {key:?}")));
+            }
+        }
+        let version = v
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| manifest_err(dir, "missing numeric \"version\""))?;
+        if version != SESSION_VERSION {
+            return Err(manifest_err(
+                dir,
+                format!("version {version} unsupported (this reader understands {SESSION_VERSION})"),
+            ));
+        }
+        let stages_json = v
+            .get("stages")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| manifest_err(dir, "missing \"stages\" array"))?;
+        if stages_json.is_empty() {
+            return Err(manifest_err(dir, "\"stages\" must name at least one stage"));
+        }
+        let mut stages = Vec::with_capacity(stages_json.len());
+        for (i, sj) in stages_json.iter().enumerate() {
+            stages.push(parse_stage(dir, i, sj)?);
+        }
+        for (i, s) in stages.iter().enumerate() {
+            if stages[..i].iter().any(|p| p.name == s.name) {
+                return Err(manifest_err(dir, format!("duplicate stage name {:?}", s.name)));
+            }
+        }
+        Ok(SessionManifest { version, stages })
+    }
+
+    /// Load `<dir>/session.json`.
+    pub fn load(dir: &Path) -> Result<SessionManifest, SessionError> {
+        let path = dir.join(SESSION_MANIFEST);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| manifest_err(dir, format!("read: {e}")))?;
+        SessionManifest::parse(dir, &text)
+    }
+
+    /// Render back to manifest JSON.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("version".to_string(), Json::Num(self.version)),
+            (
+                "stages".to_string(),
+                Json::Arr(self.stages.iter().map(StageSpec::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/session.json` (what the offline CI fixture and tests
+    /// use to author sessions).
+    pub fn save(&self, dir: &Path) -> Result<(), SessionError> {
+        std::fs::create_dir_all(dir).map_err(|e| manifest_err(dir, format!("mkdir: {e}")))?;
+        std::fs::write(dir.join(SESSION_MANIFEST), self.to_json().render())
+            .map_err(|e| manifest_err(dir, format!("write: {e}")))
+    }
+}
+
+const STAGE_FIELDS: [&str; 7] =
+    ["name", "dir", "weight", "backend", "damping", "preconditioner", "norm"];
+
+fn parse_stage(dir: &Path, i: usize, sj: &Json) -> Result<StageSpec, SessionError> {
+    let Json::Obj(pairs) = sj else {
+        return Err(manifest_err(dir, format!("stage {i} must be an object")));
+    };
+    for (key, _) in pairs {
+        if !STAGE_FIELDS.contains(&key.as_str()) {
+            return Err(manifest_err(dir, format!("stage {i}: unknown field {key:?}")));
+        }
+    }
+    let name = sj
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| manifest_err(dir, format!("stage {i}: missing string \"name\"")))?;
+    if name.is_empty() {
+        return Err(manifest_err(dir, format!("stage {i}: \"name\" must be non-empty")));
+    }
+    let sdir = sj
+        .get("dir")
+        .and_then(Json::as_str)
+        .ok_or_else(|| manifest_err(dir, format!("stage {i}: missing string \"dir\"")))?;
+    let weight = match sj.get("weight") {
+        None => 1.0,
+        Some(w) => w.as_f64().ok_or_else(|| {
+            manifest_err(dir, format!("stage {name:?}: \"weight\" must be a number"))
+        })?,
+    };
+    if !weight.is_finite() || weight < 0.0 {
+        return Err(manifest_err(
+            dir,
+            format!("stage {name:?}: \"weight\" must be finite and >= 0, got {weight}"),
+        ));
+    }
+    let backend = match sj.get("backend") {
+        None => None,
+        Some(b) => {
+            let s = b.as_str().ok_or_else(|| {
+                manifest_err(dir, format!("stage {name:?}: \"backend\" must be a string"))
+            })?;
+            Some(BackendChoice::parse(s).ok_or_else(|| {
+                manifest_err(
+                    dir,
+                    format!("stage {name:?}: unknown backend {s:?}; try auto|exact|quantized|ann"),
+                )
+            })?)
+        }
+    };
+    let damping = match sj.get("damping") {
+        None => 0.1f32,
+        Some(d) => {
+            let d = d.as_f64().ok_or_else(|| {
+                manifest_err(dir, format!("stage {name:?}: \"damping\" must be a number"))
+            })? as f32;
+            if !d.is_finite() || d <= 0.0 {
+                return Err(manifest_err(
+                    dir,
+                    format!("stage {name:?}: \"damping\" must be finite and > 0"),
+                ));
+            }
+            d
+        }
+    };
+    let preconditioner = match sj.get("preconditioner") {
+        None => PrecondKind::Fisher,
+        Some(p) => {
+            let s = p.as_str().ok_or_else(|| {
+                manifest_err(dir, format!("stage {name:?}: \"preconditioner\" must be a string"))
+            })?;
+            PrecondKind::parse(s).ok_or_else(|| {
+                manifest_err(
+                    dir,
+                    format!("stage {name:?}: unknown preconditioner {s:?}; try fisher|ekfac"),
+                )
+            })?
+        }
+    };
+    let norm = match sj.get("norm") {
+        None => Normalization::None,
+        Some(n) => {
+            let s = n.as_str().ok_or_else(|| {
+                manifest_err(dir, format!("stage {name:?}: \"norm\" must be a string"))
+            })?;
+            Normalization::parse(s).map_err(|e| manifest_err(dir, format!("stage {name:?}: {e}")))?
+        }
+    };
+    Ok(StageSpec {
+        name: name.to_string(),
+        dir: PathBuf::from(sdir),
+        weight,
+        backend,
+        damping,
+        preconditioner,
+        norm,
+    })
+}
+
+// ----------------------------------------------------------------- session
+
+/// Session construction knobs.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// How per-stage rankings merge (validated against the manifest's
+    /// normalizations at open).
+    pub combine: Combine,
+    /// Shared scan-pool workers (0 = one per core, capped at 16). One
+    /// pool serves every stage — adding stages does not add workers.
+    pub workers: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { combine: Combine::WeightedSum, workers: 0 }
+    }
+}
+
+/// One opened stage: its spec, its valuator snapshot, and its own
+/// [`Metrics`] instance (per-stage histograms, trace ring, and counters —
+/// the `stage` axis of the session's observability).
+pub struct SessionStage {
+    spec: StageSpec,
+    /// Absolute store directory (spec dir resolved against the session
+    /// dir) — what a reloader probes for new generations.
+    store_dir: PathBuf,
+    valuator: Arc<Valuator>,
+    metrics: Arc<Metrics>,
+}
+
+impl SessionStage {
+    pub fn spec(&self) -> &StageSpec {
+        &self.spec
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Resolved store directory on disk.
+    pub fn store_dir(&self) -> &Path {
+        &self.store_dir
+    }
+
+    pub fn valuator(&self) -> &Arc<Valuator> {
+        &self.valuator
+    }
+
+    /// This stage's own metrics instance.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Dismantle into (spec, resolved store dir, valuator, metrics) — the
+    /// serve layer re-homes these into per-stage reload slots.
+    pub fn into_parts(self) -> (StageSpec, PathBuf, Arc<Valuator>, Arc<Metrics>) {
+        (self.spec, self.store_dir, self.valuator, self.metrics)
+    }
+}
+
+/// Build one stage's valuator over the shared pool — the single
+/// construction recipe [`Session::open`] and the serve layer's per-stage
+/// reloader share, so a reloaded stage is configured exactly like the
+/// originally opened one.
+pub fn build_stage_valuator(
+    spec: &StageSpec,
+    store_dir: &Path,
+    pool: &Arc<ScanPool>,
+    workers: usize,
+    metrics: &Arc<Metrics>,
+) -> Result<Valuator, ValuationError> {
+    let mut b = Valuator::open_degraded(store_dir)?
+        .backend(Backend::Auto)
+        .pool(PoolMode::Shared(pool.clone()))
+        .workers(workers)
+        .normalization(spec.norm)
+        .metrics(metrics.clone());
+    b = match spec.preconditioner {
+        PrecondKind::Fisher => b.fit_from_store(spec.damping),
+        PrecondKind::Ekfac => b.fit_ekfac_from_store(spec.damping),
+    };
+    let v = b.build()?;
+    // The spec's backend route must be servable by this fabric — surface
+    // the mismatch at open, not on the first query.
+    v.resolved_kind(spec.backend)?;
+    Ok(v)
+}
+
+/// A multi-stage valuation session: several store fabrics, one shared
+/// scan pool, one query fan-out. See the module docs for the manifest
+/// format and combine semantics.
+pub struct Session {
+    dir: PathBuf,
+    stages: Vec<SessionStage>,
+    pool: Arc<ScanPool>,
+    combine: Combine,
+}
+
+impl Session {
+    /// Load `<dir>/session.json`, spawn ONE shared pool, and build every
+    /// stage's valuator over it. All manifest and cross-stage validation
+    /// happens here: unknown fields, duplicate names, per-stage backend
+    /// servability, gradient-width agreement, and the weighted-sum
+    /// normalization constraint.
+    pub fn open(dir: impl AsRef<Path>, cfg: SessionConfig) -> Result<Session, SessionError> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = SessionManifest::load(&dir)?;
+        Session::from_manifest(dir, manifest, cfg)
+    }
+
+    /// [`Session::open`] over an already-parsed manifest.
+    pub fn from_manifest(
+        dir: PathBuf,
+        manifest: SessionManifest,
+        cfg: SessionConfig,
+    ) -> Result<Session, SessionError> {
+        if cfg.combine == Combine::WeightedSum {
+            let norm0 = manifest.stages[0].norm;
+            if let Some(odd) = manifest.stages.iter().find(|s| s.norm != norm0) {
+                return Err(SessionError::InvalidConfig(format!(
+                    "weighted-sum combining needs one shared normalization, but stage {:?} \
+                     uses a different norm than stage {:?}; use borda (rank aggregation is \
+                     scale-free) or per-stage",
+                    odd.name, manifest.stages[0].name
+                )));
+            }
+        }
+        let pool = Arc::new(ScanPool::spawn(cfg.workers));
+        let mut stages = Vec::with_capacity(manifest.stages.len());
+        for spec in manifest.stages {
+            let store_dir =
+                if spec.dir.is_relative() { dir.join(&spec.dir) } else { spec.dir.clone() };
+            let metrics = Arc::new(Metrics::default());
+            let valuator = build_stage_valuator(&spec, &store_dir, &pool, cfg.workers, &metrics)
+                .map_err(|source| SessionError::Stage { stage: spec.name.clone(), source })?;
+            stages.push(SessionStage {
+                spec,
+                store_dir,
+                valuator: Arc::new(valuator),
+                metrics,
+            });
+        }
+        // One query fans out to every stage, so the stages must agree on
+        // the projected gradient width.
+        let k0 = stages[0].valuator.k();
+        if let Some(odd) = stages.iter().find(|s| s.valuator.k() != k0) {
+            return Err(SessionError::InvalidConfig(format!(
+                "stage {:?} serves k={} but stage {:?} serves k={k0}; a session fans ONE \
+                 query gradient out to every stage, so all stages must share k",
+                odd.name(),
+                odd.valuator.k(),
+                stages[0].name()
+            )));
+        }
+        Ok(Session { dir, stages, pool, combine: cfg.combine })
+    }
+
+    /// Session directory (where `session.json` lives).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Stages in manifest order.
+    pub fn stages(&self) -> &[SessionStage] {
+        &self.stages
+    }
+
+    /// Stage by name.
+    pub fn stage(&self, name: &str) -> Option<&SessionStage> {
+        self.stages.iter().find(|s| s.name() == name)
+    }
+
+    /// The ONE shared scan pool every stage runs on.
+    pub fn pool(&self) -> &Arc<ScanPool> {
+        &self.pool
+    }
+
+    /// Shared-pool worker count — constant in the number of stages.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// The session-level combine rule.
+    pub fn combine(&self) -> Combine {
+        self.combine
+    }
+
+    /// Raw stored gradient row `i` of the FIRST stage (the session's
+    /// reference row space for `--row` / `{"row": N}` queries).
+    pub fn gradient_row(&self, i: usize) -> Option<Vec<f32>> {
+        self.stages[0].valuator.gradient_row(i)
+    }
+
+    /// Score `req` against every stage. See
+    /// [`query_stages`](Self::query_stages).
+    pub fn query(&self, req: QueryRequest) -> Result<SessionReport, SessionError> {
+        self.query_stages(req, None)
+    }
+
+    /// Score `req` against the named subset of stages (`None` = all, in
+    /// manifest order). The request is admitted to every selected stage
+    /// via `query_async` FIRST, then waited — the stages' shard tasks
+    /// interleave on the shared pool instead of running back-to-back.
+    /// A request-level backend override beats the per-stage spec default.
+    pub fn query_stages(
+        &self,
+        req: QueryRequest,
+        subset: Option<&[String]>,
+    ) -> Result<SessionReport, SessionError> {
+        let selected = self.select(subset)?;
+        let mut pending: Vec<(&SessionStage, PendingScores)> =
+            Vec::with_capacity(selected.len());
+        for stage in &selected {
+            let mut r = req.clone();
+            if r.backend.is_none() {
+                r.backend = stage.spec.backend;
+            }
+            let p = stage.valuator.query_async(r).map_err(|source| SessionError::Stage {
+                stage: stage.name().to_string(),
+                source,
+            })?;
+            pending.push((stage, p));
+        }
+        let mut reports = Vec::with_capacity(pending.len());
+        for (stage, p) in pending {
+            let (results, report) =
+                p.wait_with_report().map_err(|source| SessionError::Stage {
+                    stage: stage.name().to_string(),
+                    source,
+                })?;
+            reports.push(StageReport {
+                name: stage.name().to_string(),
+                weight: stage.spec.weight,
+                generation: stage.valuator.generation(),
+                quarantined_shards: stage.valuator.quarantined().len(),
+                results,
+                report,
+            });
+        }
+        let combined = combine_rankings(self.combine, &reports, req.topk.max(1));
+        Ok(SessionReport { combine: self.combine, stages: reports, combined })
+    }
+
+    fn select(&self, subset: Option<&[String]>) -> Result<Vec<&SessionStage>, SessionError> {
+        match subset {
+            None => Ok(self.stages.iter().collect()),
+            Some(names) => {
+                if names.is_empty() {
+                    return Err(SessionError::InvalidConfig(
+                        "empty \"stages\" subset: name at least one stage".into(),
+                    ));
+                }
+                // Manifest order, not request order, so a subset never
+                // reorders the fan-out (and duplicates collapse).
+                let mut sel = Vec::new();
+                for name in names {
+                    if self.stage(name).is_none() {
+                        let known: Vec<&str> =
+                            self.stages.iter().map(SessionStage::name).collect();
+                        return Err(SessionError::InvalidConfig(format!(
+                            "unknown stage {name:?}; this session has {known:?}"
+                        )));
+                    }
+                }
+                for stage in &self.stages {
+                    if names.iter().any(|n| n == stage.name()) {
+                        sel.push(stage);
+                    }
+                }
+                Ok(sel)
+            }
+        }
+    }
+
+    /// Drain the shared pool and stop its workers. The session owns the
+    /// pool (each stage attached via `PoolMode::Shared`), so this is the
+    /// one shutdown point; dropping the session does the same.
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+
+    /// Dismantle into (stages, shared pool, combine) — how
+    /// `logra serve --session` takes ownership of an opened session.
+    pub fn into_parts(self) -> (Vec<SessionStage>, Arc<ScanPool>, Combine) {
+        (self.stages, self.pool, self.combine)
+    }
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("dir", &self.dir)
+            .field("stages", &self.stages.len())
+            .field("workers", &self.workers())
+            .field("combine", &self.combine.name())
+            .finish()
+    }
+}
+
+// ------------------------------------------------------------------ report
+
+/// One stage's slice of a [`SessionReport`].
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub name: String,
+    pub weight: f64,
+    /// Manifest generation the stage's snapshot was opened at.
+    pub generation: u64,
+    /// Shards a degraded open excluded from this stage's fabric.
+    pub quarantined_shards: usize,
+    /// Per-test-row top-k, exactly what a standalone [`Valuator`] over
+    /// the same store returns (bit-identical; `rust/tests/session.rs`).
+    pub results: Vec<QueryResult>,
+    /// Per-stage stage breakdown (always present: every stage carries its
+    /// own metrics instance).
+    pub report: Option<QueryReport>,
+}
+
+/// The merged answer of one session query: per-stage top-k plus the
+/// combined rankings (one per test row; `None` under
+/// [`Combine::PerStageOnly`]).
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub combine: Combine,
+    /// Selected stages, in manifest order.
+    pub stages: Vec<StageReport>,
+    pub combined: Option<Vec<QueryResult>>,
+}
+
+/// Merge per-stage rankings. Candidates are the union of the selected
+/// positive-weight stages' top-k ids per test row; sorting uses the same
+/// total order as [`TopK::into_sorted`](crate::util::topk::TopK) (score
+/// descending, ties to the smaller id) so combined rankings are a pure
+/// function of the per-stage results. Public so the serve layer can
+/// combine over whichever stages SUCCEEDED on a partially-failed request.
+pub fn combine_rankings(
+    combine: Combine,
+    stages: &[StageReport],
+    topk: usize,
+) -> Option<Vec<QueryResult>> {
+    if matches!(combine, Combine::PerStageOnly) {
+        return None;
+    }
+    let nt = stages.iter().map(|s| s.results.len()).max().unwrap_or(0);
+    let mut out = Vec::with_capacity(nt);
+    for t in 0..nt {
+        // (id -> accumulated score), insertion-ordered then sorted — a
+        // Vec beats a map at top-k scale and keeps iteration
+        // deterministic.
+        let mut acc: Vec<(u64, f64)> = Vec::new();
+        for stage in stages {
+            if stage.weight == 0.0 {
+                continue;
+            }
+            let Some(result) = stage.results.get(t) else { continue };
+            for (rank, &(score, id)) in result.top.iter().enumerate() {
+                let points = match combine {
+                    Combine::WeightedSum => stage.weight * score,
+                    Combine::RankAggregation(RankRule::Borda) => {
+                        stage.weight * (result.top.len() - rank) as f64
+                    }
+                    Combine::PerStageOnly => unreachable!(),
+                };
+                match acc.iter_mut().find(|(i, _)| *i == id) {
+                    Some((_, s)) => *s += points,
+                    None => acc.push((id, points)),
+                }
+            }
+        }
+        let mut top: Vec<(f64, u64)> = acc.into_iter().map(|(id, s)| (s, id)).collect();
+        top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        top.truncate(topk);
+        out.push(QueryResult { top });
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        PathBuf::from("/tmp/logra-session-unit")
+    }
+
+    #[test]
+    fn manifest_roundtrips() {
+        let man = SessionManifest {
+            version: SESSION_VERSION,
+            stages: vec![
+                stage_spec("pretrain", "stage-pt"),
+                StageSpec {
+                    weight: 0.5,
+                    backend: Some(BackendChoice::Exact),
+                    preconditioner: PrecondKind::Ekfac,
+                    norm: Normalization::RelatIf,
+                    ..stage_spec("finetune", "stage-ft")
+                },
+            ],
+        };
+        let text = man.to_json().render();
+        let back = SessionManifest::parse(&dir(), &text).unwrap();
+        assert_eq!(back.stages.len(), 2);
+        assert_eq!(back.stages[0].name, "pretrain");
+        assert_eq!(back.stages[0].weight, 1.0);
+        assert_eq!(back.stages[0].preconditioner, PrecondKind::Fisher);
+        assert_eq!(back.stages[1].weight, 0.5);
+        assert_eq!(back.stages[1].backend, Some(BackendChoice::Exact));
+        assert_eq!(back.stages[1].preconditioner, PrecondKind::Ekfac);
+        assert_eq!(back.stages[1].norm, Normalization::RelatIf);
+    }
+
+    #[test]
+    fn unknown_fields_rejected() {
+        for text in [
+            r#"{"version": 1, "stages": [{"name":"a","dir":"d"}], "extra": 1}"#,
+            r#"{"version": 1, "stages": [{"name":"a","dir":"d","surprise":"x"}]}"#,
+        ] {
+            let err = SessionManifest::parse(&dir(), text).unwrap_err();
+            assert!(
+                matches!(err, SessionError::Manifest { .. }),
+                "expected Manifest error, got {err}"
+            );
+            assert!(err.to_string().contains("unknown"), "{err}");
+        }
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for (text, needle) in [
+            (r#"{"version": 2, "stages": [{"name":"a","dir":"d"}]}"#, "version"),
+            (r#"{"version": 1, "stages": []}"#, "at least one"),
+            (r#"{"version": 1, "stages": [{"name":"a","dir":"d","weight":-1.0}]}"#, "weight"),
+            (r#"{"version": 1, "stages": [{"name":"a","dir":"d","backend":"warp"}]}"#, "backend"),
+            (
+                r#"{"version": 1, "stages": [{"name":"a","dir":"d","preconditioner":"kfac"}]}"#,
+                "preconditioner",
+            ),
+            (
+                r#"{"version": 1, "stages": [{"name":"a","dir":"d"},{"name":"a","dir":"e"}]}"#,
+                "duplicate",
+            ),
+            (r#"{"version": 1, "stages": [{"name":"a","dir":"d","damping":0.0}]}"#, "damping"),
+        ] {
+            let err = SessionManifest::parse(&dir(), text).unwrap_err().to_string();
+            assert!(err.contains(needle), "expected {needle:?} in: {err}");
+        }
+    }
+
+    #[test]
+    fn combine_parse_roundtrips() {
+        for c in [
+            Combine::WeightedSum,
+            Combine::RankAggregation(RankRule::Borda),
+            Combine::PerStageOnly,
+        ] {
+            assert_eq!(Combine::parse(c.name()), Some(c));
+        }
+        assert_eq!(Combine::parse("mean"), None);
+    }
+
+    #[test]
+    fn weighted_sum_ignores_zero_weight_stages() {
+        let s0 = StageReport {
+            name: "a".into(),
+            weight: 1.0,
+            generation: 0,
+            quarantined_shards: 0,
+            results: vec![QueryResult { top: vec![(2.0, 7), (-1.0, 3)] }],
+            report: None,
+        };
+        let s1 = StageReport {
+            name: "b".into(),
+            weight: 0.0,
+            generation: 0,
+            quarantined_shards: 0,
+            results: vec![QueryResult { top: vec![(9.0, 42), (8.0, 43)] }],
+            report: None,
+        };
+        let combined =
+            combine_rankings(Combine::WeightedSum, &[s0.clone(), s1], 2).unwrap();
+        // Weight-0 stage contributes nothing — even its id 42 with score
+        // 9.0 must not outrank stage a's negative tail.
+        assert_eq!(combined[0].top, s0.results[0].top);
+    }
+
+    #[test]
+    fn borda_ranks_scale_free() {
+        let mk = |top: Vec<(f64, u64)>| StageReport {
+            name: "s".into(),
+            weight: 1.0,
+            generation: 0,
+            quarantined_shards: 0,
+            results: vec![QueryResult { top }],
+            report: None,
+        };
+        // Stage scores on wildly different scales; id 5 is ranked first
+        // by both stages, id 9 second by both.
+        let s0 = mk(vec![(1e9, 5), (2.0, 9), (1.0, 1)]);
+        let s1 = mk(vec![(0.03, 5), (0.02, 9), (0.01, 2)]);
+        let combined =
+            combine_rankings(Combine::RankAggregation(RankRule::Borda), &[s0, s1], 3).unwrap();
+        let ids: Vec<u64> = combined[0].top.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids[0], 5);
+        assert_eq!(ids[1], 9);
+        // Borda points: 3+3=6 for id 5, 2+2=4 for id 9.
+        assert_eq!(combined[0].top[0].0, 6.0);
+        assert_eq!(combined[0].top[1].0, 4.0);
+    }
+
+    #[test]
+    fn per_stage_only_yields_no_combined() {
+        assert!(combine_rankings(Combine::PerStageOnly, &[], 5).is_none());
+    }
+}

@@ -143,6 +143,67 @@ pub fn build_index(dir: &Path, clusters: usize, seed: u64) -> Result<IvfBuildRep
     Ok(report)
 }
 
+/// What an incremental index pass did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IvfIncrementalReport {
+    /// Shards (re)indexed this pass.
+    pub indexed: usize,
+    /// Shards whose sidecar pair already validated against the live shard.
+    pub skipped: usize,
+}
+
+/// Incremental [`build_index`]: (re)index only the shards whose
+/// `centroids.bin`/`lists.bin` pair is missing, damaged, or stale against
+/// the live shard (the same per-shard validation [`IvfIndex::open`] uses
+/// to decide fallback) — the mirror of `quantize --incremental` for the
+/// IVF sidecars, closing the staleness window `logra store append` opens.
+/// Seed streams stay per-shard (`si`), so a shard indexed incrementally
+/// is byte-identical to the same shard indexed by a full [`build_index`]
+/// pass with the same `(clusters, seed)`. The generation advances only
+/// when at least one shard was actually (re)built.
+pub fn build_index_incremental(
+    dir: &Path,
+    clusters: usize,
+    seed: u64,
+) -> Result<IvfIncrementalReport> {
+    ensure!(clusters >= 1, "index needs at least one cluster");
+    ensure!(
+        dir.join(SHARD_MANIFEST).exists(),
+        "store {} has no {SHARD_MANIFEST} manifest; \
+         `logra store quantize` writes one — the index must be advertised there",
+        dir.display()
+    );
+    let man = ShardManifest::load(dir)?;
+    ensure!(
+        man.codec == StoreCodec::Int8,
+        "store {} uses the {} codec; the IVF index clusters int8 codes — \
+         run `logra store quantize` first",
+        dir.display(),
+        man.codec.as_str()
+    );
+    let store = QuantShardedStore::open(dir)?;
+    let mut report = IvfIncrementalReport::default();
+    for si in 0..store.n_shards() {
+        let shard = store.shard(si);
+        let shard_dir = dir.join(&man.shard_dirs[si]);
+        if load_shard_index(&shard_dir, shard).is_ok() {
+            report.skipped += 1;
+            continue;
+        }
+        build_shard_index(shard, &shard_dir, clusters, seed, si as u64)
+            .with_context(|| format!("index shard {si} of {}", dir.display()))?;
+        report.indexed += 1;
+    }
+    let advertised = man.index.as_deref() == Some(IVF_INDEX_NAME);
+    if report.indexed > 0 || !advertised {
+        let mut man = man;
+        man.index = Some(IVF_INDEX_NAME.to_string());
+        man.generation += 1;
+        man.save(dir)?;
+    }
+    Ok(report)
+}
+
 /// K-means one shard and write its two index files. Returns the cluster
 /// count actually built. `centroids.bin` is written and synced before
 /// `lists.bin` so a crash between the two leaves an openable (rejected,
@@ -587,6 +648,43 @@ mod tests {
         let index = IvfIndex::open(&dir, &store).unwrap();
         assert_eq!(index.fallback_shards(), 0);
         assert_eq!(index.max_clusters(), 5);
+    }
+
+    #[test]
+    fn incremental_indexes_only_stale_shards() {
+        let dir = quantized_fixture("incr", 90, 6, 3);
+        build_index(&dir, 4, 9).unwrap();
+        let gen_full = ShardManifest::load(&dir).unwrap().generation;
+
+        // Nothing stale: pure skip, no generation churn.
+        let report = build_index_incremental(&dir, 4, 9).unwrap();
+        assert_eq!(report.indexed, 0);
+        assert_eq!(report.skipped, 3);
+        assert_eq!(ShardManifest::load(&dir).unwrap().generation, gen_full);
+
+        // Damage one shard's sidecar: only that shard is rebuilt, and the
+        // rebuilt bytes match the original full build (same seed stream).
+        let lpath = dir.join("shard-0001").join(IVF_LISTS_FILE);
+        let original = std::fs::read(&lpath).unwrap();
+        std::fs::write(&lpath, &original[..original.len() / 2]).unwrap();
+        let report = build_index_incremental(&dir, 4, 9).unwrap();
+        assert_eq!(report.indexed, 1);
+        assert_eq!(report.skipped, 2);
+        assert_eq!(std::fs::read(&lpath).unwrap(), original);
+        assert_eq!(ShardManifest::load(&dir).unwrap().generation, gen_full + 1);
+
+        let store = QuantShardedStore::open(&dir).unwrap();
+        let index = IvfIndex::open(&dir, &store).unwrap();
+        assert_eq!(index.fallback_shards(), 0);
+    }
+
+    #[test]
+    fn incremental_on_unindexed_store_builds_everything() {
+        let dir = quantized_fixture("incr-fresh", 40, 4, 2);
+        let report = build_index_incremental(&dir, 3, 5).unwrap();
+        assert_eq!(report.indexed, 2);
+        assert_eq!(report.skipped, 0);
+        assert_eq!(ShardManifest::load(&dir).unwrap().index.as_deref(), Some("ivf"));
     }
 
     #[test]

@@ -68,8 +68,8 @@ pub mod writer_thread;
 pub use generation::{append_shard, current_generation, AppendReport, Slot};
 pub use grad_store::{GradStore, GradStoreWriter};
 pub use ivf::{
-    build_index, IvfBuildReport, IvfIndex, IvfShard, IVF_CENTROIDS_FILE, IVF_INDEX_NAME,
-    IVF_LISTS_FILE,
+    build_index, build_index_incremental, IvfBuildReport, IvfIncrementalReport, IvfIndex,
+    IvfShard, IVF_CENTROIDS_FILE, IVF_INDEX_NAME, IVF_LISTS_FILE,
 };
 pub use mmap::Mmap;
 pub use quant::{

@@ -68,7 +68,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::metrics::Metrics;
-use crate::hessian::{BlockHessian, Preconditioner};
+use crate::hessian::{BlockHessian, PrecondBlock, Preconditioner};
 use crate::linalg::ScanScratch;
 use crate::obs::{QueryReport, ScanObs};
 use crate::store::{
@@ -755,6 +755,11 @@ enum PrecondSource {
     /// Fit the projected Fisher from the stored rows themselves (they ARE
     /// projected gradients; their second moment is the projected Fisher).
     FitFromStore { damping: f32 },
+    /// Fit the Fisher eigenbasis, then refit the eigenvalues the EKFAC way
+    /// (mean squared rotated coordinate of the stored rows) — the
+    /// `hessian::kfac` correction promoted from the `baselines::ekfac_if`
+    /// baseline into the serving path.
+    FitEkfacFromStore { damping: f32 },
 }
 
 /// Builder returned by [`Valuator::open`]: the single configuration point
@@ -829,6 +834,18 @@ impl ValuatorBuilder {
     /// store-only shape: `logra query` uses this, no artifact needed.
     pub fn fit_from_store(mut self, damping: f32) -> Self {
         self.precond = PrecondSource::FitFromStore { damping };
+        self
+    }
+
+    /// Fit an EKFAC-parameterized preconditioner from the stored rows at
+    /// `build` time: the Fisher eigenbasis of
+    /// [`fit_from_store`](Self::fit_from_store), with each eigenvalue
+    /// replaced by the mean squared coordinate of the stored rows in that
+    /// eigendirection (the `hessian::kfac::Ekfac` diagonal refit, promoted
+    /// from `baselines::ekfac_if` into the serving path). Session stages
+    /// opt in via `"preconditioner": "ekfac"` in `session.json`.
+    pub fn fit_ekfac_from_store(mut self, damping: f32) -> Self {
+        self.precond = PrecondSource::FitEkfacFromStore { damping };
         self
     }
 
@@ -968,6 +985,9 @@ impl ValuatorBuilder {
         let precond = match self.precond {
             PrecondSource::Provided(p) => p,
             PrecondSource::FitFromStore { damping } => fit_preconditioner(&exact, damping)?,
+            PrecondSource::FitEkfacFromStore { damping } => {
+                fit_ekfac_preconditioner(&exact, damping)?
+            }
             PrecondSource::Missing => {
                 return Err(ValuationError::InvalidConfig(
                     "no preconditioner: pass ValuatorBuilder::preconditioner(...) \
@@ -1140,6 +1160,64 @@ fn fit_preconditioner(
     hess.preconditioner(damping).map(Arc::new).map_err(|e| {
         ValuationError::InvalidConfig(format!("fit preconditioner from store: {e:#}"))
     })
+}
+
+/// Fit the EKFAC-corrected preconditioner from the stored rows: pass 1 is
+/// the Fisher eigendecomposition of [`fit_preconditioner`]; pass 2 walks
+/// the store again and refits each eigenvalue as the mean squared rotated
+/// coordinate `E[(Q^T g)_i^2]` of the stored rows — exactly the
+/// `hessian::kfac::Ekfac` corrected-eigenvalue recipe, but over the
+/// projected single-block Fisher a store-only session stage can fit
+/// without the runtime. The damped iHVP then inverts the corrected
+/// spectrum in the same eigenbasis, with the paper's damping rule applied
+/// to the corrected mean.
+fn fit_ekfac_preconditioner(
+    store: &ShardedStore,
+    damping: f32,
+) -> Result<Arc<Preconditioner>, ValuationError> {
+    let fisher = fit_preconditioner(store, damping)?;
+    let k = store.k();
+    // fit_preconditioner built a single-block preconditioner over k dims.
+    let basis = &fisher.blocks[0];
+    let mut lambda = vec![0.0f64; k];
+    let mut fitted_rows = 0u64;
+    for si in 0..store.n_shards() {
+        let shard = store.shard(si);
+        let rows = shard.rows();
+        let mut at = 0usize;
+        while at < rows {
+            let len = 1024.min(rows - at);
+            let chunk = shard.chunk(at, len);
+            for r in 0..len {
+                let g = &chunk[r * k..(r + 1) * k];
+                for (i, l) in lambda.iter_mut().enumerate() {
+                    let mut c = 0.0f32;
+                    for (rr, gv) in g.iter().enumerate() {
+                        c += basis.q.at(rr, i) * gv;
+                    }
+                    *l += (c as f64) * (c as f64);
+                }
+            }
+            fitted_rows += len as u64;
+            at += len;
+        }
+    }
+    // fit_preconditioner already rejected an empty store.
+    let corrected: Vec<f32> = lambda
+        .iter()
+        .map(|l| (l / fitted_rows.max(1) as f64) as f32)
+        .collect();
+    let mean = corrected.iter().sum::<f32>() / k.max(1) as f32;
+    let damp = (damping * mean).max(1e-12);
+    Ok(Arc::new(Preconditioner {
+        blocks: vec![PrecondBlock {
+            off: 0,
+            q: basis.q.clone(),
+            eigenvalues: corrected,
+            damp,
+        }],
+        k_total: k,
+    }))
 }
 
 /// Session facade: ONE object that opens the store fabric, owns the

@@ -1,0 +1,347 @@
+//! Integration tests for multi-stage valuation sessions — several
+//! checkpoint stores behind one [`Session`], every stage's shard tasks on
+//! ONE shared scan pool.
+//!
+//! Load-bearing properties:
+//!
+//! 1. **Per-stage fidelity**: a session's per-stage results are
+//!    bit-identical (ids AND score bits) to a standalone [`Valuator`]
+//!    opened over the same store with the same recipe.
+//! 2. **Degenerate weights**: under [`Combine::WeightedSum`] with weights
+//!    `{1.0, 0.0}` the combined ranking IS stage 0's, bitwise.
+//! 3. **Fault isolation**: a corrupt shard in one stage quarantines in
+//!    that stage only; the other stages serve unchanged.
+//! 4. **Server subsets**: `logra serve --session`'s `POST /query` honors
+//!    per-request `"stages"` subsets and reports per-stage + combined
+//!    scores; unknown names get a structured 400.
+//! 5. **Pool economics**: the shared pool's worker count does not grow
+//!    with the stage count.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use logra::serve::{loadgen, ServeConfig, Server};
+use logra::session::{
+    stage_spec, Combine, Session, SessionConfig, SessionManifest, StageSpec, SESSION_VERSION,
+};
+use logra::store::{shard_store, GradStoreWriter, ShardManifest};
+use logra::util::json::{self, Json};
+use logra::util::rng::Pcg32;
+use logra::valuation::{Backend, PoolMode, QueryRequest, ScanBackend, ScanPool, Valuator};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("logra-session-it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write an n x k store and shard it into `dst` (a stage directory inside
+/// a session dir). Sharded so the stages run pool-backed scan tasks.
+fn stage_store(dst: &Path, n: usize, k: usize, shards: usize, seed: u64) {
+    let src = dst.with_extension("src");
+    let _ = std::fs::remove_dir_all(&src);
+    std::fs::create_dir_all(&src).unwrap();
+    let mut rng = Pcg32::seeded(seed);
+    let mut rows = vec![0.0f32; n * k];
+    rng.fill_normal(&mut rows, 1.0);
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let mut w = GradStoreWriter::create(&src, k).unwrap();
+    w.append(&ids, &rows).unwrap();
+    w.finalize().unwrap();
+    let _ = std::fs::remove_dir_all(dst);
+    shard_store(&src, dst, shards).unwrap();
+    std::fs::remove_dir_all(&src).unwrap();
+}
+
+/// A two-stage session dir: stage "pretrain" (n0 rows) + stage "finetune"
+/// (n1 rows), same k, different contents.
+fn two_stage_session(name: &str, n0: usize, n1: usize, k: usize, shards: usize) -> PathBuf {
+    let dir = tmpdir(name);
+    stage_store(&dir.join("pretrain"), n0, k, shards, 70);
+    stage_store(&dir.join("finetune"), n1, k, shards, 71);
+    SessionManifest {
+        version: SESSION_VERSION,
+        stages: vec![stage_spec("pretrain", "pretrain"), stage_spec("finetune", "finetune")],
+    }
+    .save(&dir)
+    .unwrap();
+    dir
+}
+
+/// The standalone oracle: one valuator over one stage store, built with
+/// the exact recipe [`Session`] uses per stage (shared-pool engine, store
+/// Fisher fit at damping 0.1, no normalization).
+fn standalone(dir: &Path, workers: usize) -> Valuator {
+    let pool = Arc::new(ScanPool::spawn(workers));
+    Valuator::open(dir)
+        .unwrap()
+        .backend(Backend::Auto)
+        .pool(PoolMode::Shared(pool))
+        .workers(workers)
+        .fit_from_store(0.1)
+        .build()
+        .unwrap()
+}
+
+fn bits(top: &[(f64, u64)]) -> Vec<(u64, u64)> {
+    top.iter().map(|&(s, id)| (s.to_bits(), id)).collect()
+}
+
+#[test]
+fn per_stage_results_bit_identical_to_standalone_valuators() {
+    let dir = two_stage_session("bit-identity", 96, 64, 8, 4);
+    let sess = Session::open(
+        &dir,
+        SessionConfig { combine: Combine::WeightedSum, workers: 2 },
+    )
+    .unwrap();
+
+    let g = sess.gradient_row(3).unwrap();
+    let report = sess.query(QueryRequest::gradients(g.clone(), 1, 7)).unwrap();
+    assert_eq!(report.stages.len(), 2);
+    assert!(report.combined.is_some(), "weighted-sum must produce a combined ranking");
+
+    for (sr, sub) in report.stages.iter().zip(["pretrain", "finetune"]) {
+        assert_eq!(sr.name, sub);
+        assert!(sr.report.is_some(), "every stage carries its own metrics");
+        let oracle = standalone(&dir.join(sub), 2);
+        let want = oracle.query(QueryRequest::gradients(g.clone(), 1, 7)).unwrap();
+        assert_eq!(
+            bits(&sr.results[0].top),
+            bits(&want[0].top),
+            "stage {sub} diverges from a standalone valuator"
+        );
+    }
+    sess.shutdown();
+}
+
+#[test]
+fn weighted_sum_with_degenerate_weights_is_stage_zero_bitwise() {
+    let dir = tmpdir("degenerate-weights");
+    stage_store(&dir.join("a"), 80, 8, 4, 72);
+    stage_store(&dir.join("b"), 80, 8, 4, 73);
+    SessionManifest {
+        version: SESSION_VERSION,
+        stages: vec![
+            stage_spec("a", "a"),
+            StageSpec { weight: 0.0, ..stage_spec("b", "b") },
+        ],
+    }
+    .save(&dir)
+    .unwrap();
+    let sess = Session::open(
+        &dir,
+        SessionConfig { combine: Combine::WeightedSum, workers: 2 },
+    )
+    .unwrap();
+
+    let g = sess.gradient_row(0).unwrap();
+    let report = sess.query(QueryRequest::gradients(g, 1, 5)).unwrap();
+    let combined = report.combined.as_ref().unwrap();
+    // Weight 0 excludes stage b entirely and 1.0 * s == s exactly in f64,
+    // so the combined ranking IS stage a's — same ids, same score bits,
+    // same order.
+    assert_eq!(bits(&combined[0].top), bits(&report.stages[0].results[0].top));
+    // ...while stage b still reports its own top-k.
+    assert_eq!(report.stages[1].results[0].top.len(), 5);
+    sess.shutdown();
+}
+
+#[test]
+fn corrupt_shard_quarantines_only_its_stage() {
+    let dir = two_stage_session("quarantine", 96, 96, 8, 4);
+
+    // Bit rot in ONE stage: halve the payload of a finetune shard.
+    let man = ShardManifest::load(&dir.join("finetune")).unwrap();
+    let victim = man.shard_dirs[1].clone();
+    let victim_rows = man.shard_rows[1];
+    let grads = dir.join("finetune").join(&victim).join("grads.bin");
+    let len = std::fs::metadata(&grads).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&grads).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+
+    let sess = Session::open(
+        &dir,
+        SessionConfig { combine: Combine::WeightedSum, workers: 2 },
+    )
+    .unwrap();
+    let pt = sess.stage("pretrain").unwrap().valuator();
+    let ft = sess.stage("finetune").unwrap().valuator();
+    assert!(pt.quarantined().is_empty(), "healthy stage must not quarantine");
+    assert_eq!(ft.quarantined().len(), 1);
+    assert_eq!(ft.quarantined()[0].name, victim);
+    assert_eq!(ft.rows() as u64, 96 - victim_rows);
+    assert_eq!(pt.rows(), 96);
+
+    // The session still answers; the healthy stage is bit-identical to a
+    // standalone valuator over the intact store.
+    let g = sess.gradient_row(1).unwrap();
+    let report = sess.query(QueryRequest::gradients(g.clone(), 1, 6)).unwrap();
+    assert_eq!(report.stages[0].quarantined_shards, 0);
+    assert_eq!(report.stages[1].quarantined_shards, 1);
+    let oracle = standalone(&dir.join("pretrain"), 2);
+    let want = oracle.query(QueryRequest::gradients(g, 1, 6)).unwrap();
+    assert_eq!(bits(&report.stages[0].results[0].top), bits(&want[0].top));
+    sess.shutdown();
+}
+
+#[test]
+fn server_honors_stage_subsets_and_reports_per_stage_scores() {
+    let dir = two_stage_session("serve-subset", 64, 64, 8, 4);
+    let sess = Session::open(
+        &dir,
+        SessionConfig { combine: Combine::WeightedSum, workers: 2 },
+    )
+    .unwrap();
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() };
+    let server = Server::start_session(sess, cfg, None).unwrap();
+    let addr = server.addr().to_string();
+
+    // Full fan-out: both stages, combined ranking as top-level results.
+    let res =
+        loadgen::http_request(&addr, "POST", "/query", br#"{"row": 2, "topk": 5}"#).unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+    let v = json::parse(&res.body_str()).unwrap();
+    assert_eq!(v.get("combine").and_then(Json::as_str), Some("weighted-sum"));
+    assert_eq!(v.get("stage_errors").and_then(Json::as_u64), Some(0));
+    let stages = v.get("stages").and_then(Json::as_arr).unwrap();
+    assert_eq!(stages.len(), 2);
+    for st in stages {
+        assert!(st.get("results").is_some(), "ok stage must carry results");
+        assert!(st.get("report").is_some(), "ok stage must carry its report");
+        assert!(st.get("generation").and_then(Json::as_u64).is_some());
+    }
+    v.get("results").and_then(Json::as_arr).expect("combined results at top level");
+
+    // Subset round-trip: only the named stage runs; the top-level results
+    // are the combined ranking over that one stage — its own scores.
+    let res = loadgen::http_request(
+        &addr,
+        "POST",
+        "/query",
+        br#"{"row": 2, "topk": 5, "stages": ["finetune"]}"#,
+    )
+    .unwrap();
+    assert_eq!(res.status, 200, "{}", res.body_str());
+    let v = json::parse(&res.body_str()).unwrap();
+    let stages = v.get("stages").and_then(Json::as_arr).unwrap();
+    assert_eq!(stages.len(), 1);
+    assert_eq!(stages[0].get("name").and_then(Json::as_str), Some("finetune"));
+    let stage_scores: Vec<u64> = stages[0]
+        .get("results")
+        .and_then(Json::as_arr)
+        .unwrap()[0]
+        .get("scores")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap().to_bits())
+        .collect();
+    let combined_scores: Vec<u64> = v
+        .get("results")
+        .and_then(Json::as_arr)
+        .unwrap()[0]
+        .get("scores")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap().to_bits())
+        .collect();
+    assert_eq!(
+        combined_scores, stage_scores,
+        "single-stage weighted sum at weight 1.0 must be the stage's own scores"
+    );
+
+    // Unknown stage name: structured 400 naming the known stages.
+    let res = loadgen::http_request(
+        &addr,
+        "POST",
+        "/query",
+        br#"{"row": 2, "stages": ["warmup"]}"#,
+    )
+    .unwrap();
+    assert_eq!(res.status, 400, "{}", res.body_str());
+    let v = json::parse(&res.body_str()).unwrap();
+    let msg = v
+        .get("error")
+        .and_then(|e| e.get("message"))
+        .and_then(Json::as_str)
+        .unwrap();
+    assert!(msg.contains("unknown stage"), "{msg}");
+    assert!(msg.contains("pretrain"), "{msg}");
+
+    // Per-stage health: one entry per stage, plus the loadgen-compatible
+    // top-level row count.
+    let res = loadgen::http_request(&addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(res.status, 200);
+    let h = json::parse(&res.body_str()).unwrap();
+    assert_eq!(h.get("rows").and_then(Json::as_u64), Some(64));
+    let hs = h.get("stages").and_then(Json::as_arr).unwrap();
+    assert_eq!(hs.len(), 2);
+    for st in hs {
+        assert!(st.get("name").and_then(Json::as_str).is_some());
+        assert!(st.get("generation").and_then(Json::as_u64).is_some());
+        assert_eq!(st.get("quarantined_shards").and_then(Json::as_u64), Some(0));
+    }
+
+    // Per-stage metrics: the session families carry a stage label per
+    // stage and the shared pool is reported once.
+    let res = loadgen::http_request(&addr, "GET", "/metrics", b"").unwrap();
+    let text = res.body_str();
+    for needle in [
+        "logra_session_stages 2",
+        "logra_session_stage_requests_total{stage=\"pretrain\"}",
+        "logra_session_stage_requests_total{stage=\"finetune\"}",
+        "logra_session_stage_query_latency_seconds",
+        "logra_pool_workers",
+    ] {
+        assert!(text.contains(needle), "metrics missing {needle:?}:\n{text}");
+    }
+}
+
+#[test]
+fn shared_pool_workers_do_not_grow_with_stage_count() {
+    let dir = tmpdir("pool-economics");
+    for name in ["s0", "s1", "s2"] {
+        stage_store(&dir.join(name), 48, 8, 2, 74);
+    }
+    let one = SessionManifest {
+        version: SESSION_VERSION,
+        stages: vec![stage_spec("s0", "s0")],
+    };
+    one.save(&dir).unwrap();
+    let sess1 = Session::open(
+        &dir,
+        SessionConfig { combine: Combine::PerStageOnly, workers: 2 },
+    )
+    .unwrap();
+    let w1 = sess1.workers();
+    sess1.shutdown();
+
+    let three = SessionManifest {
+        version: SESSION_VERSION,
+        stages: vec![
+            stage_spec("s0", "s0"),
+            stage_spec("s1", "s1"),
+            stage_spec("s2", "s2"),
+        ],
+    };
+    three.save(&dir).unwrap();
+    let sess3 = Session::open(
+        &dir,
+        SessionConfig { combine: Combine::PerStageOnly, workers: 2 },
+    )
+    .unwrap();
+    assert_eq!(sess3.stages().len(), 3);
+    assert_eq!(sess3.workers(), w1, "stages must share ONE pool, not grow it");
+    assert_eq!(sess3.pool().workers(), 2);
+
+    // PerStageOnly: queries answer per stage with no combined ranking.
+    let g = sess3.gradient_row(0).unwrap();
+    let report = sess3.query(QueryRequest::gradients(g, 1, 4)).unwrap();
+    assert!(report.combined.is_none());
+    assert_eq!(report.stages.len(), 3);
+    sess3.shutdown();
+}

@@ -55,6 +55,7 @@ GATED_KEYS = [
     "two_stage_rows_per_s",
     "ann_rows_per_s",
     "pool_c8_qps",
+    "session_2stage_qps",
     "serve_c8_qps",
 ]
 

@@ -105,41 +105,62 @@ def main() -> int:
             errors.append(f"line {ln}: sample {name} before any HELP for {family}")
         samples.append((name, labels, value))
 
-    # Histogram internal consistency.
+    # Histogram internal consistency, checked PER SERIES: a histogram
+    # family may be emitted once per label combination (e.g. one bucket
+    # series per session stage, labeled {stage="..."}), so buckets,
+    # _sum, and _count are grouped by their labels minus `le` and each
+    # group must be internally consistent on its own.
+    def series_key(labels):
+        return tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+
     for family, kind in typed.items():
         if kind != "histogram":
             continue
-        buckets = [
-            (labels.get("le"), value)
-            for name, labels, value in samples
-            if name == f"{family}_bucket"
-        ]
-        counts = [v for name, _, v in samples if name == f"{family}_count"]
-        sums = [v for name, _, v in samples if name == f"{family}_sum"]
-        if len(counts) != 1 or len(sums) != 1:
-            errors.append(f"{family}: expected exactly one _count and one _sum")
-            continue
-        if not buckets or buckets[-1][0] != "+Inf":
-            errors.append(f"{family}: bucket series must end with le=\"+Inf\"")
-            continue
-        if buckets[-1][1] != counts[0]:
-            errors.append(
-                f"{family}: +Inf bucket {buckets[-1][1]} != _count {counts[0]}"
-            )
-        prev_le, prev_n = -math.inf, -math.inf
-        for le, n in buckets[:-1]:
-            try:
-                le_v = float(le)
-            except (TypeError, ValueError):
-                errors.append(f"{family}: non-numeric le {le!r}")
+        keys = []
+        for name, labels, _ in samples:
+            if base_family(name) == family and series_key(labels) not in keys:
+                keys.append(series_key(labels))
+        for key in keys:
+            tag = family + ("{%s}" % ",".join(f'{k}="{v}"' for k, v in key) if key else "")
+            buckets = [
+                (labels.get("le"), value)
+                for name, labels, value in samples
+                if name == f"{family}_bucket" and series_key(labels) == key
+            ]
+            counts = [
+                v
+                for name, labels, v in samples
+                if name == f"{family}_count" and series_key(labels) == key
+            ]
+            sums = [
+                v
+                for name, labels, v in samples
+                if name == f"{family}_sum" and series_key(labels) == key
+            ]
+            if len(counts) != 1 or len(sums) != 1:
+                errors.append(f"{tag}: expected exactly one _count and one _sum")
                 continue
-            if le_v <= prev_le:
-                errors.append(f"{family}: le values not strictly increasing at {le}")
-            if n < prev_n:
-                errors.append(f"{family}: cumulative counts decreased at le={le}")
-            prev_le, prev_n = le_v, n
-        if buckets[:-1] and buckets[-2][1] > counts[0]:
-            errors.append(f"{family}: last finite bucket exceeds _count")
+            if not buckets or buckets[-1][0] != "+Inf":
+                errors.append(f"{tag}: bucket series must end with le=\"+Inf\"")
+                continue
+            if buckets[-1][1] != counts[0]:
+                errors.append(
+                    f"{tag}: +Inf bucket {buckets[-1][1]} != _count {counts[0]}"
+                )
+            prev_le, prev_n = -math.inf, -math.inf
+            for le, n in buckets[:-1]:
+                try:
+                    le_v = float(le)
+                except (TypeError, ValueError):
+                    errors.append(f"{tag}: non-numeric le {le!r}")
+                    continue
+                if le_v <= prev_le:
+                    errors.append(f"{tag}: le values not strictly increasing at {le}")
+                if n < prev_n:
+                    errors.append(f"{tag}: cumulative counts decreased at le={le}")
+                prev_le, prev_n = le_v, n
+            if buckets[:-1] and buckets[-2][1] > counts[0]:
+                errors.append(f"{tag}: last finite bucket exceeds _count")
 
     if not samples:
         errors.append("no samples at all — empty or truncated exposition")
